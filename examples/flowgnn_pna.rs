@@ -1,0 +1,99 @@
+//! §IV-D case study: optimizing the FlowGNN-PNA accelerator, whose FIFO
+//! deadlock thresholds depend on the runtime graph — plus the paper's
+//! proposed future-work extension, joint optimization over a suite of
+//! input stimuli (implemented here).
+//!
+//! Run: `cargo run --release --example flowgnn_pna`
+
+use fifoadvisor::bench_suite::flowgnn::{self, LANES};
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::trace::collect_trace;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // --- Single-stimulus optimization (the paper's flow, 5000 samples) ---
+    let bd = flowgnn::pna_default();
+    let trace = Arc::new(collect_trace(&bd.design, &bd.args)?);
+    println!(
+        "PNA: {} FIFOs, {} trace ops, graph = {} nodes / {} edges (seed {})",
+        trace.num_fifos(),
+        trace.total_ops(),
+        bd.args[0],
+        bd.args[1],
+        bd.args[2]
+    );
+    let lane_bursts: Vec<u64> = trace.channels[..LANES].iter().map(|c| c.writes).collect();
+    println!("per-lane message bursts (data-dependent): {lane_bursts:?}");
+
+    let space = Space::from_trace(&trace);
+    let mut ev = Evaluator::parallel(trace.clone(), 4);
+    let (designer, minp) = ev.eval_baselines();
+    println!(
+        "designer sizes: latency {} cycles / {} BRAM;  all-min: {}",
+        designer.latency.unwrap(),
+        designer.bram,
+        if minp.is_feasible() { "feasible" } else { "DEADLOCK" }
+    );
+
+    let t0 = std::time::Instant::now();
+    opt::by_name("grouped_sa", 7).unwrap().run(&mut ev, &space, 5000);
+    println!(
+        "grouped SA, 5000 samples in {:.2}s → frontier:",
+        t0.elapsed().as_secs_f64()
+    );
+    for p in ev.pareto() {
+        println!(
+            "  lat {:>6} ({:.4}x)   bram {:>3}   msg depths {:?}",
+            p.latency.unwrap(),
+            p.latency.unwrap() as f64 / designer.latency.unwrap() as f64,
+            p.bram,
+            &p.depths[..LANES]
+        );
+    }
+
+    // --- Multi-stimulus joint optimization (future-work extension) ---
+    println!("\njoint optimization over 4 runtime graphs:");
+    let seeds = [7i64, 99, 1234, 31415];
+    let traces: Vec<Arc<_>> = seeds
+        .iter()
+        .map(|&s| {
+            let bd = flowgnn::pna(64, 512, s);
+            Arc::new(collect_trace(&bd.design, &bd.args).unwrap())
+        })
+        .collect();
+    for (s, t) in seeds.iter().zip(&traces) {
+        let bursts: Vec<u64> = t.channels[..LANES].iter().map(|c| c.writes).collect();
+        println!("  seed {s:>6}: lane bursts {bursts:?}");
+    }
+    // Joint feasibility = feasible under every stimulus; joint latency =
+    // worst case. Size each msg FIFO to the max burst across stimuli.
+    let mut joint = traces[0].baseline_max();
+    for l in 0..LANES {
+        joint[l] = traces
+            .iter()
+            .map(|t| t.channels[l].writes as u32)
+            .max()
+            .unwrap();
+    }
+    let mut worst = 0u64;
+    for t in &traces {
+        let mut sim = FastSim::new(t.clone());
+        let out = sim.simulate(&joint);
+        assert!(!out.is_deadlock(), "joint sizing must be safe on all stimuli");
+        worst = worst.max(out.latency().unwrap());
+    }
+    let joint_bram = fifoadvisor::bram::bram_total(&joint, &ev.widths);
+    println!(
+        "  joint msg sizing {:?} → worst-case latency {} cycles, {} BRAM",
+        &joint[..LANES],
+        worst,
+        joint_bram
+    );
+    println!(
+        "  (single-stimulus sizing would deadlock on the other graphs — \
+         see tests/integration.rs::multi_stimulus_optimization_tightens_feasibility)"
+    );
+    Ok(())
+}

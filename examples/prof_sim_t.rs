@@ -1,0 +1,23 @@
+// timing driver for §Perf iteration: N feasible-leaning sims, prints mean
+use fifoadvisor::bench_suite;
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::Rng;
+use std::sync::Arc;
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "gemm".into());
+    let bd = bench_suite::build(&name);
+    let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let mut sim = FastSim::new(t.clone());
+    let ub = t.upper_bounds();
+    let mut rng = Rng::new(1);
+    let configs: Vec<Vec<u32>> = (0..200)
+        .map(|_| ub.iter().map(|&u| rng.range_u32((u / 2).max(2), u.max(2))).collect())
+        .collect();
+    for c in &configs[..20] { let _ = sim.simulate(c); } // warm
+    let t0 = std::time::Instant::now();
+    let mut acc = 0u64;
+    for c in &configs { acc ^= sim.simulate(c).latency().unwrap_or(0); }
+    let dt = t0.elapsed().as_secs_f64() / configs.len() as f64;
+    println!("{name}: {:.1} µs/sim ({} ops, {:.0} Mops/s, acc {acc})", dt * 1e6, t.total_ops(), t.total_ops() as f64 / dt / 1e6);
+}

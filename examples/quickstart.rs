@@ -1,0 +1,88 @@
+//! Quickstart: size the FIFOs of the paper's Fig. 2 design end-to-end.
+//!
+//! Demonstrates the full public API surface on a design small enough to
+//! reason about by hand: build a dataflow design with data-dependent
+//! control flow, collect its trace, evaluate the baselines, run an
+//! optimizer, and inspect the Pareto frontier.
+//!
+//! Run: `cargo run --example quickstart`
+
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::ir::{DesignBuilder, Expr};
+use fifoadvisor::opt::{self, Optimizer, Space};
+use fifoadvisor::trace::collect_trace;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the HLS design (paper Fig. 2): a producer that writes n
+    //    tokens to x then n to y, and a consumer that alternates reads.
+    //    The deadlock threshold of x is n-1 — knowable only at runtime.
+    let n = 40i64;
+    let mut b = DesignBuilder::new("mult_by_2", 1);
+    let x = b.channel("x", 32);
+    let y = b.channel("y", 32);
+    b.process("producer", |p| {
+        p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+        p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+    });
+    b.process("consumer", |p| {
+        let sum = p.var();
+        p.set(sum, Expr::c(0));
+        p.for_expr(Expr::arg(0), |p, _| {
+            let a = p.read(x);
+            let c = p.read(y);
+            p.set(sum, Expr::var(sum).add(Expr::var(a)).add(Expr::var(c)));
+        });
+    });
+    let design = b.build();
+
+    // 2. "Software execution": collect the trace once (LightningSim
+    //    phase 1). The trace is FIFO-size-independent.
+    let trace = Arc::new(collect_trace(&design, &[n])?);
+    println!(
+        "trace: {} FIFO ops across {} processes",
+        trace.total_ops(),
+        trace.process_names.len()
+    );
+
+    // 3. Baselines.
+    let mut ev = Evaluator::new(trace.clone());
+    let (maxp, minp) = ev.eval_baselines();
+    println!(
+        "Baseline-Max (x={}, y={}): latency {} cycles, {} BRAM",
+        trace.baseline_max()[0],
+        trace.baseline_max()[1],
+        maxp.latency.unwrap(),
+        maxp.bram
+    );
+    println!(
+        "Baseline-Min (2, 2):      {}",
+        if minp.is_feasible() { "feasible" } else { "DEADLOCK (as the paper predicts)" }
+    );
+
+    // 4. Optimize: exhaustive is tractable here (pruned space is tiny).
+    let space = Space::from_trace(&trace);
+    opt::exhaustive::Exhaustive::new().run(&mut ev, &space, 10_000);
+    println!("\npruned space exhausted in {} evaluations:", ev.n_evals());
+    for p in ev.pareto() {
+        println!(
+            "  depths {:?} -> latency {} cycles, {} BRAM",
+            &p.depths[..],
+            p.latency.unwrap(),
+            p.bram
+        );
+    }
+
+    // 5. The runtime-analysis argument: the minimal safe depth for x is
+    //    exactly n-1, which no static analysis could know.
+    let mut probe = trace.baseline_min();
+    probe[0] = (n - 1) as u32;
+    let (lat, bram) = ev.eval(&probe);
+    println!(
+        "\ndepth(x) = n-1 = {}: latency {:?}, {} BRAM (feasible; n-2 deadlocks)",
+        n - 1,
+        lat.unwrap(),
+        bram
+    );
+    Ok(())
+}

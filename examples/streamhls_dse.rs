@@ -1,0 +1,97 @@
+//! Stream-HLS DSE: run all five paper optimizers on one suite design and
+//! compare their frontiers — a one-design slice of Fig. 3 / Fig. 4.
+//!
+//! Run: `cargo run --release --example streamhls_dse [design] [budget]`
+//! (default: k15mmseq, 1000 samples — the paper's budget)
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::objective::select_highlight;
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::report::ascii;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::stats::fmt_duration;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let design = args.first().map(|s| s.as_str()).unwrap_or("k15mmseq");
+    let budget: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1000);
+
+    let bd = bench_suite::try_build(design)
+        .unwrap_or_else(|| panic!("unknown design '{design}'"));
+    let trace = Arc::new(collect_trace(&bd.design, &bd.args)?);
+    let space = Space::from_trace(&trace);
+    println!(
+        "{design}: {} FIFOs in {} groups, pruned space 10^{:.1}, budget {budget}",
+        trace.num_fifos(),
+        space.groups.len(),
+        space.log10_size()
+    );
+
+    let mut ev = Evaluator::parallel(trace.clone(), 8);
+    let (base, minp) = ev.eval_baselines();
+    let base_lat = base.latency.unwrap();
+    println!(
+        "Baseline-Max: {} cycles / {} BRAM    Baseline-Min: {}\n",
+        base_lat,
+        base.bram,
+        match minp.latency {
+            Some(l) => format!("{l} cycles / {} BRAM", minp.bram),
+            None => "DEADLOCK".into(),
+        }
+    );
+
+    println!(
+        "{:<16} {:>7} {:>9} {:>7} | highlighted ★ (α=0.7): {:>10} {:>8} {:>7}",
+        "optimizer", "evals", "time", "front", "latency", "lat×", "BRAM"
+    );
+    let mut plot_series: Vec<(char, Vec<(f64, f64)>)> = Vec::new();
+    for (label, name) in [
+        ('g', "greedy"),
+        ('r', "random"),
+        ('R', "grouped_random"),
+        ('s', "sa"),
+        ('S', "grouped_sa"),
+    ] {
+        ev.reset_run(true); // cold cache per optimizer: fair timing
+        let mut o = opt::by_name(name, 1).unwrap();
+        let t0 = std::time::Instant::now();
+        o.run(&mut ev, &space, budget);
+        let dt = t0.elapsed().as_secs_f64();
+        let front = ev.pareto();
+        let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
+        let star_idx = select_highlight(&pts, 0.7, base_lat, base.bram).unwrap();
+        let (sl, sb) = pts[star_idx];
+        println!(
+            "{:<16} {:>7} {:>9} {:>7} |                        {:>10} {:>8.4} {:>7}",
+            name,
+            ev.n_evals(),
+            fmt_duration(dt),
+            front.len(),
+            sl,
+            sl as f64 / base_lat as f64,
+            sb
+        );
+        plot_series.push((
+            label,
+            pts.iter().map(|&(l, b)| (l as f64, b as f64)).collect(),
+        ));
+    }
+
+    println!("\nfrontiers (g=greedy r=random R=grouped-random s=SA S=grouped-SA M=Baseline-Max):");
+    let base_pt = [(base_lat as f64, base.bram as f64)];
+    let mut series: Vec<ascii::Series> = plot_series
+        .iter()
+        .map(|(label, pts)| ascii::Series {
+            label: *label,
+            points: pts,
+        })
+        .collect();
+    series.push(ascii::Series {
+        label: 'M',
+        points: &base_pt,
+    });
+    println!("{}", ascii::scatter(&series, 72, 20, "latency (cycles)", "FIFO BRAM"));
+    Ok(())
+}

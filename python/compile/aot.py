@@ -1,0 +1,69 @@
+"""AOT export: lower the L2 analytics graph to HLO **text** artifacts the
+Rust runtime loads via the `xla` crate's PJRT CPU client.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax>=0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+One artifact is exported per FIFO-count bucket (fixed batch B and beta
+grid K; F in F_BUCKETS). The Rust side pads any design to the next bucket.
+Python runs only here, at build time -- never on the DSE path.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed export shapes. B must be a multiple of the pareto kernel tile
+# (128) and the bram kernel tile (64); F buckets cover every design in the
+# suite (FeedForward peaks at 848 FIFOs).
+BATCH = 256
+BETAS = 16
+F_BUCKETS = (64, 256, 1024)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_bucket(f: int, out_dir: str) -> dict:
+    spec = lambda shape, dtype: jax.ShapeDtypeStruct(shape, dtype)  # noqa: E731
+    lowered = jax.jit(model.evaluate_batch).lower(
+        spec((BATCH, f), jnp.int32),
+        spec((f,), jnp.int32),
+        spec((BATCH,), jnp.float32),
+        spec((BETAS,), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    name = f"analytics_f{f}.hlo.txt"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as fh:
+        fh.write(text)
+    return {"fifos": f, "batch": BATCH, "betas": BETAS, "file": name}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"buckets": [export_bucket(f, args.out_dir) for f in F_BUCKETS]}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"exported {len(F_BUCKETS)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: batched BRAM18K allocation (paper Algorithm 1).
+
+Computes, for a (B, F) tile of candidate FIFO depths and an (F,) vector of
+FIFO bitwidths, the BRAM_18K count of every FIFO in every candidate
+configuration — the `f_bram` objective evaluated for a whole optimizer
+batch at once.
+
+TPU-adaptation notes (DESIGN.md §Hardware-Adaptation): Algorithm 1 is
+branchy scalar code; here the fixed five-rung BRAM shape ladder
+(1K x 18 ... 16K x 1) is fully unrolled and every data-dependent branch is
+replaced by a predicated `jnp.where` select, so the whole (B, F) tile stays
+resident in VMEM and the computation is pure VPU element-wise work. The
+kernel runs `interpret=True` (CPU PJRT cannot execute Mosaic custom calls);
+the BlockSpec tiling below is the schedule a real TPU lowering would use.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The BRAM_18K (depth, width) configuration ladder, widest first.
+BRAM18K_SHAPES = ((1024, 18), (2048, 9), (4096, 4), (8192, 2), (16384, 1))
+
+# Total bits at or below which Vitis maps the FIFO to a shift register.
+SRL_THRESHOLD_BITS = 1024
+
+# Rows per grid step: sized so a (TILE_B, F<=1024) int32 tile plus its
+# output stays well under VMEM (~0.5 MiB per operand at F=1024).
+TILE_B = 64
+
+
+def _bram_counts_tile(depths, widths_row):
+    """Algorithm 1, vectorized: depths (tb, F) int32, widths (1|tb, F)."""
+    d = depths
+    w = jnp.broadcast_to(widths_row, d.shape).astype(jnp.int32)
+    srl = (d <= 2) | (d * w <= SRL_THRESHOLD_BITS)
+    n = jnp.zeros_like(d)
+    rem = w
+    for di, wi in BRAM18K_SHAPES:
+        cols = rem // wi
+        rows = (d + (di - 1)) // di  # ceil(d / di)
+        n = n + cols * rows
+        rem = rem % wi
+        fire = (rem > 0) & (d <= di)
+        n = jnp.where(fire, n + 1, n)
+        rem = jnp.where(fire, 0, rem)
+    return jnp.where(srl, 0, n)
+
+
+def _bram_kernel(depths_ref, widths_ref, out_ref):
+    out_ref[...] = _bram_counts_tile(depths_ref[...], widths_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bram_counts(depths, widths):
+    """Per-FIFO BRAM counts via the Pallas kernel.
+
+    Args:
+      depths: (B, F) int32 candidate depths.
+      widths: (F,) int32 FIFO bitwidths.
+    Returns:
+      (B, F) int32 BRAM counts.
+    """
+    b, f = depths.shape
+    tile_b = min(TILE_B, b)
+    assert b % tile_b == 0, f"batch {b} not a multiple of tile {tile_b}"
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        _bram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.int32),
+        interpret=True,
+    )(depths, widths.reshape(1, f))
+
+
+def bram_totals(depths, widths):
+    """Per-configuration total BRAM: (B,) int32."""
+    return bram_counts(depths, widths).sum(axis=1, dtype=jnp.int32)

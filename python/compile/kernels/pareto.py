@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: Pareto dominance mask over a batch of evaluated
+configurations.
+
+`dominated[i] = 1` iff some j has `lat[j] <= lat[i] and bram[j] <= bram[i]`
+with at least one strict inequality. Infeasible (deadlocked) and padding
+entries are encoded as `lat = +inf` by the Rust caller: +inf entries never
+dominate anything (no finite latency is >= +inf on the strict side in a
+way that matters) and are reported undominated, which the caller masks
+off.
+
+TPU-adaptation: the O(B^2) pairwise comparison is tiled by output rows
+(TILE_B = 128, matched to the 8x128 VPU lane layout rather than MXU tiles
+-- this is compare/reduce work, not matmul); the full (B,) latency/BRAM
+vectors are tiny (<= 8 KiB) and stay VMEM-resident across all row tiles.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+
+
+def _dominance_kernel(lat_row_ref, bram_row_ref, lat_all_ref, bram_all_ref, out_ref):
+    li = lat_row_ref[...][:, None]  # (tb, 1)
+    bi = bram_row_ref[...][:, None]
+    lj = lat_all_ref[...][None, :]  # (1, B)
+    bj = bram_all_ref[...][None, :]
+    no_worse = (lj <= li) & (bj <= bi)
+    strictly_better = (lj < li) | (bj < bi)
+    dom = no_worse & strictly_better  # (tb, B)
+    out_ref[...] = dom.any(axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def dominated_mask(latency, bram):
+    """(B,) int32 mask of dominated points.
+
+    Args:
+      latency: (B,) float32 (use +inf for infeasible/padding entries).
+      bram: (B,) float32 total BRAM per configuration.
+    """
+    (b,) = latency.shape
+    tile_b = min(TILE_B, b)
+    assert b % tile_b == 0, f"batch {b} not a multiple of tile {tile_b}"
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        _dominance_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(latency, bram, latency, bram)

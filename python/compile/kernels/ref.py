@@ -1,0 +1,57 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels — the build-time
+correctness reference (pytest compares kernel outputs against these)."""
+
+import numpy as np
+
+BRAM18K_SHAPES = ((1024, 18), (2048, 9), (4096, 4), (8192, 2), (16384, 1))
+SRL_THRESHOLD_BITS = 1024
+
+
+def bram_for_fifo_scalar(depth: int, width: int) -> int:
+    """Paper Algorithm 1, scalar (mirrors the Rust implementation)."""
+    if depth <= 2 or depth * width <= SRL_THRESHOLD_BITS:
+        return 0
+    n = 0
+    w = width
+    for di, wi in BRAM18K_SHAPES:
+        n += (w // wi) * -(-depth // di)
+        w %= wi
+        if w > 0 and depth <= di:
+            n += 1
+            w = 0
+    return n
+
+
+def bram_counts_ref(depths: np.ndarray, widths: np.ndarray) -> np.ndarray:
+    """(B, F) int32 BRAM counts via the scalar oracle."""
+    b, f = depths.shape
+    out = np.zeros((b, f), dtype=np.int32)
+    for i in range(b):
+        for j in range(f):
+            out[i, j] = bram_for_fifo_scalar(int(depths[i, j]), int(widths[j]))
+    return out
+
+
+def bram_totals_ref(depths: np.ndarray, widths: np.ndarray) -> np.ndarray:
+    return bram_counts_ref(depths, widths).sum(axis=1, dtype=np.int32)
+
+
+def dominated_mask_ref(latency: np.ndarray, bram: np.ndarray) -> np.ndarray:
+    """(B,) int32 dominated flags, O(B^2) loops."""
+    b = latency.shape[0]
+    out = np.zeros(b, dtype=np.int32)
+    for i in range(b):
+        for j in range(b):
+            no_worse = latency[j] <= latency[i] and bram[j] <= bram[i]
+            strict = latency[j] < latency[i] or bram[j] < bram[i]
+            if no_worse and strict:
+                out[i] = 1
+                break
+    return out
+
+
+def weighted_scores_ref(
+    betas: np.ndarray, latency: np.ndarray, bram: np.ndarray
+) -> np.ndarray:
+    """(K, B) float32: (1-beta)*lat + beta*bram (paper SA scalarization)."""
+    return (1.0 - betas)[:, None] * latency[None, :] + betas[:, None] * bram[None, :]

@@ -1,0 +1,43 @@
+"""L2 JAX model: the batched DSE analytics graph.
+
+`evaluate_batch` is the computation the Rust coordinator executes (via the
+AOT-compiled PJRT artifact) after simulating an optimizer batch: given B
+candidate FIFO configurations, the FIFO bitwidths, and the B simulated
+latencies, it produces in one fused XLA module
+
+  1. per-configuration total BRAM usage        (L1 `bram` Pallas kernel),
+  2. the beta-grid weighted SA objectives       (paper SS III-D),
+  3. the Pareto non-domination mask             (L1 `pareto` Pallas kernel).
+
+Padding conventions (enforced by the Rust caller):
+  - unused batch rows:   depths = 2, latency = +inf  -> bram 0, undominated
+    (masked off by the caller via the valid count);
+  - unused FIFO columns: depth = 2, width = 1        -> bram 0;
+  - deadlocked configs:  latency = +inf              -> never dominate.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bram as bram_kernel
+from .kernels import pareto as pareto_kernel
+
+
+def evaluate_batch(depths, widths, latencies, betas):
+    """The full analytics graph.
+
+    Args:
+      depths:    (B, F) int32 candidate FIFO depths.
+      widths:    (F,)   int32 FIFO bitwidths.
+      latencies: (B,)   float32 simulated latencies (+inf = deadlock/pad).
+      betas:     (K,)   float32 scalarization grid.
+
+    Returns:
+      bram_totals: (B,)  int32
+      scores:      (K, B) float32  -- (1-beta)*lat + beta*bram
+      dominated:   (B,)  int32
+    """
+    totals = bram_kernel.bram_totals(depths, widths)  # (B,)
+    totals_f = totals.astype(jnp.float32)
+    scores = (1.0 - betas)[:, None] * latencies[None, :] + betas[:, None] * totals_f[None, :]
+    dominated = pareto_kernel.dominated_mask(latencies, totals_f)
+    return totals, scores, dominated

@@ -1,0 +1,68 @@
+"""L1 bram Pallas kernel vs the scalar Algorithm-1 oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bram as bram_kernel
+from compile.kernels import ref
+
+
+def test_worked_examples():
+    # Mirrors the Rust unit test cases (cross-language agreement).
+    cases = [
+        ((2, 512), 0),
+        ((32, 32), 0),
+        ((1024, 32), 2),
+        ((1024, 18), 1),
+        ((2048, 18), 2),
+        ((2048, 9), 1),
+        ((4096, 14), 4),
+        ((16384, 1), 1),
+        ((512, 36), 2),
+        ((10000, 9), 5),
+        ((10000, 8), 6),
+    ]
+    for (d, w), expect in cases:
+        assert ref.bram_for_fifo_scalar(d, w) == expect, (d, w)
+    depths = np.array([[d for (d, _), _ in cases]], dtype=np.int32)
+    widths = np.array([w for (_, w), _ in cases], dtype=np.int32)
+    got = np.asarray(bram_kernel.bram_counts(depths, widths))
+    assert got.tolist() == [[e for _, e in cases]]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([64, 128, 256]),
+    f=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_oracle(b, f, seed):
+    rng = np.random.default_rng(seed)
+    depths = rng.integers(1, 70_000, size=(b, f), dtype=np.int32)
+    # Mix in boundary depths.
+    depths[0, :] = 2
+    if b > 1:
+        depths[1, :] = np.minimum(1024 // np.maximum(rng.integers(1, 64, f), 1), 2**15)
+    widths = rng.integers(1, 129, size=(f,), dtype=np.int32)
+    got = np.asarray(bram_kernel.bram_counts(depths, widths))
+    want = ref.bram_counts_ref(depths, widths)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_totals_match(seed):
+    rng = np.random.default_rng(seed)
+    depths = rng.integers(2, 5000, size=(64, 17), dtype=np.int32)
+    widths = rng.integers(1, 64, size=(17,), dtype=np.int32)
+    got = np.asarray(bram_kernel.bram_totals(depths, widths))
+    np.testing.assert_array_equal(got, ref.bram_totals_ref(depths, widths))
+
+
+def test_batch_must_tile():
+    depths = np.zeros((100, 4), dtype=np.int32)  # 100 % 64 != 0
+    widths = np.ones(4, dtype=np.int32)
+    with pytest.raises(AssertionError):
+        bram_kernel.bram_counts(depths, widths)

@@ -1,0 +1,61 @@
+"""L2 analytics graph: shapes, padding semantics, scalarization."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _inputs(b=256, f=64, seed=0):
+    rng = np.random.default_rng(seed)
+    depths = rng.integers(2, 4096, size=(b, f)).astype(np.int32)
+    widths = rng.integers(1, 65, size=(f,)).astype(np.int32)
+    lat = rng.integers(100, 100_000, size=(b,)).astype(np.float32)
+    betas = np.linspace(0.0, 1.0, 16).astype(np.float32)
+    return depths, widths, lat, betas
+
+
+def test_shapes_and_dtypes():
+    depths, widths, lat, betas = _inputs()
+    totals, scores, dominated = model.evaluate_batch(depths, widths, lat, betas)
+    assert totals.shape == (256,) and str(totals.dtype) == "int32"
+    assert scores.shape == (16, 256) and str(scores.dtype) == "float32"
+    assert dominated.shape == (256,) and str(dominated.dtype) == "int32"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_composed_graph_matches_oracles(seed):
+    depths, widths, lat, betas = _inputs(b=128, f=20, seed=seed)
+    totals, scores, dominated = model.evaluate_batch(depths, widths, lat, betas)
+    want_totals = ref.bram_totals_ref(depths, widths)
+    np.testing.assert_array_equal(np.asarray(totals), want_totals)
+    want_scores = ref.weighted_scores_ref(betas, lat, want_totals.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(scores), want_scores, rtol=1e-6)
+    want_dom = ref.dominated_mask_ref(lat, want_totals.astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(dominated), want_dom)
+
+
+def test_padding_rows_are_inert():
+    depths, widths, lat, betas = _inputs(b=256, f=16, seed=3)
+    # Mark rows >= 100 as padding per the convention.
+    depths[100:] = 2
+    lat[100:] = np.inf
+    totals, _, dominated = model.evaluate_batch(depths, widths, lat, betas)
+    totals = np.asarray(totals)
+    assert (totals[100:] == 0).all(), "padding rows must cost 0 BRAM"
+    # Real rows' dominance must be unaffected by padding: recompute with
+    # only the valid prefix.
+    want = ref.dominated_mask_ref(lat[:100], totals[:100].astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(dominated)[:100], want)
+
+
+def test_beta_endpoints():
+    depths, widths, lat, betas = _inputs(b=64, f=8, seed=5)
+    totals, scores, _ = model.evaluate_batch(depths, widths, lat, betas)
+    np.testing.assert_allclose(np.asarray(scores)[0], lat, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(scores)[-1], np.asarray(totals).astype(np.float32), rtol=1e-6
+    )

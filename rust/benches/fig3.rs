@@ -1,0 +1,99 @@
+//! Fig. 3 reproduction: Pareto frontiers of all five optimizers on the
+//! selected designs (k15mmtree, k15mmseq, Autoencoder), with the
+//! Baseline-Max/Min anchors and the α=0.7 highlighted points.
+//!
+//! Run: `cargo bench --bench fig3`
+//! Env: FIFOADVISOR_BUDGET (default 1000)
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::objective::select_highlight;
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::report::ascii;
+use fifoadvisor::report::csv::Csv;
+use fifoadvisor::trace::collect_trace;
+use std::sync::Arc;
+
+const DESIGNS: [&str; 3] = ["k15mmtree", "k15mmseq", "Autoencoder"];
+const OPTS: [(char, &str); 5] = [
+    ('g', "greedy"),
+    ('r', "random"),
+    ('R', "grouped_random"),
+    ('s', "sa"),
+    ('S', "grouped_sa"),
+];
+
+fn main() {
+    let budget: usize = std::env::var("FIFOADVISOR_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let mut csv = Csv::new(&["design", "optimizer", "latency", "bram", "highlighted"]);
+
+    for design in DESIGNS {
+        let bd = bench_suite::build(design);
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let space = Space::from_trace(&trace);
+        let mut ev = Evaluator::parallel(trace.clone(), 8);
+        let (base, minp) = ev.eval_baselines();
+        let base_lat = base.latency.unwrap();
+
+        println!("\n=== Fig 3: {design} (budget {budget}) ===");
+        println!(
+            "Baseline-Max ({} cyc, {} BRAM)   Baseline-Min: {}",
+            base_lat,
+            base.bram,
+            match minp.latency {
+                Some(l) => format!("({l} cyc, {} BRAM)", minp.bram),
+                None => "DEADLOCK ✗".into(),
+            }
+        );
+
+        let mut plot: Vec<(char, Vec<(f64, f64)>)> = Vec::new();
+        for (label, name) in OPTS {
+            ev.reset_run(true);
+            opt::by_name(name, 1).unwrap().run(&mut ev, &space, budget);
+            let front = ev.pareto();
+            let pts: Vec<(u64, u32)> =
+                front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
+            let star = select_highlight(&pts, 0.7, base_lat, base.bram);
+            for (i, &(l, b)) in pts.iter().enumerate() {
+                csv.row(vec![
+                    design.to_string(),
+                    name.to_string(),
+                    l.to_string(),
+                    b.to_string(),
+                    (Some(i) == star).to_string(),
+                ]);
+            }
+            let (sl, sb) = star.map(|i| pts[i]).unwrap_or((0, 0));
+            println!(
+                "  {name:<16} front {:>3} pts   ★ lat {:>8} ({:.4}×) bram {:>4}",
+                pts.len(),
+                sl,
+                sl as f64 / base_lat as f64,
+                sb
+            );
+            plot.push((label, pts.iter().map(|&(l, b)| (l as f64, b as f64)).collect()));
+        }
+
+        let base_pt = [(base_lat as f64, base.bram as f64)];
+        let mut series: Vec<ascii::Series> = plot
+            .iter()
+            .map(|(label, pts)| ascii::Series {
+                label: *label,
+                points: pts,
+            })
+            .collect();
+        series.push(ascii::Series {
+            label: 'M',
+            points: &base_pt,
+        });
+        println!(
+            "{}",
+            ascii::scatter(&series, 72, 18, "latency (cycles)", "FIFO BRAM")
+        );
+    }
+    csv.write("results/fig3.csv").unwrap();
+    println!("wrote results/fig3.csv");
+}

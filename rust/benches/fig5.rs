@@ -1,0 +1,80 @@
+//! Fig. 5 reproduction: iso-runtime convergence of the optimizers on
+//! k15mmtree — best α-score (α=0.7, vs Baseline-Max) observed so far as
+//! a function of wall-clock time, including optimizer logic overhead.
+//!
+//! Run: `cargo bench --bench fig5`
+//! Env: FIFOADVISOR_BUDGET (default 1000)
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::objective::alpha_score;
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::report::ascii;
+use fifoadvisor::report::csv::Csv;
+use fifoadvisor::trace::collect_trace;
+use std::sync::Arc;
+
+const OPTS: [(char, &str); 5] = [
+    ('g', "greedy"),
+    ('r', "random"),
+    ('R', "grouped_random"),
+    ('s', "sa"),
+    ('S', "grouped_sa"),
+];
+
+fn main() {
+    let budget: usize = std::env::var("FIFOADVISOR_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let design = "k15mmtree";
+    let bd = bench_suite::build(design);
+    let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let space = Space::from_trace(&trace);
+    let mut ev = Evaluator::parallel(trace.clone(), 8);
+    let (base, _) = ev.eval_baselines();
+    let (base_lat, base_bram) = (base.latency.unwrap(), base.bram);
+
+    println!("=== Fig 5: convergence on {design} (budget {budget}) ===\n");
+    let mut csv = Csv::new(&["optimizer", "t_secs", "best_score"]);
+    let mut plot: Vec<(char, Vec<(f64, f64)>)> = Vec::new();
+    for (label, name) in OPTS {
+        ev.reset_run(true);
+        opt::by_name(name, 1).unwrap().run(&mut ev, &space, budget);
+        // Best-so-far α-score over the evaluation history.
+        let mut best = f64::INFINITY;
+        let mut curve: Vec<(f64, f64)> = Vec::new();
+        for p in &ev.history {
+            if let Some(l) = p.latency {
+                let s = alpha_score(0.7, l, p.bram, base_lat, base_bram);
+                if s < best {
+                    best = s;
+                    curve.push((p.t, s));
+                    csv.row(vec![name.to_string(), format!("{:.6}", p.t), format!("{s:.6}")]);
+                }
+            }
+        }
+        let total_t = ev.history.last().map(|p| p.t).unwrap_or(0.0);
+        curve.push((total_t, best));
+        println!(
+            "  {name:<16} final best score {best:.4} after {:.2}s ({} evals)",
+            total_t,
+            ev.n_evals()
+        );
+        plot.push((label, curve));
+    }
+
+    let series: Vec<ascii::Series> = plot
+        .iter()
+        .map(|(label, pts)| ascii::Series {
+            label: *label,
+            points: pts,
+        })
+        .collect();
+    println!(
+        "\n(g=greedy r=random R=grouped-random s=SA S=grouped-SA; lower is better)\n{}",
+        ascii::convergence(&series, 72, 18)
+    );
+    csv.write("results/fig5.csv").unwrap();
+    println!("wrote results/fig5.csv");
+}

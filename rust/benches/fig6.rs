@@ -1,0 +1,93 @@
+//! Fig. 6 reproduction: the FlowGNN-PNA case study (§IV-D) — Pareto
+//! frontiers of all optimizers with a 5000-sample budget against the
+//! designer-sized Baseline-Max, on a design with data-dependent control
+//! flow. All optimizer runs must finish in well under 10 s (the paper's
+//! bound).
+//!
+//! Run: `cargo bench --bench fig6`
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::objective::select_highlight;
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::report::ascii;
+use fifoadvisor::report::csv::Csv;
+use fifoadvisor::trace::collect_trace;
+use std::sync::Arc;
+
+const OPTS: [(char, &str); 5] = [
+    ('g', "greedy"),
+    ('r', "random"),
+    ('R', "grouped_random"),
+    ('s', "sa"),
+    ('S', "grouped_sa"),
+];
+
+fn main() {
+    let budget: usize = std::env::var("FIFOADVISOR_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5000);
+    let bd = bench_suite::build("flowgnn_pna");
+    let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let space = Space::from_trace(&trace);
+    let mut ev = Evaluator::parallel(trace.clone(), 8);
+    let (designer, minp) = ev.eval_baselines();
+    let (base_lat, base_bram) = (designer.latency.unwrap(), designer.bram);
+
+    println!("=== Fig 6: FlowGNN-PNA case study (budget {budget}) ===");
+    println!(
+        "designer Baseline-Max: {} cycles / {} BRAM;  all-min: {}\n",
+        base_lat,
+        base_bram,
+        if minp.is_feasible() { "feasible" } else { "DEADLOCK" }
+    );
+
+    let mut csv = Csv::new(&["optimizer", "latency", "bram", "highlighted", "runtime_secs"]);
+    let mut plot: Vec<(char, Vec<(f64, f64)>)> = Vec::new();
+    for (label, name) in OPTS {
+        ev.reset_run(true);
+        let t0 = std::time::Instant::now();
+        opt::by_name(name, 1).unwrap().run(&mut ev, &space, budget);
+        let dt = t0.elapsed().as_secs_f64();
+        let front = ev.pareto();
+        let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
+        let star = select_highlight(&pts, 0.7, base_lat, base_bram);
+        for (i, &(l, b)) in pts.iter().enumerate() {
+            csv.row(vec![
+                name.to_string(),
+                l.to_string(),
+                b.to_string(),
+                (Some(i) == star).to_string(),
+                format!("{dt:.3}"),
+            ]);
+        }
+        let (sl, sb) = star.map(|i| pts[i]).unwrap_or((0, 0));
+        println!(
+            "  {name:<16} {:>4} front pts in {dt:>6.2}s   ★ lat {sl} ({:.4}×) bram {sb}",
+            pts.len(),
+            sl as f64 / base_lat as f64
+        );
+        assert!(dt < 10.0, "{name}: exceeded the paper's <10 s bound ({dt:.1}s)");
+        plot.push((label, pts.iter().map(|&(l, b)| (l as f64, b as f64)).collect()));
+    }
+
+    let base_pt = [(base_lat as f64, base_bram as f64)];
+    let mut series: Vec<ascii::Series> = plot
+        .iter()
+        .map(|(label, pts)| ascii::Series {
+            label: *label,
+            points: pts,
+        })
+        .collect();
+    series.push(ascii::Series {
+        label: 'M',
+        points: &base_pt,
+    });
+    println!(
+        "\n{}",
+        ascii::scatter(&series, 72, 18, "latency (cycles)", "FIFO BRAM")
+    );
+    csv.write("results/fig6.csv").unwrap();
+    println!("wrote results/fig6.csv");
+}

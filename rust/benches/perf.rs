@@ -1,0 +1,196 @@
+//! §Perf micro-benchmarks: the numbers EXPERIMENTS.md §Perf tracks.
+//!
+//! 1. Incremental re-simulation latency per design (the paper's "<1 ms
+//!    per FIFO size change" headline) + trace-op throughput.
+//! 2. Fast vs golden simulator speed ratio.
+//! 3. Leader/worker scaling (1→16 threads) on batch evaluation.
+//! 4. BRAM analytics backend: native Rust vs XLA/PJRT artifact,
+//!    per-batch latency and the batch-size crossover.
+//!
+//! Run: `cargo bench --bench perf`
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::pool::parallel_latencies;
+use fifoadvisor::dse::{BramBatch, NativeBram};
+use fifoadvisor::report::csv::Csv;
+use fifoadvisor::runtime::{BatchAnalytics, XlaBram};
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::golden::simulate_golden;
+use fifoadvisor::sim::SimOptions;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::stats::{fmt_duration, Summary};
+use fifoadvisor::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn main() {
+    let mut csv = Csv::new(&["metric", "design", "value", "unit"]);
+
+    println!("=== §Perf 1: incremental re-simulation latency ===\n");
+    println!(
+        "{:<26} {:>10} {:>12} {:>12} {:>14}",
+        "design", "trace ops", "median", "p95", "ops/sec"
+    );
+    let designs = [
+        "bicg",
+        "gemm",
+        "k15mmtree",
+        "Autoencoder",
+        "FeedForward",
+        "ResidualBlock",
+    ];
+    for name in designs {
+        let bd = bench_suite::build(name);
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let mut sim = FastSim::new(trace.clone());
+        let ub = trace.upper_bounds();
+        let mut rng = Rng::new(1);
+        // Random configs, pre-generated (measure sim only).
+        let configs: Vec<Vec<u32>> = (0..64)
+            .map(|_| ub.iter().map(|&u| rng.range_u32(2, u.max(2))).collect())
+            .collect();
+        sim.simulate(&configs[0]); // warm
+        let mut times = Vec::new();
+        for c in &configs {
+            let t0 = Instant::now();
+            let _ = sim.simulate(c);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&times);
+        println!(
+            "{:<26} {:>10} {:>12} {:>12} {:>14.2e}",
+            name,
+            trace.total_ops(),
+            fmt_duration(s.median),
+            fmt_duration(s.p95),
+            trace.total_ops() as f64 / s.median
+        );
+        csv.row(vec![
+            "resim_median_secs".into(),
+            name.into(),
+            format!("{:.6e}", s.median),
+            "s".into(),
+        ]);
+    }
+
+    println!("\n=== §Perf 2: fast vs golden simulator ===\n");
+    for name in ["gemm", "k15mmtree"] {
+        let bd = bench_suite::build(name);
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let cfg = trace.baseline_max();
+        let mut sim = FastSim::new(trace.clone());
+        let t_fast = time_n(10, || {
+            let _ = sim.simulate(&cfg);
+        });
+        let t_gold = time_n(3, || {
+            let _ = simulate_golden(&trace, &cfg, SimOptions::default());
+        });
+        println!(
+            "{name:<26} fast {} vs golden {}  ({:.0}x)",
+            fmt_duration(t_fast),
+            fmt_duration(t_gold),
+            t_gold / t_fast
+        );
+        csv.row(vec![
+            "fast_vs_golden_ratio".into(),
+            name.into(),
+            format!("{:.1}", t_gold / t_fast),
+            "x".into(),
+        ]);
+    }
+
+    println!("\n=== §Perf 3: leader/worker scaling (FeedForward, 128-config batch) ===\n");
+    {
+        let bd = bench_suite::build("FeedForward");
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let proto = FastSim::new(trace.clone());
+        let ub = trace.upper_bounds();
+        let mut rng = Rng::new(2);
+        let configs: Vec<Box<[u32]>> = (0..128)
+            .map(|_| {
+                ub.iter()
+                    .map(|&u| rng.range_u32(2, u.max(2)))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        let t1 = time_n(3, || {
+            let _ = parallel_latencies(&proto, &configs, 1);
+        });
+        for threads in [2usize, 4, 8, 16] {
+            let t = time_n(3, || {
+                let _ = parallel_latencies(&proto, &configs, threads);
+            });
+            println!(
+                "  {threads:>2} threads: {} per batch  (speedup {:.2}x)",
+                fmt_duration(t),
+                t1 / t
+            );
+            csv.row(vec![
+                format!("pool_speedup_{threads}"),
+                "FeedForward".into(),
+                format!("{:.3}", t1 / t),
+                "x".into(),
+            ]);
+        }
+    }
+
+    println!("\n=== §Perf 4: BRAM analytics backend (256-config batch, 848 FIFOs) ===\n");
+    {
+        let f = 848usize;
+        let mut rng = Rng::new(3);
+        let widths: Vec<u32> = (0..f).map(|_| *rng.choose(&[8u32, 32, 64])).collect();
+        let configs: Vec<Box<[u32]>> = (0..256)
+            .map(|_| {
+                (0..f)
+                    .map(|_| rng.range_u32(2, 8192))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        let mut native = NativeBram;
+        let t_native = time_n(20, || {
+            let _ = native.bram_totals(&configs, &widths);
+        });
+        println!(
+            "  native Rust       : {} per 256-config batch",
+            fmt_duration(t_native)
+        );
+        csv.row(vec![
+            "bram_native_secs".into(),
+            "848f".into(),
+            format!("{t_native:.6e}"),
+            "s".into(),
+        ]);
+        match BatchAnalytics::load_default() {
+            Ok(a) => {
+                let mut xla = XlaBram::new(a);
+                let _ = xla.bram_totals(&configs[..1], &widths); // warm/compile
+                let t_xla = time_n(10, || {
+                    let _ = xla.bram_totals(&configs, &widths);
+                });
+                println!(
+                    "  XLA/PJRT artifact : {} per 256-config batch ({} also computes β-grid scores + dominance mask)",
+                    fmt_duration(t_xla),
+                    if t_xla > t_native { "note: artifact" } else { "artifact" }
+                );
+                csv.row(vec![
+                    "bram_xla_secs".into(),
+                    "848f".into(),
+                    format!("{t_xla:.6e}"),
+                    "s".into(),
+                ]);
+            }
+            Err(e) => println!("  XLA backend unavailable ({e}); run `make artifacts`"),
+        }
+    }
+
+    csv.write("results/perf.csv").unwrap();
+    println!("\nwrote results/perf.csv");
+}

@@ -1,0 +1,125 @@
+//! Table II reproduction: fast-simulator accuracy against the golden
+//! reference on all 21 evaluation designs, at Baseline-Max depths (the
+//! configuration the paper co-simulates).
+//!
+//! In the paper the reference is Vitis C/RTL co-simulation and
+//! LightningSim is within one cycle on 20/21 designs; here the reference
+//! is the independent cycle-stepped golden simulator and agreement is
+//! exact by construction of shared semantics — divergence would flag an
+//! implementation bug. Also reports both simulators' runtimes (the
+//! Table II rationale: the trace-based simulator is the fast one).
+//!
+//! Run: `cargo bench --bench table2`
+
+use fifoadvisor::bench_suite::{self, TABLE2_DESIGNS};
+use fifoadvisor::report::csv::Csv;
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::golden::simulate_golden;
+use fifoadvisor::sim::SimOptions;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::stats::fmt_duration;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Paper Table II (design, FIFOs, co-sim cycles) for side-by-side print.
+const PAPER: &[(&str, u32, u64)] = &[
+    ("atax", 175, 2180),
+    ("Autoencoder", 392, 39178),
+    ("bicg", 25, 1112),
+    ("DepthSepConvBlock", 84, 134541),
+    ("FeedForward", 848, 65997),
+    ("gemm", 88, 24051),
+    ("k2mm", 64, 36352),
+    ("k3mm", 95, 49092),
+    ("k7mmseq_balanced", 112, 5684),
+    ("k7mmseq_unbalanced", 108, 10036),
+    ("k7mmtree_unbalanced", 128, 8750),
+    ("mvt", 288, 667),
+    ("ResidualBlock", 64, 2092531),
+    ("k15mmseq_imbalanced", 59, 7802),
+    ("k15mmseq", 188, 61052),
+    ("k15mmseq_relu_imbalanced", 116, 8504),
+    ("k15mmseq_relu", 232, 28838),
+    ("k15mmtree_imbalanced", 163, 16237),
+    ("k15mmtree", 192, 20326),
+    ("k15mmtree_relu_imbalanced", 340, 16489),
+    ("k15mmtree_relu", 320, 17277),
+];
+
+fn main() {
+    println!("=== Table II: simulator cycle accuracy (Baseline-Max) ===\n");
+    println!(
+        "{:<26} {:>6} {:>6} | {:>10} {:>10} {:>5} | {:>10} {:>10} | {:>12}",
+        "design", "FIFOs", "paper", "golden", "fast", "diff", "t_golden", "t_fast", "paper cycles"
+    );
+    let mut csv = Csv::new(&[
+        "design",
+        "fifos",
+        "paper_fifos",
+        "golden_cycles",
+        "fast_cycles",
+        "diff",
+        "golden_secs",
+        "fast_secs",
+        "paper_cycles",
+    ]);
+    let mut all_match = true;
+    for name in TABLE2_DESIGNS {
+        let paper = PAPER.iter().find(|p| p.0 == name).unwrap();
+        let bd = bench_suite::build(name);
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let cfg = trace.baseline_max();
+
+        let mut fast = FastSim::new(trace.clone());
+        fast.simulate(&cfg); // warm
+        let t0 = Instant::now();
+        let f = fast.simulate(&cfg).latency().unwrap();
+        let t_fast = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let g = simulate_golden(&trace, &cfg, SimOptions::default())
+            .latency()
+            .unwrap();
+        let t_golden = t0.elapsed().as_secs_f64();
+
+        let diff = if f == g {
+            "✓".to_string()
+        } else {
+            all_match = false;
+            format!("{:+.2}%", (f as f64 - g as f64) / g as f64 * 100.0)
+        };
+        println!(
+            "{:<26} {:>6} {:>6} | {:>10} {:>10} {:>5} | {:>10} {:>10} | {:>12}",
+            name,
+            trace.num_fifos(),
+            paper.1,
+            g,
+            f,
+            diff,
+            fmt_duration(t_golden),
+            fmt_duration(t_fast),
+            paper.2
+        );
+        csv.row(vec![
+            name.to_string(),
+            trace.num_fifos().to_string(),
+            paper.1.to_string(),
+            g.to_string(),
+            f.to_string(),
+            diff.clone(),
+            format!("{t_golden:.6}"),
+            format!("{t_fast:.6}"),
+            paper.2.to_string(),
+        ]);
+    }
+    csv.write("results/table2.csv").unwrap();
+    println!(
+        "\n{} — wrote results/table2.csv",
+        if all_match {
+            "all designs: fast == golden exactly (paper: ≤1 cycle on 20/21)"
+        } else {
+            "MISMATCHES FOUND — simulator bug"
+        }
+    );
+    assert!(all_match);
+}

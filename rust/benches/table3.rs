@@ -1,0 +1,89 @@
+//! Table III reproduction: FIFOAdvisor search runtime vs estimated
+//! HLS/RTL co-simulation search runtime (1000 samples, co-sim with 32
+//! perfectly-parallel workers), per design × optimizer, with the speedup
+//! geomean per optimizer column.
+//!
+//! Run: `cargo bench --bench table3`
+//! Env: FIFOADVISOR_BUDGET (default 1000), FIFOADVISOR_THREADS (8)
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::report::csv::Csv;
+use fifoadvisor::sim::cosim;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::stats::{fmt_duration, geomean};
+use std::sync::Arc;
+
+const OPTS: [&str; 5] = ["greedy", "random", "grouped_random", "sa", "grouped_sa"];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let budget = env_usize("FIFOADVISOR_BUDGET", 1000);
+    let threads = env_usize("FIFOADVISOR_THREADS", 8);
+    println!(
+        "=== Table III: search runtime, budget {budget}, {threads} worker threads, co-sim PAR=32 ===\n"
+    );
+    println!(
+        "{:<26} {:>12} | {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "design", "co-sim(est)", "greedy", "rnd", "grp.rnd", "SA", "grp.SA"
+    );
+    let mut csv = Csv::new(&[
+        "design", "cosim_secs", "greedy_secs", "random_secs", "grouped_random_secs", "sa_secs",
+        "grouped_sa_secs",
+    ]);
+    let mut speedups: Vec<Vec<f64>> = vec![Vec::new(); OPTS.len()];
+
+    for name in bench_suite::all_names() {
+        let bd = bench_suite::build(name);
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let space = Space::from_trace(&trace);
+        let mut ev = Evaluator::parallel(trace.clone(), threads);
+
+        // Co-sim estimate: best-case per-run time (Baseline-Max = fewest
+        // cycles) × budget / 32 — the paper's conservative lower bound.
+        let base_cycles = {
+            ev.eval(&trace.baseline_max()).0.unwrap()
+        };
+        let cosim_secs = cosim::cosim_search_secs(base_cycles, trace.num_fifos(), budget as u64, 32);
+
+        let mut row = vec![name.to_string(), format!("{cosim_secs:.1}")];
+        let mut cells = Vec::new();
+        for (k, opt_name) in OPTS.iter().enumerate() {
+            ev.reset_run(true);
+            let mut o = opt::by_name(opt_name, 1).unwrap();
+            let t0 = std::time::Instant::now();
+            o.run(&mut ev, &space, budget);
+            let dt = t0.elapsed().as_secs_f64().max(1e-6);
+            speedups[k].push(cosim_secs / dt);
+            row.push(format!("{dt:.3}"));
+            cells.push(fmt_duration(dt));
+        }
+        println!(
+            "{:<26} {:>12} | {:>10} {:>10} {:>10} {:>10} {:>10}",
+            name,
+            fmt_duration(cosim_secs),
+            cells[0],
+            cells[1],
+            cells[2],
+            cells[3],
+            cells[4]
+        );
+        csv.row(row);
+    }
+
+    print!("\nspeedup geomean          {:>12} |", "");
+    for s in &speedups {
+        let g = geomean(s).unwrap();
+        print!(" 10^{:.2}   ", g.log10());
+    }
+    println!("\n(paper: 10^6.53 10^6.88 10^6.91 10^6.20 10^6.19)");
+    csv.write("results/table3.csv").unwrap();
+    println!("wrote results/table3.csv");
+}

@@ -1,0 +1,151 @@
+//! Deep-learning block kernels from the Stream-HLS suite: FeedForward,
+//! Autoencoder, ResidualBlock, DepthSepConvBlock, ResMLP.
+
+use super::stages::{self, F32, W8};
+use super::BenchDesign;
+use crate::ir::DesignBuilder;
+
+/// Transformer FFN block: `y = W2·gelu(W1·x + b1) + b2`, very wide PE
+/// array. Paper: 848 FIFOs, 65997 cycles.
+pub fn feedforward() -> BenchDesign {
+    let p = 106;
+    let mut b = DesignBuilder::new("FeedForward", 0);
+    let ws = stages::port_sources(&mut b, "W", &[("w1", p, 128), ("w2", p, 128)], W8);
+    let x = stages::source(&mut b, "x", p, 128, F32);
+    let h = stages::matmul(&mut b, "h", &x, &ws[0], 8, 16, 0);
+    let g = stages::map(&mut b, "gelu", &h, 2);
+    let rep = stages::replay(&mut b, "h_rep", &g, 8); // 128 tokens
+    let y = stages::matmul(&mut b, "y", &rep, &ws[1], 8, 16, 0);
+    let out = stages::map(&mut b, "bias", &y, 1);
+    stages::sink(&mut b, "store_y", &out, 0);
+    BenchDesign::new(b.build())
+}
+
+/// 4-layer MLP autoencoder (encode ×2, decode ×2), ReLU between layers.
+/// Paper: 392 FIFOs, 39178 cycles.
+pub fn autoencoder() -> BenchDesign {
+    let p = 24;
+    let mut b = DesignBuilder::new("Autoencoder", 0);
+    let ws = stages::port_sources(
+        &mut b,
+        "W",
+        &[("w1", p, 512), ("w2", p, 256), ("w3", p, 256), ("w4", p, 512)],
+        W8,
+    );
+    let x = stages::source(&mut b, "x", p, 512, F32);
+    let mut cur = stages::matmul(&mut b, "l1", &x, &ws[0], 8, 64, 0);
+    cur = stages::map(&mut b, "relu1", &cur, 1);
+    for (i, out_tokens) in [(2usize, 32u64), (3, 32), (4, 64)] {
+        let reduce = 8;
+        let need = reduce * out_tokens;
+        let factor = need / cur.tokens;
+        assert_eq!(factor * cur.tokens, need);
+        let rep = stages::replay(&mut b, &format!("rep{i}"), &cur, factor);
+        cur = stages::matmul(&mut b, &format!("l{i}"), &rep, &ws[i - 1], reduce, out_tokens, 0);
+        if i < 4 {
+            cur = stages::map(&mut b, &format!("relu{i}"), &cur, 1);
+        }
+    }
+    stages::sink(&mut b, "store", &cur, 0);
+    BenchDesign::new(b.build())
+}
+
+/// Residual block: `y = x + conv2(relu(conv1(x)))`, long-running stages
+/// (the paper's co-simulated count is ~2.1M cycles — by far the longest;
+/// the per-output accumulation delays model the deep conv pipelines).
+/// Paper: 64 FIFOs, 2092531 cycles.
+pub fn residual_block() -> BenchDesign {
+    let p = 6;
+    let mut b = DesignBuilder::new("ResidualBlock", 0);
+    let ws = stages::port_sources(&mut b, "W", &[("w1", p, 4096), ("w2", p, 4096)], W8);
+    let x = stages::source(&mut b, "x", p, 512, F32);
+    let (path, skip) = stages::tee(&mut b, "split", &x);
+    let path_rep = stages::replay(&mut b, "x_rep", &path, 8); // 4096
+    let c1 = stages::matmul(&mut b, "conv1", &path_rep, &ws[0], 8, 512, 1500);
+    let r1 = stages::map(&mut b, "relu", &c1, 2);
+    let r1_rep = stages::replay(&mut b, "h_rep", &r1, 8); // 4096
+    let c2 = stages::matmul(&mut b, "conv2", &r1_rep, &ws[1], 8, 512, 1500);
+    let y = stages::join_add(&mut b, "add", &c2, &skip, 1);
+    stages::sink(&mut b, "store", &y, 0);
+    BenchDesign::new(b.build())
+}
+
+/// Depthwise-separable conv block: depthwise conv (long elementwise
+/// stage) then pointwise 1×1 conv (matmul) + batchnorm.
+/// Paper: 84 FIFOs, 134541 cycles.
+pub fn depth_sep_conv_block() -> BenchDesign {
+    let p = 14;
+    let mut b = DesignBuilder::new("DepthSepConvBlock", 0);
+    let x = stages::source(&mut b, "x", p, 256, F32);
+    let dw = stages::map(&mut b, "dwconv", &x, 500);
+    let rep = stages::replay(&mut b, "dw_rep", &dw, 8); // 2048
+    let w = stages::source(&mut b, "w", p, 2048, F32);
+    let pw = stages::matmul(&mut b, "pwconv", &rep, &w, 8, 256, 0);
+    let bn = stages::map(&mut b, "bn_relu", &pw, 2);
+    stages::sink(&mut b, "store", &bn, 0);
+    BenchDesign::new(b.build())
+}
+
+/// ResMLP: two MLP blocks with residual connections.
+/// (Table III row; not in Table II.)
+pub fn resmlp() -> BenchDesign {
+    let p = 16;
+    let mut b = DesignBuilder::new("ResMLP", 0);
+    let ws = stages::port_sources(
+        &mut b,
+        "W",
+        &[("b0_w1", p, 512), ("b0_w2", p, 512), ("b1_w1", p, 512), ("b1_w2", p, 512)],
+        W8,
+    );
+    let x = stages::source(&mut b, "x", p, 64, F32);
+    let mut cur = x;
+    for blk in 0..2 {
+        let (path, skip) = stages::tee(&mut b, &format!("b{blk}_split"), &cur);
+        let rep1 = stages::replay(&mut b, &format!("b{blk}_rep1"), &path, 8); // 512
+        let h = stages::matmul(&mut b, &format!("b{blk}_mm1"), &rep1, &ws[2 * blk], 8, cur.tokens, 0);
+        let g = stages::map(&mut b, &format!("b{blk}_gelu"), &h, 2);
+        let rep2 = stages::replay(&mut b, &format!("b{blk}_rep2"), &g, 8);
+        let y = stages::matmul(&mut b, &format!("b{blk}_mm2"), &rep2, &ws[2 * blk + 1], 8, cur.tokens, 0);
+        cur = stages::join_add(&mut b, &format!("b{blk}_add"), &y, &skip, 1);
+    }
+    stages::sink(&mut b, "store", &cur, 0);
+    BenchDesign::new(b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    #[test]
+    fn residual_block_is_megacycle_scale() {
+        let bd = residual_block();
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let mut s = FastSim::new(t.clone());
+        let lat = s.simulate(&t.baseline_max()).latency().unwrap();
+        assert!(
+            (400_000..=6_000_000).contains(&lat),
+            "ResidualBlock latency {lat} not ~2M-cycle scale"
+        );
+    }
+
+    #[test]
+    fn feedforward_is_widest() {
+        assert_eq!(feedforward().design.num_fifos(), 8 * 106);
+    }
+
+    #[test]
+    fn dnn_designs_have_stream_array_groups() {
+        for bd in [feedforward(), autoencoder(), resmlp(), depth_sep_conv_block()] {
+            let groups: Vec<_> = bd.design.groups();
+            // every group is a full P-wide stream array
+            assert!(
+                groups.iter().all(|g| g.len() > 1),
+                "{}: expected arrays",
+                bd.design.name
+            );
+        }
+    }
+}

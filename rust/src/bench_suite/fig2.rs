@@ -1,0 +1,64 @@
+//! The paper's Fig. 2 motivating example: a design whose FIFOs *cannot*
+//! be sized optimally or deadlock-free without runtime analysis, because
+//! the deadlock threshold depends on the runtime kernel argument `n`.
+//!
+//! ```c
+//! void producer(stream &x, stream &y, int n) {
+//!   for (int i = 0; i < n; i++) x.write(1);
+//!   for (int i = 0; i < n; i++) y.write(1);
+//! }
+//! void consumer(int *out, stream &x, stream &y, int n) {
+//!   int sum = 0;
+//!   for (int i = 0; i < n; i++) sum += x.read() + y.read();
+//!   *out = sum;
+//! }
+//! ```
+//!
+//! The consumer alternates x/y reads while the producer writes all of x
+//! first, so x must buffer `n - 1` tokens: any `depth(x) < n - 1`
+//! deadlocks, and `n` is only known at runtime.
+
+use super::BenchDesign;
+use crate::ir::{DesignBuilder, Expr};
+
+/// Build `mult_by_2` for runtime argument `n`.
+pub fn mult_by_2(n: i64) -> BenchDesign {
+    let mut b = DesignBuilder::new("fig2", 1);
+    let x = b.channel("x", 32);
+    let y = b.channel("y", 32);
+    b.process("producer", |p| {
+        p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+        p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+    });
+    b.process("consumer", |p| {
+        let sum = p.var();
+        p.set(sum, Expr::c(0));
+        p.for_expr(Expr::arg(0), |p, _| {
+            let a = p.read(x);
+            let c = p.read(y);
+            p.set(sum, Expr::var(sum).add(Expr::var(a)).add(Expr::var(c)));
+        });
+    });
+    BenchDesign::with_args(b.build(), vec![n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    #[test]
+    fn deadlock_threshold_is_n_minus_one() {
+        for n in [4i64, 16, 33] {
+            let bd = mult_by_2(n);
+            let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+            let mut s = FastSim::new(t.clone());
+            let ok = s.simulate(&[(n - 1) as u32, 2]);
+            assert!(!ok.is_deadlock(), "n={n}: depth n-1 should be safe");
+            let bad = s.simulate(&[(n - 2) as u32, 2]);
+            assert!(bad.is_deadlock(), "n={n}: depth n-2 should deadlock");
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! FlowGNN-style GNN accelerator with data-dependent control flow — the
+//! §IV-D case study (Principal Neighborhood Aggregation).
+//!
+//! Message-passing dataflow: a **scatter** unit streams one message per
+//! edge into per-lane gather FIFOs, bucketed by destination node; because
+//! the graph connectivity is a *runtime input*, the number of messages
+//! each lane receives (and therefore every FIFO's deadlock threshold) is
+//! unknowable statically. The scatter unit emits per-lane message counts
+//! only *after* the edge scan (as in degree-table-driven GNN designs), so
+//! a gather lane cannot drain its message FIFO until scatter has finished
+//! — the message FIFOs must buffer a data-dependent burst, which is
+//! exactly the situation the paper argues only simulation can size.
+//!
+//! The graph is generated in-VM from an LCG seeded by a kernel argument,
+//! so different `args` give different traces (multi-stimulus
+//! optimization exercises this).
+//!
+//! Pipeline: `scatter → gather[P] (PNA: mean/max/min/std) → update[P]
+//! (weight matmul) → store`, with designer depth hints on every FIFO
+//! (the case study's user-sized Baseline-Max, §IV-D).
+
+use super::BenchDesign;
+use crate::ir::{DesignBuilder, Expr};
+
+/// Number of parallel gather/update lanes.
+pub const LANES: usize = 8;
+
+/// Build the PNA design for `num_nodes`, `num_edges`, and an LCG `seed`
+/// (all runtime kernel arguments).
+pub fn pna(num_nodes: i64, num_edges: i64, seed: i64) -> BenchDesign {
+    let p = LANES;
+    let mut b = DesignBuilder::new("flowgnn_pna", 3);
+    let n_arg = || Expr::arg(0);
+    let e_arg = || Expr::arg(1);
+
+    // Designer-sized FIFOs (the case study's hand-tuned Baseline-Max).
+    let msg = b.channel_array_with_depth("msg", p, 64, 256);
+    let deg = b.channel_array_with_depth("deg", p, 16, 4);
+    let agg = b.channel_array_with_depth("agg", p, 128, 16);
+    let w = b.channel_array_with_depth("w", p, 32, 32);
+    let out = b.channel_array_with_depth("out", p, 128, 8);
+
+    // Scatter: stream one message per edge into msg[dst % P], THEN emit
+    // the per-lane counts. dst(e) = LCG(seed, e) mod N.
+    let msg_c = msg.clone();
+    let deg_c = deg.clone();
+    b.process("scatter", move |pb| {
+        // Per-lane running counters.
+        let counts: Vec<_> = (0..p).map(|_| pb.var()).collect();
+        for &c in &counts {
+            pb.set(c, Expr::c(0));
+        }
+        pb.for_expr(e_arg(), |pb, e| {
+            // dst = (e² + seed·e + seed) mod N — a quadratic hash, NOT a
+            // linear congruence: linear maps mod a power-of-two N give
+            // every lane identical load, whereas real graphs have skewed
+            // degree distributions. Quadratic residues concentrate
+            // destinations unevenly, seed-dependently. Always >= 0 for
+            // sane (positive) args.
+            let dst = pb.var();
+            pb.set(
+                dst,
+                Expr::var(e)
+                    .mul(Expr::var(e))
+                    .add(Expr::arg(2).mul(Expr::var(e)))
+                    .add(Expr::arg(2))
+                    .rem(n_arg())
+                    .max(Expr::c(0)),
+            );
+            let lane = pb.var();
+            pb.set(lane, Expr::var(dst).rem(Expr::c(p as i64)));
+            // Route to the matching lane FIFO (P-way predicated dispatch,
+            // as an unrolled comparison chain like HLS would synthesize).
+            for (li, (&m, &cv)) in msg_c.iter().zip(&counts).enumerate() {
+                pb.if_then(Expr::var(lane).eq(Expr::c(li as i64)), |pb| {
+                    pb.write(m, Expr::var(dst));
+                    pb.set(cv, Expr::var(cv).add(Expr::c(1)));
+                });
+            }
+        });
+        // Counts are only known after the full edge scan.
+        for (li, &d) in deg_c.iter().enumerate() {
+            pb.write(d, Expr::var(counts[li]));
+        }
+    });
+
+    // Gather lanes: PNA aggregation over the lane's message burst, then
+    // one aggregate token per (node, aggregator) pair for the lane's
+    // node share.
+    for lane in 0..p {
+        let (m, d, a) = (msg[lane], deg[lane], agg[lane]);
+        b.process(&format!("gather{lane}"), move |pb| {
+            let n_msgs = pb.read(d);
+            let acc = pb.var();
+            pb.set(acc, Expr::c(0));
+            pb.for_expr(Expr::var(n_msgs), |pb, _| {
+                let v = pb.read(m);
+                pb.delay(1); // running mean/max/min/std update
+                pb.set(acc, Expr::var(acc).add(Expr::var(v)));
+            });
+            // Emit 4 PNA aggregates (mean, max, min, std) per node in the
+            // lane's share of nodes.
+            let share = pb.var();
+            pb.set(share, n_arg().div(Expr::c(p as i64)));
+            pb.for_expr(Expr::var(share), |pb, _| {
+                pb.for_n(4, |pb, _| {
+                    pb.delay(1);
+                    pb.write(a, Expr::var(acc));
+                });
+            });
+        });
+    }
+
+    // Per-lane weight loaders + update units (small matmul over the 4
+    // aggregates), then store.
+    for lane in 0..p {
+        let wl = w[lane];
+        b.process(&format!("load_w{lane}"), move |pb| {
+            let share = pb.var();
+            pb.set(share, n_arg().div(Expr::c(p as i64)));
+            pb.for_expr(Expr::var(share), |pb, _| {
+                pb.for_n(4, |pb, _| pb.write(wl, Expr::c(3)));
+            });
+        });
+        let (a, wl, o) = (agg[lane], w[lane], out[lane]);
+        b.process(&format!("update{lane}"), move |pb| {
+            let share = pb.var();
+            pb.set(share, n_arg().div(Expr::c(p as i64)));
+            pb.for_expr(Expr::var(share), |pb, _| {
+                let acc = pb.var();
+                pb.set(acc, Expr::c(0));
+                pb.for_n(4, |pb, _| {
+                    let x = pb.read(a);
+                    let ww = pb.read(wl);
+                    pb.set(acc, Expr::var(acc).add(Expr::var(x).mul(Expr::var(ww))));
+                });
+                pb.delay(2);
+                pb.write(o, Expr::var(acc));
+            });
+        });
+    }
+    let out_c = out.clone();
+    b.process("store", move |pb| {
+        let share = pb.var();
+        pb.set(share, n_arg().div(Expr::c(p as i64)));
+        pb.for_expr(Expr::var(share), |pb, _| {
+            for &o in &out_c {
+                let _ = pb.read(o);
+            }
+        });
+    });
+
+    BenchDesign::with_args(b.build(), vec![num_nodes, num_edges, seed])
+}
+
+/// The default case-study instance: 64 nodes, 512 edges.
+pub fn pna_default() -> BenchDesign {
+    pna(64, 512, 7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    #[test]
+    fn trace_depends_on_graph() {
+        let a = pna(64, 512, 7);
+        let bb = pna(64, 512, 8);
+        let ta = collect_trace(&a.design, &a.args).unwrap();
+        let tb = collect_trace(&bb.design, &bb.args).unwrap();
+        // Same totals (one message per edge)...
+        let wa: u64 = ta.channels[..LANES].iter().map(|c| c.writes).sum();
+        let wb: u64 = tb.channels[..LANES].iter().map(|c| c.writes).sum();
+        assert_eq!(wa, 512);
+        assert_eq!(wb, 512);
+        // ...but different per-lane distribution (data-dependent routing).
+        let da: Vec<u64> = ta.channels[..LANES].iter().map(|c| c.writes).collect();
+        let db: Vec<u64> = tb.channels[..LANES].iter().map(|c| c.writes).collect();
+        assert_ne!(da, db, "different seeds must route differently");
+    }
+
+    #[test]
+    fn msg_fifos_must_buffer_data_dependent_burst() {
+        let bd = pna_default();
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let mut s = FastSim::new(t.clone());
+        // Designer sizes (hints) are safe.
+        assert!(!s.simulate(&t.baseline_max()).is_deadlock());
+        // All-minimum deadlocks: gather can't see deg until scatter ends,
+        // so msg FIFOs must hold whole bursts.
+        assert!(s.simulate(&t.baseline_min()).is_deadlock());
+        // The exact threshold per lane is its burst size: sizing each msg
+        // FIFO to its observed writes un-deadlocks even with deg/agg tiny.
+        let mut depths = t.baseline_min();
+        for lane in 0..LANES {
+            depths[lane] = t.channels[lane].writes as u32;
+        }
+        assert!(!s.simulate(&depths).is_deadlock());
+    }
+
+    #[test]
+    fn design_has_depth_hints_everywhere() {
+        let bd = pna_default();
+        assert!(bd.design.channels.iter().all(|c| c.depth_hint.is_some()));
+        assert_eq!(bd.design.num_fifos(), 5 * LANES);
+    }
+}

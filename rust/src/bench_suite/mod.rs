@@ -1,0 +1,187 @@
+//! Generators for the evaluation designs.
+//!
+//! Stand-ins for the paper's 24 Stream-HLS benchmark kernels (Table II /
+//! Table III), the Fig. 2 motivating example, and the FlowGNN-PNA case
+//! study (§IV-D). Each generator reproduces the *structural* properties
+//! the experiments exercise — dataflow topology, number of FIFOs, stream
+//! arrays (groups), producer/consumer rate relationships, and (for
+//! FlowGNN and Fig. 2) data-dependent control flow — with matrix sizes
+//! chosen so FIFO counts track the paper's Table II and cycle counts land
+//! in the same orders of magnitude. See DESIGN.md §2 for the
+//! substitution rationale.
+
+pub mod dnn;
+pub mod fig2;
+pub mod flowgnn;
+pub mod kmm;
+pub mod linalg;
+pub mod stages;
+
+use crate::ir::Design;
+
+/// A named benchmark design plus the kernel arguments its trace is
+/// collected under.
+pub struct BenchDesign {
+    pub design: Design,
+    pub args: Vec<i64>,
+}
+
+impl BenchDesign {
+    fn new(design: Design) -> BenchDesign {
+        BenchDesign {
+            design,
+            args: vec![],
+        }
+    }
+
+    fn with_args(design: Design, args: Vec<i64>) -> BenchDesign {
+        BenchDesign { design, args }
+    }
+}
+
+/// Names of the 21 Table II designs, in the paper's order.
+pub const TABLE2_DESIGNS: [&str; 21] = [
+    "atax",
+    "Autoencoder",
+    "bicg",
+    "DepthSepConvBlock",
+    "FeedForward",
+    "gemm",
+    "k2mm",
+    "k3mm",
+    "k7mmseq_balanced",
+    "k7mmseq_unbalanced",
+    "k7mmtree_unbalanced",
+    "mvt",
+    "ResidualBlock",
+    "k15mmseq_imbalanced",
+    "k15mmseq",
+    "k15mmseq_relu_imbalanced",
+    "k15mmseq_relu",
+    "k15mmtree_imbalanced",
+    "k15mmtree",
+    "k15mmtree_relu_imbalanced",
+    "k15mmtree_relu",
+];
+
+/// The additional designs appearing in Table III.
+pub const EXTRA_DESIGNS: [&str; 3] = ["gesummv", "k7mmtree_balanced", "ResMLP"];
+
+/// All Stream-HLS-style benchmark names (Table II ∪ Table III).
+pub fn all_names() -> Vec<&'static str> {
+    let mut v: Vec<&str> = TABLE2_DESIGNS.to_vec();
+    v.extend(EXTRA_DESIGNS);
+    v
+}
+
+/// Build a benchmark design by name. Panics on unknown names; see
+/// [`try_build`].
+pub fn build(name: &str) -> BenchDesign {
+    try_build(name).unwrap_or_else(|| panic!("unknown design '{name}'"))
+}
+
+/// Build a benchmark design by name, including the non-Stream-HLS
+/// specials `fig2` and `flowgnn_pna`.
+pub fn try_build(name: &str) -> Option<BenchDesign> {
+    Some(match name {
+        "atax" => linalg::atax(),
+        "bicg" => linalg::bicg(),
+        "gemm" => linalg::gemm(),
+        "gesummv" => linalg::gesummv(),
+        "mvt" => linalg::mvt(),
+        "k2mm" => linalg::k2mm(),
+        "k3mm" => linalg::k3mm(),
+        "k7mmseq_balanced" => kmm::kmm_seq("k7mmseq_balanced", 7, 5, false, false),
+        "k7mmseq_unbalanced" => kmm::kmm_seq("k7mmseq_unbalanced", 7, 5, false, true),
+        "k7mmtree_balanced" => kmm::kmm_tree("k7mmtree_balanced", 8, 6, false, false),
+        "k7mmtree_unbalanced" => kmm::kmm_tree("k7mmtree_unbalanced", 8, 6, false, true),
+        "k15mmseq" => kmm::kmm_seq("k15mmseq", 15, 4, false, false),
+        "k15mmseq_imbalanced" => kmm::kmm_seq("k15mmseq_imbalanced", 15, 1, false, true),
+        "k15mmseq_relu" => kmm::kmm_seq("k15mmseq_relu", 15, 4, true, false),
+        "k15mmseq_relu_imbalanced" => kmm::kmm_seq("k15mmseq_relu_imbalanced", 15, 2, true, true),
+        "k15mmtree" => kmm::kmm_tree("k15mmtree", 16, 4, false, false),
+        "k15mmtree_imbalanced" => kmm::kmm_tree("k15mmtree_imbalanced", 16, 3, false, true),
+        "k15mmtree_relu" => kmm::kmm_tree("k15mmtree_relu", 16, 5, true, false),
+        "k15mmtree_relu_imbalanced" => kmm::kmm_tree("k15mmtree_relu_imbalanced", 16, 5, true, true),
+        "FeedForward" => dnn::feedforward(),
+        "Autoencoder" => dnn::autoencoder(),
+        "ResidualBlock" => dnn::residual_block(),
+        "DepthSepConvBlock" => dnn::depth_sep_conv_block(),
+        "ResMLP" => dnn::resmlp(),
+        "fig2" => fig2::mult_by_2(16),
+        "flowgnn_pna" => flowgnn::pna_default(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::collect_trace;
+
+    #[test]
+    fn all_designs_build_and_trace() {
+        for name in all_names() {
+            let bd = build(name);
+            let t = collect_trace(&bd.design, &bd.args)
+                .unwrap_or_else(|e| panic!("{name}: trace failed: {e}"));
+            assert!(t.num_fifos() > 0, "{name}");
+            assert!(t.total_ops() > 0, "{name}");
+            // Every channel's traffic is balanced (all writes consumed).
+            for c in &t.channels {
+                assert_eq!(c.writes, c.reads, "{name}: channel {} unbalanced", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_counts_track_table2() {
+        // (name, paper FIFO count). Our generators must land within ±35%
+        // (documented substitution tolerance in DESIGN.md).
+        let expected: &[(&str, usize)] = &[
+            ("atax", 175),
+            ("Autoencoder", 392),
+            ("bicg", 25),
+            ("DepthSepConvBlock", 84),
+            ("FeedForward", 848),
+            ("gemm", 88),
+            ("k2mm", 64),
+            ("k3mm", 95),
+            ("k7mmseq_balanced", 112),
+            ("k7mmseq_unbalanced", 108),
+            ("k7mmtree_unbalanced", 128),
+            ("mvt", 288),
+            ("ResidualBlock", 64),
+            ("k15mmseq_imbalanced", 59),
+            ("k15mmseq", 188),
+            ("k15mmseq_relu_imbalanced", 116),
+            ("k15mmseq_relu", 232),
+            ("k15mmtree_imbalanced", 163),
+            ("k15mmtree", 192),
+            ("k15mmtree_relu_imbalanced", 340),
+            ("k15mmtree_relu", 320),
+        ];
+        for &(name, paper) in expected {
+            let ours = build(name).design.num_fifos();
+            let lo = (paper as f64 * 0.65) as usize;
+            let hi = (paper as f64 * 1.35) as usize;
+            assert!(
+                (lo..=hi).contains(&ours),
+                "{name}: paper {paper} FIFOs, ours {ours} (outside ±35%)"
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_max_never_deadlocks() {
+        use crate::sim::fast::FastSim;
+        use std::sync::Arc;
+        for name in all_names() {
+            let bd = build(name);
+            let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+            let mut sim = FastSim::new(t.clone());
+            let out = sim.simulate(&t.baseline_max());
+            assert!(!out.is_deadlock(), "{name} deadlocked at Baseline-Max");
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Streaming-stage library: composable building blocks that mirror how
+//! Stream-HLS structures generated dataflow kernels — parallel PE arrays
+//! connected by stream arrays (`hls::stream<float> pipe[P]`), weight/input
+//! loader tasks, local-buffer replay tasks for data reuse, elementwise map
+//! stages (ReLU/GELU/bias), and join/sink tasks.
+//!
+//! Every stage takes and returns a [`StageOut`]: `P` parallel channels
+//! each carrying `tokens` values over the whole kernel execution. Stages
+//! enforce token-count compatibility with assertions, so generator bugs
+//! fail loudly at build time rather than producing silently-unbalanced
+//! traffic.
+
+use crate::ir::{ChannelId, DesignBuilder, Expr};
+
+/// Output bundle of a stage: `chans[p]` carries `tokens` values.
+#[derive(Debug, Clone)]
+pub struct StageOut {
+    pub chans: Vec<ChannelId>,
+    pub tokens: u64,
+}
+
+/// Default stream element width (float32).
+pub const F32: u32 = 32;
+
+/// Quantized-weight stream width (int8): puts the full-overlap FIFO
+/// depth at or below the 1024-bit SRL threshold, so right-sizing weight
+/// FIFOs reaches zero BRAM without a latency penalty — the knee shape of
+/// the paper's Fig. 3 frontiers.
+pub const W8: u32 = 8;
+
+/// A loader task (`load_A`): streams `tokens` values into each of `p`
+/// channels, channel-major (one DRAM burst per destination channel, one
+/// write per cycle). Channel-major order matches [`port_sources`] so
+/// paired left/right operand bursts arrive PE-by-PE in the same order —
+/// shallow FIFOs serialize the PEs (latency grows) but never deadlock.
+pub fn source(b: &mut DesignBuilder, name: &str, p: usize, tokens: u64, width: u32) -> StageOut {
+    let chans = b.channel_array(name, p, width);
+    let chans_c = chans.clone();
+    b.process(&format!("load_{name}"), move |pb| {
+        for &c in &chans_c {
+            pb.for_n(tokens, |pb, t| {
+                pb.write(c, Expr::var(t));
+            });
+        }
+    });
+    StageOut { chans, tokens }
+}
+
+/// A parallel matmul / matvec PE array: PE `p` produces `out_tokens`
+/// results; each result accumulates over `reduce` (left, right) pairs
+/// read from the PE's left/right input channels, then spends
+/// `extra_delay` cycles (activation, accumulation drain) before writing.
+///
+/// Token balance: `left.tokens == right.tokens == reduce * out_tokens`.
+pub fn matmul(
+    b: &mut DesignBuilder,
+    name: &str,
+    left: &StageOut,
+    right: &StageOut,
+    reduce: u64,
+    out_tokens: u64,
+    extra_delay: u32,
+) -> StageOut {
+    assert_eq!(left.chans.len(), right.chans.len(), "{name}: PE count mismatch");
+    assert_eq!(
+        left.tokens,
+        reduce * out_tokens,
+        "{name}: left tokens {} != reduce {} * out {}",
+        left.tokens,
+        reduce,
+        out_tokens
+    );
+    assert_eq!(right.tokens, reduce * out_tokens, "{name}: right tokens");
+    let p = left.chans.len();
+    let out = b.channel_array(name, p, F32);
+    for pe in 0..p {
+        let (l, r, o) = (left.chans[pe], right.chans[pe], out[pe]);
+        b.process(&format!("{name}_pe{pe}"), move |pb| {
+            pb.for_n(out_tokens, |pb, _| {
+                let acc = pb.var();
+                pb.set(acc, Expr::c(0));
+                pb.for_n(reduce, |pb, _| {
+                    let a = pb.read(l);
+                    let w = pb.read(r);
+                    pb.set(acc, Expr::var(acc).add(Expr::var(a).mul(Expr::var(w))));
+                });
+                if extra_delay > 0 {
+                    pb.delay(extra_delay);
+                }
+                pb.write(o, Expr::var(acc));
+            });
+        });
+    }
+    StageOut { chans: out, tokens: out_tokens }
+}
+
+/// Elementwise map stage (ReLU / GELU / bias-add): one PE per channel,
+/// read → `delay` → write.
+pub fn map(b: &mut DesignBuilder, name: &str, input: &StageOut, delay: u32) -> StageOut {
+    let p = input.chans.len();
+    let tokens = input.tokens;
+    let out = b.channel_array(name, p, F32);
+    for pe in 0..p {
+        let (i, o) = (input.chans[pe], out[pe]);
+        b.process(&format!("{name}_pe{pe}"), move |pb| {
+            pb.for_n(tokens, |pb, _| {
+                let v = pb.read(i);
+                if delay > 0 {
+                    pb.delay(delay);
+                }
+                // max(v, 0) — ReLU-shaped so values stay meaningful.
+                pb.write(o, Expr::var(v).max(Expr::c(0)));
+            });
+        });
+    }
+    StageOut { chans: out, tokens }
+}
+
+/// Local-buffer replay stage (data reuse): each PE reads its whole input
+/// stream into a local buffer, then streams it out `factor` times
+/// (`tokens * factor` outputs). Models the BRAM-buffered reuse tasks
+/// Stream-HLS inserts between matmul stages.
+pub fn replay(b: &mut DesignBuilder, name: &str, input: &StageOut, factor: u64) -> StageOut {
+    let p = input.chans.len();
+    let tokens = input.tokens;
+    let out = b.channel_array(name, p, F32);
+    for pe in 0..p {
+        let (i, o) = (input.chans[pe], out[pe]);
+        b.process(&format!("{name}_pe{pe}"), move |pb| {
+            // Fill local buffer (values are consumed; the VM does not
+            // model the array contents, only the last value, which is
+            // fine: downstream latency depends on timing, not values).
+            let last = pb.var();
+            pb.for_n(tokens, |pb, _| {
+                pb.read_into(i, last);
+            });
+            pb.for_n(factor, |pb, _| {
+                pb.for_n(tokens, |pb, _| {
+                    pb.write(o, Expr::var(last));
+                });
+            });
+        });
+    }
+    StageOut {
+        chans: out,
+        tokens: tokens * factor,
+    }
+}
+
+/// A shared memory port (`load_all`): ONE process serving several stream
+/// arrays *sequentially* — all tokens of stream 0, then stream 1, etc.
+/// This is the realistic Stream-HLS/AXI pattern (one HBM port feeds every
+/// weight stream) and the main source of the latency↔memory trade-off:
+/// if an early stream's FIFOs are small, the port trickles at its
+/// consumer's pace and every later stream (and its consumer stage) starts
+/// late; sized to full depth, the port bursts and all stages overlap.
+///
+/// `specs` = (name, PE count, tokens per channel) per stream.
+pub fn port_sources(
+    b: &mut DesignBuilder,
+    port_name: &str,
+    specs: &[(&str, usize, u64)],
+    width: u32,
+) -> Vec<StageOut> {
+    let outs: Vec<StageOut> = specs
+        .iter()
+        .map(|&(name, p, tokens)| StageOut {
+            chans: b.channel_array(name, p, width),
+            tokens,
+        })
+        .collect();
+    let plan: Vec<(Vec<ChannelId>, u64)> = outs
+        .iter()
+        .map(|s| (s.chans.clone(), s.tokens))
+        .collect();
+    b.process(&format!("port_{port_name}"), move |pb| {
+        for (chans, tokens) in &plan {
+            // Channel-major bursts (a DRAM burst per destination stream):
+            // each channel receives its whole allotment back-to-back at
+            // one token/cycle — faster than any PE drains it, so shallow
+            // FIFOs throttle the port and delay every later stream.
+            for &c in chans {
+                let tokens = *tokens;
+                pb.for_n(tokens, |pb, t| {
+                    pb.write(c, Expr::var(t));
+                });
+            }
+        }
+    });
+    outs
+}
+
+/// Quantization-calibration sidecar: tee the input; a calibration task
+/// consumes one whole copy to compute a scale factor it emits only at the
+/// end; a requantize task must read the scale BEFORE processing the other
+/// copy. The tee's data branch therefore has to buffer the entire block —
+/// a *data-dependent-looking* full-buffer requirement whose deadlock
+/// threshold equals the block size (`input.tokens`). With 32-bit data and
+/// 32-token blocks the rescue depth is exactly the SRL limit, so the
+/// un-deadlocked fix costs zero BRAM (the §IV-B "×→✓ at 0 BRAM" cases).
+pub fn scale_sidecar(b: &mut DesignBuilder, name: &str, input: &StageOut) -> StageOut {
+    let p = input.chans.len();
+    let tokens = input.tokens;
+    let (data, calib_in) = tee(b, &format!("{name}_tee"), input);
+    let scale = b.channel_array(&format!("{name}_scale"), p, F32);
+    let out = b.channel_array(name, p, F32);
+    for pe in 0..p {
+        let (ci, sc) = (calib_in.chans[pe], scale[pe]);
+        b.process(&format!("{name}_calib{pe}"), move |pb| {
+            let mx = pb.var();
+            pb.set(mx, Expr::c(0));
+            pb.for_n(tokens, |pb, _| {
+                let v = pb.read(ci);
+                pb.set(mx, Expr::var(mx).max(Expr::var(v)));
+            });
+            pb.write(sc, Expr::var(mx));
+        });
+        let (di, sc, o) = (data.chans[pe], scale[pe], out[pe]);
+        b.process(&format!("{name}_requant{pe}"), move |pb| {
+            let s = pb.read(sc);
+            pb.for_n(tokens, |pb, _| {
+                let v = pb.read(di);
+                pb.delay(1);
+                pb.write(o, Expr::var(v).min(Expr::var(s)));
+            });
+        });
+    }
+    StageOut { chans: out, tokens }
+}
+
+/// Elementwise binary join (residual add): reads one token from each
+/// side, writes one.
+pub fn join_add(
+    b: &mut DesignBuilder,
+    name: &str,
+    a: &StageOut,
+    c: &StageOut,
+    delay: u32,
+) -> StageOut {
+    assert_eq!(a.chans.len(), c.chans.len(), "{name}: PE count mismatch");
+    assert_eq!(a.tokens, c.tokens, "{name}: token mismatch");
+    let p = a.chans.len();
+    let tokens = a.tokens;
+    let out = b.channel_array(name, p, F32);
+    for pe in 0..p {
+        let (x, y, o) = (a.chans[pe], c.chans[pe], out[pe]);
+        b.process(&format!("{name}_pe{pe}"), move |pb| {
+            pb.for_n(tokens, |pb, _| {
+                let u = pb.read(x);
+                let v = pb.read(y);
+                if delay > 0 {
+                    pb.delay(delay);
+                }
+                pb.write(o, Expr::var(u).add(Expr::var(v)));
+            });
+        });
+    }
+    StageOut { chans: out, tokens }
+}
+
+/// Sink task (`store_C`): drains all channels channel-major (one AXI
+/// write burst per channel — matching the loaders' burst order so
+/// shallow FIFOs serialize rather than deadlock), `delay` cycles/beat.
+pub fn sink(b: &mut DesignBuilder, name: &str, input: &StageOut, delay: u32) {
+    let chans = input.chans.clone();
+    let tokens = input.tokens;
+    b.process(&format!("store_{name}"), move |pb| {
+        for &c in &chans {
+            pb.for_n(tokens, |pb, _| {
+                let _ = pb.read(c);
+                if delay > 0 {
+                    pb.delay(delay);
+                }
+            });
+        }
+    });
+}
+
+/// Split one stage into two identical consumers by inserting a `tee`
+/// task per channel (needed because channels are single-consumer). Used
+/// for residual/skip connections.
+pub fn tee(b: &mut DesignBuilder, name: &str, input: &StageOut) -> (StageOut, StageOut) {
+    let p = input.chans.len();
+    let tokens = input.tokens;
+    let out_a = b.channel_array(&format!("{name}_a"), p, F32);
+    let out_b = b.channel_array(&format!("{name}_b"), p, F32);
+    for pe in 0..p {
+        let (i, a, c) = (input.chans[pe], out_a[pe], out_b[pe]);
+        b.process(&format!("{name}_pe{pe}"), move |pb| {
+            pb.for_n(tokens, |pb, _| {
+                let v = pb.read(i);
+                pb.write(a, Expr::var(v));
+                pb.write(c, Expr::var(v));
+            });
+        });
+    }
+    (
+        StageOut { chans: out_a, tokens },
+        StageOut { chans: out_b, tokens },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    #[test]
+    fn source_matmul_sink_composes() {
+        let mut b = DesignBuilder::new("t", 0);
+        let a = source(&mut b, "a", 2, 12, F32);
+        let w = source(&mut b, "w", 2, 12, F32);
+        let c = matmul(&mut b, "c", &a, &w, 4, 3, 0);
+        sink(&mut b, "out", &c, 0);
+        let d = b.build();
+        assert_eq!(d.num_fifos(), 6);
+        let t = collect_trace(&d, &[]).unwrap();
+        assert_eq!(t.channels[4].writes, 3); // c[0]
+        let mut s = FastSim::new(Arc::new(t));
+        assert!(!s.simulate(&[2; 6]).is_deadlock());
+    }
+
+    #[test]
+    fn replay_multiplies_tokens() {
+        let mut b = DesignBuilder::new("t", 0);
+        let a = source(&mut b, "a", 1, 5, F32);
+        let r = replay(&mut b, "r", &a, 3);
+        assert_eq!(r.tokens, 15);
+        sink(&mut b, "out", &r, 0);
+        let d = b.build();
+        let t = collect_trace(&d, &[]).unwrap();
+        assert_eq!(t.channels[1].writes, 15);
+        assert_eq!(t.channels[1].reads, 15);
+    }
+
+    #[test]
+    fn tee_duplicates_and_join_rebalances() {
+        let mut b = DesignBuilder::new("t", 0);
+        let a = source(&mut b, "a", 2, 8, F32);
+        let (t1, t2) = tee(&mut b, "tee", &a);
+        let m = map(&mut b, "relu", &t1, 1);
+        let j = join_add(&mut b, "add", &m, &t2, 0);
+        sink(&mut b, "out", &j, 0);
+        let d = b.build();
+        let tr = collect_trace(&d, &[]).unwrap();
+        let mut s = FastSim::new(Arc::new(tr.clone()));
+        // Tight depths can deadlock a diamond; baseline-max can not.
+        assert!(!s.simulate(&tr.baseline_max()).is_deadlock());
+    }
+
+    #[test]
+    #[should_panic(expected = "left tokens")]
+    fn token_mismatch_is_loud() {
+        let mut b = DesignBuilder::new("t", 0);
+        let a = source(&mut b, "a", 1, 10, F32);
+        let w = source(&mut b, "w", 1, 12, F32);
+        let _ = matmul(&mut b, "c", &a, &w, 4, 3, 0);
+    }
+}

@@ -1,0 +1,278 @@
+//! FIFO memory-usage model — the paper's `f_bram` (§III-B) and the
+//! design-space pruning it enables (§III-C).
+//!
+//! Implements Algorithm 1 exactly: a BRAM_18K primitive supports the
+//! (depth × width) configurations 1K×18, 2K×9, 4K×4, 8K×2, 16K×1; FIFOs
+//! with depth ≤ 2 or total size ≤ 1024 bits are implemented as shift
+//! registers (SRL) and consume zero BRAMs. The model targets the
+//! UltraScale+ BRAM18K primitive (Alveo U280 in the paper's evaluation);
+//! [`UramModel`] extends the same ladder scheme to URAM288 primitives
+//! (flagged as future work in §III-B, implemented here).
+
+/// The BRAM_18K (depth, width) configuration ladder, widest first.
+pub const BRAM18K_SHAPES: [(u32, u32); 5] = [
+    (1024, 18),
+    (2048, 9),
+    (4096, 4),
+    (8192, 2),
+    (16384, 1),
+];
+
+/// Total bits at or below which Vitis implements the FIFO as a shift
+/// register (zero BRAM).
+pub const SRL_THRESHOLD_BITS: u64 = 1024;
+
+/// BRAM_18K count for one FIFO of `depth` elements × `width_bits` bits
+/// (paper Algorithm 1).
+pub fn bram_for_fifo(depth: u32, width_bits: u32) -> u32 {
+    if is_srl(depth, width_bits) {
+        return 0;
+    }
+    let mut n = 0u32;
+    let mut w = width_bits;
+    for (di, wi) in BRAM18K_SHAPES {
+        n += (w / wi) * depth.div_ceil(di);
+        w %= wi;
+        if w > 0 && depth <= di {
+            n += 1;
+            w = 0;
+        }
+    }
+    n
+}
+
+/// Whether a FIFO of this shape is implemented as a shift register
+/// (consumes zero BRAM, and — footnote 2 of the paper — has one cycle
+/// less read latency than a BRAM-backed FIFO).
+#[inline]
+pub fn is_srl(depth: u32, width_bits: u32) -> bool {
+    depth <= 2 || (depth as u64) * (width_bits as u64) <= SRL_THRESHOLD_BITS
+}
+
+/// Total BRAM count for a full FIFO configuration.
+pub fn bram_total(depths: &[u32], widths: &[u32]) -> u32 {
+    assert_eq!(depths.len(), widths.len());
+    depths
+        .iter()
+        .zip(widths)
+        .map(|(&d, &w)| bram_for_fifo(d, w))
+        .sum()
+}
+
+/// §III-C pruning: the per-FIFO candidate depth set.
+///
+/// `f_bram` is a step function of depth, so only depths that *maximally
+/// utilize* their allocated BRAMs need be explored: depth 2 (minimum), the
+/// largest depth at each BRAM-count plateau, and the upper bound `u`.
+/// E.g. for width 32 and u = 4096 this returns depths like
+/// `[2, 32, 1024, 2048, 3072, 4096]` instead of 4095 points.
+pub fn candidate_depths(width_bits: u32, u: u32) -> Vec<u32> {
+    let u = u.max(2);
+    let mut out = vec![2u32];
+    if u == 2 {
+        return out;
+    }
+    // Plateau boundaries: bram(d) < bram(d+1) means d is the last depth of
+    // its plateau. Candidate boundary depths are (a) the SRL threshold and
+    // (b) multiples of the ladder depths, so we test just those rather
+    // than scanning every depth.
+    let mut boundaries: Vec<u32> = Vec::new();
+    let srl_max = (SRL_THRESHOLD_BITS / width_bits.max(1) as u64) as u32;
+    if srl_max > 2 {
+        boundaries.push(srl_max.min(u));
+    }
+    for (di, _) in BRAM18K_SHAPES {
+        let mut d = di;
+        while d < u {
+            boundaries.push(d);
+            d = d.saturating_add(di);
+        }
+    }
+    boundaries.push(u);
+    boundaries.sort_unstable();
+    boundaries.dedup();
+    for b in boundaries {
+        if b <= 2 || b > u {
+            continue;
+        }
+        // Keep b if it ends a BRAM plateau (cost strictly increases at
+        // b+1) or it is the upper bound. Plateau ends can only fall on the
+        // SRL threshold or multiples of ladder depths, all of which are in
+        // `boundaries`, so nothing is missed (validated against the O(u)
+        // scan in tests).
+        if b == u || bram_for_fifo(b, width_bits) < bram_for_fifo(b + 1, width_bits) {
+            out.push(b);
+        }
+    }
+    out
+}
+
+/// Exhaustive (scan-based) candidate set, used to validate
+/// [`candidate_depths`] in tests. O(u).
+pub fn candidate_depths_scan(width_bits: u32, u: u32) -> Vec<u32> {
+    let u = u.max(2);
+    let mut out = vec![2u32];
+    for d in 3..=u {
+        if d == u || bram_for_fifo(d, width_bits) < bram_for_fifo(d + 1, width_bits) {
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Flip-flop / LUT cost model for FIFOs — the paper's §III-B "optimizing
+/// both BRAM and FF usage is in the scope of future work", implemented
+/// here as an auxiliary metric (reported, not yet a third objective).
+///
+/// SRL-mapped FIFOs burn shift-register LUTs (one SRL32 chain per bit
+/// column per 32 depth) plus I/O registers; BRAM FIFOs only pay the I/O
+/// registers and the occupancy counters.
+pub fn ff_for_fifo(depth: u32, width_bits: u32) -> u32 {
+    let counters = 2 * (32 - depth.max(2).leading_zeros()); // 2 × ⌈log2 d⌉
+    if is_srl(depth, width_bits) {
+        // SRL consumes LUTs, not FFs, for storage; FFs for I/O + count.
+        2 * width_bits + counters
+    } else {
+        2 * width_bits + counters + 8 // BRAM output pipeline regs
+    }
+}
+
+/// Shift-register LUT count for an SRL-mapped FIFO (0 for BRAM FIFOs).
+pub fn srl_luts_for_fifo(depth: u32, width_bits: u32) -> u32 {
+    if is_srl(depth, width_bits) {
+        depth.div_ceil(32) * width_bits
+    } else {
+        0
+    }
+}
+
+/// URAM288 model (8 bits × 4096 / 16 bits × 4096 / ... the URAM primitive
+/// is fixed 72 bits × 4096 with no width ladder; Vitis packs FIFOs into
+/// ⌈w/72⌉ × ⌈d/4096⌉ URAMs and never SRL-maps them).
+pub struct UramModel;
+
+impl UramModel {
+    /// URAM288 count for one FIFO.
+    pub fn uram_for_fifo(depth: u32, width_bits: u32) -> u32 {
+        if depth <= 2 {
+            return 0;
+        }
+        width_bits.div_ceil(72) * depth.div_ceil(4096)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srl_fifos_cost_zero() {
+        assert_eq!(bram_for_fifo(2, 512), 0);
+        assert_eq!(bram_for_fifo(1, 32), 0);
+        assert_eq!(bram_for_fifo(32, 32), 0); // 1024 bits == threshold
+        assert_ne!(bram_for_fifo(33, 32), 0); // 1056 bits > threshold
+    }
+
+    #[test]
+    fn algorithm1_worked_examples() {
+        // 1024 × 32b: one 1K×18 column (32/18=1, rem 14) + the d≤1024
+        // remainder rule fires on the first rung → 2 BRAMs.
+        assert_eq!(bram_for_fifo(1024, 32), 2);
+        // 1024 × 18b: exactly one 1K×18.
+        assert_eq!(bram_for_fifo(1024, 18), 1);
+        // 2048 × 18b: two 1K×18.
+        assert_eq!(bram_for_fifo(2048, 18), 2);
+        // 2048 × 9b: one 2K×9.
+        assert_eq!(bram_for_fifo(2048, 9), 1);
+        // 4096 × 14b: 14 = 9 + 4 + 1 → ceil(4096/2048)=2 (2K×9)
+        //   + ceil(4096/4096)=1 (4K×4), then rem 1 with d ≤ 4096 → +1 = 4.
+        assert_eq!(bram_for_fifo(4096, 14), 4);
+        // 16384 × 1b: one 16K×1.
+        assert_eq!(bram_for_fifo(16384, 1), 1);
+        // 512 × 36b (large element, shallow): 36/18 = 2 → 2 BRAMs.
+        assert_eq!(bram_for_fifo(512, 36), 2);
+    }
+
+    #[test]
+    fn monotone_in_depth() {
+        for w in [1u32, 8, 9, 16, 18, 32, 64, 128] {
+            let mut prev = 0;
+            for d in 2..5000 {
+                let b = bram_for_fifo(d, w);
+                assert!(b >= prev, "w={w} d={d}: {b} < {prev}");
+                prev = b;
+            }
+        }
+    }
+
+    #[test]
+    fn width_is_not_monotone_by_design() {
+        // A genuine quirk of the BRAM18K ladder the model must reproduce:
+        // a 9-bit FIFO packs into one 2K×9 column, while an 8-bit FIFO of
+        // the same depth needs two 4K×4 columns — narrower can cost MORE.
+        assert_eq!(bram_for_fifo(10000, 9), 5); // 1 × ceil(10000/2048)
+        assert_eq!(bram_for_fifo(10000, 8), 6); // 2 × ceil(10000/4096)
+        assert!(bram_for_fifo(10000, 8) > bram_for_fifo(10000, 9));
+    }
+
+    #[test]
+    fn candidates_match_exhaustive_scan() {
+        for w in [1u32, 4, 8, 9, 16, 18, 32, 37, 64, 128] {
+            for u in [2u32, 3, 10, 31, 32, 33, 100, 1024, 1025, 5000, 16384] {
+                let fast = candidate_depths(w, u);
+                let slow = candidate_depths_scan(w, u);
+                assert_eq!(fast, slow, "w={w} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_are_sorted_unique_and_bounded() {
+        let c = candidate_depths(32, 4096);
+        assert_eq!(c[0], 2);
+        assert_eq!(*c.last().unwrap(), 4096);
+        for pair in c.windows(2) {
+            assert!(pair[0] < pair[1]);
+        }
+        // Pruning must be drastic vs the 4095-point raw space (§III-C).
+        assert!(c.len() < 20, "pruned space too large: {}", c.len());
+    }
+
+    #[test]
+    fn paper_example_2047_pruned() {
+        // "decreasing a FIFO's depth from 2048 to 2047 will never change
+        // the number of BRAMs ... we can skip testing depth 2047"
+        let c = candidate_depths(18, 4096);
+        assert!(c.contains(&2048));
+        assert!(!c.contains(&2047));
+        assert_eq!(bram_for_fifo(2047, 18), bram_for_fifo(2048, 18));
+    }
+
+    #[test]
+    fn bram_total_sums() {
+        assert_eq!(
+            bram_total(&[1024, 2, 2048], &[32, 32, 18]),
+            bram_for_fifo(1024, 32) + bram_for_fifo(2048, 18)
+        );
+    }
+
+    #[test]
+    fn ff_and_lut_models() {
+        // SRL FIFO: storage in LUTs, not FFs.
+        assert!(srl_luts_for_fifo(32, 32) > 0);
+        assert_eq!(srl_luts_for_fifo(4096, 32), 0); // BRAM-mapped
+        assert_eq!(srl_luts_for_fifo(32, 32), 32); // one SRL32 per bit
+        assert_eq!(srl_luts_for_fifo(64, 8), 16); // two chains × 8 bits
+        // FF cost grows with width and (log) depth, BRAM adds pipeline.
+        assert!(ff_for_fifo(4096, 32) > ff_for_fifo(16, 32));
+        assert!(ff_for_fifo(16, 64) > ff_for_fifo(16, 32));
+    }
+
+    #[test]
+    fn uram_model_basics() {
+        assert_eq!(UramModel::uram_for_fifo(2, 72), 0);
+        assert_eq!(UramModel::uram_for_fifo(4096, 72), 1);
+        assert_eq!(UramModel::uram_for_fifo(4097, 72), 2);
+        assert_eq!(UramModel::uram_for_fifo(4096, 73), 2);
+    }
+}

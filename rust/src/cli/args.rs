@@ -1,0 +1,121 @@
+//! Flag parsing: `--key value` and bare `--flag` pairs.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?;
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                out.values.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                out.flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated integer list.
+    pub fn get_list(&self, key: &str) -> Result<Option<Vec<i64>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let mut out = Vec::new();
+                for part in v.split(',') {
+                    let p = part.trim();
+                    if p.is_empty() {
+                        bail!("--{key}: empty element in list '{v}'");
+                    }
+                    out.push(
+                        p.parse()
+                            .map_err(|_| anyhow!("--{key}: bad integer '{p}'"))?,
+                    );
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse(&sv(&["--design", "gemm", "--xla", "--budget", "500"])).unwrap();
+        assert_eq!(a.get("design"), Some("gemm"));
+        assert!(a.has_flag("xla"));
+        assert_eq!(a.get_u64("budget", 1000).unwrap(), 500);
+        assert_eq!(a.get_u64("seed", 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&sv(&["gemm"])).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&sv(&["--args", "64, 512,7"])).unwrap();
+        assert_eq!(a.get_list("args").unwrap(), Some(vec![64, 512, 7]));
+        assert_eq!(a.get_list("missing").unwrap(), None);
+        let bad = Args::parse(&sv(&["--args", "1,,2"])).unwrap();
+        assert!(bad.get_list("args").is_err());
+    }
+
+    #[test]
+    fn require_errors() {
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert!(a.require("design").is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! Subcommand implementations.
+
+use super::Args;
+use crate::bench_suite;
+use crate::dse::Evaluator;
+use crate::opt::objective::select_highlight;
+use crate::opt::{self, Space};
+use crate::report::{self, ascii};
+use crate::trace::{collect_trace, Trace};
+use crate::util::stats::fmt_duration;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+fn load_trace(args: &Args) -> Result<(String, Arc<Trace>)> {
+    // Three sources, in precedence order: a cached trace JSON, a FADL
+    // design file, or a built-in suite design.
+    if let Some(path) = args.get("trace-file") {
+        let t = crate::trace::serde::load(path)?;
+        return Ok((t.design_name.clone(), Arc::new(t)));
+    }
+    let (name, design, default_args) = if let Some(path) = args.get("design-file") {
+        let design = crate::ir::fadl::parse_file(path)?;
+        (design.name.clone(), design, vec![0i64; 0])
+    } else {
+        let name = args.require("design")?.to_string();
+        let bd = bench_suite::try_build(&name)
+            .ok_or_else(|| anyhow!("unknown design '{name}' (see `fifoadvisor list`)"))?;
+        (name, bd.design, bd.args)
+    };
+    let call_args = args.get_list("args")?.unwrap_or(default_args);
+    let t = collect_trace(&design, &call_args)?;
+    if let Some(out) = args.get("save-trace") {
+        crate::trace::serde::save(&t, out)?;
+        println!("saved trace to {out}");
+    }
+    Ok((name, Arc::new(t)))
+}
+
+/// Run a sweep configuration file (designs × optimizers × seeds).
+pub fn sweep(args: &Args) -> Result<()> {
+    let path = args.require("config")?;
+    let cfg = crate::dse::sweep::SweepConfig::from_file(path)?;
+    println!(
+        "sweep: {} designs × {} optimizers × {} seeds, budget {}",
+        cfg.designs.len(),
+        cfg.optimizers.len(),
+        cfg.seeds.len(),
+        cfg.budget
+    );
+    let rows = crate::dse::sweep::run_sweep(&cfg)?;
+    print!("{}", crate::dse::sweep::rows_to_markdown(&rows));
+    if let Some(dir) = &cfg.out_dir {
+        report::write_file(
+            &format!("{dir}/summary.md"),
+            &crate::dse::sweep::rows_to_markdown(&rows),
+        )?;
+        println!("per-run JSON + summary.md written to {dir}/");
+    }
+    Ok(())
+}
+
+pub fn list() -> Result<()> {
+    println!("Stream-HLS suite:");
+    for n in bench_suite::all_names() {
+        let bd = bench_suite::build(n);
+        println!("  {n:<28} {:>5} FIFOs", bd.design.num_fifos());
+    }
+    println!("specials:");
+    for n in ["fig2", "flowgnn_pna"] {
+        let bd = bench_suite::build(n);
+        println!("  {n:<28} {:>5} FIFOs (data-dependent control flow)", bd.design.num_fifos());
+    }
+    Ok(())
+}
+
+pub fn info(args: &Args) -> Result<()> {
+    let (name, t) = load_trace(args)?;
+    let space = Space::from_trace(&t);
+    println!("design       : {name}");
+    println!("processes    : {}", t.process_names.len());
+    println!("FIFOs        : {}", t.num_fifos());
+    println!("groups       : {}", space.groups.len());
+    println!("trace ops    : {}", t.total_ops());
+    println!("pruned space : 10^{:.1} configurations", space.log10_size());
+    let mut ev = Evaluator::new(t.clone());
+    let (maxp, minp) = ev.eval_baselines();
+    println!(
+        "Baseline-Max : latency {} cycles, {} BRAM",
+        maxp.latency.unwrap(),
+        maxp.bram
+    );
+    match minp.latency {
+        Some(l) => println!("Baseline-Min : latency {l} cycles, {} BRAM", minp.bram),
+        None => println!("Baseline-Min : DEADLOCK"),
+    }
+    Ok(())
+}
+
+pub fn simulate(args: &Args) -> Result<()> {
+    let (name, t) = load_trace(args)?;
+    let depths: Vec<u32> = if let Some(d) = args.get_list("depths")? {
+        if d.len() != t.num_fifos() {
+            bail!(
+                "--depths has {} entries, design '{name}' has {} FIFOs",
+                d.len(),
+                t.num_fifos()
+            );
+        }
+        d.into_iter().map(|x| x.max(1) as u32).collect()
+    } else {
+        match args.get("baseline").unwrap_or("max") {
+            "max" => t.baseline_max(),
+            "min" => t.baseline_min(),
+            other => bail!("--baseline must be max|min, got '{other}'"),
+        }
+    };
+    let mut ev = Evaluator::new(t.clone());
+    let t0 = std::time::Instant::now();
+    let (lat, bram) = ev.eval(&depths);
+    let dt = t0.elapsed().as_secs_f64();
+    match lat {
+        Some(l) => println!("{name}: latency {l} cycles, {bram} BRAM  (simulated in {})", fmt_duration(dt)),
+        None => println!("{name}: DEADLOCK  ({bram} BRAM)  (simulated in {})", fmt_duration(dt)),
+    }
+    Ok(())
+}
+
+pub fn optimize(args: &Args) -> Result<()> {
+    let (name, t) = load_trace(args)?;
+    let opt_name = args.get("optimizer").unwrap_or("grouped_sa").to_string();
+    let budget = args.get_u64("budget", 1000)? as usize;
+    let seed = args.get_u64("seed", 1)?;
+    let threads = args.get_u64("threads", 4)? as usize;
+    let alpha = args.get_f64("alpha", 0.7)?;
+
+    let mut ev = if args.has_flag("xla") {
+        let analytics = crate::runtime::BatchAnalytics::load_default()?;
+        println!("XLA analytics: platform {}", analytics.platform());
+        Evaluator::with_backend(t.clone(), Box::new(crate::runtime::XlaBram::new(analytics)), threads)
+    } else {
+        Evaluator::parallel(t.clone(), threads)
+    };
+    let space = Space::from_trace(&t);
+    let (base, minp) = ev.eval_baselines();
+    ev.reset_run(false);
+
+    let mut optimizer = opt::by_name(&opt_name, seed)
+        .ok_or_else(|| anyhow!("unknown optimizer '{opt_name}'"))?;
+    let t0 = std::time::Instant::now();
+    optimizer.run(&mut ev, &space, budget);
+    let dt = t0.elapsed().as_secs_f64();
+
+    let front = ev.pareto();
+    println!(
+        "{name} × {opt_name}: {} evals ({} sims) in {} → {} Pareto points",
+        ev.n_evals(),
+        ev.n_sim,
+        fmt_duration(dt),
+        front.len()
+    );
+    let base_lat = base.latency.unwrap();
+    println!(
+        "  Baseline-Max: {} cycles / {} BRAM   Baseline-Min: {}",
+        base_lat,
+        base.bram,
+        match minp.latency {
+            Some(l) => format!("{l} cycles / {} BRAM", minp.bram),
+            None => "DEADLOCK".into(),
+        }
+    );
+    for p in &front {
+        println!(
+            "    lat {:>10}  bram {:>5}  ({:.4}x, {:+.1}%)",
+            p.latency.unwrap(),
+            p.bram,
+            p.latency.unwrap() as f64 / base_lat as f64,
+            (p.bram as f64 - base.bram as f64) / base.bram.max(1) as f64 * 100.0
+        );
+    }
+    let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
+    if let Some(star) = select_highlight(&pts, alpha, base_lat, base.bram) {
+        let s = &front[star];
+        println!(
+            "  ★ highlighted (α={alpha}): lat {} ({:.4}×), bram {} ({:.1}% of max)",
+            s.latency.unwrap(),
+            s.latency.unwrap() as f64 / base_lat as f64,
+            s.bram,
+            s.bram as f64 / base.bram.max(1) as f64 * 100.0
+        );
+    }
+
+    // ASCII frontier plot.
+    let front_pts: Vec<(f64, f64)> = front
+        .iter()
+        .map(|p| (p.latency.unwrap() as f64, p.bram as f64))
+        .collect();
+    let base_pts = [(base_lat as f64, base.bram as f64)];
+    println!(
+        "{}",
+        ascii::scatter(
+            &[
+                ascii::Series { label: 'o', points: &front_pts },
+                ascii::Series { label: 'M', points: &base_pts },
+            ],
+            64,
+            16,
+            "latency (cycles)",
+            "BRAM",
+        )
+    );
+
+    if let Some(out) = args.get("out") {
+        let j = report::run_to_json(&name, &opt_name, seed, budget, &ev.history, &front, dt);
+        report::write_file(out, &j.to_string_pretty())?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+pub fn hunt(args: &Args) -> Result<()> {
+    let (name, t) = load_trace(args)?;
+    let space = Space::from_trace(&t);
+    let mut ev = Evaluator::new(t.clone());
+    let hunter = opt::vitis_hunter::VitisHunter::new();
+    match hunter.hunt(&mut ev, &space, 1000) {
+        Some(cfg) => {
+            let (lat, bram) = ev.eval(&cfg);
+            println!(
+                "{name}: hunter found a feasible config after {} sims: latency {:?}, {} BRAM",
+                ev.n_sim,
+                lat.unwrap(),
+                bram
+            );
+        }
+        None => println!("{name}: hunter failed within budget"),
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Command-line front end (hand-rolled; the offline mirror has no clap).
+//!
+//! ```text
+//! fifoadvisor list
+//! fifoadvisor info     --design NAME [--args 64,512,7]
+//! fifoadvisor simulate --design NAME [--baseline max|min | --depths 2,4,..]
+//! fifoadvisor optimize --design NAME --optimizer grouped_sa [--budget 1000]
+//!                      [--seed 1] [--threads 4] [--xla] [--alpha 0.7]
+//!                      [--out results/run.json]
+//! fifoadvisor hunt     --design NAME
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::{bail, Result};
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "list" => commands::list(),
+        "info" => commands::info(&args),
+        "simulate" => commands::simulate(&args),
+        "optimize" => commands::optimize(&args),
+        "hunt" => commands::hunt(&args),
+        "sweep" => commands::sweep(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `fifoadvisor help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fifoadvisor — automated FIFO sizing DSE for HLS dataflow designs
+
+USAGE:
+  fifoadvisor list
+  fifoadvisor info     --design NAME [--args A,B,C]
+  fifoadvisor simulate --design NAME [--baseline max|min | --depths D1,D2,..]
+  fifoadvisor optimize --design NAME --optimizer OPT [--budget N] [--seed S]
+                       [--threads T] [--xla] [--alpha 0.7] [--out FILE.json]
+  fifoadvisor hunt     --design NAME
+  fifoadvisor sweep    --config sweep.json
+
+Any command accepting --design also accepts:
+  --design-file F.fadl   a FADL text design (see rust/src/ir/fadl.rs)
+  --trace-file T.json    a previously saved trace
+  --save-trace T.json    cache the collected trace
+
+OPTIMIZERS: greedy random grouped_random sa grouped_sa nsga2 grouped_nsga2
+            exhaustive vitis_hunter
+DESIGNS:    `fifoadvisor list`"
+    );
+}

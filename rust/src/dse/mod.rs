@@ -1,0 +1,334 @@
+//! The DSE engine: the black-box evaluator `x → (f_lat(x), f_bram(x))`
+//! (paper §III), with memoization, wall-clock-stamped evaluation history
+//! (for the Fig. 5 convergence study), a leader/worker parallel batch
+//! path, and an optional AOT-compiled XLA backend for the batched
+//! BRAM/objective analytics (see [`crate::runtime`]).
+
+pub mod pool;
+pub mod sweep;
+
+use crate::bram;
+use crate::opt::pareto::{pareto_front, ObjPoint};
+use crate::sim::fast::{FastSim, SimOutcome};
+use crate::trace::Trace;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One evaluated FIFO configuration.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub depths: Box<[u32]>,
+    /// `None` means the configuration deadlocks.
+    pub latency: Option<u64>,
+    pub bram: u32,
+    /// Seconds since the evaluator was created when this evaluation
+    /// completed (includes optimizer logic time, as in Fig. 5).
+    pub t: f64,
+}
+
+impl EvalPoint {
+    pub fn is_feasible(&self) -> bool {
+        self.latency.is_some()
+    }
+}
+
+/// Pluggable backend for batched BRAM totals — implemented natively
+/// (Algorithm 1 in Rust) and by the PJRT-executed JAX/Pallas artifact
+/// ([`crate::runtime::BatchAnalytics`]). Not `Send`: the PJRT client is
+/// thread-pinned; only the [`FastSim`] clones cross worker threads.
+pub trait BramBatch {
+    /// Total BRAM count for each configuration in the batch.
+    fn bram_totals(&mut self, configs: &[Box<[u32]>], widths: &[u32]) -> Vec<u32>;
+    /// Human-readable backend name (for logs/reports).
+    fn name(&self) -> &'static str;
+}
+
+/// The native Algorithm-1 backend.
+pub struct NativeBram;
+
+impl BramBatch for NativeBram {
+    fn bram_totals(&mut self, configs: &[Box<[u32]>], widths: &[u32]) -> Vec<u32> {
+        configs
+            .iter()
+            .map(|c| bram::bram_total(c, widths))
+            .collect()
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The black-box evaluator. Construct once per (design, trace); share
+/// among optimizers sequentially.
+pub struct Evaluator {
+    sim: FastSim,
+    pub widths: Vec<u32>,
+    cache: HashMap<Box<[u32]>, (Option<u64>, u32)>,
+    /// Every proposal in order (cache hits included — the optimizer
+    /// budget counts proposals, as in the paper's fixed 1000 samples).
+    pub history: Vec<EvalPoint>,
+    /// Number of actual simulator invocations (cache misses).
+    pub n_sim: u64,
+    /// Worker threads for batch evaluation (1 = serial).
+    pub threads: usize,
+    backend: Box<dyn BramBatch>,
+    start: Instant,
+}
+
+impl Evaluator {
+    /// Evaluator with the native BRAM backend and serial simulation.
+    pub fn new(trace: Arc<Trace>) -> Evaluator {
+        Self::with_backend(trace, Box::new(NativeBram), 1)
+    }
+
+    /// Evaluator with `threads` parallel simulation workers.
+    pub fn parallel(trace: Arc<Trace>, threads: usize) -> Evaluator {
+        Self::with_backend(trace, Box::new(NativeBram), threads)
+    }
+
+    /// Full control: custom BRAM backend (e.g. the XLA artifact) +
+    /// parallelism.
+    pub fn with_backend(
+        trace: Arc<Trace>,
+        backend: Box<dyn BramBatch>,
+        threads: usize,
+    ) -> Evaluator {
+        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        Evaluator {
+            sim: FastSim::new(trace),
+            widths,
+            cache: HashMap::new(),
+            history: Vec::new(),
+            n_sim: 0,
+            threads: threads.max(1),
+            backend,
+            start: Instant::now(),
+        }
+    }
+
+    /// The trace being optimized.
+    pub fn trace(&self) -> &Arc<Trace> {
+        self.sim.trace()
+    }
+
+    /// Name of the BRAM backend in use.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Reset history and the start-of-run clock (keep the memo cache —
+    /// incremental reuse across optimizers is part of the design; pass
+    /// `clear_cache` to measure cold-start behaviour).
+    pub fn reset_run(&mut self, clear_cache: bool) {
+        self.history.clear();
+        if clear_cache {
+            self.cache.clear();
+            self.n_sim = 0;
+        }
+        self.start = Instant::now();
+    }
+
+    /// Seconds since evaluator creation / last [`Self::reset_run`].
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Number of proposals so far (the budget meter).
+    pub fn n_evals(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Evaluate one configuration (memoized), recording it in history.
+    pub fn eval(&mut self, depths: &[u32]) -> (Option<u64>, u32) {
+        let key: Box<[u32]> = depths.into();
+        let (lat, br) = match self.cache.get(&key) {
+            Some(&v) => v,
+            None => {
+                let lat = self.sim.simulate(depths).latency();
+                let br = bram::bram_total(depths, &self.widths);
+                self.n_sim += 1;
+                self.cache.insert(key.clone(), (lat, br));
+                (lat, br)
+            }
+        };
+        self.history.push(EvalPoint {
+            depths: key,
+            latency: lat,
+            bram: br,
+            t: self.elapsed(),
+        });
+        (lat, br)
+    }
+
+    /// Evaluate a batch: uncached configs are simulated in parallel
+    /// across [`threads`](Self::threads) workers and the BRAM totals are
+    /// computed by the configured backend in one call (the XLA hot path).
+    pub fn eval_batch(&mut self, configs: &[Box<[u32]>]) -> Vec<(Option<u64>, u32)> {
+        // Identify cache misses (deduplicated within the batch).
+        let mut misses: Vec<Box<[u32]>> = Vec::new();
+        let mut seen: HashMap<&[u32], ()> = HashMap::new();
+        for c in configs {
+            if !self.cache.contains_key(c.as_ref()) && !seen.contains_key(c.as_ref()) {
+                seen.insert(c, ());
+                misses.push(c.clone());
+            }
+        }
+        if !misses.is_empty() {
+            let lats = pool::parallel_latencies(&self.sim, &misses, self.threads);
+            let brams = self.backend.bram_totals(&misses, &self.widths);
+            self.n_sim += misses.len() as u64;
+            for ((c, lat), br) in misses.into_iter().zip(lats).zip(brams) {
+                self.cache.insert(c, (lat, br));
+            }
+        }
+        let t = self.elapsed();
+        configs
+            .iter()
+            .map(|c| {
+                let &(lat, br) = self.cache.get(c.as_ref()).unwrap();
+                self.history.push(EvalPoint {
+                    depths: c.clone(),
+                    latency: lat,
+                    bram: br,
+                    t,
+                });
+                (lat, br)
+            })
+            .collect()
+    }
+
+    /// Evaluate with per-channel occupancy/stall statistics (used by the
+    /// greedy optimizer's ranking pass).
+    pub fn eval_with_stats(
+        &mut self,
+        depths: &[u32],
+    ) -> (SimOutcome, crate::sim::fast::ChannelStats) {
+        self.n_sim += 1;
+        let (out, stats) = self.sim.simulate_with_stats(depths);
+        let br = bram::bram_total(depths, &self.widths);
+        self.history.push(EvalPoint {
+            depths: depths.into(),
+            latency: out.latency(),
+            bram: br,
+            t: self.elapsed(),
+        });
+        (out, stats)
+    }
+
+    /// Pareto front over the feasible evaluation history.
+    pub fn pareto(&self) -> Vec<&EvalPoint> {
+        let pts: Vec<ObjPoint> = self
+            .history
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| {
+                p.latency.map(|l| ObjPoint {
+                    latency: l,
+                    bram: p.bram,
+                    index: i,
+                })
+            })
+            .collect();
+        pareto_front(&pts)
+            .into_iter()
+            .map(|p| &self.history[p.index])
+            .collect()
+    }
+
+    /// Convenience: evaluate both paper baselines, returning
+    /// (Baseline-Max, Baseline-Min) points.
+    pub fn eval_baselines(&mut self) -> (EvalPoint, EvalPoint) {
+        let t = self.trace().clone();
+        self.eval(&t.baseline_max());
+        let max = self.history.last().unwrap().clone();
+        self.eval(&t.baseline_min());
+        let min = self.history.last().unwrap().clone();
+        (max, min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::trace::collect_trace;
+
+    fn evaluator(name: &str) -> Evaluator {
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        Evaluator::new(t)
+    }
+
+    #[test]
+    fn eval_is_memoized_but_history_counts_proposals() {
+        let mut ev = evaluator("bicg");
+        let cfg = ev.trace().baseline_max();
+        let a = ev.eval(&cfg);
+        let b = ev.eval(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(ev.n_evals(), 2);
+        assert_eq!(ev.n_sim, 1);
+    }
+
+    #[test]
+    fn batch_matches_serial() {
+        let mut ev = evaluator("gesummv");
+        let t = ev.trace().clone();
+        let configs: Vec<Box<[u32]>> = vec![
+            t.baseline_max().into(),
+            t.baseline_min().into(),
+            t.baseline_max().iter().map(|&d| (d / 2).max(2)).collect(),
+        ];
+        let batch = ev.eval_batch(&configs);
+        let mut ev2 = evaluator("gesummv");
+        let serial: Vec<_> = configs.iter().map(|c| ev2.eval(c)).collect();
+        assert_eq!(batch, serial);
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_batch() {
+        let bd = bench_suite::build("gesummv");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let mut ev1 = Evaluator::new(t.clone());
+        let mut ev4 = Evaluator::parallel(t.clone(), 4);
+        let mut rng = crate::util::Rng::new(3);
+        let ub = t.upper_bounds();
+        let configs: Vec<Box<[u32]>> = (0..40)
+            .map(|_| {
+                ub.iter()
+                    .map(|&u| rng.range_u32(2, u.max(2)))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        assert_eq!(ev1.eval_batch(&configs), ev4.eval_batch(&configs));
+    }
+
+    #[test]
+    fn pareto_over_history() {
+        let mut ev = evaluator("bicg");
+        let (maxp, minp) = ev.eval_baselines();
+        assert!(maxp.is_feasible());
+        let front = ev.pareto();
+        assert!(!front.is_empty());
+        // Baseline-Min (depth 2 everywhere) has zero BRAM; if feasible it
+        // must put a zero-BRAM point on the front.
+        if minp.is_feasible() {
+            assert!(front.iter().any(|p| p.bram == 0));
+        }
+    }
+
+    #[test]
+    fn reset_run_keeps_or_clears_cache() {
+        let mut ev = evaluator("bicg");
+        let cfg = ev.trace().baseline_max();
+        ev.eval(&cfg);
+        ev.reset_run(false);
+        assert_eq!(ev.n_evals(), 0);
+        ev.eval(&cfg);
+        assert_eq!(ev.n_sim, 1, "cache kept");
+        ev.reset_run(true);
+        ev.eval(&cfg);
+        assert_eq!(ev.n_sim, 1, "cache cleared, resimulated");
+    }
+}

@@ -1,0 +1,83 @@
+//! Leader/worker parallel evaluation: the leader (the optimizer loop)
+//! proposes a batch of configurations; workers — each holding its own
+//! cloned [`FastSim`] engine over the shared trace — evaluate disjoint
+//! chunks. `std::thread::scope` keeps lifetimes simple and the pool
+//! allocation-light (the offline crate mirror has no rayon/tokio).
+
+use crate::sim::fast::FastSim;
+
+/// Simulate every configuration, returning latencies (`None` =
+/// deadlock), preserving order. `threads == 1` runs inline on the given
+/// engine clone-free.
+pub fn parallel_latencies(
+    proto: &FastSim,
+    configs: &[Box<[u32]>],
+    threads: usize,
+) -> Vec<Option<u64>> {
+    if threads <= 1 || configs.len() < 2 {
+        let mut sim = proto.clone();
+        return configs.iter().map(|c| sim.simulate(c).latency()).collect();
+    }
+    let threads = threads.min(configs.len());
+    let chunk = configs.len().div_ceil(threads);
+    let mut out: Vec<Option<u64>> = vec![None; configs.len()];
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (i, chunk_cfgs) in configs.chunks(chunk).enumerate() {
+            let mut sim = proto.clone();
+            handles.push((
+                i,
+                s.spawn(move || {
+                    chunk_cfgs
+                        .iter()
+                        .map(|c| sim.simulate(c).latency())
+                        .collect::<Vec<_>>()
+                }),
+            ));
+        }
+        for (i, h) in handles {
+            let res = h.join().expect("worker panicked");
+            out[i * chunk..i * chunk + res.len()].copy_from_slice(&res);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::trace::collect_trace;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn pool_preserves_order_and_results() {
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let proto = FastSim::new(t.clone());
+        let mut rng = Rng::new(11);
+        let ub = t.upper_bounds();
+        let configs: Vec<Box<[u32]>> = (0..33)
+            .map(|_| {
+                ub.iter()
+                    .map(|&u| rng.range_u32(2, u.max(2)))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        let serial = parallel_latencies(&proto, &configs, 1);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(parallel_latencies(&proto, &configs, threads), serial);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_config() {
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let proto = FastSim::new(t.clone());
+        assert!(parallel_latencies(&proto, &[], 4).is_empty());
+        let one: Vec<Box<[u32]>> = vec![t.baseline_max().into()];
+        assert_eq!(parallel_latencies(&proto, &one, 4).len(), 1);
+    }
+}

@@ -1,0 +1,235 @@
+//! The sweep launcher: a JSON run-configuration describing a whole
+//! experiment grid (designs × optimizers × seeds), executed in one
+//! command — the front end the benches and CI use.
+//!
+//! ```json
+//! {
+//!   "designs": ["gemm", "k15mmseq"],
+//!   "optimizers": ["greedy", "grouped_sa"],
+//!   "budget": 1000,
+//!   "seeds": [1, 2],
+//!   "threads": 4,
+//!   "alpha": 0.7,
+//!   "out_dir": "results/sweep"
+//! }
+//! ```
+
+use crate::bench_suite;
+use crate::dse::Evaluator;
+use crate::opt::objective::select_highlight;
+use crate::opt::{self, Space};
+use crate::report;
+use crate::trace::collect_trace;
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// Parsed sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub designs: Vec<String>,
+    pub optimizers: Vec<String>,
+    pub budget: usize,
+    pub seeds: Vec<u64>,
+    pub threads: usize,
+    pub alpha: f64,
+    pub out_dir: Option<String>,
+}
+
+impl SweepConfig {
+    pub fn from_json(j: &Json) -> Result<SweepConfig> {
+        let strs = |key: &str| -> Result<Vec<String>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("sweep config: '{key}' must be an array"))?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("'{key}' entries must be strings"))
+                })
+                .collect()
+        };
+        let designs = strs("designs")?;
+        let optimizers = strs("optimizers")?;
+        for o in &optimizers {
+            if opt::by_name(o, 0).is_none() {
+                return Err(anyhow!("unknown optimizer '{o}'"));
+            }
+        }
+        for d in &designs {
+            if bench_suite::try_build(d).is_none() {
+                return Err(anyhow!("unknown design '{d}'"));
+            }
+        }
+        Ok(SweepConfig {
+            designs,
+            optimizers,
+            budget: j.get("budget").and_then(|v| v.as_u64()).unwrap_or(1000) as usize,
+            seeds: j
+                .get("seeds")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|s| s.as_u64()).collect())
+                .unwrap_or_else(|| vec![1]),
+            threads: j.get("threads").and_then(|v| v.as_u64()).unwrap_or(1) as usize,
+            alpha: j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.7),
+            out_dir: j
+                .get("out_dir")
+                .and_then(|v| v.as_str())
+                .map(str::to_string),
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<SweepConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_json(&Json::parse(&text).context("parsing sweep config")?)
+    }
+}
+
+/// One (design, optimizer, seed) result row.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub design: String,
+    pub optimizer: String,
+    pub seed: u64,
+    pub evals: usize,
+    pub elapsed_secs: f64,
+    pub front_size: usize,
+    pub star_latency: u64,
+    pub star_bram: u32,
+    pub base_latency: u64,
+    pub base_bram: u32,
+    pub min_deadlocked: bool,
+}
+
+/// Execute the sweep; returns all rows (and writes per-run JSON when
+/// `out_dir` is set).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
+    let mut rows = Vec::new();
+    for design in &cfg.designs {
+        let bd = bench_suite::build(design);
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args)?);
+        let space = Space::from_trace(&trace);
+        let mut ev = Evaluator::parallel(trace.clone(), cfg.threads);
+        let (maxp, minp) = ev.eval_baselines();
+        let (base_lat, base_bram) = (
+            maxp.latency
+                .ok_or_else(|| anyhow!("{design}: Baseline-Max deadlocks"))?,
+            maxp.bram,
+        );
+        for optimizer in &cfg.optimizers {
+            for &seed in &cfg.seeds {
+                ev.reset_run(true);
+                let mut o = opt::by_name(optimizer, seed).unwrap();
+                let t0 = std::time::Instant::now();
+                o.run(&mut ev, &space, cfg.budget);
+                let dt = t0.elapsed().as_secs_f64();
+                let front = ev.pareto();
+                let pts: Vec<(u64, u32)> =
+                    front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
+                let star = select_highlight(&pts, cfg.alpha, base_lat, base_bram)
+                    .map(|i| pts[i])
+                    .unwrap_or((base_lat, base_bram));
+                rows.push(SweepRow {
+                    design: design.clone(),
+                    optimizer: optimizer.clone(),
+                    seed,
+                    evals: ev.n_evals(),
+                    elapsed_secs: dt,
+                    front_size: front.len(),
+                    star_latency: star.0,
+                    star_bram: star.1,
+                    base_latency: base_lat,
+                    base_bram,
+                    min_deadlocked: !minp.is_feasible(),
+                });
+                if let Some(dir) = &cfg.out_dir {
+                    let j = report::run_to_json(
+                        design,
+                        optimizer,
+                        seed,
+                        cfg.budget,
+                        &ev.history,
+                        &front,
+                        dt,
+                    );
+                    report::write_file(
+                        &format!("{dir}/{design}_{optimizer}_s{seed}.json"),
+                        &j.to_string_pretty(),
+                    )?;
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Render sweep rows as a markdown summary table.
+pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.design.clone(),
+                r.optimizer.clone(),
+                r.seed.to_string(),
+                format!("{:.3}", r.elapsed_secs),
+                r.front_size.to_string(),
+                format!("{:.4}", r.star_latency as f64 / r.base_latency as f64),
+                format!(
+                    "{:.1}%",
+                    (r.base_bram as f64 - r.star_bram as f64) / r.base_bram.max(1) as f64 * 100.0
+                ),
+                if r.min_deadlocked { "×→✓" } else { "" }.to_string(),
+            ]
+        })
+        .collect();
+    report::markdown_table(
+        &["design", "optimizer", "seed", "secs", "front", "lat×", "BRAM↓", "rescue"],
+        &table_rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_parsing_and_validation() {
+        let j = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy", "random"],
+                "budget": 50, "seeds": [1, 2], "threads": 1}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.designs, vec!["fig2"]);
+        assert_eq!(cfg.seeds, vec![1, 2]);
+        assert_eq!(cfg.budget, 50);
+        assert_eq!(cfg.alpha, 0.7);
+
+        let bad = Json::parse(r#"{"designs": ["nope"], "optimizers": ["greedy"]}"#).unwrap();
+        assert!(SweepConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"designs": ["fig2"], "optimizers": ["nope"]}"#).unwrap();
+        assert!(SweepConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn sweep_executes_grid() {
+        let j = Json::parse(
+            r#"{"designs": ["fig2", "gesummv"], "optimizers": ["greedy", "grouped_sa"],
+                "budget": 60, "seeds": [1], "threads": 1}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json(&j).unwrap();
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.front_size >= 1, "{}/{}", r.design, r.optimizer);
+            assert!(r.star_latency > 0);
+        }
+        assert!(rows.iter().any(|r| r.design == "fig2" && r.min_deadlocked));
+        let md = rows_to_markdown(&rows);
+        assert!(md.contains("fig2"));
+        assert!(md.contains("×→✓"));
+    }
+}

@@ -1,0 +1,286 @@
+//! Fluent builders for constructing [`Design`]s in Rust, used by the
+//! benchmark-suite generators and by tests. The builder mirrors how an HLS
+//! designer structures a dataflow region: declare streams (scalars or
+//! arrays), then define each task function.
+
+use super::{Channel, ChannelId, Design, Expr, Instr, Process, VarId};
+
+/// Builds a [`Design`].
+pub struct DesignBuilder {
+    name: String,
+    num_args: usize,
+    channels: Vec<Channel>,
+    processes: Vec<Process>,
+}
+
+impl DesignBuilder {
+    /// Start a design taking `num_args` runtime kernel arguments.
+    pub fn new(name: &str, num_args: usize) -> Self {
+        DesignBuilder {
+            name: name.to_string(),
+            num_args,
+            channels: Vec::new(),
+            processes: Vec::new(),
+        }
+    }
+
+    /// Declare a scalar stream: `hls::stream<intW> name`.
+    pub fn channel(&mut self, name: &str, width_bits: u32) -> ChannelId {
+        self.channel_full(name, width_bits, None, None)
+    }
+
+    /// Declare a scalar stream with a designer-specified depth
+    /// (`#pragma HLS stream variable=name depth=d`).
+    pub fn channel_with_depth(&mut self, name: &str, width_bits: u32, depth: u32) -> ChannelId {
+        self.channel_full(name, width_bits, None, Some(depth))
+    }
+
+    /// Declare a stream array: `hls::stream<intW> name[n]`. All elements
+    /// share the group `name` (grouped optimizers size them together).
+    pub fn channel_array(&mut self, name: &str, n: usize, width_bits: u32) -> Vec<ChannelId> {
+        (0..n)
+            .map(|i| {
+                self.channel_full(
+                    &format!("{name}[{i}]"),
+                    width_bits,
+                    Some(name.to_string()),
+                    None,
+                )
+            })
+            .collect()
+    }
+
+    /// Stream array with a designer-specified depth.
+    pub fn channel_array_with_depth(
+        &mut self,
+        name: &str,
+        n: usize,
+        width_bits: u32,
+        depth: u32,
+    ) -> Vec<ChannelId> {
+        (0..n)
+            .map(|i| {
+                self.channel_full(
+                    &format!("{name}[{i}]"),
+                    width_bits,
+                    Some(name.to_string()),
+                    Some(depth),
+                )
+            })
+            .collect()
+    }
+
+    fn channel_full(
+        &mut self,
+        name: &str,
+        width_bits: u32,
+        group: Option<String>,
+        depth_hint: Option<u32>,
+    ) -> ChannelId {
+        assert!(width_bits > 0, "channel width must be positive");
+        let id = self.channels.len();
+        self.channels.push(Channel {
+            name: name.to_string(),
+            width_bits,
+            group,
+            depth_hint,
+        });
+        id
+    }
+
+    /// Define a process; the closure receives a [`ProcBuilder`].
+    pub fn process<F: FnOnce(&mut ProcBuilder)>(&mut self, name: &str, f: F) {
+        let mut pb = ProcBuilder {
+            num_vars: 0,
+            stack: vec![Vec::new()],
+        };
+        f(&mut pb);
+        assert_eq!(pb.stack.len(), 1, "unbalanced builder scopes");
+        self.processes.push(Process {
+            name: name.to_string(),
+            body: pb.stack.pop().unwrap(),
+            num_vars: pb.num_vars,
+        });
+    }
+
+    /// Finish the design.
+    pub fn build(self) -> Design {
+        assert!(!self.processes.is_empty(), "design has no processes");
+        Design {
+            name: self.name,
+            channels: self.channels,
+            processes: self.processes,
+            num_args: self.num_args,
+        }
+    }
+}
+
+/// Builds one process body. Control-flow methods (`for_n`, `for_expr`,
+/// `if_`) take closures that emit the nested body.
+pub struct ProcBuilder {
+    num_vars: usize,
+    /// Stack of instruction lists; index 0 is the top-level body, deeper
+    /// entries are open loop/branch bodies.
+    stack: Vec<Vec<Instr>>,
+}
+
+impl ProcBuilder {
+    fn emit(&mut self, i: Instr) {
+        self.stack.last_mut().unwrap().push(i);
+    }
+
+    /// Allocate a fresh variable slot.
+    pub fn var(&mut self) -> VarId {
+        let v = self.num_vars;
+        self.num_vars += 1;
+        v
+    }
+
+    /// `var = expr`
+    pub fn set(&mut self, var: VarId, e: Expr) {
+        self.emit(Instr::Set(var, e));
+    }
+
+    /// Spend `cycles` compute cycles.
+    pub fn delay(&mut self, cycles: u32) {
+        if cycles > 0 {
+            self.emit(Instr::Delay(Expr::c(cycles as i64)));
+        }
+    }
+
+    /// Spend a data-dependent number of compute cycles.
+    pub fn delay_expr(&mut self, e: Expr) {
+        self.emit(Instr::Delay(e));
+    }
+
+    /// Blocking write.
+    pub fn write(&mut self, ch: ChannelId, e: Expr) {
+        self.emit(Instr::Write(ch, e));
+    }
+
+    /// Blocking read into a fresh variable; returns the variable.
+    pub fn read(&mut self, ch: ChannelId) -> VarId {
+        let v = self.var();
+        self.emit(Instr::Read(ch, v));
+        v
+    }
+
+    /// Blocking read into an existing variable.
+    pub fn read_into(&mut self, ch: ChannelId, var: VarId) {
+        self.emit(Instr::Read(ch, var));
+    }
+
+    /// `for i in 0..n { body }` with a constant trip count.
+    pub fn for_n<F: FnOnce(&mut ProcBuilder, VarId)>(&mut self, n: u64, f: F) {
+        self.for_expr(Expr::c(n as i64), f);
+    }
+
+    /// `for i in 0..count { body }` with a (possibly data-dependent) trip
+    /// count expression, evaluated at loop entry.
+    pub fn for_expr<F: FnOnce(&mut ProcBuilder, VarId)>(&mut self, count: Expr, f: F) {
+        let var = self.var();
+        self.stack.push(Vec::new());
+        f(self, var);
+        let body = self.stack.pop().unwrap();
+        self.emit(Instr::For {
+            var,
+            start: Expr::c(0),
+            count,
+            body,
+        });
+    }
+
+    /// `if cond != 0 { then } else { else }`.
+    pub fn if_<T: FnOnce(&mut ProcBuilder), E: FnOnce(&mut ProcBuilder)>(
+        &mut self,
+        cond: Expr,
+        then_f: T,
+        else_f: E,
+    ) {
+        self.stack.push(Vec::new());
+        then_f(self);
+        let then_body = self.stack.pop().unwrap();
+        self.stack.push(Vec::new());
+        else_f(self);
+        let else_body = self.stack.pop().unwrap();
+        self.emit(Instr::If {
+            cond,
+            then_body,
+            else_body,
+        });
+    }
+
+    /// `if cond != 0 { then }` with no else branch.
+    pub fn if_then<T: FnOnce(&mut ProcBuilder)>(&mut self, cond: Expr, then_f: T) {
+        self.if_(cond, then_f, |_| {});
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_expected_shapes() {
+        let mut b = DesignBuilder::new("t", 2);
+        let x = b.channel("x", 32);
+        let deep = b.channel_with_depth("deep", 64, 512);
+        b.process("prod", |p| {
+            p.for_expr(Expr::arg(0), |p, _i| {
+                p.delay(3);
+                p.write(x, Expr::c(1));
+            });
+            p.write(deep, Expr::c(9));
+        });
+        b.process("cons", |p| {
+            p.for_expr(Expr::arg(0), |p, _| {
+                let _ = p.read(x);
+            });
+            let _ = p.read(deep);
+        });
+        let d = b.build();
+        assert_eq!(d.num_args, 2);
+        assert_eq!(d.channels[1].depth_hint, Some(512));
+        assert_eq!(d.processes.len(), 2);
+        // prod body: For + Write
+        assert_eq!(d.processes[0].body.len(), 2);
+        match &d.processes[0].body[0] {
+            Instr::For { body, .. } => assert_eq!(body.len(), 2),
+            other => panic!("expected For, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn if_builder_nests() {
+        let mut b = DesignBuilder::new("t", 1);
+        let x = b.channel("x", 8);
+        b.process("p", |p| {
+            p.if_(
+                Expr::arg(0).lt(Expr::c(5)),
+                |p| p.write(x, Expr::c(1)),
+                |p| {
+                    p.write(x, Expr::c(2));
+                    p.write(x, Expr::c(3));
+                },
+            );
+        });
+        let d = b.build();
+        match &d.processes[0].body[0] {
+            Instr::If {
+                then_body,
+                else_body,
+                ..
+            } => {
+                assert_eq!(then_body.len(), 1);
+                assert_eq!(else_body.len(), 2);
+            }
+            other => panic!("expected If, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "design has no processes")]
+    fn empty_design_rejected() {
+        DesignBuilder::new("empty", 0).build();
+    }
+}

@@ -1,0 +1,150 @@
+//! VM expressions: integer arithmetic over constants, runtime kernel
+//! arguments, and process-local variables. Comparisons yield 0/1 so they
+//! can be used as `If` conditions or arithmetic operands.
+
+use super::VarId;
+
+/// An integer expression evaluated by the VM.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    /// Integer literal.
+    Const(i64),
+    /// Runtime kernel argument (the source of data-dependent control flow).
+    Arg(usize),
+    /// Process-local variable.
+    Var(VarId),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    /// Truncating division; division by zero evaluates to 0 (HLS designs
+    /// guard their divides; the VM must still be total).
+    Div(Box<Expr>, Box<Expr>),
+    /// Remainder; by zero evaluates to 0.
+    Mod(Box<Expr>, Box<Expr>),
+    Min(Box<Expr>, Box<Expr>),
+    Max(Box<Expr>, Box<Expr>),
+    /// 1 if `lhs < rhs` else 0.
+    Lt(Box<Expr>, Box<Expr>),
+    /// 1 if `lhs <= rhs` else 0.
+    Le(Box<Expr>, Box<Expr>),
+    /// 1 if equal else 0.
+    Eq(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    /// Shorthand constant constructor.
+    pub fn c(v: i64) -> Expr {
+        Expr::Const(v)
+    }
+
+    /// Shorthand argument reference.
+    pub fn arg(i: usize) -> Expr {
+        Expr::Arg(i)
+    }
+
+    /// Shorthand variable reference.
+    pub fn var(v: VarId) -> Expr {
+        Expr::Var(v)
+    }
+
+    pub fn add(self, rhs: Expr) -> Expr {
+        Expr::Add(Box::new(self), Box::new(rhs))
+    }
+    pub fn sub(self, rhs: Expr) -> Expr {
+        Expr::Sub(Box::new(self), Box::new(rhs))
+    }
+    pub fn mul(self, rhs: Expr) -> Expr {
+        Expr::Mul(Box::new(self), Box::new(rhs))
+    }
+    pub fn div(self, rhs: Expr) -> Expr {
+        Expr::Div(Box::new(self), Box::new(rhs))
+    }
+    pub fn rem(self, rhs: Expr) -> Expr {
+        Expr::Mod(Box::new(self), Box::new(rhs))
+    }
+    pub fn min(self, rhs: Expr) -> Expr {
+        Expr::Min(Box::new(self), Box::new(rhs))
+    }
+    pub fn max(self, rhs: Expr) -> Expr {
+        Expr::Max(Box::new(self), Box::new(rhs))
+    }
+    pub fn lt(self, rhs: Expr) -> Expr {
+        Expr::Lt(Box::new(self), Box::new(rhs))
+    }
+    pub fn le(self, rhs: Expr) -> Expr {
+        Expr::Le(Box::new(self), Box::new(rhs))
+    }
+    pub fn eq(self, rhs: Expr) -> Expr {
+        Expr::Eq(Box::new(self), Box::new(rhs))
+    }
+
+    /// Evaluate against argument and variable stores. Wrapping arithmetic:
+    /// HLS integer semantics, and the VM must never panic on user designs.
+    pub fn eval(&self, args: &[i64], vars: &[i64]) -> i64 {
+        match self {
+            Expr::Const(v) => *v,
+            Expr::Arg(i) => args[*i],
+            Expr::Var(v) => vars[*v],
+            Expr::Add(a, b) => a.eval(args, vars).wrapping_add(b.eval(args, vars)),
+            Expr::Sub(a, b) => a.eval(args, vars).wrapping_sub(b.eval(args, vars)),
+            Expr::Mul(a, b) => a.eval(args, vars).wrapping_mul(b.eval(args, vars)),
+            Expr::Div(a, b) => {
+                let d = b.eval(args, vars);
+                if d == 0 {
+                    0
+                } else {
+                    a.eval(args, vars).wrapping_div(d)
+                }
+            }
+            Expr::Mod(a, b) => {
+                let d = b.eval(args, vars);
+                if d == 0 {
+                    0
+                } else {
+                    a.eval(args, vars).wrapping_rem(d)
+                }
+            }
+            Expr::Min(a, b) => a.eval(args, vars).min(b.eval(args, vars)),
+            Expr::Max(a, b) => a.eval(args, vars).max(b.eval(args, vars)),
+            Expr::Lt(a, b) => (a.eval(args, vars) < b.eval(args, vars)) as i64,
+            Expr::Le(a, b) => (a.eval(args, vars) <= b.eval(args, vars)) as i64,
+            Expr::Eq(a, b) => (a.eval(args, vars) == b.eval(args, vars)) as i64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let args = [10i64];
+        let vars = [3i64, -2];
+        let e = Expr::arg(0).add(Expr::var(0)).mul(Expr::c(2)); // (10+3)*2
+        assert_eq!(e.eval(&args, &vars), 26);
+        assert_eq!(Expr::c(7).div(Expr::c(2)).eval(&[], &[]), 3);
+        assert_eq!(Expr::c(7).rem(Expr::c(4)).eval(&[], &[]), 3);
+        assert_eq!(Expr::c(7).div(Expr::c(0)).eval(&[], &[]), 0);
+        assert_eq!(Expr::c(7).rem(Expr::c(0)).eval(&[], &[]), 0);
+    }
+
+    #[test]
+    fn comparisons_and_minmax() {
+        assert_eq!(Expr::c(1).lt(Expr::c(2)).eval(&[], &[]), 1);
+        assert_eq!(Expr::c(2).lt(Expr::c(2)).eval(&[], &[]), 0);
+        assert_eq!(Expr::c(2).le(Expr::c(2)).eval(&[], &[]), 1);
+        assert_eq!(Expr::c(2).eq(Expr::c(2)).eval(&[], &[]), 1);
+        assert_eq!(Expr::c(5).min(Expr::c(3)).eval(&[], &[]), 3);
+        assert_eq!(Expr::c(5).max(Expr::c(3)).eval(&[], &[]), 5);
+    }
+
+    #[test]
+    fn wrapping_does_not_panic() {
+        let e = Expr::c(i64::MAX).add(Expr::c(1));
+        assert_eq!(e.eval(&[], &[]), i64::MIN);
+        let m = Expr::c(i64::MIN).div(Expr::c(-1));
+        // wrapping_div(MIN, -1) == MIN
+        assert_eq!(m.eval(&[], &[]), i64::MIN);
+    }
+}

@@ -1,0 +1,597 @@
+//! FADL — the FIFOAdvisor design language: a small text format so the
+//! tool can size FIFOs of user designs *standalone*, without writing Rust
+//! (the paper open-sources FIFOAdvisor "as a standalone tool for HLS
+//! designers"). A FADL file describes the dataflow region the way a
+//! designer thinks about it: streams, stream arrays, and per-task
+//! programs over them.
+//!
+//! ```text
+//! design mult_by_2 args 1
+//!
+//! stream x width 32
+//! stream y width 32
+//! stream d[4] width 8 depth 64        # array of 4, designer depth hint
+//!
+//! process producer {
+//!   for i in 0..arg0 { write x 1 }
+//!   for i in 0..arg0 { write y 1 }
+//! }
+//! process consumer {
+//!   let sum = 0
+//!   for i in 0..arg0 {
+//!     read x -> a
+//!     read y -> b
+//!     let sum = sum + a + b
+//!   }
+//! }
+//! ```
+//!
+//! Statements: `let NAME = EXPR`, `delay EXPR`, `write STREAM EXPR`,
+//! `read STREAM -> NAME`, `for NAME in EXPR..EXPR { ... }`,
+//! `if EXPR { ... } [else { ... }]`. Expressions: integer literals,
+//! `argN`, variables, `+ - * / % min max < <= ==` with parentheses
+//! (no precedence — fully parenthesize mixed operators). Stream element
+//! references: `s` (scalar) or `s[INDEX]` (constant index into an array).
+//! `#` starts a comment.
+
+use super::{ChannelId, Design, DesignBuilder, Expr, VarId};
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+#[error("fadl parse error at line {line}: {msg}")]
+pub struct FadlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse FADL source text into a [`Design`].
+pub fn parse(src: &str) -> Result<Design, FadlError> {
+    Parser::new(src).parse()
+}
+
+/// Parse a FADL file.
+pub fn parse_file(path: &str) -> anyhow::Result<Design> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(parse(&text)?)
+}
+
+struct Tok {
+    line: usize,
+    text: String,
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn new(src: &str) -> Parser {
+        let mut toks = Vec::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = ln + 1;
+            let code = raw.split('#').next().unwrap_or("");
+            let spaced = code
+                .replace('{', " { ")
+                .replace('}', " } ")
+                .replace('(', " ( ")
+                .replace(')', " ) ")
+                .replace("->", " -> ")
+                .replace("..", " .. ");
+            for t in spaced.split_whitespace() {
+                toks.push(Tok {
+                    line,
+                    text: t.to_string(),
+                });
+            }
+        }
+        Parser { toks, pos: 0 }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> FadlError {
+        FadlError {
+            line: self.toks.get(self.pos.min(self.toks.len().saturating_sub(1)))
+                .map(|t| t.line)
+                .unwrap_or(0),
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<&str> {
+        self.toks.get(self.pos).map(|t| t.text.as_str())
+    }
+
+    fn next(&mut self) -> Result<&str, FadlError> {
+        if self.pos >= self.toks.len() {
+            return Err(FadlError {
+                line: self.toks.last().map(|t| t.line).unwrap_or(0),
+                msg: "unexpected end of file".into(),
+            });
+        }
+        self.pos += 1;
+        Ok(self.toks[self.pos - 1].text.as_str())
+    }
+
+    fn expect(&mut self, what: &str) -> Result<(), FadlError> {
+        let line = self.toks.get(self.pos).map(|t| t.line).unwrap_or(0);
+        let t = self.next()?;
+        if t == what {
+            Ok(())
+        } else {
+            let msg = format!("expected '{what}', got '{t}'");
+            Err(FadlError { line, msg })
+        }
+    }
+
+    fn parse(mut self) -> Result<Design, FadlError> {
+        self.expect("design")?;
+        let name = self.next()?.to_string();
+        let mut num_args = 0usize;
+        if self.peek() == Some("args") {
+            self.next()?;
+            num_args = self
+                .next()?
+                .parse()
+                .map_err(|_| self.err("bad args count"))?;
+        }
+        let mut b = DesignBuilder::new(&name, num_args);
+        // stream name → (first channel id, array length or 0 for scalar)
+        let mut streams: HashMap<String, (ChannelId, usize)> = HashMap::new();
+
+        while let Some(tok) = self.peek() {
+            match tok {
+                "stream" => {
+                    self.next()?;
+                    let decl = self.next()?.to_string();
+                    let (sname, arity) = match decl.find('[') {
+                        Some(i) => {
+                            let n: usize = decl[i + 1..decl.len() - 1]
+                                .parse()
+                                .map_err(|_| self.err("bad array length"))?;
+                            (decl[..i].to_string(), n)
+                        }
+                        None => (decl.clone(), 0),
+                    };
+                    let mut width = 32u32;
+                    let mut depth: Option<u32> = None;
+                    while matches!(self.peek(), Some("width") | Some("depth")) {
+                        match self.next()? {
+                            "width" => {
+                                width = self
+                                    .next()?
+                                    .parse()
+                                    .map_err(|_| self.err("bad width"))?
+                            }
+                            _ => {
+                                depth = Some(
+                                    self.next()?
+                                        .parse()
+                                        .map_err(|_| self.err("bad depth"))?,
+                                )
+                            }
+                        }
+                    }
+                    let first = if arity == 0 {
+                        match depth {
+                            Some(d) => b.channel_with_depth(&sname, width, d),
+                            None => b.channel(&sname, width),
+                        }
+                    } else {
+                        let ids = match depth {
+                            Some(d) => b.channel_array_with_depth(&sname, arity, width, d),
+                            None => b.channel_array(&sname, arity, width),
+                        };
+                        ids[0]
+                    };
+                    if streams.insert(sname.clone(), (first, arity)).is_some() {
+                        return Err(self.err(format!("duplicate stream '{sname}'")));
+                    }
+                }
+                "process" => {
+                    self.next()?;
+                    let pname = self.next()?.to_string();
+                    self.expect("{")?;
+                    let body = self.block(&streams, num_args)?;
+                    // Install via builder internals: reconstruct with a
+                    // closure that replays parsed body.
+                    b.process(&pname, |pb| body.install(pb));
+                }
+                other => return Err(self.err(format!("expected 'stream' or 'process', got '{other}'"))),
+            }
+        }
+        Ok(b.build())
+    }
+
+    /// Parse statements until the closing `}` (consumed).
+    fn block(
+        &mut self,
+        streams: &HashMap<String, (ChannelId, usize)>,
+        num_args: usize,
+    ) -> Result<Block, FadlError> {
+        let mut stmts = Vec::new();
+        loop {
+            match self.peek() {
+                Some("}") => {
+                    self.next()?;
+                    return Ok(Block { stmts });
+                }
+                None => return Err(self.err("unterminated block")),
+                Some("let") => {
+                    self.next()?;
+                    let name = self.next()?.to_string();
+                    self.expect("=")?;
+                    let e = self.expr(num_args)?;
+                    stmts.push(Stmt::Let(name, e));
+                }
+                Some("delay") => {
+                    self.next()?;
+                    let e = self.expr(num_args)?;
+                    stmts.push(Stmt::Delay(e));
+                }
+                Some("write") => {
+                    self.next()?;
+                    let ch = self.stream_ref(streams)?;
+                    let e = self.expr(num_args)?;
+                    stmts.push(Stmt::Write(ch, e));
+                }
+                Some("read") => {
+                    self.next()?;
+                    let ch = self.stream_ref(streams)?;
+                    self.expect("->")?;
+                    let name = self.next()?.to_string();
+                    stmts.push(Stmt::Read(ch, name));
+                }
+                Some("for") => {
+                    self.next()?;
+                    let var = self.next()?.to_string();
+                    self.expect("in")?;
+                    let start = self.expr(num_args)?;
+                    self.expect("..")?;
+                    let end = self.expr(num_args)?;
+                    self.expect("{")?;
+                    let body = self.block(streams, num_args)?;
+                    stmts.push(Stmt::For(var, start, end, body));
+                }
+                Some("if") => {
+                    self.next()?;
+                    let cond = self.expr(num_args)?;
+                    self.expect("{")?;
+                    let then_b = self.block(streams, num_args)?;
+                    let else_b = if self.peek() == Some("else") {
+                        self.next()?;
+                        self.expect("{")?;
+                        self.block(streams, num_args)?
+                    } else {
+                        Block { stmts: Vec::new() }
+                    };
+                    stmts.push(Stmt::If(cond, then_b, else_b));
+                }
+                Some(other) => {
+                    let msg = format!("unknown statement '{other}'");
+                    return Err(self.err(msg));
+                }
+            }
+        }
+    }
+
+    fn stream_ref(
+        &mut self,
+        streams: &HashMap<String, (ChannelId, usize)>,
+    ) -> Result<ChannelId, FadlError> {
+        let t = self.next()?.to_string();
+        let (name, idx) = match t.find('[') {
+            Some(i) => {
+                let idx: usize = t[i + 1..t.len() - 1]
+                    .parse()
+                    .map_err(|_| self.err("bad stream index"))?;
+                (t[..i].to_string(), idx)
+            }
+            None => (t, 0),
+        };
+        let &(first, arity) = streams
+            .get(&name)
+            .ok_or_else(|| self.err(format!("unknown stream '{name}'")))?;
+        if arity == 0 && idx != 0 {
+            return Err(self.err(format!("'{name}' is not an array")));
+        }
+        if arity > 0 && idx >= arity {
+            return Err(self.err(format!("index {idx} out of range for '{name}[{arity}]'")));
+        }
+        Ok(first + idx)
+    }
+
+    /// Expressions: atom (op atom)* — same-operator chains only (no
+    /// precedence; parenthesize mixed operators).
+    fn expr(&mut self, num_args: usize) -> Result<PExpr, FadlError> {
+        let mut lhs = self.atom(num_args)?;
+        let mut seen_op: Option<String> = None;
+        while let Some(op) = self.peek() {
+            if !matches!(op, "+" | "-" | "*" | "/" | "%" | "min" | "max" | "<" | "<=" | "==") {
+                break;
+            }
+            let op = op.to_string();
+            if let Some(prev) = &seen_op {
+                if *prev != op {
+                    return Err(self.err(format!(
+                        "mixing '{prev}' and '{op}' without parentheses"
+                    )));
+                }
+            }
+            seen_op = Some(op.clone());
+            self.next()?;
+            let rhs = self.atom(num_args)?;
+            lhs = PExpr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn atom(&mut self, num_args: usize) -> Result<PExpr, FadlError> {
+        let line_guard = self.err("expected expression");
+        let t = self.next()?.to_string();
+        if t == "(" {
+            let e = self.expr(num_args)?;
+            self.expect(")")?;
+            return Ok(e);
+        }
+        if let Ok(v) = t.parse::<i64>() {
+            return Ok(PExpr::Const(v));
+        }
+        if let Some(rest) = t.strip_prefix("arg") {
+            if let Ok(i) = rest.parse::<usize>() {
+                if i >= num_args {
+                    return Err(self.err(format!("arg{i} out of range (design has {num_args})")));
+                }
+                return Ok(PExpr::Arg(i));
+            }
+        }
+        if t.chars().all(|c| c.is_alphanumeric() || c == '_') && !t.is_empty() {
+            return Ok(PExpr::Var(t));
+        }
+        let _ = line_guard;
+        Err(self.err(format!("bad expression token '{t}'")))
+    }
+}
+
+/// Parsed (name-based) expression, resolved to VM [`Expr`] at install.
+#[derive(Debug, Clone)]
+enum PExpr {
+    Const(i64),
+    Arg(usize),
+    Var(String),
+    Bin(String, Box<PExpr>, Box<PExpr>),
+}
+
+#[derive(Debug, Clone)]
+enum Stmt {
+    Let(String, PExpr),
+    Delay(PExpr),
+    Write(ChannelId, PExpr),
+    Read(ChannelId, String),
+    For(String, PExpr, PExpr, Block),
+    If(PExpr, Block, Block),
+}
+
+#[derive(Debug, Clone)]
+struct Block {
+    stmts: Vec<Stmt>,
+}
+
+impl PExpr {
+    fn resolve(&self, vars: &HashMap<String, VarId>) -> Expr {
+        match self {
+            PExpr::Const(v) => Expr::Const(*v),
+            PExpr::Arg(i) => Expr::Arg(*i),
+            PExpr::Var(name) => match vars.get(name) {
+                Some(&v) => Expr::Var(v),
+                // Unknown variables read as 0 (like uninitialized C ints
+                // would be UB; we pick a total semantics).
+                None => Expr::Const(0),
+            },
+            PExpr::Bin(op, a, b) => {
+                let (a, b) = (a.resolve(vars), b.resolve(vars));
+                match op.as_str() {
+                    "+" => a.add(b),
+                    "-" => a.sub(b),
+                    "*" => a.mul(b),
+                    "/" => a.div(b),
+                    "%" => a.rem(b),
+                    "min" => a.min(b),
+                    "max" => a.max(b),
+                    "<" => a.lt(b),
+                    "<=" => a.le(b),
+                    _ => a.eq(b),
+                }
+            }
+        }
+    }
+}
+
+impl Block {
+    fn install(&self, pb: &mut super::ProcBuilder) {
+        let mut vars = HashMap::new();
+        self.install_scoped(pb, &mut vars);
+    }
+
+    fn install_scoped(&self, pb: &mut super::ProcBuilder, vars: &mut HashMap<String, VarId>) {
+        for stmt in &self.stmts {
+            match stmt {
+                Stmt::Let(name, e) => {
+                    let expr = e.resolve(vars);
+                    let v = *vars.entry(name.clone()).or_insert_with(|| pb.var());
+                    pb.set(v, expr);
+                }
+                Stmt::Delay(e) => pb.delay_expr(e.resolve(vars)),
+                Stmt::Write(ch, e) => pb.write(*ch, e.resolve(vars)),
+                Stmt::Read(ch, name) => {
+                    let v = *vars.entry(name.clone()).or_insert_with(|| pb.var());
+                    pb.read_into(*ch, v);
+                }
+                Stmt::For(var, start, end, body) => {
+                    let s = start.resolve(vars);
+                    let e = end.resolve(vars);
+                    let count = e.sub(s.clone());
+                    let loop_var = pb.var();
+                    vars.insert(var.clone(), loop_var);
+                    // for_expr allocates its own var; we emit manually to
+                    // bind the named variable: use ProcBuilder::for_expr
+                    // with Set to alias.
+                    let body_c = body.clone();
+                    let mut vars_c = vars.clone();
+                    pb.for_expr(count, |pb, i| {
+                        pb.set(loop_var, Expr::Var(i).add(s));
+                        body_c.install_scoped(pb, &mut vars_c);
+                    });
+                }
+                Stmt::If(cond, then_b, else_b) => {
+                    let c = cond.resolve(vars);
+                    let (tb, eb) = (then_b.clone(), else_b.clone());
+                    let mut tv = vars.clone();
+                    let mut evs = vars.clone();
+                    pb.if_(
+                        c,
+                        |pb| tb.install_scoped(pb, &mut tv),
+                        |pb| eb.install_scoped(pb, &mut evs),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    const FIG2: &str = r#"
+design mult_by_2 args 1
+
+stream x width 32
+stream y width 32
+
+process producer {
+  for i in 0..arg0 { write x 1 }
+  for i in 0..arg0 { write y 1 }
+}
+process consumer {
+  let sum = 0
+  for i in 0..arg0 {
+    read x -> a
+    read y -> b
+    let sum = sum + a + b
+  }
+}
+"#;
+
+    #[test]
+    fn fadl_fig2_matches_builder_fig2() {
+        let parsed = parse(FIG2).unwrap();
+        let built = crate::bench_suite::fig2::mult_by_2(16).design;
+        let tp = Arc::new(collect_trace(&parsed, &[16]).unwrap());
+        let tb = Arc::new(collect_trace(&built, &[16]).unwrap());
+        assert_eq!(tp.total_ops(), tb.total_ops());
+        // Same latency at the same depths.
+        for depths in [[16u32, 2], [15, 2], [2, 2]] {
+            let lp = FastSim::new(tp.clone()).simulate(&depths).latency();
+            let lb = FastSim::new(tb.clone()).simulate(&depths).latency();
+            assert_eq!(lp, lb, "depths {depths:?}");
+        }
+    }
+
+    #[test]
+    fn arrays_hints_and_indexing() {
+        let src = r#"
+design arr args 0
+stream d[3] width 8 depth 64
+process p {
+  for i in 0..10 {
+    write d[0] i
+    write d[1] i
+    write d[2] i
+  }
+}
+process q {
+  for i in 0..10 {
+    read d[0] -> a
+    read d[1] -> b
+    read d[2] -> c
+  }
+}
+"#;
+        let design = parse(src).unwrap();
+        assert_eq!(design.num_fifos(), 3);
+        assert_eq!(design.channels[1].depth_hint, Some(64));
+        assert_eq!(design.channels[2].group.as_deref(), Some("d"));
+        let t = collect_trace(&design, &[]).unwrap();
+        assert_eq!(t.channels[0].writes, 10);
+    }
+
+    #[test]
+    fn if_else_and_delay() {
+        let src = r#"
+design br args 1
+stream c width 32
+process p {
+  if arg0 < 5 {
+    write c 1
+  } else {
+    delay 10
+    write c 2
+    write c 3
+  }
+}
+process q {
+  if arg0 < 5 {
+    read c -> v
+  } else {
+    read c -> v
+    read c -> v
+  }
+}
+"#;
+        let d = parse(src).unwrap();
+        assert_eq!(collect_trace(&d, &[1]).unwrap().channels[0].writes, 1);
+        assert_eq!(collect_trace(&d, &[9]).unwrap().channels[0].writes, 2);
+    }
+
+    #[test]
+    fn parse_errors_have_lines() {
+        let bad = "design x args 0\nstream s width 32\nprocess p {\n  frobnicate\n}\n";
+        let err = parse(bad).unwrap_err();
+        assert_eq!(err.line, 4);
+        assert!(err.msg.contains("frobnicate"));
+
+        assert!(parse("design x\nstream s\nprocess p { write t 1 }").is_err());
+        assert!(parse("design x\nprocess p { if 1 { }").is_err()); // unterminated
+    }
+
+    #[test]
+    fn mixed_operators_require_parens() {
+        let src = "design x args 0\nstream s width 32\nprocess p { write s 1 + 2 * 3 }\nprocess q { read s -> v }";
+        assert!(parse(src).is_err());
+        let ok = "design x args 0\nstream s width 32\nprocess p { write s 1 + ( 2 * 3 ) }\nprocess q { read s -> v }";
+        let d = parse(ok).unwrap();
+        let t = collect_trace(&d, &[]).unwrap();
+        assert_eq!(t.channels[0].writes, 1);
+    }
+
+    #[test]
+    fn loop_bounds_with_start() {
+        let src = r#"
+design rng args 0
+stream s width 32
+process p {
+  for i in 3..7 { write s i }
+}
+process q {
+  for i in 0..4 { read s -> v }
+}
+"#;
+        let d = parse(src).unwrap();
+        let t = collect_trace(&d, &[]).unwrap();
+        assert_eq!(t.channels[0].writes, 4);
+    }
+}

@@ -1,0 +1,198 @@
+//! Dataflow design intermediate representation.
+//!
+//! A [`Design`] stands in for a Vitis-HLS dataflow region (`#pragma HLS
+//! dataflow`): a set of concurrently-started [`Process`]es (HLS functions)
+//! communicating through FIFO [`Channel`]s (`hls::stream`). Each process
+//! body is a program in a small imperative VM language ([`Instr`] /
+//! [`Expr`]) supporting loops, conditionals, arithmetic, *data-dependent
+//! control flow* (loop bounds and branches computed from runtime kernel
+//! arguments or values read from streams), compute delays, and blocking
+//! stream reads/writes.
+//!
+//! "Software execution" of this VM (see [`crate::trace`]) plays the role
+//! LightningSim's trace collection plays for real HLS C++: it records the
+//! exact sequence of FIFO operations and inter-operation delays, which —
+//! by Kahn-process-network determinism — is independent of FIFO depths.
+
+pub mod builder;
+pub mod expr;
+pub mod fadl;
+
+pub use builder::{DesignBuilder, ProcBuilder};
+pub use expr::Expr;
+
+/// Index of a channel within its design.
+pub type ChannelId = usize;
+/// Index of a VM variable within its process.
+pub type VarId = usize;
+
+/// A FIFO channel (`hls::stream<T> name` or one element of a stream array).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    /// Human-readable name, e.g. `"x"` or `"data[3]"`.
+    pub name: String,
+    /// Element width in bits (e.g. 32 for `hls::stream<float>`).
+    pub width_bits: u32,
+    /// Stream-array group name, if this channel was declared as part of an
+    /// array (e.g. `hls::stream<float> data[16]` → group `"data"`).
+    /// Grouped optimizers assign one depth per group.
+    pub group: Option<String>,
+    /// Designer-declared depth, if any (used as the Baseline-Max depth and
+    /// as the default upper bound; when absent the upper bound defaults to
+    /// the observed write count, per §III of the paper).
+    pub depth_hint: Option<u32>,
+}
+
+/// A dataflow process (an HLS function inside the dataflow region).
+#[derive(Debug, Clone)]
+pub struct Process {
+    pub name: String,
+    /// VM program body, executed once from the top when the kernel starts.
+    pub body: Vec<Instr>,
+    /// Number of VM variable slots the body uses.
+    pub num_vars: usize,
+}
+
+/// A complete dataflow design.
+#[derive(Debug, Clone)]
+pub struct Design {
+    pub name: String,
+    pub channels: Vec<Channel>,
+    pub processes: Vec<Process>,
+    /// Number of runtime kernel arguments ([`Expr::Arg`] slots) the design
+    /// expects — the source of data-dependent control flow.
+    pub num_args: usize,
+}
+
+impl Design {
+    /// Channel ids belonging to each group, in first-appearance order.
+    /// Ungrouped channels each form their own singleton group.
+    pub fn groups(&self) -> Vec<Vec<ChannelId>> {
+        let mut order: Vec<String> = Vec::new();
+        let mut map: std::collections::HashMap<String, Vec<ChannelId>> =
+            std::collections::HashMap::new();
+        let mut out = Vec::new();
+        for (id, ch) in self.channels.iter().enumerate() {
+            match &ch.group {
+                Some(g) => {
+                    if !map.contains_key(g) {
+                        order.push(g.clone());
+                    }
+                    map.entry(g.clone()).or_default().push(id);
+                }
+                None => out.push((id, vec![id])),
+            }
+        }
+        let mut grouped: Vec<(ChannelId, Vec<ChannelId>)> = order
+            .into_iter()
+            .map(|g| {
+                let ids = map.remove(&g).unwrap();
+                (ids[0], ids)
+            })
+            .collect();
+        grouped.extend(out);
+        grouped.sort_by_key(|(first, _)| *first);
+        grouped.into_iter().map(|(_, ids)| ids).collect()
+    }
+
+    /// Total number of FIFO channels (the paper's per-design "FIFOs" count).
+    pub fn num_fifos(&self) -> usize {
+        self.channels.len()
+    }
+}
+
+/// A VM instruction.
+///
+/// Delays model the compute cycles an HLS schedule inserts between FIFO
+/// operations; consecutive FIFO operations are additionally spaced at
+/// II = 1 by the simulator.
+#[derive(Debug, Clone)]
+pub enum Instr {
+    /// `var = expr`
+    Set(VarId, Expr),
+    /// Advance local time by `expr` cycles (clamped at 0).
+    Delay(Expr),
+    /// Blocking write of `expr` to a channel.
+    Write(ChannelId, Expr),
+    /// Blocking read from a channel into `var`.
+    Read(ChannelId, VarId),
+    /// `for var in start .. start+count { body }` — `count` may be
+    /// data-dependent (evaluated when the loop is entered).
+    For {
+        var: VarId,
+        start: Expr,
+        count: Expr,
+        body: Vec<Instr>,
+    },
+    /// `if cond != 0 { then_body } else { else_body }`
+    If {
+        cond: Expr,
+        then_body: Vec<Instr>,
+        else_body: Vec<Instr>,
+    },
+}
+
+impl Instr {
+    /// Count FIFO operations statically reachable (for sizing estimates in
+    /// diagnostics; loops count their body once).
+    pub fn static_fifo_ops(instrs: &[Instr]) -> usize {
+        instrs
+            .iter()
+            .map(|i| match i {
+                Instr::Write(..) | Instr::Read(..) => 1,
+                Instr::For { body, .. } => Self::static_fifo_ops(body),
+                Instr::If {
+                    then_body,
+                    else_body,
+                    ..
+                } => Self::static_fifo_ops(then_body) + Self::static_fifo_ops(else_body),
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_design() -> Design {
+        let mut b = DesignBuilder::new("mini", 1);
+        let x = b.channel("x", 32);
+        let arr = b.channel_array("d", 3, 16);
+        b.process("p", |p| {
+            p.write(x, Expr::c(1));
+            for &c in &arr {
+                p.write(c, Expr::c(2));
+            }
+        });
+        b.process("q", |p| {
+            let v = p.read(x);
+            let _ = v;
+            for &c in &arr {
+                let w = p.read(c);
+                let _ = w;
+            }
+        });
+        b.build()
+    }
+
+    #[test]
+    fn groups_cluster_arrays() {
+        let d = mini_design();
+        assert_eq!(d.num_fifos(), 4);
+        let groups = d.groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], vec![0]); // x alone
+        assert_eq!(groups[1], vec![1, 2, 3]); // d[0..3]
+        assert_eq!(d.channels[1].group.as_deref(), Some("d"));
+        assert_eq!(d.channels[1].name, "d[0]");
+    }
+
+    #[test]
+    fn static_fifo_op_count() {
+        let d = mini_design();
+        assert_eq!(Instr::static_fifo_ops(&d.processes[0].body), 4);
+        assert_eq!(Instr::static_fifo_ops(&d.processes[1].body), 4);
+    }
+}

@@ -1,0 +1,56 @@
+//! # FIFOAdvisor
+//!
+//! A design-space-exploration (DSE) framework for automated FIFO sizing of
+//! high-level-synthesis (HLS) dataflow designs — a full reproduction of
+//! *FIFOAdvisor: A DSE Framework for Automated FIFO Sizing of High-Level
+//! Synthesis Designs* (CS.AR 2025).
+//!
+//! The library is organized bottom-up:
+//!
+//! - [`ir`] — the dataflow design intermediate representation: processes
+//!   (tasks) written in a small imperative VM language, connected by FIFO
+//!   channels. This stands in for Vitis-HLS C++ designs.
+//! - [`trace`] — "software execution" of a design: runs the VM once
+//!   (Kahn-process-network semantics, so results are independent of FIFO
+//!   sizes) and records the *execution trace* — the per-process sequence of
+//!   FIFO operations with inter-operation delays. This is the LightningSim
+//!   phase-1 analog.
+//! - [`sim`] — latency evaluation of a trace under any FIFO depth
+//!   assignment: the fast commit-time simulator ([`sim::fast`], the
+//!   LightningSim phase-2 analog, µs–ms per configuration), the golden
+//!   cycle-stepped reference ([`sim::golden`], the C/RTL co-simulation
+//!   analog), and the co-simulation runtime cost model ([`sim::cosim`]).
+//! - [`bram`] — the BRAM18K allocation model (paper Algorithm 1), the
+//!   shift-register threshold, and the depth-breakpoint pruning of §III-C.
+//! - [`opt`] — the optimizers of §III-D (random, grouped random, simulated
+//!   annealing, grouped SA, greedy) plus baselines, Pareto extraction and
+//!   the α/β scoring.
+//! - [`dse`] — the DSE engine: the [`dse::Evaluator`] black-box
+//!   `x → (f_lat, f_bram)`, memoization, convergence recording, and the
+//!   leader/worker parallel engine.
+//! - [`runtime`] — the PJRT runtime: loads the AOT-compiled JAX/Pallas
+//!   batched-analytics HLO (`artifacts/*.hlo.txt`) and executes it from the
+//!   DSE hot path (Python is never on the request path).
+//! - [`bench_suite`] — generators for the paper's 24 evaluation designs
+//!   (Stream-HLS-like kernels, the Fig. 2 example, FlowGNN-PNA).
+//! - [`report`] — CSV/JSON emitters and ASCII plots for benches.
+//! - [`cli`] — the command-line front end.
+//! - [`util`] — PRNG, statistics, JSON, and a mini property-test driver
+//!   (the offline crate mirror lacks rand/serde/proptest).
+
+pub mod bench_suite;
+pub mod bram;
+pub mod cli;
+pub mod dse;
+pub mod ir;
+pub mod opt;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+
+pub use ir::{Design, DesignBuilder};
+pub use sim::fast::{FastSim, SimOutcome};
+pub use trace::Trace;

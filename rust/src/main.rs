@@ -1,0 +1,9 @@
+//! `fifoadvisor` — the L3 coordinator binary.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = fifoadvisor::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Exhaustive enumeration of the pruned space — only tractable for tiny
+//! designs; used as the ground-truth front in optimizer-quality tests
+//! and the pruning ablation.
+
+use super::{Optimizer, Space};
+use crate::dse::Evaluator;
+
+pub struct Exhaustive {
+    /// Safety cap on enumerated configurations.
+    pub cap: usize,
+}
+
+impl Exhaustive {
+    pub fn new() -> Exhaustive {
+        Exhaustive { cap: 200_000 }
+    }
+
+    /// Exact size of the pruned cartesian space (None on overflow).
+    pub fn space_size(space: &Space) -> Option<usize> {
+        space
+            .per_fifo
+            .iter()
+            .try_fold(1usize, |acc, c| acc.checked_mul(c.len()))
+    }
+}
+
+impl Default for Exhaustive {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Optimizer for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
+        let limit = budget.min(self.cap);
+        let n = space.num_fifos();
+        let mut idx = vec![0usize; n];
+        let mut batch: Vec<Box<[u32]>> = Vec::with_capacity(64);
+        let mut count = 0usize;
+        'outer: loop {
+            let cfg: Box<[u32]> = idx
+                .iter()
+                .zip(&space.per_fifo)
+                .map(|(&i, c)| c[i])
+                .collect();
+            batch.push(cfg);
+            count += 1;
+            if batch.len() == 64 {
+                ev.eval_batch(&batch);
+                batch.clear();
+            }
+            if count >= limit {
+                break;
+            }
+            // Odometer increment.
+            let mut pos = 0;
+            loop {
+                if pos == n {
+                    break 'outer;
+                }
+                idx[pos] += 1;
+                if idx[pos] < space.per_fifo[pos].len() {
+                    break;
+                }
+                idx[pos] = 0;
+                pos += 1;
+            }
+        }
+        if !batch.is_empty() {
+            ev.eval_batch(&batch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    #[test]
+    fn enumerates_full_space_of_fig2() {
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let space = Space::from_trace(&t);
+        let size = Exhaustive::space_size(&space).unwrap();
+        let mut ev = Evaluator::new(t);
+        Exhaustive::new().run(&mut ev, &space, usize::MAX);
+        assert_eq!(ev.n_evals(), size);
+        // Every enumerated config is distinct.
+        let distinct: std::collections::HashSet<_> =
+            ev.history.iter().map(|p| p.depths.clone()).collect();
+        assert_eq!(distinct.len(), size);
+    }
+
+    #[test]
+    fn budget_caps_enumeration() {
+        let bd = bench_suite::build("gesummv");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let space = Space::from_trace(&t);
+        let mut ev = Evaluator::new(t);
+        Exhaustive::new().run(&mut ev, &space, 50);
+        assert_eq!(ev.n_evals(), 50);
+    }
+}

@@ -1,0 +1,153 @@
+//! The greedy heuristic (§III-D), adopted from INR-Arch: rank FIFOs by
+//! their observed occupancy under the baseline configuration, then — from
+//! largest to smallest — try collapsing each FIFO to depth 2, keeping the
+//! reduction unless it deadlocks or inflates latency beyond a fixed
+//! percentage of the baseline. Deterministic; chooses its own stopping
+//! point (between `num_fifos` and ~2·`num_fifos` + 1 evaluations).
+
+use super::{Optimizer, Space};
+use crate::dse::Evaluator;
+
+pub struct Greedy {
+    /// Maximum tolerated latency inflation over the baseline (the paper's
+    /// "fixed percentage over baseline"; 1% by default).
+    pub latency_tolerance: f64,
+}
+
+impl Greedy {
+    pub fn new() -> Greedy {
+        Greedy {
+            latency_tolerance: 0.01,
+        }
+    }
+
+    pub fn with_tolerance(latency_tolerance: f64) -> Greedy {
+        Greedy { latency_tolerance }
+    }
+}
+
+impl Default for Greedy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Optimizer for Greedy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn run(&mut self, ev: &mut Evaluator, _space: &Space, budget: usize) {
+        let trace = ev.trace().clone();
+        let baseline = trace.baseline_max();
+
+        // Baseline pass with occupancy statistics for the ranking.
+        let (out, stats) = ev.eval_with_stats(&baseline);
+        let base_lat = match out.latency() {
+            Some(l) => l,
+            None => return, // Baseline-Max deadlocking means a broken design.
+        };
+        let max_lat = base_lat + (base_lat as f64 * self.latency_tolerance).ceil() as u64;
+
+        // Rank: largest observed depth first.
+        let mut order: Vec<usize> = (0..trace.channels.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(stats.max_occupancy[i]));
+
+        let mut cur = baseline;
+        for &i in &order {
+            if ev.n_evals() >= budget.max(1) {
+                break;
+            }
+            if cur[i] <= 2 {
+                continue;
+            }
+            let saved = cur[i];
+            cur[i] = 2;
+            let (lat, _bram) = ev.eval(&cur);
+            let ok = matches!(lat, Some(l) if l <= max_lat);
+            if !ok {
+                cur[i] = saved;
+            }
+        }
+        // Final state evaluation so the kept configuration is in history.
+        ev.eval(&cur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::opt::Space;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    fn setup(name: &str) -> (Evaluator, Space) {
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let space = Space::from_trace(&t);
+        (Evaluator::new(t), space)
+    }
+
+    #[test]
+    fn greedy_preserves_latency_and_cuts_bram() {
+        let (mut ev, space) = setup("gemm");
+        let t = ev.trace().clone();
+        let mut base_ev = Evaluator::new(t.clone());
+        let (basep, _) = base_ev.eval_baselines();
+        let base_lat = basep.latency.unwrap();
+
+        Greedy::new().run(&mut ev, &space, 10_000);
+        let best = ev
+            .history
+            .iter()
+            .filter(|p| p.is_feasible())
+            .min_by_key(|p| (p.bram, p.latency.unwrap()))
+            .unwrap();
+        assert!(
+            best.latency.unwrap() as f64 <= base_lat as f64 * 1.02,
+            "latency blown: {} vs {}",
+            best.latency.unwrap(),
+            base_lat
+        );
+        assert!(
+            best.bram < basep.bram,
+            "no BRAM saved: {} vs {}",
+            best.bram,
+            basep.bram
+        );
+    }
+
+    #[test]
+    fn greedy_never_keeps_deadlock() {
+        let (mut ev, space) = setup("fig2");
+        Greedy::new().run(&mut ev, &space, 10_000);
+        // The last history entry is the kept configuration.
+        let kept = ev.history.last().unwrap();
+        assert!(kept.is_feasible(), "greedy kept a deadlocked config");
+    }
+
+    #[test]
+    fn greedy_on_flowgnn_respects_data_dependent_thresholds() {
+        let (mut ev, space) = setup("flowgnn_pna");
+        Greedy::new().run(&mut ev, &space, 10_000);
+        let kept = ev.history.last().unwrap();
+        assert!(kept.is_feasible());
+        // The msg FIFOs (lanes) cannot all be 2 — bursts must fit.
+        let any_big = kept.depths[..crate::bench_suite::flowgnn::LANES]
+            .iter()
+            .any(|&d| d > 2);
+        assert!(any_big, "msg FIFOs all collapsed yet no deadlock?");
+    }
+
+    #[test]
+    fn greedy_is_deterministic() {
+        let (mut e1, space) = setup("bicg");
+        Greedy::new().run(&mut e1, &space, 10_000);
+        let (mut e2, _) = setup("bicg");
+        Greedy::new().run(&mut e2, &space, 10_000);
+        let d1: Vec<_> = e1.history.iter().map(|p| p.depths.clone()).collect();
+        let d2: Vec<_> = e2.history.iter().map(|p| p.depths.clone()).collect();
+        assert_eq!(d1, d2);
+    }
+}

@@ -1,0 +1,79 @@
+//! The optimizers of §III-D plus comparison baselines.
+//!
+//! | name             | paper §III-D           | module             |
+//! |------------------|------------------------|--------------------|
+//! | `random`         | Random Sampling        | [`random`]         |
+//! | `grouped_random` | Grouped Random         | [`random`]         |
+//! | `sa`             | Simulated Annealing    | [`sa`]             |
+//! | `grouped_sa`     | Grouped SA             | [`sa`]             |
+//! | `greedy`         | Greedy (INR-Arch)      | [`greedy`]         |
+//! | `exhaustive`     | (testing aid)          | [`exhaustive`]     |
+//! | `vitis_hunter`   | Vitis deadlock hunter  | [`vitis_hunter`]   |
+//!
+//! All optimizers record their proposals through the shared
+//! [`Evaluator`](crate::dse::Evaluator); the Pareto front is extracted
+//! from its history afterwards, exactly as in the paper's flow.
+
+pub mod exhaustive;
+pub mod greedy;
+pub mod nsga2;
+pub mod objective;
+pub mod pareto;
+pub mod random;
+pub mod sa;
+pub mod space;
+pub mod vitis_hunter;
+
+pub use space::Space;
+
+use crate::dse::Evaluator;
+
+/// A black-box FIFO-sizing optimizer.
+pub trait Optimizer {
+    /// Short name used in reports (matches the table above).
+    fn name(&self) -> &'static str;
+    /// Propose and evaluate up to `budget` configurations through `ev`
+    /// (heuristics may stop early — the paper's greedy "deterministically
+    /// chooses its own stopping point").
+    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize);
+}
+
+/// The paper's five evaluated optimizers, with per-optimizer seeds.
+pub fn paper_optimizers(seed: u64) -> Vec<Box<dyn Optimizer>> {
+    vec![
+        Box::new(greedy::Greedy::new()),
+        Box::new(random::RandomSearch::new(seed, false)),
+        Box::new(random::RandomSearch::new(seed ^ 1, true)),
+        Box::new(sa::SimAnneal::new(seed ^ 2, false)),
+        Box::new(sa::SimAnneal::new(seed ^ 3, true)),
+    ]
+}
+
+/// Look up one optimizer by report name.
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn Optimizer>> {
+    Some(match name {
+        "random" => Box::new(random::RandomSearch::new(seed, false)),
+        "grouped_random" => Box::new(random::RandomSearch::new(seed, true)),
+        "sa" => Box::new(sa::SimAnneal::new(seed, false)),
+        "grouped_sa" => Box::new(sa::SimAnneal::new(seed, true)),
+        "greedy" => Box::new(greedy::Greedy::new()),
+        "exhaustive" => Box::new(exhaustive::Exhaustive::new()),
+        "vitis_hunter" => Box::new(vitis_hunter::VitisHunter::new()),
+        "nsga2" => Box::new(nsga2::Nsga2::new(seed, false)),
+        "grouped_nsga2" => Box::new(nsga2::Nsga2::new(seed, true)),
+        _ => return None,
+    })
+}
+
+/// All report names accepted by [`by_name`].
+pub const OPTIMIZER_NAMES: [&str; 9] = [
+    "greedy",
+    "random",
+    "grouped_random",
+    "sa",
+    "grouped_sa",
+    "exhaustive",
+    "vitis_hunter",
+    "nsga2",
+    "grouped_nsga2",
+];

@@ -1,0 +1,315 @@
+//! NSGA-II: a true multi-objective evolutionary optimizer — an extension
+//! beyond the paper's five optimizers (its §III formulation explicitly
+//! allows "any optimizer"; weighted-sum SA cannot reach non-convex
+//! frontier regions, which NSGA-II's dominance-based selection can).
+//!
+//! Standard machinery, specialized to the pruned FIFO space: individuals
+//! are index vectors into per-FIFO (or per-group) candidate sets;
+//! crossover is uniform; mutation re-draws or steps candidate indices;
+//! selection is non-dominated sorting + crowding distance; deadlocked
+//! individuals rank behind every feasible one.
+
+use super::{Optimizer, Space};
+use crate::dse::Evaluator;
+use crate::util::Rng;
+
+pub struct Nsga2 {
+    rng: Rng,
+    grouped: bool,
+    /// Population size (per generation).
+    pub pop: usize,
+    /// Per-gene mutation probability.
+    pub mutation_rate: f64,
+}
+
+impl Nsga2 {
+    pub fn new(seed: u64, grouped: bool) -> Nsga2 {
+        Nsga2 {
+            rng: Rng::new(seed),
+            grouped,
+            pop: 48,
+            mutation_rate: 0.08,
+        }
+    }
+
+    fn candidates<'a>(&self, space: &'a Space) -> &'a [Vec<u32>] {
+        if self.grouped {
+            &space.per_group
+        } else {
+            &space.per_fifo
+        }
+    }
+
+    fn expand(&self, space: &Space, genes: &[usize]) -> Box<[u32]> {
+        let cands = self.candidates(space);
+        let depths: Vec<u32> = genes.iter().zip(cands).map(|(&i, c)| c[i]).collect();
+        if self.grouped {
+            space.expand_group_depths(&depths).into()
+        } else {
+            depths.into()
+        }
+    }
+}
+
+/// Objectives of one individual: feasible → (latency, bram); infeasible
+/// ranks behind everything.
+#[derive(Clone, Copy, Debug)]
+struct Fit {
+    latency: Option<u64>,
+    bram: u32,
+}
+
+impl Fit {
+    fn dominates(&self, other: &Fit) -> bool {
+        match (self.latency, other.latency) {
+            (Some(a), Some(b)) => {
+                (a <= b && self.bram <= other.bram) && (a < b || self.bram < other.bram)
+            }
+            (Some(_), None) => true, // feasible dominates deadlocked
+            _ => false,
+        }
+    }
+}
+
+/// Fast non-dominated sort: returns front index per individual.
+fn nondominated_rank(fits: &[Fit]) -> Vec<usize> {
+    let n = fits.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && fits[i].dominates(&fits[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            }
+        }
+    }
+    let mut rank = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut level = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            rank[i] = level;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        level += 1;
+    }
+    rank
+}
+
+/// Crowding distance within one front (bigger = more isolated = better).
+fn crowding(front: &[usize], fits: &[Fit]) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    // Two objectives: latency (feasible only; deadlocked fronts get 0)
+    // and bram.
+    for obj in 0..2 {
+        let key = |i: usize| -> f64 {
+            let f = &fits[front[i]];
+            match obj {
+                0 => f.latency.map(|l| l as f64).unwrap_or(f64::INFINITY),
+                _ => f.bram as f64,
+            }
+        };
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap());
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        let span = (key(order[m - 1]) - key(order[0])).max(1e-12);
+        if !span.is_finite() {
+            continue;
+        }
+        for w in 1..m - 1 {
+            dist[order[w]] += (key(order[w + 1]) - key(order[w - 1])) / span;
+        }
+    }
+    dist
+}
+
+impl Optimizer for Nsga2 {
+    fn name(&self) -> &'static str {
+        if self.grouped {
+            "grouped_nsga2"
+        } else {
+            "nsga2"
+        }
+    }
+
+    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
+        let cands = self.candidates(space);
+        let genes_len = cands.len();
+        let pop = self.pop.min(budget.max(2));
+
+        // Initial population: corners + random.
+        let mut genomes: Vec<Vec<usize>> = Vec::with_capacity(pop);
+        genomes.push(cands.iter().map(|c| c.len() - 1).collect()); // Baseline-Max-ish
+        genomes.push(vec![0; genes_len]); // Baseline-Min-ish
+        while genomes.len() < pop {
+            genomes.push((0..genes_len).map(|g| self.rng.index(cands[g].len())).collect());
+        }
+        let evaluate = |ev: &mut Evaluator, gs: &[Vec<usize>], me: &Self| -> Vec<Fit> {
+            let cfgs: Vec<Box<[u32]>> = gs.iter().map(|g| me.expand(space, g)).collect();
+            ev.eval_batch(&cfgs)
+                .into_iter()
+                .map(|(latency, bram)| Fit { latency, bram })
+                .collect()
+        };
+        let mut fits = evaluate(ev, &genomes, self);
+
+        while ev.n_evals() + pop <= budget {
+            // Offspring via binary tournament on (rank, crowding).
+            let rank = nondominated_rank(&fits);
+            let mut crowd = vec![0.0f64; genomes.len()];
+            {
+                let max_rank = rank.iter().copied().max().unwrap_or(0);
+                for level in 0..=max_rank {
+                    let front: Vec<usize> =
+                        (0..genomes.len()).filter(|&i| rank[i] == level).collect();
+                    for (slot, &i) in front.iter().enumerate() {
+                        crowd[i] = crowding(&front, &fits)[slot];
+                    }
+                }
+            }
+            let tournament = |rng: &mut Rng| -> usize {
+                let a = rng.index(genomes.len());
+                let b = rng.index(genomes.len());
+                let a_better =
+                    rank[a] < rank[b] || (rank[a] == rank[b] && crowd[a] >= crowd[b]);
+                if a_better {
+                    a
+                } else {
+                    b
+                }
+            };
+            let mut offspring: Vec<Vec<usize>> = Vec::with_capacity(pop);
+            while offspring.len() < pop {
+                let pa = tournament(&mut self.rng);
+                let pb = tournament(&mut self.rng);
+                // Uniform crossover.
+                let mut child: Vec<usize> = (0..genes_len)
+                    .map(|g| {
+                        if self.rng.chance(0.5) {
+                            genomes[pa][g]
+                        } else {
+                            genomes[pb][g]
+                        }
+                    })
+                    .collect();
+                // Mutation: step or re-draw.
+                for (g, gene) in child.iter_mut().enumerate() {
+                    if self.rng.chance(self.mutation_rate) {
+                        let len = cands[g].len();
+                        *gene = if self.rng.chance(0.5) {
+                            self.rng.index(len)
+                        } else if self.rng.chance(0.5) {
+                            (*gene + 1).min(len - 1)
+                        } else {
+                            gene.saturating_sub(1)
+                        };
+                    }
+                }
+                offspring.push(child);
+            }
+            let off_fits = evaluate(ev, &offspring, self);
+
+            // Environmental selection over parents ∪ offspring.
+            genomes.extend(offspring);
+            fits.extend(off_fits);
+            let rank = nondominated_rank(&fits);
+            let mut idx: Vec<usize> = (0..genomes.len()).collect();
+            // Crowding per front for tie-break.
+            let mut crowd = vec![0.0f64; genomes.len()];
+            let max_rank = rank.iter().copied().max().unwrap_or(0);
+            for level in 0..=max_rank {
+                let front: Vec<usize> = (0..genomes.len()).filter(|&i| rank[i] == level).collect();
+                let d = crowding(&front, &fits);
+                for (slot, &i) in front.iter().enumerate() {
+                    crowd[i] = d[slot];
+                }
+            }
+            idx.sort_by(|&a, &b| {
+                rank[a].cmp(&rank[b]).then(
+                    crowd[b]
+                        .partial_cmp(&crowd[a])
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+            });
+            idx.truncate(pop);
+            genomes = idx.iter().map(|&i| genomes[i].clone()).collect();
+            fits = idx.iter().map(|&i| fits[i]).collect();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    fn setup(name: &str) -> (Evaluator, Space) {
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let space = Space::from_trace(&t);
+        (Evaluator::new(t), space)
+    }
+
+    #[test]
+    fn rank_and_crowding_basics() {
+        let fits = [
+            Fit { latency: Some(10), bram: 5 },
+            Fit { latency: Some(5), bram: 10 },
+            Fit { latency: Some(12), bram: 12 }, // dominated
+            Fit { latency: None, bram: 0 },      // deadlocked
+        ];
+        let r = nondominated_rank(&fits);
+        assert_eq!(r[0], 0);
+        assert_eq!(r[1], 0);
+        assert!(r[2] > 0);
+        assert!(r[3] > r[2] || r[3] > 0);
+        let front = vec![0, 1];
+        let d = crowding(&front, &fits);
+        assert!(d.iter().all(|&x| x == f64::INFINITY));
+    }
+
+    #[test]
+    fn nsga2_respects_budget_and_finds_frontier() {
+        let (mut ev, space) = setup("gesummv");
+        Nsga2::new(5, false).run(&mut ev, &space, 300);
+        assert!(ev.n_evals() <= 300);
+        let front = ev.pareto();
+        assert!(front.len() >= 2, "NSGA-II should spread the front");
+    }
+
+    #[test]
+    fn grouped_nsga2_uniform_groups() {
+        let (mut ev, space) = setup("gesummv");
+        Nsga2::new(7, true).run(&mut ev, &space, 200);
+        for p in &ev.history {
+            for ids in &space.groups {
+                let mx = ids.iter().map(|&i| p.depths[i]).max().unwrap();
+                for &i in ids {
+                    assert!(p.depths[i] == mx || p.depths[i] == space.bounds[i].max(2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nsga2_rescues_deadlocked_min() {
+        let (mut ev, space) = setup("fig2");
+        Nsga2::new(3, false).run(&mut ev, &space, 150);
+        assert!(ev.history.iter().any(|p| p.is_feasible()));
+    }
+}

@@ -1,0 +1,98 @@
+//! Scalarizations of the dual objective:
+//!
+//! - the **β weighted sum** `f(x) = (1-β)·f_lat + β·f_bram` used by the
+//!   simulated-annealing optimizer's chain grid (§III-D) — note the paper
+//!   applies it to the *raw* objective values;
+//! - the **α evaluation score**
+//!   `α·(lat/base_lat) + (1-α)·(bram/base_bram)` used to pick the
+//!   "highlighted" Pareto point compared against the baselines (§IV-B,
+//!   α = 0.7 vs Baseline-Max).
+
+/// Weighted-sum objective for one SA chain. Deadlocks are handled by the
+/// caller (infinite objective).
+#[inline]
+pub fn weighted(beta: f64, latency: u64, bram: u32) -> f64 {
+    (1.0 - beta) * latency as f64 + beta * bram as f64
+}
+
+/// The β grid `{0, 1/N, …, 1}` for `n + 1` chains.
+pub fn beta_grid(n: usize) -> Vec<f64> {
+    assert!(n >= 1);
+    (0..=n).map(|i| i as f64 / n as f64).collect()
+}
+
+/// §IV-B evaluation score of a point against a baseline. Lower is
+/// better. A zero-BRAM baseline is handled with a +1 Laplace shift so the
+/// ratio stays finite and ordering is preserved.
+pub fn alpha_score(
+    alpha: f64,
+    latency: u64,
+    bram: u32,
+    base_latency: u64,
+    base_bram: u32,
+) -> f64 {
+    let lat_ratio = latency as f64 / base_latency.max(1) as f64;
+    let bram_ratio = (bram as f64 + 1.0) / (base_bram as f64 + 1.0);
+    alpha * lat_ratio + (1.0 - alpha) * bram_ratio
+}
+
+/// Pick the index of the α-score-minimizing feasible point (the paper's
+/// ★ "highlighted Pareto point"). Returns `None` if `points` is empty.
+pub fn select_highlight(
+    points: &[(u64, u32)],
+    alpha: f64,
+    base_latency: u64,
+    base_bram: u32,
+) -> Option<usize> {
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, &(l, b))| (i, alpha_score(alpha, l, b, base_latency, base_bram)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_endpoints() {
+        assert_eq!(weighted(0.0, 100, 50), 100.0);
+        assert_eq!(weighted(1.0, 100, 50), 50.0);
+        assert_eq!(weighted(0.5, 100, 50), 75.0);
+    }
+
+    #[test]
+    fn beta_grid_shape() {
+        let g = beta_grid(4);
+        assert_eq!(g, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn alpha_score_prefers_latency_preservation_at_07() {
+        // Point A: same latency, half the BRAM. Point B: 1.5x latency,
+        // zero BRAM. α = 0.7 must prefer A (the paper's rationale).
+        let (bl, bb) = (1000u64, 100u32);
+        let a = alpha_score(0.7, 1000, 50, bl, bb);
+        let b = alpha_score(0.7, 1500, 0, bl, bb);
+        assert!(a < b, "a={a} b={b}");
+    }
+
+    #[test]
+    fn zero_bram_baseline_is_finite() {
+        let s = alpha_score(0.7, 100, 3, 100, 0);
+        assert!(s.is_finite());
+        // Zero-BRAM point against zero-BRAM baseline scores 1.0 exactly
+        // when latency matches.
+        assert!((alpha_score(0.7, 100, 0, 100, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn highlight_selection() {
+        let pts = [(1000u64, 100u32), (1005, 0), (700, 400)];
+        let i = select_highlight(&pts, 0.7, 1000, 100).unwrap();
+        assert_eq!(i, 1, "near-baseline latency with zero BRAM should win");
+        assert_eq!(select_highlight(&[], 0.7, 1000, 100), None);
+    }
+}

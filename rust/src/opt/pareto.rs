@@ -1,0 +1,162 @@
+//! Pareto-front utilities for the dual objective
+//! `minimize (f_lat, f_bram)` (paper §III).
+//!
+//! Deadlocked configurations (latency `None`) are infeasible and never
+//! enter the front.
+
+/// A single evaluated objective pair (feasible points only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjPoint {
+    pub latency: u64,
+    pub bram: u32,
+    /// Index into the originating evaluation history.
+    pub index: usize,
+}
+
+/// `a` dominates `b` iff `a` is no worse in both objectives and strictly
+/// better in at least one.
+#[inline]
+pub fn dominates(a: (u64, u32), b: (u64, u32)) -> bool {
+    (a.0 <= b.0 && a.1 <= b.1) && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Extract the Pareto-optimal subset (non-dominated points) from
+/// `(latency, bram, index)` triples. O(n log n): sort by latency then
+/// sweep bram. Duplicate objective pairs keep the first occurrence.
+pub fn pareto_front(points: &[ObjPoint]) -> Vec<ObjPoint> {
+    let mut sorted: Vec<ObjPoint> = points.to_vec();
+    // Sort by latency asc, then bram asc, then index for determinism.
+    sorted.sort_by(|a, b| {
+        (a.latency, a.bram, a.index).cmp(&(b.latency, b.bram, b.index))
+    });
+    let mut front: Vec<ObjPoint> = Vec::new();
+    let mut best_bram = u32::MAX;
+    let mut last: Option<(u64, u32)> = None;
+    for p in sorted {
+        if p.bram < best_bram {
+            if last != Some((p.latency, p.bram)) {
+                front.push(p);
+                last = Some((p.latency, p.bram));
+            }
+            best_bram = p.bram;
+        }
+    }
+    front
+}
+
+/// 2-D hypervolume (area dominated by the front, up to `ref_point`) —
+/// the frontier-quality metric used by the ablation bench. Points beyond
+/// the reference are clipped; returns 0 for an empty front.
+pub fn hypervolume_2d(points: &[ObjPoint], ref_point: (u64, u32)) -> f64 {
+    let front = pareto_front(points);
+    let mut hv = 0.0;
+    let mut prev_lat = ref_point.0 as f64;
+    // Front is sorted by latency asc / bram desc; integrate right-to-left.
+    for p in front.iter().rev() {
+        let lat = (p.latency as f64).min(ref_point.0 as f64);
+        let bram = (p.bram as f64).min(ref_point.1 as f64);
+        if lat < prev_lat {
+            hv += (prev_lat - lat) * (ref_point.1 as f64 - bram);
+            prev_lat = lat;
+        }
+    }
+    hv
+}
+
+/// O(n²) reference implementation for testing the sweep.
+pub fn pareto_front_naive(points: &[ObjPoint]) -> Vec<ObjPoint> {
+    let mut out: Vec<ObjPoint> = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        let dominated = points.iter().enumerate().any(|(j, q)| {
+            dominates((q.latency, q.bram), (p.latency, p.bram))
+                || (j < i && q.latency == p.latency && q.bram == p.bram)
+        });
+        if !dominated {
+            out.push(*p);
+        }
+    }
+    out.sort_by(|a, b| (a.latency, a.bram, a.index).cmp(&(b.latency, b.bram, b.index)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn pt(latency: u64, bram: u32, index: usize) -> ObjPoint {
+        ObjPoint {
+            latency,
+            bram,
+            index,
+        }
+    }
+
+    #[test]
+    fn simple_front() {
+        let pts = [pt(10, 5, 0), pt(8, 7, 1), pt(12, 3, 2), pt(10, 7, 3), pt(8, 7, 4)];
+        let f = pareto_front(&pts);
+        let objs: Vec<(u64, u32)> = f.iter().map(|p| (p.latency, p.bram)).collect();
+        assert_eq!(objs, vec![(8, 7), (10, 5), (12, 3)]);
+        // duplicate (8,7) keeps the first index
+        assert_eq!(f[0].index, 1);
+    }
+
+    #[test]
+    fn dominance_rules() {
+        assert!(dominates((1, 1), (2, 2)));
+        assert!(dominates((1, 2), (2, 2)));
+        assert!(!dominates((2, 2), (2, 2)));
+        assert!(!dominates((1, 3), (2, 2)));
+    }
+
+    #[test]
+    fn front_matches_naive_on_random_inputs() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let n = 1 + rng.index(60);
+            let pts: Vec<ObjPoint> = (0..n)
+                .map(|i| pt(rng.below(40), rng.below(12) as u32, i))
+                .collect();
+            let fast = pareto_front(&pts);
+            let slow = pareto_front_naive(&pts);
+            assert_eq!(fast, slow);
+        }
+    }
+
+    #[test]
+    fn hypervolume_basics() {
+        // Single point at (5, 2) with ref (10, 10): area (10-5)*(10-2)=40.
+        let hv = hypervolume_2d(&[pt(5, 2, 0)], (10, 10));
+        assert!((hv - 40.0).abs() < 1e-9);
+        // Adding a dominated point changes nothing.
+        let hv2 = hypervolume_2d(&[pt(5, 2, 0), pt(6, 3, 1)], (10, 10));
+        assert!((hv2 - 40.0).abs() < 1e-9);
+        // Adding a complementary point grows the volume.
+        let hv3 = hypervolume_2d(&[pt(5, 2, 0), pt(2, 8, 1)], (10, 10));
+        assert!(hv3 > hv2);
+        assert_eq!(hypervolume_2d(&[], (10, 10)), 0.0);
+        // Points beyond the reference contribute nothing.
+        let hv4 = hypervolume_2d(&[pt(20, 20, 0)], (10, 10));
+        assert_eq!(hv4, 0.0);
+    }
+
+    #[test]
+    fn front_members_are_mutually_nondominated() {
+        let mut rng = Rng::new(5);
+        let pts: Vec<ObjPoint> = (0..200)
+            .map(|i| pt(rng.below(1000), rng.below(64) as u32, i))
+            .collect();
+        let f = pareto_front(&pts);
+        for a in &f {
+            for b in &f {
+                assert!(!dominates((a.latency, a.bram), (b.latency, b.bram)) || a == b);
+            }
+        }
+        // And every input point is dominated by (or equal to) some member.
+        for p in &pts {
+            assert!(f.iter().any(|m| (m.latency, m.bram) == (p.latency, p.bram)
+                || dominates((m.latency, m.bram), (p.latency, p.bram))));
+        }
+    }
+}

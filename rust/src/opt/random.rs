@@ -1,0 +1,156 @@
+//! Random sampling and grouped random sampling (§III-D).
+//!
+//! Samples are drawn from the *pruned* candidate sets (§III-C) — the
+//! paper notes uniform sampling over `[2, uᵢ]` is ineffective because
+//! only the BRAM-plateau boundary depths matter. The grouped variant
+//! draws one candidate per stream-array group and applies it to every
+//! member, exploiting the similar access patterns of `hls::stream<T>
+//! name[N]` arrays.
+
+use super::{Optimizer, Space};
+use crate::dse::Evaluator;
+use crate::util::Rng;
+
+/// Evaluation batch size for the leader/worker pool.
+const BATCH: usize = 64;
+
+pub struct RandomSearch {
+    rng: Rng,
+    grouped: bool,
+    /// Ablation switch: sample uniformly from the RAW space `[2, uᵢ]`
+    /// instead of the pruned candidate sets — the strategy §III-D calls
+    /// "often ineffective". Exercised by `benches/ablation.rs`.
+    pub uniform_raw: bool,
+}
+
+impl RandomSearch {
+    pub fn new(seed: u64, grouped: bool) -> RandomSearch {
+        RandomSearch {
+            rng: Rng::new(seed),
+            grouped,
+            uniform_raw: false,
+        }
+    }
+
+    /// Raw-space sampler (pruning disabled) for the ablation study.
+    pub fn new_uniform_raw(seed: u64) -> RandomSearch {
+        RandomSearch {
+            rng: Rng::new(seed),
+            grouped: false,
+            uniform_raw: true,
+        }
+    }
+
+    fn sample(&mut self, space: &Space) -> Box<[u32]> {
+        if self.uniform_raw {
+            return space
+                .bounds
+                .iter()
+                .map(|&u| self.rng.range_u32(2, u.max(2)))
+                .collect();
+        }
+        if self.grouped {
+            let picks: Vec<u32> = space
+                .per_group
+                .iter()
+                .map(|c| *self.rng.choose(c))
+                .collect();
+            space.expand_group_depths(&picks).into()
+        } else {
+            space
+                .per_fifo
+                .iter()
+                .map(|c| *self.rng.choose(c))
+                .collect()
+        }
+    }
+}
+
+impl Optimizer for RandomSearch {
+    fn name(&self) -> &'static str {
+        if self.grouped {
+            "grouped_random"
+        } else {
+            "random"
+        }
+    }
+
+    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
+        let mut left = budget;
+        while left > 0 {
+            let n = left.min(BATCH);
+            let batch: Vec<Box<[u32]>> = (0..n).map(|_| self.sample(space)).collect();
+            ev.eval_batch(&batch);
+            left -= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    fn setup(name: &str) -> (Evaluator, Space) {
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let space = Space::from_trace(&t);
+        (Evaluator::new(t), space)
+    }
+
+    #[test]
+    fn respects_budget_and_candidates() {
+        let (mut ev, space) = setup("bicg");
+        let mut opt = RandomSearch::new(7, false);
+        opt.run(&mut ev, &space, 100);
+        assert_eq!(ev.n_evals(), 100);
+        for p in &ev.history {
+            for (i, &d) in p.depths.iter().enumerate() {
+                assert!(
+                    space.per_fifo[i].contains(&d),
+                    "depth {d} not a pruned candidate of fifo {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_assigns_uniform_depths_within_groups() {
+        let (mut ev, space) = setup("gesummv");
+        let mut opt = RandomSearch::new(7, true);
+        opt.run(&mut ev, &space, 20);
+        for p in &ev.history {
+            for ids in &space.groups {
+                // All members share the group draw, modulo per-member
+                // bound clamping.
+                let draws: Vec<u32> = ids.iter().map(|&i| p.depths[i]).collect();
+                let max = *draws.iter().max().unwrap();
+                for (&i, &d) in ids.iter().zip(&draws) {
+                    assert!(d == max || d == space.bounds[i].max(2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn finds_feasible_points_on_fig2() {
+        let (mut ev, space) = setup("fig2");
+        let mut opt = RandomSearch::new(42, false);
+        opt.run(&mut ev, &space, 200);
+        let front = ev.pareto();
+        assert!(!front.is_empty(), "random must find feasible fig2 configs");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mut ev1, space) = setup("bicg");
+        RandomSearch::new(5, false).run(&mut ev1, &space, 30);
+        let (mut ev2, _) = setup("bicg");
+        RandomSearch::new(5, false).run(&mut ev2, &space, 30);
+        let d1: Vec<_> = ev1.history.iter().map(|p| p.depths.clone()).collect();
+        let d2: Vec<_> = ev2.history.iter().map(|p| p.depths.clone()).collect();
+        assert_eq!(d1, d2);
+    }
+}

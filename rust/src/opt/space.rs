@@ -1,0 +1,156 @@
+//! The pruned search space (§III-C): per-FIFO candidate depth lists from
+//! the BRAM model's plateau breakpoints, plus the stream-array group
+//! structure the grouped optimizers exploit (§III-D).
+
+use crate::bram::candidate_depths;
+use crate::trace::Trace;
+
+/// Pruned design space for one design.
+#[derive(Debug, Clone)]
+pub struct Space {
+    /// Per-channel sorted candidate depths (each maximally utilizes its
+    /// BRAM allocation; always contains 2 and the upper bound).
+    pub per_fifo: Vec<Vec<u32>>,
+    /// Per-channel upper bounds `u_i`.
+    pub bounds: Vec<u32>,
+    /// Per-channel element widths (bits).
+    pub widths: Vec<u32>,
+    /// Stream-array groups: channel indices per group (singletons for
+    /// ungrouped channels).
+    pub groups: Vec<Vec<usize>>,
+    /// Per-group candidate depths (breakpoints of the group's widest
+    /// member at the group's largest bound).
+    pub per_group: Vec<Vec<u32>>,
+}
+
+impl Space {
+    /// Build the pruned space for a trace.
+    pub fn from_trace(trace: &Trace) -> Space {
+        let bounds = trace.upper_bounds();
+        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        let per_fifo: Vec<Vec<u32>> = bounds
+            .iter()
+            .zip(&widths)
+            .map(|(&u, &w)| candidate_depths(w, u))
+            .collect();
+        let groups = trace.groups();
+        let per_group = groups
+            .iter()
+            .map(|ids| {
+                let u = ids.iter().map(|&i| bounds[i]).max().unwrap();
+                let w = ids.iter().map(|&i| widths[i]).max().unwrap();
+                candidate_depths(w, u)
+            })
+            .collect();
+        Space {
+            per_fifo,
+            bounds,
+            widths,
+            groups,
+            per_group,
+        }
+    }
+
+    /// Number of channels.
+    pub fn num_fifos(&self) -> usize {
+        self.per_fifo.len()
+    }
+
+    /// log10 of the pruned per-FIFO space size (design-space cardinality
+    /// diagnostic; the raw space is Π(uᵢ - 1)).
+    pub fn log10_size(&self) -> f64 {
+        self.per_fifo.iter().map(|c| (c.len() as f64).log10()).sum()
+    }
+
+    /// Clamp an arbitrary depth vector into bounds (≥2, ≤uᵢ).
+    pub fn clamp(&self, depths: &mut [u32]) {
+        for (d, &u) in depths.iter_mut().zip(&self.bounds) {
+            *d = (*d).clamp(2, u.max(2));
+        }
+    }
+
+    /// Expand per-group depths into a full per-channel configuration
+    /// (each member clamped to its own bound).
+    pub fn expand_group_depths(&self, group_depths: &[u32]) -> Vec<u32> {
+        assert_eq!(group_depths.len(), self.groups.len());
+        let mut out = vec![2u32; self.num_fifos()];
+        for (g, ids) in self.groups.iter().enumerate() {
+            for &i in ids {
+                out[i] = group_depths[g].clamp(2, self.bounds[i].max(2));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::trace::collect_trace;
+
+    fn space_for(name: &str) -> Space {
+        let bd = bench_suite::build(name);
+        let t = collect_trace(&bd.design, &bd.args).unwrap();
+        Space::from_trace(&t)
+    }
+
+    #[test]
+    fn candidates_bounded_and_sorted() {
+        let s = space_for("gemm");
+        assert_eq!(s.num_fifos(), 84);
+        for (c, &u) in s.per_fifo.iter().zip(&s.bounds) {
+            assert_eq!(c[0], 2);
+            assert_eq!(*c.last().unwrap(), u.max(2));
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn pruning_shrinks_space_dramatically() {
+        let s = space_for("k2mm");
+        let raw: f64 = s
+            .bounds
+            .iter()
+            .map(|&u| ((u.max(3) - 1) as f64).log10())
+            .sum();
+        assert!(
+            s.log10_size() < raw / 2.0,
+            "pruned 10^{:.1} vs raw 10^{:.1}",
+            s.log10_size(),
+            raw
+        );
+    }
+
+    #[test]
+    fn groups_share_candidates() {
+        let s = space_for("FeedForward");
+        assert!(s.groups.len() < s.num_fifos());
+        assert_eq!(s.groups.len(), s.per_group.len());
+        let cfg = s.expand_group_depths(&vec![2; s.groups.len()]);
+        assert!(cfg.iter().all(|&d| d == 2));
+        let maxes: Vec<u32> = s
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(g, _)| *s.per_group[g].last().unwrap())
+            .collect();
+        let cfg = s.expand_group_depths(&maxes);
+        for (i, &d) in cfg.iter().enumerate() {
+            assert!(d >= 2 && d <= s.bounds[i].max(2));
+        }
+    }
+
+    #[test]
+    fn clamp_respects_bounds() {
+        let s = space_for("bicg");
+        let mut cfg = vec![0u32; s.num_fifos()];
+        s.clamp(&mut cfg);
+        assert!(cfg.iter().all(|&d| d >= 2));
+        let mut cfg = vec![u32::MAX; s.num_fifos()];
+        s.clamp(&mut cfg);
+        for (i, &d) in cfg.iter().enumerate() {
+            assert_eq!(d, s.bounds[i].max(2));
+        }
+    }
+}

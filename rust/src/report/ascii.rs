@@ -1,0 +1,159 @@
+//! Terminal plots: scatter (Pareto frontiers, Fig. 3/6-style) and step
+//! lines (convergence, Fig. 5-style). Pure text, fixed-size canvas.
+
+/// A labelled point series.
+pub struct Series<'a> {
+    pub label: char,
+    pub points: &'a [(f64, f64)],
+}
+
+/// Render a scatter plot of several series onto a `width`×`height` char
+/// canvas with simple linear axes. Returns the multi-line string.
+pub fn scatter(series: &[Series], width: usize, height: usize, x_label: &str, y_label: &str) -> String {
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if all.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 <= x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 <= y0 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            let col = cx.min(width - 1);
+            grid[row][col] = s.label;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("  {y_label}  [{y0:.0} .. {y1:.0}]\n"));
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("   {x_label}  [{x0:.0} .. {x1:.0}]\n"));
+    out
+}
+
+/// Render best-so-far step curves (x = time, y = score) for Fig. 5-style
+/// convergence comparisons. Input series need not be sorted.
+pub fn convergence(series: &[Series], width: usize, height: usize) -> String {
+    // Convert each series to a running-minimum staircase sampled on the
+    // common time grid, then scatter it.
+    let t_max = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.0))
+        .fold(0.0_f64, f64::max)
+        .max(1e-9);
+    let mut stair_storage: Vec<Vec<(f64, f64)>> = Vec::new();
+    for s in series {
+        let mut pts: Vec<(f64, f64)> = s.points.iter().copied().filter(|p| p.1.is_finite()).collect();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut best = f64::INFINITY;
+        let mut stair = Vec::new();
+        for (t, v) in pts {
+            best = best.min(v);
+            stair.push((t, best));
+        }
+        if let Some(&(_, last)) = stair.last() {
+            stair.push((t_max, last));
+        }
+        stair_storage.push(stair);
+    }
+    let stair_series: Vec<Series> = series
+        .iter()
+        .zip(&stair_storage)
+        .map(|(s, pts)| Series {
+            label: s.label,
+            points: pts,
+        })
+        .collect();
+    scatter(&stair_series, width, height, "time (s)", "best score")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_renders_points() {
+        let pts = [(0.0, 0.0), (10.0, 5.0), (5.0, 2.5)];
+        let s = scatter(
+            &[Series {
+                label: 'o',
+                points: &pts,
+            }],
+            40,
+            10,
+            "lat",
+            "bram",
+        );
+        assert_eq!(s.matches('o').count(), 3);
+        assert!(s.contains("lat"));
+        assert!(s.contains("bram"));
+    }
+
+    #[test]
+    fn empty_series_is_safe() {
+        assert_eq!(scatter(&[], 10, 5, "x", "y"), "(no data)\n");
+        let s: [Series; 1] = [Series {
+            label: 'x',
+            points: &[],
+        }];
+        assert_eq!(scatter(&s, 10, 5, "x", "y"), "(no data)\n");
+    }
+
+    #[test]
+    fn convergence_is_monotone_staircase() {
+        let pts = [(0.1, 10.0), (0.2, 12.0), (0.3, 7.0), (0.5, 9.0)];
+        let out = convergence(
+            &[Series {
+                label: '*',
+                points: &pts,
+            }],
+            30,
+            8,
+        );
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn nonfinite_points_skipped() {
+        let pts = [(0.0, f64::INFINITY), (1.0, 1.0)];
+        let s = scatter(
+            &[Series {
+                label: 'o',
+                points: &pts,
+            }],
+            20,
+            5,
+            "x",
+            "y",
+        );
+        assert_eq!(s.matches('o').count(), 1);
+    }
+}

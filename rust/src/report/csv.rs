@@ -1,0 +1,82 @@
+//! Minimal CSV writer (RFC-4180 quoting) for experiment outputs.
+
+/// Accumulates rows and renders/writes CSV text.
+pub struct Csv {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(headers: &[&str]) -> Csv {
+        Csv {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "csv row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let write_row = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    out.push('"');
+                    out.push_str(&c.replace('"', "\"\""));
+                    out.push('"');
+                } else {
+                    out.push_str(c);
+                }
+            }
+            out.push('\n');
+        };
+        write_row(&mut out, &self.headers);
+        for r in &self.rows {
+            write_row(&mut out, r);
+        }
+        out
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        super::write_file(path, &self.to_string())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_quoting() {
+        let mut c = Csv::new(&["name", "value"]);
+        c.row(vec!["plain".into(), "1".into()]);
+        c.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let s = c.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "name,value");
+        assert_eq!(lines[1], "plain,1");
+        assert_eq!(lines[2], "\"has,comma\",\"has\"\"quote\"");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["only-one".into()]);
+    }
+}

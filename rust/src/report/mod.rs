@@ -1,0 +1,123 @@
+//! Result emission: CSV files, JSON run records, markdown tables, and
+//! terminal ASCII plots (scatter for Pareto frontiers, step lines for
+//! convergence curves) — everything the table/figure benches print.
+
+pub mod ascii;
+pub mod csv;
+
+use crate::dse::EvalPoint;
+use crate::util::Json;
+
+/// Serialize an evaluation point.
+pub fn point_to_json(p: &EvalPoint) -> Json {
+    Json::obj(vec![
+        (
+            "depths",
+            Json::Arr(p.depths.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        (
+            "latency",
+            match p.latency {
+                Some(l) => Json::Num(l as f64),
+                None => Json::Null,
+            },
+        ),
+        ("bram", Json::Num(p.bram as f64)),
+        ("t", Json::Num(p.t)),
+    ])
+}
+
+/// Serialize a full run (design, optimizer, history, front) for the
+/// results directory.
+pub fn run_to_json(
+    design: &str,
+    optimizer: &str,
+    seed: u64,
+    budget: usize,
+    history: &[EvalPoint],
+    front: &[&EvalPoint],
+    elapsed_secs: f64,
+) -> Json {
+    Json::obj(vec![
+        ("design", Json::Str(design.into())),
+        ("optimizer", Json::Str(optimizer.into())),
+        ("seed", Json::Num(seed as f64)),
+        ("budget", Json::Num(budget as f64)),
+        ("elapsed_secs", Json::Num(elapsed_secs)),
+        ("evals", Json::Num(history.len() as f64)),
+        (
+            "front",
+            Json::Arr(front.iter().map(|p| point_to_json(p)).collect()),
+        ),
+    ])
+}
+
+/// Render a markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&headers.join(" | "));
+    out.push_str(" |\n|");
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_file(path: &str, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        assert_eq!(t.lines().count(), 4);
+        assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn run_json_roundtrips() {
+        let p = EvalPoint {
+            depths: vec![2, 16].into(),
+            latency: Some(100),
+            bram: 3,
+            t: 0.5,
+        };
+        let dead = EvalPoint {
+            depths: vec![2, 2].into(),
+            latency: None,
+            bram: 0,
+            t: 0.6,
+        };
+        let hist = vec![p.clone(), dead];
+        let front = vec![&hist[0]];
+        let j = run_to_json("fig2", "greedy", 1, 100, &hist, &front, 1.25);
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("design").unwrap().as_str(), Some("fig2"));
+        assert_eq!(
+            parsed.get("front").unwrap().as_arr().unwrap()[0]
+                .get("latency")
+                .unwrap()
+                .as_u64(),
+            Some(100)
+        );
+    }
+}

@@ -1,0 +1,243 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas analytics
+//! artifacts (`artifacts/analytics_f*.hlo.txt`, produced once by
+//! `python/compile/aot.py`) and executes them from the Rust DSE hot path.
+//! Python is never invoked at runtime — the HLO text is parsed, compiled
+//! and run entirely through the `xla` crate's PJRT CPU client.
+//!
+//! The exported module computes, for a fixed-shape batch
+//! `(depths[B,F], widths[F], latencies[B], betas[K])`:
+//! per-config BRAM totals, the β-grid weighted objectives, and the Pareto
+//! dominance mask (see `python/compile/model.py`). Designs are padded to
+//! the next FIFO-count bucket; batches are padded/chunked to `B`.
+
+use crate::dse::BramBatch;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Padding conventions shared with `python/compile/model.py`.
+const PAD_DEPTH: i32 = 2;
+const PAD_WIDTH: i32 = 1;
+
+/// One compiled shape bucket.
+struct Bucket {
+    fifos: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Result of one batched analytics execution.
+#[derive(Debug, Clone)]
+pub struct AnalyticsOut {
+    /// Per-configuration total BRAM (valid prefix only).
+    pub bram_totals: Vec<u32>,
+    /// Row-major (K, valid) weighted objectives.
+    pub scores: Vec<Vec<f64>>,
+    /// Dominance mask over the batch (valid prefix only; padding masked).
+    pub dominated: Vec<bool>,
+}
+
+/// The loaded artifact set.
+pub struct BatchAnalytics {
+    client: xla::PjRtClient,
+    buckets: Vec<Bucket>,
+    /// Fixed batch rows per execution (export-time constant).
+    pub batch: usize,
+    /// Fixed β-grid length (export-time constant).
+    pub betas: usize,
+    /// Calls executed (for perf reporting).
+    pub calls: u64,
+}
+
+impl BatchAnalytics {
+    /// Load every bucket listed in `<dir>/manifest.json` and compile them
+    /// on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<BatchAnalytics> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let buckets_json = manifest
+            .get("buckets")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| anyhow!("manifest.json: missing buckets"))?;
+
+        let client = xla::PjRtClient::cpu()?;
+        let mut buckets = Vec::new();
+        let mut batch = 0usize;
+        let mut betas = 0usize;
+        for b in buckets_json {
+            let fifos = b
+                .get("fifos")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("bucket missing fifos"))? as usize;
+            batch = b
+                .get("batch")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("bucket missing batch"))? as usize;
+            betas = b
+                .get("betas")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("bucket missing betas"))? as usize;
+            let file = b
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("bucket missing file"))?;
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            buckets.push(Bucket { fifos, exe });
+        }
+        if buckets.is_empty() {
+            bail!("manifest.json lists no buckets");
+        }
+        buckets.sort_by_key(|b| b.fifos);
+        Ok(BatchAnalytics {
+            client,
+            buckets,
+            batch,
+            betas,
+            calls: 0,
+        })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the
+    /// current working directory (or `$FIFOADVISOR_ARTIFACTS`).
+    pub fn load_default() -> Result<BatchAnalytics> {
+        let dir = std::env::var("FIFOADVISOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest bucket with capacity for `fifos`, if any.
+    fn bucket_for(&self, fifos: usize) -> Option<&Bucket> {
+        self.buckets.iter().find(|b| b.fifos >= fifos)
+    }
+
+    /// Largest supported FIFO count.
+    pub fn max_fifos(&self) -> usize {
+        self.buckets.last().map(|b| b.fifos).unwrap_or(0)
+    }
+
+    /// Run the analytics module over up to [`Self::batch`] configurations
+    /// (callers chunk larger sets). `latencies[i] = None` marks a
+    /// deadlocked config (encoded +inf).
+    pub fn evaluate(
+        &mut self,
+        configs: &[Box<[u32]>],
+        widths: &[u32],
+        latencies: &[Option<u64>],
+        betas: &[f64],
+    ) -> Result<AnalyticsOut> {
+        let valid = configs.len();
+        if valid == 0 {
+            bail!("empty batch");
+        }
+        if valid > self.batch {
+            bail!("batch {} exceeds export size {}", valid, self.batch);
+        }
+        if betas.len() != self.betas {
+            bail!("betas {} != export size {}", betas.len(), self.betas);
+        }
+        let f_real = widths.len();
+        let bucket = self
+            .bucket_for(f_real)
+            .ok_or_else(|| anyhow!("{f_real} FIFOs exceeds largest bucket {}", self.max_fifos()))?;
+        let f = bucket.fifos;
+        let b = self.batch;
+
+        // Pack + pad the inputs.
+        let mut depths = vec![PAD_DEPTH; b * f];
+        for (i, cfg) in configs.iter().enumerate() {
+            assert_eq!(cfg.len(), f_real, "config width mismatch");
+            for (j, &d) in cfg.iter().enumerate() {
+                depths[i * f + j] = d as i32;
+            }
+        }
+        let mut w = vec![PAD_WIDTH; f];
+        for (j, &x) in widths.iter().enumerate() {
+            w[j] = x as i32;
+        }
+        let mut lat = vec![f32::INFINITY; b];
+        for (i, l) in latencies.iter().enumerate() {
+            lat[i] = l.map(|v| v as f32).unwrap_or(f32::INFINITY);
+        }
+        let betas_f: Vec<f32> = betas.iter().map(|&x| x as f32).collect();
+
+        let depths_lit = xla::Literal::vec1(&depths).reshape(&[b as i64, f as i64])?;
+        let widths_lit = xla::Literal::vec1(&w);
+        let lat_lit = xla::Literal::vec1(&lat);
+        let betas_lit = xla::Literal::vec1(&betas_f);
+
+        let result = bucket
+            .exe
+            .execute::<xla::Literal>(&[depths_lit, widths_lit, lat_lit, betas_lit])?[0][0]
+            .to_literal_sync()?;
+        self.calls += 1;
+        let (totals_l, scores_l, dom_l) = result.to_tuple3()?;
+
+        let totals_all = totals_l.to_vec::<i32>()?;
+        let scores_all = scores_l.to_vec::<f32>()?;
+        let dom_all = dom_l.to_vec::<i32>()?;
+
+        let bram_totals: Vec<u32> = totals_all[..valid].iter().map(|&x| x as u32).collect();
+        let scores: Vec<Vec<f64>> = (0..self.betas)
+            .map(|k| {
+                scores_all[k * b..k * b + valid]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect()
+            })
+            .collect();
+        let dominated: Vec<bool> = dom_all[..valid].iter().map(|&x| x != 0).collect();
+        Ok(AnalyticsOut {
+            bram_totals,
+            scores,
+            dominated,
+        })
+    }
+}
+
+/// [`BramBatch`] backend over the XLA artifact: lets the DSE evaluator
+/// compute BRAM totals through the AOT-compiled module. Falls back to
+/// chunking for batches larger than the export size.
+pub struct XlaBram {
+    analytics: BatchAnalytics,
+    betas: Vec<f64>,
+}
+
+impl XlaBram {
+    pub fn new(analytics: BatchAnalytics) -> XlaBram {
+        let k = analytics.betas;
+        let betas = (0..k).map(|i| i as f64 / (k - 1) as f64).collect();
+        XlaBram { analytics, betas }
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.analytics.calls
+    }
+}
+
+impl BramBatch for XlaBram {
+    fn bram_totals(&mut self, configs: &[Box<[u32]>], widths: &[u32]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(configs.len());
+        let lat_dummy: Vec<Option<u64>> = vec![Some(1); self.analytics.batch];
+        for chunk in configs.chunks(self.analytics.batch) {
+            let res = self
+                .analytics
+                .evaluate(chunk, widths, &lat_dummy[..chunk.len()], &self.betas)
+                .expect("XLA analytics execution failed");
+            out.extend(res.bram_totals);
+        }
+        out
+    }
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}

@@ -1,0 +1,79 @@
+//! Runtime cost model for traditional HLS C/RTL co-simulation — the
+//! baseline FIFOAdvisor is compared against in Table III.
+//!
+//! The paper estimates co-simulation-based search runtime as (best-case
+//! per-run co-sim time) × (number of configurations), optionally divided
+//! by 32 for perfectly-parallel workers. We reproduce that estimator with
+//! a cost model calibrated to the published numbers: Vitis RTL co-sim
+//! spends a roughly fixed setup (xsim elaboration) plus per-cycle
+//! simulation effort that grows with design size (number of FIFOs is our
+//! size proxy; the RTL netlist grows with it).
+//!
+//! Calibration sanity (paper Table III, 1000 samples, PAR=32): designs
+//! with 10³–10⁶ cycles and 25–850 FIFOs land between ~0.4 and ~16 days —
+//! our model reproduces that range; the headline claim it supports is
+//! only "co-sim search takes days, FIFOAdvisor takes seconds" (≥10⁵×).
+
+/// Fixed per-run setup cost (seconds): C-synthesis reuse + xsim RTL
+/// elaboration + testbench launch. Calibrated so that an atax-class
+/// design (175 FIFOs, ~2.2k cycles) costs ~1.7 ks per run — the per-run
+/// time Table III's "0.61 days @ PAR=32 for 1000 samples" implies.
+pub const SETUP_SECS: f64 = 1500.0;
+
+/// Per-cycle, per-FIFO simulation cost (seconds). RTL co-sim throughput
+/// of a dataflow design degrades with the number of live FIFO handshake
+/// signals; 0.5 ms/cycle/FIFO puts a 100-FIFO design at ~20 Hz — the
+/// regime Table III's large-design rows imply.
+pub const SECS_PER_CYCLE_PER_FIFO: f64 = 5.0e-4;
+
+/// Baseline per-cycle cost independent of design size.
+pub const SECS_PER_CYCLE_BASE: f64 = 1.0e-3;
+
+/// Estimated wall-clock seconds for ONE co-simulation run of a design
+/// with `cycles` simulated cycles and `num_fifos` FIFOs.
+pub fn cosim_run_secs(cycles: u64, num_fifos: usize) -> f64 {
+    SETUP_SECS
+        + cycles as f64 * (SECS_PER_CYCLE_BASE + SECS_PER_CYCLE_PER_FIFO * num_fifos as f64)
+}
+
+/// Estimated wall-clock seconds for a co-simulation-based search of
+/// `samples` configurations with `parallel` perfectly-scaling workers
+/// (paper uses PAR=32 and zero distribution overhead — a deliberately
+/// optimistic lower bound for the baseline).
+pub fn cosim_search_secs(cycles: u64, num_fifos: usize, samples: u64, parallel: u64) -> f64 {
+    cosim_run_secs(cycles, num_fifos) * samples as f64 / parallel.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_run_dominated_by_cycles_for_big_designs() {
+        let small = cosim_run_secs(1_000, 100);
+        let big = cosim_run_secs(1_000_000, 100);
+        assert!(big > 20.0 * small);
+        assert!(small >= SETUP_SECS);
+    }
+
+    #[test]
+    fn search_scales_linearly_and_parallelizes() {
+        let one = cosim_search_secs(10_000, 200, 1, 1);
+        let thousand = cosim_search_secs(10_000, 200, 1000, 1);
+        assert!((thousand / one - 1000.0).abs() < 1e-6);
+        let par32 = cosim_search_secs(10_000, 200, 1000, 32);
+        assert!((thousand / par32 - 32.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table3_range_shape() {
+        // Paper-scale designs should land in the fractional-day to
+        // tens-of-days range for 1000 samples at PAR=32.
+        let lo = cosim_search_secs(667, 25, 1000, 32); // mvt/bicg-like
+        let hi = cosim_search_secs(2_092_531, 64, 1000, 32); // ResidualBlock-like
+        let day = 86_400.0;
+        assert!(lo > 0.02 * day, "lo = {lo}");
+        assert!(hi > 3.0 * day, "hi = {hi}");
+        assert!(hi < 60.0 * day, "hi = {hi}");
+    }
+}

@@ -1,0 +1,273 @@
+//! The golden reference simulator — the role C/RTL co-simulation plays in
+//! the paper's Table II accuracy study.
+//!
+//! Implements exactly the cycle semantics documented in [`super`] but with
+//! a deliberately different algorithm: a global clock advanced
+//! cycle-by-cycle (with idle-gap skipping), where every process re-checks
+//! its pending operation against the current cycle. No event lists, no
+//! wake bookkeeping — simple enough to be audited by eye, and
+//! structurally independent from [`super::fast`] so that implementation
+//! bugs in either show up as divergence in the equivalence tests and the
+//! Table II bench.
+
+use super::SimOptions;
+use crate::trace::Trace;
+
+/// Outcome of a golden-model run (mirrors [`super::fast::SimOutcome`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GoldenOutcome {
+    Done { latency: u64 },
+    Deadlock,
+}
+
+impl GoldenOutcome {
+    pub fn latency(&self) -> Option<u64> {
+        match self {
+            GoldenOutcome::Done { latency } => Some(*latency),
+            GoldenOutcome::Deadlock => None,
+        }
+    }
+}
+
+/// Simulate `trace` under `depths` with a global-clock algorithm.
+pub fn simulate_golden(trace: &Trace, depths: &[u32], opts: SimOptions) -> GoldenOutcome {
+    let nch = trace.channels.len();
+    let nproc = trace.ops.len();
+    assert_eq!(depths.len(), nch);
+
+    let rd_lat: Vec<u64> = (0..nch)
+        .map(|c| super::read_latency(depths[c], trace.channels[c].width_bits, opts.uniform_read_latency))
+        .collect();
+
+    // Full commit-time history per channel (golden model keeps it simple:
+    // allocate everything, every run).
+    let mut wr_times: Vec<Vec<u64>> = trace
+        .channels
+        .iter()
+        .map(|c| Vec::with_capacity(c.writes as usize))
+        .collect();
+    let mut rd_times: Vec<Vec<u64>> = trace
+        .channels
+        .iter()
+        .map(|c| Vec::with_capacity(c.reads as usize))
+        .collect();
+
+    let mut pc = vec![0usize; nproc];
+    let mut last_commit: Vec<Option<u64>> = vec![None; nproc];
+
+    let mut t: u64 = 0;
+    loop {
+        // Try to commit at cycle t. Each process commits at most one op per
+        // cycle (II = 1). Iterate until no further commits happen at t
+        // (same-cycle commits never enable one another given the +1 / rl≥1
+        // margins, but a single pass in process order is not guaranteed to
+        // attempt ops in dependency order, so fixpoint within the cycle —
+        // bounded by one commit per process — keeps it order-independent).
+        let mut committed_this_cycle = vec![false; nproc];
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for p in 0..nproc {
+                if committed_this_cycle[p] || pc[p] >= trace.ops[p].len() {
+                    continue;
+                }
+                let op = trace.ops[p][pc[p]];
+                let ch = op.chan();
+                let start = match last_commit[p] {
+                    None => op.delay as u64,
+                    Some(prev) => prev + 1 + op.delay as u64,
+                };
+                if start > t {
+                    continue;
+                }
+                let can_commit = if op.is_write() {
+                    let j = wr_times[ch].len() as u32;
+                    let d = depths[ch];
+                    if j >= d {
+                        let need = (j - d) as usize;
+                        rd_times[ch].len() > need && rd_times[ch][need] + 1 <= t
+                    } else {
+                        true
+                    }
+                } else {
+                    let j = rd_times[ch].len();
+                    wr_times[ch].len() > j && wr_times[ch][j] + rd_lat[ch] <= t
+                };
+                if can_commit {
+                    if op.is_write() {
+                        wr_times[ch].push(t);
+                    } else {
+                        rd_times[ch].push(t);
+                    }
+                    last_commit[p] = Some(t);
+                    pc[p] += 1;
+                    committed_this_cycle[p] = true;
+                    progressed = true;
+                }
+            }
+        }
+
+        // All processes finished?
+        if pc.iter().enumerate().all(|(p, &c)| c >= trace.ops[p].len()) {
+            let mut latency = 0u64;
+            for p in 0..nproc {
+                let done = match last_commit[p] {
+                    None => trace.tail_delays[p],
+                    Some(c) => c + 1 + trace.tail_delays[p],
+                };
+                latency = latency.max(done);
+            }
+            return GoldenOutcome::Done { latency };
+        }
+
+        // Advance the clock to the next cycle at which anything could
+        // possibly commit; if no pending op has a finite enabling time,
+        // the design is deadlocked.
+        let mut next: Option<u64> = None;
+        for p in 0..nproc {
+            if pc[p] >= trace.ops[p].len() {
+                continue;
+            }
+            let op = trace.ops[p][pc[p]];
+            let ch = op.chan();
+            let start = match last_commit[p] {
+                None => op.delay as u64,
+                Some(prev) => prev + 1 + op.delay as u64,
+            };
+            let enable: Option<u64> = if op.is_write() {
+                let j = wr_times[ch].len() as u32;
+                let d = depths[ch];
+                if j >= d {
+                    let need = (j - d) as usize;
+                    if rd_times[ch].len() > need {
+                        Some(start.max(rd_times[ch][need] + 1))
+                    } else {
+                        None // waiting on a read that has not happened
+                    }
+                } else {
+                    Some(start)
+                }
+            } else {
+                let j = rd_times[ch].len();
+                if wr_times[ch].len() > j {
+                    Some(start.max(wr_times[ch][j] + rd_lat[ch]))
+                } else {
+                    None // waiting on a write that has not happened
+                }
+            };
+            if let Some(e) = enable {
+                debug_assert!(e > t, "enabled op not committed at t={t}");
+                next = Some(next.map_or(e, |n: u64| n.min(e)));
+            }
+        }
+        match next {
+            Some(n) => t = n,
+            None => return GoldenOutcome::Deadlock,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DesignBuilder, Expr};
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    fn check_match(design: &crate::ir::Design, args: &[i64], depths: &[u32]) {
+        let t = Arc::new(collect_trace(design, args).unwrap());
+        let mut fast = FastSim::new(t.clone());
+        let f = fast.simulate(depths);
+        let g = simulate_golden(&t, depths, SimOptions::default());
+        assert_eq!(
+            f.latency(),
+            g.latency(),
+            "fast {f:?} vs golden {g:?} at depths {depths:?}"
+        );
+    }
+
+    #[test]
+    fn matches_fast_on_pipe() {
+        let mut b = DesignBuilder::new("pipe", 0);
+        let c = b.channel("c", 32);
+        b.process("p", |p| p.for_n(16, |p, _| p.write(c, Expr::c(0))));
+        b.process("q", |p| {
+            p.for_n(16, |p, _| {
+                let _ = p.read(c);
+            })
+        });
+        let d = b.build();
+        for depth in [1u32, 2, 3, 5, 16, 100] {
+            check_match(&d, &[], &[depth]);
+        }
+    }
+
+    #[test]
+    fn matches_fast_on_fig2_including_deadlock() {
+        let mut b = DesignBuilder::new("fig2", 1);
+        let x = b.channel("x", 32);
+        let y = b.channel("y", 32);
+        b.process("prod", |p| {
+            p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+            p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+        });
+        b.process("cons", |p| {
+            p.for_expr(Expr::arg(0), |p, _| {
+                let _ = p.read(x);
+                let _ = p.read(y);
+            });
+        });
+        let d = b.build();
+        let t = Arc::new(collect_trace(&d, &[8]).unwrap());
+        let mut fast = FastSim::new(t.clone());
+        for dx in [2u32, 4, 6, 7, 8, 16] {
+            for dy in [2u32, 4] {
+                let depths = [dx, dy];
+                let f = fast.simulate(&depths);
+                let g = simulate_golden(&t, &depths, SimOptions::default());
+                assert_eq!(f.latency(), g.latency(), "depths {depths:?}");
+                assert_eq!(f.is_deadlock(), g.latency().is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn diamond_topology_matches() {
+        // split → two parallel branches with different delays → join
+        let mut b = DesignBuilder::new("diamond", 0);
+        let a1 = b.channel("a1", 32);
+        let a2 = b.channel("a2", 32);
+        let b1 = b.channel("b1", 32);
+        let b2 = b.channel("b2", 32);
+        b.process("src", |p| {
+            p.for_n(24, |p, _| {
+                p.write(a1, Expr::c(0));
+                p.write(a2, Expr::c(0));
+            })
+        });
+        b.process("slow", |p| {
+            p.for_n(24, |p, _| {
+                let _ = p.read(a1);
+                p.delay(7);
+                p.write(b1, Expr::c(0));
+            })
+        });
+        b.process("fastbr", |p| {
+            p.for_n(24, |p, _| {
+                let _ = p.read(a2);
+                p.write(b2, Expr::c(0));
+            })
+        });
+        b.process("join", |p| {
+            p.for_n(24, |p, _| {
+                let _ = p.read(b1);
+                let _ = p.read(b2);
+            })
+        });
+        let d = b.build();
+        for depths in [[2u32, 2, 2, 2], [4, 2, 2, 8], [2, 2, 2, 24], [1, 1, 1, 1]] {
+            check_match(&d, &[], &depths);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Latency evaluation of a [`Trace`](crate::trace::Trace) under a FIFO
+//! depth configuration.
+//!
+//! Two independent implementations of the same cycle semantics:
+//!
+//! - [`fast`] — the production engine (LightningSim phase-2 analog):
+//!   event-driven commit-time propagation, O(total trace ops) per
+//!   configuration, microseconds–milliseconds per evaluation, zero
+//!   allocation in the hot loop after construction.
+//! - [`golden`] — a deliberately simple global-time-stepped simulator used
+//!   as the accuracy reference (the paper's C/RTL co-simulation role in
+//!   Table II). Slower, structurally different, obviously correct.
+//!
+//! [`cosim`] models the *runtime* of traditional HLS/RTL co-simulation for
+//! the Table III comparisons.
+//!
+//! # Cycle semantics (shared by both simulators)
+//!
+//! - A process executes its trace ops in order at initiation interval 1:
+//!   op `k` may start no earlier than `commit(k-1) + 1 + delay(k)`; the
+//!   first op no earlier than `delay(0)`.
+//! - A **write** as the `j`-th write on channel `c` with depth `d` commits
+//!   at `max(start, rd_commit[j-d] + 1)` (the FIFO holds at most `d`
+//!   unread tokens; a slot frees the cycle after its read commits); if
+//!   `j < d` there is no constraint.
+//! - A **read** as the `j`-th read on `c` commits at
+//!   `max(start, wr_commit[j] + rl)` where the read latency `rl` is 1 for
+//!   shift-register FIFOs and 2 for BRAM-backed FIFOs (paper footnote 2:
+//!   SRL FIFOs save one read cycle, which is why shrinking FIFOs can
+//!   *slightly beat* Baseline-Max latency).
+//! - Design latency = max over processes of (last commit + 1 + trailing
+//!   compute delay).
+//! - A configuration **deadlocks** iff the commit fixpoint leaves some
+//!   process blocked forever.
+
+pub mod cosim;
+pub mod fast;
+pub mod golden;
+
+pub use fast::{FastSim, SimOutcome};
+
+/// Read latency (cycles from write commit to earliest read commit) for a
+/// FIFO of the given shape under the given depth.
+#[inline]
+pub fn read_latency(depth: u32, width_bits: u32, uniform: bool) -> u64 {
+    if uniform || crate::bram::is_srl(depth, width_bits) {
+        1
+    } else {
+        2
+    }
+}
+
+/// Simulator options shared by [`fast`] and [`golden`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimOptions {
+    /// Use read latency 1 for every FIFO regardless of implementation
+    /// (disables the SRL/BRAM distinction). Used by property tests, where
+    /// it makes latency monotonically non-increasing in depths.
+    pub uniform_read_latency: bool,
+}

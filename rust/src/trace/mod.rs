@@ -1,0 +1,774 @@
+//! Trace collection — the LightningSim "phase 1" analog.
+//!
+//! Executes a [`Design`]'s VM processes once under Kahn-process-network
+//! semantics (unbounded channels, blocking reads) and records, per
+//! process, the exact sequence of FIFO operations with the compute delays
+//! between them. KPN determinism guarantees the recorded [`Trace`] is
+//! independent of FIFO depths, so any depth assignment can later be
+//! evaluated against the same trace ([`crate::sim`]) — this is the paper's
+//! key enabler for millisecond-scale incremental re-simulation.
+
+pub mod serde;
+
+use crate::ir::{Design, Instr};
+use std::collections::VecDeque;
+use thiserror::Error;
+
+/// One FIFO operation in a process's trace: `delay` compute cycles after
+/// the previous operation, then a read or write on channel `chan`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOp {
+    /// Compute cycles between the previous FIFO op's completion and this
+    /// op's earliest start (in addition to the II=1 spacing the simulator
+    /// applies between consecutive ops).
+    pub delay: u32,
+    code: u32,
+}
+
+const WRITE_BIT: u32 = 1 << 31;
+
+impl TraceOp {
+    pub fn write(chan: usize, delay: u32) -> TraceOp {
+        debug_assert!((chan as u32) < WRITE_BIT);
+        TraceOp {
+            delay,
+            code: chan as u32 | WRITE_BIT,
+        }
+    }
+
+    pub fn read(chan: usize, delay: u32) -> TraceOp {
+        debug_assert!((chan as u32) < WRITE_BIT);
+        TraceOp {
+            delay,
+            code: chan as u32,
+        }
+    }
+
+    #[inline]
+    pub fn chan(&self) -> usize {
+        (self.code & !WRITE_BIT) as usize
+    }
+
+    #[inline]
+    pub fn is_write(&self) -> bool {
+        self.code & WRITE_BIT != 0
+    }
+}
+
+/// Per-channel static+observed info carried by a trace.
+#[derive(Debug, Clone)]
+pub struct ChanInfo {
+    pub name: String,
+    pub width_bits: u32,
+    pub group: Option<String>,
+    pub depth_hint: Option<u32>,
+    /// Total writes observed during execution (the paper's default upper
+    /// bound for the FIFO's depth).
+    pub writes: u64,
+    /// Total reads observed.
+    pub reads: u64,
+}
+
+/// The execution trace of a design: everything the simulator needs.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub design_name: String,
+    pub channels: Vec<ChanInfo>,
+    pub process_names: Vec<String>,
+    /// Per-process FIFO operation sequences.
+    pub ops: Vec<Vec<TraceOp>>,
+    /// Per-process compute cycles *after* the last FIFO operation (a
+    /// process's completion time includes trailing computation).
+    pub tail_delays: Vec<u64>,
+    /// Kernel arguments the trace was collected under (traces with
+    /// data-dependent control flow are argument-specific — §IV-D).
+    pub args: Vec<i64>,
+}
+
+impl Trace {
+    /// Total FIFO operations across all processes.
+    pub fn total_ops(&self) -> usize {
+        self.ops.iter().map(|o| o.len()).sum()
+    }
+
+    /// Number of channels.
+    pub fn num_fifos(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Per-channel DSE upper bounds `u_i`: the designer-declared depth if
+    /// present, otherwise the observed write count (both floored at 2).
+    pub fn upper_bounds(&self) -> Vec<u32> {
+        self.channels
+            .iter()
+            .map(|c| {
+                let u = c
+                    .depth_hint
+                    .map(u64::from)
+                    .unwrap_or(c.writes)
+                    .min(u32::MAX as u64) as u32;
+                u.max(2)
+            })
+            .collect()
+    }
+
+    /// The Baseline-Max configuration (paper §IV-A): every FIFO at its
+    /// upper bound — fully buffers all traffic, deadlock-free by
+    /// construction.
+    pub fn baseline_max(&self) -> Vec<u32> {
+        self.upper_bounds()
+    }
+
+    /// The Baseline-Min configuration: every FIFO at depth 2 (the Vitis
+    /// default and the smallest practical size).
+    pub fn baseline_min(&self) -> Vec<u32> {
+        vec![2; self.channels.len()]
+    }
+
+    /// Group structure (channel indices per stream array / singleton).
+    pub fn groups(&self) -> Vec<Vec<usize>> {
+        let mut order: Vec<&str> = Vec::new();
+        let mut map: std::collections::HashMap<&str, Vec<usize>> =
+            std::collections::HashMap::new();
+        let mut singles = Vec::new();
+        for (id, ch) in self.channels.iter().enumerate() {
+            match ch.group.as_deref() {
+                Some(g) => {
+                    if !map.contains_key(g) {
+                        order.push(g);
+                    }
+                    map.entry(g).or_default().push(id);
+                }
+                None => singles.push(vec![id]),
+            }
+        }
+        let mut out: Vec<Vec<usize>> = order.into_iter().map(|g| map.remove(g).unwrap()).collect();
+        out.extend(singles);
+        out.sort_by_key(|ids| ids[0]);
+        out
+    }
+}
+
+/// Trace collection failure.
+#[derive(Debug, Error)]
+pub enum TraceError {
+    /// The design deadlocks even with unbounded FIFOs: some process reads
+    /// a value that is never written. This is a design bug independent of
+    /// FIFO sizing.
+    #[error("KPN deadlock during trace collection: processes {stuck:?} blocked reading channels {channels:?}")]
+    KpnDeadlock {
+        stuck: Vec<String>,
+        channels: Vec<String>,
+    },
+    /// Two processes write (or read) the same channel; HLS streams are
+    /// single-producer single-consumer.
+    #[error("channel '{chan}' has multiple {role}s (processes '{first}' and '{second}')")]
+    NotSpsc {
+        chan: String,
+        role: &'static str,
+        first: String,
+        second: String,
+    },
+    /// Trace exceeded the op budget (runaway loop protection).
+    #[error("trace exceeded {limit} FIFO operations; runaway design?")]
+    TooLong { limit: usize },
+}
+
+/// Collect the execution trace of `design` for kernel arguments `args`.
+///
+/// Runs all processes concurrently (round-robin with wake-on-write) under
+/// unbounded-FIFO semantics.
+pub fn collect_trace(design: &Design, args: &[i64]) -> Result<Trace, TraceError> {
+    collect_trace_bounded(design, args, 100_000_000)
+}
+
+/// [`collect_trace`] with an explicit op budget.
+pub fn collect_trace_bounded(
+    design: &Design,
+    args: &[i64],
+    max_ops: usize,
+) -> Result<Trace, TraceError> {
+    assert_eq!(
+        args.len(),
+        design.num_args,
+        "design '{}' expects {} args, got {}",
+        design.name,
+        design.num_args,
+        args.len()
+    );
+
+    let nch = design.channels.len();
+    let mut queues: Vec<VecDeque<i64>> = vec![VecDeque::new(); nch];
+    let mut writes = vec![0u64; nch];
+    let mut reads = vec![0u64; nch];
+    let mut writer_of: Vec<Option<usize>> = vec![None; nch];
+    let mut reader_of: Vec<Option<usize>> = vec![None; nch];
+    let mut ops: Vec<Vec<TraceOp>> = vec![Vec::new(); design.processes.len()];
+    let mut total_ops = 0usize;
+
+    let mut states: Vec<ProcState> = design
+        .processes
+        .iter()
+        .map(|p| ProcState::new(p.num_vars, &p.body))
+        .collect();
+
+    // Ready list + per-channel wait list (procs blocked reading it).
+    let mut ready: VecDeque<usize> = (0..states.len()).collect();
+    let mut in_ready: Vec<bool> = vec![true; states.len()];
+    let mut waiting: Vec<Vec<usize>> = vec![Vec::new(); nch];
+
+    while let Some(pid) = ready.pop_front() {
+        in_ready[pid] = false;
+        let proc = &design.processes[pid];
+
+        loop {
+            match states[pid].step(&proc.body, args) {
+                StepOut::Write(ch, value) => {
+                    match writer_of[ch] {
+                        None => writer_of[ch] = Some(pid),
+                        Some(p) if p == pid => {}
+                        Some(p) => {
+                            return Err(TraceError::NotSpsc {
+                                chan: design.channels[ch].name.clone(),
+                                role: "writer",
+                                first: design.processes[p].name.clone(),
+                                second: proc.name.clone(),
+                            })
+                        }
+                    }
+                    queues[ch].push_back(value);
+                    writes[ch] += 1;
+                    let delay = states[pid].take_delay();
+                    ops[pid].push(TraceOp::write(ch, delay));
+                    total_ops += 1;
+                    if total_ops > max_ops {
+                        return Err(TraceError::TooLong { limit: max_ops });
+                    }
+                    // Wake readers blocked on this channel.
+                    for w in waiting[ch].drain(..) {
+                        if !in_ready[w] {
+                            in_ready[w] = true;
+                            ready.push_back(w);
+                        }
+                    }
+                }
+                StepOut::TryRead(ch, var) => {
+                    match reader_of[ch] {
+                        None => reader_of[ch] = Some(pid),
+                        Some(p) if p == pid => {}
+                        Some(p) => {
+                            return Err(TraceError::NotSpsc {
+                                chan: design.channels[ch].name.clone(),
+                                role: "reader",
+                                first: design.processes[p].name.clone(),
+                                second: proc.name.clone(),
+                            })
+                        }
+                    }
+                    if let Some(v) = queues[ch].pop_front() {
+                        states[pid].complete_read(var, v);
+                        reads[ch] += 1;
+                        let delay = states[pid].take_delay();
+                        ops[pid].push(TraceOp::read(ch, delay));
+                        total_ops += 1;
+                        if total_ops > max_ops {
+                            return Err(TraceError::TooLong { limit: max_ops });
+                        }
+                    } else {
+                        // Block: park on the channel, yield.
+                        waiting[ch].push(pid);
+                        break;
+                    }
+                }
+                StepOut::Done => break,
+            }
+        }
+    }
+
+    // All ready work drained: either everything finished or we have a KPN
+    // deadlock (readers starved forever).
+    let stuck: Vec<usize> = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.is_done())
+        .map(|(i, _)| i)
+        .collect();
+    if !stuck.is_empty() {
+        let mut chans: Vec<String> = Vec::new();
+        for (ch, ws) in waiting.iter().enumerate() {
+            if !ws.is_empty() {
+                chans.push(design.channels[ch].name.clone());
+            }
+        }
+        return Err(TraceError::KpnDeadlock {
+            stuck: stuck
+                .into_iter()
+                .map(|i| design.processes[i].name.clone())
+                .collect(),
+            channels: chans,
+        });
+    }
+
+    let channels = design
+        .channels
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ChanInfo {
+            name: c.name.clone(),
+            width_bits: c.width_bits,
+            group: c.group.clone(),
+            depth_hint: c.depth_hint,
+            writes: writes[i],
+            reads: reads[i],
+        })
+        .collect();
+
+    let tail_delays = states.iter().map(|s| s.pending_delay).collect();
+
+    Ok(Trace {
+        design_name: design.name.clone(),
+        channels,
+        process_names: design.processes.iter().map(|p| p.name.clone()).collect(),
+        ops,
+        tail_delays,
+        args: args.to_vec(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Resumable VM interpreter
+// ---------------------------------------------------------------------------
+
+/// One level of the VM control stack.
+#[derive(Debug)]
+enum Frame {
+    /// Straight-line block (process body or If arm): list index into the
+    /// process body tree is re-resolved from the path each step; instead we
+    /// store raw pointers via indices — see `FrameRef`.
+    Block { pc: usize },
+    Loop {
+        pc: usize,
+        var: usize,
+        current: i64,
+        remaining: i64,
+    },
+}
+
+/// Because `Instr` trees are nested, frames record *which* instruction
+/// list they execute via a lightweight path: the root body plus, per
+/// frame, the child selector used to descend. We resolve the instruction
+/// list on each access (cheap: bodies are shallow).
+#[derive(Debug, Clone, Copy)]
+enum Descend {
+    LoopBody(usize),
+    ThenBody(usize),
+    ElseBody(usize),
+}
+
+struct ProcState {
+    vars: Vec<i64>,
+    frames: Vec<Frame>,
+    path: Vec<Descend>,
+    pending_delay: u64,
+    pending_read: Option<(usize, usize)>, // (chan, var) of an issued-but-unfilled read
+    done: bool,
+}
+
+enum StepOut {
+    Write(usize, i64),
+    TryRead(usize, usize),
+    Done,
+}
+
+impl ProcState {
+    fn new(num_vars: usize, _body: &[Instr]) -> ProcState {
+        ProcState {
+            vars: vec![0; num_vars],
+            frames: vec![Frame::Block { pc: 0 }],
+            path: Vec::new(),
+            pending_delay: 0,
+            pending_read: None,
+            done: false,
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn take_delay(&mut self) -> u32 {
+        let d = self.pending_delay.min(u32::MAX as u64) as u32;
+        self.pending_delay = 0;
+        d
+    }
+
+    fn complete_read(&mut self, var: usize, value: i64) {
+        self.vars[var] = value;
+        debug_assert!(self.pending_read.is_some());
+        self.pending_read = None;
+        // Advance past the Read instruction.
+        self.advance_pc();
+    }
+
+    fn advance_pc(&mut self) {
+        match self.frames.last_mut().unwrap() {
+            Frame::Block { pc } | Frame::Loop { pc, .. } => *pc += 1,
+        }
+    }
+
+    /// Resolve the instruction list the top frame is executing.
+    fn current_body<'a>(&self, root: &'a [Instr]) -> &'a [Instr] {
+        let mut body = root;
+        for d in &self.path {
+            body = match (*d, body) {
+                (Descend::LoopBody(i), b) => match &b[i] {
+                    Instr::For { body, .. } => body,
+                    _ => unreachable!("path desync"),
+                },
+                (Descend::ThenBody(i), b) => match &b[i] {
+                    Instr::If { then_body, .. } => then_body,
+                    _ => unreachable!("path desync"),
+                },
+                (Descend::ElseBody(i), b) => match &b[i] {
+                    Instr::If { else_body, .. } => else_body,
+                    _ => unreachable!("path desync"),
+                },
+            };
+        }
+        body
+    }
+
+    /// Run until the next FIFO side effect (or completion). Pure
+    /// instructions (Set/Delay/For/If bookkeeping) are consumed inline.
+    fn step(&mut self, root: &[Instr], args: &[i64]) -> StepOut {
+        if self.done {
+            return StepOut::Done;
+        }
+        loop {
+            // If a read was issued and is still pending, re-issue it (the
+            // scheduler calls us again once data might be available).
+            if let Some((ch, var)) = self.pending_read {
+                return StepOut::TryRead(ch, var);
+            }
+
+            let body = self.current_body(root);
+            let frame = self.frames.last_mut().unwrap();
+            let pc = match frame {
+                Frame::Block { pc } | Frame::Loop { pc, .. } => *pc,
+            };
+
+            if pc >= body.len() {
+                // Block finished: iterate the loop or pop the frame. The
+                // loop bookkeeping is done in a narrow scope so the frame
+                // borrow is released before touching `self.vars`.
+                let loop_update = match frame {
+                    Frame::Loop {
+                        pc,
+                        var,
+                        current,
+                        remaining,
+                    } => {
+                        *remaining -= 1;
+                        *current += 1;
+                        let continues = *remaining > 0;
+                        if continues {
+                            *pc = 0;
+                        }
+                        Some((*var, *current, continues))
+                    }
+                    Frame::Block { .. } => None,
+                };
+                let pop = match loop_update {
+                    Some((var, cur, continues)) => {
+                        self.vars[var] = cur;
+                        !continues
+                    }
+                    None => true,
+                };
+                if pop {
+                    self.frames.pop();
+                    self.path.pop();
+                    if self.frames.is_empty() {
+                        self.done = true;
+                        return StepOut::Done;
+                    }
+                    self.advance_pc();
+                }
+                continue;
+            }
+
+            match &body[pc] {
+                Instr::Set(var, e) => {
+                    self.vars[*var] = e.eval(args, &self.vars);
+                    self.advance_pc();
+                }
+                Instr::Delay(e) => {
+                    let d = e.eval(args, &self.vars).max(0) as u64;
+                    self.pending_delay += d;
+                    self.advance_pc();
+                }
+                Instr::Write(ch, e) => {
+                    let v = e.eval(args, &self.vars);
+                    let ch = *ch;
+                    self.advance_pc();
+                    return StepOut::Write(ch, v);
+                }
+                Instr::Read(ch, var) => {
+                    // Do NOT advance pc: completion does (or we stay blocked).
+                    self.pending_read = Some((*ch, *var));
+                    return StepOut::TryRead(*ch, *var);
+                }
+                Instr::For {
+                    var,
+                    start,
+                    count,
+                    body: _,
+                } => {
+                    let n = count.eval(args, &self.vars);
+                    let s = start.eval(args, &self.vars);
+                    if n > 0 {
+                        self.vars[*var] = s;
+                        let var = *var;
+                        self.path.push(Descend::LoopBody(pc));
+                        self.frames.push(Frame::Loop {
+                            pc: 0,
+                            var,
+                            current: s,
+                            remaining: n,
+                        });
+                    } else {
+                        self.advance_pc();
+                    }
+                }
+                Instr::If { cond, .. } => {
+                    let taken = cond.eval(args, &self.vars) != 0;
+                    self.path.push(if taken {
+                        Descend::ThenBody(pc)
+                    } else {
+                        Descend::ElseBody(pc)
+                    });
+                    self.frames.push(Frame::Block { pc: 0 });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DesignBuilder, Expr};
+
+    /// The paper's Fig. 2 design: producer writes n to x then n to y;
+    /// consumer alternates x/y reads.
+    fn fig2_design() -> Design {
+        let mut b = DesignBuilder::new("mult_by_2", 1);
+        let x = b.channel("x", 32);
+        let y = b.channel("y", 32);
+        b.process("producer", |p| {
+            p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+            p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+        });
+        b.process("consumer", |p| {
+            let sum = p.var();
+            p.set(sum, Expr::c(0));
+            p.for_expr(Expr::arg(0), |p, _| {
+                let a = p.read(x);
+                let bb = p.read(y);
+                p.set(sum, Expr::var(sum).add(Expr::var(a)).add(Expr::var(bb)));
+            });
+        });
+        b.build()
+    }
+
+    #[test]
+    fn fig2_trace_counts_scale_with_n() {
+        for n in [1i64, 4, 16] {
+            let t = collect_trace(&fig2_design(), &[n]).unwrap();
+            assert_eq!(t.channels[0].writes, n as u64);
+            assert_eq!(t.channels[0].reads, n as u64);
+            assert_eq!(t.channels[1].writes, n as u64);
+            assert_eq!(t.total_ops(), 4 * n as usize);
+            // producer ops: n writes to x then n to y, interleaving preserved
+            let prod = &t.ops[0];
+            assert!(prod[..n as usize].iter().all(|o| o.is_write() && o.chan() == 0));
+            assert!(prod[n as usize..].iter().all(|o| o.is_write() && o.chan() == 1));
+            // consumer alternates x,y
+            let cons = &t.ops[1];
+            for (i, op) in cons.iter().enumerate() {
+                assert!(!op.is_write());
+                assert_eq!(op.chan(), i % 2);
+            }
+        }
+    }
+
+    #[test]
+    fn data_dependent_loop_bounds_from_stream_values() {
+        // producer sends a count; consumer reads that many more values —
+        // control flow not knowable statically (§II-A).
+        let mut b = DesignBuilder::new("ddcf", 1);
+        let c = b.channel("c", 32);
+        let d = b.channel("d", 32);
+        b.process("prod", |p| {
+            p.write(c, Expr::arg(0));
+            p.for_expr(Expr::arg(0), |p, i| p.write(d, Expr::var(i)));
+        });
+        b.process("cons", |p| {
+            let n = p.read(c);
+            p.for_expr(Expr::var(n), |p, _| {
+                let _ = p.read(d);
+            });
+        });
+        let design = b.build();
+        let t5 = collect_trace(&design, &[5]).unwrap();
+        assert_eq!(t5.channels[1].reads, 5);
+        let t9 = collect_trace(&design, &[9]).unwrap();
+        assert_eq!(t9.channels[1].reads, 9);
+    }
+
+    #[test]
+    fn delays_accumulate_onto_next_op() {
+        let mut b = DesignBuilder::new("dly", 0);
+        let c = b.channel("c", 32);
+        b.process("p", |p| {
+            p.delay(10);
+            p.delay(5);
+            p.write(c, Expr::c(0));
+            p.write(c, Expr::c(0));
+        });
+        b.process("q", |p| {
+            let _ = p.read(c);
+            let _ = p.read(c);
+        });
+        let t = collect_trace(&b.build(), &[]).unwrap();
+        assert_eq!(t.ops[0][0].delay, 15);
+        assert_eq!(t.ops[0][1].delay, 0);
+    }
+
+    #[test]
+    fn kpn_deadlock_detected() {
+        // consumer reads more than producer writes
+        let mut b = DesignBuilder::new("starved", 0);
+        let c = b.channel("c", 32);
+        b.process("prod", |p| p.write(c, Expr::c(1)));
+        b.process("cons", |p| {
+            let _ = p.read(c);
+            let _ = p.read(c);
+        });
+        match collect_trace(&b.build(), &[]) {
+            Err(TraceError::KpnDeadlock { stuck, channels }) => {
+                assert_eq!(stuck, vec!["cons".to_string()]);
+                assert_eq!(channels, vec!["c".to_string()]);
+            }
+            other => panic!("expected KPN deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spsc_violation_detected() {
+        let mut b = DesignBuilder::new("mpsc", 0);
+        let c = b.channel("c", 32);
+        b.process("w1", |p| p.write(c, Expr::c(1)));
+        b.process("w2", |p| p.write(c, Expr::c(2)));
+        b.process("r", |p| {
+            let _ = p.read(c);
+            let _ = p.read(c);
+        });
+        match collect_trace(&b.build(), &[]) {
+            Err(TraceError::NotSpsc { role, .. }) => assert_eq!(role, "writer"),
+            other => panic!("expected SPSC violation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn op_budget_enforced() {
+        let mut b = DesignBuilder::new("big", 0);
+        let c = b.channel("c", 32);
+        b.process("p", |p| {
+            p.for_n(1000, |p, _| p.write(c, Expr::c(0)));
+        });
+        b.process("q", |p| {
+            p.for_n(1000, |p, _| {
+                let _ = p.read(c);
+            });
+        });
+        match collect_trace_bounded(&b.build(), &[], 100) {
+            Err(TraceError::TooLong { limit }) => assert_eq!(limit, 100),
+            other => panic!("expected TooLong, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn if_branches_affect_trace() {
+        let mut b = DesignBuilder::new("br", 1);
+        let c = b.channel("c", 32);
+        b.process("p", |p| {
+            p.if_(
+                Expr::arg(0).lt(Expr::c(0)),
+                |p| p.write(c, Expr::c(1)),
+                |p| {
+                    p.write(c, Expr::c(2));
+                    p.write(c, Expr::c(3));
+                },
+            );
+        });
+        b.process("q", |p| {
+            let n = p.var();
+            p.set(n, Expr::arg(0).lt(Expr::c(0)));
+            p.if_(
+                Expr::var(n),
+                |p| {
+                    let _ = p.read(c);
+                },
+                |p| {
+                    let _ = p.read(c);
+                    let _ = p.read(c);
+                },
+            );
+        });
+        let d = b.build();
+        assert_eq!(collect_trace(&d, &[-1]).unwrap().channels[0].writes, 1);
+        assert_eq!(collect_trace(&d, &[1]).unwrap().channels[0].writes, 2);
+    }
+
+    #[test]
+    fn upper_bounds_respect_hints_and_writes() {
+        let mut b = DesignBuilder::new("ub", 0);
+        let c = b.channel("c", 32); // no hint: bound = writes
+        let d = b.channel_with_depth("d", 32, 64); // hint wins
+        b.process("p", |p| {
+            p.for_n(10, |p, _| p.write(c, Expr::c(0)));
+            p.write(d, Expr::c(0));
+        });
+        b.process("q", |p| {
+            p.for_n(10, |p, _| {
+                let _ = p.read(c);
+            });
+            let _ = p.read(d);
+        });
+        let t = collect_trace(&b.build(), &[]).unwrap();
+        assert_eq!(t.upper_bounds(), vec![10, 64]);
+        assert_eq!(t.baseline_min(), vec![2, 2]);
+    }
+
+    #[test]
+    fn groups_from_trace() {
+        let mut b = DesignBuilder::new("grp", 0);
+        let s = b.channel("s", 32);
+        let arr = b.channel_array("a", 2, 32);
+        b.process("p", |p| {
+            p.write(s, Expr::c(0));
+            for &c in &arr {
+                p.write(c, Expr::c(0));
+            }
+        });
+        b.process("q", |p| {
+            let _ = p.read(s);
+            for &c in &arr {
+                let _ = p.read(c);
+            }
+        });
+        let t = collect_trace(&b.build(), &[]).unwrap();
+        assert_eq!(t.groups(), vec![vec![0], vec![1, 2]]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Trace (de)serialization: save a collected trace to JSON and reload it
+//! later, so expensive software executions (the LightningSim phase-1
+//! pass) are cached across tool invocations — and so traces can be
+//! produced by external frontends.
+
+use super::{ChanInfo, Trace, TraceOp};
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// Serialize a trace to a JSON value.
+pub fn trace_to_json(t: &Trace) -> Json {
+    let channels = t
+        .channels
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("name", Json::Str(c.name.clone())),
+                ("width_bits", Json::Num(c.width_bits as f64)),
+                (
+                    "group",
+                    c.group
+                        .as_ref()
+                        .map(|g| Json::Str(g.clone()))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "depth_hint",
+                    c.depth_hint
+                        .map(|d| Json::Num(d as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                ("writes", Json::Num(c.writes as f64)),
+                ("reads", Json::Num(c.reads as f64)),
+            ])
+        })
+        .collect();
+    // Ops are flattened per process as [delay, signed_chan] pairs where
+    // writes are encoded as (chan + 1) and reads as -(chan + 1).
+    let ops = t
+        .ops
+        .iter()
+        .map(|po| {
+            let mut flat = Vec::with_capacity(po.len() * 2);
+            for op in po {
+                flat.push(Json::Num(op.delay as f64));
+                let code = (op.chan() as i64 + 1) * if op.is_write() { 1 } else { -1 };
+                flat.push(Json::Num(code as f64));
+            }
+            Json::Arr(flat)
+        })
+        .collect();
+    Json::obj(vec![
+        ("design_name", Json::Str(t.design_name.clone())),
+        ("channels", Json::Arr(channels)),
+        (
+            "process_names",
+            Json::Arr(t.process_names.iter().map(|n| Json::Str(n.clone())).collect()),
+        ),
+        ("ops", Json::Arr(ops)),
+        (
+            "tail_delays",
+            Json::Arr(t.tail_delays.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        (
+            "args",
+            Json::Arr(t.args.iter().map(|&a| Json::Num(a as f64)).collect()),
+        ),
+    ])
+}
+
+/// Deserialize a trace from JSON.
+pub fn trace_from_json(j: &Json) -> Result<Trace> {
+    let get = |k: &str| j.get(k).ok_or_else(|| anyhow!("trace json: missing '{k}'"));
+    let design_name = get("design_name")?
+        .as_str()
+        .ok_or_else(|| anyhow!("design_name not a string"))?
+        .to_string();
+    let channels = get("channels")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("channels not an array"))?
+        .iter()
+        .map(|c| -> Result<ChanInfo> {
+            Ok(ChanInfo {
+                name: c
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("channel name"))?
+                    .to_string(),
+                width_bits: c
+                    .get("width_bits")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("width_bits"))? as u32,
+                group: c.get("group").and_then(|v| v.as_str()).map(str::to_string),
+                depth_hint: c.get("depth_hint").and_then(|v| v.as_u64()).map(|d| d as u32),
+                writes: c
+                    .get("writes")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("writes"))?,
+                reads: c
+                    .get("reads")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("reads"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let process_names = get("process_names")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("process_names"))?
+        .iter()
+        .map(|n| {
+            n.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("process name"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let nch = channels.len();
+    let ops = get("ops")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("ops"))?
+        .iter()
+        .map(|po| -> Result<Vec<TraceOp>> {
+            let flat = po.as_arr().ok_or_else(|| anyhow!("process ops"))?;
+            if flat.len() % 2 != 0 {
+                return Err(anyhow!("odd op stream length"));
+            }
+            flat.chunks(2)
+                .map(|pair| -> Result<TraceOp> {
+                    let delay = pair[0]
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("op delay"))? as u32;
+                    let code = pair[1]
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("op code"))? as i64;
+                    if code == 0 || code.unsigned_abs() as usize > nch {
+                        return Err(anyhow!("op code {code} out of range"));
+                    }
+                    let chan = (code.unsigned_abs() - 1) as usize;
+                    Ok(if code > 0 {
+                        TraceOp::write(chan, delay)
+                    } else {
+                        TraceOp::read(chan, delay)
+                    })
+                })
+                .collect()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let tail_delays = get("tail_delays")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("tail_delays"))?
+        .iter()
+        .map(|d| d.as_u64().ok_or_else(|| anyhow!("tail delay")))
+        .collect::<Result<Vec<_>>>()?;
+    let args = get("args")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("args"))?
+        .iter()
+        .map(|a| {
+            a.as_f64()
+                .map(|v| v as i64)
+                .ok_or_else(|| anyhow!("arg value"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if ops.len() != process_names.len() || tail_delays.len() != process_names.len() {
+        return Err(anyhow!("process arity mismatch"));
+    }
+    Ok(Trace {
+        design_name,
+        channels,
+        process_names,
+        ops,
+        tail_delays,
+        args,
+    })
+}
+
+/// Save a trace to a file.
+pub fn save(t: &Trace, path: &str) -> Result<()> {
+    crate::report::write_file(path, &trace_to_json(t).to_string_compact())
+        .with_context(|| format!("writing {path}"))
+}
+
+/// Load a trace from a file.
+pub fn load(path: &str) -> Result<Trace> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = Json::parse(&text).context("parsing trace json")?;
+    trace_from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip_preserves_simulation() {
+        for name in ["fig2", "gesummv", "flowgnn_pna"] {
+            let bd = bench_suite::build(name);
+            let t = collect_trace(&bd.design, &bd.args).unwrap();
+            let j = trace_to_json(&t);
+            let t2 = trace_from_json(&Json::parse(&j.to_string_compact()).unwrap()).unwrap();
+            assert_eq!(t.total_ops(), t2.total_ops(), "{name}");
+            assert_eq!(t.args, t2.args);
+            let cfg = t.baseline_max();
+            let l1 = FastSim::new(Arc::new(t)).simulate(&cfg).latency();
+            let l2 = FastSim::new(Arc::new(t2)).simulate(&cfg).latency();
+            assert_eq!(l1, l2, "{name}");
+        }
+    }
+
+    #[test]
+    fn corrupt_inputs_rejected() {
+        assert!(trace_from_json(&Json::Null).is_err());
+        let j = Json::obj(vec![("design_name", Json::Str("x".into()))]);
+        assert!(trace_from_json(&j).is_err());
+        // Op code out of range.
+        let bd = bench_suite::build("fig2");
+        let t = collect_trace(&bd.design, &bd.args).unwrap();
+        let mut text = trace_to_json(&t).to_string_compact();
+        text = text.replace("\"ops\":[[0,1", "\"ops\":[[0,99");
+        let j = Json::parse(&text).unwrap();
+        assert!(trace_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let bd = bench_suite::build("fig2");
+        let t = collect_trace(&bd.design, &bd.args).unwrap();
+        let path = "/tmp/fifoadvisor_trace_test.json";
+        save(&t, path).unwrap();
+        let t2 = load(path).unwrap();
+        assert_eq!(t.total_ops(), t2.total_ops());
+        std::fs::remove_file(path).ok();
+    }
+}

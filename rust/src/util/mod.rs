@@ -1,0 +1,11 @@
+//! Small self-contained utilities: PRNG, statistics, JSON, property-test
+//! driver. The offline crate mirror ships neither `rand`, `serde`, nor
+//! `proptest`, so these are hand-rolled (and unit-tested) here.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

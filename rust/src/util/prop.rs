@@ -1,0 +1,87 @@
+//! A miniature property-test driver (the offline mirror lacks `proptest`).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! [`Rng`]s and reports the first failing seed so failures are
+//! reproducible with `check_seed`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. Each case gets a deterministic,
+/// per-case-seeded RNG. `f` returns `Err(msg)` to fail the property.
+///
+/// Panics with the failing seed on the first failure.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xF1F0_AD71_0000_0000 ^ case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::prop::check_seed({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn check_seed<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    f(&mut rng).expect("property failed on explicit seed");
+}
+
+/// Assert-style helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |rng| {
+            count += 1;
+            let v = rng.below(10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn check_seed_reproduces_stream() {
+        let mut first = None;
+        check_seed(0x1234, |rng| {
+            first = Some(rng.next_u64());
+            Ok(())
+        });
+        let mut second = None;
+        check_seed(0x1234, |rng| {
+            second = Some(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,160 @@
+//! Statistics helpers used by the experiment harnesses: geometric means
+//! (the paper reports geomean latency ratios and speedups), percentiles,
+//! and simple summaries.
+
+/// Geometric mean of strictly-positive values. Returns `None` for an empty
+/// slice or any non-positive value.
+pub fn geomean(values: &[f64]) -> Option<f64> {
+    if values.is_empty() || values.iter().any(|&v| v <= 0.0 || !v.is_finite()) {
+        return None;
+    }
+    let log_sum: f64 = values.iter().map(|v| v.ln()).sum();
+    Some((log_sum / values.len() as f64).exp())
+}
+
+/// Arithmetic mean. Returns `None` for an empty slice.
+pub fn mean(values: &[f64]) -> Option<f64> {
+    if values.is_empty() {
+        return None;
+    }
+    Some(values.iter().sum::<f64>() / values.len() as f64)
+}
+
+/// Sample standard deviation (n-1 denominator). `None` for n < 2.
+pub fn stddev(values: &[f64]) -> Option<f64> {
+    if values.len() < 2 {
+        return None;
+    }
+    let m = mean(values)?;
+    let var = values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (values.len() - 1) as f64;
+    Some(var.sqrt())
+}
+
+/// Percentile by linear interpolation on the sorted data, `p` in `[0, 100]`.
+pub fn percentile(values: &[f64], p: f64) -> Option<f64> {
+    if values.is_empty() || !(0.0..=100.0).contains(&p) {
+        return None;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    Some(sorted[lo] * (1.0 - frac) + sorted[hi] * frac)
+}
+
+/// Median (50th percentile).
+pub fn median(values: &[f64]) -> Option<f64> {
+    percentile(values, 50.0)
+}
+
+/// Compact summary of a sample, used by the bench harness.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize a nonempty sample. Panics on empty input.
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "Summary::of on empty sample");
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: values.len(),
+            mean: mean(values).unwrap(),
+            stddev: stddev(values).unwrap_or(0.0),
+            min: sorted[0],
+            median: median(values).unwrap(),
+            p95: percentile(values, 95.0).unwrap(),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if secs < 2.0 * 86400.0 {
+        format!("{:.1} h", secs / 3600.0)
+    } else {
+        format!("{:.2} days", secs / 86400.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert_eq!(geomean(&[]), None);
+        assert_eq!(geomean(&[2.0, 0.0]), None);
+        let g = geomean(&[1.0, 4.0]).unwrap();
+        assert!((g - 2.0).abs() < 1e-12);
+        let g = geomean(&[2.0, 2.0, 2.0]).unwrap();
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_ratios_matches_paper_style() {
+        // speedup geomean like Table III: 10^6.53 etc.
+        let speedups = [1e6, 1e7, 3.2e6];
+        let g = geomean(&speedups).unwrap();
+        assert!(g >= 1e6 && g <= 1e7);
+    }
+
+    #[test]
+    fn mean_stddev() {
+        assert_eq!(mean(&[]), None);
+        assert_eq!(mean(&[1.0, 3.0]), Some(2.0));
+        assert_eq!(stddev(&[1.0]), None);
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]).unwrap();
+        assert!((s - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), Some(1.0));
+        assert_eq!(percentile(&v, 100.0), Some(4.0));
+        assert_eq!(median(&v), Some(2.5));
+        assert_eq!(percentile(&v, 101.0), None);
+    }
+
+    #[test]
+    fn summary_fields_consistent() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.5e-9 * 2.0), "1.0 ns");
+        assert!(fmt_duration(2.5e-6).contains("µs"));
+        assert!(fmt_duration(1.5e-3).contains("ms"));
+        assert!(fmt_duration(3.0).contains("s"));
+        assert!(fmt_duration(300.0).contains("min"));
+        assert!(fmt_duration(3.0 * 86400.0).contains("days"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Property-based invariants of the FIFO-sizing problem and its
+//! optimizers (the system-level guarantees the paper's method relies on).
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::bram;
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::pareto::dominates;
+use fifoadvisor::opt::{self, Optimizer, Space};
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::SimOptions;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::prop;
+use std::sync::Arc;
+
+fn small_designs() -> Vec<&'static str> {
+    vec!["fig2", "bicg", "gesummv", "flowgnn_pna", "k7mmseq_balanced"]
+}
+
+/// Growing any FIFO (under uniform read latency) never increases latency
+/// and never introduces a deadlock — the fundamental monotonicity the
+/// Vitis deadlock hunter and greedy reduction both exploit.
+#[test]
+fn property_latency_monotone_under_uniform_read_latency() {
+    prop::check("latency monotone in depths", 40, |rng| {
+        let name = *rng.choose(&small_designs());
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).map_err(|e| e.to_string())?);
+        let mut sim = FastSim::with_options(
+            t.clone(),
+            SimOptions {
+                uniform_read_latency: true,
+            },
+        );
+        let ub = t.upper_bounds();
+        let smaller: Vec<u32> = ub.iter().map(|&u| rng.range_u32(2, u.max(2))).collect();
+        let mut bigger = smaller.clone();
+        for (d, &u) in bigger.iter_mut().zip(&ub) {
+            if rng.chance(0.6) {
+                *d = rng.range_u32(*d, u.max(2).max(*d));
+            }
+        }
+        let ls = sim.simulate(&smaller).latency();
+        let lb = sim.simulate(&bigger).latency();
+        match (ls, lb) {
+            (Some(ls), Some(lb)) => {
+                if lb > ls {
+                    return Err(format!(
+                        "{name}: bigger config slower: {lb} > {ls}\n small {smaller:?}\n big {bigger:?}"
+                    ));
+                }
+            }
+            (Some(_), None) => {
+                return Err(format!("{name}: growing depths introduced deadlock"));
+            }
+            _ => {} // smaller deadlocked: no constraint
+        }
+        Ok(())
+    });
+}
+
+/// Baseline-Max is deadlock-free by construction on every suite design.
+#[test]
+fn property_baseline_max_feasible_everywhere() {
+    for name in bench_suite::all_names() {
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let mut sim = FastSim::new(t.clone());
+        assert!(
+            !sim.simulate(&t.baseline_max()).is_deadlock(),
+            "{name}: Baseline-Max deadlocked"
+        );
+    }
+}
+
+/// The BRAM model is monotone in depth; the pruned candidate sets contain
+/// the depth of maximal BRAM utilization for every achievable count.
+#[test]
+fn property_candidates_cover_all_bram_levels() {
+    prop::check("candidates cover bram levels", 60, |rng| {
+        let w = 1 + rng.below(128) as u32;
+        let u = 2 + rng.below(20_000) as u32;
+        let cands = bram::candidate_depths(w, u);
+        // Every BRAM level reachable in [2, u] appears among candidates,
+        // and each candidate is the largest depth of its level.
+        let mut seen = std::collections::HashSet::new();
+        for &c in &cands {
+            seen.insert(bram::bram_for_fifo(c, w));
+            if c < u {
+                let next = bram::bram_for_fifo(c + 1, w);
+                if bram::bram_for_fifo(c, w) >= next && c > 2 {
+                    return Err(format!("candidate {c} (w={w}) not a plateau end"));
+                }
+            }
+        }
+        for probe in [2u32, 3, u / 2, u.saturating_sub(1).max(2), u] {
+            if probe <= u && !seen.contains(&bram::bram_for_fifo(probe, w)) {
+                return Err(format!(
+                    "bram level of depth {probe} (w={w}, u={u}) unreachable from candidates"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every optimizer's reported front is internally non-dominated, and all
+/// of its feasible evaluations are covered by the front.
+#[test]
+fn property_fronts_are_sound() {
+    for opt_name in ["random", "grouped_random", "sa", "grouped_sa", "greedy"] {
+        for design in ["fig2", "gesummv", "flowgnn_pna"] {
+            let bd = bench_suite::build(design);
+            let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+            let space = Space::from_trace(&t);
+            let mut ev = Evaluator::new(t);
+            let mut o = opt::by_name(opt_name, 7).unwrap();
+            o.run(&mut ev, &space, 120);
+            let front = ev.pareto();
+            for a in &front {
+                for b in &front {
+                    let pa = (a.latency.unwrap(), a.bram);
+                    let pb = (b.latency.unwrap(), b.bram);
+                    assert!(
+                        !dominates(pa, pb) || pa == pb,
+                        "{opt_name}/{design}: dominated front member"
+                    );
+                }
+            }
+            for p in ev.history.iter().filter(|p| p.is_feasible()) {
+                let pp = (p.latency.unwrap(), p.bram);
+                assert!(
+                    front.iter().any(|m| {
+                        let pm = (m.latency.unwrap(), m.bram);
+                        pm == pp || dominates(pm, pp)
+                    }),
+                    "{opt_name}/{design}: history point not covered by front"
+                );
+            }
+        }
+    }
+}
+
+/// Fault injection: the evaluator must classify deadlocks consistently —
+/// a deadlocked configuration stays deadlocked on re-evaluation (memo or
+/// not), and never reports a latency.
+#[test]
+fn property_deadlock_classification_is_stable() {
+    prop::check("deadlock stability", 30, |rng| {
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).map_err(|e| e.to_string())?);
+        let mut ev = Evaluator::new(t.clone());
+        let ub = t.upper_bounds();
+        let cfg: Vec<u32> = ub.iter().map(|&u| rng.range_u32(2, u.max(2))).collect();
+        let (l1, b1) = ev.eval(&cfg);
+        ev.reset_run(true);
+        let (l2, b2) = ev.eval(&cfg);
+        if (l1, b1) != (l2, b2) {
+            return Err(format!("unstable evaluation: {l1:?}/{b1} vs {l2:?}/{b2}"));
+        }
+        Ok(())
+    });
+}
+
+/// Grouped optimizers only ever propose group-uniform configurations
+/// (modulo per-member bound clamping) — the structural constraint that
+/// makes them sample-efficient.
+#[test]
+fn property_grouped_configs_are_uniform() {
+    let bd = bench_suite::build("mvt");
+    let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let space = Space::from_trace(&t);
+    let mut ev = Evaluator::new(t);
+    opt::by_name("grouped_random", 3)
+        .unwrap()
+        .run(&mut ev, &space, 40);
+    opt::by_name("grouped_sa", 3)
+        .unwrap()
+        .run(&mut ev, &space, 40);
+    for p in &ev.history {
+        for ids in &space.groups {
+            let mx = ids.iter().map(|&i| p.depths[i]).max().unwrap();
+            for &i in ids {
+                assert!(p.depths[i] == mx || p.depths[i] == space.bounds[i].max(2));
+            }
+        }
+    }
+}
+
+/// Randomized cross-check of the whole evaluation pipeline against a
+/// from-scratch recomputation (fresh evaluator, fresh simulator).
+#[test]
+fn property_pipeline_reproducible() {
+    prop::check("pipeline reproducible", 10, |rng| {
+        let name = *rng.choose(&small_designs());
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).map_err(|e| e.to_string())?);
+        let space = Space::from_trace(&t);
+        let seed = rng.next_u64();
+        let run = |threads: usize| {
+            let mut ev = Evaluator::parallel(t.clone(), threads);
+            opt::random::RandomSearch::new(seed, false).run(&mut ev, &space, 64);
+            ev.history
+                .iter()
+                .map(|p| (p.depths.clone(), p.latency, p.bram))
+                .collect::<Vec<_>>()
+        };
+        if run(1) != run(4) {
+            return Err(format!("{name}: parallel run diverged from serial"));
+        }
+        Ok(())
+    });
+}

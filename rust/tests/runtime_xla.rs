@@ -1,0 +1,174 @@
+//! Integration tests for the PJRT runtime path: the AOT-compiled
+//! JAX/Pallas analytics module must agree exactly with the native Rust
+//! implementations (Algorithm 1 BRAM model, weighted objectives, Pareto
+//! dominance). Requires `make artifacts` to have run; tests panic with a
+//! clear message otherwise (the Makefile orders this correctly).
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::bram;
+use fifoadvisor::dse::Evaluator;
+use fifoadvisor::opt::pareto::{dominates, ObjPoint};
+use fifoadvisor::runtime::{BatchAnalytics, XlaBram};
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::Rng;
+use std::sync::Arc;
+
+fn analytics() -> BatchAnalytics {
+    BatchAnalytics::load_default()
+        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn xla_bram_matches_native_on_random_batches() {
+    let mut a = analytics();
+    let mut rng = Rng::new(42);
+    for &f in &[5usize, 64, 200, 848] {
+        let widths: Vec<u32> = (0..f).map(|_| rng.range_u32(1, 128)).collect();
+        let configs: Vec<Box<[u32]>> = (0..100)
+            .map(|_| {
+                (0..f)
+                    .map(|_| rng.range_u32(2, 20_000))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        let lats: Vec<Option<u64>> = (0..configs.len())
+            .map(|i| {
+                if i % 7 == 0 {
+                    None
+                } else {
+                    Some(rng.below(1_000_000))
+                }
+            })
+            .collect();
+        let betas: Vec<f64> = (0..a.betas)
+            .map(|i| i as f64 / (a.betas - 1) as f64)
+            .collect();
+        let out = a.evaluate(&configs, &widths, &lats, &betas).unwrap();
+        for (i, cfg) in configs.iter().enumerate() {
+            assert_eq!(
+                out.bram_totals[i],
+                bram::bram_total(cfg, &widths),
+                "bram mismatch at config {i} (f={f})"
+            );
+        }
+        // Weighted objectives match the native formula (f32 tolerance).
+        for (k, &beta) in betas.iter().enumerate() {
+            for (i, l) in lats.iter().enumerate() {
+                let native = match l {
+                    Some(l) => {
+                        fifoadvisor::opt::objective::weighted(beta, *l, out.bram_totals[i])
+                    }
+                    None => f64::INFINITY,
+                };
+                let xla = out.scores[k][i];
+                if native.is_finite() {
+                    let tol = native.abs().max(1.0) * 1e-4;
+                    assert!(
+                        (native - xla).abs() <= tol,
+                        "score mismatch k={k} i={i}: {native} vs {xla}"
+                    );
+                } else {
+                    assert!(!xla.is_finite() || xla > 1e30);
+                }
+            }
+        }
+        // Dominance mask matches the native definition.
+        let pts: Vec<Option<(u64, u32)>> = lats
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.map(|l| (l, out.bram_totals[i])))
+            .collect();
+        for (i, me) in pts.iter().enumerate() {
+            let native_dom = match me {
+                None => {
+                    // +inf rows: dominated iff any feasible point has
+                    // bram <= mine (its latency is strictly below +inf).
+                    pts.iter()
+                        .flatten()
+                        .any(|&(_, b)| b <= out.bram_totals[i])
+                }
+                Some(me) => pts.iter().flatten().any(|&q| dominates(q, *me)),
+            };
+            assert_eq!(out.dominated[i], native_dom, "dominance mismatch at {i}");
+        }
+    }
+}
+
+#[test]
+fn evaluator_with_xla_backend_matches_native_evaluator() {
+    let bd = bench_suite::build("gesummv");
+    let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let mut native = Evaluator::new(t.clone());
+    let mut xla = Evaluator::with_backend(t.clone(), Box::new(XlaBram::new(analytics())), 2);
+    assert_eq!(xla.backend_name(), "xla-pjrt");
+
+    let mut rng = Rng::new(9);
+    let ub = t.upper_bounds();
+    let configs: Vec<Box<[u32]>> = (0..50)
+        .map(|_| {
+            ub.iter()
+                .map(|&u| rng.range_u32(2, u.max(2)))
+                .collect::<Box<[u32]>>()
+        })
+        .collect();
+    assert_eq!(native.eval_batch(&configs), xla.eval_batch(&configs));
+}
+
+#[test]
+fn oversize_fifo_count_is_rejected() {
+    let mut a = analytics();
+    let max = a.max_fifos();
+    let widths = vec![32u32; max + 1];
+    let configs: Vec<Box<[u32]>> = vec![vec![2u32; max + 1].into()];
+    let betas: Vec<f64> = (0..a.betas).map(|i| i as f64).collect();
+    let err = a.evaluate(&configs, &widths, &[Some(1)], &betas);
+    assert!(err.is_err());
+}
+
+#[test]
+fn pareto_front_from_xla_mask_matches_sweep() {
+    // End-to-end: use the dominance mask to extract a front and compare
+    // with the native sweep implementation.
+    let mut a = analytics();
+    let mut rng = Rng::new(77);
+    let f = 10usize;
+    let widths: Vec<u32> = (0..f).map(|_| 32).collect();
+    let configs: Vec<Box<[u32]>> = (0..128)
+        .map(|_| {
+            (0..f)
+                .map(|_| rng.range_u32(2, 4096))
+                .collect::<Box<[u32]>>()
+        })
+        .collect();
+    let lats: Vec<Option<u64>> = (0..configs.len())
+        .map(|_| Some(rng.below(10_000)))
+        .collect();
+    let betas: Vec<f64> = (0..a.betas)
+        .map(|i| i as f64 / (a.betas - 1) as f64)
+        .collect();
+    let out = a.evaluate(&configs, &widths, &lats, &betas).unwrap();
+
+    let pts: Vec<ObjPoint> = lats
+        .iter()
+        .enumerate()
+        .map(|(i, l)| ObjPoint {
+            latency: l.unwrap(),
+            bram: out.bram_totals[i],
+            index: i,
+        })
+        .collect();
+    let front = fifoadvisor::opt::pareto::pareto_front(&pts);
+    for m in &front {
+        assert!(!out.dominated[m.index], "front member flagged dominated");
+    }
+    for (i, &d) in out.dominated.iter().enumerate() {
+        if !d {
+            assert!(
+                front
+                    .iter()
+                    .any(|m| m.latency == pts[i].latency && m.bram == pts[i].bram),
+                "undominated point {i} missing from front"
+            );
+        }
+    }
+}

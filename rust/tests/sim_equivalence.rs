@@ -1,0 +1,157 @@
+//! The strongest correctness signal in the repo: the fast event-driven
+//! simulator and the golden cycle-stepped simulator are structurally
+//! independent implementations of the same semantics — they must agree
+//! exactly (latency and deadlock verdicts) on every design in the suite
+//! and on randomized designs/configurations.
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::ir::{DesignBuilder, Expr};
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::golden::simulate_golden;
+use fifoadvisor::sim::SimOptions;
+use fifoadvisor::trace::{collect_trace, Trace};
+use fifoadvisor::util::{prop, Rng};
+use std::sync::Arc;
+
+fn random_config(rng: &mut Rng, trace: &Trace) -> Vec<u32> {
+    trace
+        .upper_bounds()
+        .iter()
+        .map(|&u| {
+            // Mix corner cases and interior points.
+            match rng.below(4) {
+                0 => 2,
+                1 => u.max(2),
+                _ => rng.range_u32(2, u.max(2)),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn suite_designs_agree_on_random_configs() {
+    // The largest designs are exercised once in the table2 bench; here we
+    // cover the smaller ones with multiple random configurations.
+    let names = [
+        "fig2",
+        "bicg",
+        "gesummv",
+        "mvt",
+        "flowgnn_pna",
+        "k7mmseq_balanced",
+        "k15mmseq_imbalanced",
+    ];
+    let mut rng = Rng::new(2024);
+    for name in names {
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let mut fast = FastSim::new(t.clone());
+        for trial in 0..8 {
+            let cfg = random_config(&mut rng, &t);
+            let f = fast.simulate(&cfg).latency();
+            let g = simulate_golden(&t, &cfg, SimOptions::default()).latency();
+            assert_eq!(f, g, "{name} trial {trial} cfg {cfg:?}");
+        }
+    }
+}
+
+/// Generate a random dataflow design: a random DAG of processes passing
+/// random token counts, with random delays — adversarial input for both
+/// simulators.
+fn random_design(rng: &mut Rng) -> (fifoadvisor::ir::Design, Vec<i64>) {
+    let n_stages = 2 + rng.index(4);
+    let mut b = DesignBuilder::new("rand", 0);
+    let mut prev: Option<(Vec<usize>, u64)> = None; // (chans, tokens)
+    for s in 0..n_stages {
+        let width = *rng.choose(&[8u32, 32, 64, 512]);
+        let fanout = 1 + rng.index(3);
+        let tokens = 1 + rng.below(24);
+        let chans: Vec<usize> = (0..fanout)
+            .map(|i| b.channel(&format!("c{s}_{i}"), width))
+            .collect();
+        let delay_in = rng.below(4) as u32;
+        let delay_out = rng.below(4) as u32;
+        match prev.clone() {
+            None => {
+                let cc = chans.clone();
+                b.process(&format!("src{s}"), move |p| {
+                    p.for_n(tokens, |p, _| {
+                        for &c in &cc {
+                            p.delay(delay_out);
+                            p.write(c, Expr::c(1));
+                        }
+                    });
+                });
+            }
+            Some((inputs, in_tokens)) => {
+                // A relay stage: reads all inputs, writes all outputs.
+                // Token counts must match: read in_tokens from each input,
+                // write `tokens` to each output.
+                let cc = chans.clone();
+                let ins = inputs.clone();
+                b.process(&format!("stage{s}"), move |p| {
+                    p.for_n(in_tokens, |p, _| {
+                        for &c in &ins {
+                            p.delay(delay_in);
+                            let _ = p.read(c);
+                        }
+                    });
+                    p.for_n(tokens, |p, _| {
+                        for &c in &cc {
+                            p.delay(delay_out);
+                            p.write(c, Expr::c(1));
+                        }
+                    });
+                });
+            }
+        }
+        prev = Some((chans, tokens));
+    }
+    // Final sink.
+    let (inputs, in_tokens) = prev.unwrap();
+    b.process("sink", move |p| {
+        p.for_n(in_tokens, |p, _| {
+            for &c in &inputs {
+                let _ = p.read(c);
+            }
+        });
+    });
+    (b.build(), vec![])
+}
+
+#[test]
+fn property_random_designs_agree() {
+    prop::check("fast == golden on random designs", 60, |rng| {
+        let (design, args) = random_design(rng);
+        let t = Arc::new(collect_trace(&design, &args).map_err(|e| e.to_string())?);
+        let mut fast = FastSim::new(t.clone());
+        for _ in 0..4 {
+            let cfg = random_config(rng, &t);
+            let f = fast.simulate(&cfg).latency();
+            let g = simulate_golden(&t, &cfg, SimOptions::default()).latency();
+            if f != g {
+                return Err(format!("mismatch: fast {f:?} golden {g:?} cfg {cfg:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_uniform_latency_agrees_too() {
+    let opts = SimOptions {
+        uniform_read_latency: true,
+    };
+    prop::check("fast == golden (uniform read latency)", 30, |rng| {
+        let (design, args) = random_design(rng);
+        let t = Arc::new(collect_trace(&design, &args).map_err(|e| e.to_string())?);
+        let mut fast = FastSim::with_options(t.clone(), opts);
+        let cfg = random_config(rng, &t);
+        let f = fast.simulate(&cfg).latency();
+        let g = simulate_golden(&t, &cfg, opts).latency();
+        if f != g {
+            return Err(format!("mismatch: {f:?} vs {g:?}"));
+        }
+        Ok(())
+    });
+}
