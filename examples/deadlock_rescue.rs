@@ -8,8 +8,8 @@
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::bram;
-use fifoadvisor::dse::Evaluator;
-use fifoadvisor::opt::{self, vitis_hunter::VitisHunter, Optimizer, Space};
+use fifoadvisor::dse::{drive, Evaluator};
+use fifoadvisor::opt::{self, vitis_hunter::VitisHunter, Space};
 use fifoadvisor::trace::collect_trace;
 use std::sync::Arc;
 
@@ -43,8 +43,8 @@ fn rescue(design: &str) -> anyhow::Result<()> {
 
     // The FIFOAdvisor way: a full frontier (grouped SA + NSGA-II pool).
     ev.reset_run(true);
-    opt::by_name("grouped_sa", 11).unwrap().run(&mut ev, &space, 600);
-    opt::by_name("nsga2", 13).unwrap().run(&mut ev, &space, 400);
+    drive(&mut *opt::by_name("grouped_sa", 11).unwrap(), &mut ev, &space, 600);
+    drive(&mut *opt::by_name("nsga2", 13).unwrap(), &mut ev, &space, 400);
     let front = ev.pareto();
     let cheapest = front.iter().min_by_key(|p| p.bram).unwrap();
     let fastest = front.iter().min_by_key(|p| p.latency.unwrap()).unwrap();

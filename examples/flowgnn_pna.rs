@@ -6,7 +6,7 @@
 //! Run: `cargo run --release --example flowgnn_pna`
 
 use fifoadvisor::bench_suite::flowgnn::{self, LANES};
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::trace::collect_trace;
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    opt::by_name("grouped_sa", 7).unwrap().run(&mut ev, &space, 5000);
+    drive(&mut *opt::by_name("grouped_sa", 7).unwrap(), &mut ev, &space, 5000);
     println!(
         "grouped SA, 5000 samples in {:.2}s → frontier:",
         t0.elapsed().as_secs_f64()

@@ -7,9 +7,9 @@
 //!
 //! Run: `cargo run --example quickstart`
 
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::ir::{DesignBuilder, Expr};
-use fifoadvisor::opt::{self, Optimizer, Space};
+use fifoadvisor::opt::{self, Space};
 use fifoadvisor::trace::collect_trace;
 use std::sync::Arc;
 
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
 
     // 4. Optimize: exhaustive is tractable here (pruned space is tiny).
     let space = Space::from_trace(&trace);
-    opt::exhaustive::Exhaustive::new().run(&mut ev, &space, 10_000);
+    drive(&mut opt::exhaustive::Exhaustive::new(), &mut ev, &space, 10_000);
     println!("\npruned space exhausted in {} evaluations:", ev.n_evals());
     for p in ev.pareto() {
         println!(

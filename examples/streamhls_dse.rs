@@ -5,7 +5,7 @@
 //! (default: k15mmseq, 1000 samples — the paper's budget)
 
 use fifoadvisor::bench_suite;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::objective::select_highlight;
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::report::ascii;
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         ev.reset_run(true); // cold cache per optimizer: fair timing
         let mut o = opt::by_name(name, 1).unwrap();
         let t0 = std::time::Instant::now();
-        o.run(&mut ev, &space, budget);
+        drive(&mut *o, &mut ev, &space, budget);
         let dt = t0.elapsed().as_secs_f64();
         let front = ev.pareto();
         let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();

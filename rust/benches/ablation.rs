@@ -14,10 +14,10 @@
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::bram;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::pareto::{hypervolume_2d, ObjPoint};
 use fifoadvisor::opt::random::RandomSearch;
-use fifoadvisor::opt::{self, Optimizer, Space};
+use fifoadvisor::opt::{self, Space};
 use fifoadvisor::report::csv::Csv;
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::util::Rng;
@@ -56,11 +56,11 @@ fn main() {
         let refp = (maxp.latency.unwrap() * 3, maxp.bram + 1);
 
         ev.reset_run(true);
-        RandomSearch::new(1, false).run(&mut ev, &space, budget);
+        drive(&mut RandomSearch::new(1, false), &mut ev, &space, budget);
         let hv_pruned = front_hv(&ev, refp);
 
         ev.reset_run(true);
-        RandomSearch::new_uniform_raw(1).run(&mut ev, &space, budget);
+        drive(&mut RandomSearch::new_uniform_raw(1), &mut ev, &space, budget);
         let hv_raw = front_hv(&ev, refp);
 
         println!(
@@ -84,7 +84,7 @@ fn main() {
         let mut hv = Vec::new();
         for grouped in [false, true] {
             ev.reset_run(true);
-            RandomSearch::new(1, grouped).run(&mut ev, &space, budget);
+            drive(&mut RandomSearch::new(1, grouped), &mut ev, &space, budget);
             hv.push(front_hv(&ev, refp));
         }
         println!(
@@ -106,14 +106,14 @@ fn main() {
         // Cold.
         ev.reset_run(true);
         let t0 = std::time::Instant::now();
-        opt::by_name("grouped_sa", 1).unwrap().run(&mut ev, &space, budget);
+        drive(&mut *opt::by_name("grouped_sa", 1).unwrap(), &mut ev, &space, budget);
         let cold = t0.elapsed().as_secs_f64();
         let cold_sims = ev.n_sim;
         // Warm (same optimizer re-run with the cache kept).
         ev.reset_run(false);
         let before = ev.n_sim;
         let t0 = std::time::Instant::now();
-        opt::by_name("grouped_sa", 1).unwrap().run(&mut ev, &space, budget);
+        drive(&mut *opt::by_name("grouped_sa", 1).unwrap(), &mut ev, &space, budget);
         let warm = t0.elapsed().as_secs_f64();
         let warm_sims = ev.n_sim - before;
         println!(

@@ -6,7 +6,7 @@
 //! Env: FIFOADVISOR_BUDGET (default 1000)
 
 use fifoadvisor::bench_suite;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::objective::select_highlight;
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::report::ascii;
@@ -52,7 +52,7 @@ fn main() {
         let mut plot: Vec<(char, Vec<(f64, f64)>)> = Vec::new();
         for (label, name) in OPTS {
             ev.reset_run(true);
-            opt::by_name(name, 1).unwrap().run(&mut ev, &space, budget);
+            drive(&mut *opt::by_name(name, 1).unwrap(), &mut ev, &space, budget);
             let front = ev.pareto();
             let pts: Vec<(u64, u32)> =
                 front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();

@@ -8,7 +8,7 @@
 //! Env: FIFOADVISOR_BUDGET (default 1000)
 
 use fifoadvisor::bench_suite::{self, TABLE2_DESIGNS};
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::objective::select_highlight;
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::report::csv::Csv;
@@ -61,7 +61,7 @@ fn main() {
         print!("{design:<26}");
         for (k, name) in OPTS.iter().enumerate() {
             ev.reset_run(true);
-            opt::by_name(name, 1).unwrap().run(&mut ev, &space, budget);
+            drive(&mut *opt::by_name(name, 1).unwrap(), &mut ev, &space, budget);
             let front = ev.pareto();
             let pts: Vec<(u64, u32)> =
                 front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();

@@ -6,7 +6,7 @@
 //! Env: FIFOADVISOR_BUDGET (default 1000)
 
 use fifoadvisor::bench_suite;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::objective::alpha_score;
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::report::ascii;
@@ -40,7 +40,7 @@ fn main() {
     let mut plot: Vec<(char, Vec<(f64, f64)>)> = Vec::new();
     for (label, name) in OPTS {
         ev.reset_run(true);
-        opt::by_name(name, 1).unwrap().run(&mut ev, &space, budget);
+        drive(&mut *opt::by_name(name, 1).unwrap(), &mut ev, &space, budget);
         // Best-so-far α-score over the evaluation history.
         let mut best = f64::INFINITY;
         let mut curve: Vec<(f64, f64)> = Vec::new();

@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench fig6`
 
 use fifoadvisor::bench_suite;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::objective::select_highlight;
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::report::ascii;
@@ -48,7 +48,7 @@ fn main() {
     for (label, name) in OPTS {
         ev.reset_run(true);
         let t0 = std::time::Instant::now();
-        opt::by_name(name, 1).unwrap().run(&mut ev, &space, budget);
+        drive(&mut *opt::by_name(name, 1).unwrap(), &mut ev, &space, budget);
         let dt = t0.elapsed().as_secs_f64();
         let front = ev.pareto();
         let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();

@@ -4,14 +4,16 @@
 //!    per FIFO size change" headline) + trace-op throughput.
 //! 2. Fast vs golden simulator speed ratio.
 //! 3. Leader/worker scaling (1→16 threads) on batch evaluation.
-//! 4. BRAM analytics backend: native Rust vs XLA/PJRT artifact,
-//!    per-batch latency and the batch-size crossover.
+//! 4. BRAM analytics backend: native Rust vs the batched analytics
+//!    module, per-batch latency and the batch-size crossover.
+//! 5. Ask/tell engine throughput: sims/sec serial vs the persistent
+//!    worker pool, with cache hit rate and worker utilization.
 //!
 //! Run: `cargo bench --bench perf`
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::dse::pool::parallel_latencies;
-use fifoadvisor::dse::{BramBatch, NativeBram};
+use fifoadvisor::dse::{BramBatch, EvalEngine, NativeBram};
 use fifoadvisor::report::csv::Csv;
 use fifoadvisor::runtime::{BatchAnalytics, XlaBram};
 use fifoadvisor::sim::fast::FastSim;
@@ -187,7 +189,44 @@ fn main() {
                     "s".into(),
                 ]);
             }
-            Err(e) => println!("  XLA backend unavailable ({e}); run `make artifacts`"),
+            Err(e) => println!("  analytics backend unavailable ({e})"),
+        }
+    }
+
+    println!("\n=== §Perf 5: ask/tell engine throughput (FeedForward, 256-config batch) ===\n");
+    {
+        let bd = bench_suite::build("FeedForward");
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let ub = trace.upper_bounds();
+        let mut rng = Rng::new(4);
+        let configs: Vec<Box<[u32]>> = (0..256)
+            .map(|_| {
+                ub.iter()
+                    .map(|&u| rng.range_u32((u / 2).max(2), u.max(2)))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        let mut serial_rate = 0.0;
+        for jobs in [1usize, 2, 4, 8] {
+            let mut ev = EvalEngine::parallel(trace.clone(), jobs);
+            ev.eval_batch(&configs); // warm (cold cache)
+            ev.reset_run(true);
+            ev.eval_batch(&configs);
+            let rate = ev.sims_per_sec();
+            if jobs == 1 {
+                serial_rate = rate;
+            }
+            println!(
+                "  {jobs:>2} jobs: {rate:>9.0} sims/s  (speedup {:.2}x, utilization {:.0}%)",
+                rate / serial_rate.max(1e-9),
+                ev.worker_utilization() * 100.0
+            );
+            csv.row(vec![
+                format!("engine_sims_per_sec_{jobs}"),
+                "FeedForward".into(),
+                format!("{rate:.1}"),
+                "sims/s".into(),
+            ]);
         }
     }
 

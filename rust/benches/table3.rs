@@ -7,7 +7,7 @@
 //! Env: FIFOADVISOR_BUDGET (default 1000), FIFOADVISOR_THREADS (8)
 
 use fifoadvisor::bench_suite;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::report::csv::Csv;
 use fifoadvisor::sim::cosim;
@@ -59,7 +59,7 @@ fn main() {
             ev.reset_run(true);
             let mut o = opt::by_name(opt_name, 1).unwrap();
             let t0 = std::time::Instant::now();
-            o.run(&mut ev, &space, budget);
+            drive(&mut *o, &mut ev, &space, budget);
             let dt = t0.elapsed().as_secs_f64().max(1e-6);
             speedups[k].push(cosim_secs / dt);
             row.push(format!("{dt:.3}"));

@@ -2,7 +2,7 @@
 
 use super::Args;
 use crate::bench_suite;
-use crate::dse::Evaluator;
+use crate::dse::{drive, Evaluator};
 use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
 use crate::report::{self, ascii};
@@ -130,15 +130,20 @@ pub fn optimize(args: &Args) -> Result<()> {
     let opt_name = args.get("optimizer").unwrap_or("grouped_sa").to_string();
     let budget = args.get_u64("budget", 1000)? as usize;
     let seed = args.get_u64("seed", 1)?;
-    let threads = args.get_u64("threads", 4)? as usize;
+    // `--jobs` is the canonical worker-count flag; `--threads` stays as
+    // a legacy alias.
+    let jobs = match args.get("jobs") {
+        Some(_) => args.get_u64("jobs", 4)?,
+        None => args.get_u64("threads", 4)?,
+    } as usize;
     let alpha = args.get_f64("alpha", 0.7)?;
 
     let mut ev = if args.has_flag("xla") {
         let analytics = crate::runtime::BatchAnalytics::load_default()?;
-        println!("XLA analytics: platform {}", analytics.platform());
-        Evaluator::with_backend(t.clone(), Box::new(crate::runtime::XlaBram::new(analytics)), threads)
+        println!("batched analytics: platform {}", analytics.platform());
+        Evaluator::with_backend(t.clone(), Box::new(crate::runtime::XlaBram::new(analytics)), jobs)
     } else {
-        Evaluator::parallel(t.clone(), threads)
+        Evaluator::parallel(t.clone(), jobs)
     };
     let space = Space::from_trace(&t);
     let (base, minp) = ev.eval_baselines();
@@ -147,7 +152,7 @@ pub fn optimize(args: &Args) -> Result<()> {
     let mut optimizer = opt::by_name(&opt_name, seed)
         .ok_or_else(|| anyhow!("unknown optimizer '{opt_name}'"))?;
     let t0 = std::time::Instant::now();
-    optimizer.run(&mut ev, &space, budget);
+    drive(&mut *optimizer, &mut ev, &space, budget);
     let dt = t0.elapsed().as_secs_f64();
 
     let front = ev.pareto();
@@ -158,6 +163,7 @@ pub fn optimize(args: &Args) -> Result<()> {
         fmt_duration(dt),
         front.len()
     );
+    println!("  engine: {}", report::engine_stats_line(&ev));
     let base_lat = base.latency.unwrap();
     println!(
         "  Baseline-Max: {} cycles / {} BRAM   Baseline-Min: {}",
@@ -210,7 +216,16 @@ pub fn optimize(args: &Args) -> Result<()> {
     );
 
     if let Some(out) = args.get("out") {
-        let j = report::run_to_json(&name, &opt_name, seed, budget, &ev.history, &front, dt);
+        let j = report::run_to_json(
+            &name,
+            &opt_name,
+            seed,
+            budget,
+            &ev.history,
+            &front,
+            dt,
+            Some(&ev),
+        );
         report::write_file(out, &j.to_string_pretty())?;
         println!("  wrote {out}");
     }

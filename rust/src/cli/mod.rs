@@ -5,7 +5,7 @@
 //! fifoadvisor info     --design NAME [--args 64,512,7]
 //! fifoadvisor simulate --design NAME [--baseline max|min | --depths 2,4,..]
 //! fifoadvisor optimize --design NAME --optimizer grouped_sa [--budget 1000]
-//!                      [--seed 1] [--threads 4] [--xla] [--alpha 0.7]
+//!                      [--seed 1] [--jobs 4] [--xla] [--alpha 0.7]
 //!                      [--out results/run.json]
 //! fifoadvisor hunt     --design NAME
 //! ```
@@ -49,7 +49,9 @@ USAGE:
   fifoadvisor info     --design NAME [--args A,B,C]
   fifoadvisor simulate --design NAME [--baseline max|min | --depths D1,D2,..]
   fifoadvisor optimize --design NAME --optimizer OPT [--budget N] [--seed S]
-                       [--threads T] [--xla] [--alpha 0.7] [--out FILE.json]
+                       [--jobs N] [--xla] [--alpha 0.7] [--out FILE.json]
+                       (--jobs sizes the persistent worker pool; --threads
+                        is accepted as a legacy alias)
   fifoadvisor hunt     --design NAME
   fifoadvisor sweep    --config sweep.json
 

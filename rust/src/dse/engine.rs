@@ -1,0 +1,786 @@
+//! The ask/tell evaluation engine.
+//!
+//! [`EvalEngine`] owns everything the optimizer loop needs to evaluate
+//! FIFO configurations at full hardware speed:
+//!
+//! - a **persistent worker pool** ([`WorkerPool`]): `jobs` threads are
+//!   spawned once at engine construction, each holding its own cloned
+//!   [`FastSim`] over the shared trace, and are fed work over channels —
+//!   no per-batch thread spawning on the hot path;
+//! - a **sharded memo cache** ([`ShardedCache`]): N shards keyed by the
+//!   configuration hash, so concurrent lookups from worker threads don't
+//!   serialize on a single lock;
+//! - **in-batch deduplication** and one batched [`BramBatch`] backend
+//!   call per batch (the XLA-artifact-shaped hot path);
+//! - centralized **budget/history accounting**: [`drive`] runs any
+//!   [`Optimizer`] by alternating `ask` → evaluate → `tell` until the
+//!   optimizer finishes or the proposal budget is exhausted.
+//!
+//! Results are deterministic: the history is assembled in proposal order
+//! regardless of worker scheduling, so a serial run and a `--jobs N` run
+//! produce identical latencies, BRAM totals and Pareto fronts.
+
+use super::{BramBatch, EvalPoint, NativeBram};
+use crate::bram;
+use crate::opt::pareto::{pareto_front, ObjPoint};
+use crate::opt::{AskCtx, Optimizer, Space};
+use crate::sim::fast::{BlockInfo, ChannelStats, FastSim, SimOutcome};
+use crate::trace::Trace;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Sharded memo cache
+// ---------------------------------------------------------------------------
+
+type CacheValue = (Option<u64>, u32);
+
+/// A concurrent memo cache for evaluated configurations, split into
+/// power-of-two shards selected by the configuration hash. Readers on
+/// different shards never contend; readers on the same shard share an
+/// `RwLock` read guard.
+pub struct ShardedCache {
+    shards: Box<[RwLock<HashMap<Box<[u32]>, CacheValue>>]>,
+    mask: usize,
+}
+
+impl ShardedCache {
+    /// Create a cache with at least `shards` shards (rounded up to a
+    /// power of two).
+    pub fn new(shards: usize) -> ShardedCache {
+        let n = shards.max(1).next_power_of_two();
+        let shards: Vec<RwLock<HashMap<Box<[u32]>, CacheValue>>> =
+            (0..n).map(|_| RwLock::new(HashMap::new())).collect();
+        ShardedCache {
+            shards: shards.into_boxed_slice(),
+            mask: n - 1,
+        }
+    }
+
+    fn shard_of(&self, cfg: &[u32]) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        cfg.hash(&mut h);
+        (h.finish() as usize) & self.mask
+    }
+
+    /// Look up a configuration (lock-sharded read).
+    pub fn get(&self, cfg: &[u32]) -> Option<CacheValue> {
+        self.shards[self.shard_of(cfg)]
+            .read()
+            .expect("cache shard poisoned")
+            .get(cfg)
+            .copied()
+    }
+
+    /// Insert (or overwrite) a configuration's evaluation.
+    pub fn insert(&self, cfg: Box<[u32]>, value: CacheValue) {
+        self.shards[self.shard_of(&cfg)]
+            .write()
+            .expect("cache shard poisoned")
+            .insert(cfg, value);
+    }
+
+    /// Total entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("cache shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry.
+    pub fn clear(&self) {
+        for s in self.shards.iter() {
+            s.write().expect("cache shard poisoned").clear();
+        }
+    }
+
+    /// Number of shards (always a power of two).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+struct Job {
+    idx: usize,
+    cfg: Box<[u32]>,
+}
+
+struct JobDone {
+    idx: usize,
+    latency: Option<u64>,
+    simulated: bool,
+    nanos: u64,
+}
+
+/// Result of one pool job, in submission order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobOutcome {
+    /// Simulated latency (`None` = deadlock).
+    pub latency: Option<u64>,
+    /// False when the shared memo cache already held the result.
+    pub simulated: bool,
+    /// Wall time this job occupied its worker.
+    pub nanos: u64,
+}
+
+/// A pool of simulation workers that outlives any single batch. Each
+/// worker owns a cloned [`FastSim`] (the trace itself is shared through
+/// an `Arc`) and, optionally, a handle to the engine's [`ShardedCache`]
+/// which it consults before simulating — so configurations evaluated
+/// concurrently by another client of the same cache are not re-simulated.
+pub struct WorkerPool {
+    jobs: usize,
+    task_tx: Option<mpsc::Sender<Job>>,
+    result_rx: mpsc::Receiver<JobDone>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `jobs` workers, each with its own clone of `proto`.
+    pub fn new(proto: &FastSim, jobs: usize, cache: Option<Arc<ShardedCache>>) -> WorkerPool {
+        let jobs = jobs.max(1);
+        let (task_tx, task_rx) = mpsc::channel::<Job>();
+        let task_rx = Arc::new(Mutex::new(task_rx));
+        let (result_tx, result_rx) = mpsc::channel::<JobDone>();
+        let mut handles = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            let mut sim = proto.clone();
+            let rx = Arc::clone(&task_rx);
+            let tx = result_tx.clone();
+            let cache = cache.clone();
+            handles.push(thread::spawn(move || loop {
+                let job = match rx.lock() {
+                    Ok(guard) => guard.recv(),
+                    Err(_) => break,
+                };
+                let job = match job {
+                    Ok(j) => j,
+                    Err(_) => break, // pool dropped: shut down
+                };
+                let t0 = Instant::now();
+                let (latency, simulated) = match cache.as_ref().and_then(|c| c.get(&job.cfg)) {
+                    Some((lat, _)) => (lat, false),
+                    None => (sim.simulate(&job.cfg).latency(), true),
+                };
+                let nanos = t0.elapsed().as_nanos() as u64;
+                if tx
+                    .send(JobDone {
+                        idx: job.idx,
+                        latency,
+                        simulated,
+                        nanos,
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }));
+        }
+        WorkerPool {
+            jobs,
+            task_tx: Some(task_tx),
+            result_rx,
+            handles,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Evaluate every configuration, returning outcomes in input order.
+    /// The calling thread blocks until the whole batch is done.
+    pub fn run(&self, configs: &[Box<[u32]>]) -> Vec<JobOutcome> {
+        let n = configs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let tx = self.task_tx.as_ref().expect("pool already shut down");
+        for (idx, cfg) in configs.iter().enumerate() {
+            tx.send(Job {
+                idx,
+                cfg: cfg.clone(),
+            })
+            .expect("worker pool channel closed");
+        }
+        let mut out = vec![JobOutcome::default(); n];
+        for _ in 0..n {
+            let done = self
+                .result_rx
+                .recv()
+                .expect("a simulation worker died (panic in FastSim?)");
+            out[done.idx] = JobOutcome {
+                latency: done.latency,
+                simulated: done.simulated,
+                nanos: done.nanos,
+            };
+        }
+        out
+    }
+
+    /// Latency-only convenience used by the [`super::pool`] shim.
+    pub fn run_latencies(&self, configs: &[Box<[u32]>]) -> Vec<Option<u64>> {
+        self.run(configs).into_iter().map(|o| o.latency).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the task channel wakes every worker out of `recv`.
+        drop(self.task_tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine statistics
+// ---------------------------------------------------------------------------
+
+/// Counters the report layer exposes (cache hit rate, sims/sec, worker
+/// utilization). Reset by [`EvalEngine::reset_run`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Configurations proposed (history entries; cache hits included).
+    pub proposals: u64,
+    /// Proposals served from the memo cache (in-batch duplicates count).
+    pub cache_hits: u64,
+    /// Simulator invocations this run (unlike [`EvalEngine::n_sim`],
+    /// reset by every [`EvalEngine::reset_run`] — so rate/utilization
+    /// figures stay consistent across warm-cache resets).
+    pub sims: u64,
+    /// Batches evaluated through the engine.
+    pub batches: u64,
+    /// Total wall time jobs occupied simulation workers (or the inline
+    /// serial path).
+    pub busy_nanos: u64,
+}
+
+impl EngineStats {
+    /// Fraction of proposals answered from the memo cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.proposals as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation results handed to optimizers
+// ---------------------------------------------------------------------------
+
+/// One evaluated proposal, as delivered to [`Optimizer::tell`].
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub depths: Box<[u32]>,
+    /// `None` means the configuration deadlocks.
+    pub latency: Option<u64>,
+    pub bram: u32,
+    /// Per-channel occupancy/stall statistics — present only when the
+    /// optimizer requested a stats evaluation
+    /// ([`Optimizer::wants_stats`]).
+    pub stats: Option<ChannelStats>,
+    /// Processes stuck at deadlock — populated only on stats
+    /// evaluations of deadlocking configurations.
+    pub blocked: Vec<BlockInfo>,
+}
+
+impl EvalResult {
+    pub fn is_feasible(&self) -> bool {
+        self.latency.is_some()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// The black-box evaluator `x → (f_lat(x), f_bram(x))` (paper §III) with
+/// the persistent worker pool and sharded memo cache. Construct once per
+/// (design, trace); drive optimizers through [`drive`] or call the
+/// evaluation methods directly.
+pub struct EvalEngine {
+    sim: FastSim,
+    pub widths: Vec<u32>,
+    cache: Arc<ShardedCache>,
+    pool: Option<WorkerPool>,
+    backend: Box<dyn BramBatch>,
+    /// Every proposal in order (cache hits included — the optimizer
+    /// budget counts proposals, as in the paper's fixed 1000 samples).
+    pub history: Vec<EvalPoint>,
+    /// Number of actual simulator invocations (cache misses).
+    pub n_sim: u64,
+    jobs: usize,
+    stats: EngineStats,
+    start: Instant,
+}
+
+impl EvalEngine {
+    /// Engine with the native BRAM backend and serial simulation.
+    pub fn new(trace: Arc<Trace>) -> EvalEngine {
+        Self::with_backend(trace, Box::new(NativeBram), 1)
+    }
+
+    /// Engine with `jobs` persistent simulation workers.
+    pub fn parallel(trace: Arc<Trace>, jobs: usize) -> EvalEngine {
+        Self::with_backend(trace, Box::new(NativeBram), jobs)
+    }
+
+    /// Full control: custom BRAM backend (e.g. the analytics artifact) +
+    /// parallelism.
+    pub fn with_backend(trace: Arc<Trace>, backend: Box<dyn BramBatch>, jobs: usize) -> EvalEngine {
+        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        let jobs = jobs.max(1);
+        let cache = Arc::new(ShardedCache::new((jobs * 4).clamp(4, 64)));
+        let sim = FastSim::new(trace);
+        let pool = if jobs > 1 {
+            Some(WorkerPool::new(&sim, jobs, Some(Arc::clone(&cache))))
+        } else {
+            None
+        };
+        EvalEngine {
+            sim,
+            widths,
+            cache,
+            pool,
+            backend,
+            history: Vec::new(),
+            n_sim: 0,
+            jobs,
+            stats: EngineStats::default(),
+            start: Instant::now(),
+        }
+    }
+
+    /// The trace being optimized.
+    pub fn trace(&self) -> &Arc<Trace> {
+        self.sim.trace()
+    }
+
+    /// Name of the BRAM backend in use.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Worker count (1 = serial inline evaluation).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Engine counters for the report layer.
+    pub fn stats(&self) -> &EngineStats {
+        self.stats_ref()
+    }
+
+    fn stats_ref(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Simulations per wall-clock second since the run started.
+    pub fn sims_per_sec(&self) -> f64 {
+        self.stats.sims as f64 / self.elapsed().max(1e-9)
+    }
+
+    /// Fraction of total worker capacity spent simulating.
+    pub fn worker_utilization(&self) -> f64 {
+        let busy = self.stats.busy_nanos as f64 / 1e9;
+        (busy / (self.elapsed().max(1e-9) * self.jobs as f64)).min(1.0)
+    }
+
+    /// Entries currently memoized.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Shard count of the memo cache.
+    pub fn cache_shards(&self) -> usize {
+        self.cache.num_shards()
+    }
+
+    /// Preferred proposal batch size for `ask` (enough to keep every
+    /// worker busy several times over without starving `tell` feedback).
+    pub fn batch_hint(&self) -> usize {
+        if self.jobs <= 1 {
+            64
+        } else {
+            (self.jobs * 32).clamp(64, 512)
+        }
+    }
+
+    /// Reset history and the start-of-run clock (keep the memo cache —
+    /// incremental reuse across optimizers is part of the design; pass
+    /// `clear_cache` to measure cold-start behaviour).
+    pub fn reset_run(&mut self, clear_cache: bool) {
+        self.history.clear();
+        self.stats = EngineStats::default();
+        if clear_cache {
+            self.cache.clear();
+            self.n_sim = 0;
+        }
+        self.start = Instant::now();
+    }
+
+    /// Seconds since engine creation / last [`Self::reset_run`].
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Number of proposals so far (the budget meter).
+    pub fn n_evals(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Evaluate one configuration (memoized), recording it in history.
+    pub fn eval(&mut self, depths: &[u32]) -> (Option<u64>, u32) {
+        let key: Box<[u32]> = depths.into();
+        let (lat, br) = match self.cache.get(depths) {
+            Some(v) => {
+                self.stats.cache_hits += 1;
+                v
+            }
+            None => {
+                let t0 = Instant::now();
+                let lat = self.sim.simulate(depths).latency();
+                self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
+                let br = bram::bram_total(depths, &self.widths);
+                self.n_sim += 1;
+                self.stats.sims += 1;
+                self.cache.insert(key.clone(), (lat, br));
+                (lat, br)
+            }
+        };
+        self.stats.proposals += 1;
+        self.history.push(EvalPoint {
+            depths: key,
+            latency: lat,
+            bram: br,
+            t: self.elapsed(),
+        });
+        (lat, br)
+    }
+
+    /// Evaluate a batch through the full pipeline: in-batch dedup, memo
+    /// lookup, parallel simulation of the misses on the worker pool, and
+    /// one batched backend call for the BRAM totals.
+    pub fn eval_batch(&mut self, configs: &[Box<[u32]>]) -> Vec<(Option<u64>, u32)> {
+        self.eval_results(configs, false)
+            .into_iter()
+            .map(|r| (r.latency, r.bram))
+            .collect()
+    }
+
+    /// The ask/tell evaluation path. With `want_stats` the batch is
+    /// evaluated serially with per-channel statistics and deadlock block
+    /// info (the greedy ranking / targeted hunter path); otherwise the
+    /// batched pool path is used.
+    pub fn eval_results(&mut self, configs: &[Box<[u32]>], want_stats: bool) -> Vec<EvalResult> {
+        if want_stats {
+            return configs.iter().map(|c| self.eval_one_with_stats(c)).collect();
+        }
+        self.stats.batches += 1;
+
+        // In-batch dedup + memo lookup.
+        let mut misses: Vec<Box<[u32]>> = Vec::new();
+        {
+            let mut seen: HashSet<&[u32]> = HashSet::new();
+            for c in configs {
+                if self.cache.get(c).is_none() && seen.insert(c.as_ref()) {
+                    misses.push(c.clone());
+                }
+            }
+        }
+        self.stats.cache_hits += (configs.len() - misses.len()) as u64;
+
+        if !misses.is_empty() {
+            let lats: Vec<Option<u64>> = match &self.pool {
+                Some(pool) if misses.len() > 1 => {
+                    let outcomes = pool.run(&misses);
+                    for o in &outcomes {
+                        if o.simulated {
+                            self.n_sim += 1;
+                            self.stats.sims += 1;
+                        }
+                        self.stats.busy_nanos += o.nanos;
+                    }
+                    outcomes.into_iter().map(|o| o.latency).collect()
+                }
+                _ => {
+                    let t0 = Instant::now();
+                    let lats: Vec<Option<u64>> = misses
+                        .iter()
+                        .map(|c| self.sim.simulate(c).latency())
+                        .collect();
+                    self.n_sim += misses.len() as u64;
+                    self.stats.sims += misses.len() as u64;
+                    self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
+                    lats
+                }
+            };
+            let brams = self.backend.bram_totals(&misses, &self.widths);
+            for ((c, lat), br) in misses.into_iter().zip(lats).zip(brams) {
+                self.cache.insert(c, (lat, br));
+            }
+        }
+
+        let t = self.elapsed();
+        self.stats.proposals += configs.len() as u64;
+        configs
+            .iter()
+            .map(|c| {
+                let (lat, br) = self.cache.get(c).expect("batch member must be cached");
+                self.history.push(EvalPoint {
+                    depths: c.clone(),
+                    latency: lat,
+                    bram: br,
+                    t,
+                });
+                EvalResult {
+                    depths: c.clone(),
+                    latency: lat,
+                    bram: br,
+                    stats: None,
+                    blocked: Vec::new(),
+                }
+            })
+            .collect()
+    }
+
+    fn eval_one_with_stats(&mut self, depths: &[u32]) -> EvalResult {
+        let t0 = Instant::now();
+        let (out, stats) = self.sim.simulate_with_stats(depths);
+        self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
+        self.n_sim += 1;
+        self.stats.sims += 1;
+        let lat = out.latency();
+        let br = bram::bram_total(depths, &self.widths);
+        let key: Box<[u32]> = depths.into();
+        self.cache.insert(key.clone(), (lat, br));
+        self.stats.proposals += 1;
+        self.history.push(EvalPoint {
+            depths: key.clone(),
+            latency: lat,
+            bram: br,
+            t: self.elapsed(),
+        });
+        let blocked = match out {
+            SimOutcome::Deadlock { blocked } => blocked,
+            SimOutcome::Done { .. } => Vec::new(),
+        };
+        EvalResult {
+            depths: key,
+            latency: lat,
+            bram: br,
+            stats: Some(stats),
+            blocked,
+        }
+    }
+
+    /// Evaluate with per-channel occupancy/stall statistics (kept for
+    /// diagnostics and back-compat; the ask/tell path uses
+    /// [`Optimizer::wants_stats`] instead).
+    pub fn eval_with_stats(&mut self, depths: &[u32]) -> (SimOutcome, ChannelStats) {
+        let (out, stats) = self.sim.simulate_with_stats(depths);
+        self.n_sim += 1;
+        self.stats.sims += 1;
+        let br = bram::bram_total(depths, &self.widths);
+        self.stats.proposals += 1;
+        self.history.push(EvalPoint {
+            depths: depths.into(),
+            latency: out.latency(),
+            bram: br,
+            t: self.elapsed(),
+        });
+        (out, stats)
+    }
+
+    /// Pareto front over the feasible evaluation history.
+    pub fn pareto(&self) -> Vec<&EvalPoint> {
+        let pts: Vec<ObjPoint> = self
+            .history
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| {
+                p.latency.map(|l| ObjPoint {
+                    latency: l,
+                    bram: p.bram,
+                    index: i,
+                })
+            })
+            .collect();
+        pareto_front(&pts)
+            .into_iter()
+            .map(|p| &self.history[p.index])
+            .collect()
+    }
+
+    /// Convenience: evaluate both paper baselines, returning
+    /// (Baseline-Max, Baseline-Min) points.
+    pub fn eval_baselines(&mut self) -> (EvalPoint, EvalPoint) {
+        let t = self.trace().clone();
+        self.eval(&t.baseline_max());
+        let max = self.history.last().unwrap().clone();
+        self.eval(&t.baseline_min());
+        let min = self.history.last().unwrap().clone();
+        (max, min)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The central optimizer loop
+// ---------------------------------------------------------------------------
+
+/// Run `opt` against `engine` until it signals completion, returns an
+/// empty batch, or the proposal budget is exhausted (budget discipline is
+/// cooperative: the remaining budget is passed to every `ask`, and an
+/// optimizer that proposes past it — e.g. greedy's final keep-evaluation
+/// — may overrun by a batch). Returns the number of proposals made.
+pub fn drive(
+    opt: &mut dyn Optimizer,
+    engine: &mut EvalEngine,
+    space: &Space,
+    budget: usize,
+) -> usize {
+    let start_evals = engine.n_evals();
+    loop {
+        if opt.done() {
+            break;
+        }
+        let proposed = engine.n_evals() - start_evals;
+        let ctx = AskCtx {
+            space,
+            budget_left: budget.saturating_sub(proposed),
+            batch_hint: engine.batch_hint(),
+        };
+        let batch = opt.ask(&ctx);
+        if batch.is_empty() {
+            break;
+        }
+        let results = engine.eval_results(&batch, opt.wants_stats());
+        opt.tell(&results);
+    }
+    engine.n_evals() - start_evals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::trace::collect_trace;
+
+    fn trace_of(name: &str) -> Arc<Trace> {
+        let bd = bench_suite::build(name);
+        Arc::new(collect_trace(&bd.design, &bd.args).unwrap())
+    }
+
+    #[test]
+    fn sharded_cache_roundtrip_and_clear() {
+        let c = ShardedCache::new(5); // rounds up to 8
+        assert_eq!(c.num_shards(), 8);
+        for i in 0..100u32 {
+            c.insert(vec![i, i + 1].into(), (Some(i as u64), i));
+        }
+        assert_eq!(c.len(), 100);
+        assert_eq!(c.get(&[7, 8]), Some((Some(7), 7)));
+        assert_eq!(c.get(&[7, 9]), None);
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn pool_preserves_order_and_reports_cache_hits() {
+        let t = trace_of("gesummv");
+        let sim = FastSim::new(t.clone());
+        let cache = Arc::new(ShardedCache::new(8));
+        let pool = WorkerPool::new(&sim, 4, Some(Arc::clone(&cache)));
+        let ub = t.upper_bounds();
+        let mut rng = crate::util::Rng::new(5);
+        let configs: Vec<Box<[u32]>> = (0..30)
+            .map(|_| {
+                ub.iter()
+                    .map(|&u| rng.range_u32(2, u.max(2)))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        let first = pool.run(&configs);
+        assert!(first.iter().all(|o| o.simulated));
+        // Serial reference.
+        let mut serial = FastSim::new(t.clone());
+        for (c, o) in configs.iter().zip(&first) {
+            assert_eq!(serial.simulate(c).latency(), o.latency);
+        }
+        // Populate the cache; the second run must hit it.
+        for (c, o) in configs.iter().zip(&first) {
+            cache.insert(c.clone(), (o.latency, 0));
+        }
+        let second = pool.run(&configs);
+        assert!(second.iter().all(|o| !o.simulated));
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.latency, b.latency);
+        }
+    }
+
+    #[test]
+    fn engine_batch_dedups_and_counts() {
+        let t = trace_of("bicg");
+        let mut ev = EvalEngine::parallel(t.clone(), 2);
+        let cfg: Box<[u32]> = t.baseline_max().into();
+        let batch = vec![cfg.clone(), cfg.clone(), cfg.clone()];
+        let out = ev.eval_batch(&batch);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], out[1]);
+        assert_eq!(ev.n_sim, 1, "in-batch duplicates must be deduped");
+        assert_eq!(ev.n_evals(), 3, "history counts proposals");
+        assert_eq!(ev.stats().cache_hits, 2);
+        // Second batch: pure cache.
+        ev.eval_batch(&batch);
+        assert_eq!(ev.n_sim, 1);
+        assert!(ev.stats().hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn drive_runs_an_optimizer_within_budget() {
+        let t = trace_of("bicg");
+        let space = Space::from_trace(&t);
+        let mut ev = EvalEngine::new(t);
+        let mut o = crate::opt::random::RandomSearch::new(3, false);
+        let n = drive(&mut o, &mut ev, &space, 100);
+        assert_eq!(n, 100);
+        assert_eq!(ev.n_evals(), 100);
+    }
+
+    #[test]
+    fn serial_and_parallel_drives_are_identical() {
+        let t = trace_of("gesummv");
+        let space = Space::from_trace(&t);
+        let runs: Vec<Vec<(Box<[u32]>, Option<u64>, u32)>> = [1usize, 4]
+            .iter()
+            .map(|&jobs| {
+                let mut ev = EvalEngine::parallel(t.clone(), jobs);
+                let mut o = crate::opt::random::RandomSearch::new(11, false);
+                drive(&mut o, &mut ev, &space, 128);
+                ev.history
+                    .iter()
+                    .map(|p| (p.depths.clone(), p.latency, p.bram))
+                    .collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+    }
+}

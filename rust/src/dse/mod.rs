@@ -1,19 +1,27 @@
-//! The DSE engine: the black-box evaluator `x → (f_lat(x), f_bram(x))`
-//! (paper §III), with memoization, wall-clock-stamped evaluation history
-//! (for the Fig. 5 convergence study), a leader/worker parallel batch
-//! path, and an optional AOT-compiled XLA backend for the batched
-//! BRAM/objective analytics (see [`crate::runtime`]).
+//! The DSE engine layer: the black-box evaluator `x → (f_lat(x),
+//! f_bram(x))` (paper §III) behind a batch-first **ask/tell** interface.
+//!
+//! - [`engine`] — the [`EvalEngine`]: persistent worker pool, sharded
+//!   memo cache, in-batch dedup, batched BRAM backend calls, engine
+//!   statistics, and the central [`drive`] loop that runs any
+//!   [`Optimizer`](crate::opt::Optimizer).
+//! - [`pool`] — a thin latency-only shim over the engine's worker pool
+//!   (kept for benches and direct simulator fan-out).
+//! - [`sweep`] — the JSON-configured experiment-grid launcher.
+//!
+//! [`Evaluator`] is an alias of [`EvalEngine`] kept for the pervasive
+//! call sites that predate the ask/tell refactor.
 
+pub mod engine;
 pub mod pool;
 pub mod sweep;
 
+pub use engine::{drive, EngineStats, EvalEngine, EvalResult, ShardedCache, WorkerPool};
+
+/// Back-compat name for the evaluation engine.
+pub type Evaluator = EvalEngine;
+
 use crate::bram;
-use crate::opt::pareto::{pareto_front, ObjPoint};
-use crate::sim::fast::{FastSim, SimOutcome};
-use crate::trace::Trace;
-use std::collections::HashMap;
-use std::sync::Arc;
-use std::time::Instant;
 
 /// One evaluated FIFO configuration.
 #[derive(Debug, Clone)]
@@ -22,7 +30,7 @@ pub struct EvalPoint {
     /// `None` means the configuration deadlocks.
     pub latency: Option<u64>,
     pub bram: u32,
-    /// Seconds since the evaluator was created when this evaluation
+    /// Seconds since the engine was created when this evaluation
     /// completed (includes optimizer logic time, as in Fig. 5).
     pub t: f64,
 }
@@ -34,9 +42,10 @@ impl EvalPoint {
 }
 
 /// Pluggable backend for batched BRAM totals — implemented natively
-/// (Algorithm 1 in Rust) and by the PJRT-executed JAX/Pallas artifact
-/// ([`crate::runtime::BatchAnalytics`]). Not `Send`: the PJRT client is
-/// thread-pinned; only the [`FastSim`] clones cross worker threads.
+/// (Algorithm 1 in Rust) and by the batched analytics module
+/// ([`crate::runtime::BatchAnalytics`]). Not `Send`: analytics clients
+/// may be thread-pinned; only the [`crate::sim::fast::FastSim`] clones
+/// cross worker threads.
 pub trait BramBatch {
     /// Total BRAM count for each configuration in the batch.
     fn bram_totals(&mut self, configs: &[Box<[u32]>], widths: &[u32]) -> Vec<u32>;
@@ -49,202 +58,10 @@ pub struct NativeBram;
 
 impl BramBatch for NativeBram {
     fn bram_totals(&mut self, configs: &[Box<[u32]>], widths: &[u32]) -> Vec<u32> {
-        configs
-            .iter()
-            .map(|c| bram::bram_total(c, widths))
-            .collect()
+        configs.iter().map(|c| bram::bram_total(c, widths)).collect()
     }
     fn name(&self) -> &'static str {
         "native"
-    }
-}
-
-/// The black-box evaluator. Construct once per (design, trace); share
-/// among optimizers sequentially.
-pub struct Evaluator {
-    sim: FastSim,
-    pub widths: Vec<u32>,
-    cache: HashMap<Box<[u32]>, (Option<u64>, u32)>,
-    /// Every proposal in order (cache hits included — the optimizer
-    /// budget counts proposals, as in the paper's fixed 1000 samples).
-    pub history: Vec<EvalPoint>,
-    /// Number of actual simulator invocations (cache misses).
-    pub n_sim: u64,
-    /// Worker threads for batch evaluation (1 = serial).
-    pub threads: usize,
-    backend: Box<dyn BramBatch>,
-    start: Instant,
-}
-
-impl Evaluator {
-    /// Evaluator with the native BRAM backend and serial simulation.
-    pub fn new(trace: Arc<Trace>) -> Evaluator {
-        Self::with_backend(trace, Box::new(NativeBram), 1)
-    }
-
-    /// Evaluator with `threads` parallel simulation workers.
-    pub fn parallel(trace: Arc<Trace>, threads: usize) -> Evaluator {
-        Self::with_backend(trace, Box::new(NativeBram), threads)
-    }
-
-    /// Full control: custom BRAM backend (e.g. the XLA artifact) +
-    /// parallelism.
-    pub fn with_backend(
-        trace: Arc<Trace>,
-        backend: Box<dyn BramBatch>,
-        threads: usize,
-    ) -> Evaluator {
-        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
-        Evaluator {
-            sim: FastSim::new(trace),
-            widths,
-            cache: HashMap::new(),
-            history: Vec::new(),
-            n_sim: 0,
-            threads: threads.max(1),
-            backend,
-            start: Instant::now(),
-        }
-    }
-
-    /// The trace being optimized.
-    pub fn trace(&self) -> &Arc<Trace> {
-        self.sim.trace()
-    }
-
-    /// Name of the BRAM backend in use.
-    pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
-    }
-
-    /// Reset history and the start-of-run clock (keep the memo cache —
-    /// incremental reuse across optimizers is part of the design; pass
-    /// `clear_cache` to measure cold-start behaviour).
-    pub fn reset_run(&mut self, clear_cache: bool) {
-        self.history.clear();
-        if clear_cache {
-            self.cache.clear();
-            self.n_sim = 0;
-        }
-        self.start = Instant::now();
-    }
-
-    /// Seconds since evaluator creation / last [`Self::reset_run`].
-    pub fn elapsed(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    /// Number of proposals so far (the budget meter).
-    pub fn n_evals(&self) -> usize {
-        self.history.len()
-    }
-
-    /// Evaluate one configuration (memoized), recording it in history.
-    pub fn eval(&mut self, depths: &[u32]) -> (Option<u64>, u32) {
-        let key: Box<[u32]> = depths.into();
-        let (lat, br) = match self.cache.get(&key) {
-            Some(&v) => v,
-            None => {
-                let lat = self.sim.simulate(depths).latency();
-                let br = bram::bram_total(depths, &self.widths);
-                self.n_sim += 1;
-                self.cache.insert(key.clone(), (lat, br));
-                (lat, br)
-            }
-        };
-        self.history.push(EvalPoint {
-            depths: key,
-            latency: lat,
-            bram: br,
-            t: self.elapsed(),
-        });
-        (lat, br)
-    }
-
-    /// Evaluate a batch: uncached configs are simulated in parallel
-    /// across [`threads`](Self::threads) workers and the BRAM totals are
-    /// computed by the configured backend in one call (the XLA hot path).
-    pub fn eval_batch(&mut self, configs: &[Box<[u32]>]) -> Vec<(Option<u64>, u32)> {
-        // Identify cache misses (deduplicated within the batch).
-        let mut misses: Vec<Box<[u32]>> = Vec::new();
-        let mut seen: HashMap<&[u32], ()> = HashMap::new();
-        for c in configs {
-            if !self.cache.contains_key(c.as_ref()) && !seen.contains_key(c.as_ref()) {
-                seen.insert(c, ());
-                misses.push(c.clone());
-            }
-        }
-        if !misses.is_empty() {
-            let lats = pool::parallel_latencies(&self.sim, &misses, self.threads);
-            let brams = self.backend.bram_totals(&misses, &self.widths);
-            self.n_sim += misses.len() as u64;
-            for ((c, lat), br) in misses.into_iter().zip(lats).zip(brams) {
-                self.cache.insert(c, (lat, br));
-            }
-        }
-        let t = self.elapsed();
-        configs
-            .iter()
-            .map(|c| {
-                let &(lat, br) = self.cache.get(c.as_ref()).unwrap();
-                self.history.push(EvalPoint {
-                    depths: c.clone(),
-                    latency: lat,
-                    bram: br,
-                    t,
-                });
-                (lat, br)
-            })
-            .collect()
-    }
-
-    /// Evaluate with per-channel occupancy/stall statistics (used by the
-    /// greedy optimizer's ranking pass).
-    pub fn eval_with_stats(
-        &mut self,
-        depths: &[u32],
-    ) -> (SimOutcome, crate::sim::fast::ChannelStats) {
-        self.n_sim += 1;
-        let (out, stats) = self.sim.simulate_with_stats(depths);
-        let br = bram::bram_total(depths, &self.widths);
-        self.history.push(EvalPoint {
-            depths: depths.into(),
-            latency: out.latency(),
-            bram: br,
-            t: self.elapsed(),
-        });
-        (out, stats)
-    }
-
-    /// Pareto front over the feasible evaluation history.
-    pub fn pareto(&self) -> Vec<&EvalPoint> {
-        let pts: Vec<ObjPoint> = self
-            .history
-            .iter()
-            .enumerate()
-            .filter_map(|(i, p)| {
-                p.latency.map(|l| ObjPoint {
-                    latency: l,
-                    bram: p.bram,
-                    index: i,
-                })
-            })
-            .collect();
-        pareto_front(&pts)
-            .into_iter()
-            .map(|p| &self.history[p.index])
-            .collect()
-    }
-
-    /// Convenience: evaluate both paper baselines, returning
-    /// (Baseline-Max, Baseline-Min) points.
-    pub fn eval_baselines(&mut self) -> (EvalPoint, EvalPoint) {
-        let t = self.trace().clone();
-        self.eval(&t.baseline_max());
-        let max = self.history.last().unwrap().clone();
-        self.eval(&t.baseline_min());
-        let min = self.history.last().unwrap().clone();
-        (max, min)
     }
 }
 
@@ -253,6 +70,7 @@ mod tests {
     use super::*;
     use crate::bench_suite;
     use crate::trace::collect_trace;
+    use std::sync::Arc;
 
     fn evaluator(name: &str) -> Evaluator {
         let bd = bench_suite::build(name);

@@ -1,46 +1,37 @@
-//! Leader/worker parallel evaluation: the leader (the optimizer loop)
-//! proposes a batch of configurations; workers — each holding its own
-//! cloned [`FastSim`] engine over the shared trace — evaluate disjoint
-//! chunks. `std::thread::scope` keeps lifetimes simple and the pool
-//! allocation-light (the offline crate mirror has no rayon/tokio).
+//! Latency-only batch evaluation — a thin shim over the engine's
+//! [`WorkerPool`](super::engine::WorkerPool). Kept because the perf
+//! benches and a few tools want raw simulator fan-out without the memo
+//! cache, history, or BRAM accounting of the full
+//! [`EvalEngine`](super::EvalEngine). Each call builds a transient pool
+//! (this standalone entry point has no engine to borrow one from) —
+//! long-lived callers that batch repeatedly should hold an `EvalEngine`
+//! or a `WorkerPool` instead and amortize the spawn cost.
+//!
+//! Unlike the old per-batch `std::thread::scope` implementation, the pool
+//! here handles every edge case uniformly: an empty slice returns
+//! immediately, a single configuration runs inline, and `threads`
+//! larger than the batch simply leaves the surplus workers idle.
 
+use super::engine::WorkerPool;
 use crate::sim::fast::FastSim;
 
 /// Simulate every configuration, returning latencies (`None` =
-/// deadlock), preserving order. `threads == 1` runs inline on the given
-/// engine clone-free.
+/// deadlock), preserving order. `threads == 1` runs inline on a local
+/// engine clone.
 pub fn parallel_latencies(
     proto: &FastSim,
     configs: &[Box<[u32]>],
     threads: usize,
 ) -> Vec<Option<u64>> {
+    if configs.is_empty() {
+        return Vec::new();
+    }
     if threads <= 1 || configs.len() < 2 {
         let mut sim = proto.clone();
         return configs.iter().map(|c| sim.simulate(c).latency()).collect();
     }
-    let threads = threads.min(configs.len());
-    let chunk = configs.len().div_ceil(threads);
-    let mut out: Vec<Option<u64>> = vec![None; configs.len()];
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (i, chunk_cfgs) in configs.chunks(chunk).enumerate() {
-            let mut sim = proto.clone();
-            handles.push((
-                i,
-                s.spawn(move || {
-                    chunk_cfgs
-                        .iter()
-                        .map(|c| sim.simulate(c).latency())
-                        .collect::<Vec<_>>()
-                }),
-            ));
-        }
-        for (i, h) in handles {
-            let res = h.join().expect("worker panicked");
-            out[i * chunk..i * chunk + res.len()].copy_from_slice(&res);
-        }
-    });
-    out
+    let pool = WorkerPool::new(proto, threads.min(configs.len()), None);
+    pool.run_latencies(configs)
 }
 
 #[cfg(test)]
@@ -79,5 +70,34 @@ mod tests {
         assert!(parallel_latencies(&proto, &[], 4).is_empty());
         let one: Vec<Box<[u32]>> = vec![t.baseline_max().into()];
         assert_eq!(parallel_latencies(&proto, &one, 4).len(), 1);
+    }
+
+    #[test]
+    fn more_threads_than_configs() {
+        // Regression: the old chunked implementation computed chunk
+        // indices from a thread count that could exceed the batch.
+        let bd = bench_suite::build("bicg");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let proto = FastSim::new(t.clone());
+        let configs: Vec<Box<[u32]>> = vec![
+            t.baseline_max().into(),
+            t.baseline_min().into(),
+            t.baseline_max().iter().map(|&d| (d / 2).max(2)).collect(),
+        ];
+        let serial = parallel_latencies(&proto, &configs, 1);
+        for threads in [3, 4, 7, 128] {
+            assert_eq!(parallel_latencies(&proto, &configs, threads), serial);
+        }
+    }
+
+    #[test]
+    fn two_configs_two_threads() {
+        let bd = bench_suite::build("gesummv");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let proto = FastSim::new(t.clone());
+        let configs: Vec<Box<[u32]>> =
+            vec![t.baseline_max().into(), t.baseline_min().into()];
+        let serial = parallel_latencies(&proto, &configs, 1);
+        assert_eq!(parallel_latencies(&proto, &configs, 2), serial);
     }
 }

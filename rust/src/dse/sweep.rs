@@ -8,14 +8,16 @@
 //!   "optimizers": ["greedy", "grouped_sa"],
 //!   "budget": 1000,
 //!   "seeds": [1, 2],
-//!   "threads": 4,
+//!   "jobs": 4,
 //!   "alpha": 0.7,
 //!   "out_dir": "results/sweep"
 //! }
 //! ```
+//!
+//! (`"threads"` is accepted as a legacy alias of `"jobs"`.)
 
 use crate::bench_suite;
-use crate::dse::Evaluator;
+use crate::dse::{drive, Evaluator};
 use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
 use crate::report;
@@ -31,7 +33,8 @@ pub struct SweepConfig {
     pub optimizers: Vec<String>,
     pub budget: usize,
     pub seeds: Vec<u64>,
-    pub threads: usize,
+    /// Persistent simulation workers per engine (1 = serial).
+    pub jobs: usize,
     pub alpha: f64,
     pub out_dir: Option<String>,
 }
@@ -62,6 +65,11 @@ impl SweepConfig {
                 return Err(anyhow!("unknown design '{d}'"));
             }
         }
+        let jobs = j
+            .get("jobs")
+            .or_else(|| j.get("threads"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(1) as usize;
         Ok(SweepConfig {
             designs,
             optimizers,
@@ -71,7 +79,7 @@ impl SweepConfig {
                 .and_then(|v| v.as_arr())
                 .map(|a| a.iter().filter_map(|s| s.as_u64()).collect())
                 .unwrap_or_else(|| vec![1]),
-            threads: j.get("threads").and_then(|v| v.as_u64()).unwrap_or(1) as usize,
+            jobs,
             alpha: j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.7),
             out_dir: j
                 .get("out_dir")
@@ -93,6 +101,8 @@ pub struct SweepRow {
     pub optimizer: String,
     pub seed: u64,
     pub evals: usize,
+    /// Actual simulator invocations (evals minus memo hits).
+    pub sims: u64,
     pub elapsed_secs: f64,
     pub front_size: usize,
     pub star_latency: u64,
@@ -110,7 +120,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
         let bd = bench_suite::build(design);
         let trace = Arc::new(collect_trace(&bd.design, &bd.args)?);
         let space = Space::from_trace(&trace);
-        let mut ev = Evaluator::parallel(trace.clone(), cfg.threads);
+        let mut ev = Evaluator::parallel(trace.clone(), cfg.jobs);
         let (maxp, minp) = ev.eval_baselines();
         let (base_lat, base_bram) = (
             maxp.latency
@@ -122,7 +132,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                 ev.reset_run(true);
                 let mut o = opt::by_name(optimizer, seed).unwrap();
                 let t0 = std::time::Instant::now();
-                o.run(&mut ev, &space, cfg.budget);
+                drive(&mut *o, &mut ev, &space, cfg.budget);
                 let dt = t0.elapsed().as_secs_f64();
                 let front = ev.pareto();
                 let pts: Vec<(u64, u32)> =
@@ -135,6 +145,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                     optimizer: optimizer.clone(),
                     seed,
                     evals: ev.n_evals(),
+                    sims: ev.n_sim,
                     elapsed_secs: dt,
                     front_size: front.len(),
                     star_latency: star.0,
@@ -152,6 +163,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                         &ev.history,
                         &front,
                         dt,
+                        Some(&ev),
                     );
                     report::write_file(
                         &format!("{dir}/{design}_{optimizer}_s{seed}.json"),
@@ -174,6 +186,7 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                 r.optimizer.clone(),
                 r.seed.to_string(),
                 format!("{:.3}", r.elapsed_secs),
+                r.sims.to_string(),
                 r.front_size.to_string(),
                 format!("{:.4}", r.star_latency as f64 / r.base_latency as f64),
                 format!(
@@ -185,7 +198,7 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
         })
         .collect();
     report::markdown_table(
-        &["design", "optimizer", "seed", "secs", "front", "lat×", "BRAM↓", "rescue"],
+        &["design", "optimizer", "seed", "secs", "sims", "front", "lat×", "BRAM↓", "rescue"],
         &table_rows,
     )
 }
@@ -206,6 +219,11 @@ mod tests {
         assert_eq!(cfg.seeds, vec![1, 2]);
         assert_eq!(cfg.budget, 50);
         assert_eq!(cfg.alpha, 0.7);
+        assert_eq!(cfg.jobs, 1, "threads accepted as legacy alias");
+
+        let j = Json::parse(r#"{"designs": ["fig2"], "optimizers": ["greedy"], "jobs": 4}"#)
+            .unwrap();
+        assert_eq!(SweepConfig::from_json(&j).unwrap().jobs, 4);
 
         let bad = Json::parse(r#"{"designs": ["nope"], "optimizers": ["greedy"]}"#).unwrap();
         assert!(SweepConfig::from_json(&bad).is_err());
@@ -217,7 +235,7 @@ mod tests {
     fn sweep_executes_grid() {
         let j = Json::parse(
             r#"{"designs": ["fig2", "gesummv"], "optimizers": ["greedy", "grouped_sa"],
-                "budget": 60, "seeds": [1], "threads": 1}"#,
+                "budget": 60, "seeds": [1], "jobs": 1}"#,
         )
         .unwrap();
         let cfg = SweepConfig::from_json(&j).unwrap();
@@ -226,6 +244,7 @@ mod tests {
         for r in &rows {
             assert!(r.front_size >= 1, "{}/{}", r.design, r.optimizer);
             assert!(r.star_latency > 0);
+            assert!(r.sims as usize <= r.evals + 2);
         }
         assert!(rows.iter().any(|r| r.design == "fig2" && r.min_deadlocked));
         let md = rows_to_markdown(&rows);

@@ -24,13 +24,20 @@
 //!   shift-register threshold, and the depth-breakpoint pruning of §III-C.
 //! - [`opt`] — the optimizers of §III-D (random, grouped random, simulated
 //!   annealing, grouped SA, greedy) plus baselines, Pareto extraction and
-//!   the α/β scoring.
-//! - [`dse`] — the DSE engine: the [`dse::Evaluator`] black-box
-//!   `x → (f_lat, f_bram)`, memoization, convergence recording, and the
-//!   leader/worker parallel engine.
-//! - [`runtime`] — the PJRT runtime: loads the AOT-compiled JAX/Pallas
-//!   batched-analytics HLO (`artifacts/*.hlo.txt`) and executes it from the
-//!   DSE hot path (Python is never on the request path).
+//!   the α/β scoring. All optimizers speak the batch-first **ask/tell**
+//!   protocol ([`opt::Optimizer`]): `ask` proposes a batch, the engine
+//!   evaluates it, `tell` hands the outcomes back.
+//! - [`dse`] — the DSE engine layer: [`dse::EvalEngine`] owns the
+//!   black-box evaluation `x → (f_lat, f_bram)` — a persistent worker
+//!   pool (threads spawned once, each with a cloned [`FastSim`]), a
+//!   sharded memo cache, in-batch dedup, batched BRAM backend calls, and
+//!   engine statistics — while [`dse::drive`] is the single loop that
+//!   runs any optimizer against it with centralized budget/history
+//!   accounting (`--jobs N` on the CLI sizes the pool).
+//! - [`runtime`] — the batched-analytics runtime: a native interpreter
+//!   of the AOT-exported JAX/Pallas analytics computation (BRAM totals,
+//!   β-grid objectives, dominance mask), shape-bucketed like the
+//!   `artifacts/` convention (Python is never on the request path).
 //! - [`bench_suite`] — generators for the paper's 24 evaluation designs
 //!   (Stream-HLS-like kernels, the Fig. 2 example, FlowGNN-PNA).
 //! - [`report`] — CSV/JSON emitters and ASCII plots for benches.

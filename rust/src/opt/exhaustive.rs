@@ -1,18 +1,29 @@
 //! Exhaustive enumeration of the pruned space — only tractable for tiny
 //! designs; used as the ground-truth front in optimizer-quality tests
-//! and the pruning ablation.
+//! and the pruning ablation. Under ask/tell the odometer state lives in
+//! the optimizer and each `ask` emits the next batch of configurations.
 
-use super::{Optimizer, Space};
-use crate::dse::Evaluator;
+use super::{AskCtx, Optimizer, Space};
+use crate::dse::EvalResult;
 
 pub struct Exhaustive {
     /// Safety cap on enumerated configurations.
     pub cap: usize,
+    /// Odometer over `space.per_fifo` candidate indices (None = not
+    /// started yet).
+    idx: Option<Vec<usize>>,
+    emitted: usize,
+    finished: bool,
 }
 
 impl Exhaustive {
     pub fn new() -> Exhaustive {
-        Exhaustive { cap: 200_000 }
+        Exhaustive {
+            cap: 200_000,
+            idx: None,
+            emitted: 0,
+            finished: false,
+        }
     }
 
     /// Exact size of the pruned cartesian space (None on overflow).
@@ -35,32 +46,36 @@ impl Optimizer for Exhaustive {
         "exhaustive"
     }
 
-    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
-        let limit = budget.min(self.cap);
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        if self.finished {
+            return Vec::new();
+        }
+        let space = ctx.space;
         let n = space.num_fifos();
-        let mut idx = vec![0usize; n];
-        let mut batch: Vec<Box<[u32]>> = Vec::with_capacity(64);
-        let mut count = 0usize;
-        'outer: loop {
+        let want = ctx
+            .budget_left
+            .min(self.cap - self.emitted)
+            .min(ctx.batch_hint);
+        if want == 0 {
+            self.finished = true;
+            return Vec::new();
+        }
+        let mut idx = self.idx.take().unwrap_or_else(|| vec![0usize; n]);
+        let mut batch: Vec<Box<[u32]>> = Vec::with_capacity(want);
+        loop {
             let cfg: Box<[u32]> = idx
                 .iter()
                 .zip(&space.per_fifo)
                 .map(|(&i, c)| c[i])
                 .collect();
             batch.push(cfg);
-            count += 1;
-            if batch.len() == 64 {
-                ev.eval_batch(&batch);
-                batch.clear();
-            }
-            if count >= limit {
-                break;
-            }
+            self.emitted += 1;
             // Odometer increment.
             let mut pos = 0;
             loop {
                 if pos == n {
-                    break 'outer;
+                    self.finished = true;
+                    break;
                 }
                 idx[pos] += 1;
                 if idx[pos] < space.per_fifo[pos].len() {
@@ -69,10 +84,18 @@ impl Optimizer for Exhaustive {
                 idx[pos] = 0;
                 pos += 1;
             }
+            if self.finished || batch.len() == want {
+                break;
+            }
         }
-        if !batch.is_empty() {
-            ev.eval_batch(&batch);
-        }
+        self.idx = Some(idx);
+        batch
+    }
+
+    fn tell(&mut self, _results: &[EvalResult]) {}
+
+    fn done(&self) -> bool {
+        self.finished
     }
 }
 
@@ -80,6 +103,7 @@ impl Optimizer for Exhaustive {
 mod tests {
     use super::*;
     use crate::bench_suite;
+    use crate::dse::{drive, Evaluator};
     use crate::trace::collect_trace;
     use std::sync::Arc;
 
@@ -90,7 +114,7 @@ mod tests {
         let space = Space::from_trace(&t);
         let size = Exhaustive::space_size(&space).unwrap();
         let mut ev = Evaluator::new(t);
-        Exhaustive::new().run(&mut ev, &space, usize::MAX);
+        drive(&mut Exhaustive::new(), &mut ev, &space, usize::MAX);
         assert_eq!(ev.n_evals(), size);
         // Every enumerated config is distinct.
         let distinct: std::collections::HashSet<_> =
@@ -104,7 +128,7 @@ mod tests {
         let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
         let space = Space::from_trace(&t);
         let mut ev = Evaluator::new(t);
-        Exhaustive::new().run(&mut ev, &space, 50);
+        drive(&mut Exhaustive::new(), &mut ev, &space, 50);
         assert_eq!(ev.n_evals(), 50);
     }
 }

@@ -4,25 +4,57 @@
 //! reduction unless it deadlocks or inflates latency beyond a fixed
 //! percentage of the baseline. Deterministic; chooses its own stopping
 //! point (between `num_fifos` and ~2·`num_fifos` + 1 evaluations).
+//!
+//! Ask/tell phases: one stats evaluation of the baseline (the occupancy
+//! ranking — requested through [`Optimizer::wants_stats`]), then a
+//! sequence of single-configuration trial collapses (each trial depends
+//! on the previous accept/reject, so the batch size is inherently 1),
+//! then one final evaluation of the kept configuration.
 
-use super::{Optimizer, Space};
-use crate::dse::Evaluator;
+use super::{AskCtx, Optimizer};
+use crate::dse::EvalResult;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Evaluate Baseline-Max with stats for the occupancy ranking.
+    Baseline,
+    /// Try collapsing FIFOs one at a time, in ranking order.
+    Trials,
+    /// Evaluate the kept configuration one last time.
+    Final,
+    Done,
+}
 
 pub struct Greedy {
     /// Maximum tolerated latency inflation over the baseline (the paper's
     /// "fixed percentage over baseline"; 1% by default).
     pub latency_tolerance: f64,
+    phase: Phase,
+    /// FIFO indices, largest observed occupancy first.
+    order: Vec<usize>,
+    pos: usize,
+    cur: Vec<u32>,
+    saved: u32,
+    trying: Option<usize>,
+    max_lat: u64,
 }
 
 impl Greedy {
     pub fn new() -> Greedy {
-        Greedy {
-            latency_tolerance: 0.01,
-        }
+        Self::with_tolerance(0.01)
     }
 
     pub fn with_tolerance(latency_tolerance: f64) -> Greedy {
-        Greedy { latency_tolerance }
+        Greedy {
+            latency_tolerance,
+            phase: Phase::Baseline,
+            order: Vec::new(),
+            pos: 0,
+            cur: Vec::new(),
+            saved: 0,
+            trying: None,
+            max_lat: 0,
+        }
     }
 }
 
@@ -37,40 +69,84 @@ impl Optimizer for Greedy {
         "greedy"
     }
 
-    fn run(&mut self, ev: &mut Evaluator, _space: &Space, budget: usize) {
-        let trace = ev.trace().clone();
-        let baseline = trace.baseline_max();
-
-        // Baseline pass with occupancy statistics for the ranking.
-        let (out, stats) = ev.eval_with_stats(&baseline);
-        let base_lat = match out.latency() {
-            Some(l) => l,
-            None => return, // Baseline-Max deadlocking means a broken design.
-        };
-        let max_lat = base_lat + (base_lat as f64 * self.latency_tolerance).ceil() as u64;
-
-        // Rank: largest observed depth first.
-        let mut order: Vec<usize> = (0..trace.channels.len()).collect();
-        order.sort_by_key(|&i| std::cmp::Reverse(stats.max_occupancy[i]));
-
-        let mut cur = baseline;
-        for &i in &order {
-            if ev.n_evals() >= budget.max(1) {
-                break;
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        match self.phase {
+            Phase::Baseline => {
+                // Baseline-Max: every FIFO at its upper bound (the space
+                // carries the trace's `u_i`, already floored at 2).
+                self.cur = ctx.space.bounds.iter().map(|&u| u.max(2)).collect();
+                vec![self.cur.clone().into()]
             }
-            if cur[i] <= 2 {
-                continue;
+            Phase::Trials => {
+                loop {
+                    if ctx.budget_left == 0 || self.pos >= self.order.len() {
+                        break;
+                    }
+                    let i = self.order[self.pos];
+                    if self.cur[i] <= 2 {
+                        self.pos += 1;
+                        continue;
+                    }
+                    self.saved = self.cur[i];
+                    self.cur[i] = 2;
+                    self.trying = Some(i);
+                    return vec![self.cur.clone().into()];
+                }
+                // No trials left: evaluate the kept configuration so it
+                // is in history (may overrun a tight budget by one, as
+                // the imperative implementation did).
+                self.phase = Phase::Final;
+                vec![self.cur.clone().into()]
             }
-            let saved = cur[i];
-            cur[i] = 2;
-            let (lat, _bram) = ev.eval(&cur);
-            let ok = matches!(lat, Some(l) if l <= max_lat);
-            if !ok {
-                cur[i] = saved;
-            }
+            Phase::Final | Phase::Done => Vec::new(),
         }
-        // Final state evaluation so the kept configuration is in history.
-        ev.eval(&cur);
+    }
+
+    fn tell(&mut self, results: &[EvalResult]) {
+        let r = match results.first() {
+            Some(r) => r,
+            None => return,
+        };
+        match self.phase {
+            Phase::Baseline => {
+                let base_lat = match r.latency {
+                    Some(l) => l,
+                    None => {
+                        // Baseline-Max deadlocking means a broken design.
+                        self.phase = Phase::Done;
+                        return;
+                    }
+                };
+                self.max_lat =
+                    base_lat + (base_lat as f64 * self.latency_tolerance).ceil() as u64;
+                let stats = r.stats.as_ref().expect("greedy baseline needs stats");
+                self.order = (0..self.cur.len()).collect();
+                self.order
+                    .sort_by_key(|&i| std::cmp::Reverse(stats.max_occupancy[i]));
+                self.pos = 0;
+                self.phase = Phase::Trials;
+            }
+            Phase::Trials => {
+                let i = self.trying.take().expect("trial result without a trial");
+                let ok = matches!(r.latency, Some(l) if l <= self.max_lat);
+                if !ok {
+                    self.cur[i] = self.saved;
+                }
+                self.pos += 1;
+            }
+            Phase::Final => {
+                self.phase = Phase::Done;
+            }
+            Phase::Done => {}
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    fn wants_stats(&self) -> bool {
+        self.phase == Phase::Baseline
     }
 }
 
@@ -78,6 +154,7 @@ impl Optimizer for Greedy {
 mod tests {
     use super::*;
     use crate::bench_suite;
+    use crate::dse::{drive, Evaluator};
     use crate::opt::Space;
     use crate::trace::collect_trace;
     use std::sync::Arc;
@@ -97,7 +174,7 @@ mod tests {
         let (basep, _) = base_ev.eval_baselines();
         let base_lat = basep.latency.unwrap();
 
-        Greedy::new().run(&mut ev, &space, 10_000);
+        drive(&mut Greedy::new(), &mut ev, &space, 10_000);
         let best = ev
             .history
             .iter()
@@ -121,7 +198,7 @@ mod tests {
     #[test]
     fn greedy_never_keeps_deadlock() {
         let (mut ev, space) = setup("fig2");
-        Greedy::new().run(&mut ev, &space, 10_000);
+        drive(&mut Greedy::new(), &mut ev, &space, 10_000);
         // The last history entry is the kept configuration.
         let kept = ev.history.last().unwrap();
         assert!(kept.is_feasible(), "greedy kept a deadlocked config");
@@ -130,7 +207,7 @@ mod tests {
     #[test]
     fn greedy_on_flowgnn_respects_data_dependent_thresholds() {
         let (mut ev, space) = setup("flowgnn_pna");
-        Greedy::new().run(&mut ev, &space, 10_000);
+        drive(&mut Greedy::new(), &mut ev, &space, 10_000);
         let kept = ev.history.last().unwrap();
         assert!(kept.is_feasible());
         // The msg FIFOs (lanes) cannot all be 2 — bursts must fit.
@@ -143,9 +220,9 @@ mod tests {
     #[test]
     fn greedy_is_deterministic() {
         let (mut e1, space) = setup("bicg");
-        Greedy::new().run(&mut e1, &space, 10_000);
+        drive(&mut Greedy::new(), &mut e1, &space, 10_000);
         let (mut e2, _) = setup("bicg");
-        Greedy::new().run(&mut e2, &space, 10_000);
+        drive(&mut Greedy::new(), &mut e2, &space, 10_000);
         let d1: Vec<_> = e1.history.iter().map(|p| p.depths.clone()).collect();
         let d2: Vec<_> = e2.history.iter().map(|p| p.depths.clone()).collect();
         assert_eq!(d1, d2);

@@ -9,10 +9,17 @@
 //! | `greedy`         | Greedy (INR-Arch)      | [`greedy`]         |
 //! | `exhaustive`     | (testing aid)          | [`exhaustive`]     |
 //! | `vitis_hunter`   | Vitis deadlock hunter  | [`vitis_hunter`]   |
+//! | `nsga2`          | NSGA-II (extension)    | [`nsga2`]          |
 //!
-//! All optimizers record their proposals through the shared
-//! [`Evaluator`](crate::dse::Evaluator); the Pareto front is extracted
-//! from its history afterwards, exactly as in the paper's flow.
+//! Every optimizer speaks the batch-first **ask/tell** protocol: the
+//! engine's [`drive`](crate::dse::drive) loop repeatedly calls
+//! [`Optimizer::ask`] for a batch of proposals, evaluates them (in
+//! parallel, memoized, deduplicated), and hands the outcomes back through
+//! [`Optimizer::tell`]. Optimizers never touch the evaluator directly —
+//! population methods get their natural batch parallelism for free, and
+//! the engine centralizes history, budget, and cache accounting. The
+//! Pareto front is extracted from the engine history afterwards, exactly
+//! as in the paper's flow.
 
 pub mod exhaustive;
 pub mod greedy;
@@ -26,16 +33,51 @@ pub mod vitis_hunter;
 
 pub use space::Space;
 
-use crate::dse::Evaluator;
+use crate::dse::EvalResult;
 
-/// A black-box FIFO-sizing optimizer.
+/// Context handed to every [`Optimizer::ask`] call.
+pub struct AskCtx<'a> {
+    /// The pruned search space (§III-C).
+    pub space: &'a Space,
+    /// Proposals remaining in the run's budget. The first `ask` of a run
+    /// sees the full budget.
+    pub budget_left: usize,
+    /// The engine's preferred batch size (large enough to keep every
+    /// worker busy). Purely advisory.
+    pub batch_hint: usize,
+}
+
+/// A black-box FIFO-sizing optimizer (batch-first ask/tell protocol).
+///
+/// Contract: after a non-empty `ask`, the driver evaluates the batch and
+/// calls `tell` exactly once with one [`EvalResult`] per proposal, in
+/// proposal order, before the next `ask`. An empty `ask` (or `done()`
+/// returning true) ends the run. Optimizers are single-run objects —
+/// construct a fresh one per run.
 pub trait Optimizer {
     /// Short name used in reports (matches the table above).
     fn name(&self) -> &'static str;
-    /// Propose and evaluate up to `budget` configurations through `ev`
-    /// (heuristics may stop early — the paper's greedy "deterministically
-    /// chooses its own stopping point").
-    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize);
+
+    /// Propose the next batch of configurations. Return at most
+    /// `ctx.budget_left` proposals (heuristics may stop early — the
+    /// paper's greedy "deterministically chooses its own stopping
+    /// point"); an empty batch ends the run.
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>>;
+
+    /// Receive the evaluated outcomes of the batch just asked.
+    fn tell(&mut self, results: &[EvalResult]);
+
+    /// True once the optimizer has nothing more to propose.
+    fn done(&self) -> bool {
+        false
+    }
+
+    /// When true, the batch just asked is evaluated serially with
+    /// per-channel statistics and deadlock block info attached to each
+    /// [`EvalResult`] (queried by the driver after each `ask`).
+    fn wants_stats(&self) -> bool {
+        false
+    }
 }
 
 /// The paper's five evaluated optimizers, with per-optimizer seeds.

@@ -8,10 +8,22 @@
 //! crossover is uniform; mutation re-draws or steps candidate indices;
 //! selection is non-dominated sorting + crowding distance; deadlocked
 //! individuals rank behind every feasible one.
+//!
+//! Population methods are the natural fit for ask/tell: every `ask`
+//! emits one whole generation (the initial population or an offspring
+//! cohort) that the engine evaluates across all workers in one batch —
+//! parallelism the imperative point-by-point loop left on the floor.
 
-use super::{Optimizer, Space};
-use crate::dse::Evaluator;
+use super::{AskCtx, Optimizer, Space};
+use crate::dse::EvalResult;
 use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Init,
+    Evolve,
+    Done,
+}
 
 pub struct Nsga2 {
     rng: Rng,
@@ -20,6 +32,13 @@ pub struct Nsga2 {
     pub pop: usize,
     /// Per-gene mutation probability.
     pub mutation_rate: f64,
+    phase: Phase,
+    /// Effective population size (capped by the run budget).
+    pop_eff: usize,
+    genomes: Vec<Vec<usize>>,
+    fits: Vec<Fit>,
+    /// Genomes of the batch awaiting evaluation.
+    pending: Vec<Vec<usize>>,
 }
 
 impl Nsga2 {
@@ -29,6 +48,11 @@ impl Nsga2 {
             grouped,
             pop: 48,
             mutation_rate: 0.08,
+            phase: Phase::Init,
+            pop_eff: 0,
+            genomes: Vec::new(),
+            fits: Vec::new(),
+            pending: Vec::new(),
         }
     }
 
@@ -48,6 +72,22 @@ impl Nsga2 {
         } else {
             depths.into()
         }
+    }
+
+    /// Per-individual crowding distance of the current population.
+    fn population_crowding(&self, rank: &[usize]) -> Vec<f64> {
+        let mut crowd = vec![0.0f64; self.genomes.len()];
+        let max_rank = rank.iter().copied().max().unwrap_or(0);
+        for level in 0..=max_rank {
+            let front: Vec<usize> = (0..self.genomes.len())
+                .filter(|&i| rank[i] == level)
+                .collect();
+            let d = crowding(&front, &self.fits);
+            for (slot, &i) in front.iter().enumerate() {
+                crowd[i] = d[slot];
+            }
+        }
+        crowd
     }
 }
 
@@ -145,109 +185,125 @@ impl Optimizer for Nsga2 {
         }
     }
 
-    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
-        let cands = self.candidates(space);
-        let genes_len = cands.len();
-        let pop = self.pop.min(budget.max(2));
-
-        // Initial population: corners + random.
-        let mut genomes: Vec<Vec<usize>> = Vec::with_capacity(pop);
-        genomes.push(cands.iter().map(|c| c.len() - 1).collect()); // Baseline-Max-ish
-        genomes.push(vec![0; genes_len]); // Baseline-Min-ish
-        while genomes.len() < pop {
-            genomes.push((0..genes_len).map(|g| self.rng.index(cands[g].len())).collect());
-        }
-        let evaluate = |ev: &mut Evaluator, gs: &[Vec<usize>], me: &Self| -> Vec<Fit> {
-            let cfgs: Vec<Box<[u32]>> = gs.iter().map(|g| me.expand(space, g)).collect();
-            ev.eval_batch(&cfgs)
-                .into_iter()
-                .map(|(latency, bram)| Fit { latency, bram })
-                .collect()
-        };
-        let mut fits = evaluate(ev, &genomes, self);
-
-        while ev.n_evals() + pop <= budget {
-            // Offspring via binary tournament on (rank, crowding).
-            let rank = nondominated_rank(&fits);
-            let mut crowd = vec![0.0f64; genomes.len()];
-            {
-                let max_rank = rank.iter().copied().max().unwrap_or(0);
-                for level in 0..=max_rank {
-                    let front: Vec<usize> =
-                        (0..genomes.len()).filter(|&i| rank[i] == level).collect();
-                    for (slot, &i) in front.iter().enumerate() {
-                        crowd[i] = crowding(&front, &fits)[slot];
-                    }
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        let space = ctx.space;
+        match self.phase {
+            Phase::Init => {
+                let cands = self.candidates(space);
+                let genes_len = cands.len();
+                let pop = self.pop.min(ctx.budget_left.max(2));
+                self.pop_eff = pop;
+                // Initial population: corners + random.
+                let mut genomes: Vec<Vec<usize>> = Vec::with_capacity(pop);
+                genomes.push(cands.iter().map(|c| c.len() - 1).collect()); // Baseline-Max-ish
+                genomes.push(vec![0; genes_len]); // Baseline-Min-ish
+                while genomes.len() < pop {
+                    genomes
+                        .push((0..genes_len).map(|g| self.rng.index(cands[g].len())).collect());
                 }
+                genomes.truncate(pop);
+                let batch = genomes.iter().map(|g| self.expand(space, g)).collect();
+                self.pending = genomes;
+                batch
             }
-            let tournament = |rng: &mut Rng| -> usize {
-                let a = rng.index(genomes.len());
-                let b = rng.index(genomes.len());
-                let a_better =
-                    rank[a] < rank[b] || (rank[a] == rank[b] && crowd[a] >= crowd[b]);
-                if a_better {
-                    a
-                } else {
-                    b
+            Phase::Evolve => {
+                let pop = self.pop_eff;
+                if ctx.budget_left < pop {
+                    self.phase = Phase::Done;
+                    return Vec::new();
                 }
-            };
-            let mut offspring: Vec<Vec<usize>> = Vec::with_capacity(pop);
-            while offspring.len() < pop {
-                let pa = tournament(&mut self.rng);
-                let pb = tournament(&mut self.rng);
-                // Uniform crossover.
-                let mut child: Vec<usize> = (0..genes_len)
-                    .map(|g| {
-                        if self.rng.chance(0.5) {
-                            genomes[pa][g]
+                let cands = self.candidates(space);
+                let genes_len = cands.len();
+                // Offspring via binary tournament on (rank, crowding).
+                let rank = nondominated_rank(&self.fits);
+                let crowd = self.population_crowding(&rank);
+                let n = self.genomes.len();
+                let mut offspring: Vec<Vec<usize>> = Vec::with_capacity(pop);
+                while offspring.len() < pop {
+                    let tournament = |rng: &mut Rng| -> usize {
+                        let a = rng.index(n);
+                        let b = rng.index(n);
+                        let a_better =
+                            rank[a] < rank[b] || (rank[a] == rank[b] && crowd[a] >= crowd[b]);
+                        if a_better {
+                            a
                         } else {
-                            genomes[pb][g]
+                            b
                         }
-                    })
-                    .collect();
-                // Mutation: step or re-draw.
-                for (g, gene) in child.iter_mut().enumerate() {
-                    if self.rng.chance(self.mutation_rate) {
-                        let len = cands[g].len();
-                        *gene = if self.rng.chance(0.5) {
-                            self.rng.index(len)
-                        } else if self.rng.chance(0.5) {
-                            (*gene + 1).min(len - 1)
-                        } else {
-                            gene.saturating_sub(1)
-                        };
+                    };
+                    let pa = tournament(&mut self.rng);
+                    let pb = tournament(&mut self.rng);
+                    // Uniform crossover.
+                    let mut child: Vec<usize> = (0..genes_len)
+                        .map(|g| {
+                            if self.rng.chance(0.5) {
+                                self.genomes[pa][g]
+                            } else {
+                                self.genomes[pb][g]
+                            }
+                        })
+                        .collect();
+                    // Mutation: step or re-draw.
+                    for (g, gene) in child.iter_mut().enumerate() {
+                        if self.rng.chance(self.mutation_rate) {
+                            let len = cands[g].len();
+                            *gene = if self.rng.chance(0.5) {
+                                self.rng.index(len)
+                            } else if self.rng.chance(0.5) {
+                                (*gene + 1).min(len - 1)
+                            } else {
+                                gene.saturating_sub(1)
+                            };
+                        }
                     }
+                    offspring.push(child);
                 }
-                offspring.push(child);
+                let batch = offspring.iter().map(|g| self.expand(space, g)).collect();
+                self.pending = offspring;
+                batch
             }
-            let off_fits = evaluate(ev, &offspring, self);
-
-            // Environmental selection over parents ∪ offspring.
-            genomes.extend(offspring);
-            fits.extend(off_fits);
-            let rank = nondominated_rank(&fits);
-            let mut idx: Vec<usize> = (0..genomes.len()).collect();
-            // Crowding per front for tie-break.
-            let mut crowd = vec![0.0f64; genomes.len()];
-            let max_rank = rank.iter().copied().max().unwrap_or(0);
-            for level in 0..=max_rank {
-                let front: Vec<usize> = (0..genomes.len()).filter(|&i| rank[i] == level).collect();
-                let d = crowding(&front, &fits);
-                for (slot, &i) in front.iter().enumerate() {
-                    crowd[i] = d[slot];
-                }
-            }
-            idx.sort_by(|&a, &b| {
-                rank[a].cmp(&rank[b]).then(
-                    crowd[b]
-                        .partial_cmp(&crowd[a])
-                        .unwrap_or(std::cmp::Ordering::Equal),
-                )
-            });
-            idx.truncate(pop);
-            genomes = idx.iter().map(|&i| genomes[i].clone()).collect();
-            fits = idx.iter().map(|&i| fits[i]).collect();
+            Phase::Done => Vec::new(),
         }
+    }
+
+    fn tell(&mut self, results: &[EvalResult]) {
+        let new_fits: Vec<Fit> = results
+            .iter()
+            .map(|r| Fit {
+                latency: r.latency,
+                bram: r.bram,
+            })
+            .collect();
+        match self.phase {
+            Phase::Init => {
+                self.genomes = std::mem::take(&mut self.pending);
+                self.fits = new_fits;
+                self.phase = Phase::Evolve;
+            }
+            Phase::Evolve => {
+                // Environmental selection over parents ∪ offspring.
+                self.genomes.extend(std::mem::take(&mut self.pending));
+                self.fits.extend(new_fits);
+                let rank = nondominated_rank(&self.fits);
+                let crowd = self.population_crowding(&rank);
+                let mut idx: Vec<usize> = (0..self.genomes.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    rank[a].cmp(&rank[b]).then(
+                        crowd[b]
+                            .partial_cmp(&crowd[a])
+                            .unwrap_or(std::cmp::Ordering::Equal),
+                    )
+                });
+                idx.truncate(self.pop_eff);
+                self.genomes = idx.iter().map(|&i| self.genomes[i].clone()).collect();
+                self.fits = idx.iter().map(|&i| self.fits[i]).collect();
+            }
+            Phase::Done => {}
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.phase == Phase::Done
     }
 }
 
@@ -255,6 +311,7 @@ impl Optimizer for Nsga2 {
 mod tests {
     use super::*;
     use crate::bench_suite;
+    use crate::dse::{drive, Evaluator};
     use crate::trace::collect_trace;
     use std::sync::Arc;
 
@@ -286,7 +343,7 @@ mod tests {
     #[test]
     fn nsga2_respects_budget_and_finds_frontier() {
         let (mut ev, space) = setup("gesummv");
-        Nsga2::new(5, false).run(&mut ev, &space, 300);
+        drive(&mut Nsga2::new(5, false), &mut ev, &space, 300);
         assert!(ev.n_evals() <= 300);
         let front = ev.pareto();
         assert!(front.len() >= 2, "NSGA-II should spread the front");
@@ -295,7 +352,7 @@ mod tests {
     #[test]
     fn grouped_nsga2_uniform_groups() {
         let (mut ev, space) = setup("gesummv");
-        Nsga2::new(7, true).run(&mut ev, &space, 200);
+        drive(&mut Nsga2::new(7, true), &mut ev, &space, 200);
         for p in &ev.history {
             for ids in &space.groups {
                 let mx = ids.iter().map(|&i| p.depths[i]).max().unwrap();
@@ -309,7 +366,17 @@ mod tests {
     #[test]
     fn nsga2_rescues_deadlocked_min() {
         let (mut ev, space) = setup("fig2");
-        Nsga2::new(3, false).run(&mut ev, &space, 150);
+        drive(&mut Nsga2::new(3, false), &mut ev, &space, 150);
         assert!(ev.history.iter().any(|p| p.is_feasible()));
+    }
+
+    #[test]
+    fn nsga2_generations_are_whole_batches() {
+        let (mut ev, space) = setup("gesummv");
+        let mut o = Nsga2::new(1, false);
+        o.pop = 10;
+        drive(&mut o, &mut ev, &space, 45);
+        // init 10 + 3 generations of 10 = 40 ≤ 45 < 50.
+        assert_eq!(ev.n_evals(), 40);
     }
 }

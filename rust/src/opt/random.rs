@@ -6,13 +6,14 @@
 //! draws one candidate per stream-array group and applies it to every
 //! member, exploiting the similar access patterns of `hls::stream<T>
 //! name[N]` arrays.
+//!
+//! Under ask/tell the sampler is stateless between batches: each `ask`
+//! draws `min(budget_left, batch_hint)` fresh samples, which the engine
+//! evaluates across its whole worker pool at once.
 
-use super::{Optimizer, Space};
-use crate::dse::Evaluator;
+use super::{AskCtx, Optimizer, Space};
+use crate::dse::EvalResult;
 use crate::util::Rng;
-
-/// Evaluation batch size for the leader/worker pool.
-const BATCH: usize = 64;
 
 pub struct RandomSearch {
     rng: Rng,
@@ -75,21 +76,19 @@ impl Optimizer for RandomSearch {
         }
     }
 
-    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
-        let mut left = budget;
-        while left > 0 {
-            let n = left.min(BATCH);
-            let batch: Vec<Box<[u32]>> = (0..n).map(|_| self.sample(space)).collect();
-            ev.eval_batch(&batch);
-            left -= n;
-        }
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        let n = ctx.budget_left.min(ctx.batch_hint);
+        (0..n).map(|_| self.sample(ctx.space)).collect()
     }
+
+    fn tell(&mut self, _results: &[EvalResult]) {}
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bench_suite;
+    use crate::dse::{drive, Evaluator};
     use crate::trace::collect_trace;
     use std::sync::Arc;
 
@@ -104,7 +103,7 @@ mod tests {
     fn respects_budget_and_candidates() {
         let (mut ev, space) = setup("bicg");
         let mut opt = RandomSearch::new(7, false);
-        opt.run(&mut ev, &space, 100);
+        drive(&mut opt, &mut ev, &space, 100);
         assert_eq!(ev.n_evals(), 100);
         for p in &ev.history {
             for (i, &d) in p.depths.iter().enumerate() {
@@ -120,7 +119,7 @@ mod tests {
     fn grouped_assigns_uniform_depths_within_groups() {
         let (mut ev, space) = setup("gesummv");
         let mut opt = RandomSearch::new(7, true);
-        opt.run(&mut ev, &space, 20);
+        drive(&mut opt, &mut ev, &space, 20);
         for p in &ev.history {
             for ids in &space.groups {
                 // All members share the group draw, modulo per-member
@@ -138,7 +137,7 @@ mod tests {
     fn finds_feasible_points_on_fig2() {
         let (mut ev, space) = setup("fig2");
         let mut opt = RandomSearch::new(42, false);
-        opt.run(&mut ev, &space, 200);
+        drive(&mut opt, &mut ev, &space, 200);
         let front = ev.pareto();
         assert!(!front.is_empty(), "random must find feasible fig2 configs");
     }
@@ -146,9 +145,9 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let (mut ev1, space) = setup("bicg");
-        RandomSearch::new(5, false).run(&mut ev1, &space, 30);
+        drive(&mut RandomSearch::new(5, false), &mut ev1, &space, 30);
         let (mut ev2, _) = setup("bicg");
-        RandomSearch::new(5, false).run(&mut ev2, &space, 30);
+        drive(&mut RandomSearch::new(5, false), &mut ev2, &space, 30);
         let d1: Vec<_> = ev1.history.iter().map(|p| p.depths.clone()).collect();
         let d2: Vec<_> = ev2.history.iter().map(|p| p.depths.clone()).collect();
         assert_eq!(d1, d2);

@@ -4,22 +4,44 @@
 //! chains, `f(x) = (1-β)·f_lat + β·f_bram` for β ∈ {0, 1/N, …, 1}; each
 //! chain anneals independently and all evaluated points are aggregated
 //! before Pareto extraction (the aggregation happens naturally through
-//! the shared [`Evaluator`] history). As in the paper, the weighted sum
-//! is applied to the *raw* objective values — one reason plain SA
+//! the shared engine history). As in the paper, the weighted sum is
+//! applied to the *raw* objective values — one reason plain SA
 //! underperforms the grouped/greedy methods in Fig. 4, which this
 //! reproduction preserves.
 //!
 //! State is an index vector into the pruned candidate sets (per FIFO, or
 //! per stream-array group in the grouped variant); neighbors perturb one
 //! to three positions by ±1 steps or random jumps.
+//!
+//! Under ask/tell the chains run **in lockstep**: every `ask` collects
+//! one proposal from each chain that still has budget (so a whole
+//! generation of chain moves is simulated as one parallel batch), and
+//! `tell` applies each chain's accept/reject decision. The chains were
+//! strictly sequential before this refactor, leaving the worker pool
+//! idle.
 
 use super::objective::{beta_grid, weighted};
-use super::{Optimizer, Space};
-use crate::dse::Evaluator;
+use super::{AskCtx, Optimizer, Space};
+use crate::dse::EvalResult;
 use crate::util::Rng;
 
 /// Default number of β chains (`N + 1` with N = 7).
 pub const DEFAULT_CHAINS: usize = 8;
+
+struct Chain {
+    beta: f64,
+    /// Current (accepted) state: candidate indices.
+    state: Vec<usize>,
+    /// Proposal awaiting its evaluation result.
+    next: Option<Vec<usize>>,
+    /// Current objective value (∞ until the start state is evaluated).
+    cur: f64,
+    temp: f64,
+    decay: f64,
+    /// Proposals this chain may still make.
+    left: usize,
+    started: bool,
+}
 
 pub struct SimAnneal {
     rng: Rng,
@@ -28,6 +50,9 @@ pub struct SimAnneal {
     pub chains: usize,
     /// Final temperature as a fraction of the initial.
     pub t_final_frac: f64,
+    runs: Option<Vec<Chain>>,
+    /// Chain index of each proposal in the last asked batch.
+    asked: Vec<usize>,
 }
 
 impl SimAnneal {
@@ -37,6 +62,8 @@ impl SimAnneal {
             grouped,
             chains: DEFAULT_CHAINS,
             t_final_frac: 1e-4,
+            runs: None,
+            asked: Vec::new(),
         }
     }
 
@@ -59,72 +86,61 @@ impl SimAnneal {
         }
     }
 
-    fn anneal_chain(
-        &mut self,
-        ev: &mut Evaluator,
-        space: &Space,
-        beta: f64,
-        steps: usize,
-    ) {
-        if steps == 0 {
-            return;
-        }
-        let cands = self.candidates(space);
+    /// Perturb 1–3 positions of a chain state.
+    fn perturb(&mut self, cands: &[Vec<u32>], mut next: Vec<usize>) -> Vec<usize> {
         let n = cands.len();
-
-        // Start from the full-depth corner: always feasible (Baseline-Max
-        // expanded through the pruned space), so every chain has a valid
-        // incumbent even on deadlock-heavy designs.
-        let mut state: Vec<usize> = cands.iter().map(|c| c.len() - 1).collect();
-        let cfg = self.expand(space, &state);
-        let (lat, bram) = ev.eval(&cfg);
-        let mut cur = match lat {
-            Some(l) => weighted(beta, l, bram),
-            None => f64::INFINITY,
-        };
-
-        // Initial temperature from the incumbent's scale; geometric decay.
-        let t0 = (cur.abs().max(1.0)) * 0.1;
-        let t_end = t0 * self.t_final_frac;
-        let decay = (t_end / t0).powf(1.0 / steps.max(1) as f64);
-        let mut temp = t0;
-
-        for _ in 0..steps.saturating_sub(1) {
-            // Perturb 1–3 positions.
-            let mut next = state.clone();
-            let moves = 1 + self.rng.index(3);
-            for _ in 0..moves {
-                let pos = self.rng.index(n);
-                let len = cands[pos].len();
-                if len == 1 {
-                    continue;
-                }
-                next[pos] = if self.rng.chance(0.5) {
-                    // ±1 step.
-                    if self.rng.chance(0.5) {
-                        (next[pos] + 1).min(len - 1)
-                    } else {
-                        next[pos].saturating_sub(1)
-                    }
+        let moves = 1 + self.rng.index(3);
+        for _ in 0..moves {
+            let pos = self.rng.index(n);
+            let len = cands[pos].len();
+            if len == 1 {
+                continue;
+            }
+            next[pos] = if self.rng.chance(0.5) {
+                // ±1 step.
+                if self.rng.chance(0.5) {
+                    (next[pos] + 1).min(len - 1)
                 } else {
-                    self.rng.index(len)
-                };
-            }
-            let cfg = self.expand(space, &next);
-            let (lat, bram) = ev.eval(&cfg);
-            let cand = match lat {
-                Some(l) => weighted(beta, l, bram),
-                None => f64::INFINITY,
+                    next[pos].saturating_sub(1)
+                }
+            } else {
+                self.rng.index(len)
             };
-            let accept = cand <= cur
-                || (cand.is_finite()
-                    && self.rng.f64() < (-(cand - cur) / temp.max(1e-12)).exp());
-            if accept {
-                state = next;
-                cur = cand;
-            }
-            temp *= decay;
         }
+        next
+    }
+
+    /// Build the chain set from the run budget (first `ask`).
+    fn init_runs(&mut self, space: &Space, budget: usize) {
+        let cands = self.candidates(space);
+        // Start every chain from the full-depth corner: always feasible
+        // (Baseline-Max expanded through the pruned space), so each chain
+        // has a valid incumbent even on deadlock-heavy designs.
+        let corner: Vec<usize> = cands.iter().map(|c| c.len() - 1).collect();
+        let new_chain = |beta: f64, steps: usize| Chain {
+            beta,
+            state: corner.clone(),
+            next: None,
+            cur: f64::INFINITY,
+            temp: 1.0,
+            decay: self.t_final_frac.powf(1.0 / steps.max(1) as f64),
+            left: steps,
+            started: false,
+        };
+        let betas = beta_grid(self.chains.max(2) - 1);
+        let per_chain = budget / betas.len();
+        let mut runs: Vec<Chain> = Vec::new();
+        if per_chain > 0 {
+            for &beta in &betas {
+                runs.push(new_chain(beta, per_chain));
+            }
+        }
+        // Spend any rounding remainder on a latency-focused chain.
+        let rem = budget - per_chain * betas.len();
+        if rem > 0 {
+            runs.push(new_chain(0.0, rem));
+        }
+        self.runs = Some(runs);
     }
 }
 
@@ -137,16 +153,85 @@ impl Optimizer for SimAnneal {
         }
     }
 
-    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
-        let betas = beta_grid(self.chains.max(2) - 1);
-        let per_chain = budget / betas.len();
-        for &beta in &betas {
-            self.anneal_chain(ev, space, beta, per_chain);
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        if self.runs.is_none() {
+            self.init_runs(ctx.space, ctx.budget_left);
         }
-        // Spend any rounding remainder on the latency-focused chain.
-        let rem = budget - per_chain * betas.len();
-        if rem > 0 {
-            self.anneal_chain(ev, space, 0.0, rem);
+        self.asked.clear();
+        let mut batch: Vec<Box<[u32]>> = Vec::new();
+        let n_runs = self.runs.as_ref().unwrap().len();
+        for ci in 0..n_runs {
+            let (started, left, state) = {
+                let ch = &self.runs.as_ref().unwrap()[ci];
+                (ch.started, ch.left, ch.state.clone())
+            };
+            if left == 0 {
+                continue;
+            }
+            let proposal = if started {
+                let cands = self.candidates(ctx.space);
+                self.perturb(cands, state)
+            } else {
+                state
+            };
+            batch.push(self.expand(ctx.space, &proposal));
+            let ch = &mut self.runs.as_mut().unwrap()[ci];
+            ch.next = Some(proposal);
+            ch.left -= 1;
+            self.asked.push(ci);
+        }
+        batch
+    }
+
+    fn tell(&mut self, results: &[EvalResult]) {
+        debug_assert_eq!(results.len(), self.asked.len());
+        for (k, r) in results.iter().enumerate() {
+            let ci = self.asked[k];
+            let (beta, started, cur, temp) = {
+                let ch = &self.runs.as_ref().unwrap()[ci];
+                (ch.beta, ch.started, ch.cur, ch.temp)
+            };
+            let cand = match r.latency {
+                Some(l) => weighted(beta, l, r.bram),
+                None => f64::INFINITY,
+            };
+            if !started {
+                // Start-state evaluation: fix the incumbent and set the
+                // initial temperature from its scale.
+                let scale = if cand.is_finite() {
+                    cand.abs().max(1.0)
+                } else {
+                    1.0
+                };
+                let ch = &mut self.runs.as_mut().unwrap()[ci];
+                ch.started = true;
+                if let Some(next) = ch.next.take() {
+                    ch.state = next;
+                }
+                ch.cur = cand;
+                ch.temp = scale * 0.1;
+            } else {
+                let accept = cand <= cur
+                    || (cand.is_finite()
+                        && self.rng.f64() < (-(cand - cur) / temp.max(1e-12)).exp());
+                let ch = &mut self.runs.as_mut().unwrap()[ci];
+                let next = ch.next.take();
+                if accept {
+                    if let Some(next) = next {
+                        ch.state = next;
+                    }
+                    ch.cur = cand;
+                }
+                ch.temp *= ch.decay;
+            }
+        }
+        self.asked.clear();
+    }
+
+    fn done(&self) -> bool {
+        match &self.runs {
+            None => false,
+            Some(runs) => runs.iter().all(|c| c.left == 0 && c.next.is_none()),
         }
     }
 }
@@ -155,6 +240,7 @@ impl Optimizer for SimAnneal {
 mod tests {
     use super::*;
     use crate::bench_suite;
+    use crate::dse::{drive, Evaluator};
     use crate::trace::collect_trace;
     use std::sync::Arc;
 
@@ -168,14 +254,14 @@ mod tests {
     #[test]
     fn budget_respected_exactly() {
         let (mut ev, space) = setup("bicg");
-        SimAnneal::new(1, false).run(&mut ev, &space, 200);
+        drive(&mut SimAnneal::new(1, false), &mut ev, &space, 200);
         assert_eq!(ev.n_evals(), 200);
     }
 
     #[test]
     fn chains_start_feasible_and_explore() {
         let (mut ev, space) = setup("fig2");
-        SimAnneal::new(2, false).run(&mut ev, &space, 160);
+        drive(&mut SimAnneal::new(2, false), &mut ev, &space, 160);
         let feasible = ev.history.iter().filter(|p| p.is_feasible()).count();
         assert!(feasible >= DEFAULT_CHAINS, "at least the chain starts");
         // Exploration: fig2's pruned space has exactly 4 configurations
@@ -188,7 +274,7 @@ mod tests {
     #[test]
     fn grouped_sa_moves_whole_groups() {
         let (mut ev, space) = setup("gesummv");
-        SimAnneal::new(3, true).run(&mut ev, &space, 80);
+        drive(&mut SimAnneal::new(3, true), &mut ev, &space, 80);
         for p in &ev.history {
             for ids in &space.groups {
                 let max = ids.iter().map(|&i| p.depths[i]).max().unwrap();
@@ -205,7 +291,7 @@ mod tests {
         // With β = 1 the objective is pure BRAM; SA should discover (or
         // at least approach) a zero-BRAM config on a tiny design.
         let (mut ev, space) = setup("bicg");
-        SimAnneal::new(4, false).run(&mut ev, &space, 400);
+        drive(&mut SimAnneal::new(4, false), &mut ev, &space, 400);
         let min_bram = ev
             .history
             .iter()
@@ -224,5 +310,16 @@ mod tests {
             "SA never improved on Baseline-Max BRAM ({min_bram} vs {})",
             max_bl.bram
         );
+    }
+
+    #[test]
+    fn sa_is_deterministic_given_seed() {
+        let (mut e1, space) = setup("gesummv");
+        drive(&mut SimAnneal::new(9, false), &mut e1, &space, 120);
+        let (mut e2, _) = setup("gesummv");
+        drive(&mut SimAnneal::new(9, false), &mut e2, &space, 120);
+        let d1: Vec<_> = e1.history.iter().map(|p| p.depths.clone()).collect();
+        let d2: Vec<_> = e2.history.iter().map(|p| p.depths.clone()).collect();
+        assert_eq!(d1, d2);
     }
 }

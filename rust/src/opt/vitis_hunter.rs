@@ -3,67 +3,78 @@
 //! design stops deadlocking. It finds *one feasible* configuration, not a
 //! frontier — included as the comparison baseline and for the
 //! deadlock-rescue example.
+//!
+//! Ask/tell: one configuration per round (the hunt is inherently
+//! sequential). The targeted variant requests stats evaluations so each
+//! round's deadlock block info arrives with the result — the old
+//! imperative version needed a second simulation per round for that.
 
-use super::{Optimizer, Space};
-use crate::dse::Evaluator;
+use super::{AskCtx, Optimizer, Space};
+use crate::dse::{drive, EvalEngine, EvalResult};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Fresh,
+    Running,
+    /// All FIFOs saturated at their bounds: one last evaluation decides.
+    LastChance,
+    Done,
+}
 
 pub struct VitisHunter {
     /// Double only FIFOs implicated in the deadlock (true, smarter than
     /// stock Vitis) or all FIFOs (false, the stock behaviour).
     pub targeted: bool,
+    phase: Phase,
+    cur: Vec<u32>,
+    bounds: Vec<u32>,
+    iters_left: usize,
+    found: Option<Box<[u32]>>,
 }
 
 impl VitisHunter {
     pub fn new() -> VitisHunter {
-        VitisHunter { targeted: false }
+        Self::with_targeting(false)
     }
 
     pub fn targeted() -> VitisHunter {
-        VitisHunter { targeted: true }
+        Self::with_targeting(true)
     }
 
-    /// Run the hunt; returns the first feasible configuration found.
-    pub fn hunt(&self, ev: &mut Evaluator, space: &Space, budget: usize) -> Option<Box<[u32]>> {
-        let trace = ev.trace().clone();
-        let mut cur: Vec<u32> = trace.baseline_min();
-        for _ in 0..budget.max(1) {
-            // Identify the deadlock (needs block info → direct sim).
-            let (lat, _) = ev.eval(&cur);
-            if lat.is_some() {
-                return Some(cur.into());
-            }
-            // Double and clamp.
-            if self.targeted {
-                // Re-simulate once more via stats to find write-blocked
-                // channels (the evaluator's cached latency has no block
-                // info; this is the baseline tool, efficiency secondary).
-                let (out, _) = ev.eval_with_stats(&cur);
-                if let crate::sim::fast::SimOutcome::Deadlock { blocked } = out {
-                    for b in &blocked {
-                        if b.on_write {
-                            cur[b.channel] =
-                                (cur[b.channel] * 2).min(space.bounds[b.channel].max(2));
-                        }
-                    }
-                } else {
-                    return Some(cur.into());
-                }
-            } else {
-                for (d, &u) in cur.iter_mut().zip(&space.bounds) {
-                    *d = (*d * 2).min(u.max(2));
-                }
-            }
-            // Bail out if saturated (cannot grow further).
-            if cur
-                .iter()
-                .zip(&space.bounds)
-                .all(|(&d, &u)| d >= u.max(2))
-            {
-                let (lat, _) = ev.eval(&cur);
-                return lat.map(|_| cur.into());
-            }
+    fn with_targeting(targeted: bool) -> VitisHunter {
+        VitisHunter {
+            targeted,
+            phase: Phase::Fresh,
+            cur: Vec::new(),
+            bounds: Vec::new(),
+            iters_left: 0,
+            found: None,
         }
-        None
+    }
+
+    /// The feasible configuration the hunt ended on, if any.
+    pub fn found(&self) -> Option<&[u32]> {
+        self.found.as_deref()
+    }
+
+    /// Run the hunt against an engine; returns the first feasible
+    /// configuration found.
+    pub fn hunt(
+        &self,
+        engine: &mut EvalEngine,
+        space: &Space,
+        budget: usize,
+    ) -> Option<Box<[u32]>> {
+        let mut fresh = Self::with_targeting(self.targeted);
+        drive(&mut fresh, engine, space, budget);
+        fresh.found
+    }
+
+    fn saturated(&self) -> bool {
+        self.cur
+            .iter()
+            .zip(&self.bounds)
+            .all(|(&d, &u)| d >= u.max(2))
     }
 }
 
@@ -78,8 +89,65 @@ impl Optimizer for VitisHunter {
         "vitis_hunter"
     }
 
-    fn run(&mut self, ev: &mut Evaluator, space: &Space, budget: usize) {
-        let _ = self.hunt(ev, space, budget);
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        match self.phase {
+            Phase::Fresh => {
+                self.bounds = ctx.space.bounds.clone();
+                self.cur = vec![2; self.bounds.len()]; // Baseline-Min
+                self.iters_left = ctx.budget_left.max(1);
+                self.phase = Phase::Running;
+                vec![self.cur.clone().into()]
+            }
+            Phase::Running | Phase::LastChance => vec![self.cur.clone().into()],
+            Phase::Done => Vec::new(),
+        }
+    }
+
+    fn tell(&mut self, results: &[EvalResult]) {
+        let r = match results.first() {
+            Some(r) => r,
+            None => return,
+        };
+        if r.latency.is_some() {
+            self.found = Some(self.cur.clone().into());
+            self.phase = Phase::Done;
+            return;
+        }
+        if self.phase == Phase::LastChance {
+            self.phase = Phase::Done;
+            return;
+        }
+        self.iters_left = self.iters_left.saturating_sub(1);
+        if self.iters_left == 0 {
+            self.phase = Phase::Done;
+            return;
+        }
+        // Double and clamp.
+        if self.targeted {
+            for b in &r.blocked {
+                if b.on_write {
+                    self.cur[b.channel] =
+                        (self.cur[b.channel] * 2).min(self.bounds[b.channel].max(2));
+                }
+            }
+        } else {
+            for (d, &u) in self.cur.iter_mut().zip(&self.bounds) {
+                *d = (*d * 2).min(u.max(2));
+            }
+        }
+        if self.saturated() {
+            // Cannot grow further: one final evaluation decides.
+            self.phase = Phase::LastChance;
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    fn wants_stats(&self) -> bool {
+        // Targeted doubling needs the per-round deadlock block info.
+        self.targeted && self.phase != Phase::Done
     }
 }
 
@@ -87,6 +155,7 @@ impl Optimizer for VitisHunter {
 mod tests {
     use super::*;
     use crate::bench_suite;
+    use crate::dse::Evaluator;
     use crate::trace::collect_trace;
     use std::sync::Arc;
 

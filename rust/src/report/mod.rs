@@ -5,7 +5,7 @@
 pub mod ascii;
 pub mod csv;
 
-use crate::dse::EvalPoint;
+use crate::dse::{EvalEngine, EvalPoint};
 use crate::util::Json;
 
 /// Serialize an evaluation point.
@@ -27,8 +27,39 @@ pub fn point_to_json(p: &EvalPoint) -> Json {
     ])
 }
 
+/// Serialize the evaluation-engine counters (cache hit rate, sims/sec,
+/// worker utilization) for run records and diagnostics.
+pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
+    let s = engine.stats();
+    Json::obj(vec![
+        ("jobs", Json::Num(engine.jobs() as f64)),
+        ("cache_shards", Json::Num(engine.cache_shards() as f64)),
+        ("proposals", Json::Num(s.proposals as f64)),
+        ("cache_hits", Json::Num(s.cache_hits as f64)),
+        ("cache_hit_rate", Json::Num(s.hit_rate())),
+        ("batches", Json::Num(s.batches as f64)),
+        ("sims", Json::Num(s.sims as f64)),
+        ("sims_per_sec", Json::Num(engine.sims_per_sec())),
+        ("worker_utilization", Json::Num(engine.worker_utilization())),
+    ])
+}
+
+/// One-line human-readable engine summary for CLI output.
+pub fn engine_stats_line(engine: &EvalEngine) -> String {
+    let s = engine.stats();
+    format!(
+        "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s, {:.0}% worker utilization",
+        engine.jobs(),
+        engine.cache_shards(),
+        s.hit_rate() * 100.0,
+        engine.sims_per_sec(),
+        engine.worker_utilization() * 100.0
+    )
+}
+
 /// Serialize a full run (design, optimizer, history, front) for the
-/// results directory.
+/// results directory. Pass the engine to embed its counters.
+#[allow(clippy::too_many_arguments)]
 pub fn run_to_json(
     design: &str,
     optimizer: &str,
@@ -37,8 +68,9 @@ pub fn run_to_json(
     history: &[EvalPoint],
     front: &[&EvalPoint],
     elapsed_secs: f64,
+    engine: Option<&EvalEngine>,
 ) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("design", Json::Str(design.into())),
         ("optimizer", Json::Str(optimizer.into())),
         ("seed", Json::Num(seed as f64)),
@@ -49,7 +81,11 @@ pub fn run_to_json(
             "front",
             Json::Arr(front.iter().map(|p| point_to_json(p)).collect()),
         ),
-    ])
+    ];
+    if let Some(e) = engine {
+        fields.push(("engine", engine_stats_to_json(e)));
+    }
+    Json::obj(fields)
 }
 
 /// Render a markdown table.
@@ -108,7 +144,7 @@ mod tests {
         };
         let hist = vec![p.clone(), dead];
         let front = vec![&hist[0]];
-        let j = run_to_json("fig2", "greedy", 1, 100, &hist, &front, 1.25);
+        let j = run_to_json("fig2", "greedy", 1, 100, &hist, &front, 1.25, None);
         let text = j.to_string_pretty();
         let parsed = Json::parse(&text).unwrap();
         assert_eq!(parsed.get("design").unwrap().as_str(), Some("fig2"));

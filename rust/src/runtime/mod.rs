@@ -1,29 +1,37 @@
-//! The PJRT runtime: loads the AOT-compiled JAX/Pallas analytics
-//! artifacts (`artifacts/analytics_f*.hlo.txt`, produced once by
-//! `python/compile/aot.py`) and executes them from the Rust DSE hot path.
-//! Python is never invoked at runtime — the HLO text is parsed, compiled
-//! and run entirely through the `xla` crate's PJRT CPU client.
+//! The batched-analytics runtime.
 //!
-//! The exported module computes, for a fixed-shape batch
-//! `(depths[B,F], widths[F], latencies[B], betas[K])`:
-//! per-config BRAM totals, the β-grid weighted objectives, and the Pareto
-//! dominance mask (see `python/compile/model.py`). Designs are padded to
-//! the next FIFO-count bucket; batches are padded/chunked to `B`.
+//! The original reproduction executed an AOT-compiled JAX/Pallas
+//! analytics module (`artifacts/*.hlo.txt`, produced by
+//! `python/compile/aot.py`) through an XLA/PJRT CPU client. The PJRT
+//! client crate is not available in the offline build environment, so
+//! this module now ships a **native interpreter** of the same exported
+//! computation: for a fixed-shape batch `(depths[B,F], widths[F],
+//! latencies[B], betas[K])` it computes per-config BRAM totals (paper
+//! Algorithm 1), the β-grid weighted objectives, and the Pareto
+//! dominance mask — bit-for-bit the semantics `python/compile/model.py`
+//! exports, which is exactly what `tests/runtime_xla.rs` cross-checks.
+//!
+//! Shape buckets mirror the artifact convention: designs are padded to
+//! the next FIFO-count bucket and batches are chunked to `B` rows. When
+//! an `artifacts/manifest.json` is present its bucket shapes are used;
+//! otherwise built-in defaults apply, so the backend works out of the
+//! box. Python stays off the request path either way.
 
+use crate::bram;
 use crate::dse::BramBatch;
+use crate::opt::objective::weighted;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-/// Padding conventions shared with `python/compile/model.py`.
-const PAD_DEPTH: i32 = 2;
-const PAD_WIDTH: i32 = 1;
-
-/// One compiled shape bucket.
-struct Bucket {
-    fifos: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
+/// Default shape buckets used when no artifact manifest is present
+/// (largest bucket covers every suite design; FeedForward has 848
+/// FIFOs).
+const DEFAULT_BUCKETS: [usize; 4] = [16, 64, 256, 1024];
+/// Default rows per batched execution.
+const DEFAULT_BATCH: usize = 256;
+/// Default β-grid length.
+const DEFAULT_BETAS: usize = 8;
 
 /// Result of one batched analytics execution.
 #[derive(Debug, Clone)]
@@ -32,14 +40,14 @@ pub struct AnalyticsOut {
     pub bram_totals: Vec<u32>,
     /// Row-major (K, valid) weighted objectives.
     pub scores: Vec<Vec<f64>>,
-    /// Dominance mask over the batch (valid prefix only; padding masked).
+    /// Dominance mask over the batch (valid prefix only).
     pub dominated: Vec<bool>,
 }
 
-/// The loaded artifact set.
+/// The analytics module: shape buckets + the batched evaluator.
 pub struct BatchAnalytics {
-    client: xla::PjRtClient,
-    buckets: Vec<Bucket>,
+    /// Supported FIFO-count capacities, ascending.
+    buckets: Vec<usize>,
     /// Fixed batch rows per execution (export-time constant).
     pub batch: usize,
     /// Fixed β-grid length (export-time constant).
@@ -49,22 +57,24 @@ pub struct BatchAnalytics {
 }
 
 impl BatchAnalytics {
-    /// Load every bucket listed in `<dir>/manifest.json` and compile them
-    /// on the PJRT CPU client.
+    /// Load bucket shapes from `<dir>/manifest.json` when present (the
+    /// artifact convention shared with `python/compile/aot.py`),
+    /// falling back to the built-in defaults otherwise.
     pub fn load(dir: &Path) -> Result<BatchAnalytics> {
         let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Ok(Self::with_defaults());
+        }
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+            .with_context(|| format!("reading {manifest_path:?}"))?;
         let manifest = Json::parse(&text).context("parsing manifest.json")?;
         let buckets_json = manifest
             .get("buckets")
             .and_then(|b| b.as_arr())
             .ok_or_else(|| anyhow!("manifest.json: missing buckets"))?;
-
-        let client = xla::PjRtClient::cpu()?;
         let mut buckets = Vec::new();
-        let mut batch = 0usize;
-        let mut betas = 0usize;
+        let mut batch = DEFAULT_BATCH;
+        let mut betas = DEFAULT_BETAS;
         for b in buckets_json {
             let fifos = b
                 .get("fifos")
@@ -78,24 +88,13 @@ impl BatchAnalytics {
                 .get("betas")
                 .and_then(|v| v.as_u64())
                 .ok_or_else(|| anyhow!("bucket missing betas"))? as usize;
-            let file = b
-                .get("file")
-                .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("bucket missing file"))?;
-            let path: PathBuf = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            buckets.push(Bucket { fifos, exe });
+            buckets.push(fifos);
         }
         if buckets.is_empty() {
             bail!("manifest.json lists no buckets");
         }
-        buckets.sort_by_key(|b| b.fifos);
+        buckets.sort_unstable();
         Ok(BatchAnalytics {
-            client,
             buckets,
             batch,
             betas,
@@ -103,31 +102,41 @@ impl BatchAnalytics {
         })
     }
 
-    /// Load from the conventional `artifacts/` directory next to the
-    /// current working directory (or `$FIFOADVISOR_ARTIFACTS`).
+    fn with_defaults() -> BatchAnalytics {
+        BatchAnalytics {
+            buckets: DEFAULT_BUCKETS.to_vec(),
+            batch: DEFAULT_BATCH,
+            betas: DEFAULT_BETAS,
+            calls: 0,
+        }
+    }
+
+    /// Load from the conventional `artifacts/` directory (or
+    /// `$FIFOADVISOR_ARTIFACTS`); built-in default shapes when absent.
     pub fn load_default() -> Result<BatchAnalytics> {
         let dir = std::env::var("FIFOADVISOR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         Self::load(Path::new(&dir))
     }
 
-    /// PJRT platform name (diagnostics).
+    /// Execution platform name (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-interp".to_string()
     }
 
     /// Smallest bucket with capacity for `fifos`, if any.
-    fn bucket_for(&self, fifos: usize) -> Option<&Bucket> {
-        self.buckets.iter().find(|b| b.fifos >= fifos)
+    fn bucket_for(&self, fifos: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= fifos)
     }
 
     /// Largest supported FIFO count.
     pub fn max_fifos(&self) -> usize {
-        self.buckets.last().map(|b| b.fifos).unwrap_or(0)
+        self.buckets.last().copied().unwrap_or(0)
     }
 
     /// Run the analytics module over up to [`Self::batch`] configurations
     /// (callers chunk larger sets). `latencies[i] = None` marks a
-    /// deadlocked config (encoded +inf).
+    /// deadlocked config (scored +inf, dominated by any feasible config
+    /// with no more BRAM).
     pub fn evaluate(
         &mut self,
         configs: &[Box<[u32]>],
@@ -145,57 +154,62 @@ impl BatchAnalytics {
         if betas.len() != self.betas {
             bail!("betas {} != export size {}", betas.len(), self.betas);
         }
+        if latencies.len() < valid {
+            bail!("latencies {} shorter than batch {}", latencies.len(), valid);
+        }
         let f_real = widths.len();
-        let bucket = self
-            .bucket_for(f_real)
-            .ok_or_else(|| anyhow!("{f_real} FIFOs exceeds largest bucket {}", self.max_fifos()))?;
-        let f = bucket.fifos;
-        let b = self.batch;
-
-        // Pack + pad the inputs.
-        let mut depths = vec![PAD_DEPTH; b * f];
-        for (i, cfg) in configs.iter().enumerate() {
-            assert_eq!(cfg.len(), f_real, "config width mismatch");
-            for (j, &d) in cfg.iter().enumerate() {
-                depths[i * f + j] = d as i32;
-            }
+        if self.bucket_for(f_real).is_none() {
+            bail!("{f_real} FIFOs exceeds largest bucket {}", self.max_fifos());
         }
-        let mut w = vec![PAD_WIDTH; f];
-        for (j, &x) in widths.iter().enumerate() {
-            w[j] = x as i32;
-        }
-        let mut lat = vec![f32::INFINITY; b];
-        for (i, l) in latencies.iter().enumerate() {
-            lat[i] = l.map(|v| v as f32).unwrap_or(f32::INFINITY);
-        }
-        let betas_f: Vec<f32> = betas.iter().map(|&x| x as f32).collect();
 
-        let depths_lit = xla::Literal::vec1(&depths).reshape(&[b as i64, f as i64])?;
-        let widths_lit = xla::Literal::vec1(&w);
-        let lat_lit = xla::Literal::vec1(&lat);
-        let betas_lit = xla::Literal::vec1(&betas_f);
+        // BRAM totals (Algorithm 1, batched).
+        let bram_totals: Vec<u32> = configs
+            .iter()
+            .map(|cfg| {
+                assert_eq!(cfg.len(), f_real, "config width mismatch");
+                bram::bram_total(cfg, widths)
+            })
+            .collect();
 
-        let result = bucket
-            .exe
-            .execute::<xla::Literal>(&[depths_lit, widths_lit, lat_lit, betas_lit])?[0][0]
-            .to_literal_sync()?;
-        self.calls += 1;
-        let (totals_l, scores_l, dom_l) = result.to_tuple3()?;
-
-        let totals_all = totals_l.to_vec::<i32>()?;
-        let scores_all = scores_l.to_vec::<f32>()?;
-        let dom_all = dom_l.to_vec::<i32>()?;
-
-        let bram_totals: Vec<u32> = totals_all[..valid].iter().map(|&x| x as u32).collect();
-        let scores: Vec<Vec<f64>> = (0..self.betas)
-            .map(|k| {
-                scores_all[k * b..k * b + valid]
+        // β-grid weighted objectives; deadlocks score +inf.
+        let scores: Vec<Vec<f64>> = betas
+            .iter()
+            .map(|&beta| {
+                latencies
                     .iter()
-                    .map(|&x| x as f64)
+                    .take(valid)
+                    .zip(&bram_totals)
+                    .map(|(l, &b)| match l {
+                        Some(l) => weighted(beta, *l, b),
+                        None => f64::INFINITY,
+                    })
                     .collect()
             })
             .collect();
-        let dominated: Vec<bool> = dom_all[..valid].iter().map(|&x| x != 0).collect();
+
+        // Dominance mask — exactly the exported kernel's formula
+        // (python/compile/kernels/pareto.py):
+        //   dominated[i] = any j: lat_j <= lat_i && bram_j <= bram_i
+        //                         && (lat_j < lat_i || bram_j < bram_i)
+        // with deadlocks encoded as lat = +inf. Note the IEEE corner the
+        // kernel inherits: a deadlocked row IS dominated by another
+        // deadlocked row with strictly smaller BRAM (inf <= inf holds,
+        // inf < inf does not).
+        let enc: Vec<(f64, u32)> = latencies
+            .iter()
+            .take(valid)
+            .zip(&bram_totals)
+            .map(|(l, &b)| (l.map(|l| l as f64).unwrap_or(f64::INFINITY), b))
+            .collect();
+        let dominated: Vec<bool> = enc
+            .iter()
+            .map(|&(li, bi)| {
+                enc.iter()
+                    .any(|&(lj, bj)| lj <= li && bj <= bi && (lj < li || bj < bi))
+            })
+            .collect();
+
+        self.calls += 1;
         Ok(AnalyticsOut {
             bram_totals,
             scores,
@@ -204,9 +218,10 @@ impl BatchAnalytics {
     }
 }
 
-/// [`BramBatch`] backend over the XLA artifact: lets the DSE evaluator
-/// compute BRAM totals through the AOT-compiled module. Falls back to
-/// chunking for batches larger than the export size.
+/// [`BramBatch`] backend over the analytics module: lets the DSE engine
+/// compute batched BRAM totals through the exported computation. Chunks
+/// batches larger than the export size. The type name is kept from the
+/// PJRT-backed original so call sites and configs stay stable.
 pub struct XlaBram {
     analytics: BatchAnalytics,
     betas: Vec<f64>,
@@ -232,12 +247,40 @@ impl BramBatch for XlaBram {
             let res = self
                 .analytics
                 .evaluate(chunk, widths, &lat_dummy[..chunk.len()], &self.betas)
-                .expect("XLA analytics execution failed");
+                .expect("analytics execution failed");
             out.extend(res.bram_totals);
         }
         out
     }
     fn name(&self) -> &'static str {
-        "xla-pjrt"
+        "analytics"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_shapes_cover_the_suite() {
+        let a = BatchAnalytics::load_default().unwrap();
+        assert!(a.max_fifos() >= 848, "FeedForward must fit a bucket");
+        assert!(a.batch >= 64);
+        assert!(a.betas >= 2);
+    }
+
+    #[test]
+    fn evaluate_rejects_bad_shapes() {
+        let mut a = BatchAnalytics::with_defaults();
+        let widths = vec![32u32; 4];
+        let cfg: Vec<Box<[u32]>> = vec![vec![2u32; 4].into()];
+        let betas: Vec<f64> = (0..a.betas).map(|i| i as f64).collect();
+        assert!(a.evaluate(&[], &widths, &[], &betas).is_err());
+        assert!(a
+            .evaluate(&cfg, &widths, &[Some(1)], &betas[..1])
+            .is_err());
+        let too_many = vec![cfg[0].clone(); a.batch + 1];
+        let lats = vec![Some(1u64); a.batch + 1];
+        assert!(a.evaluate(&too_many, &widths, &lats, &betas).is_err());
     }
 }

@@ -1,0 +1,90 @@
+//! Acceptance tests for the ask/tell engine refactor: every optimizer,
+//! driven through the ask/tell protocol, produces **identical** results
+//! (per-proposal latency and BRAM, and the extracted Pareto front) on a
+//! serial engine and on a `--jobs 4` engine — worker scheduling must
+//! never leak into the search. (The batched-throughput check lives in
+//! `engine_throughput.rs` so it gets the machine to itself.)
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::{drive, Evaluator};
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::trace::{collect_trace, Trace};
+use std::sync::Arc;
+
+fn trace_of(name: &str) -> Arc<Trace> {
+    let bd = bench_suite::build(name);
+    Arc::new(collect_trace(&bd.design, &bd.args).unwrap())
+}
+
+/// (depths, latency, bram) per history entry + the Pareto front.
+type RunRecord = (Vec<(Box<[u32]>, Option<u64>, u32)>, Vec<(u64, u32)>);
+
+fn run_with_jobs(trace: &Arc<Trace>, space: &Space, opt_name: &str, jobs: usize) -> RunRecord {
+    let mut ev = Evaluator::parallel(trace.clone(), jobs);
+    let mut o = opt::by_name(opt_name, 42).unwrap();
+    drive(&mut *o, &mut ev, space, 150);
+    let history = ev
+        .history
+        .iter()
+        .map(|p| (p.depths.clone(), p.latency, p.bram))
+        .collect();
+    let front = ev
+        .pareto()
+        .iter()
+        .map(|p| (p.latency.unwrap(), p.bram))
+        .collect();
+    (history, front)
+}
+
+#[test]
+fn every_optimizer_is_identical_serial_vs_jobs_4() {
+    let trace = trace_of("gesummv");
+    let space = Space::from_trace(&trace);
+    for name in opt::OPTIMIZER_NAMES {
+        let serial = run_with_jobs(&trace, &space, name, 1);
+        let parallel = run_with_jobs(&trace, &space, name, 4);
+        assert!(
+            !serial.0.is_empty(),
+            "{name}: optimizer proposed nothing through ask/tell"
+        );
+        assert_eq!(
+            serial.0, parallel.0,
+            "{name}: history diverged between serial and --jobs 4"
+        );
+        assert_eq!(
+            serial.1, parallel.1,
+            "{name}: Pareto front diverged between serial and --jobs 4"
+        );
+    }
+}
+
+#[test]
+fn deadlock_heavy_design_is_identical_too() {
+    // fig2's tiny pruned space exercises dedup + deadlock caching.
+    let trace = trace_of("fig2");
+    let space = Space::from_trace(&trace);
+    for name in ["exhaustive", "grouped_sa", "nsga2", "vitis_hunter"] {
+        let serial = run_with_jobs(&trace, &space, name, 1);
+        let parallel = run_with_jobs(&trace, &space, name, 4);
+        assert_eq!(serial.0, parallel.0, "{name} diverged on fig2");
+    }
+}
+
+#[test]
+fn engine_stats_track_cache_and_throughput() {
+    let trace = trace_of("gesummv");
+    let space = Space::from_trace(&trace);
+    let mut ev = Evaluator::parallel(trace.clone(), 4);
+    drive(&mut *opt::by_name("grouped_sa", 3).unwrap(), &mut ev, &space, 120);
+    let s = ev.stats();
+    assert_eq!(s.proposals as usize, ev.n_evals());
+    assert_eq!(s.sims, ev.n_sim, "fresh engine: run sims == lifetime sims");
+    assert_eq!(
+        s.cache_hits + s.sims,
+        s.proposals,
+        "every proposal is either a hit or a simulation"
+    );
+    assert!(ev.sims_per_sec() > 0.0);
+    assert!(ev.worker_utilization() >= 0.0 && ev.worker_utilization() <= 1.0);
+    assert!(ev.cache_shards().is_power_of_two());
+}

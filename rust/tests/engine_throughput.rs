@@ -1,0 +1,62 @@
+//! Throughput acceptance check for the persistent worker pool: batched
+//! evaluation of a 256-configuration batch must be at least 2× faster
+//! than serial evaluation when 4 cores are available. Kept in its own
+//! test binary so no sibling test competes for CPU during measurement
+//! (cargo runs test binaries one at a time).
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::pool::parallel_latencies;
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[test]
+fn batched_evaluation_beats_serial_by_2x_on_4_cores() {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores < 4 {
+        eprintln!("skipping throughput check: only {cores} cores available");
+        return;
+    }
+    let bd = bench_suite::build("gemm");
+    let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let proto = FastSim::new(trace.clone());
+    let ub = trace.upper_bounds();
+    let mut rng = Rng::new(7);
+    // Feasible-leaning configurations so every simulation does real work.
+    let configs: Vec<Box<[u32]>> = (0..256)
+        .map(|_| {
+            ub.iter()
+                .map(|&u| rng.range_u32((u / 2).max(2), u.max(2)))
+                .collect::<Box<[u32]>>()
+        })
+        .collect();
+    // Warm up (first touch pays allocation + page faults) and pin the
+    // expected results.
+    let expected = parallel_latencies(&proto, &configs, 1);
+
+    let best_of = |threads: usize| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let out = parallel_latencies(&proto, &configs, threads);
+            best = best.min(t0.elapsed().as_secs_f64());
+            assert_eq!(out, expected, "parallel run changed results");
+        }
+        best
+    };
+    let t_serial = best_of(1);
+    let t_parallel = best_of(4);
+    let speedup = t_serial / t_parallel.max(1e-9);
+    eprintln!(
+        "batch of {} configs: serial {t_serial:.4}s, 4 workers {t_parallel:.4}s -> {speedup:.2}x",
+        configs.len()
+    );
+    assert!(
+        speedup >= 2.0,
+        "persistent pool speedup {speedup:.2}x < 2x on {cores} cores"
+    );
+}

@@ -2,7 +2,7 @@
 //! the paper's qualitative claims at reduced budgets.
 
 use fifoadvisor::bench_suite;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::objective::select_highlight;
 use fifoadvisor::opt::{self, Optimizer, Space};
 use fifoadvisor::trace::collect_trace;
@@ -26,7 +26,7 @@ fn grouped_sa_cuts_bram_at_near_baseline_latency() {
     let base_lat = base.latency.unwrap();
     assert!(base.bram > 0, "k15mmseq Baseline-Max must use BRAM");
 
-    opt::by_name("grouped_sa", 11).unwrap().run(&mut ev, &space, 600);
+    drive(&mut *opt::by_name("grouped_sa", 11).unwrap(), &mut ev, &space, 600);
     let front = ev.pareto();
     let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
     let star = &front[select_highlight(&pts, 0.7, base_lat, base.bram).unwrap()];
@@ -44,7 +44,7 @@ fn deadlocked_baseline_min_is_rescued() {
     let (mut ev, space) = setup("fig2", 1);
     let (_, min) = ev.eval_baselines();
     assert!(!min.is_feasible(), "fig2 Baseline-Min must deadlock");
-    opt::by_name("grouped_sa", 5).unwrap().run(&mut ev, &space, 100);
+    drive(&mut *opt::by_name("grouped_sa", 5).unwrap(), &mut ev, &space, 100);
     let rescue = ev
         .history
         .iter()
@@ -61,7 +61,7 @@ fn deadlocked_baseline_min_is_rescued() {
 fn all_paper_optimizers_complete_on_a_real_design() {
     for mut o in opt::paper_optimizers(17) {
         let (mut ev, space) = setup("k7mmtree_balanced", 4);
-        o.run(&mut ev, &space, 150);
+        drive(&mut *o, &mut ev, &space, 150);
         assert!(
             !ev.pareto().is_empty(),
             "{} produced an empty front",
@@ -87,7 +87,7 @@ fn flowgnn_case_study_end_to_end() {
     assert!(base.is_feasible());
     assert!(!min.is_feasible(), "PNA min-depth must deadlock");
 
-    opt::by_name("sa", 23).unwrap().run(&mut ev, &space, 300);
+    drive(&mut *opt::by_name("sa", 23).unwrap(), &mut ev, &space, 300);
     let best_feasible = ev
         .history
         .iter()
@@ -171,7 +171,7 @@ fn hunter_vs_greedy_on_fig2() {
     let hunter_bram = fifoadvisor::bram::bram_total(&cfg, &ev_h.widths);
 
     let (mut ev_g, space2) = setup("fig2", 1);
-    opt::greedy::Greedy::new().run(&mut ev_g, &space2, 1000);
+    drive(&mut opt::greedy::Greedy::new(), &mut ev_g, &space2, 1000);
     let greedy_best = ev_g
         .history
         .iter()

@@ -3,9 +3,9 @@
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::bram;
-use fifoadvisor::dse::Evaluator;
+use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::pareto::dominates;
-use fifoadvisor::opt::{self, Optimizer, Space};
+use fifoadvisor::opt::{self, Space};
 use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::sim::SimOptions;
 use fifoadvisor::trace::collect_trace;
@@ -114,7 +114,7 @@ fn property_fronts_are_sound() {
             let space = Space::from_trace(&t);
             let mut ev = Evaluator::new(t);
             let mut o = opt::by_name(opt_name, 7).unwrap();
-            o.run(&mut ev, &space, 120);
+            drive(&mut *o, &mut ev, &space, 120);
             let front = ev.pareto();
             for a in &front {
                 for b in &front {
@@ -170,12 +170,8 @@ fn property_grouped_configs_are_uniform() {
     let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
     let space = Space::from_trace(&t);
     let mut ev = Evaluator::new(t);
-    opt::by_name("grouped_random", 3)
-        .unwrap()
-        .run(&mut ev, &space, 40);
-    opt::by_name("grouped_sa", 3)
-        .unwrap()
-        .run(&mut ev, &space, 40);
+    drive(&mut *opt::by_name("grouped_random", 3).unwrap(), &mut ev, &space, 40);
+    drive(&mut *opt::by_name("grouped_sa", 3).unwrap(), &mut ev, &space, 40);
     for p in &ev.history {
         for ids in &space.groups {
             let mx = ids.iter().map(|&i| p.depths[i]).max().unwrap();
@@ -198,7 +194,7 @@ fn property_pipeline_reproducible() {
         let seed = rng.next_u64();
         let run = |threads: usize| {
             let mut ev = Evaluator::parallel(t.clone(), threads);
-            opt::random::RandomSearch::new(seed, false).run(&mut ev, &space, 64);
+            drive(&mut opt::random::RandomSearch::new(seed, false), &mut ev, &space, 64);
             ev.history
                 .iter()
                 .map(|p| (p.depths.clone(), p.latency, p.bram))

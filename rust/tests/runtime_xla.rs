@@ -1,21 +1,20 @@
-//! Integration tests for the PJRT runtime path: the AOT-compiled
-//! JAX/Pallas analytics module must agree exactly with the native Rust
+//! Integration tests for the batched-analytics runtime path: the module
+//! (native interpreter of the exported JAX/Pallas computation; see
+//! `rust/src/runtime`) must agree exactly with the native Rust
 //! implementations (Algorithm 1 BRAM model, weighted objectives, Pareto
-//! dominance). Requires `make artifacts` to have run; tests panic with a
-//! clear message otherwise (the Makefile orders this correctly).
+//! dominance) at every bucket shape.
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::bram;
 use fifoadvisor::dse::Evaluator;
-use fifoadvisor::opt::pareto::{dominates, ObjPoint};
+use fifoadvisor::opt::pareto::ObjPoint;
 use fifoadvisor::runtime::{BatchAnalytics, XlaBram};
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::util::Rng;
 use std::sync::Arc;
 
 fn analytics() -> BatchAnalytics {
-    BatchAnalytics::load_default()
-        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+    BatchAnalytics::load_default().expect("analytics module must load without artifacts")
 }
 
 #[test]
@@ -72,23 +71,24 @@ fn xla_bram_matches_native_on_random_batches() {
                 }
             }
         }
-        // Dominance mask matches the native definition.
-        let pts: Vec<Option<(u64, u32)>> = lats
+        // Dominance mask matches the exported kernel formula
+        // (python/compile/kernels/pareto.py): lat_j <= lat_i &&
+        // bram_j <= bram_i with one strict inequality, deadlocks
+        // encoded as lat = +inf.
+        let enc: Vec<(f64, u32)> = lats
             .iter()
             .enumerate()
-            .map(|(i, l)| l.map(|l| (l, out.bram_totals[i])))
+            .map(|(i, l)| {
+                (
+                    l.map(|l| l as f64).unwrap_or(f64::INFINITY),
+                    out.bram_totals[i],
+                )
+            })
             .collect();
-        for (i, me) in pts.iter().enumerate() {
-            let native_dom = match me {
-                None => {
-                    // +inf rows: dominated iff any feasible point has
-                    // bram <= mine (its latency is strictly below +inf).
-                    pts.iter()
-                        .flatten()
-                        .any(|&(_, b)| b <= out.bram_totals[i])
-                }
-                Some(me) => pts.iter().flatten().any(|&q| dominates(q, *me)),
-            };
+        for (i, &(li, bi)) in enc.iter().enumerate() {
+            let native_dom = enc
+                .iter()
+                .any(|&(lj, bj)| lj <= li && bj <= bi && (lj < li || bj < bi));
             assert_eq!(out.dominated[i], native_dom, "dominance mismatch at {i}");
         }
     }
@@ -100,7 +100,7 @@ fn evaluator_with_xla_backend_matches_native_evaluator() {
     let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
     let mut native = Evaluator::new(t.clone());
     let mut xla = Evaluator::with_backend(t.clone(), Box::new(XlaBram::new(analytics())), 2);
-    assert_eq!(xla.backend_name(), "xla-pjrt");
+    assert_eq!(xla.backend_name(), "analytics");
 
     let mut rng = Rng::new(9);
     let ub = t.upper_bounds();

@@ -1,0 +1,65 @@
+//! Round-trip guarantees for `trace::serde`: a captured trace survives
+//! serialize → deserialize with identical structure AND identical
+//! simulated behaviour (latency and deadlock verdicts across depth
+//! configurations), both in-memory and through a file.
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::trace::serde::{load, save, trace_from_json, trace_to_json};
+use fifoadvisor::util::{Json, Rng};
+use std::sync::Arc;
+
+#[test]
+fn json_roundtrip_preserves_simulated_latency() {
+    let mut rng = Rng::new(99);
+    for name in ["fig2", "bicg", "gesummv", "flowgnn_pna", "k7mmseq_balanced"] {
+        let bd = bench_suite::build(name);
+        let t = collect_trace(&bd.design, &bd.args).unwrap();
+        let text = trace_to_json(&t).to_string_compact();
+        let t2 = trace_from_json(&Json::parse(&text).unwrap()).unwrap();
+
+        // Structure is preserved.
+        assert_eq!(t.design_name, t2.design_name, "{name}");
+        assert_eq!(t.total_ops(), t2.total_ops(), "{name}");
+        assert_eq!(t.num_fifos(), t2.num_fifos(), "{name}");
+        assert_eq!(t.process_names, t2.process_names, "{name}");
+        assert_eq!(t.tail_delays, t2.tail_delays, "{name}");
+        assert_eq!(t.args, t2.args, "{name}");
+        assert_eq!(t.upper_bounds(), t2.upper_bounds(), "{name}");
+
+        // Behaviour is preserved: identical latency/deadlock verdicts on
+        // the baselines and on random configurations.
+        let ub = t.upper_bounds();
+        let mut configs: Vec<Vec<u32>> = vec![t.baseline_max(), t.baseline_min()];
+        for _ in 0..6 {
+            configs.push(ub.iter().map(|&u| rng.range_u32(2, u.max(2))).collect());
+        }
+        let mut s1 = FastSim::new(Arc::new(t));
+        let mut s2 = FastSim::new(Arc::new(t2));
+        for cfg in &configs {
+            assert_eq!(
+                s1.simulate(cfg).latency(),
+                s2.simulate(cfg).latency(),
+                "{name}: divergence after round-trip on {cfg:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn file_roundtrip_preserves_simulated_latency() {
+    let bd = bench_suite::build("gesummv");
+    let t = collect_trace(&bd.design, &bd.args).unwrap();
+    let path = std::env::temp_dir().join("fifoadvisor_roundtrip_test.json");
+    let path = path.to_str().unwrap();
+    save(&t, path).unwrap();
+    let t2 = load(path).unwrap();
+    std::fs::remove_file(path).ok();
+
+    let cfg = t.baseline_max();
+    let l1 = FastSim::new(Arc::new(t)).simulate(&cfg).latency();
+    let l2 = FastSim::new(Arc::new(t2)).simulate(&cfg).latency();
+    assert_eq!(l1, l2);
+    assert!(l1.is_some(), "Baseline-Max must be feasible");
+}
