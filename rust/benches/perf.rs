@@ -8,8 +8,15 @@
 //!    module, per-batch latency and the batch-size crossover.
 //! 5. Ask/tell engine throughput: sims/sec serial vs the persistent
 //!    worker pool, with cache hit rate and worker utilization.
+//! 6. Delta-incremental vs full re-simulation: per-design speedup on
+//!    1-channel and 2-channel depth deltas, with a bit-identical check
+//!    between both paths (a mismatch aborts the bench).
 //!
-//! Run: `cargo bench --bench perf`
+//! Run: `cargo bench --bench perf`. Besides `results/perf.csv` it writes
+//! a machine-readable `BENCH_2.json` snapshot of every metric row.
+//! Set `FIFOADVISOR_PERF_SMOKE=1` for a reduced-iteration run (the CI
+//! regression smoke): same sections, same correctness assertions, far
+//! fewer samples.
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::dse::pool::parallel_latencies;
@@ -21,7 +28,7 @@ use fifoadvisor::sim::golden::simulate_golden;
 use fifoadvisor::sim::SimOptions;
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::util::stats::{fmt_duration, Summary};
-use fifoadvisor::util::Rng;
+use fifoadvisor::util::{Json, Rng};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -34,6 +41,10 @@ fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
 }
 
 fn main() {
+    let smoke = std::env::var("FIFOADVISOR_PERF_SMOKE").is_ok();
+    if smoke {
+        println!("(FIFOADVISOR_PERF_SMOKE set: reduced-iteration run)\n");
+    }
     let mut csv = Csv::new(&["metric", "design", "value", "unit"]);
 
     println!("=== §Perf 1: incremental re-simulation latency ===\n");
@@ -56,7 +67,8 @@ fn main() {
         let ub = trace.upper_bounds();
         let mut rng = Rng::new(1);
         // Random configs, pre-generated (measure sim only).
-        let configs: Vec<Vec<u32>> = (0..64)
+        let n_cfg = if smoke { 12 } else { 64 };
+        let configs: Vec<Vec<u32>> = (0..n_cfg)
             .map(|_| ub.iter().map(|&u| rng.range_u32(2, u.max(2))).collect())
             .collect();
         sim.simulate(&configs[0]); // warm
@@ -230,6 +242,150 @@ fn main() {
         }
     }
 
+    println!("\n=== §Perf 6: delta-incremental vs full re-simulation ===\n");
+    println!(
+        "{:<26} {:>10} {:>11} {:>11} {:>9} {:>11} {:>9}",
+        "design", "trace ops", "full med", "Δ1ch med", "speedup", "Δ2ch med", "speedup"
+    );
+    for name in [
+        "gemm",
+        "k15mmtree",
+        "Autoencoder",
+        "FeedForward",
+        "ResidualBlock",
+    ] {
+        let bd = bench_suite::build(name);
+        let trace = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let base = trace.baseline_max();
+        let nch = base.len();
+        // The redraw loop below needs at least one channel that can move.
+        assert!(base.iter().any(|&d| d > 2), "{name}: degenerate bounds");
+        let steps = if smoke { 16 } else { 96 };
+        let mut speedups: Vec<f64> = Vec::new();
+        let mut incr_meds: Vec<f64> = Vec::new();
+        let mut full_meds: Vec<f64> = Vec::new();
+        for (label, delta_channels) in [("1ch", 1usize), ("2ch", 2usize)] {
+            // A DSE-shaped walk: each step mutates `delta_channels` FIFOs
+            // of the previous configuration (±1 steps and collapses — the
+            // SA/greedy move shapes), starting from Baseline-Max.
+            let mut rng = Rng::new(6);
+            let mut cur = base.clone();
+            let mut walk: Vec<Vec<u32>> = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                // Every step must actually change the configuration —
+                // otherwise the warm run's identical-config short-circuit
+                // (zero work) would flatter the measured delta cost.
+                let prev_cfg = cur.clone();
+                while cur == prev_cfg {
+                    for _ in 0..delta_channels {
+                        let i = rng.index(nch);
+                        cur[i] = match rng.below(3) {
+                            0 => base[i].max(3) - 1,
+                            1 => 2,
+                            _ => base[i],
+                        };
+                    }
+                }
+                walk.push(cur.clone());
+            }
+            // Cold reference: full replay every step.
+            let mut cold = FastSim::new(trace.clone());
+            cold.set_incremental(false);
+            let mut t_full = Vec::with_capacity(steps);
+            let mut full_lats = Vec::with_capacity(steps);
+            for cfg in &walk {
+                let t0 = Instant::now();
+                full_lats.push(cold.simulate(cfg).latency());
+                t_full.push(t0.elapsed().as_secs_f64());
+            }
+            // Warm run: delta replay against the retained schedule.
+            let mut warm = FastSim::new(trace.clone());
+            warm.simulate(&base);
+            let mut t_incr = Vec::with_capacity(steps);
+            let mut replayed = 0u64;
+            let mut total = 0u64;
+            for (cfg, full_lat) in walk.iter().zip(&full_lats) {
+                let t0 = Instant::now();
+                let lat = warm.simulate(cfg).latency();
+                t_incr.push(t0.elapsed().as_secs_f64());
+                // CI guard: a delta replay that diverges from the full
+                // replay is a correctness bug, not a perf number.
+                assert_eq!(
+                    lat, *full_lat,
+                    "incremental/full mismatch on {name} ({label}) cfg {cfg:?}"
+                );
+                replayed += warm.last_run().replayed_ops;
+                total += warm.last_run().total_ops;
+            }
+            let sf = Summary::of(&t_full);
+            let si = Summary::of(&t_incr);
+            full_meds.push(sf.median);
+            incr_meds.push(si.median);
+            let speedup = sf.median / si.median.max(1e-12);
+            speedups.push(speedup);
+            csv.row(vec![
+                format!("incr_resim_median_secs_{label}"),
+                name.into(),
+                format!("{:.6e}", si.median),
+                "s".into(),
+            ]);
+            csv.row(vec![
+                format!("incr_speedup_{label}"),
+                name.into(),
+                format!("{speedup:.2}"),
+                "x".into(),
+            ]);
+            csv.row(vec![
+                format!("incr_replay_fraction_{label}"),
+                name.into(),
+                format!("{:.4}", replayed as f64 / total.max(1) as f64),
+                "".into(),
+            ]);
+        }
+        csv.row(vec![
+            "full_resim_median_secs".into(),
+            name.into(),
+            format!("{:.6e}", full_meds[0]),
+            "s".into(),
+        ]);
+        println!(
+            "{:<26} {:>10} {:>11} {:>11} {:>8.1}x {:>11} {:>8.1}x",
+            name,
+            trace.total_ops(),
+            fmt_duration(full_meds[0]),
+            fmt_duration(incr_meds[0]),
+            speedups[0],
+            fmt_duration(incr_meds[1]),
+            speedups[1]
+        );
+    }
+
     csv.write("results/perf.csv").unwrap();
     println!("\nwrote results/perf.csv");
+
+    // Machine-readable perf snapshot (the §Perf trajectory file).
+    let rows_json: Vec<Json> = csv
+        .rows()
+        .iter()
+        .map(|r| {
+            let value = match r[2].parse::<f64>() {
+                Ok(v) => Json::Num(v),
+                Err(_) => Json::Str(r[2].clone()),
+            };
+            Json::obj(vec![
+                ("metric", Json::Str(r[0].clone())),
+                ("design", Json::Str(r[1].clone())),
+                ("value", value),
+                ("unit", Json::Str(r[3].clone())),
+            ])
+        })
+        .collect();
+    let snapshot = Json::obj(vec![
+        ("bench", Json::Str("perf".into())),
+        ("schema", Json::Str("metric-rows/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    fifoadvisor::report::write_file("BENCH_2.json", &snapshot.to_string_pretty()).unwrap();
+    println!("wrote BENCH_2.json ({} metric rows)", csv.len());
 }

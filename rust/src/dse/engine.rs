@@ -5,8 +5,15 @@
 //!
 //! - a **persistent worker pool** ([`WorkerPool`]): `jobs` threads are
 //!   spawned once at engine construction, each holding its own cloned
-//!   [`FastSim`] over the shared trace, and are fed work over channels —
-//!   no per-batch thread spawning on the hot path;
+//!   [`FastSim`] over the shared trace, and are fed work over per-worker
+//!   queues — no per-batch thread spawning on the hot path. Dispatch is
+//!   **sticky and locality-aware**: every proposal is routed to the
+//!   worker whose retained simulation schedule is Hamming-closest to the
+//!   proposal's locality hint (its parent configuration, reported by the
+//!   optimizer through [`Optimizer::hints`]), under a per-worker cap
+//!   that keeps batches balanced — so small mutations land on a worker
+//!   that can re-simulate them as a cheap delta instead of a full
+//!   replay;
 //! - a **sharded memo cache** ([`ShardedCache`]): N shards keyed by the
 //!   configuration hash, so concurrent lookups from worker threads don't
 //!   serialize on a single lock;
@@ -24,12 +31,12 @@ use super::{BramBatch, EvalPoint, NativeBram};
 use crate::bram;
 use crate::opt::pareto::{pareto_front, ObjPoint};
 use crate::opt::{AskCtx, Optimizer, Space};
-use crate::sim::fast::{BlockInfo, ChannelStats, FastSim, SimOutcome};
+use crate::sim::fast::{BlockInfo, ChannelStats, FastSim, RunInfo, SimOutcome};
 use crate::trace::Trace;
 use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
 use std::thread;
 use std::time::Instant;
 
@@ -123,6 +130,7 @@ struct JobDone {
     latency: Option<u64>,
     simulated: bool,
     nanos: u64,
+    run: RunInfo,
 }
 
 /// Result of one pool job, in submission order.
@@ -134,6 +142,17 @@ pub struct JobOutcome {
     pub simulated: bool,
     /// Wall time this job occupied its worker.
     pub nanos: u64,
+    /// Simulator telemetry for this job (zeroed for cache hits).
+    pub run: RunInfo,
+}
+
+/// Number of differing positions between two configurations; mismatched
+/// lengths count as maximally distant.
+fn hamming(a: &[u32], b: &[u32]) -> u64 {
+    if a.len() != b.len() {
+        return u64::MAX - 1;
+    }
+    a.iter().zip(b).filter(|(x, y)| x != y).count() as u64
 }
 
 /// A pool of simulation workers that outlives any single batch. Each
@@ -141,59 +160,74 @@ pub struct JobOutcome {
 /// an `Arc`) and, optionally, a handle to the engine's [`ShardedCache`]
 /// which it consults before simulating — so configurations evaluated
 /// concurrently by another client of the same cache are not re-simulated.
+///
+/// Every worker has its own queue, and the dispatcher tracks the last
+/// configuration sent to each worker — the schedule its `FastSim` will
+/// have retained once the queue drains. [`run_with_hints`](Self::run_with_hints)
+/// routes each job to the worker whose tracked schedule is
+/// Hamming-closest to the job's locality hint, capped at ⌈batch/jobs⌉
+/// jobs per worker so locality never starves parallelism. Results are
+/// reassembled in submission order, and the simulator itself guarantees
+/// delta replays are bit-identical to cold ones, so dispatch choices can
+/// never change results — only how much work each one costs.
 pub struct WorkerPool {
     jobs: usize,
-    task_tx: Option<mpsc::Sender<Job>>,
+    task_tx: Vec<mpsc::Sender<Job>>,
     result_rx: mpsc::Receiver<JobDone>,
     handles: Vec<thread::JoinHandle<()>>,
+    /// Last configuration dispatched to each worker.
+    last_cfg: Vec<Option<Box<[u32]>>>,
+    /// Per-batch assignment-count scratch.
+    assigned: Vec<usize>,
 }
 
 impl WorkerPool {
     /// Spawn `jobs` workers, each with its own clone of `proto`.
     pub fn new(proto: &FastSim, jobs: usize, cache: Option<Arc<ShardedCache>>) -> WorkerPool {
         let jobs = jobs.max(1);
-        let (task_tx, task_rx) = mpsc::channel::<Job>();
-        let task_rx = Arc::new(Mutex::new(task_rx));
         let (result_tx, result_rx) = mpsc::channel::<JobDone>();
         let mut handles = Vec::with_capacity(jobs);
+        let mut task_tx = Vec::with_capacity(jobs);
         for _ in 0..jobs {
+            let (tx, rx) = mpsc::channel::<Job>();
             let mut sim = proto.clone();
-            let rx = Arc::clone(&task_rx);
-            let tx = result_tx.clone();
+            let res = result_tx.clone();
             let cache = cache.clone();
-            handles.push(thread::spawn(move || loop {
-                let job = match rx.lock() {
-                    Ok(guard) => guard.recv(),
-                    Err(_) => break,
-                };
-                let job = match job {
-                    Ok(j) => j,
-                    Err(_) => break, // pool dropped: shut down
-                };
-                let t0 = Instant::now();
-                let (latency, simulated) = match cache.as_ref().and_then(|c| c.get(&job.cfg)) {
-                    Some((lat, _)) => (lat, false),
-                    None => (sim.simulate(&job.cfg).latency(), true),
-                };
-                let nanos = t0.elapsed().as_nanos() as u64;
-                if tx
-                    .send(JobDone {
-                        idx: job.idx,
-                        latency,
-                        simulated,
-                        nanos,
-                    })
-                    .is_err()
-                {
-                    break;
+            handles.push(thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let (latency, simulated, run) =
+                        match cache.as_ref().and_then(|c| c.get(&job.cfg)) {
+                            Some((lat, _)) => (lat, false, RunInfo::default()),
+                            None => {
+                                let lat = sim.simulate(&job.cfg).latency();
+                                (lat, true, sim.last_run())
+                            }
+                        };
+                    let nanos = t0.elapsed().as_nanos() as u64;
+                    if res
+                        .send(JobDone {
+                            idx: job.idx,
+                            latency,
+                            simulated,
+                            nanos,
+                            run,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
                 }
             }));
+            task_tx.push(tx);
         }
         WorkerPool {
             jobs,
-            task_tx: Some(task_tx),
+            task_tx,
             result_rx,
             handles,
+            last_cfg: vec![None; jobs],
+            assigned: vec![0; jobs],
         }
     }
 
@@ -204,18 +238,64 @@ impl WorkerPool {
 
     /// Evaluate every configuration, returning outcomes in input order.
     /// The calling thread blocks until the whole batch is done.
-    pub fn run(&self, configs: &[Box<[u32]>]) -> Vec<JobOutcome> {
+    pub fn run(&mut self, configs: &[Box<[u32]>]) -> Vec<JobOutcome> {
+        self.run_with_hints(configs, None)
+    }
+
+    /// [`run`](Self::run) with per-job locality hints: `hints[k]`, when
+    /// present, is the configuration job `k` was derived from; the job is
+    /// dispatched to the worker whose retained schedule is closest to it
+    /// (falling back to the configuration itself as its own hint).
+    pub fn run_with_hints(
+        &mut self,
+        configs: &[Box<[u32]>],
+        hints: Option<&[Option<Box<[u32]>>]>,
+    ) -> Vec<JobOutcome> {
         let n = configs.len();
         if n == 0 {
             return Vec::new();
         }
-        let tx = self.task_tx.as_ref().expect("pool already shut down");
+        // Sticky, balanced dispatch (deterministic: ties break to the
+        // lowest worker index; cold workers are chosen last).
+        let cap = n.div_ceil(self.jobs);
+        for a in &mut self.assigned {
+            *a = 0;
+        }
         for (idx, cfg) in configs.iter().enumerate() {
-            tx.send(Job {
-                idx,
-                cfg: cfg.clone(),
-            })
-            .expect("worker pool channel closed");
+            let target: &[u32] = hints
+                .and_then(|h| h.get(idx))
+                .and_then(|h| h.as_deref())
+                .unwrap_or(cfg.as_ref());
+            let mut best = usize::MAX;
+            let mut best_d = u64::MAX;
+            for w in 0..self.jobs {
+                if self.assigned[w] >= cap {
+                    continue;
+                }
+                let d = match &self.last_cfg[w] {
+                    Some(prev) => hamming(prev, target),
+                    None => u64::MAX - 1,
+                };
+                if best == usize::MAX || d < best_d {
+                    best = w;
+                    best_d = d;
+                }
+            }
+            debug_assert!(best != usize::MAX, "cap must leave a worker available");
+            self.assigned[best] += 1;
+            // Dispatch-time tracking is an approximation on two counts:
+            // a worker that answers a job from the shared cache keeps its
+            // older retained schedule, and the count cap balances job
+            // counts, not job costs. Both only affect how much a delta
+            // saves, never what it computes; the common engine path
+            // pre-filters cache hits, so the tracking is exact there.
+            self.last_cfg[best] = Some(cfg.clone());
+            self.task_tx[best]
+                .send(Job {
+                    idx,
+                    cfg: cfg.clone(),
+                })
+                .expect("worker pool channel closed");
         }
         let mut out = vec![JobOutcome::default(); n];
         for _ in 0..n {
@@ -227,21 +307,22 @@ impl WorkerPool {
                 latency: done.latency,
                 simulated: done.simulated,
                 nanos: done.nanos,
+                run: done.run,
             };
         }
         out
     }
 
     /// Latency-only convenience used by the [`super::pool`] shim.
-    pub fn run_latencies(&self, configs: &[Box<[u32]>]) -> Vec<Option<u64>> {
+    pub fn run_latencies(&mut self, configs: &[Box<[u32]>]) -> Vec<Option<u64>> {
         self.run(configs).into_iter().map(|o| o.latency).collect()
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        // Closing the task channel wakes every worker out of `recv`.
-        drop(self.task_tx.take());
+        // Closing the task channels wakes every worker out of `recv`.
+        self.task_tx.clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -269,6 +350,16 @@ pub struct EngineStats {
     /// Total wall time jobs occupied simulation workers (or the inline
     /// serial path).
     pub busy_nanos: u64,
+    /// Simulations served by delta-incremental replay (subset of
+    /// [`sims`](Self::sims)).
+    pub incr_sims: u64,
+    /// Total dirty channels across incremental simulations.
+    pub dirty_channels: u64,
+    /// Trace ops actually re-propagated across all simulations.
+    pub replayed_ops: u64,
+    /// Trace ops the same simulations would have propagated as full
+    /// replays (sims × trace ops).
+    pub replayable_ops: u64,
 }
 
 impl EngineStats {
@@ -279,6 +370,44 @@ impl EngineStats {
         } else {
             self.cache_hits as f64 / self.proposals as f64
         }
+    }
+
+    /// Fraction of simulations served as delta replays.
+    pub fn incremental_rate(&self) -> f64 {
+        if self.sims == 0 {
+            0.0
+        } else {
+            self.incr_sims as f64 / self.sims as f64
+        }
+    }
+
+    /// Mean dirty channels per incremental simulation.
+    pub fn dirty_per_incremental(&self) -> f64 {
+        if self.incr_sims == 0 {
+            0.0
+        } else {
+            self.dirty_channels as f64 / self.incr_sims as f64
+        }
+    }
+
+    /// Fraction of trace ops actually re-propagated (1.0 = every
+    /// simulation was a full replay).
+    pub fn replay_fraction(&self) -> f64 {
+        if self.replayable_ops == 0 {
+            1.0
+        } else {
+            self.replayed_ops as f64 / self.replayable_ops as f64
+        }
+    }
+
+    /// Fold one simulator run's telemetry into the counters.
+    fn note_run(&mut self, run: &RunInfo) {
+        if run.incremental {
+            self.incr_sims += 1;
+            self.dirty_channels += run.dirty_channels as u64;
+        }
+        self.replayed_ops += run.replayed_ops;
+        self.replayable_ops += run.total_ops;
     }
 }
 
@@ -459,6 +588,8 @@ impl EvalEngine {
                 let t0 = Instant::now();
                 let lat = self.sim.simulate(depths).latency();
                 self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
+                let run = self.sim.last_run();
+                self.stats.note_run(&run);
                 let br = bram::bram_total(depths, &self.widths);
                 self.n_sim += 1;
                 self.stats.sims += 1;
@@ -491,31 +622,47 @@ impl EvalEngine {
     /// info (the greedy ranking / targeted hunter path); otherwise the
     /// batched pool path is used.
     pub fn eval_results(&mut self, configs: &[Box<[u32]>], want_stats: bool) -> Vec<EvalResult> {
+        self.eval_results_hinted(configs, &[], want_stats)
+    }
+
+    /// [`eval_results`](Self::eval_results) with per-proposal locality
+    /// hints (parent configurations from [`Optimizer::hints`]). Hints are
+    /// advisory: they steer the worker pool's sticky dispatch and never
+    /// affect results. Pass `&[]` for no hints.
+    pub fn eval_results_hinted(
+        &mut self,
+        configs: &[Box<[u32]>],
+        hints: &[Option<Box<[u32]>>],
+        want_stats: bool,
+    ) -> Vec<EvalResult> {
         if want_stats {
             return configs.iter().map(|c| self.eval_one_with_stats(c)).collect();
         }
         self.stats.batches += 1;
 
-        // In-batch dedup + memo lookup.
+        // In-batch dedup + memo lookup (each miss keeps its hint).
         let mut misses: Vec<Box<[u32]>> = Vec::new();
+        let mut miss_hints: Vec<Option<Box<[u32]>>> = Vec::new();
         {
             let mut seen: HashSet<&[u32]> = HashSet::new();
-            for c in configs {
+            for (i, c) in configs.iter().enumerate() {
                 if self.cache.get(c).is_none() && seen.insert(c.as_ref()) {
                     misses.push(c.clone());
+                    miss_hints.push(hints.get(i).cloned().flatten());
                 }
             }
         }
         self.stats.cache_hits += (configs.len() - misses.len()) as u64;
 
         if !misses.is_empty() {
-            let lats: Vec<Option<u64>> = match &self.pool {
+            let lats: Vec<Option<u64>> = match &mut self.pool {
                 Some(pool) if misses.len() > 1 => {
-                    let outcomes = pool.run(&misses);
+                    let outcomes = pool.run_with_hints(&misses, Some(&miss_hints[..]));
                     for o in &outcomes {
                         if o.simulated {
                             self.n_sim += 1;
                             self.stats.sims += 1;
+                            self.stats.note_run(&o.run);
                         }
                         self.stats.busy_nanos += o.nanos;
                     }
@@ -523,10 +670,12 @@ impl EvalEngine {
                 }
                 _ => {
                     let t0 = Instant::now();
-                    let lats: Vec<Option<u64>> = misses
-                        .iter()
-                        .map(|c| self.sim.simulate(c).latency())
-                        .collect();
+                    let mut lats: Vec<Option<u64>> = Vec::with_capacity(misses.len());
+                    for c in misses.iter() {
+                        lats.push(self.sim.simulate(c).latency());
+                        let run = self.sim.last_run();
+                        self.stats.note_run(&run);
+                    }
                     self.n_sim += misses.len() as u64;
                     self.stats.sims += misses.len() as u64;
                     self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
@@ -566,6 +715,8 @@ impl EvalEngine {
         let t0 = Instant::now();
         let (out, stats) = self.sim.simulate_with_stats(depths);
         self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
+        let run = self.sim.last_run();
+        self.stats.note_run(&run);
         self.n_sim += 1;
         self.stats.sims += 1;
         let lat = out.latency();
@@ -597,6 +748,8 @@ impl EvalEngine {
     /// [`Optimizer::wants_stats`] instead).
     pub fn eval_with_stats(&mut self, depths: &[u32]) -> (SimOutcome, ChannelStats) {
         let (out, stats) = self.sim.simulate_with_stats(depths);
+        let run = self.sim.last_run();
+        self.stats.note_run(&run);
         self.n_sim += 1;
         self.stats.sims += 1;
         let br = bram::bram_total(depths, &self.widths);
@@ -672,7 +825,8 @@ pub fn drive(
         if batch.is_empty() {
             break;
         }
-        let results = engine.eval_results(&batch, opt.wants_stats());
+        let hints = opt.hints();
+        let results = engine.eval_results_hinted(&batch, &hints, opt.wants_stats());
         opt.tell(&results);
     }
     engine.n_evals() - start_evals
@@ -708,7 +862,7 @@ mod tests {
         let t = trace_of("gesummv");
         let sim = FastSim::new(t.clone());
         let cache = Arc::new(ShardedCache::new(8));
-        let pool = WorkerPool::new(&sim, 4, Some(Arc::clone(&cache)));
+        let mut pool = WorkerPool::new(&sim, 4, Some(Arc::clone(&cache)));
         let ub = t.upper_bounds();
         let mut rng = crate::util::Rng::new(5);
         let configs: Vec<Box<[u32]>> = (0..30)
@@ -763,6 +917,78 @@ mod tests {
         let n = drive(&mut o, &mut ev, &space, 100);
         assert_eq!(n, 100);
         assert_eq!(ev.n_evals(), 100);
+    }
+
+    #[test]
+    fn hinted_dispatch_preserves_order_and_results() {
+        let t = trace_of("gesummv");
+        let sim = FastSim::new(t.clone());
+        let mut pool = WorkerPool::new(&sim, 3, None);
+        let ub = t.upper_bounds();
+        // A mutation chain: each config differs from a shared base in one
+        // position — the locality hint is the base.
+        let base: Box<[u32]> = ub.iter().map(|&u| u.max(2)).collect();
+        let mut configs: Vec<Box<[u32]>> = Vec::new();
+        let mut hints: Vec<Option<Box<[u32]>>> = Vec::new();
+        for i in 0..20 {
+            let mut c = base.to_vec();
+            let ch = i % c.len();
+            c[ch] = 2 + (i as u32 % c[ch].max(3));
+            configs.push(c.into());
+            hints.push(if i % 4 == 0 { None } else { Some(base.clone()) });
+        }
+        let hinted = pool.run_with_hints(&configs, Some(&hints[..]));
+        let mut serial = FastSim::new(t.clone());
+        for (c, o) in configs.iter().zip(&hinted) {
+            assert_eq!(serial.simulate(c).latency(), o.latency, "cfg {c:?}");
+        }
+        // Cap keeps the batch balanced even with identical hints.
+        let max_assigned = *pool.assigned.iter().max().unwrap();
+        assert!(max_assigned <= 20usize.div_ceil(3));
+    }
+
+    /// `k` independent producer→consumer pipes: a single-channel depth
+    /// delta can only dirty one pipe, so the dirty frontier stays tiny.
+    fn parallel_pipes_trace(k: usize, n: u64) -> Arc<Trace> {
+        use crate::ir::{DesignBuilder, Expr};
+        let mut b = DesignBuilder::new("pipes", 0);
+        let chans: Vec<usize> = (0..k).map(|i| b.channel(&format!("c{i}"), 32)).collect();
+        for (i, &c) in chans.iter().enumerate() {
+            b.process(&format!("w{i}"), move |p| {
+                p.for_n(n, |p, _| p.write(c, Expr::c(0)))
+            });
+            b.process(&format!("r{i}"), move |p| {
+                p.for_n(n, |p, _| {
+                    let _ = p.read(c);
+                })
+            });
+        }
+        Arc::new(collect_trace(&b.build(), &[]).unwrap())
+    }
+
+    #[test]
+    fn engine_counts_incremental_sims_on_mutation_chains() {
+        // Serial engine: consecutive ±1 single-channel mutations must be
+        // served as delta replays, and the counters must see them.
+        let t = parallel_pipes_trace(8, 32);
+        let mut ev = EvalEngine::new(t.clone());
+        let base = t.baseline_max();
+        ev.eval(&base);
+        for ch in 0..base.len() {
+            let mut c = base.clone();
+            c[ch] -= 1;
+            ev.eval(&c);
+        }
+        let s = ev.stats();
+        assert_eq!(s.sims, 1 + base.len() as u64);
+        assert!(
+            s.incr_sims >= base.len() as u64,
+            "±1 mutations should all be delta replays: {s:?}"
+        );
+        assert!(s.replayed_ops < s.replayable_ops, "deltas must save work");
+        assert!(s.incremental_rate() > 0.0 && s.incremental_rate() <= 1.0);
+        assert!(s.replay_fraction() < 1.0);
+        assert!(s.dirty_per_incremental() >= 1.0);
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub fn parallel_latencies(
         let mut sim = proto.clone();
         return configs.iter().map(|c| sim.simulate(c).latency()).collect();
     }
-    let pool = WorkerPool::new(proto, threads.min(configs.len()), None);
+    let mut pool = WorkerPool::new(proto, threads.min(configs.len()), None);
     pool.run_latencies(configs)
 }
 

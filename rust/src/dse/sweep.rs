@@ -103,6 +103,11 @@ pub struct SweepRow {
     pub evals: usize,
     /// Actual simulator invocations (evals minus memo hits).
     pub sims: u64,
+    /// Fraction of simulations served as delta-incremental replays.
+    pub incr_rate: f64,
+    /// Fraction of trace ops actually re-propagated (1.0 = all full
+    /// replays).
+    pub replay_frac: f64,
     pub elapsed_secs: f64,
     pub front_size: usize,
     pub star_latency: u64,
@@ -146,6 +151,8 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                     seed,
                     evals: ev.n_evals(),
                     sims: ev.n_sim,
+                    incr_rate: ev.stats().incremental_rate(),
+                    replay_frac: ev.stats().replay_fraction(),
                     elapsed_secs: dt,
                     front_size: front.len(),
                     star_latency: star.0,
@@ -187,6 +194,8 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                 r.seed.to_string(),
                 format!("{:.3}", r.elapsed_secs),
                 r.sims.to_string(),
+                format!("{:.0}%", r.incr_rate * 100.0),
+                format!("{:.0}%", r.replay_frac * 100.0),
                 r.front_size.to_string(),
                 format!("{:.4}", r.star_latency as f64 / r.base_latency as f64),
                 format!(
@@ -198,7 +207,10 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
         })
         .collect();
     report::markdown_table(
-        &["design", "optimizer", "seed", "secs", "sims", "front", "lat×", "BRAM↓", "rescue"],
+        &[
+            "design", "optimizer", "seed", "secs", "sims", "incr%", "replay%", "front", "lat×",
+            "BRAM↓", "rescue",
+        ],
         &table_rows,
     )
 }

@@ -37,6 +37,9 @@ pub struct Greedy {
     saved: u32,
     trying: Option<usize>,
     max_lat: u64,
+    /// Locality hints (the base configuration each trial mutates) for
+    /// the last asked batch.
+    hint_buf: Vec<Option<Box<[u32]>>>,
 }
 
 impl Greedy {
@@ -54,6 +57,7 @@ impl Greedy {
             saved: 0,
             trying: None,
             max_lat: 0,
+            hint_buf: Vec::new(),
         }
     }
 }
@@ -70,11 +74,13 @@ impl Optimizer for Greedy {
     }
 
     fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        self.hint_buf.clear();
         match self.phase {
             Phase::Baseline => {
                 // Baseline-Max: every FIFO at its upper bound (the space
                 // carries the trace's `u_i`, already floored at 2).
                 self.cur = ctx.space.bounds.iter().map(|&u| u.max(2)).collect();
+                self.hint_buf.push(None);
                 vec![self.cur.clone().into()]
             }
             Phase::Trials => {
@@ -87,6 +93,9 @@ impl Optimizer for Greedy {
                         self.pos += 1;
                         continue;
                     }
+                    // Each trial is a single-FIFO collapse of the kept
+                    // base — report that base as the locality hint.
+                    self.hint_buf.push(Some(self.cur.clone().into()));
                     self.saved = self.cur[i];
                     self.cur[i] = 2;
                     self.trying = Some(i);
@@ -96,10 +105,15 @@ impl Optimizer for Greedy {
                 // is in history (may overrun a tight budget by one, as
                 // the imperative implementation did).
                 self.phase = Phase::Final;
+                self.hint_buf.push(Some(self.cur.clone().into()));
                 vec![self.cur.clone().into()]
             }
             Phase::Final | Phase::Done => Vec::new(),
         }
+    }
+
+    fn hints(&self) -> Vec<Option<Box<[u32]>>> {
+        self.hint_buf.clone()
     }
 
     fn tell(&mut self, results: &[EvalResult]) {

@@ -20,6 +20,26 @@
 //! the engine centralizes history, budget, and cache accounting. The
 //! Pareto front is extracted from the engine history afterwards, exactly
 //! as in the paper's flow.
+//!
+//! # Authoring an optimizer
+//!
+//! Implement [`Optimizer`] and register the name in [`by_name`]:
+//!
+//! - `ask` proposes a batch (at most `ctx.budget_left`; empty ends the
+//!   run), `tell` receives one [`EvalResult`] per proposal in order.
+//! - Override `wants_stats` to get per-channel occupancy/stall stats and
+//!   deadlock block info on each result (evaluated serially — use it for
+//!   ranking phases, not for bulk search).
+//! - Override [`hints`](Optimizer::hints) whenever proposals are *small
+//!   mutations of a known configuration* — return that parent per
+//!   proposal. The simulator retains its last committed schedule and
+//!   re-simulates a 1–2-channel delta at a fraction of a full replay, and
+//!   the engine's worker pool routes each proposal to the worker whose
+//!   retained schedule is Hamming-closest to the hint. Hints are purely
+//!   advisory: results are bit-identical with or without them (and between
+//!   serial and `--jobs N` runs); they only decide how much work each
+//!   evaluation costs. SA reports its chain incumbents, greedy and the
+//!   Vitis hunter their current base configuration.
 
 pub mod exhaustive;
 pub mod greedy;
@@ -77,6 +97,16 @@ pub trait Optimizer {
     /// [`EvalResult`] (queried by the driver after each `ask`).
     fn wants_stats(&self) -> bool {
         false
+    }
+
+    /// Locality hints for the batch most recently returned by `ask`:
+    /// element `k` is the configuration proposal `k` was *derived from*
+    /// (the SA chain's incumbent, greedy's base configuration, …), or
+    /// `None`. The engine uses them for sticky worker dispatch so small
+    /// mutations become delta re-simulations; they never affect results.
+    /// An empty vector (the default) means "no hints".
+    fn hints(&self) -> Vec<Option<Box<[u32]>>> {
+        Vec::new()
     }
 }
 

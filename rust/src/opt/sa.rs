@@ -53,6 +53,8 @@ pub struct SimAnneal {
     runs: Option<Vec<Chain>>,
     /// Chain index of each proposal in the last asked batch.
     asked: Vec<usize>,
+    /// Locality hints (chain incumbents) for the last asked batch.
+    hint_buf: Vec<Option<Box<[u32]>>>,
 }
 
 impl SimAnneal {
@@ -64,6 +66,7 @@ impl SimAnneal {
             t_final_frac: 1e-4,
             runs: None,
             asked: Vec::new(),
+            hint_buf: Vec::new(),
         }
     }
 
@@ -158,6 +161,7 @@ impl Optimizer for SimAnneal {
             self.init_runs(ctx.space, ctx.budget_left);
         }
         self.asked.clear();
+        self.hint_buf.clear();
         let mut batch: Vec<Box<[u32]>> = Vec::new();
         let n_runs = self.runs.as_ref().unwrap().len();
         for ci in 0..n_runs {
@@ -168,6 +172,13 @@ impl Optimizer for SimAnneal {
             if left == 0 {
                 continue;
             }
+            // The chain's incumbent is the proposal's parent: the engine
+            // routes the move to the worker already holding its schedule.
+            let parent = if started {
+                Some(self.expand(ctx.space, &state))
+            } else {
+                None
+            };
             let proposal = if started {
                 let cands = self.candidates(ctx.space);
                 self.perturb(cands, state)
@@ -175,12 +186,17 @@ impl Optimizer for SimAnneal {
                 state
             };
             batch.push(self.expand(ctx.space, &proposal));
+            self.hint_buf.push(parent);
             let ch = &mut self.runs.as_mut().unwrap()[ci];
             ch.next = Some(proposal);
             ch.left -= 1;
             self.asked.push(ci);
         }
         batch
+    }
+
+    fn hints(&self) -> Vec<Option<Box<[u32]>>> {
+        self.hint_buf.clone()
     }
 
     fn tell(&mut self, results: &[EvalResult]) {

@@ -30,6 +30,10 @@ pub struct VitisHunter {
     bounds: Vec<u32>,
     iters_left: usize,
     found: Option<Box<[u32]>>,
+    /// The previous round's proposal — the locality hint for the next
+    /// one (each round is a doubling of the last).
+    last_proposed: Option<Box<[u32]>>,
+    hint_buf: Vec<Option<Box<[u32]>>>,
 }
 
 impl VitisHunter {
@@ -49,6 +53,8 @@ impl VitisHunter {
             bounds: Vec::new(),
             iters_left: 0,
             found: None,
+            last_proposed: None,
+            hint_buf: Vec::new(),
         }
     }
 
@@ -90,17 +96,30 @@ impl Optimizer for VitisHunter {
     }
 
     fn ask(&mut self, ctx: &AskCtx) -> Vec<Box<[u32]>> {
+        self.hint_buf.clear();
         match self.phase {
             Phase::Fresh => {
                 self.bounds = ctx.space.bounds.clone();
                 self.cur = vec![2; self.bounds.len()]; // Baseline-Min
                 self.iters_left = ctx.budget_left.max(1);
                 self.phase = Phase::Running;
-                vec![self.cur.clone().into()]
+                let prop: Box<[u32]> = self.cur.clone().into();
+                self.hint_buf.push(None);
+                self.last_proposed = Some(prop.clone());
+                vec![prop]
             }
-            Phase::Running | Phase::LastChance => vec![self.cur.clone().into()],
+            Phase::Running | Phase::LastChance => {
+                let prop: Box<[u32]> = self.cur.clone().into();
+                self.hint_buf.push(self.last_proposed.clone());
+                self.last_proposed = Some(prop.clone());
+                vec![prop]
+            }
             Phase::Done => Vec::new(),
         }
+    }
+
+    fn hints(&self) -> Vec<Option<Box<[u32]>>> {
+        self.hint_buf.clone()
     }
 
     fn tell(&mut self, results: &[EvalResult]) {

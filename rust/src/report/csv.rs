@@ -47,6 +47,16 @@ impl Csv {
         super::write_file(path, &self.to_string())
     }
 
+    /// Accumulated rows (used by the JSON perf-snapshot emitters).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Header names.
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
     pub fn len(&self) -> usize {
         self.rows.len()
     }

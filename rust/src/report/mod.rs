@@ -28,7 +28,8 @@ pub fn point_to_json(p: &EvalPoint) -> Json {
 }
 
 /// Serialize the evaluation-engine counters (cache hit rate, sims/sec,
-/// worker utilization) for run records and diagnostics.
+/// worker utilization, incremental-replay telemetry) for run records and
+/// diagnostics.
 pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
     let s = engine.stats();
     Json::obj(vec![
@@ -41,6 +42,15 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
         ("sims", Json::Num(s.sims as f64)),
         ("sims_per_sec", Json::Num(engine.sims_per_sec())),
         ("worker_utilization", Json::Num(engine.worker_utilization())),
+        ("incremental_sims", Json::Num(s.incr_sims as f64)),
+        ("incremental_rate", Json::Num(s.incremental_rate())),
+        (
+            "dirty_channels_per_incremental_sim",
+            Json::Num(s.dirty_per_incremental()),
+        ),
+        ("replayed_ops", Json::Num(s.replayed_ops as f64)),
+        ("replayable_ops", Json::Num(s.replayable_ops as f64)),
+        ("replay_fraction", Json::Num(s.replay_fraction())),
     ])
 }
 
@@ -48,12 +58,16 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
 pub fn engine_stats_line(engine: &EvalEngine) -> String {
     let s = engine.stats();
     format!(
-        "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s, {:.0}% worker utilization",
+        "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s, {:.0}% worker utilization, \
+         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed)",
         engine.jobs(),
         engine.cache_shards(),
         s.hit_rate() * 100.0,
         engine.sims_per_sec(),
-        engine.worker_utilization() * 100.0
+        engine.worker_utilization() * 100.0,
+        s.incremental_rate() * 100.0,
+        s.dirty_per_incremental(),
+        s.replay_fraction() * 100.0
     )
 }
 

@@ -1,14 +1,57 @@
-//! The fast trace simulator — LightningSim phase-2 analog.
+//! The fast trace simulator — LightningSim phase-2 analog, now with
+//! **delta-incremental re-simulation**.
 //!
 //! Construction ([`FastSim::new`]) preallocates per-channel commit-time
 //! vectors sized from the trace; [`FastSim::simulate`] then evaluates any
-//! FIFO depth configuration with zero heap allocation, in one
-//! event-driven pass over the trace (O(total ops)). This is what makes
-//! "incremental simulation in under 1 ms per FIFO size change" (paper
-//! §III-A) achievable.
+//! FIFO depth configuration in one event-driven pass over the trace
+//! (O(total ops)), with zero heap allocation on the hot path.
+//!
+//! # Incremental re-simulation
+//!
+//! After every run the simulator *retains* the committed schedule — the
+//! per-channel `wr_times`/`rd_times` arrays, per-process cursors and the
+//! configuration that produced them. The next [`simulate`](FastSim::simulate)
+//! call diffs the new configuration against the retained one and replays
+//! only the part of the trace whose commit times can actually change; DSE
+//! proposals that mutate one or two FIFO depths (SA β-chain moves, greedy
+//! collapses, the Vitis hunter's doublings) re-simulate in a fraction of a
+//! full pass — the paper's "incremental simulation in under 1 ms per FIFO
+//! size change" (§III-A).
+//!
+//! **Invalidation rules.** A channel is *dirty* when its depth changed.
+//! For a dirty channel with depths `d0 → d1`:
+//!
+//! - writes from ordinal `min(d0, d1)` are invalid (the full-FIFO
+//!   constraint `commit ≥ rd[j − d] + 1` exists/indexes differently);
+//! - if the depth change crosses the SRL↔BRAM boundary
+//!   ([`read_latency`](super::read_latency) changes), every read on the
+//!   channel is invalid.
+//!
+//! Invalidation then propagates through the constraint graph to a
+//! fixpoint over per-process *checkpoints* (the earliest op index that
+//! must be replayed), using a once-per-trace channel↔process op-index map
+//! ([`ChanOpIndex`]): invalid writes on `c` from ordinal `j` invalidate
+//! the reader of `c` from its op committing read `j` (reads wait on their
+//! write); invalid reads from ordinal `j` invalidate the writer from its
+//! op committing write `j + d1` (writes wait on the read that frees their
+//! slot). The scratch state is then *rewound* — cursors and per-channel
+//! commit counters are reset to each process's checkpoint, every process
+//! with remaining ops seeds the ready worklist — and the ordinary
+//! event-driven propagation loop finishes the job. Commit times form the
+//! unique least fixpoint of the constraint system, so the result is
+//! **bit-identical** to a cold full replay (enforced by
+//! `tests/incremental_fuzz.rs`). When the checkpoint fixpoint shows the
+//! dirty frontier covers (almost) the whole trace, the simulator falls
+//! back to a plain full replay, so incremental mode is never slower than
+//! the old behaviour by more than the checkpoint computation itself
+//! (O(dirty region) with binary searches).
+//!
+//! Per-run telemetry (dirty channels, ops replayed vs total) is exposed
+//! through [`FastSim::last_run`] and aggregated by the DSE engine into
+//! its incremental-hit-rate statistics.
 
 use super::SimOptions;
-use crate::trace::Trace;
+use crate::trace::{ChanOpIndex, Trace};
 use std::sync::Arc;
 
 /// Result of simulating one FIFO configuration.
@@ -58,10 +101,49 @@ pub struct ChannelStats {
     pub read_stall: Vec<u64>,
 }
 
+impl ChannelStats {
+    /// An empty buffer; [`FastSim::simulate_with_stats_into`] sizes it.
+    pub fn new() -> ChannelStats {
+        ChannelStats {
+            max_occupancy: Vec::new(),
+            write_stall: Vec::new(),
+            read_stall: Vec::new(),
+        }
+    }
+}
+
+impl Default for ChannelStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Telemetry for one `simulate` call (see [`FastSim::last_run`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunInfo {
+    /// True when the call reused the retained schedule (delta replay or
+    /// identical-configuration short-circuit).
+    pub incremental: bool,
+    /// Channels whose depth differed from the retained configuration
+    /// (0 for full replays and identical configurations).
+    pub dirty_channels: u32,
+    /// Trace ops this call actually committed (0 when the configuration
+    /// was identical to the retained one).
+    pub replayed_ops: u64,
+    /// Total trace ops — the cost of a full replay.
+    pub total_ops: u64,
+}
+
+/// Fall back to a full replay when the checkpoint fixpoint shows at
+/// least this percentage of trace ops must be re-propagated anyway.
+const INCR_FALLBACK_PCT: u64 = 90;
+
 /// The reusable fast simulator. Construct once per trace; call
 /// [`simulate`](FastSim::simulate) once per candidate configuration.
-/// `Clone` is cheap-ish (scratch vectors are duplicated, the trace is
-/// shared) and gives each DSE worker thread its own engine.
+/// `Clone` is cheap-ish (scratch vectors are duplicated; the trace and
+/// the op-index maps are shared) and gives each DSE worker thread its own
+/// engine — including its own retained schedule, which is what makes the
+/// engine's sticky locality-aware dispatch pay off.
 #[derive(Clone)]
 pub struct FastSim {
     trace: Arc<Trace>,
@@ -71,7 +153,7 @@ pub struct FastSim {
     wr_times: Vec<Box<[u64]>>,
     /// Per-channel committed-read times, indexed by read ordinal.
     rd_times: Vec<Box<[u64]>>,
-    /// Per-channel commit counters (reset each run).
+    /// Per-channel commit counters (reset or rewound each run).
     wr_done: Vec<u32>,
     rd_done: Vec<u32>,
     /// Per-channel single reader/writer process parked on it (SPSC).
@@ -99,6 +181,23 @@ pub struct FastSim {
     /// op `k` (distinct channels, zero delay after the first op) — the
     /// matmul PE access pattern, which single-channel RLE cannot catch.
     pair_run: Vec<Box<[u32]>>,
+    /// Channel↔process op-index maps (shared by clones; drives
+    /// incremental invalidation and the zero-alloc stats post-pass).
+    index: Arc<ChanOpIndex>,
+    /// Master switch for schedule retention/reuse (on by default).
+    incremental: bool,
+    /// Configuration of the retained schedule (valid iff `last_outcome`
+    /// is `Some`).
+    last_depths: Vec<u32>,
+    /// Outcome of the retained run.
+    last_outcome: Option<SimOutcome>,
+    /// Telemetry of the most recent `simulate` call.
+    info: RunInfo,
+    /// Scratch: per-process replay checkpoint (op index).
+    ckpt: Vec<u32>,
+    /// Scratch: checkpoint-fixpoint worklist + membership flags.
+    wl: Vec<u32>,
+    in_wl: Vec<bool>,
 }
 
 const NONE: u32 = u32::MAX;
@@ -170,6 +269,7 @@ impl FastSim {
                 pr
             })
             .collect();
+        let index = Arc::new(ChanOpIndex::build(&trace));
         FastSim {
             trace,
             opts,
@@ -187,6 +287,14 @@ impl FastSim {
             rd_lat: vec![0; nch],
             run_len,
             pair_run,
+            index,
+            incremental: true,
+            last_depths: Vec::with_capacity(nch),
+            last_outcome: None,
+            info: RunInfo::default(),
+            ckpt: vec![0; nproc],
+            wl: Vec::with_capacity(nproc),
+            in_wl: vec![false; nproc],
         }
     }
 
@@ -195,22 +303,61 @@ impl FastSim {
         &self.trace
     }
 
+    /// Enable/disable schedule retention and delta replay (on by
+    /// default). Disabling drops the retained schedule, so every
+    /// subsequent `simulate` is a cold full replay — used by the
+    /// differential fuzz tests and the §Perf 6 bench as the reference.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
+        if !on {
+            self.last_outcome = None;
+            self.last_depths.clear();
+        }
+    }
+
+    /// Telemetry of the most recent `simulate`/`simulate_with_stats`
+    /// call: whether the retained schedule was reused, how many channels
+    /// were dirty, and how many trace ops were re-propagated.
+    pub fn last_run(&self) -> RunInfo {
+        self.info
+    }
+
     /// Evaluate one FIFO depth configuration. `depths.len()` must equal
     /// the number of channels. Zero heap allocation on this path.
     pub fn simulate(&mut self, depths: &[u32]) -> SimOutcome {
         self.run(depths)
     }
 
-    /// Evaluate a configuration and also collect per-channel occupancy and
-    /// stall statistics (used by the greedy optimizer; somewhat slower).
+    /// Evaluate a configuration and also collect per-channel occupancy
+    /// and stall statistics (used by the greedy optimizer; somewhat
+    /// slower). Allocates one [`ChannelStats`]; use
+    /// [`simulate_with_stats_into`](Self::simulate_with_stats_into) to
+    /// reuse a caller-owned buffer instead.
     pub fn simulate_with_stats(&mut self, depths: &[u32]) -> (SimOutcome, ChannelStats) {
+        let mut stats = ChannelStats::new();
+        let outcome = self.simulate_with_stats_into(depths, &mut stats);
+        (outcome, stats)
+    }
+
+    /// [`simulate_with_stats`](Self::simulate_with_stats) writing into a
+    /// reusable buffer: zero heap allocation once `stats` has been sized
+    /// by a first call. The per-op channel ordinals come from the static
+    /// [`ChanOpIndex`], so the stall post-pass needs no per-process
+    /// counter vectors either.
+    pub fn simulate_with_stats_into(
+        &mut self,
+        depths: &[u32],
+        stats: &mut ChannelStats,
+    ) -> SimOutcome {
         let outcome = self.run(depths);
-        let nch = self.trace.channels.len();
-        let mut stats = ChannelStats {
-            max_occupancy: vec![0; nch],
-            write_stall: vec![0; nch],
-            read_stall: vec![0; nch],
-        };
+        let trace = self.trace.clone();
+        let nch = trace.channels.len();
+        stats.max_occupancy.clear();
+        stats.max_occupancy.resize(nch, 0);
+        stats.write_stall.clear();
+        stats.write_stall.resize(nch, 0);
+        stats.read_stall.clear();
+        stats.read_stall.resize(nch, 0);
         // Occupancy post-pass: per channel, writes and reads each commit in
         // nondecreasing time order, so a sorted merge tracks occupancy.
         for ch in 0..nch {
@@ -237,32 +384,24 @@ impl FastSim {
             stats.max_occupancy[ch] = max_occ.max(0) as u32;
         }
         // Stall post-pass: replay each process's schedule, comparing
-        // unconstrained start vs commit.
-        for (pid, ops) in self.trace.ops.iter().enumerate() {
+        // unconstrained start vs commit. The op's channel ordinal comes
+        // from the trace index.
+        for (pid, ops) in trace.ops.iter().enumerate() {
             let committed = self.pc[pid] as usize;
+            let ord = &self.index.op_ord[pid];
             let mut prev: u64 = NO_TIME;
-            let mut wr_seen = vec![0u32; nch];
-            let mut rd_seen = vec![0u32; nch];
-            for op in &ops[..committed] {
+            for (k, op) in ops[..committed].iter().enumerate() {
                 let ch = op.chan();
-                let k = if op.is_write() {
-                    let k = wr_seen[ch];
-                    wr_seen[ch] += 1;
-                    k
-                } else {
-                    let k = rd_seen[ch];
-                    rd_seen[ch] += 1;
-                    k
-                };
+                let j = ord[k] as usize;
                 let start = if prev == NO_TIME {
                     op.delay as u64
                 } else {
                     prev + 1 + op.delay as u64
                 };
                 let commit = if op.is_write() {
-                    self.wr_times[ch][k as usize]
+                    self.wr_times[ch][j]
                 } else {
-                    self.rd_times[ch][k as usize]
+                    self.rd_times[ch][j]
                 };
                 let stall = commit.saturating_sub(start);
                 if op.is_write() {
@@ -273,13 +412,13 @@ impl FastSim {
                 prev = commit;
             }
         }
-        (outcome, stats)
+        outcome
     }
 
+    /// Dispatch one evaluation: delta replay against the retained
+    /// schedule when possible, full replay otherwise.
     fn run(&mut self, depths: &[u32]) -> SimOutcome {
-        let trace = self.trace.clone();
-        let nch = trace.channels.len();
-        let nproc = trace.ops.len();
+        let nch = self.trace.channels.len();
         assert_eq!(
             depths.len(),
             nch,
@@ -287,8 +426,35 @@ impl FastSim {
             depths.len(),
             nch
         );
+        self.info = RunInfo {
+            total_ops: self.trace.total_ops() as u64,
+            ..RunInfo::default()
+        };
+        let attempt = if self.incremental && self.last_outcome.is_some() {
+            self.try_incremental(depths)
+        } else {
+            None
+        };
+        let out = match attempt {
+            Some(out) => out,
+            None => {
+                let out = self.run_full(depths);
+                self.info.replayed_ops = self.pc.iter().map(|&p| p as u64).sum();
+                out
+            }
+        };
+        if self.incremental {
+            self.last_depths.clear();
+            self.last_depths.extend_from_slice(depths);
+            self.last_outcome = Some(out.clone());
+        }
+        out
+    }
 
-        // Reset scratch.
+    /// Cold path: reset all scratch, then propagate from the beginning.
+    fn run_full(&mut self, depths: &[u32]) -> SimOutcome {
+        let nch = self.trace.channels.len();
+        let nproc = self.trace.ops.len();
         for v in &mut self.wr_done {
             *v = 0;
         }
@@ -316,8 +482,184 @@ impl FastSim {
             self.rd_lat[ch] =
                 super::read_latency(depths[ch], self.widths[ch], self.opts.uniform_read_latency);
         }
+        self.propagate(depths)
+    }
 
-        // Event-driven commit propagation.
+    /// Delta path: diff against the retained configuration, compute the
+    /// per-process replay checkpoints, rewind, and propagate only the
+    /// invalidated suffix. Returns `None` when a full replay is the
+    /// better (or only safe) choice.
+    fn try_incremental(&mut self, depths: &[u32]) -> Option<SimOutcome> {
+        let trace = self.trace.clone();
+        let index = self.index.clone();
+        let nch = trace.channels.len();
+        let nproc = trace.ops.len();
+
+        // Seed invalidation from the dirty channel set. `rd_lat` still
+        // holds the retained run's latencies at this point, so an
+        // SRL↔BRAM crossing shows up as a latency mismatch.
+        for p in 0..nproc {
+            self.ckpt[p] = trace.ops[p].len() as u32;
+        }
+        let mut n_dirty = 0u32;
+        for ch in 0..nch {
+            let d0 = self.last_depths[ch];
+            let d1 = depths[ch];
+            if d0 == d1 {
+                continue;
+            }
+            n_dirty += 1;
+            // Writes from ordinal min(d0, d1) see a different full-FIFO
+            // constraint.
+            let w0 = d0.min(d1) as usize;
+            if let Some(&op_i) = index.wr_ops[ch].get(w0) {
+                let w = index.writer[ch] as usize;
+                self.ckpt[w] = self.ckpt[w].min(op_i);
+            }
+            // An SRL↔BRAM crossing changes the latency of every read.
+            let rl1 = super::read_latency(d1, self.widths[ch], self.opts.uniform_read_latency);
+            if rl1 != self.rd_lat[ch] {
+                if let Some(&op_i) = index.rd_ops[ch].first() {
+                    let r = index.reader[ch] as usize;
+                    self.ckpt[r] = self.ckpt[r].min(op_i);
+                }
+            }
+        }
+        self.info.dirty_channels = n_dirty;
+        if n_dirty == 0 {
+            // Identical configuration: the retained schedule *is* the
+            // answer, and all scratch already holds its fixpoint.
+            self.info.incremental = true;
+            return self.last_outcome.clone();
+        }
+
+        // Propagate invalidation through the constraint graph to a
+        // fixpoint over per-process checkpoints. Checkpoints only ever
+        // decrease, so the worklist terminates.
+        self.wl.clear();
+        for p in 0..nproc {
+            let invalidated = (self.ckpt[p] as usize) < trace.ops[p].len();
+            self.in_wl[p] = invalidated;
+            if invalidated {
+                self.wl.push(p as u32);
+            }
+        }
+        while let Some(p) = self.wl.pop() {
+            let p = p as usize;
+            self.in_wl[p] = false;
+            let k = self.ckpt[p];
+            for &chu in index.proc_chans[p].iter() {
+                let ch = chu as usize;
+                if index.writer[ch] as usize == p {
+                    // Writes on `ch` from op index `k` are invalid; read
+                    // `j` waits on write `j`.
+                    let w_inv = index.wr_ops[ch].partition_point(|&i| i < k);
+                    if let Some(&op_i) = index.rd_ops[ch].get(w_inv) {
+                        let r = index.reader[ch] as usize;
+                        if op_i < self.ckpt[r] {
+                            self.ckpt[r] = op_i;
+                            if !self.in_wl[r] {
+                                self.in_wl[r] = true;
+                                self.wl.push(r as u32);
+                            }
+                        }
+                    }
+                }
+                if index.reader[ch] as usize == p {
+                    // Reads from ordinal `r_inv` are invalid; write `j`
+                    // waits on read `j - d1` freeing its slot.
+                    let r_inv = index.rd_ops[ch].partition_point(|&i| i < k);
+                    let target = r_inv as u64 + depths[ch] as u64;
+                    if (target as usize) < index.wr_ops[ch].len() {
+                        let op_i = index.wr_ops[ch][target as usize];
+                        let w = index.writer[ch] as usize;
+                        if op_i < self.ckpt[w] {
+                            self.ckpt[w] = op_i;
+                            if !self.in_wl[w] {
+                                self.in_wl[w] = true;
+                                self.wl.push(w as u32);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Cost gate: when (almost) everything must be replayed, the
+        // bookkeeping below is pure overhead — do a plain full replay.
+        let total = self.info.total_ops;
+        let invalid: u64 = (0..nproc)
+            .map(|p| (trace.ops[p].len() as u64).saturating_sub(self.ckpt[p] as u64))
+            .sum();
+        if invalid * 100 >= total * INCR_FALLBACK_PCT {
+            // Full replay: keep the documented contract that telemetry
+            // reports zero dirty channels for non-incremental runs.
+            self.info.dirty_channels = 0;
+            return None;
+        }
+
+        // Rewind. A process restarts at min(checkpoint, committed pc):
+        // ops before that point keep their retained commit times (they
+        // are the fixpoint prefix); everything after is recomputed.
+        // Previously-blocked processes restart at their blocked position
+        // even when nothing invalidated them — a depth change elsewhere
+        // may have unblocked them, and re-parking is O(1) if not.
+        self.ready.clear();
+        let mut replay_base: u64 = 0;
+        for p in 0..nproc {
+            let restart = self.ckpt[p].min(self.pc[p]);
+            self.pc[p] = restart;
+            self.last_commit[p] = if restart == 0 {
+                NO_TIME
+            } else {
+                let op = trace.ops[p][restart as usize - 1];
+                let j = index.op_ord[p][restart as usize - 1] as usize;
+                if op.is_write() {
+                    self.wr_times[op.chan()][j]
+                } else {
+                    self.rd_times[op.chan()][j]
+                }
+            };
+            if (restart as usize) < trace.ops[p].len() {
+                self.ready.push(p as u32);
+                self.in_ready[p] = true;
+            } else {
+                self.in_ready[p] = false;
+            }
+            replay_base += restart as u64;
+        }
+        // Channel rewind: commit counters fall back to the number of ops
+        // each endpoint committed before its restart point (every op
+        // before a restart point was committed in the retained run).
+        for ch in 0..nch {
+            self.wait_reader[ch] = NONE;
+            self.wait_writer[ch] = NONE;
+            let w = index.writer[ch];
+            if w != NONE {
+                self.wr_done[ch] =
+                    index.wr_ops[ch].partition_point(|&i| i < self.pc[w as usize]) as u32;
+            }
+            let r = index.reader[ch];
+            if r != NONE {
+                self.rd_done[ch] =
+                    index.rd_ops[ch].partition_point(|&i| i < self.pc[r as usize]) as u32;
+            }
+            self.rd_lat[ch] =
+                super::read_latency(depths[ch], self.widths[ch], self.opts.uniform_read_latency);
+        }
+
+        self.info.incremental = true;
+        let out = self.propagate(depths);
+        self.info.replayed_ops = self.pc.iter().map(|&p| p as u64).sum::<u64>() - replay_base;
+        Some(out)
+    }
+
+    /// Event-driven commit propagation from the current scratch state
+    /// (shared by the full and delta paths), then outcome extraction.
+    fn propagate(&mut self, depths: &[u32]) -> SimOutcome {
+        let trace = self.trace.clone();
+        let nproc = trace.ops.len();
+
         while let Some(pid) = self.ready.pop() {
             let pid = pid as usize;
             self.in_ready[pid] = false;
@@ -690,6 +1032,25 @@ mod tests {
     }
 
     #[test]
+    fn stats_into_reuses_buffer() {
+        let d = pipe_design(16);
+        let mut s = sim_for(&d, &[]);
+        let mut buf = ChannelStats::new();
+        let a = s.simulate_with_stats_into(&[4], &mut buf);
+        let occ_a = buf.max_occupancy.clone();
+        // Second call with a different config must fully overwrite.
+        let b = s.simulate_with_stats_into(&[1], &mut buf);
+        assert!(!a.is_deadlock() && !b.is_deadlock());
+        let (_, fresh) = sim_for(&d, &[]).simulate_with_stats(&[1]);
+        assert_eq!(buf.max_occupancy, fresh.max_occupancy);
+        assert_eq!(buf.write_stall, fresh.write_stall);
+        assert_eq!(buf.read_stall, fresh.read_stall);
+        // And the first call matched a fresh run too.
+        let (_, fresh_a) = sim_for(&d, &[]).simulate_with_stats(&[4]);
+        assert_eq!(occ_a, fresh_a.max_occupancy);
+    }
+
+    #[test]
     fn monotone_latency_in_depth_uniform_latency() {
         let mut b = DesignBuilder::new("mono", 0);
         let c = b.channel("c", 32);
@@ -738,5 +1099,193 @@ mod tests {
         let b2 = s.simulate(&[2]);
         assert_eq!(a, a2);
         assert_eq!(b, b2);
+    }
+
+    // -----------------------------------------------------------------
+    // Delta-incremental re-simulation
+    // -----------------------------------------------------------------
+
+    /// split → two parallel branches → join; enough parallel structure
+    /// that a single-channel delta leaves part of the trace valid.
+    fn diamond_design(n: u64) -> crate::ir::Design {
+        let mut b = DesignBuilder::new("diamond", 0);
+        let a1 = b.channel("a1", 32);
+        let a2 = b.channel("a2", 32);
+        let b1 = b.channel("b1", 32);
+        let b2 = b.channel("b2", 32);
+        b.process("src", move |p| {
+            p.for_n(n, |p, _| {
+                p.write(a1, Expr::c(0));
+                p.write(a2, Expr::c(0));
+            })
+        });
+        b.process("slow", move |p| {
+            p.for_n(n, |p, _| {
+                let _ = p.read(a1);
+                p.delay(7);
+                p.write(b1, Expr::c(0));
+            })
+        });
+        b.process("fastbr", move |p| {
+            p.for_n(n, |p, _| {
+                let _ = p.read(a2);
+                p.write(b2, Expr::c(0));
+            })
+        });
+        b.process("join", move |p| {
+            p.for_n(n, |p, _| {
+                let _ = p.read(b1);
+                let _ = p.read(b2);
+            })
+        });
+        b.build()
+    }
+
+    #[test]
+    fn incremental_identical_config_short_circuits() {
+        let d = pipe_design(64);
+        let mut s = sim_for(&d, &[]);
+        let a = s.simulate(&[4]);
+        assert!(!s.last_run().incremental, "first run must be cold");
+        let b = s.simulate(&[4]);
+        assert_eq!(a, b);
+        let info = s.last_run();
+        assert!(info.incremental);
+        assert_eq!(info.dirty_channels, 0);
+        assert_eq!(info.replayed_ops, 0);
+    }
+
+    #[test]
+    fn incremental_single_channel_delta_matches_cold_replay() {
+        let d = diamond_design(64);
+        let mut warm = sim_for(&d, &[]);
+        let mut cold = sim_for(&d, &[]);
+        cold.set_incremental(false);
+        let mut incremental_hits = 0;
+        // A DSE-like walk: start ample, then mutate one channel at a time.
+        let configs: [[u32; 4]; 7] = [
+            [64, 64, 64, 64],
+            [64, 64, 64, 2],
+            [64, 64, 64, 64],
+            [64, 64, 2, 64],
+            [64, 64, 2, 2],
+            [2, 64, 2, 2],
+            [64, 64, 63, 2],
+        ];
+        for cfg in &configs {
+            let w = warm.simulate(cfg);
+            let c = cold.simulate(cfg);
+            assert_eq!(w, c, "cfg {cfg:?}");
+            assert!(!cold.last_run().incremental);
+            if warm.last_run().incremental {
+                incremental_hits += 1;
+                assert!(
+                    warm.last_run().replayed_ops <= warm.last_run().total_ops,
+                    "replayed more than the trace holds"
+                );
+            }
+        }
+        assert!(
+            incremental_hits >= 2,
+            "expected some delta replays on single-channel mutations, got {incremental_hits}"
+        );
+    }
+
+    #[test]
+    fn incremental_srl_bram_flip_matches_cold_replay() {
+        // Width 600: depth 1 → SRL (rl 1), depth ≥ 3 → BRAM (rl 2);
+        // crossing must invalidate every read on the channel.
+        let mut b = DesignBuilder::new("flip", 0);
+        let w = b.channel("w", 600);
+        let n = b.channel("n", 8);
+        b.process("p", |p| {
+            p.for_n(32, |p, _| {
+                p.write(w, Expr::c(0));
+                p.write(n, Expr::c(0));
+            });
+        });
+        b.process("q", |p| {
+            p.for_n(32, |p, _| {
+                let _ = p.read(w);
+                let _ = p.read(n);
+            });
+        });
+        let d = b.build();
+        let mut warm = sim_for(&d, &[]);
+        let mut cold = sim_for(&d, &[]);
+        cold.set_incremental(false);
+        for cfg in [[2u32, 8], [4, 8], [2, 8], [32, 8], [1, 8]] {
+            assert_eq!(warm.simulate(&cfg), cold.simulate(&cfg), "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn incremental_deadlock_transitions_match_cold_replay() {
+        // fig2-style: feasibility flips as the x depth crosses n-1.
+        let mut b = DesignBuilder::new("fig2ish", 1);
+        let x = b.channel("x", 32);
+        let y = b.channel("y", 32);
+        b.process("producer", |p| {
+            p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+            p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+        });
+        b.process("consumer", |p| {
+            p.for_expr(Expr::arg(0), |p, _| {
+                let _ = p.read(x);
+                let _ = p.read(y);
+            });
+        });
+        let design = b.build();
+        let t = Arc::new(collect_trace(&design, &[16]).unwrap());
+        let mut warm = FastSim::new(t.clone());
+        let mut cold = FastSim::new(t);
+        cold.set_incremental(false);
+        for cfg in [
+            [2u32, 2],
+            [16, 2],
+            [15, 2],
+            [14, 2],
+            [15, 2],
+            [2, 2],
+            [16, 16],
+            [2, 2],
+        ] {
+            let w = warm.simulate(&cfg);
+            let c = cold.simulate(&cfg);
+            assert_eq!(w, c, "cfg {cfg:?} (full outcome incl. blocked set)");
+        }
+    }
+
+    #[test]
+    fn incremental_stats_match_cold_replay() {
+        let d = diamond_design(32);
+        let mut warm = sim_for(&d, &[]);
+        let mut cold = sim_for(&d, &[]);
+        cold.set_incremental(false);
+        for cfg in [[32u32, 32, 32, 32], [32, 32, 32, 4], [32, 32, 32, 3]] {
+            let (wo, ws) = warm.simulate_with_stats(&cfg);
+            let (co, cs) = cold.simulate_with_stats(&cfg);
+            assert_eq!(wo, co, "cfg {cfg:?}");
+            assert_eq!(ws.max_occupancy, cs.max_occupancy, "cfg {cfg:?}");
+            assert_eq!(ws.write_stall, cs.write_stall, "cfg {cfg:?}");
+            assert_eq!(ws.read_stall, cs.read_stall, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn incremental_disabled_never_reuses() {
+        let d = pipe_design(32);
+        let mut s = sim_for(&d, &[]);
+        s.set_incremental(false);
+        s.simulate(&[4]);
+        s.simulate(&[4]);
+        assert!(!s.last_run().incremental);
+        assert_eq!(s.last_run().replayed_ops, s.last_run().total_ops);
+        // Re-enabling starts cold (no stale retained schedule).
+        s.set_incremental(true);
+        s.simulate(&[4]);
+        assert!(!s.last_run().incremental);
+        s.simulate(&[4]);
+        assert!(s.last_run().incremental);
     }
 }

@@ -4,9 +4,12 @@
 //! Two independent implementations of the same cycle semantics:
 //!
 //! - [`fast`] — the production engine (LightningSim phase-2 analog):
-//!   event-driven commit-time propagation, O(total trace ops) per
-//!   configuration, microseconds–milliseconds per evaluation, zero
-//!   allocation in the hot loop after construction.
+//!   event-driven commit-time propagation, O(total trace ops) per cold
+//!   configuration and O(dirty region) per *delta* — the simulator
+//!   retains the committed schedule between calls and replays only what
+//!   a depth change can affect (see the [`fast`] module docs for the
+//!   invalidation rules). Zero allocation in the hot loop after
+//!   construction.
 //! - [`golden`] — a deliberately simple global-time-stepped simulator used
 //!   as the accuracy reference (the paper's C/RTL co-simulation role in
 //!   Table II). Slower, structurally different, obviously correct.
@@ -37,7 +40,7 @@ pub mod cosim;
 pub mod fast;
 pub mod golden;
 
-pub use fast::{FastSim, SimOutcome};
+pub use fast::{FastSim, RunInfo, SimOutcome};
 
 /// Read latency (cycles from write commit to earliest read commit) for a
 /// FIFO of the given shape under the given depth.

@@ -149,6 +149,85 @@ impl Trace {
     }
 }
 
+/// Channel ↔ process op-index maps, built once per trace — the lookup
+/// structure behind delta-incremental re-simulation
+/// ([`crate::sim::fast::FastSim`]).
+///
+/// For every channel it records which process writes/reads it (traces are
+/// SPSC by construction) and *where* in that process's op sequence each
+/// write/read ordinal sits; for every op it records its ordinal on its
+/// channel. Together these answer, in O(log ops) per query, the two
+/// questions incremental invalidation asks:
+///
+/// - "commits on channel `c` from ordinal `j` changed — from which op
+///   index must the peer process be replayed?" (`wr_ops`/`rd_ops`), and
+/// - "process `p` restarts at op `k` — what was the commit time of op
+///   `k-1`?" (`op_ord` indexes the retained per-channel commit arrays).
+#[derive(Debug, Clone)]
+pub struct ChanOpIndex {
+    /// Per channel: op indices (into the writer process's op sequence) of
+    /// its writes, in write-ordinal order.
+    pub wr_ops: Vec<Box<[u32]>>,
+    /// Per channel: op indices of its reads in the reader process.
+    pub rd_ops: Vec<Box<[u32]>>,
+    /// Per channel: writer process id (`u32::MAX` if never written).
+    pub writer: Vec<u32>,
+    /// Per channel: reader process id (`u32::MAX` if never read).
+    pub reader: Vec<u32>,
+    /// Per process: the distinct channels it touches.
+    pub proc_chans: Vec<Box<[u32]>>,
+    /// Per process, per op index: the op's ordinal among that channel's
+    /// same-kind ops (channel-wide, since traces are SPSC).
+    pub op_ord: Vec<Box<[u32]>>,
+}
+
+impl ChanOpIndex {
+    /// Build the index for a trace. O(total ops).
+    pub fn build(trace: &Trace) -> ChanOpIndex {
+        let nch = trace.channels.len();
+        let nproc = trace.ops.len();
+        let mut wr_ops: Vec<Vec<u32>> = vec![Vec::new(); nch];
+        let mut rd_ops: Vec<Vec<u32>> = vec![Vec::new(); nch];
+        let mut writer = vec![u32::MAX; nch];
+        let mut reader = vec![u32::MAX; nch];
+        let mut proc_chans: Vec<Box<[u32]>> = Vec::with_capacity(nproc);
+        let mut op_ord: Vec<Box<[u32]>> = Vec::with_capacity(nproc);
+        // Per-channel "last process that noted touching it" stamp, so the
+        // distinct-channel lists build in O(ops) without a set.
+        let mut touched_by = vec![u32::MAX; nch];
+        for (pid, ops) in trace.ops.iter().enumerate() {
+            let mut touched: Vec<u32> = Vec::new();
+            let mut ord = vec![0u32; ops.len()].into_boxed_slice();
+            for (k, op) in ops.iter().enumerate() {
+                let ch = op.chan();
+                if op.is_write() {
+                    writer[ch] = pid as u32;
+                    ord[k] = wr_ops[ch].len() as u32;
+                    wr_ops[ch].push(k as u32);
+                } else {
+                    reader[ch] = pid as u32;
+                    ord[k] = rd_ops[ch].len() as u32;
+                    rd_ops[ch].push(k as u32);
+                }
+                if touched_by[ch] != pid as u32 {
+                    touched_by[ch] = pid as u32;
+                    touched.push(ch as u32);
+                }
+            }
+            proc_chans.push(touched.into_boxed_slice());
+            op_ord.push(ord);
+        }
+        ChanOpIndex {
+            wr_ops: wr_ops.into_iter().map(Vec::into_boxed_slice).collect(),
+            rd_ops: rd_ops.into_iter().map(Vec::into_boxed_slice).collect(),
+            writer,
+            reader,
+            proc_chans,
+            op_ord,
+        }
+    }
+}
+
 /// Trace collection failure.
 #[derive(Debug, Error)]
 pub enum TraceError {
@@ -749,6 +828,28 @@ mod tests {
         let t = collect_trace(&b.build(), &[]).unwrap();
         assert_eq!(t.upper_bounds(), vec![10, 64]);
         assert_eq!(t.baseline_min(), vec![2, 2]);
+    }
+
+    #[test]
+    fn chan_op_index_maps_ordinals_and_endpoints() {
+        let t = collect_trace(&fig2_design(), &[4]).unwrap();
+        let idx = ChanOpIndex::build(&t);
+        // producer (pid 0) writes x then y; consumer (pid 1) alternates.
+        assert_eq!(idx.writer, vec![0, 0]);
+        assert_eq!(idx.reader, vec![1, 1]);
+        // x's writes are producer ops 0..4; y's are 4..8.
+        assert_eq!(idx.wr_ops[0].as_ref(), &[0, 1, 2, 3]);
+        assert_eq!(idx.wr_ops[1].as_ref(), &[4, 5, 6, 7]);
+        // consumer reads x at even op indices, y at odd.
+        assert_eq!(idx.rd_ops[0].as_ref(), &[0, 2, 4, 6]);
+        assert_eq!(idx.rd_ops[1].as_ref(), &[1, 3, 5, 7]);
+        // Ordinals: op k of the consumer is ordinal k/2 on its channel.
+        for k in 0..8usize {
+            assert_eq!(idx.op_ord[1][k], (k / 2) as u32);
+        }
+        // Both processes touch both channels, listed once each.
+        assert_eq!(idx.proc_chans[0].as_ref(), &[0, 1]);
+        assert_eq!(idx.proc_chans[1].as_ref(), &[0, 1]);
     }
 
     #[test]
