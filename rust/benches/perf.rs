@@ -11,9 +11,14 @@
 //! 6. Delta-incremental vs full re-simulation: per-design speedup on
 //!    1-channel and 2-channel depth deltas, with a bit-identical check
 //!    between both paths (a mismatch aborts the bench).
+//! 7. Scenario-bank evaluation: workload eval throughput over a 4-graph
+//!    FlowGNN-PNA workload and the per-scenario incremental hit rate on
+//!    a DSE-shaped mutation walk (a walk with zero incremental replays
+//!    aborts the bench).
 //!
 //! Run: `cargo bench --bench perf`. Besides `results/perf.csv` it writes
-//! a machine-readable `BENCH_2.json` snapshot of every metric row.
+//! machine-readable snapshots: `BENCH_2.json` (every §Perf 1–6 metric
+//! row) and `BENCH_3.json` (the §Perf 7 scenario-bank rows).
 //! Set `FIFOADVISOR_PERF_SMOKE=1` for a reduced-iteration run (the CI
 //! regression smoke): same sections, same correctness assertions, far
 //! fewer samples.
@@ -25,7 +30,7 @@ use fifoadvisor::report::csv::Csv;
 use fifoadvisor::runtime::{BatchAnalytics, XlaBram};
 use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::sim::golden::simulate_golden;
-use fifoadvisor::sim::SimOptions;
+use fifoadvisor::sim::{ScenarioSim, SimOptions};
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::util::stats::{fmt_duration, Summary};
 use fifoadvisor::util::{Json, Rng};
@@ -360,13 +365,130 @@ fn main() {
         );
     }
 
+    println!("\n=== §Perf 7: scenario-bank evaluation (FlowGNN-PNA workload) ===\n");
+    let mut scen_rows: Vec<Json> = Vec::new();
+    {
+        let w = bench_suite::build_workload("flowgnn_pna").unwrap();
+        let k = w.num_scenarios();
+        let label = format!("flowgnn_pna[{k}]");
+        let base = w.baseline_max();
+        let nch = base.len();
+        let mut sim = ScenarioSim::new(&w);
+        sim.simulate(&base); // warm every scenario's retained schedule
+
+        // A DSE-shaped walk: each step mutates one FIFO of the previous
+        // configuration (±1 steps and collapses).
+        let steps = if smoke { 24 } else { 128 };
+        let mut rng = Rng::new(9);
+        let mut cur = base.clone();
+        let mut times = Vec::with_capacity(steps);
+        let mut incr_evals = 0u64;
+        let mut per_scen_incr = vec![0u64; k];
+        for _ in 0..steps {
+            let prev = cur.clone();
+            while cur == prev {
+                let i = rng.index(nch);
+                cur[i] = match rng.below(3) {
+                    0 => base[i].max(3) - 1,
+                    1 => 2,
+                    _ => base[i],
+                };
+            }
+            let t0 = Instant::now();
+            let _ = sim.simulate(&cur);
+            times.push(t0.elapsed().as_secs_f64());
+            if sim.last_run().incremental {
+                incr_evals += 1;
+            }
+            for (s, r) in per_scen_incr.iter_mut().zip(sim.scenario_runs()) {
+                if r.incremental {
+                    *s += 1;
+                }
+            }
+        }
+        // CI guard (workload acceptance): per-scenario delta replay must
+        // engage on single-channel mutation walks.
+        assert!(
+            incr_evals > 0,
+            "multi-scenario walk produced no incremental replays"
+        );
+        let s = Summary::of(&times);
+        println!(
+            "{label:<26} {} scenarios, {} total trace ops: median eval {} ({:.0} workload evals/s)",
+            k,
+            w.total_ops(),
+            fmt_duration(s.median),
+            1.0 / s.median.max(1e-12)
+        );
+        let mut push = |metric: String, design: String, value: f64, unit: &str| {
+            csv.row(vec![
+                metric.clone(),
+                design.clone(),
+                format!("{value:.6e}"),
+                unit.into(),
+            ]);
+            scen_rows.push(Json::obj(vec![
+                ("metric", Json::Str(metric)),
+                ("design", Json::Str(design)),
+                ("value", Json::Num(value)),
+                ("unit", Json::Str(unit.into())),
+            ]));
+        };
+        push(
+            "scenario_eval_median_secs".into(),
+            label.clone(),
+            s.median,
+            "s",
+        );
+        push(
+            "scenario_evals_per_sec".into(),
+            label.clone(),
+            1.0 / s.median.max(1e-12),
+            "evals/s",
+        );
+        push(
+            "scenario_incr_rate".into(),
+            label.clone(),
+            incr_evals as f64 / steps as f64,
+            "",
+        );
+        // Per-scenario columns: one incremental-hit-rate row per graph.
+        for (name, hits) in w
+            .scenarios()
+            .iter()
+            .map(|sc| sc.name.clone())
+            .zip(&per_scen_incr)
+        {
+            let rate = *hits as f64 / steps as f64;
+            println!("    {name:<20} incremental hit rate {:.0}%", rate * 100.0);
+            push(
+                "scenario_incr_hit_rate".into(),
+                format!("{label}/{name}"),
+                rate,
+                "",
+            );
+        }
+    }
+
     csv.write("results/perf.csv").unwrap();
     println!("\nwrote results/perf.csv");
 
-    // Machine-readable perf snapshot (the §Perf trajectory file).
+    let snapshot3 = Json::obj(vec![
+        ("bench", Json::Str("scenario_bank".into())),
+        ("schema", Json::Str("metric-rows/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(scen_rows)),
+    ]);
+    fifoadvisor::report::write_file("BENCH_3.json", &snapshot3.to_string_pretty()).unwrap();
+    println!("wrote BENCH_3.json");
+
+    // Machine-readable perf snapshot (the §Perf trajectory file). The
+    // §Perf 7 scenario rows live in BENCH_3.json only, so BENCH_2.json
+    // stays row-for-row comparable with pre-workload snapshots.
     let rows_json: Vec<Json> = csv
         .rows()
         .iter()
+        .filter(|r| !r[0].starts_with("scenario_"))
         .map(|r| {
             let value = match r[2].parse::<f64>() {
                 Ok(v) => Json::Num(v),

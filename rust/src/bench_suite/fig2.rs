@@ -21,6 +21,15 @@
 use super::BenchDesign;
 use crate::ir::{DesignBuilder, Expr};
 
+/// Scenario argument sets for multi-trace (workload) runs: different
+/// runtime `n`s give different x-channel deadlock thresholds
+/// (`depth(x) ≥ n − 1`), so a config sized optimally for a small-`n`
+/// scenario deadlocks under a larger-`n` sibling — the minimal example
+/// of why robust sizing must quantify over inputs.
+pub fn scenario_args(ns: &[i64]) -> Vec<(String, Vec<i64>)> {
+    ns.iter().map(|&n| (format!("n{n}"), vec![n])).collect()
+}
+
 /// Build `mult_by_2` for runtime argument `n`.
 pub fn mult_by_2(n: i64) -> BenchDesign {
     let mut b = DesignBuilder::new("fig2", 1);

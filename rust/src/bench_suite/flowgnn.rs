@@ -25,6 +25,28 @@ use crate::ir::{DesignBuilder, Expr};
 /// Number of parallel gather/update lanes.
 pub const LANES: usize = 8;
 
+/// Graph seeds whose quadratic-hash routing produces *distinct* per-lane
+/// burst (degree) distributions at 64 nodes / 512 edges — e.g. seed 7
+/// loads lanes `[0,128,0,128,…]` while seed 8 loads `[128,256,0,0,…]`.
+/// Sizing the msg FIFOs for one of these graphs deadlocks on a sibling
+/// whose bursts land on different lanes; all stay within the designer's
+/// 256-deep hints, so the merged Baseline-Max remains feasible.
+pub const SCENARIO_SEEDS: [i64; 8] = [7, 8, 2, 6, 1234, 14, 20, 26];
+
+/// Scenario argument sets for multi-trace (workload) runs: `k ≤ 8`
+/// graphs with the seeds above (64 nodes, 512 edges each).
+pub fn scenario_args(k: usize) -> Vec<(String, Vec<i64>)> {
+    assert!(
+        k <= SCENARIO_SEEDS.len(),
+        "at most {} distinct graph scenarios",
+        SCENARIO_SEEDS.len()
+    );
+    SCENARIO_SEEDS[..k]
+        .iter()
+        .map(|&s| (format!("graph_s{s}"), vec![64, 512, s]))
+        .collect()
+}
+
 /// Build the PNA design for `num_nodes`, `num_edges`, and an LCG `seed`
 /// (all runtime kernel arguments).
 pub fn pna(num_nodes: i64, num_edges: i64, seed: i64) -> BenchDesign {
@@ -199,6 +221,28 @@ mod tests {
             depths[lane] = t.channels[lane].writes as u32;
         }
         assert!(!s.simulate(&depths).is_deadlock());
+    }
+
+    #[test]
+    fn scenario_seeds_have_distinct_burst_distributions() {
+        // The first four seeds must give pairwise-different per-lane
+        // bursts (otherwise a workload over them proves nothing), and
+        // every burst must fit the designer's 256-deep msg hint so the
+        // merged Baseline-Max stays feasible.
+        let dists: Vec<Vec<u64>> = scenario_args(4)
+            .iter()
+            .map(|(_, args)| {
+                let bd = pna(args[0], args[1], args[2]);
+                let t = collect_trace(&bd.design, &bd.args).unwrap();
+                t.channels[..LANES].iter().map(|c| c.writes).collect()
+            })
+            .collect();
+        for i in 0..dists.len() {
+            for j in 0..i {
+                assert_ne!(dists[i], dists[j], "seeds {i} and {j} route identically");
+            }
+            assert!(dists[i].iter().all(|&b| b <= 256), "{:?}", dists[i]);
+        }
     }
 
     #[test]

@@ -80,6 +80,33 @@ pub fn build(name: &str) -> BenchDesign {
     try_build(name).unwrap_or_else(|| panic!("unknown design '{name}'"))
 }
 
+/// Default multi-trace scenario argument sets for the data-dependent
+/// specials, whose traces are argument-specific (`None` for the static
+/// Stream-HLS designs).
+pub fn scenario_args(name: &str) -> Option<Vec<(String, Vec<i64>)>> {
+    match name {
+        "fig2" => Some(fig2::scenario_args(&[8, 16, 12])),
+        "flowgnn_pna" => Some(flowgnn::scenario_args(4)),
+        _ => None,
+    }
+}
+
+/// Build a design's default workload: the multi-scenario set from
+/// [`scenario_args`] when one exists, otherwise a single scenario under
+/// the design's default args.
+pub fn build_workload(name: &str) -> Option<crate::trace::workload::Workload> {
+    use crate::trace::workload::Workload;
+    let bd = try_build(name)?;
+    Some(match scenario_args(name) {
+        Some(scen) => Workload::from_design(&bd.design, &scen)
+            .expect("suite scenario set must build"),
+        None => Workload::single(std::sync::Arc::new(
+            crate::trace::collect_trace(&bd.design, &bd.args)
+                .expect("suite design must trace"),
+        )),
+    })
+}
+
 /// Build a benchmark design by name, including the non-Stream-HLS
 /// specials `fig2` and `flowgnn_pna`.
 pub fn try_build(name: &str) -> Option<BenchDesign> {
@@ -170,6 +197,17 @@ mod tests {
                 "{name}: paper {paper} FIFOs, ours {ours} (outside ±35%)"
             );
         }
+    }
+
+    #[test]
+    fn workload_builders_cover_specials_and_suite() {
+        let w = build_workload("flowgnn_pna").unwrap();
+        assert_eq!(w.num_scenarios(), 4);
+        let w = build_workload("fig2").unwrap();
+        assert_eq!(w.num_scenarios(), 3);
+        let w = build_workload("bicg").unwrap();
+        assert!(w.is_single());
+        assert!(build_workload("nope").is_none());
     }
 
     #[test]

@@ -1,11 +1,14 @@
-//! Flag parsing: `--key value` and bare `--flag` pairs.
+//! Flag parsing: `--key value` and bare `--flag` pairs. A `--key` may be
+//! repeated; [`Args::get`] returns the last occurrence (override
+//! semantics) while [`Args::get_all`]/[`Args::get_lists`] return every
+//! occurrence in order (the CLI's multi-scenario `--args` path).
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
 #[derive(Debug, Default)]
 pub struct Args {
-    values: HashMap<String, String>,
+    values: HashMap<String, Vec<String>>,
     flags: Vec<String>,
 }
 
@@ -19,7 +22,10 @@ impl Args {
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?;
             if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                out.values.insert(key.to_string(), argv[i + 1].clone());
+                out.values
+                    .entry(key.to_string())
+                    .or_default()
+                    .push(argv[i + 1].clone());
                 i += 2;
             } else {
                 out.flags.push(key.to_string());
@@ -30,7 +36,15 @@ impl Args {
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.values.get(key).map(|s| s.as_str())
+        self.values
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every occurrence of `--key value`, in command-line order.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.values.get(key).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn require(&self, key: &str) -> Result<&str> {
@@ -60,26 +74,37 @@ impl Args {
         }
     }
 
-    /// Comma-separated integer list.
+    /// Comma-separated integer list (last occurrence).
     pub fn get_list(&self, key: &str) -> Result<Option<Vec<i64>>> {
         match self.get(key) {
             None => Ok(None),
-            Some(v) => {
-                let mut out = Vec::new();
-                for part in v.split(',') {
-                    let p = part.trim();
-                    if p.is_empty() {
-                        bail!("--{key}: empty element in list '{v}'");
-                    }
-                    out.push(
-                        p.parse()
-                            .map_err(|_| anyhow!("--{key}: bad integer '{p}'"))?,
-                    );
-                }
-                Ok(Some(out))
-            }
+            Some(v) => parse_int_list(key, v).map(Some),
         }
     }
+
+    /// One parsed comma-separated integer list per `--key` occurrence
+    /// (empty when the flag never appears).
+    pub fn get_lists(&self, key: &str) -> Result<Vec<Vec<i64>>> {
+        self.get_all(key)
+            .iter()
+            .map(|v| parse_int_list(key, v))
+            .collect()
+    }
+}
+
+fn parse_int_list(key: &str, v: &str) -> Result<Vec<i64>> {
+    let mut out = Vec::new();
+    for part in v.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            bail!("--{key}: empty element in list '{v}'");
+        }
+        out.push(
+            p.parse()
+                .map_err(|_| anyhow!("--{key}: bad integer '{p}'"))?,
+        );
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -111,6 +136,21 @@ mod tests {
         assert_eq!(a.get_list("missing").unwrap(), None);
         let bad = Args::parse(&sv(&["--args", "1,,2"])).unwrap();
         assert!(bad.get_list("args").is_err());
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order() {
+        let a = Args::parse(&sv(&["--args", "1,2", "--seed", "5", "--args", "3,4"])).unwrap();
+        // `get` keeps override semantics (last wins)…
+        assert_eq!(a.get("args"), Some("3,4"));
+        assert_eq!(a.get_list("args").unwrap(), Some(vec![3, 4]));
+        // …while `get_all`/`get_lists` see every occurrence in order.
+        assert_eq!(a.get_all("args"), &["1,2".to_string(), "3,4".to_string()]);
+        assert_eq!(a.get_lists("args").unwrap(), vec![vec![1, 2], vec![3, 4]]);
+        assert!(a.get_all("missing").is_empty());
+        assert!(a.get_lists("missing").unwrap().is_empty());
+        let bad = Args::parse(&sv(&["--args", "1", "--args", "x"])).unwrap();
+        assert!(bad.get_lists("args").is_err());
     }
 
     #[test]

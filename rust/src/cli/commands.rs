@@ -2,38 +2,65 @@
 
 use super::Args;
 use crate::bench_suite;
-use crate::dse::{drive, Evaluator};
+use crate::dse::{drive, EvalPoint, Evaluator};
 use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
 use crate::report::{self, ascii};
-use crate::trace::{collect_trace, Trace};
+use crate::trace::workload::Workload;
 use crate::util::stats::fmt_duration;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 
-fn load_trace(args: &Args) -> Result<(String, Arc<Trace>)> {
-    // Three sources, in precedence order: a cached trace JSON, a FADL
-    // design file, or a built-in suite design.
+fn load_workload(args: &Args) -> Result<(String, Arc<Workload>)> {
+    // Four sources, in precedence order: a saved workload JSON, a cached
+    // trace JSON, a FADL design file, or a built-in suite design. The
+    // design paths accept a repeatable `--args A,B,..` — each occurrence
+    // becomes one scenario of the workload.
+    if let Some(path) = args.get("scenario-file") {
+        let w = Workload::load(path)?;
+        return Ok((w.design_name().to_string(), Arc::new(w)));
+    }
     if let Some(path) = args.get("trace-file") {
         let t = crate::trace::serde::load(path)?;
-        return Ok((t.design_name.clone(), Arc::new(t)));
+        let name = t.design_name.clone();
+        return Ok((name, Arc::new(Workload::single(Arc::new(t)))));
     }
     let (name, design, default_args) = if let Some(path) = args.get("design-file") {
         let design = crate::ir::fadl::parse_file(path)?;
-        (design.name.clone(), design, vec![0i64; 0])
+        // FADL designs default to all-zero args of the right arity (a
+        // zero-length vector would trip the arg-count check whenever
+        // num_args > 0).
+        let defaults = vec![0i64; design.num_args];
+        if design.num_args > 0 && args.get_all("args").is_empty() {
+            println!(
+                "note: design '{}' takes {} runtime arg(s); tracing with all-zero defaults \
+                 (pass --args A,B,.. to override)",
+                design.name, design.num_args
+            );
+        }
+        (design.name.clone(), design, defaults)
     } else {
         let name = args.require("design")?.to_string();
         let bd = bench_suite::try_build(&name)
             .ok_or_else(|| anyhow!("unknown design '{name}' (see `fifoadvisor list`)"))?;
         (name, bd.design, bd.args)
     };
-    let call_args = args.get_list("args")?.unwrap_or(default_args);
-    let t = collect_trace(&design, &call_args)?;
+    let arg_sets = args.get_lists("args")?;
+    let sets: Vec<Vec<i64>> = if arg_sets.is_empty() {
+        vec![default_args]
+    } else {
+        arg_sets
+    };
+    let w = Workload::from_design_args(&design, &sets)?;
     if let Some(out) = args.get("save-trace") {
-        crate::trace::serde::save(&t, out)?;
+        crate::trace::serde::save(w.primary(), out)?;
         println!("saved trace to {out}");
     }
-    Ok((name, Arc::new(t)))
+    if let Some(out) = args.get("save-workload") {
+        w.save(out)?;
+        println!("saved {}-scenario workload to {out}", w.num_scenarios());
+    }
+    Ok((name, Arc::new(w)))
 }
 
 /// Run a sweep configuration file (designs × optimizers × seeds).
@@ -63,26 +90,46 @@ pub fn list() -> Result<()> {
     println!("Stream-HLS suite:");
     for n in bench_suite::all_names() {
         let bd = bench_suite::build(n);
-        println!("  {n:<28} {:>5} FIFOs", bd.design.num_fifos());
+        println!(
+            "  {n:<28} {:>5} FIFOs  {:>2} args",
+            bd.design.num_fifos(),
+            bd.design.num_args
+        );
     }
-    println!("specials:");
+    println!("specials (data-dependent control flow; traces are argument-specific):");
     for n in ["fig2", "flowgnn_pna"] {
         let bd = bench_suite::build(n);
-        println!("  {n:<28} {:>5} FIFOs (data-dependent control flow)", bd.design.num_fifos());
+        println!(
+            "  {n:<28} {:>5} FIFOs  {:>2} args",
+            bd.design.num_fifos(),
+            bd.design.num_args
+        );
     }
     Ok(())
 }
 
 pub fn info(args: &Args) -> Result<()> {
-    let (name, t) = load_trace(args)?;
-    let space = Space::from_trace(&t);
+    let (name, w) = load_workload(args)?;
+    let space = Space::from_workload(&w);
     println!("design       : {name}");
-    println!("processes    : {}", t.process_names.len());
-    println!("FIFOs        : {}", t.num_fifos());
+    println!("processes    : {}", w.primary().process_names.len());
+    println!("FIFOs        : {}", w.num_fifos());
+    println!("scenarios    : {}", w.num_scenarios());
+    if w.num_scenarios() > 1 {
+        for s in w.scenarios() {
+            println!(
+                "    {:<20} args {:?}  {:>8} ops  weight {}",
+                s.name,
+                s.trace.args,
+                s.trace.total_ops(),
+                s.weight
+            );
+        }
+    }
     println!("groups       : {}", space.groups.len());
-    println!("trace ops    : {}", t.total_ops());
+    println!("trace ops    : {}", w.total_ops());
     println!("pruned space : 10^{:.1} configurations", space.log10_size());
-    let mut ev = Evaluator::new(t.clone());
+    let mut ev = Evaluator::for_workload(w.clone(), 1);
     let (maxp, minp) = ev.eval_baselines();
     println!(
         "Baseline-Max : latency {} cycles, {} BRAM",
@@ -97,36 +144,50 @@ pub fn info(args: &Args) -> Result<()> {
 }
 
 pub fn simulate(args: &Args) -> Result<()> {
-    let (name, t) = load_trace(args)?;
+    let (name, w) = load_workload(args)?;
     let depths: Vec<u32> = if let Some(d) = args.get_list("depths")? {
-        if d.len() != t.num_fifos() {
+        if d.len() != w.num_fifos() {
             bail!(
                 "--depths has {} entries, design '{name}' has {} FIFOs",
                 d.len(),
-                t.num_fifos()
+                w.num_fifos()
             );
         }
         d.into_iter().map(|x| x.max(1) as u32).collect()
     } else {
         match args.get("baseline").unwrap_or("max") {
-            "max" => t.baseline_max(),
-            "min" => t.baseline_min(),
+            "max" => w.baseline_max(),
+            "min" => w.baseline_min(),
             other => bail!("--baseline must be max|min, got '{other}'"),
         }
     };
-    let mut ev = Evaluator::new(t.clone());
+    let mut ev = Evaluator::for_workload(w.clone(), 1);
     let t0 = std::time::Instant::now();
     let (lat, bram) = ev.eval(&depths);
     let dt = t0.elapsed().as_secs_f64();
     match lat {
-        Some(l) => println!("{name}: latency {l} cycles, {bram} BRAM  (simulated in {})", fmt_duration(dt)),
-        None => println!("{name}: DEADLOCK  ({bram} BRAM)  (simulated in {})", fmt_duration(dt)),
+        Some(l) => println!(
+            "{name}: latency {l} cycles, {bram} BRAM  (simulated in {})",
+            fmt_duration(dt)
+        ),
+        None => println!(
+            "{name}: DEADLOCK  ({bram} BRAM)  (simulated in {})",
+            fmt_duration(dt)
+        ),
+    }
+    if w.num_scenarios() > 1 {
+        for (sname, l) in ev.per_scenario_latencies(&depths) {
+            match l {
+                Some(l) => println!("    {sname:<20} {l} cycles"),
+                None => println!("    {sname:<20} DEADLOCK"),
+            }
+        }
     }
     Ok(())
 }
 
 pub fn optimize(args: &Args) -> Result<()> {
-    let (name, t) = load_trace(args)?;
+    let (name, w) = load_workload(args)?;
     let opt_name = args.get("optimizer").unwrap_or("grouped_sa").to_string();
     let budget = args.get_u64("budget", 1000)? as usize;
     let seed = args.get_u64("seed", 1)?;
@@ -141,11 +202,15 @@ pub fn optimize(args: &Args) -> Result<()> {
     let mut ev = if args.has_flag("xla") {
         let analytics = crate::runtime::BatchAnalytics::load_default()?;
         println!("batched analytics: platform {}", analytics.platform());
-        Evaluator::with_backend(t.clone(), Box::new(crate::runtime::XlaBram::new(analytics)), jobs)
+        Evaluator::for_workload_with_backend(
+            w.clone(),
+            Box::new(crate::runtime::XlaBram::new(analytics)),
+            jobs,
+        )
     } else {
-        Evaluator::parallel(t.clone(), jobs)
+        Evaluator::for_workload(w.clone(), jobs)
     };
-    let space = Space::from_trace(&t);
+    let space = Space::from_workload(&w);
     let (base, minp) = ev.eval_baselines();
     ev.reset_run(false);
 
@@ -155,7 +220,7 @@ pub fn optimize(args: &Args) -> Result<()> {
     drive(&mut *optimizer, &mut ev, &space, budget);
     let dt = t0.elapsed().as_secs_f64();
 
-    let front = ev.pareto();
+    let front: Vec<EvalPoint> = ev.pareto().into_iter().cloned().collect();
     println!(
         "{name} × {opt_name}: {} evals ({} sims) in {} → {} Pareto points",
         ev.n_evals(),
@@ -195,34 +260,82 @@ pub fn optimize(args: &Args) -> Result<()> {
         );
     }
 
-    // ASCII frontier plot.
+    // Per-scenario columns for workload runs: worst-case latency is the
+    // objective above; this table shows where each frontier point's
+    // latency actually lands per scenario. Each point is re-simulated
+    // once; the same latencies feed the extra ASCII series below.
+    let mut scenario_pts: Vec<Vec<(f64, f64)>> = Vec::new();
+    if ev.num_scenarios() > 1 {
+        scenario_pts = vec![Vec::new(); ev.num_scenarios()];
+        let names = ev.scenario_names().to_vec();
+        println!(
+            "  per-scenario frontier latencies (objective = worst case):\n    {:>7}  {}",
+            "bram",
+            names
+                .iter()
+                .map(|n| format!("{n:>14}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        for p in &front {
+            let lats = ev.per_scenario_latencies(&p.depths);
+            for (i, (_, l)) in lats.iter().enumerate() {
+                if let Some(l) = l {
+                    scenario_pts[i].push((*l as f64, p.bram as f64));
+                }
+            }
+            println!(
+                "    {:>7}  {}",
+                p.bram,
+                lats.iter()
+                    .map(|(_, l)| match l {
+                        Some(v) => format!("{v:>14}"),
+                        None => format!("{:>14}", "DEADLOCK"),
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+        }
+    }
+
+    // ASCII frontier plot — on workloads each scenario's per-point
+    // latency becomes its own series ('0', '1', …) beside the worst-case
+    // frontier ('o').
     let front_pts: Vec<(f64, f64)> = front
         .iter()
         .map(|p| (p.latency.unwrap() as f64, p.bram as f64))
         .collect();
     let base_pts = [(base_lat as f64, base.bram as f64)];
+    let mut series = vec![
+        ascii::Series {
+            label: 'o',
+            points: &front_pts,
+        },
+        ascii::Series {
+            label: 'M',
+            points: &base_pts,
+        },
+    ];
+    for (i, pts) in scenario_pts.iter().enumerate() {
+        series.push(ascii::Series {
+            label: char::from_digit((i % 10) as u32, 10).unwrap(),
+            points: pts,
+        });
+    }
     println!(
         "{}",
-        ascii::scatter(
-            &[
-                ascii::Series { label: 'o', points: &front_pts },
-                ascii::Series { label: 'M', points: &base_pts },
-            ],
-            64,
-            16,
-            "latency (cycles)",
-            "BRAM",
-        )
+        ascii::scatter(&series, 64, 16, "latency (cycles)", "BRAM")
     );
 
     if let Some(out) = args.get("out") {
+        let front_refs: Vec<&EvalPoint> = front.iter().collect();
         let j = report::run_to_json(
             &name,
             &opt_name,
             seed,
             budget,
             &ev.history,
-            &front,
+            &front_refs,
             dt,
             Some(&ev),
         );
@@ -233,9 +346,9 @@ pub fn optimize(args: &Args) -> Result<()> {
 }
 
 pub fn hunt(args: &Args) -> Result<()> {
-    let (name, t) = load_trace(args)?;
-    let space = Space::from_trace(&t);
-    let mut ev = Evaluator::new(t.clone());
+    let (name, w) = load_workload(args)?;
+    let space = Space::from_workload(&w);
+    let mut ev = Evaluator::for_workload(w.clone(), 1);
     let hunter = opt::vitis_hunter::VitisHunter::new();
     match hunter.hunt(&mut ev, &space, 1000) {
         Some(cfg) => {

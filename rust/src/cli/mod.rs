@@ -2,13 +2,20 @@
 //!
 //! ```text
 //! fifoadvisor list
-//! fifoadvisor info     --design NAME [--args 64,512,7]
+//! fifoadvisor info     --design NAME [--args 64,512,7 [--args 64,512,8 ..]]
 //! fifoadvisor simulate --design NAME [--baseline max|min | --depths 2,4,..]
 //! fifoadvisor optimize --design NAME --optimizer grouped_sa [--budget 1000]
 //!                      [--seed 1] [--jobs 4] [--xla] [--alpha 0.7]
 //!                      [--out results/run.json]
 //! fifoadvisor hunt     --design NAME
 //! ```
+//!
+//! Repeating `--args` builds a multi-scenario [`Workload`]
+//! (scenario-robust sizing: worst-case latency, deadlock in any scenario
+//! is infeasible); `--scenario-file W.json` loads a saved workload and
+//! `--save-workload W.json` writes one.
+//!
+//! [`Workload`]: crate::trace::workload::Workload
 
 pub mod args;
 pub mod commands;
@@ -58,7 +65,14 @@ USAGE:
 Any command accepting --design also accepts:
   --design-file F.fadl   a FADL text design (see rust/src/ir/fadl.rs)
   --trace-file T.json    a previously saved trace
-  --save-trace T.json    cache the collected trace
+  --save-trace T.json    cache the collected (primary) trace
+
+Scenario-robust sizing: repeat --args once per scenario to optimize the
+worst case over several runtime inputs (e.g. --args 64,512,7 --args
+64,512,8 on flowgnn_pna). A config that deadlocks in ANY scenario is
+infeasible.
+  --scenario-file W.json load a saved multi-scenario workload
+  --save-workload W.json save the workload built from --args
 
 OPTIMIZERS: greedy random grouped_random sa grouped_sa nsga2 grouped_nsga2
             exhaustive vitis_hunter

@@ -5,8 +5,9 @@
 //!
 //! - a **persistent worker pool** ([`WorkerPool`]): `jobs` threads are
 //!   spawned once at engine construction, each holding its own cloned
-//!   [`FastSim`] over the shared trace, and are fed work over per-worker
-//!   queues — no per-batch thread spawning on the hot path. Dispatch is
+//!   [`ScenarioSim`] bank over the shared workload traces, and are fed
+//!   work over per-worker queues — no per-batch thread spawning on the
+//!   hot path. Dispatch is
 //!   **sticky and locality-aware**: every proposal is routed to the
 //!   worker whose retained simulation schedule is Hamming-closest to the
 //!   proposal's locality hint (its parent configuration, reported by the
@@ -26,12 +27,22 @@
 //! Results are deterministic: the history is assembled in proposal order
 //! regardless of worker scheduling, so a serial run and a `--jobs N` run
 //! produce identical latencies, BRAM totals and Pareto fronts.
+//!
+//! The engine evaluates a [`Workload`] — one or many traces of the same
+//! design under different kernel arguments. The memo cache key is still
+//! the depth vector (one workload per engine), latency is the
+//! scenario-aggregated objective (worst-case by default), and deadlock in
+//! any scenario is infeasible. Single-scenario workloads take the exact
+//! single-trace fast path, so `EvalEngine::new(trace)` behaves exactly
+//! as before the workload refactor.
 
 use super::{BramBatch, EvalPoint, NativeBram};
 use crate::bram;
 use crate::opt::pareto::{pareto_front, ObjPoint};
 use crate::opt::{AskCtx, Optimizer, Space};
-use crate::sim::fast::{BlockInfo, ChannelStats, FastSim, RunInfo, SimOutcome};
+use crate::sim::fast::{BlockInfo, ChannelStats, RunInfo, SimOutcome};
+use crate::sim::scenario::ScenarioSim;
+use crate::trace::workload::Workload;
 use crate::trace::Trace;
 use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
@@ -131,6 +142,7 @@ struct JobDone {
     simulated: bool,
     nanos: u64,
     run: RunInfo,
+    gap: Option<u64>,
 }
 
 /// Result of one pool job, in submission order.
@@ -144,6 +156,9 @@ pub struct JobOutcome {
     pub nanos: u64,
     /// Simulator telemetry for this job (zeroed for cache hits).
     pub run: RunInfo,
+    /// Worst − best per-scenario latency (the robustness gap; `None`
+    /// for cache hits, deadlocks, and single-scenario workloads report 0).
+    pub gap: Option<u64>,
 }
 
 /// Number of differing positions between two configurations; mismatched
@@ -156,8 +171,9 @@ fn hamming(a: &[u32], b: &[u32]) -> u64 {
 }
 
 /// A pool of simulation workers that outlives any single batch. Each
-/// worker owns a cloned [`FastSim`] (the trace itself is shared through
-/// an `Arc`) and, optionally, a handle to the engine's [`ShardedCache`]
+/// worker owns a cloned [`ScenarioSim`] bank (the traces themselves are
+/// shared through `Arc`s, so a clone duplicates only per-scenario
+/// scratch) and, optionally, a handle to the engine's [`ShardedCache`]
 /// which it consults before simulating — so configurations evaluated
 /// concurrently by another client of the same cache are not re-simulated.
 ///
@@ -183,7 +199,7 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn `jobs` workers, each with its own clone of `proto`.
-    pub fn new(proto: &FastSim, jobs: usize, cache: Option<Arc<ShardedCache>>) -> WorkerPool {
+    pub fn new(proto: &ScenarioSim, jobs: usize, cache: Option<Arc<ShardedCache>>) -> WorkerPool {
         let jobs = jobs.max(1);
         let (result_tx, result_rx) = mpsc::channel::<JobDone>();
         let mut handles = Vec::with_capacity(jobs);
@@ -196,12 +212,12 @@ impl WorkerPool {
             handles.push(thread::spawn(move || {
                 while let Ok(job) = rx.recv() {
                     let t0 = Instant::now();
-                    let (latency, simulated, run) =
+                    let (latency, simulated, run, gap) =
                         match cache.as_ref().and_then(|c| c.get(&job.cfg)) {
-                            Some((lat, _)) => (lat, false, RunInfo::default()),
+                            Some((lat, _)) => (lat, false, RunInfo::default(), None),
                             None => {
                                 let lat = sim.simulate(&job.cfg).latency();
-                                (lat, true, sim.last_run())
+                                (lat, true, sim.last_run(), sim.last_gap())
                             }
                         };
                     let nanos = t0.elapsed().as_nanos() as u64;
@@ -212,6 +228,7 @@ impl WorkerPool {
                             simulated,
                             nanos,
                             run,
+                            gap,
                         })
                         .is_err()
                     {
@@ -308,6 +325,7 @@ impl WorkerPool {
                 simulated: done.simulated,
                 nanos: done.nanos,
                 run: done.run,
+                gap: done.gap,
             };
         }
         out
@@ -360,6 +378,15 @@ pub struct EngineStats {
     /// Trace ops the same simulations would have propagated as full
     /// replays (sims × trace ops).
     pub replayable_ops: u64,
+    /// Per-scenario simulator invocations (each workload simulation runs
+    /// every scenario: `sims × num_scenarios`).
+    pub scenario_sims: u64,
+    /// Sum of the robustness gap (worst − best per-scenario latency)
+    /// over feasible simulations.
+    pub robust_gap_sum: u64,
+    /// Feasible simulations contributing to
+    /// [`robust_gap_sum`](Self::robust_gap_sum).
+    pub robust_points: u64,
 }
 
 impl EngineStats {
@@ -400,14 +427,29 @@ impl EngineStats {
         }
     }
 
+    /// Mean robustness gap (worst − best per-scenario latency) over
+    /// feasible simulations. Always 0 for single-scenario workloads.
+    pub fn mean_robustness_gap(&self) -> f64 {
+        if self.robust_points == 0 {
+            0.0
+        } else {
+            self.robust_gap_sum as f64 / self.robust_points as f64
+        }
+    }
+
     /// Fold one simulator run's telemetry into the counters.
-    fn note_run(&mut self, run: &RunInfo) {
+    fn note_run(&mut self, run: &RunInfo, scenarios: u32, gap: Option<u64>) {
         if run.incremental {
             self.incr_sims += 1;
             self.dirty_channels += run.dirty_channels as u64;
         }
         self.replayed_ops += run.replayed_ops;
         self.replayable_ops += run.total_ops;
+        self.scenario_sims += scenarios as u64;
+        if let Some(g) = gap {
+            self.robust_gap_sum += g;
+            self.robust_points += 1;
+        }
     }
 }
 
@@ -443,10 +485,12 @@ impl EvalResult {
 
 /// The black-box evaluator `x → (f_lat(x), f_bram(x))` (paper §III) with
 /// the persistent worker pool and sharded memo cache. Construct once per
-/// (design, trace); drive optimizers through [`drive`] or call the
-/// evaluation methods directly.
+/// (design, workload); drive optimizers through [`drive`] or call the
+/// evaluation methods directly. Single-trace constructors wrap the trace
+/// in a [`Workload::single`].
 pub struct EvalEngine {
-    sim: FastSim,
+    sim: ScenarioSim,
+    workload: Arc<Workload>,
     pub widths: Vec<u32>,
     cache: Arc<ShardedCache>,
     pool: Option<WorkerPool>,
@@ -475,10 +519,30 @@ impl EvalEngine {
     /// Full control: custom BRAM backend (e.g. the analytics artifact) +
     /// parallelism.
     pub fn with_backend(trace: Arc<Trace>, backend: Box<dyn BramBatch>, jobs: usize) -> EvalEngine {
-        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        Self::for_workload_with_backend(Arc::new(Workload::single(trace)), backend, jobs)
+    }
+
+    /// Engine over a multi-trace [`Workload`] with the native BRAM
+    /// backend and `jobs` workers.
+    pub fn for_workload(workload: Arc<Workload>, jobs: usize) -> EvalEngine {
+        Self::for_workload_with_backend(workload, Box::new(NativeBram), jobs)
+    }
+
+    /// Workload engine with a custom BRAM backend.
+    pub fn for_workload_with_backend(
+        workload: Arc<Workload>,
+        backend: Box<dyn BramBatch>,
+        jobs: usize,
+    ) -> EvalEngine {
+        let widths: Vec<u32> = workload
+            .primary()
+            .channels
+            .iter()
+            .map(|c| c.width_bits)
+            .collect();
         let jobs = jobs.max(1);
         let cache = Arc::new(ShardedCache::new((jobs * 4).clamp(4, 64)));
-        let sim = FastSim::new(trace);
+        let sim = ScenarioSim::new(&workload);
         let pool = if jobs > 1 {
             Some(WorkerPool::new(&sim, jobs, Some(Arc::clone(&cache))))
         } else {
@@ -486,6 +550,7 @@ impl EvalEngine {
         };
         EvalEngine {
             sim,
+            workload,
             widths,
             cache,
             pool,
@@ -498,9 +563,38 @@ impl EvalEngine {
         }
     }
 
-    /// The trace being optimized.
+    /// The workload being optimized.
+    pub fn workload(&self) -> &Arc<Workload> {
+        &self.workload
+    }
+
+    /// The primary (first-scenario) trace.
     pub fn trace(&self) -> &Arc<Trace> {
-        self.sim.trace()
+        self.workload.primary()
+    }
+
+    /// Scenarios per simulation (1 = single-trace engine).
+    pub fn num_scenarios(&self) -> usize {
+        self.sim.num_scenarios()
+    }
+
+    /// Scenario names, in workload order.
+    pub fn scenario_names(&self) -> &[String] {
+        self.sim.names()
+    }
+
+    /// Per-scenario latencies of one configuration — a diagnostic
+    /// re-simulation that is *not* memoized and *not* recorded in
+    /// history or stats (use it for per-scenario report columns after a
+    /// run).
+    pub fn per_scenario_latencies(&mut self, depths: &[u32]) -> Vec<(String, Option<u64>)> {
+        let _ = self.sim.simulate(depths);
+        self.sim
+            .names()
+            .iter()
+            .cloned()
+            .zip(self.sim.scenario_latencies().iter().copied())
+            .collect()
     }
 
     /// Name of the BRAM backend in use.
@@ -589,7 +683,9 @@ impl EvalEngine {
                 let lat = self.sim.simulate(depths).latency();
                 self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
                 let run = self.sim.last_run();
-                self.stats.note_run(&run);
+                let k = self.sim.num_scenarios() as u32;
+                let gap = self.sim.last_gap();
+                self.stats.note_run(&run, k, gap);
                 let br = bram::bram_total(depths, &self.widths);
                 self.n_sim += 1;
                 self.stats.sims += 1;
@@ -655,6 +751,7 @@ impl EvalEngine {
         self.stats.cache_hits += (configs.len() - misses.len()) as u64;
 
         if !misses.is_empty() {
+            let k = self.sim.num_scenarios() as u32;
             let lats: Vec<Option<u64>> = match &mut self.pool {
                 Some(pool) if misses.len() > 1 => {
                     let outcomes = pool.run_with_hints(&misses, Some(&miss_hints[..]));
@@ -662,7 +759,7 @@ impl EvalEngine {
                         if o.simulated {
                             self.n_sim += 1;
                             self.stats.sims += 1;
-                            self.stats.note_run(&o.run);
+                            self.stats.note_run(&o.run, k, o.gap);
                         }
                         self.stats.busy_nanos += o.nanos;
                     }
@@ -674,7 +771,8 @@ impl EvalEngine {
                     for c in misses.iter() {
                         lats.push(self.sim.simulate(c).latency());
                         let run = self.sim.last_run();
-                        self.stats.note_run(&run);
+                        let gap = self.sim.last_gap();
+                        self.stats.note_run(&run, k, gap);
                     }
                     self.n_sim += misses.len() as u64;
                     self.stats.sims += misses.len() as u64;
@@ -716,7 +814,9 @@ impl EvalEngine {
         let (out, stats) = self.sim.simulate_with_stats(depths);
         self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
         let run = self.sim.last_run();
-        self.stats.note_run(&run);
+        let k = self.sim.num_scenarios() as u32;
+        let gap = self.sim.last_gap();
+        self.stats.note_run(&run, k, gap);
         self.n_sim += 1;
         self.stats.sims += 1;
         let lat = out.latency();
@@ -749,7 +849,9 @@ impl EvalEngine {
     pub fn eval_with_stats(&mut self, depths: &[u32]) -> (SimOutcome, ChannelStats) {
         let (out, stats) = self.sim.simulate_with_stats(depths);
         let run = self.sim.last_run();
-        self.stats.note_run(&run);
+        let k = self.sim.num_scenarios() as u32;
+        let gap = self.sim.last_gap();
+        self.stats.note_run(&run, k, gap);
         self.n_sim += 1;
         self.stats.sims += 1;
         let br = bram::bram_total(depths, &self.widths);
@@ -784,12 +886,13 @@ impl EvalEngine {
     }
 
     /// Convenience: evaluate both paper baselines, returning
-    /// (Baseline-Max, Baseline-Min) points.
+    /// (Baseline-Max, Baseline-Min) points. For multi-scenario workloads
+    /// Baseline-Max uses the merged (max-over-scenarios) upper bounds.
     pub fn eval_baselines(&mut self) -> (EvalPoint, EvalPoint) {
-        let t = self.trace().clone();
-        self.eval(&t.baseline_max());
+        let w = self.workload.clone();
+        self.eval(&w.baseline_max());
         let max = self.history.last().unwrap().clone();
-        self.eval(&t.baseline_min());
+        self.eval(&w.baseline_min());
         let min = self.history.last().unwrap().clone();
         (max, min)
     }
@@ -836,6 +939,7 @@ pub fn drive(
 mod tests {
     use super::*;
     use crate::bench_suite;
+    use crate::sim::fast::FastSim;
     use crate::trace::collect_trace;
 
     fn trace_of(name: &str) -> Arc<Trace> {
@@ -860,7 +964,7 @@ mod tests {
     #[test]
     fn pool_preserves_order_and_reports_cache_hits() {
         let t = trace_of("gesummv");
-        let sim = FastSim::new(t.clone());
+        let sim = ScenarioSim::single(t.clone());
         let cache = Arc::new(ShardedCache::new(8));
         let mut pool = WorkerPool::new(&sim, 4, Some(Arc::clone(&cache)));
         let ub = t.upper_bounds();
@@ -922,7 +1026,7 @@ mod tests {
     #[test]
     fn hinted_dispatch_preserves_order_and_results() {
         let t = trace_of("gesummv");
-        let sim = FastSim::new(t.clone());
+        let sim = ScenarioSim::single(t.clone());
         let mut pool = WorkerPool::new(&sim, 3, None);
         let ub = t.upper_bounds();
         // A mutation chain: each config differs from a shared base in one
@@ -989,6 +1093,60 @@ mod tests {
         assert!(s.incremental_rate() > 0.0 && s.incremental_rate() <= 1.0);
         assert!(s.replay_fraction() < 1.0);
         assert!(s.dirty_per_incremental() >= 1.0);
+    }
+
+    fn fig2_workload(ns: &[i64]) -> Arc<Workload> {
+        let bd = bench_suite::build("fig2");
+        let named: Vec<(String, Vec<i64>)> =
+            ns.iter().map(|&n| (format!("n{n}"), vec![n])).collect();
+        Arc::new(Workload::from_design(&bd.design, &named).unwrap())
+    }
+
+    #[test]
+    fn workload_engine_aggregates_worst_case_and_counts_scenarios() {
+        let w = fig2_workload(&[8, 16]);
+        let mut ev = EvalEngine::for_workload(w.clone(), 1);
+        let cfg = w.baseline_max();
+        let (lat, _) = ev.eval(&cfg);
+        let per: Vec<Option<u64>> = w
+            .scenarios()
+            .iter()
+            .map(|s| FastSim::new(s.trace.clone()).simulate(&cfg).latency())
+            .collect();
+        assert_eq!(lat, per.iter().flatten().max().copied());
+        // A config feasible only on the small-n scenario is infeasible.
+        let (lat, _) = ev.eval(&[7, 2]);
+        assert_eq!(lat, None);
+        let s = ev.stats();
+        assert_eq!(s.sims, 2);
+        assert_eq!(s.scenario_sims, 4, "each sim runs every scenario");
+        assert_eq!(s.robust_points, 1, "only the feasible eval has a gap");
+        assert!(s.mean_robustness_gap() > 0.0, "n=8 vs n=16 latencies differ");
+        // Per-scenario diagnostics agree with independent simulation.
+        let diag = ev.per_scenario_latencies(&cfg);
+        assert_eq!(diag.len(), 2);
+        for ((_, l), p) in diag.iter().zip(&per) {
+            assert_eq!(l, p);
+        }
+    }
+
+    #[test]
+    fn workload_engine_serial_vs_parallel_identical() {
+        let w = fig2_workload(&[8, 16, 12]);
+        let space = Space::from_workload(&w);
+        let histories: Vec<Vec<(Box<[u32]>, Option<u64>, u32)>> = [1usize, 4]
+            .iter()
+            .map(|&jobs| {
+                let mut ev = EvalEngine::for_workload(w.clone(), jobs);
+                let mut o = crate::opt::random::RandomSearch::new(13, false);
+                drive(&mut o, &mut ev, &space, 96);
+                ev.history
+                    .iter()
+                    .map(|p| (p.depths.clone(), p.latency, p.bram))
+                    .collect()
+            })
+            .collect();
+        assert_eq!(histories[0], histories[1]);
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! - [`engine`] — the [`EvalEngine`]: persistent worker pool, sharded
 //!   memo cache, in-batch dedup, batched BRAM backend calls, engine
 //!   statistics, and the central [`drive`] loop that runs any
-//!   [`Optimizer`](crate::opt::Optimizer).
+//!   [`Optimizer`](crate::opt::Optimizer). Engines evaluate a
+//!   [`Workload`](crate::trace::workload::Workload) — one or many traces
+//!   of the design under different kernel arguments — with worst-case
+//!   aggregation and deadlock-in-any-scenario infeasibility
+//!   (single-trace constructors wrap a single-scenario workload).
 //! - [`pool`] — a thin latency-only shim over the engine's worker pool
 //!   (kept for benches and direct simulator fan-out).
 //! - [`sweep`] — the JSON-configured experiment-grid launcher.

@@ -14,6 +14,7 @@
 
 use super::engine::WorkerPool;
 use crate::sim::fast::FastSim;
+use crate::sim::scenario::ScenarioSim;
 
 /// Simulate every configuration, returning latencies (`None` =
 /// deadlock), preserving order. `threads == 1` runs inline on a local
@@ -30,7 +31,10 @@ pub fn parallel_latencies(
         let mut sim = proto.clone();
         return configs.iter().map(|c| sim.simulate(c).latency()).collect();
     }
-    let mut pool = WorkerPool::new(proto, threads.min(configs.len()), None);
+    // The pool's workers hold scenario banks; wrapping the prototype as
+    // a single-scenario bank preserves its options and retained schedule.
+    let bank = ScenarioSim::from_fastsim(proto.clone());
+    let mut pool = WorkerPool::new(&bank, threads.min(configs.len()), None);
     pool.run_latencies(configs)
 }
 

@@ -4,7 +4,9 @@
 //!
 //! ```json
 //! {
-//!   "designs": ["gemm", "k15mmseq"],
+//!   "designs": ["gemm", "k15mmseq",
+//!               {"design": "flowgnn_pna",
+//!                "scenarios": [[64, 512, 7], [64, 512, 8]]}],
 //!   "optimizers": ["greedy", "grouped_sa"],
 //!   "budget": 1000,
 //!   "seeds": [1, 2],
@@ -14,6 +16,10 @@
 //! }
 //! ```
 //!
+//! A design entry is either a bare name (single scenario under the
+//! suite's default args) or an object with a `"scenarios"` list of
+//! kernel-argument arrays — each array becomes one scenario of a
+//! [`Workload`] and the run sizes for the worst case over all of them.
 //! (`"threads"` is accepted as a legacy alias of `"jobs"`.)
 
 use crate::bench_suite;
@@ -22,14 +28,23 @@ use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
 use crate::report;
 use crate::trace::collect_trace;
+use crate::trace::workload::Workload;
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
 
+/// One design entry of a sweep: a suite design plus the scenario
+/// argument sets to size for (empty = the suite's default args).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DesignSpec {
+    pub name: String,
+    pub arg_sets: Vec<Vec<i64>>,
+}
+
 /// Parsed sweep configuration.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
-    pub designs: Vec<String>,
+    pub designs: Vec<DesignSpec>,
     pub optimizers: Vec<String>,
     pub budget: usize,
     pub seeds: Vec<u64>,
@@ -53,7 +68,52 @@ impl SweepConfig {
                 })
                 .collect()
         };
-        let designs = strs("designs")?;
+        let designs_json = j
+            .get("designs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("sweep config: 'designs' must be an array"))?;
+        let mut designs = Vec::with_capacity(designs_json.len());
+        for d in designs_json {
+            if let Some(name) = d.as_str() {
+                designs.push(DesignSpec {
+                    name: name.to_string(),
+                    arg_sets: Vec::new(),
+                });
+                continue;
+            }
+            let name = d
+                .get("design")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "sweep config: design entries must be a name or \
+                         {{\"design\", \"scenarios\"}}"
+                    )
+                })?
+                .to_string();
+            let sets = d.get("scenarios").and_then(|v| v.as_arr()).ok_or_else(|| {
+                anyhow!("design '{name}': 'scenarios' must be an array of arg arrays")
+            })?;
+            let mut arg_sets = Vec::with_capacity(sets.len());
+            for s in sets {
+                let arr = s.as_arr().ok_or_else(|| {
+                    anyhow!("design '{name}': each scenario must be an arg array")
+                })?;
+                arg_sets.push(
+                    arr.iter()
+                        .map(|v| {
+                            v.as_f64().map(|x| x as i64).ok_or_else(|| {
+                                anyhow!("design '{name}': scenario args must be numbers")
+                            })
+                        })
+                        .collect::<Result<Vec<i64>>>()?,
+                );
+            }
+            if arg_sets.is_empty() {
+                return Err(anyhow!("design '{name}': empty scenario list"));
+            }
+            designs.push(DesignSpec { name, arg_sets });
+        }
         let optimizers = strs("optimizers")?;
         for o in &optimizers {
             if opt::by_name(o, 0).is_none() {
@@ -61,8 +121,8 @@ impl SweepConfig {
             }
         }
         for d in &designs {
-            if bench_suite::try_build(d).is_none() {
-                return Err(anyhow!("unknown design '{d}'"));
+            if bench_suite::try_build(&d.name).is_none() {
+                return Err(anyhow!("unknown design '{}'", d.name));
             }
         }
         let jobs = j
@@ -100,6 +160,8 @@ pub struct SweepRow {
     pub design: String,
     pub optimizer: String,
     pub seed: u64,
+    /// Scenarios in the run's workload (1 = plain single-trace run).
+    pub scenarios: usize,
     pub evals: usize,
     /// Actual simulator invocations (evals minus memo hits).
     pub sims: u64,
@@ -121,11 +183,17 @@ pub struct SweepRow {
 /// `out_dir` is set).
 pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
     let mut rows = Vec::new();
-    for design in &cfg.designs {
+    for spec in &cfg.designs {
+        let design = &spec.name;
         let bd = bench_suite::build(design);
-        let trace = Arc::new(collect_trace(&bd.design, &bd.args)?);
-        let space = Space::from_trace(&trace);
-        let mut ev = Evaluator::parallel(trace.clone(), cfg.jobs);
+        let workload = if spec.arg_sets.is_empty() {
+            Workload::single(Arc::new(collect_trace(&bd.design, &bd.args)?))
+        } else {
+            Workload::from_design_args(&bd.design, &spec.arg_sets)?
+        };
+        let workload = Arc::new(workload);
+        let space = Space::from_workload(&workload);
+        let mut ev = Evaluator::for_workload(workload.clone(), cfg.jobs);
         let (maxp, minp) = ev.eval_baselines();
         let (base_lat, base_bram) = (
             maxp.latency
@@ -149,6 +217,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                     design: design.clone(),
                     optimizer: optimizer.clone(),
                     seed,
+                    scenarios: workload.num_scenarios(),
                     evals: ev.n_evals(),
                     sims: ev.n_sim,
                     incr_rate: ev.stats().incremental_rate(),
@@ -192,6 +261,7 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                 r.design.clone(),
                 r.optimizer.clone(),
                 r.seed.to_string(),
+                r.scenarios.to_string(),
                 format!("{:.3}", r.elapsed_secs),
                 r.sims.to_string(),
                 format!("{:.0}%", r.incr_rate * 100.0),
@@ -208,8 +278,8 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
         .collect();
     report::markdown_table(
         &[
-            "design", "optimizer", "seed", "secs", "sims", "incr%", "replay%", "front", "lat×",
-            "BRAM↓", "rescue",
+            "design", "optimizer", "seed", "scen", "secs", "sims", "incr%", "replay%", "front",
+            "lat×", "BRAM↓", "rescue",
         ],
         &table_rows,
     )
@@ -227,7 +297,13 @@ mod tests {
         )
         .unwrap();
         let cfg = SweepConfig::from_json(&j).unwrap();
-        assert_eq!(cfg.designs, vec!["fig2"]);
+        assert_eq!(
+            cfg.designs,
+            vec![DesignSpec {
+                name: "fig2".into(),
+                arg_sets: Vec::new()
+            }]
+        );
         assert_eq!(cfg.seeds, vec![1, 2]);
         assert_eq!(cfg.budget, 50);
         assert_eq!(cfg.alpha, 0.7);
@@ -259,8 +335,46 @@ mod tests {
             assert!(r.sims as usize <= r.evals + 2);
         }
         assert!(rows.iter().any(|r| r.design == "fig2" && r.min_deadlocked));
+        assert!(rows.iter().all(|r| r.scenarios == 1));
         let md = rows_to_markdown(&rows);
         assert!(md.contains("fig2"));
         assert!(md.contains("×→✓"));
+    }
+
+    #[test]
+    fn scenario_lists_build_workload_runs() {
+        let j = Json::parse(
+            r#"{"designs": [{"design": "fig2", "scenarios": [[8], [16]]}],
+                "optimizers": ["greedy"], "budget": 60, "seeds": [1], "jobs": 1}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.designs[0].arg_sets, vec![vec![8], vec![16]]);
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].scenarios, 2);
+        // Worst-case baseline latency comes from the n=16 scenario, so it
+        // matches a plain single-scenario n=16 run's baseline.
+        let j16 = Json::parse(
+            r#"{"designs": [{"design": "fig2", "scenarios": [[16]]}],
+                "optimizers": ["greedy"], "budget": 60, "seeds": [1], "jobs": 1}"#,
+        )
+        .unwrap();
+        let rows16 = run_sweep(&SweepConfig::from_json(&j16).unwrap()).unwrap();
+        assert_eq!(rows[0].base_latency, rows16[0].base_latency);
+        let md = rows_to_markdown(&rows);
+        assert!(md.contains("| 2 |"), "scenario count column missing: {md}");
+
+        // Malformed scenario entries are rejected.
+        let bad = Json::parse(
+            r#"{"designs": [{"design": "fig2", "scenarios": []}], "optimizers": ["greedy"]}"#,
+        )
+        .unwrap();
+        assert!(SweepConfig::from_json(&bad).is_err());
+        let bad = Json::parse(
+            r#"{"designs": [{"design": "fig2", "scenarios": [["x"]]}], "optimizers": ["greedy"]}"#,
+        )
+        .unwrap();
+        assert!(SweepConfig::from_json(&bad).is_err());
     }
 }

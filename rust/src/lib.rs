@@ -14,12 +14,19 @@
 //!   (Kahn-process-network semantics, so results are independent of FIFO
 //!   sizes) and records the *execution trace* — the per-process sequence of
 //!   FIFO operations with inter-operation delays. This is the LightningSim
-//!   phase-1 analog.
+//!   phase-1 analog. [`trace::workload`] groups traces of the same design
+//!   under different kernel arguments into a validated, weighted
+//!   [`Workload`](trace::workload::Workload) — the unit of scenario-robust
+//!   sizing (with JSON serde for scenario sets).
 //! - [`sim`] — latency evaluation of a trace under any FIFO depth
 //!   assignment: the fast commit-time simulator ([`sim::fast`], the
-//!   LightningSim phase-2 analog, µs–ms per configuration), the golden
-//!   cycle-stepped reference ([`sim::golden`], the C/RTL co-simulation
-//!   analog), and the co-simulation runtime cost model ([`sim::cosim`]).
+//!   LightningSim phase-2 analog, µs–ms per configuration, with
+//!   delta-incremental replay of the retained schedule), the multi-trace
+//!   scenario bank ([`sim::scenario`]: one retained-schedule simulator per
+//!   workload scenario, worst-case/weighted aggregation, max-merged
+//!   channel stats), the golden cycle-stepped reference ([`sim::golden`],
+//!   the C/RTL co-simulation analog), and the co-simulation runtime cost
+//!   model ([`sim::cosim`]).
 //! - [`bram`] — the BRAM18K allocation model (paper Algorithm 1), the
 //!   shift-register threshold, and the depth-breakpoint pruning of §III-C.
 //! - [`opt`] — the optimizers of §III-D (random, grouped random, simulated
@@ -28,10 +35,12 @@
 //!   protocol ([`opt::Optimizer`]): `ask` proposes a batch, the engine
 //!   evaluates it, `tell` hands the outcomes back.
 //! - [`dse`] — the DSE engine layer: [`dse::EvalEngine`] owns the
-//!   black-box evaluation `x → (f_lat, f_bram)` — a persistent worker
-//!   pool (threads spawned once, each with a cloned [`FastSim`]), a
-//!   sharded memo cache, in-batch dedup, batched BRAM backend calls, and
-//!   engine statistics — while [`dse::drive`] is the single loop that
+//!   black-box evaluation `x → (f_lat, f_bram)` over a workload — a
+//!   persistent worker pool (threads spawned once, each with a cloned
+//!   per-scenario [`ScenarioSim`](sim::ScenarioSim) bank), a sharded memo
+//!   cache keyed by depth vector, in-batch dedup, batched BRAM backend
+//!   calls, and engine statistics (including per-scenario sim counts and
+//!   the robustness gap) — while [`dse::drive`] is the single loop that
 //!   runs any optimizer against it with centralized budget/history
 //!   accounting (`--jobs N` on the CLI sizes the pool).
 //! - [`runtime`] — the batched-analytics runtime: a native interpreter
@@ -60,4 +69,6 @@ pub mod util;
 
 pub use ir::{Design, DesignBuilder};
 pub use sim::fast::{FastSim, SimOutcome};
+pub use sim::scenario::ScenarioSim;
+pub use trace::workload::Workload;
 pub use trace::Trace;

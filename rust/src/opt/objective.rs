@@ -8,6 +8,47 @@
 //!   "highlighted" Pareto point compared against the baselines (§IV-B,
 //!   α = 0.7 vs Baseline-Max).
 
+/// How a multi-scenario workload's per-scenario latencies collapse into
+/// the single scalar objective the optimizers see
+/// ([`crate::sim::scenario::ScenarioSim`]). Deadlock in *any* scenario is
+/// always infeasible regardless of mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Aggregation {
+    /// Worst-case (max) latency over scenarios — the robust default, and
+    /// exact (no float math) so single-scenario workloads are
+    /// bit-identical to single-trace evaluation.
+    #[default]
+    WorstCase,
+    /// Weight-averaged latency, rounded to the nearest cycle.
+    Weighted,
+}
+
+/// Collapse per-scenario latencies into the workload objective. `None`
+/// anywhere (a deadlock in some scenario) — or an empty slice — yields
+/// `None`.
+pub fn aggregate_latency(
+    lats: &[Option<u64>],
+    weights: &[f64],
+    agg: Aggregation,
+) -> Option<u64> {
+    debug_assert_eq!(lats.len(), weights.len());
+    if lats.is_empty() || lats.iter().any(|l| l.is_none()) {
+        return None;
+    }
+    match agg {
+        Aggregation::WorstCase => lats.iter().map(|l| l.unwrap()).max(),
+        Aggregation::Weighted => {
+            let wsum: f64 = weights.iter().sum();
+            let acc: f64 = lats
+                .iter()
+                .zip(weights)
+                .map(|(l, w)| l.unwrap() as f64 * w)
+                .sum();
+            Some((acc / wsum.max(f64::MIN_POSITIVE)).round() as u64)
+        }
+    }
+}
+
 /// Weighted-sum objective for one SA chain. Deadlocks are handled by the
 /// caller (infinite objective).
 #[inline]
@@ -55,6 +96,31 @@ pub fn select_highlight(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn aggregation_worst_case_and_weighted() {
+        let lats = [Some(100u64), Some(300), Some(200)];
+        let w = [1.0, 1.0, 2.0];
+        assert_eq!(
+            aggregate_latency(&lats, &w, Aggregation::WorstCase),
+            Some(300)
+        );
+        // (100 + 300 + 2·200) / 4 = 200
+        assert_eq!(
+            aggregate_latency(&lats, &w, Aggregation::Weighted),
+            Some(200)
+        );
+        // Deadlock anywhere is infeasible in both modes.
+        let dead = [Some(100u64), None];
+        for agg in [Aggregation::WorstCase, Aggregation::Weighted] {
+            assert_eq!(aggregate_latency(&dead, &[1.0, 1.0], agg), None);
+        }
+        assert_eq!(aggregate_latency(&[], &[], Aggregation::WorstCase), None);
+        // Single scenario: both modes return the latency unchanged.
+        for agg in [Aggregation::WorstCase, Aggregation::Weighted] {
+            assert_eq!(aggregate_latency(&[Some(7)], &[3.5], agg), Some(7));
+        }
+    }
 
     #[test]
     fn weighted_endpoints() {

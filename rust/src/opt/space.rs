@@ -26,14 +26,27 @@ pub struct Space {
 impl Space {
     /// Build the pruned space for a trace.
     pub fn from_trace(trace: &Trace) -> Space {
-        let bounds = trace.upper_bounds();
         let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        Self::build(trace.upper_bounds(), widths, trace.groups())
+    }
+
+    /// Build the pruned space for a multi-trace
+    /// [`Workload`](crate::trace::workload::Workload): bounds are the
+    /// merged (max-over-scenarios) upper bounds, topology from the
+    /// primary scenario. For single-scenario workloads this equals
+    /// [`from_trace`](Self::from_trace) on the trace.
+    pub fn from_workload(workload: &crate::trace::workload::Workload) -> Space {
+        let primary = workload.primary();
+        let widths: Vec<u32> = primary.channels.iter().map(|c| c.width_bits).collect();
+        Self::build(workload.upper_bounds(), widths, primary.groups())
+    }
+
+    fn build(bounds: Vec<u32>, widths: Vec<u32>, groups: Vec<Vec<usize>>) -> Space {
         let per_fifo: Vec<Vec<u32>> = bounds
             .iter()
             .zip(&widths)
             .map(|(&u, &w)| candidate_depths(w, u))
             .collect();
-        let groups = trace.groups();
         let per_group = groups
             .iter()
             .map(|ids| {
@@ -139,6 +152,28 @@ mod tests {
         for (i, &d) in cfg.iter().enumerate() {
             assert!(d >= 2 && d <= s.bounds[i].max(2));
         }
+    }
+
+    #[test]
+    fn workload_space_merges_bounds() {
+        use crate::trace::workload::Workload;
+        let bd = bench_suite::build("fig2");
+        let scen: Vec<(String, Vec<i64>)> = [8i64, 16]
+            .iter()
+            .map(|&n| (format!("n{n}"), vec![n]))
+            .collect();
+        let w = Workload::from_design(&bd.design, &scen).unwrap();
+        let s = Space::from_workload(&w);
+        // Bounds come from the larger scenario (n = 16 writes per chan).
+        assert_eq!(s.bounds, vec![16, 16]);
+        // A single-scenario workload space equals the trace space.
+        let w1 = Workload::from_design(&bd.design, &scen[..1]).unwrap();
+        let t = w1.primary().clone();
+        let sw = Space::from_workload(&w1);
+        let st = Space::from_trace(&t);
+        assert_eq!(sw.bounds, st.bounds);
+        assert_eq!(sw.per_fifo, st.per_fifo);
+        assert_eq!(sw.groups, st.groups);
     }
 
     #[test]

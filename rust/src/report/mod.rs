@@ -51,15 +51,38 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
         ("replayed_ops", Json::Num(s.replayed_ops as f64)),
         ("replayable_ops", Json::Num(s.replayable_ops as f64)),
         ("replay_fraction", Json::Num(s.replay_fraction())),
+        ("scenarios", Json::Num(engine.num_scenarios() as f64)),
+        (
+            "scenario_names",
+            Json::Arr(
+                engine
+                    .scenario_names()
+                    .iter()
+                    .map(|n| Json::Str(n.clone()))
+                    .collect(),
+            ),
+        ),
+        ("scenario_sims", Json::Num(s.scenario_sims as f64)),
+        ("robustness_gap_mean", Json::Num(s.mean_robustness_gap())),
     ])
 }
 
 /// One-line human-readable engine summary for CLI output.
 pub fn engine_stats_line(engine: &EvalEngine) -> String {
     let s = engine.stats();
+    let scenarios = if engine.num_scenarios() > 1 {
+        format!(
+            ", {} scenarios ({} scenario-sims, mean robustness gap {:.0} cycles)",
+            engine.num_scenarios(),
+            s.scenario_sims,
+            s.mean_robustness_gap()
+        )
+    } else {
+        String::new()
+    };
     format!(
         "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s, {:.0}% worker utilization, \
-         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed)",
+         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed){scenarios}",
         engine.jobs(),
         engine.cache_shards(),
         s.hit_rate() * 100.0,

@@ -15,7 +15,11 @@
 //!   Table II). Slower, structurally different, obviously correct.
 //!
 //! [`cosim`] models the *runtime* of traditional HLS/RTL co-simulation for
-//! the Table III comparisons.
+//! the Table III comparisons. [`scenario`] lifts [`fast`] from one trace
+//! to a multi-trace [`Workload`](crate::trace::workload::Workload): one
+//! retained-schedule [`FastSim`] per scenario, worst-case/weighted
+//! latency aggregation, deadlock-in-any-scenario infeasibility, and
+//! max-merged channel statistics.
 //!
 //! # Cycle semantics (shared by both simulators)
 //!
@@ -39,8 +43,10 @@
 pub mod cosim;
 pub mod fast;
 pub mod golden;
+pub mod scenario;
 
 pub use fast::{FastSim, RunInfo, SimOutcome};
+pub use scenario::ScenarioSim;
 
 /// Read latency (cycles from write commit to earliest read commit) for a
 /// FIFO of the given shape under the given depth.

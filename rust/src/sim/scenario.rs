@@ -1,0 +1,380 @@
+//! The scenario-bank simulator: one retained-schedule [`FastSim`] per
+//! workload scenario, evaluated together.
+//!
+//! [`ScenarioSim`] is the multi-trace counterpart of [`FastSim`]: it owns
+//! one simulator per scenario of a [`Workload`], so the delta-incremental
+//! replay of each scenario's retained schedule still applies *per
+//! scenario* — a 1-channel DSE mutation re-simulates as a cheap delta in
+//! every scenario's bank member, not just one. A configuration's outcome
+//! is aggregated across scenarios:
+//!
+//! - **deadlock in any scenario** makes the configuration infeasible
+//!   (the blocked sets are unioned for diagnostics);
+//! - otherwise the latency is the worst-case (default) or weighted mean
+//!   over scenarios ([`Aggregation`]);
+//! - per-channel occupancy/stall statistics are **max-merged** across
+//!   scenarios, so the greedy ranking and the targeted Vitis hunter see
+//!   each channel's worst observed pressure.
+//!
+//! Single-scenario banks take the exact single-trace fast path: outcome,
+//! statistics and [`RunInfo`] telemetry are bit-identical to calling the
+//! underlying [`FastSim`] directly, with no extra allocation or
+//! aggregation work (`tests/workload_equivalence.rs` enforces this).
+
+use super::fast::{BlockInfo, ChannelStats, FastSim, RunInfo, SimOutcome};
+use super::SimOptions;
+use crate::opt::objective::{aggregate_latency, Aggregation};
+use crate::trace::workload::Workload;
+use crate::trace::Trace;
+use std::sync::Arc;
+
+/// A bank of per-scenario [`FastSim`]s evaluated as one unit. `Clone`
+/// duplicates every member's scratch (traces stay shared), giving each
+/// DSE worker its own full bank of retained schedules.
+#[derive(Clone)]
+pub struct ScenarioSim {
+    sims: Vec<FastSim>,
+    names: Vec<String>,
+    weights: Vec<f64>,
+    agg: Aggregation,
+    /// Merged telemetry of the most recent call (sums over scenarios;
+    /// `incremental` when any member replayed incrementally).
+    info: RunInfo,
+    /// Worst − best per-scenario latency of the most recent call (`None`
+    /// on deadlock).
+    gap: Option<u64>,
+    /// Per-scenario latencies of the most recent call.
+    per_lat: Vec<Option<u64>>,
+    /// Scratch buffer for per-scenario stats before max-merging.
+    scratch: ChannelStats,
+}
+
+impl ScenarioSim {
+    /// Build a bank over a workload with default [`SimOptions`].
+    pub fn new(workload: &Workload) -> ScenarioSim {
+        Self::with_options(workload, SimOptions::default())
+    }
+
+    /// Build with explicit [`SimOptions`] (applied to every member).
+    pub fn with_options(workload: &Workload, opts: SimOptions) -> ScenarioSim {
+        ScenarioSim {
+            sims: workload
+                .scenarios()
+                .iter()
+                .map(|s| FastSim::with_options(Arc::clone(&s.trace), opts))
+                .collect(),
+            names: workload.scenarios().iter().map(|s| s.name.clone()).collect(),
+            weights: workload.weights(),
+            agg: Aggregation::default(),
+            info: RunInfo::default(),
+            gap: None,
+            per_lat: Vec::new(),
+            scratch: ChannelStats::new(),
+        }
+    }
+
+    /// Single-trace bank (the mechanical port of a bare [`FastSim`]).
+    pub fn single(trace: Arc<Trace>) -> ScenarioSim {
+        Self::from_fastsim(FastSim::new(trace))
+    }
+
+    /// Wrap an existing simulator (keeps its options and retained
+    /// schedule) as a single-scenario bank.
+    pub fn from_fastsim(sim: FastSim) -> ScenarioSim {
+        ScenarioSim {
+            sims: vec![sim],
+            names: vec!["default".into()],
+            weights: vec![1.0],
+            agg: Aggregation::default(),
+            info: RunInfo::default(),
+            gap: None,
+            per_lat: Vec::new(),
+            scratch: ChannelStats::new(),
+        }
+    }
+
+    pub fn num_scenarios(&self) -> usize {
+        self.sims.len()
+    }
+
+    /// Scenario names, in bank order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Aggregation weights, in bank order.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// The first scenario's trace (topology reference).
+    pub fn primary_trace(&self) -> &Arc<Trace> {
+        self.sims[0].trace()
+    }
+
+    pub fn aggregation(&self) -> Aggregation {
+        self.agg
+    }
+
+    /// Choose how per-scenario latencies collapse (worst-case default).
+    pub fn set_aggregation(&mut self, agg: Aggregation) {
+        self.agg = agg;
+    }
+
+    /// Enable/disable schedule retention on every member.
+    pub fn set_incremental(&mut self, on: bool) {
+        for s in &mut self.sims {
+            s.set_incremental(on);
+        }
+    }
+
+    /// Merged telemetry of the most recent call: op counts are summed
+    /// over scenarios, `incremental` is set when any member replayed
+    /// incrementally. For single-scenario banks this is exactly the
+    /// member's [`FastSim::last_run`].
+    pub fn last_run(&self) -> RunInfo {
+        self.info
+    }
+
+    /// Worst − best per-scenario latency of the most recent call (the
+    /// robustness gap; 0 for single-scenario banks, `None` on deadlock).
+    pub fn last_gap(&self) -> Option<u64> {
+        self.gap
+    }
+
+    /// Per-scenario latencies of the most recent call (`None` =
+    /// deadlock in that scenario).
+    pub fn scenario_latencies(&self) -> &[Option<u64>] {
+        &self.per_lat
+    }
+
+    /// Per-member telemetry of the most recent call, in bank order.
+    pub fn scenario_runs(&self) -> Vec<RunInfo> {
+        self.sims.iter().map(|s| s.last_run()).collect()
+    }
+
+    /// Evaluate one configuration against every scenario.
+    pub fn simulate(&mut self, depths: &[u32]) -> SimOutcome {
+        if self.sims.len() == 1 {
+            let out = self.sims[0].simulate(depths);
+            self.finish_single(&out);
+            return out;
+        }
+        self.run_all(depths, None)
+    }
+
+    /// Evaluate with max-merged per-channel statistics.
+    pub fn simulate_with_stats(&mut self, depths: &[u32]) -> (SimOutcome, ChannelStats) {
+        let mut stats = ChannelStats::new();
+        let out = self.simulate_with_stats_into(depths, &mut stats);
+        (out, stats)
+    }
+
+    /// [`simulate_with_stats`](Self::simulate_with_stats) into a
+    /// caller-owned buffer.
+    pub fn simulate_with_stats_into(
+        &mut self,
+        depths: &[u32],
+        stats: &mut ChannelStats,
+    ) -> SimOutcome {
+        if self.sims.len() == 1 {
+            let out = self.sims[0].simulate_with_stats_into(depths, stats);
+            self.finish_single(&out);
+            return out;
+        }
+        self.run_all(depths, Some(stats))
+    }
+
+    fn finish_single(&mut self, out: &SimOutcome) {
+        self.info = self.sims[0].last_run();
+        self.per_lat.clear();
+        self.per_lat.push(out.latency());
+        self.gap = out.latency().map(|_| 0);
+    }
+
+    fn run_all(&mut self, depths: &[u32], mut stats: Option<&mut ChannelStats>) -> SimOutcome {
+        if let Some(buf) = stats.as_deref_mut() {
+            let nch = depths.len();
+            buf.max_occupancy.clear();
+            buf.max_occupancy.resize(nch, 0);
+            buf.write_stall.clear();
+            buf.write_stall.resize(nch, 0);
+            buf.read_stall.clear();
+            buf.read_stall.resize(nch, 0);
+        }
+        self.per_lat.clear();
+        self.info = RunInfo::default();
+        let mut blocked: Vec<BlockInfo> = Vec::new();
+        for sim in self.sims.iter_mut() {
+            let out = match stats.as_deref_mut() {
+                Some(buf) => {
+                    let o = sim.simulate_with_stats_into(depths, &mut self.scratch);
+                    for (d, s) in buf.max_occupancy.iter_mut().zip(&self.scratch.max_occupancy) {
+                        *d = (*d).max(*s);
+                    }
+                    for (d, s) in buf.write_stall.iter_mut().zip(&self.scratch.write_stall) {
+                        *d = (*d).max(*s);
+                    }
+                    for (d, s) in buf.read_stall.iter_mut().zip(&self.scratch.read_stall) {
+                        *d = (*d).max(*s);
+                    }
+                    o
+                }
+                None => sim.simulate(depths),
+            };
+            let r = sim.last_run();
+            self.info.incremental |= r.incremental;
+            self.info.dirty_channels += r.dirty_channels;
+            self.info.replayed_ops += r.replayed_ops;
+            self.info.total_ops += r.total_ops;
+            match &out {
+                SimOutcome::Done { latency } => self.per_lat.push(Some(*latency)),
+                SimOutcome::Deadlock { blocked: b } => {
+                    self.per_lat.push(None);
+                    for info in b {
+                        if !blocked.contains(info) {
+                            blocked.push(info.clone());
+                        }
+                    }
+                }
+            }
+        }
+        if !blocked.is_empty() {
+            self.gap = None;
+            return SimOutcome::Deadlock { blocked };
+        }
+        let worst = self.per_lat.iter().flatten().max().copied().unwrap_or(0);
+        let best = self.per_lat.iter().flatten().min().copied().unwrap_or(0);
+        self.gap = Some(worst - best);
+        let latency = aggregate_latency(&self.per_lat, &self.weights, self.agg)
+            .expect("all scenarios feasible");
+        SimOutcome::Done { latency }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+
+    fn fig2_workload(ns: &[i64]) -> Workload {
+        let bd = bench_suite::build("fig2");
+        let named: Vec<(String, Vec<i64>)> =
+            ns.iter().map(|&n| (format!("n{n}"), vec![n])).collect();
+        Workload::from_design(&bd.design, &named).unwrap()
+    }
+
+    #[test]
+    fn worst_case_latency_and_any_scenario_deadlock() {
+        let w = fig2_workload(&[8, 16]);
+        let mut bank = ScenarioSim::new(&w);
+        // Ample depths: feasible everywhere; latency = the slowest (n=16)
+        // scenario's.
+        let out = bank.simulate(&[16, 2]);
+        let per: Vec<Option<u64>> = w
+            .scenarios()
+            .iter()
+            .map(|s| {
+                FastSim::new(Arc::clone(&s.trace))
+                    .simulate(&[16, 2])
+                    .latency()
+            })
+            .collect();
+        assert_eq!(out.latency(), per.iter().flatten().max().copied());
+        assert_eq!(bank.scenario_latencies(), per.as_slice());
+        assert_eq!(
+            bank.last_gap(),
+            Some(per.iter().flatten().max().unwrap() - per.iter().flatten().min().unwrap())
+        );
+        // x depth 7 is feasible for n=8 but deadlocks n=16 → the workload
+        // is infeasible.
+        let out = bank.simulate(&[7, 2]);
+        assert!(out.is_deadlock());
+        assert!(bank.scenario_latencies()[0].is_some());
+        assert_eq!(bank.scenario_latencies()[1], None);
+        assert_eq!(bank.last_gap(), None);
+    }
+
+    #[test]
+    fn weighted_aggregation_averages() {
+        let w = fig2_workload(&[8, 16]);
+        let mut bank = ScenarioSim::new(&w);
+        bank.set_aggregation(Aggregation::Weighted);
+        let out = bank.simulate(&[16, 2]);
+        let per: Vec<u64> = bank
+            .scenario_latencies()
+            .iter()
+            .map(|l| l.unwrap())
+            .collect();
+        let mean = ((per[0] + per[1]) as f64 / 2.0).round() as u64;
+        assert_eq!(out.latency(), Some(mean));
+    }
+
+    #[test]
+    fn per_scenario_delta_replay_engages() {
+        let w = fig2_workload(&[8, 16, 12]);
+        let mut bank = ScenarioSim::new(&w);
+        bank.simulate(&[16, 16]);
+        assert!(!bank.last_run().incremental, "first run is cold");
+        // A 1-channel mutation: every member should replay its own delta.
+        bank.simulate(&[16, 8]);
+        let runs = bank.scenario_runs();
+        assert_eq!(runs.len(), 3);
+        assert!(
+            runs.iter().all(|r| r.incremental),
+            "every scenario member should delta-replay: {runs:?}"
+        );
+        assert!(bank.last_run().incremental);
+        assert_eq!(
+            bank.last_run().total_ops,
+            runs.iter().map(|r| r.total_ops).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn stats_are_max_merged() {
+        let w = fig2_workload(&[8, 16]);
+        let mut bank = ScenarioSim::new(&w);
+        let (_, merged) = bank.simulate_with_stats(&[16, 2]);
+        let per: Vec<ChannelStats> = w
+            .scenarios()
+            .iter()
+            .map(|s| {
+                FastSim::new(Arc::clone(&s.trace))
+                    .simulate_with_stats(&[16, 2])
+                    .1
+            })
+            .collect();
+        for ch in 0..w.num_fifos() {
+            assert_eq!(
+                merged.max_occupancy[ch],
+                per.iter().map(|s| s.max_occupancy[ch]).max().unwrap()
+            );
+            assert_eq!(
+                merged.write_stall[ch],
+                per.iter().map(|s| s.write_stall[ch]).max().unwrap()
+            );
+            assert_eq!(
+                merged.read_stall[ch],
+                per.iter().map(|s| s.read_stall[ch]).max().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_union_is_deduplicated() {
+        let w = fig2_workload(&[8, 16]);
+        let mut bank = ScenarioSim::new(&w);
+        // Depth 2 deadlocks both scenarios at the same (process, channel)
+        // points; the union must not repeat them.
+        let out = bank.simulate(&[2, 2]);
+        match out {
+            SimOutcome::Deadlock { blocked } => {
+                for (i, b) in blocked.iter().enumerate() {
+                    assert!(!blocked[..i].contains(b), "duplicate block info");
+                }
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+}

@@ -9,6 +9,9 @@
 //! key enabler for millisecond-scale incremental re-simulation.
 
 pub mod serde;
+pub mod workload;
+
+pub use workload::{Scenario, Workload, WorkloadError};
 
 use crate::ir::{Design, Instr};
 use std::collections::VecDeque;

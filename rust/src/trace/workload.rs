@@ -1,0 +1,440 @@
+//! Multi-trace **workloads**: a named set of traces of the *same design*
+//! collected under different kernel arguments, with per-scenario weights.
+//!
+//! Traces of data-dependent designs are argument-specific (§IV-D,
+//! FlowGNN-PNA): a FIFO configuration sized against one input can stall
+//! or deadlock on another. A [`Workload`] is the unit of
+//! *scenario-robust* sizing — the whole evaluation stack
+//! ([`crate::sim::scenario::ScenarioSim`], [`crate::dse::EvalEngine`])
+//! evaluates every candidate configuration against every scenario and
+//! reports worst-case (or weighted) latency, with deadlock in *any*
+//! scenario making the configuration infeasible.
+//!
+//! Construction validates that all scenarios share one channel topology
+//! (names, widths, groups, depth hints) and one process set, so channel
+//! and process indices mean the same thing in every scenario. Merged
+//! per-channel [`upper_bounds`](Workload::upper_bounds) (and therefore
+//! Baseline-Max) are the max over scenarios — the smallest sizing that is
+//! deadlock-free by construction on every input.
+//!
+//! [`Workload::single`] wraps one trace with zero semantic change: every
+//! single-trace call site ports mechanically, and the simulator takes the
+//! exact single-trace fast path.
+
+use super::{collect_trace, Trace, TraceError};
+use crate::ir::Design;
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+use thiserror::Error;
+
+/// One scenario of a workload: a trace of the design under one argument
+/// vector, with a report-friendly name and an aggregation weight.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// Relative weight for weighted-latency aggregation (must be finite
+    /// and positive; ignored by the worst-case objective).
+    pub weight: f64,
+    pub trace: Arc<Trace>,
+}
+
+/// Workload construction failure.
+#[derive(Debug, Error)]
+pub enum WorkloadError {
+    #[error("workload needs at least one scenario")]
+    Empty,
+    #[error("scenario '{scenario}' does not match the workload topology: {detail}")]
+    TopologyMismatch { scenario: String, detail: String },
+    #[error("scenario '{scenario}': design '{design}' expects {expected} args, got {got}")]
+    ArgCount {
+        scenario: String,
+        design: String,
+        expected: usize,
+        got: usize,
+    },
+    #[error("scenario '{scenario}': trace collection failed: {source}")]
+    Trace {
+        scenario: String,
+        #[source]
+        source: TraceError,
+    },
+    #[error("duplicate scenario name '{name}'")]
+    DuplicateName { name: String },
+    #[error("scenario '{scenario}': weight {weight} must be finite and positive")]
+    BadWeight { scenario: String, weight: f64 },
+}
+
+/// A validated set of scenarios over one design.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    design_name: String,
+    scenarios: Vec<Scenario>,
+}
+
+impl Workload {
+    /// Wrap one trace as a single-scenario workload (weight 1). This is
+    /// the mechanical port for every pre-workload call site; evaluation
+    /// of a single-scenario workload is bit-identical to evaluating the
+    /// trace directly.
+    pub fn single(trace: Arc<Trace>) -> Workload {
+        Workload {
+            design_name: trace.design_name.clone(),
+            scenarios: vec![Scenario {
+                name: "default".into(),
+                weight: 1.0,
+                trace,
+            }],
+        }
+    }
+
+    /// Build a workload from already-collected scenarios, validating
+    /// non-emptiness, unique names, positive weights, and identical
+    /// channel/process topology across scenarios.
+    pub fn new(scenarios: Vec<Scenario>) -> Result<Workload, WorkloadError> {
+        let first = scenarios.first().ok_or(WorkloadError::Empty)?;
+        let reference = Arc::clone(&first.trace);
+        let design_name = reference.design_name.clone();
+        for (i, s) in scenarios.iter().enumerate() {
+            if scenarios[..i].iter().any(|p| p.name == s.name) {
+                return Err(WorkloadError::DuplicateName {
+                    name: s.name.clone(),
+                });
+            }
+            if !(s.weight.is_finite() && s.weight > 0.0) {
+                return Err(WorkloadError::BadWeight {
+                    scenario: s.name.clone(),
+                    weight: s.weight,
+                });
+            }
+            check_topology(&reference, s)?;
+        }
+        Ok(Workload {
+            design_name,
+            scenarios,
+        })
+    }
+
+    /// Collect one trace per `(name, args)` pair (uniform weight 1).
+    /// Argument arity is checked against the design up front.
+    pub fn from_design(
+        design: &Design,
+        scenarios: &[(String, Vec<i64>)],
+    ) -> Result<Workload, WorkloadError> {
+        let mut out = Vec::with_capacity(scenarios.len());
+        for (name, args) in scenarios {
+            if args.len() != design.num_args {
+                return Err(WorkloadError::ArgCount {
+                    scenario: name.clone(),
+                    design: design.name.clone(),
+                    expected: design.num_args,
+                    got: args.len(),
+                });
+            }
+            let trace = collect_trace(design, args).map_err(|source| WorkloadError::Trace {
+                scenario: name.clone(),
+                source,
+            })?;
+            out.push(Scenario {
+                name: name.clone(),
+                weight: 1.0,
+                trace: Arc::new(trace),
+            });
+        }
+        Self::new(out)
+    }
+
+    /// [`from_design`](Self::from_design) with auto-generated scenario
+    /// names `s0`, `s1`, … (the CLI's repeatable `--args` path).
+    pub fn from_design_args(
+        design: &Design,
+        arg_sets: &[Vec<i64>],
+    ) -> Result<Workload, WorkloadError> {
+        let named: Vec<(String, Vec<i64>)> = arg_sets
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (format!("s{i}"), a.clone()))
+            .collect();
+        Self::from_design(design, &named)
+    }
+
+    /// The common design name of all scenarios.
+    pub fn design_name(&self) -> &str {
+        &self.design_name
+    }
+
+    /// All scenarios, in construction order.
+    pub fn scenarios(&self) -> &[Scenario] {
+        &self.scenarios
+    }
+
+    pub fn num_scenarios(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.scenarios.len() == 1
+    }
+
+    /// The first scenario's trace — the topology reference (and, for
+    /// single-scenario workloads, *the* trace).
+    pub fn primary(&self) -> &Arc<Trace> {
+        &self.scenarios[0].trace
+    }
+
+    /// Number of channels (identical across scenarios).
+    pub fn num_fifos(&self) -> usize {
+        self.primary().channels.len()
+    }
+
+    /// Total trace ops across all scenarios.
+    pub fn total_ops(&self) -> usize {
+        self.scenarios.iter().map(|s| s.trace.total_ops()).sum()
+    }
+
+    /// Per-scenario aggregation weights.
+    pub fn weights(&self) -> Vec<f64> {
+        self.scenarios.iter().map(|s| s.weight).collect()
+    }
+
+    /// Merged per-channel DSE upper bounds `u_i`: the max over scenarios
+    /// of each trace's upper bound (designer hint, else observed writes).
+    pub fn upper_bounds(&self) -> Vec<u32> {
+        let mut out = self.primary().upper_bounds();
+        for s in &self.scenarios[1..] {
+            for (o, u) in out.iter_mut().zip(s.trace.upper_bounds()) {
+                *o = (*o).max(u);
+            }
+        }
+        out
+    }
+
+    /// The scenario-robust Baseline-Max: every FIFO at its merged upper
+    /// bound — deadlock-free by construction on every scenario.
+    pub fn baseline_max(&self) -> Vec<u32> {
+        self.upper_bounds()
+    }
+
+    /// Baseline-Min: depth 2 everywhere (scenario-independent).
+    pub fn baseline_min(&self) -> Vec<u32> {
+        self.primary().baseline_min()
+    }
+
+    // -----------------------------------------------------------------
+    // JSON serde
+    // -----------------------------------------------------------------
+
+    /// Serialize the whole scenario set (each scenario embeds its trace
+    /// in the [`super::serde`] format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("design_name", Json::Str(self.design_name.clone())),
+            (
+                "scenarios",
+                Json::Arr(
+                    self.scenarios
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::Str(s.name.clone())),
+                                ("weight", Json::Num(s.weight)),
+                                ("trace", super::serde::trace_to_json(&s.trace)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize and re-validate a workload.
+    pub fn from_json(j: &Json) -> Result<Workload> {
+        let arr = j
+            .get("scenarios")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("workload json: missing 'scenarios' array"))?;
+        let mut scenarios = Vec::with_capacity(arr.len());
+        for (i, sj) in arr.iter().enumerate() {
+            let name = sj
+                .get("name")
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("s{i}"));
+            let weight = sj.get("weight").and_then(|v| v.as_f64()).unwrap_or(1.0);
+            let tj = sj
+                .get("trace")
+                .ok_or_else(|| anyhow!("scenario '{name}': missing 'trace'"))?;
+            let trace = super::serde::trace_from_json(tj)
+                .with_context(|| format!("scenario '{name}'"))?;
+            scenarios.push(Scenario {
+                name,
+                weight,
+                trace: Arc::new(trace),
+            });
+        }
+        let w = Workload::new(scenarios)?;
+        if let Some(dn) = j.get("design_name").and_then(|v| v.as_str()) {
+            if dn != w.design_name {
+                return Err(anyhow!(
+                    "workload design_name '{dn}' does not match its traces' '{}'",
+                    w.design_name
+                ));
+            }
+        }
+        Ok(w)
+    }
+
+    /// Save the workload to a file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        crate::report::write_file(path, &self.to_json().to_string_compact())
+            .with_context(|| format!("writing {path}"))
+    }
+
+    /// Load and validate a workload from a file.
+    pub fn load(path: &str) -> Result<Workload> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).context("parsing workload json")?;
+        Self::from_json(&j)
+    }
+}
+
+fn check_topology(reference: &Trace, s: &Scenario) -> Result<(), WorkloadError> {
+    let t = &s.trace;
+    let err = |detail: String| WorkloadError::TopologyMismatch {
+        scenario: s.name.clone(),
+        detail,
+    };
+    if t.design_name != reference.design_name {
+        return Err(err(format!(
+            "design '{}' vs '{}'",
+            t.design_name, reference.design_name
+        )));
+    }
+    if t.channels.len() != reference.channels.len() {
+        return Err(err(format!(
+            "{} channels vs {}",
+            t.channels.len(),
+            reference.channels.len()
+        )));
+    }
+    for (a, b) in reference.channels.iter().zip(&t.channels) {
+        if a.name != b.name
+            || a.width_bits != b.width_bits
+            || a.group != b.group
+            || a.depth_hint != b.depth_hint
+        {
+            return Err(err(format!(
+                "channel '{}' differs in name/width/group/depth hint",
+                a.name
+            )));
+        }
+    }
+    if t.process_names != reference.process_names {
+        return Err(err("process set differs".into()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+
+    fn fig2_workload(ns: &[i64]) -> Workload {
+        let bd = bench_suite::build("fig2");
+        let named: Vec<(String, Vec<i64>)> =
+            ns.iter().map(|&n| (format!("n{n}"), vec![n])).collect();
+        Workload::from_design(&bd.design, &named).unwrap()
+    }
+
+    #[test]
+    fn single_wraps_one_trace() {
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let w = Workload::single(t.clone());
+        assert!(w.is_single());
+        assert_eq!(w.num_fifos(), t.num_fifos());
+        assert_eq!(w.upper_bounds(), t.upper_bounds());
+        assert_eq!(w.baseline_max(), t.baseline_max());
+        assert_eq!(w.baseline_min(), t.baseline_min());
+        assert_eq!(w.total_ops(), t.total_ops());
+    }
+
+    #[test]
+    fn merged_bounds_are_max_over_scenarios() {
+        let w = fig2_workload(&[8, 16, 12]);
+        assert_eq!(w.num_scenarios(), 3);
+        // fig2 x/y write counts equal n, so the merged bound is the
+        // largest scenario's.
+        assert_eq!(w.upper_bounds(), vec![16, 16]);
+        // Each scenario keeps its own bound.
+        assert_eq!(w.scenarios()[0].trace.upper_bounds(), vec![8, 8]);
+    }
+
+    #[test]
+    fn arg_count_mismatch_rejected() {
+        let bd = bench_suite::build("fig2");
+        let err = Workload::from_design(
+            &bd.design,
+            &[("a".into(), vec![8]), ("b".into(), vec![8, 9])],
+        )
+        .unwrap_err();
+        assert!(matches!(
+            err,
+            WorkloadError::ArgCount {
+                expected: 1,
+                got: 2,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn empty_duplicate_and_bad_weight_rejected() {
+        assert!(matches!(
+            Workload::new(vec![]).unwrap_err(),
+            WorkloadError::Empty
+        ));
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(collect_trace(&bd.design, &[8]).unwrap());
+        let dup = Workload::new(vec![
+            Scenario {
+                name: "x".into(),
+                weight: 1.0,
+                trace: t.clone(),
+            },
+            Scenario {
+                name: "x".into(),
+                weight: 1.0,
+                trace: t.clone(),
+            },
+        ]);
+        assert!(matches!(
+            dup.unwrap_err(),
+            WorkloadError::DuplicateName { .. }
+        ));
+        let bad = Workload::new(vec![Scenario {
+            name: "x".into(),
+            weight: 0.0,
+            trace: t,
+        }]);
+        assert!(matches!(bad.unwrap_err(), WorkloadError::BadWeight { .. }));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_scenarios() {
+        let w = fig2_workload(&[4, 9]);
+        let j = w.to_json();
+        let w2 = Workload::from_json(&Json::parse(&j.to_string_compact()).unwrap()).unwrap();
+        assert_eq!(w2.num_scenarios(), 2);
+        assert_eq!(w2.design_name(), w.design_name());
+        assert_eq!(w2.upper_bounds(), w.upper_bounds());
+        for (a, b) in w.scenarios().iter().zip(w2.scenarios()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.weight, b.weight);
+            assert_eq!(a.trace.args, b.trace.args);
+            assert_eq!(a.trace.total_ops(), b.trace.total_ops());
+        }
+    }
+}

@@ -160,6 +160,85 @@ fn multi_stimulus_optimization_tightens_feasibility() {
     }
 }
 
+/// Scenario-set DSE acceptance (the multi-trace tentpole): over a
+/// 4-graph FlowGNN workload, (a) a config sized optimally for one graph
+/// demonstrably deadlocks on a sibling graph, (b) the workload-optimized
+/// config is feasible on *every* scenario, and (c) it uses less BRAM
+/// than the merged Baseline-Max.
+#[test]
+fn workload_sizing_is_robust_where_single_scenario_sizing_deadlocks() {
+    use fifoadvisor::sim::fast::FastSim;
+    use fifoadvisor::trace::workload::Workload;
+
+    let w = Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap());
+    assert_eq!(w.num_scenarios(), 4);
+    let lanes = bench_suite::flowgnn::LANES;
+
+    // (a) Single-scenario "optimal": msg lanes sized exactly to graph
+    // 0's bursts (minimal feasible sizing for that graph).
+    let s0 = &w.scenarios()[0].trace;
+    let mut cfg0 = s0.baseline_min();
+    for l in 0..lanes {
+        cfg0[l] = (s0.channels[l].writes as u32).max(2);
+    }
+    assert!(
+        !FastSim::new(s0.clone()).simulate(&cfg0).is_deadlock(),
+        "graph-0 sizing must be feasible on graph 0"
+    );
+    let deadlocked_siblings = w.scenarios()[1..]
+        .iter()
+        .filter(|s| FastSim::new(s.trace.clone()).simulate(&cfg0).is_deadlock())
+        .count();
+    assert!(
+        deadlocked_siblings > 0,
+        "graph-0 sizing must deadlock on some sibling graph"
+    );
+
+    // (b)+(c) Workload DSE over the scenario bank.
+    let space = Space::from_workload(&w);
+    let mut ev = Evaluator::for_workload(w.clone(), 2);
+    let (base, min) = ev.eval_baselines();
+    assert!(base.is_feasible(), "merged Baseline-Max must be robust");
+    assert!(!min.is_feasible(), "Baseline-Min must deadlock somewhere");
+    drive(
+        &mut *opt::by_name("grouped_sa", 31).unwrap(),
+        &mut ev,
+        &space,
+        400,
+    );
+    let best = ev
+        .history
+        .iter()
+        .filter(|p| p.is_feasible())
+        .min_by_key(|p| (p.bram, p.latency.unwrap()))
+        .expect("workload DSE found no robust config")
+        .clone();
+    assert!(
+        best.bram < base.bram,
+        "workload sizing should beat merged Baseline-Max BRAM: {} vs {}",
+        best.bram,
+        base.bram
+    );
+    // Feasible-in-the-engine means feasible on every scenario; verify
+    // independently of the engine with per-scenario cold simulators.
+    for s in w.scenarios() {
+        let out = FastSim::new(s.trace.clone()).simulate(&best.depths);
+        assert!(
+            !out.is_deadlock(),
+            "workload-optimized config deadlocks on scenario '{}'",
+            s.name
+        );
+    }
+    // Sanity: Workload::single over one graph reproduces (a)'s verdict
+    // through the engine path too.
+    let single = Arc::new(Workload::single(s0.clone()));
+    let mut ev0 = Evaluator::for_workload(single, 1);
+    let (lat0, _) = ev0.eval(&cfg0);
+    assert!(lat0.is_some());
+    let (lat_w, _) = ev.eval(&cfg0);
+    assert_eq!(lat_w, None, "graph-0 sizing must be infeasible as a workload");
+}
+
 /// The Vitis hunter baseline needs many sims and overshoots; FIFOAdvisor
 /// greedy finds a strictly better (never worse) BRAM result on fig2.
 #[test]

@@ -1,0 +1,147 @@
+//! Differential acceptance for the scenario-set refactor.
+//!
+//! A single-scenario workload must be **bit-identical** to the raw
+//! single-trace path: same outcomes (latency and full deadlock block
+//! sets), same channel statistics, same incremental-replay telemetry,
+//! and — at the engine level — the same history and counters (modulo
+//! timing) for every optimizer, serial and `--jobs 4`. Multi-scenario
+//! engines must additionally be deterministic across worker counts.
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::{drive, Evaluator};
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::ScenarioSim;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::trace::workload::Workload;
+use std::sync::Arc;
+
+fn all_with_specials() -> Vec<&'static str> {
+    let mut v = bench_suite::all_names();
+    v.extend(["fig2", "flowgnn_pna"]);
+    v
+}
+
+#[test]
+fn single_scenario_bank_is_bit_identical_to_fastsim_on_every_design() {
+    for name in all_with_specials() {
+        let bd = bench_suite::build(name);
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let mut fast = FastSim::new(t.clone());
+        let mut bank = ScenarioSim::single(t.clone());
+        let ub = t.upper_bounds();
+        // A walk covering cold runs, deadlocks, and 1-channel deltas.
+        let mut configs: Vec<Vec<u32>> = vec![t.baseline_max(), t.baseline_min()];
+        configs.push(ub.iter().map(|&u| (u / 2).max(2)).collect());
+        let mut c = t.baseline_max();
+        let mid = c.len() / 2;
+        c[mid] = 2;
+        configs.push(c.clone());
+        c[mid] = ub[mid].max(2);
+        configs.push(c);
+        for cfg in &configs {
+            let a = fast.simulate(cfg);
+            let b = bank.simulate(cfg);
+            assert_eq!(a, b, "{name}: outcome diverged on {cfg:?}");
+            assert_eq!(
+                fast.last_run(),
+                bank.last_run(),
+                "{name}: telemetry diverged on {cfg:?}"
+            );
+            assert_eq!(bank.scenario_latencies().to_vec(), vec![a.latency()], "{name}");
+        }
+        // Stats path (the greedy/hunter evaluation mode).
+        let (ao, astats) = fast.simulate_with_stats(&t.baseline_max());
+        let (bo, bstats) = bank.simulate_with_stats(&t.baseline_max());
+        assert_eq!(ao, bo, "{name}");
+        assert_eq!(astats.max_occupancy, bstats.max_occupancy, "{name}");
+        assert_eq!(astats.write_stall, bstats.write_stall, "{name}");
+        assert_eq!(astats.read_stall, bstats.read_stall, "{name}");
+    }
+}
+
+type HistoryRecord = Vec<(Box<[u32]>, Option<u64>, u32)>;
+
+fn history_of(ev: &Evaluator) -> HistoryRecord {
+    ev.history
+        .iter()
+        .map(|p| (p.depths.clone(), p.latency, p.bram))
+        .collect()
+}
+
+#[test]
+fn workload_single_engine_matches_trace_engine_for_all_optimizers() {
+    let bd = bench_suite::build("gesummv");
+    let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let w = Arc::new(Workload::single(t.clone()));
+    let space_t = Space::from_trace(&t);
+    let space_w = Space::from_workload(&w);
+    assert_eq!(space_t.bounds, space_w.bounds);
+    assert_eq!(space_t.per_fifo, space_w.per_fifo);
+    for name in opt::OPTIMIZER_NAMES {
+        for jobs in [1usize, 4] {
+            let mut ev_t = Evaluator::parallel(t.clone(), jobs);
+            let mut o = opt::by_name(name, 42).unwrap();
+            drive(&mut *o, &mut ev_t, &space_t, 120);
+            let mut ev_w = Evaluator::for_workload(w.clone(), jobs);
+            let mut o = opt::by_name(name, 42).unwrap();
+            drive(&mut *o, &mut ev_w, &space_w, 120);
+            assert_eq!(
+                history_of(&ev_t),
+                history_of(&ev_w),
+                "{name} jobs={jobs}: workload-single history diverged"
+            );
+            // Engine counters, modulo timing.
+            let (st, sw) = (ev_t.stats(), ev_w.stats());
+            assert_eq!(st.proposals, sw.proposals, "{name} jobs={jobs}");
+            assert_eq!(st.cache_hits, sw.cache_hits, "{name} jobs={jobs}");
+            assert_eq!(st.sims, sw.sims, "{name} jobs={jobs}");
+            assert_eq!(st.incr_sims, sw.incr_sims, "{name} jobs={jobs}");
+            assert_eq!(st.replayed_ops, sw.replayed_ops, "{name} jobs={jobs}");
+            assert_eq!(st.replayable_ops, sw.replayable_ops, "{name} jobs={jobs}");
+            assert_eq!(
+                sw.scenario_sims, sw.sims,
+                "single-scenario workload: one scenario-sim per sim"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_scenario_engine_identical_serial_vs_parallel() {
+    let w = Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap());
+    assert_eq!(w.num_scenarios(), 4);
+    let space = Space::from_workload(&w);
+    for name in ["random", "grouped_sa", "greedy", "vitis_hunter"] {
+        let mut runs: Vec<HistoryRecord> = Vec::new();
+        for jobs in [1usize, 4] {
+            let mut ev = Evaluator::for_workload(w.clone(), jobs);
+            let mut o = opt::by_name(name, 9).unwrap();
+            drive(&mut *o, &mut ev, &space, 90);
+            runs.push(history_of(&ev));
+        }
+        assert_eq!(
+            runs[0], runs[1],
+            "{name}: multi-scenario serial vs --jobs 4 diverged"
+        );
+    }
+}
+
+#[test]
+fn multi_scenario_incremental_replay_engages_in_the_engine() {
+    // Serial engine over a 4-graph workload: ±1 single-channel mutation
+    // chains must be served as per-scenario delta replays.
+    let w = Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap());
+    let mut ev = Evaluator::for_workload(w.clone(), 1);
+    let base = w.baseline_max();
+    ev.eval(&base);
+    for ch in 0..base.len().min(8) {
+        let mut c = base.clone();
+        c[ch] -= 1;
+        ev.eval(&c);
+    }
+    let s = ev.stats();
+    assert!(s.incr_sims > 0, "no incremental sims on mutation chain: {s:?}");
+    assert!(s.replayed_ops < s.replayable_ops, "deltas must save work");
+    assert_eq!(s.scenario_sims, s.sims * w.num_scenarios() as u64);
+}

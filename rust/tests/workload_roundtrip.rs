@@ -1,0 +1,148 @@
+//! Workload JSON serde: save/load round-trip of a multi-scenario
+//! workload, plus rejection of malformed scenario sets (mismatched
+//! channel topology, wrong arg counts, corrupt JSON).
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::ir::{DesignBuilder, Expr};
+use fifoadvisor::sim::ScenarioSim;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::trace::workload::{Scenario, Workload, WorkloadError};
+use fifoadvisor::util::Json;
+use std::sync::Arc;
+
+#[test]
+fn multi_scenario_file_roundtrip_preserves_simulation() {
+    let w = bench_suite::build_workload("flowgnn_pna").unwrap();
+    assert_eq!(w.num_scenarios(), 4);
+    let path = "/tmp/fifoadvisor_workload_roundtrip.json";
+    w.save(path).unwrap();
+    let w2 = Workload::load(path).unwrap();
+    std::fs::remove_file(path).ok();
+
+    assert_eq!(w2.design_name(), w.design_name());
+    assert_eq!(w2.num_scenarios(), w.num_scenarios());
+    assert_eq!(w2.upper_bounds(), w.upper_bounds());
+    for (a, b) in w.scenarios().iter().zip(w2.scenarios()) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.weight, b.weight);
+        assert_eq!(a.trace.args, b.trace.args);
+        assert_eq!(a.trace.total_ops(), b.trace.total_ops());
+    }
+    // The reloaded workload simulates identically (worst-case outcome
+    // and per-scenario latencies) on baselines and a mid config.
+    let mid: Vec<u32> = w.upper_bounds().iter().map(|&u| (u / 2).max(2)).collect();
+    let mut s1 = ScenarioSim::new(&w);
+    let mut s2 = ScenarioSim::new(&w2);
+    for cfg in [w.baseline_max(), w.baseline_min(), mid] {
+        assert_eq!(s1.simulate(&cfg), s2.simulate(&cfg), "cfg {cfg:?}");
+        assert_eq!(s1.scenario_latencies(), s2.scenario_latencies());
+    }
+}
+
+#[test]
+fn wrong_arg_count_rejected() {
+    let bd = bench_suite::build("flowgnn_pna");
+    // flowgnn_pna takes 3 args; the second scenario passes 2.
+    let err = Workload::from_design(
+        &bd.design,
+        &[
+            ("ok".into(), vec![64, 512, 7]),
+            ("short".into(), vec![64, 512]),
+        ],
+    )
+    .unwrap_err();
+    match err {
+        WorkloadError::ArgCount {
+            scenario,
+            expected,
+            got,
+            ..
+        } => {
+            assert_eq!(scenario, "short");
+            assert_eq!(expected, 3);
+            assert_eq!(got, 2);
+        }
+        other => panic!("expected ArgCount, got {other}"),
+    }
+}
+
+#[test]
+fn mismatched_channel_topology_rejected() {
+    // Two designs with the same name but different channel widths: the
+    // traces cannot form one workload.
+    let mk = |wbits: u32| {
+        let mut b = DesignBuilder::new("topo", 0);
+        let c = b.channel("c", wbits);
+        b.process("p", move |p| p.write(c, Expr::c(0)));
+        b.process("q", move |p| {
+            let _ = p.read(c);
+        });
+        b.build()
+    };
+    let t32 = Arc::new(collect_trace(&mk(32), &[]).unwrap());
+    let t64 = Arc::new(collect_trace(&mk(64), &[]).unwrap());
+    let err = Workload::new(vec![
+        Scenario {
+            name: "a".into(),
+            weight: 1.0,
+            trace: t32.clone(),
+        },
+        Scenario {
+            name: "b".into(),
+            weight: 1.0,
+            trace: t64,
+        },
+    ])
+    .unwrap_err();
+    assert!(matches!(err, WorkloadError::TopologyMismatch { .. }), "{err}");
+
+    // Different channel count is also a topology mismatch.
+    let mut b = DesignBuilder::new("topo", 0);
+    let c = b.channel("c", 32);
+    let d = b.channel("d", 32);
+    b.process("p", move |p| {
+        p.write(c, Expr::c(0));
+        p.write(d, Expr::c(0));
+    });
+    b.process("q", move |p| {
+        let _ = p.read(c);
+        let _ = p.read(d);
+    });
+    let t2 = Arc::new(collect_trace(&b.build(), &[]).unwrap());
+    let err = Workload::new(vec![
+        Scenario {
+            name: "a".into(),
+            weight: 1.0,
+            trace: t32,
+        },
+        Scenario {
+            name: "b".into(),
+            weight: 1.0,
+            trace: t2,
+        },
+    ])
+    .unwrap_err();
+    assert!(matches!(err, WorkloadError::TopologyMismatch { .. }), "{err}");
+}
+
+#[test]
+fn corrupt_workload_json_rejected() {
+    assert!(Workload::from_json(&Json::Null).is_err());
+    assert!(Workload::from_json(&Json::obj(vec![(
+        "scenarios",
+        Json::Arr(vec![])
+    )]))
+    .is_err());
+    // A scenario entry without a trace.
+    let j = Json::obj(vec![(
+        "scenarios",
+        Json::Arr(vec![Json::obj(vec![("name", Json::Str("x".into()))])]),
+    )]);
+    assert!(Workload::from_json(&j).is_err());
+    // Design-name disagreement between header and traces.
+    let w = bench_suite::build_workload("fig2").unwrap();
+    let mut text = w.to_json().to_string_compact();
+    text = text.replacen("\"design_name\":\"fig2\"", "\"design_name\":\"other\"", 1);
+    let j = Json::parse(&text).unwrap();
+    assert!(Workload::from_json(&j).is_err());
+}
