@@ -15,10 +15,19 @@
 //!    FlowGNN-PNA workload and the per-scenario incremental hit rate on
 //!    a DSE-shaped mutation walk (a walk with zero incremental replays
 //!    aborts the bench).
+//! 8. Simulation-free pruning: end-to-end `optimize` runs
+//!    (greedy/SA/NSGA-II on the fig2 and FlowGNN workloads, serial and
+//!    `--jobs 4`) with pruning on vs off — oracle/clamp hit rates, sims
+//!    avoided, scenario-replay reduction, and wall clock. Hard asserts:
+//!    bit-identical histories/fronts, a nonzero pruning hit fraction,
+//!    never more sims, strictly fewer scenario replays. Wall clock is
+//!    guarded with deliberate slack (2× + 0.25 s) so CI noise on tiny
+//!    workloads cannot flake — the sim counts are the real guarantee.
 //!
 //! Run: `cargo bench --bench perf`. Besides `results/perf.csv` it writes
 //! machine-readable snapshots: `BENCH_2.json` (every §Perf 1–6 metric
-//! row) and `BENCH_3.json` (the §Perf 7 scenario-bank rows).
+//! row), `BENCH_3.json` (the §Perf 7 scenario-bank rows), and
+//! `BENCH_4.json` (the §Perf 8 pruning rows).
 //! Set `FIFOADVISOR_PERF_SMOKE=1` for a reduced-iteration run (the CI
 //! regression smoke): same sections, same correctness assertions, far
 //! fewer samples.
@@ -470,8 +479,203 @@ fn main() {
         }
     }
 
+    println!("\n=== §Perf 8: simulation-free pruning (oracle + clamp + early exit) ===\n");
+    let mut prune_rows: Vec<Json> = Vec::new();
+    {
+        use fifoadvisor::dse::drive;
+        use fifoadvisor::opt::{self, Space};
+
+        type HistoryRecord = Vec<(Box<[u32]>, Option<u64>, u32)>;
+        fn history_of(ev: &EvalEngine) -> HistoryRecord {
+            ev.history
+                .iter()
+                .map(|p| (p.depths.clone(), p.latency, p.bram))
+                .collect()
+        }
+
+        let budget = if smoke { 120 } else { 400 };
+        let optimizers = ["greedy", "grouped_sa", "nsga2"];
+        for wname in ["fig2", "flowgnn_pna"] {
+            let w = Arc::new(bench_suite::build_workload(wname).unwrap());
+            let k = w.num_scenarios();
+            let space = Space::from_workload(&w);
+            // The channel with the largest merged write count: collapsing
+            // it to depth 2 is a guaranteed deadlock on these workloads
+            // (it must buffer a burst its reader cannot drain yet).
+            let caps: Vec<u64> = (0..w.num_fifos())
+                .map(|ch| {
+                    w.scenarios()
+                        .iter()
+                        .map(|s| s.trace.channels[ch].writes)
+                        .max()
+                        .unwrap()
+                })
+                .collect();
+            let hot = caps
+                .iter()
+                .enumerate()
+                .max_by_key(|&(i, &c)| (c, std::cmp::Reverse(i)))
+                .unwrap()
+                .0;
+            for jobs in [1usize, 4] {
+                let mut ev_p = EvalEngine::for_workload(w.clone(), jobs);
+                let mut ev_u = EvalEngine::for_workload(w.clone(), jobs);
+                ev_u.set_prune(false);
+                let (mut secs_p, mut secs_u) = (0.0f64, 0.0f64);
+                let (mut sims_p, mut sims_u) = (0u64, 0u64);
+                let (mut scen_p, mut scen_u) = (0u64, 0u64);
+                let (mut oracle_hits, mut clamp_hits, mut avoided) = (0u64, 0u64, 0u64);
+                let mut proposals = 0u64;
+                for oname in optimizers {
+                    ev_p.reset_run(true);
+                    ev_u.reset_run(true);
+                    let t0 = Instant::now();
+                    drive(&mut *opt::by_name(oname, 11).unwrap(), &mut ev_p, &space, budget);
+                    let tp = t0.elapsed().as_secs_f64();
+                    let t0 = Instant::now();
+                    drive(&mut *opt::by_name(oname, 11).unwrap(), &mut ev_u, &space, budget);
+                    let tu = t0.elapsed().as_secs_f64();
+                    // CI guard: pruning must be invisible in the results —
+                    // bit-identical histories and Pareto fronts.
+                    assert_eq!(
+                        history_of(&ev_p),
+                        history_of(&ev_u),
+                        "{wname}/{oname} jobs={jobs}: pruned history diverged"
+                    );
+                    let front = |ev: &EvalEngine| -> Vec<(Option<u64>, u32)> {
+                        ev.pareto().iter().map(|p| (p.latency, p.bram)).collect()
+                    };
+                    assert_eq!(front(&ev_p), front(&ev_u), "{wname}/{oname}: front diverged");
+                    let (sp, su) = (ev_p.stats(), ev_u.stats());
+                    assert!(sp.sims <= su.sims, "{wname}/{oname}: pruning added sims");
+                    secs_p += tp;
+                    secs_u += tu;
+                    sims_p += sp.sims;
+                    sims_u += su.sims;
+                    scen_p += sp.scenario_sims;
+                    scen_u += su.scenario_sims;
+                    oracle_hits += sp.oracle_hits;
+                    clamp_hits += sp.clamp_hits;
+                    avoided += sp.sims_avoided;
+                    proposals += sp.proposals;
+                    if jobs == 1 {
+                        println!(
+                            "  {wname:<14} {oname:<10} sims {:>5} → {:>5}  scen-sims {:>6} → {:>6}  \
+                             orcl {:>4} clmp {:>4}  {} vs {}",
+                            su.sims,
+                            sp.sims,
+                            su.scenario_sims,
+                            sp.scenario_sims,
+                            sp.oracle_hits,
+                            sp.clamp_hits,
+                            fmt_duration(tu),
+                            fmt_duration(tp)
+                        );
+                    }
+                }
+                // Deterministic probe phase (cold caches, both arms): a
+                // collapsed hot channel deadlocks; the all-2 probe is
+                // component-wise below it, so the pruned arm must answer
+                // it from the oracle while the unpruned arm re-simulates.
+                ev_p.reset_run(true);
+                ev_u.reset_run(true);
+                let mut probe_a = space.bounds.clone();
+                probe_a[hot] = 2;
+                let probe_b = vec![2u32; w.num_fifos()];
+                for probe in [&probe_a, &probe_b] {
+                    let rp = ev_p.eval(probe);
+                    let ru = ev_u.eval(probe);
+                    assert_eq!(rp, ru, "{wname}: probe diverged");
+                    assert_eq!(rp.0, None, "{wname}: probe {probe:?} should deadlock");
+                }
+                assert!(
+                    ev_p.stats().oracle_hits >= 1,
+                    "{wname} jobs={jobs}: dominated probe must be oracle-answered"
+                );
+                sims_p += ev_p.stats().sims;
+                sims_u += ev_u.stats().sims;
+                scen_p += ev_p.stats().scenario_sims;
+                scen_u += ev_u.stats().scenario_sims;
+                oracle_hits += ev_p.stats().oracle_hits;
+                clamp_hits += ev_p.stats().clamp_hits;
+                avoided += ev_p.stats().sims_avoided;
+                proposals += ev_p.stats().proposals;
+
+                // §Perf 8 acceptance: pruning answers a nonzero fraction
+                // of proposals, strictly reduces per-scenario replays,
+                // and is never (meaningfully) slower. The wall-clock
+                // bound carries generous slack — the hard guarantees are
+                // the sim counts and bit-identical results above.
+                assert!(
+                    oracle_hits + clamp_hits > 0,
+                    "{wname} jobs={jobs}: pruning never engaged"
+                );
+                assert!(
+                    scen_p < scen_u,
+                    "{wname} jobs={jobs}: pruning must strictly reduce scenario replays \
+                     ({scen_p} vs {scen_u})"
+                );
+                assert!(
+                    secs_p <= secs_u * 2.0 + 0.25,
+                    "{wname} jobs={jobs}: pruning slower than no-prune ({secs_p:.3}s vs {secs_u:.3}s)"
+                );
+                let label = format!("{wname}[{k}]x{jobs}");
+                println!(
+                    "  {label:<18} total: sims {sims_u} → {sims_p}, scenario replays {scen_u} → \
+                     {scen_p}, {oracle_hits} oracle / {clamp_hits} clamp hits, {avoided} avoided, \
+                     wall {} → {}",
+                    fmt_duration(secs_u),
+                    fmt_duration(secs_p)
+                );
+                let mut push = |metric: &str, value: f64, unit: &str| {
+                    csv.row(vec![
+                        metric.to_string(),
+                        label.clone(),
+                        format!("{value:.6e}"),
+                        unit.into(),
+                    ]);
+                    prune_rows.push(Json::obj(vec![
+                        ("metric", Json::Str(metric.into())),
+                        ("design", Json::Str(label.clone())),
+                        ("value", Json::Num(value)),
+                        ("unit", Json::Str(unit.into())),
+                    ]));
+                };
+                push("prune_proposals", proposals as f64, "");
+                push("prune_oracle_hits", oracle_hits as f64, "");
+                push("prune_clamp_hits", clamp_hits as f64, "");
+                push("prune_sims_avoided", avoided as f64, "");
+                push(
+                    "prune_hit_fraction",
+                    (oracle_hits + clamp_hits) as f64 / proposals.max(1) as f64,
+                    "",
+                );
+                push("prune_sims", sims_p as f64, "");
+                push("prune_sims_noprune", sims_u as f64, "");
+                push("prune_scenario_sims", scen_p as f64, "");
+                push("prune_scenario_sims_noprune", scen_u as f64, "");
+                push("prune_optimize_secs", secs_p, "s");
+                push("prune_optimize_secs_noprune", secs_u, "s");
+                push(
+                    "prune_speedup",
+                    secs_u / secs_p.max(1e-12),
+                    "x",
+                );
+            }
+        }
+    }
+
     csv.write("results/perf.csv").unwrap();
     println!("\nwrote results/perf.csv");
+
+    let snapshot4 = Json::obj(vec![
+        ("bench", Json::Str("pruning".into())),
+        ("schema", Json::Str("metric-rows/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(prune_rows)),
+    ]);
+    fifoadvisor::report::write_file("BENCH_4.json", &snapshot4.to_string_pretty()).unwrap();
+    println!("wrote BENCH_4.json");
 
     let snapshot3 = Json::obj(vec![
         ("bench", Json::Str("scenario_bank".into())),
@@ -483,12 +687,13 @@ fn main() {
     println!("wrote BENCH_3.json");
 
     // Machine-readable perf snapshot (the §Perf trajectory file). The
-    // §Perf 7 scenario rows live in BENCH_3.json only, so BENCH_2.json
-    // stays row-for-row comparable with pre-workload snapshots.
+    // §Perf 7 scenario rows live in BENCH_3.json only and the §Perf 8
+    // pruning rows in BENCH_4.json only, so BENCH_2.json stays
+    // row-for-row comparable with pre-workload snapshots.
     let rows_json: Vec<Json> = csv
         .rows()
         .iter()
-        .filter(|r| !r[0].starts_with("scenario_"))
+        .filter(|r| !r[0].starts_with("scenario_") && !r[0].starts_with("prune_"))
         .map(|r| {
             let value = match r[2].parse::<f64>() {
                 Ok(v) => Json::Num(v),

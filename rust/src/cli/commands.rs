@@ -210,6 +210,12 @@ pub fn optimize(args: &Args) -> Result<()> {
     } else {
         Evaluator::for_workload(w.clone(), jobs)
     };
+    // A/B escape hatch: disable the simulation-free pruning layer
+    // (dominance oracle, occupancy clamp, scenario early exit). Results
+    // are identical either way; only the sims/sec differ.
+    if args.has_flag("no-prune") {
+        ev.set_prune(false);
+    }
     let space = Space::from_workload(&w);
     let (base, minp) = ev.eval_baselines();
     ev.reset_run(false);

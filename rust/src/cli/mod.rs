@@ -6,7 +6,7 @@
 //! fifoadvisor simulate --design NAME [--baseline max|min | --depths 2,4,..]
 //! fifoadvisor optimize --design NAME --optimizer grouped_sa [--budget 1000]
 //!                      [--seed 1] [--jobs 4] [--xla] [--alpha 0.7]
-//!                      [--out results/run.json]
+//!                      [--out results/run.json] [--no-prune]
 //! fifoadvisor hunt     --design NAME
 //! ```
 //!
@@ -57,8 +57,12 @@ USAGE:
   fifoadvisor simulate --design NAME [--baseline max|min | --depths D1,D2,..]
   fifoadvisor optimize --design NAME --optimizer OPT [--budget N] [--seed S]
                        [--jobs N] [--xla] [--alpha 0.7] [--out FILE.json]
+                       [--no-prune]
                        (--jobs sizes the persistent worker pool; --threads
-                        is accepted as a legacy alias)
+                        is accepted as a legacy alias. --no-prune disables
+                        the simulation-free pruning layer — dominance
+                        oracle, occupancy clamp, scenario early exit — for
+                        A/B debugging; results are identical either way)
   fifoadvisor hunt     --design NAME
   fifoadvisor sweep    --config sweep.json
 

@@ -35,9 +35,35 @@
 //! any scenario is infeasible. Single-scenario workloads take the exact
 //! single-trace fast path, so `EvalEngine::new(trace)` behaves exactly
 //! as before the workload refactor.
+//!
+//! # Simulation-free pruning
+//!
+//! Every latency-only proposal is threaded through the
+//! [`crate::opt::dominance`] layer before any simulator runs:
+//!
+//! - the monotone [`FeasibilityOracle`] answers proposals component-wise
+//!   ≤ a known deadlock as `Deadlock` instantly (and learns from every
+//!   engine result);
+//! - the occupancy-clamp [`Canonicalizer`] collapses depths above each
+//!   channel's write-count cap onto one canonical memo point per
+//!   SRL↔BRAM read-latency class, so the whole region above the cap
+//!   shares a single cache entry (latency is memoized by canonical key;
+//!   BRAM cost is always computed from the *actual* depths);
+//! - multi-scenario deadlocks early-exit through
+//!   [`ScenarioSim::eval_latency`], probing the historically
+//!   deadlock-prone scenario first.
+//!
+//! Pruning is sound (see the module docs of [`crate::opt::dominance`]):
+//! pruned and unpruned runs produce bit-identical histories and Pareto
+//! fronts — only [`EngineStats::sims`] differs. `--no-prune` /
+//! [`EvalEngine::set_prune`] switch the whole layer off for A/B runs;
+//! the stats-evaluation path (greedy ranking, targeted hunter) always
+//! simulates, since it exists to collect per-channel statistics and
+//! deadlock block info.
 
 use super::{BramBatch, EvalPoint, NativeBram};
 use crate::bram;
+use crate::opt::dominance::{Canonicalizer, FeasibilityOracle};
 use crate::opt::pareto::{pareto_front, ObjPoint};
 use crate::opt::{AskCtx, Optimizer, Space};
 use crate::sim::fast::{BlockInfo, ChannelStats, RunInfo, SimOutcome};
@@ -134,6 +160,8 @@ impl ShardedCache {
 struct Job {
     idx: usize,
     cfg: Box<[u32]>,
+    /// Latency-only early exit: stop at the first deadlocked scenario.
+    early: bool,
 }
 
 struct JobDone {
@@ -143,6 +171,7 @@ struct JobDone {
     nanos: u64,
     run: RunInfo,
     gap: Option<u64>,
+    scen_runs: u32,
 }
 
 /// Result of one pool job, in submission order.
@@ -159,6 +188,10 @@ pub struct JobOutcome {
     /// Worst − best per-scenario latency (the robustness gap; `None`
     /// for cache hits, deadlocks, and single-scenario workloads report 0).
     pub gap: Option<u64>,
+    /// Scenario members actually simulated (may be < the workload's
+    /// scenario count when the early-exit path stopped at a deadlock;
+    /// 0 for cache hits).
+    pub scen_runs: u32,
 }
 
 /// Number of differing positions between two configurations; mismatched
@@ -212,12 +245,18 @@ impl WorkerPool {
             handles.push(thread::spawn(move || {
                 while let Ok(job) = rx.recv() {
                     let t0 = Instant::now();
-                    let (latency, simulated, run, gap) =
+                    let (latency, simulated, run, gap, scen_runs) =
                         match cache.as_ref().and_then(|c| c.get(&job.cfg)) {
-                            Some((lat, _)) => (lat, false, RunInfo::default(), None),
+                            Some((lat, _)) => (lat, false, RunInfo::default(), None, 0),
                             None => {
-                                let lat = sim.simulate(&job.cfg).latency();
-                                (lat, true, sim.last_run(), sim.last_gap())
+                                let lat = sim.eval_latency(&job.cfg, job.early);
+                                (
+                                    lat,
+                                    true,
+                                    sim.last_run(),
+                                    sim.last_gap(),
+                                    sim.last_scenarios_run(),
+                                )
                             }
                         };
                     let nanos = t0.elapsed().as_nanos() as u64;
@@ -229,6 +268,7 @@ impl WorkerPool {
                             nanos,
                             run,
                             gap,
+                            scen_runs,
                         })
                         .is_err()
                     {
@@ -256,7 +296,7 @@ impl WorkerPool {
     /// Evaluate every configuration, returning outcomes in input order.
     /// The calling thread blocks until the whole batch is done.
     pub fn run(&mut self, configs: &[Box<[u32]>]) -> Vec<JobOutcome> {
-        self.run_with_hints(configs, None)
+        self.run_batch(configs, None, false)
     }
 
     /// [`run`](Self::run) with per-job locality hints: `hints[k]`, when
@@ -267,6 +307,21 @@ impl WorkerPool {
         &mut self,
         configs: &[Box<[u32]>],
         hints: Option<&[Option<Box<[u32]>>]>,
+    ) -> Vec<JobOutcome> {
+        self.run_batch(configs, hints, false)
+    }
+
+    /// [`run_with_hints`](Self::run_with_hints) with the latency-only
+    /// early-exit flag: with `early_exit` set, multi-scenario workers
+    /// stop at the first deadlocked scenario
+    /// ([`ScenarioSim::eval_latency`]). Verdicts and latencies are
+    /// identical either way — only the per-scenario replay count
+    /// changes.
+    pub fn run_batch(
+        &mut self,
+        configs: &[Box<[u32]>],
+        hints: Option<&[Option<Box<[u32]>>]>,
+        early_exit: bool,
     ) -> Vec<JobOutcome> {
         let n = configs.len();
         if n == 0 {
@@ -311,6 +366,7 @@ impl WorkerPool {
                 .send(Job {
                     idx,
                     cfg: cfg.clone(),
+                    early: early_exit,
                 })
                 .expect("worker pool channel closed");
         }
@@ -326,6 +382,7 @@ impl WorkerPool {
                 nanos: done.nanos,
                 run: done.run,
                 gap: done.gap,
+                scen_runs: done.scen_runs,
             };
         }
         out
@@ -378,8 +435,10 @@ pub struct EngineStats {
     /// Trace ops the same simulations would have propagated as full
     /// replays (sims × trace ops).
     pub replayable_ops: u64,
-    /// Per-scenario simulator invocations (each workload simulation runs
-    /// every scenario: `sims × num_scenarios`).
+    /// Per-scenario simulator invocations actually run. Without pruning
+    /// every workload simulation runs every scenario
+    /// (`sims × num_scenarios`); the pruned early-exit path may stop at
+    /// the first deadlocked scenario and run fewer.
     pub scenario_sims: u64,
     /// Sum of the robustness gap (worst − best per-scenario latency)
     /// over feasible simulations.
@@ -387,6 +446,17 @@ pub struct EngineStats {
     /// Feasible simulations contributing to
     /// [`robust_gap_sum`](Self::robust_gap_sum).
     pub robust_points: u64,
+    /// Proposals answered `Deadlock` by the dominance oracle — no memo
+    /// entry existed and no simulation ran.
+    pub oracle_hits: u64,
+    /// Proposals whose depth vector was occupancy-clamped onto a
+    /// canonical memo point (evaluated at the canonical key; BRAM still
+    /// from the actual depths).
+    pub clamp_hits: u64,
+    /// Simulations avoided outright: oracle answers plus clamped
+    /// proposals served from an existing canonical evaluation instead of
+    /// a fresh simulation of their own.
+    pub sims_avoided: u64,
 }
 
 impl EngineStats {
@@ -437,15 +507,35 @@ impl EngineStats {
         }
     }
 
+    /// Fraction of proposals answered by the dominance oracle.
+    pub fn oracle_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            0.0
+        } else {
+            self.oracle_hits as f64 / self.proposals as f64
+        }
+    }
+
+    /// Fraction of proposals evaluated at a clamp-canonicalized point.
+    pub fn clamp_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            0.0
+        } else {
+            self.clamp_hits as f64 / self.proposals as f64
+        }
+    }
+
     /// Fold one simulator run's telemetry into the counters.
-    fn note_run(&mut self, run: &RunInfo, scenarios: u32, gap: Option<u64>) {
+    /// `scenarios_run` is the number of scenario members the call
+    /// actually simulated.
+    fn note_run(&mut self, run: &RunInfo, scenarios_run: u32, gap: Option<u64>) {
         if run.incremental {
             self.incr_sims += 1;
             self.dirty_channels += run.dirty_channels as u64;
         }
         self.replayed_ops += run.replayed_ops;
         self.replayable_ops += run.total_ops;
-        self.scenario_sims += scenarios as u64;
+        self.scenario_sims += scenarios_run as u64;
         if let Some(g) = gap {
             self.robust_gap_sum += g;
             self.robust_points += 1;
@@ -503,6 +593,16 @@ pub struct EvalEngine {
     jobs: usize,
     stats: EngineStats,
     start: Instant,
+    /// Master switch for the simulation-free pruning layer (oracle,
+    /// clamp canonicalization, scenario early exit). On by default;
+    /// `--no-prune` / sweep `"prune": false` turn it off for A/B runs.
+    prune: bool,
+    canon: Canonicalizer,
+    oracle: FeasibilityOracle,
+    /// Per-scenario latencies memoized by canonical key — the
+    /// [`Self::per_scenario_latencies`] diagnostic path, so repeated
+    /// frontier-table rendering does not pay full scenario replays.
+    scenario_memo: HashMap<Box<[u32]>, Box<[Option<u64>]>>,
 }
 
 impl EvalEngine {
@@ -548,6 +648,8 @@ impl EvalEngine {
         } else {
             None
         };
+        let canon = Canonicalizer::for_workload(&workload);
+        let oracle = FeasibilityOracle::for_workload(&workload);
         EvalEngine {
             sim,
             workload,
@@ -560,6 +662,10 @@ impl EvalEngine {
             jobs,
             stats: EngineStats::default(),
             start: Instant::now(),
+            prune: true,
+            canon,
+            oracle,
+            scenario_memo: HashMap::new(),
         }
     }
 
@@ -583,18 +689,51 @@ impl EvalEngine {
         self.sim.names()
     }
 
-    /// Per-scenario latencies of one configuration — a diagnostic
-    /// re-simulation that is *not* memoized and *not* recorded in
-    /// history or stats (use it for per-scenario report columns after a
-    /// run).
+    /// Per-scenario latencies of one configuration — a diagnostic that
+    /// is *not* recorded in history or stats (use it for per-scenario
+    /// report columns after a run). Results are memoized by
+    /// clamp-canonical key, so repeated frontier-table rendering does
+    /// not pay full scenario replays; the underlying run uses the full
+    /// [`ScenarioSim::simulate`] path (every scenario, no early exit).
     pub fn per_scenario_latencies(&mut self, depths: &[u32]) -> Vec<(String, Option<u64>)> {
-        let _ = self.sim.simulate(depths);
+        let key: Box<[u32]> = match self.prune.then(|| self.canon.canonical(depths)).flatten() {
+            Some(c) => c,
+            None => depths.into(),
+        };
+        if !self.scenario_memo.contains_key(&key) {
+            let _ = self.sim.simulate(&key);
+            self.scenario_memo
+                .insert(key.clone(), self.sim.scenario_latencies().into());
+        }
+        let lats = &self.scenario_memo[&key];
         self.sim
             .names()
             .iter()
             .cloned()
-            .zip(self.sim.scenario_latencies().iter().copied())
+            .zip(lats.iter().copied())
             .collect()
+    }
+
+    /// Enable/disable the simulation-free pruning layer (on by default).
+    /// Pruning never changes results — histories and fronts are
+    /// bit-identical either way — only how many simulations they cost.
+    pub fn set_prune(&mut self, on: bool) {
+        self.prune = on;
+    }
+
+    /// Whether the pruning layer is active.
+    pub fn prune(&self) -> bool {
+        self.prune
+    }
+
+    /// The dominance oracle's current knowledge (diagnostics/tests).
+    pub fn oracle(&self) -> &FeasibilityOracle {
+        &self.oracle
+    }
+
+    /// The occupancy-clamp canonicalizer in use (diagnostics/tests).
+    pub fn canonicalizer(&self) -> &Canonicalizer {
+        &self.canon
     }
 
     /// Name of the BRAM backend in use.
@@ -616,9 +755,19 @@ impl EvalEngine {
         &self.stats
     }
 
-    /// Simulations per wall-clock second since the run started.
+    /// True simulator invocations per wall-clock second since the run
+    /// started — memo, oracle, and clamp answers are **not** counted
+    /// (they cost no simulation); see
+    /// [`proposals_per_sec`](Self::proposals_per_sec) for the answer
+    /// rate the optimizer observes.
     pub fn sims_per_sec(&self) -> f64 {
         self.stats.sims as f64 / self.elapsed().max(1e-9)
+    }
+
+    /// Proposals answered per wall-clock second (simulated, memoized,
+    /// oracle- and clamp-served alike).
+    pub fn proposals_per_sec(&self) -> f64 {
+        self.stats.proposals as f64 / self.elapsed().max(1e-9)
     }
 
     /// Fraction of total worker capacity spent simulating.
@@ -647,14 +796,18 @@ impl EvalEngine {
         }
     }
 
-    /// Reset history and the start-of-run clock (keep the memo cache —
-    /// incremental reuse across optimizers is part of the design; pass
-    /// `clear_cache` to measure cold-start behaviour).
+    /// Reset history and the start-of-run clock (keep the memo cache and
+    /// the oracle's learned dominance knowledge — incremental reuse
+    /// across optimizers is part of the design; pass `clear_cache` to
+    /// measure cold-start behaviour, which also forgets the oracle and
+    /// the per-scenario memo).
     pub fn reset_run(&mut self, clear_cache: bool) {
         self.history.clear();
         self.stats = EngineStats::default();
         if clear_cache {
             self.cache.clear();
+            self.oracle.clear();
+            self.scenario_memo.clear();
             self.n_sim = 0;
         }
         self.start = Instant::now();
@@ -670,6 +823,25 @@ impl EvalEngine {
         self.history.len()
     }
 
+    /// Simulate one canonical configuration inline, updating the
+    /// counters and learning the result. Returns its latency.
+    fn simulate_miss(&mut self, cfg: &[u32]) -> Option<u64> {
+        let early = self.prune && self.sim.num_scenarios() > 1;
+        let t0 = Instant::now();
+        let lat = self.sim.eval_latency(cfg, early);
+        self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
+        let run = self.sim.last_run();
+        let gap = self.sim.last_gap();
+        let scen = self.sim.last_scenarios_run();
+        self.stats.note_run(&run, scen, gap);
+        self.n_sim += 1;
+        self.stats.sims += 1;
+        if self.prune {
+            self.oracle.note(cfg, lat);
+        }
+        lat
+    }
+
     /// Evaluate one configuration (memoized), recording it in history.
     pub fn eval(&mut self, depths: &[u32]) -> (Option<u64>, u32) {
         let key: Box<[u32]> = depths.into();
@@ -679,18 +851,41 @@ impl EvalEngine {
                 v
             }
             None => {
-                let t0 = Instant::now();
-                let lat = self.sim.simulate(depths).latency();
-                self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
-                let run = self.sim.last_run();
-                let k = self.sim.num_scenarios() as u32;
-                let gap = self.sim.last_gap();
-                self.stats.note_run(&run, k, gap);
-                let br = bram::bram_total(depths, &self.widths);
-                self.n_sim += 1;
-                self.stats.sims += 1;
-                self.cache.insert(key.clone(), (lat, br));
-                (lat, br)
+                if self.prune && self.oracle.is_dominated_infeasible(depths) {
+                    // Dominated by a known deadlock: no simulation.
+                    self.stats.oracle_hits += 1;
+                    self.stats.sims_avoided += 1;
+                    let br = bram::bram_total(depths, &self.widths);
+                    self.cache.insert(key.clone(), (None, br));
+                    (None, br)
+                } else if let Some(canon) =
+                    self.prune.then(|| self.canon.canonical(depths)).flatten()
+                {
+                    // Occupancy-clamped: evaluate at the canonical point,
+                    // BRAM from the actual depths.
+                    self.stats.clamp_hits += 1;
+                    let lat = match self.cache.get(&canon) {
+                        Some((lat, _)) => {
+                            self.stats.cache_hits += 1;
+                            self.stats.sims_avoided += 1;
+                            lat
+                        }
+                        None => {
+                            let lat = self.simulate_miss(&canon);
+                            let cbr = bram::bram_total(&canon, &self.widths);
+                            self.cache.insert(canon, (lat, cbr));
+                            lat
+                        }
+                    };
+                    let br = bram::bram_total(depths, &self.widths);
+                    self.cache.insert(key.clone(), (lat, br));
+                    (lat, br)
+                } else {
+                    let lat = self.simulate_miss(depths);
+                    let br = bram::bram_total(depths, &self.widths);
+                    self.cache.insert(key.clone(), (lat, br));
+                    (lat, br)
+                }
             }
         };
         self.stats.proposals += 1;
@@ -736,32 +931,88 @@ impl EvalEngine {
         }
         self.stats.batches += 1;
 
-        // In-batch dedup + memo lookup (each miss keeps its hint).
+        // How a proposal that missed the raw memo lookup gets its cache
+        // entry filled after the batch resolves.
+        enum Fill {
+            /// Copy the latency of this canonical configuration.
+            Canon(Box<[u32]>),
+            /// Dominated by a known deadlock: latency is `None`.
+            OracleDeadlock,
+        }
+
+        // Phase 1 — classify every proposal: raw memo hit, in-batch
+        // duplicate, oracle answer, clamp merge onto a canonical point,
+        // or a genuine miss scheduled for simulation (deduplicated by
+        // canonical key). Learning happens after the batch, so the
+        // classification is independent of this batch's own results and
+        // identical between serial and `--jobs N` runs.
         let mut misses: Vec<Box<[u32]>> = Vec::new();
         let mut miss_hints: Vec<Option<Box<[u32]>>> = Vec::new();
+        let mut extras: Vec<(Box<[u32]>, Fill)> = Vec::new();
         {
-            let mut seen: HashSet<&[u32]> = HashSet::new();
+            let mut seen_raw: HashSet<&[u32]> = HashSet::new();
+            let mut scheduled: HashSet<Box<[u32]>> = HashSet::new();
             for (i, c) in configs.iter().enumerate() {
-                if self.cache.get(c).is_none() && seen.insert(c.as_ref()) {
-                    misses.push(c.clone());
-                    miss_hints.push(hints.get(i).cloned().flatten());
+                if self.cache.get(c).is_some() || !seen_raw.insert(c.as_ref()) {
+                    self.stats.cache_hits += 1;
+                    continue;
+                }
+                if self.prune && self.oracle.is_dominated_infeasible(c) {
+                    self.stats.oracle_hits += 1;
+                    self.stats.sims_avoided += 1;
+                    extras.push((c.clone(), Fill::OracleDeadlock));
+                    continue;
+                }
+                match self.prune.then(|| self.canon.canonical(c)).flatten() {
+                    Some(canon) => {
+                        self.stats.clamp_hits += 1;
+                        let known = self.cache.get(&canon).is_some()
+                            || scheduled.contains(canon.as_ref());
+                        if known {
+                            // The canonical point is (or will be) known:
+                            // this proposal needs no simulation of its own.
+                            self.stats.cache_hits += 1;
+                            self.stats.sims_avoided += 1;
+                        } else {
+                            scheduled.insert(canon.clone());
+                            misses.push(canon.clone());
+                            miss_hints.push(hints.get(i).cloned().flatten());
+                        }
+                        extras.push((c.clone(), Fill::Canon(canon)));
+                    }
+                    None => {
+                        if scheduled.contains(c.as_ref()) {
+                            // Raw config equal to another proposal's
+                            // canonical point, already scheduled.
+                            self.stats.cache_hits += 1;
+                        } else {
+                            scheduled.insert(c.clone());
+                            misses.push(c.clone());
+                            miss_hints.push(hints.get(i).cloned().flatten());
+                        }
+                    }
                 }
             }
         }
-        self.stats.cache_hits += (configs.len() - misses.len()) as u64;
 
-        if !misses.is_empty() {
-            let k = self.sim.num_scenarios() as u32;
-            let lats: Vec<Option<u64>> = match &mut self.pool {
+        // Phase 2 — simulate the canonical misses (pool or inline).
+        let early = self.prune && self.sim.num_scenarios() > 1;
+        let lats: Vec<Option<u64>> = if misses.is_empty() {
+            Vec::new()
+        } else {
+            match &mut self.pool {
                 Some(pool) if misses.len() > 1 => {
-                    let outcomes = pool.run_with_hints(&misses, Some(&miss_hints[..]));
+                    let outcomes = pool.run_batch(&misses, Some(&miss_hints[..]), early);
                     for o in &outcomes {
                         if o.simulated {
                             self.n_sim += 1;
                             self.stats.sims += 1;
-                            self.stats.note_run(&o.run, k, o.gap);
+                            self.stats.note_run(&o.run, o.scen_runs, o.gap);
+                            // Audit: only time spent simulating counts as
+                            // busy — a worker answering from the shared
+                            // cache did no simulation work.
+                            self.stats.busy_nanos += o.nanos;
                         }
-                        self.stats.busy_nanos += o.nanos;
                     }
                     outcomes.into_iter().map(|o| o.latency).collect()
                 }
@@ -769,20 +1020,51 @@ impl EvalEngine {
                     let t0 = Instant::now();
                     let mut lats: Vec<Option<u64>> = Vec::with_capacity(misses.len());
                     for c in misses.iter() {
-                        lats.push(self.sim.simulate(c).latency());
+                        lats.push(self.sim.eval_latency(c, early));
                         let run = self.sim.last_run();
                         let gap = self.sim.last_gap();
-                        self.stats.note_run(&run, k, gap);
+                        let scen = self.sim.last_scenarios_run();
+                        self.stats.note_run(&run, scen, gap);
                     }
                     self.n_sim += misses.len() as u64;
                     self.stats.sims += misses.len() as u64;
                     self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
                     lats
                 }
-            };
-            let brams = self.backend.bram_totals(&misses, &self.widths);
-            for ((c, lat), br) in misses.into_iter().zip(lats).zip(brams) {
+            }
+        };
+
+        // Phase 3 — learn every simulated result (in deterministic miss
+        // order), then one batched backend call for every configuration
+        // that needs a fresh BRAM total: the canonical misses plus the
+        // raw keys served through the oracle or a canonical point (their
+        // BRAM comes from the *actual* depths, never the clamped ones).
+        if self.prune {
+            for (c, lat) in misses.iter().zip(&lats) {
+                self.oracle.note(c, *lat);
+            }
+        }
+        if !misses.is_empty() || !extras.is_empty() {
+            let n_miss = misses.len();
+            let mut bram_in: Vec<Box<[u32]>> = Vec::with_capacity(n_miss + extras.len());
+            bram_in.extend(misses.iter().cloned());
+            bram_in.extend(extras.iter().map(|(raw, _)| raw.clone()));
+            let brams = self.backend.bram_totals(&bram_in, &self.widths);
+            let (miss_brams, extra_brams) = brams.split_at(n_miss);
+            for ((c, lat), &br) in misses.into_iter().zip(lats).zip(miss_brams) {
                 self.cache.insert(c, (lat, br));
+            }
+            for ((raw, fill), &br) in extras.into_iter().zip(extra_brams) {
+                let lat = match fill {
+                    Fill::OracleDeadlock => None,
+                    Fill::Canon(canon) => {
+                        self.cache
+                            .get(&canon)
+                            .expect("canonical point must be cached")
+                            .0
+                    }
+                };
+                self.cache.insert(raw, (lat, br));
             }
         }
 
@@ -810,16 +1092,23 @@ impl EvalEngine {
     }
 
     fn eval_one_with_stats(&mut self, depths: &[u32]) -> EvalResult {
+        // Stats evaluations always simulate — their purpose is the
+        // per-channel statistics and deadlock block info, which the
+        // pruning layer cannot synthesize. The result still feeds the
+        // oracle.
         let t0 = Instant::now();
         let (out, stats) = self.sim.simulate_with_stats(depths);
         self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
         let run = self.sim.last_run();
-        let k = self.sim.num_scenarios() as u32;
+        let scen = self.sim.last_scenarios_run();
         let gap = self.sim.last_gap();
-        self.stats.note_run(&run, k, gap);
+        self.stats.note_run(&run, scen, gap);
         self.n_sim += 1;
         self.stats.sims += 1;
         let lat = out.latency();
+        if self.prune {
+            self.oracle.note(depths, lat);
+        }
         let br = bram::bram_total(depths, &self.widths);
         let key: Box<[u32]> = depths.into();
         self.cache.insert(key.clone(), (lat, br));
@@ -849,11 +1138,14 @@ impl EvalEngine {
     pub fn eval_with_stats(&mut self, depths: &[u32]) -> (SimOutcome, ChannelStats) {
         let (out, stats) = self.sim.simulate_with_stats(depths);
         let run = self.sim.last_run();
-        let k = self.sim.num_scenarios() as u32;
+        let scen = self.sim.last_scenarios_run();
         let gap = self.sim.last_gap();
-        self.stats.note_run(&run, k, gap);
+        self.stats.note_run(&run, scen, gap);
         self.n_sim += 1;
         self.stats.sims += 1;
+        if self.prune {
+            self.oracle.note(depths, out.latency());
+        }
         let br = bram::bram_total(depths, &self.widths);
         self.stats.proposals += 1;
         self.history.push(EvalPoint {
@@ -1147,6 +1439,130 @@ mod tests {
             })
             .collect();
         assert_eq!(histories[0], histories[1]);
+    }
+
+    #[test]
+    fn oracle_answers_dominated_deadlocks_without_simulating() {
+        let t = trace_of("fig2"); // n = 16: x < 15 deadlocks
+        let mut ev = EvalEngine::new(t.clone());
+        let (lat, _) = ev.eval(&[2, 16]);
+        assert_eq!(lat, None);
+        assert_eq!(ev.n_sim, 1);
+        // [2, 2] ≤ [2, 16]: answered by the oracle, no simulation.
+        let (lat, br) = ev.eval(&[2, 2]);
+        assert_eq!(lat, None);
+        assert_eq!(br, 0);
+        assert_eq!(ev.n_sim, 1, "dominated deadlock must not simulate");
+        let s = ev.stats();
+        assert_eq!(s.oracle_hits, 1);
+        assert_eq!(s.sims_avoided, 1);
+        assert_eq!(s.oracle_rate(), 0.5);
+        // The answer is memoized like any other: a repeat is a cache hit.
+        ev.eval(&[2, 2]);
+        assert_eq!(ev.stats().oracle_hits, 1);
+        assert_eq!(ev.stats().cache_hits, 1);
+        // History records the oracle answer exactly like a simulation.
+        assert_eq!(ev.history[1].latency, None);
+        // Identical to an unpruned engine.
+        let mut cold = EvalEngine::new(t);
+        cold.set_prune(false);
+        assert_eq!(cold.eval(&[2, 2]).0, None);
+        assert_eq!(cold.stats().oracle_hits, 0);
+        assert_eq!(cold.n_sim, 1);
+    }
+
+    /// Producer→consumer pipe with a designer depth hint far above the
+    /// observed write count — the clamp region `(writes, hint]`.
+    fn hinted_pipe_trace(n: u64, hint: u32) -> Arc<Trace> {
+        use crate::ir::{DesignBuilder, Expr};
+        let mut b = DesignBuilder::new("hinted", 0);
+        let c = b.channel_with_depth("c", 32, hint);
+        b.process("p", move |p| {
+            p.for_n(n, |p, _| p.write(c, Expr::c(0)));
+        });
+        b.process("q", move |p| {
+            p.for_n(n, |p, _| {
+                let _ = p.read(c);
+            })
+        });
+        Arc::new(crate::trace::collect_trace(&b.build(), &[]).unwrap())
+    }
+
+    #[test]
+    fn clamp_collapses_the_region_above_the_write_count() {
+        let t = hinted_pipe_trace(8, 64); // cap = 8, bound = 64
+        let mut ev = EvalEngine::new(t.clone());
+        let (lat16, _) = ev.eval(&[16]); // canonicalizes to [8]
+        assert_eq!(ev.n_sim, 1);
+        let (lat32, _) = ev.eval(&[32]); // same canonical point: no sim
+        assert_eq!(ev.n_sim, 1, "clamp-equivalent configs share one sim");
+        let (lat8, _) = ev.eval(&[8]); // the canonical point itself
+        assert_eq!(ev.n_sim, 1);
+        assert_eq!(lat16, lat32);
+        assert_eq!(lat16, lat8);
+        // Ground truth: identical to a cold simulation of the raw config.
+        let want = FastSim::new(t.clone()).simulate(&[32]).latency();
+        assert_eq!(lat32, want);
+        let s = ev.stats();
+        assert_eq!(s.clamp_hits, 2);
+        assert_eq!(s.sims_avoided, 1);
+        // Depth 64 × 32 bits crosses the SRL threshold: its canonical
+        // point is the shallowest BRAM-class depth (33), a *different*
+        // memo point — and one cycle slower (footnote 2).
+        let (lat64, _) = ev.eval(&[64]);
+        assert_eq!(ev.n_sim, 2);
+        assert_eq!(lat64, lat16.map(|l| l + 1));
+        assert_eq!(lat64, FastSim::new(t.clone()).simulate(&[64]).latency());
+        // The batch path merges clamp-equivalent proposals too.
+        let mut ev2 = EvalEngine::parallel(t, 2);
+        let batch: Vec<Box<[u32]>> = vec![[16u32].into(), [32].into(), [24].into(), [8].into()];
+        let out = ev2.eval_batch(&batch);
+        assert!(out.iter().all(|&(l, _)| l == lat16));
+        assert_eq!(ev2.n_sim, 1, "whole SRL-class clamp region is one canonical sim");
+        assert_eq!(ev2.stats().clamp_hits, 3);
+    }
+
+    #[test]
+    fn early_exit_and_oracle_compose_on_workloads() {
+        let w = fig2_workload(&[8, 16]);
+        let mut ev = EvalEngine::for_workload(w.clone(), 1);
+        // Feasible on n=8, deadlocks on n=16: probed in index order the
+        // first time, so both scenarios run.
+        let (lat, _) = ev.eval(&[7, 2]);
+        assert_eq!(lat, None);
+        assert_eq!(ev.stats().scenario_sims, 2);
+        // Dominated by the learned deadlock: no simulation at all.
+        let (lat, _) = ev.eval(&[6, 2]);
+        assert_eq!(lat, None);
+        assert_eq!(ev.stats().oracle_hits, 1);
+        assert_eq!(ev.stats().scenario_sims, 2);
+        // Not dominated ([7,3] has y deeper): simulated, but the
+        // deadlock-prone scenario is now probed first — one replay only.
+        let (lat, _) = ev.eval(&[7, 3]);
+        assert_eq!(lat, None);
+        assert_eq!(ev.stats().scenario_sims, 3, "early exit after 1 probe");
+        // An unpruned engine reaches the same verdicts with full replays.
+        let mut off = EvalEngine::for_workload(w, 1);
+        off.set_prune(false);
+        for cfg in [[7u32, 2], [6, 2], [7, 3]] {
+            assert_eq!(off.eval(&cfg).0, None, "{cfg:?}");
+        }
+        assert_eq!(off.stats().scenario_sims, 6, "no early exit when off");
+        assert_eq!(off.stats().oracle_hits, 0);
+    }
+
+    #[test]
+    fn accounting_invariant_holds_with_pruning() {
+        // Every proposal is exactly one of: memo hit, oracle answer, or
+        // simulation.
+        let w = fig2_workload(&[8, 16, 12]);
+        let space = Space::from_workload(&w);
+        let mut ev = EvalEngine::for_workload(w, 1);
+        let mut o = crate::opt::random::RandomSearch::new(7, false);
+        drive(&mut o, &mut ev, &space, 150);
+        let s = ev.stats();
+        assert_eq!(s.cache_hits + s.oracle_hits + s.sims, s.proposals);
+        assert!(ev.proposals_per_sec() > 0.0);
     }
 
     #[test]

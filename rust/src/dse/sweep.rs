@@ -20,7 +20,9 @@
 //! suite's default args) or an object with a `"scenarios"` list of
 //! kernel-argument arrays — each array becomes one scenario of a
 //! [`Workload`] and the run sizes for the worst case over all of them.
-//! (`"threads"` is accepted as a legacy alias of `"jobs"`.)
+//! (`"threads"` is accepted as a legacy alias of `"jobs"`; `"prune":
+//! false` disables the simulation-free pruning layer for A/B runs, like
+//! the CLI's `--no-prune`.)
 
 use crate::bench_suite;
 use crate::dse::{drive, Evaluator};
@@ -51,6 +53,10 @@ pub struct SweepConfig {
     /// Persistent simulation workers per engine (1 = serial).
     pub jobs: usize,
     pub alpha: f64,
+    /// Simulation-free pruning (oracle + clamp + early exit). On by
+    /// default; `"prune": false` is the sweep-config escape hatch
+    /// mirroring the CLI's `--no-prune`.
+    pub prune: bool,
     pub out_dir: Option<String>,
 }
 
@@ -141,6 +147,7 @@ impl SweepConfig {
                 .unwrap_or_else(|| vec![1]),
             jobs,
             alpha: j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.7),
+            prune: j.get("prune").and_then(|v| v.as_bool()).unwrap_or(true),
             out_dir: j
                 .get("out_dir")
                 .and_then(|v| v.as_str())
@@ -170,6 +177,12 @@ pub struct SweepRow {
     /// Fraction of trace ops actually re-propagated (1.0 = all full
     /// replays).
     pub replay_frac: f64,
+    /// Fraction of proposals answered by the dominance oracle.
+    pub oracle_rate: f64,
+    /// Fraction of proposals evaluated at a clamp-canonical point.
+    pub clamp_rate: f64,
+    /// Simulations avoided outright by the pruning layer.
+    pub sims_avoided: u64,
     pub elapsed_secs: f64,
     pub front_size: usize,
     pub star_latency: u64,
@@ -194,6 +207,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
         let workload = Arc::new(workload);
         let space = Space::from_workload(&workload);
         let mut ev = Evaluator::for_workload(workload.clone(), cfg.jobs);
+        ev.set_prune(cfg.prune);
         let (maxp, minp) = ev.eval_baselines();
         let (base_lat, base_bram) = (
             maxp.latency
@@ -222,6 +236,9 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                     sims: ev.n_sim,
                     incr_rate: ev.stats().incremental_rate(),
                     replay_frac: ev.stats().replay_fraction(),
+                    oracle_rate: ev.stats().oracle_rate(),
+                    clamp_rate: ev.stats().clamp_rate(),
+                    sims_avoided: ev.stats().sims_avoided,
                     elapsed_secs: dt,
                     front_size: front.len(),
                     star_latency: star.0,
@@ -266,6 +283,9 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                 r.sims.to_string(),
                 format!("{:.0}%", r.incr_rate * 100.0),
                 format!("{:.0}%", r.replay_frac * 100.0),
+                format!("{:.0}%", r.oracle_rate * 100.0),
+                format!("{:.0}%", r.clamp_rate * 100.0),
+                r.sims_avoided.to_string(),
                 r.front_size.to_string(),
                 format!("{:.4}", r.star_latency as f64 / r.base_latency as f64),
                 format!(
@@ -278,8 +298,8 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
         .collect();
     report::markdown_table(
         &[
-            "design", "optimizer", "seed", "scen", "secs", "sims", "incr%", "replay%", "front",
-            "lat×", "BRAM↓", "rescue",
+            "design", "optimizer", "seed", "scen", "secs", "sims", "incr%", "replay%", "orcl%",
+            "clmp%", "avoid", "front", "lat×", "BRAM↓", "rescue",
         ],
         &table_rows,
     )
@@ -308,10 +328,17 @@ mod tests {
         assert_eq!(cfg.budget, 50);
         assert_eq!(cfg.alpha, 0.7);
         assert_eq!(cfg.jobs, 1, "threads accepted as legacy alias");
+        assert!(cfg.prune, "pruning defaults on");
 
         let j = Json::parse(r#"{"designs": ["fig2"], "optimizers": ["greedy"], "jobs": 4}"#)
             .unwrap();
         assert_eq!(SweepConfig::from_json(&j).unwrap().jobs, 4);
+
+        let j = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy"], "prune": false}"#,
+        )
+        .unwrap();
+        assert!(!SweepConfig::from_json(&j).unwrap().prune);
 
         let bad = Json::parse(r#"{"designs": ["nope"], "optimizers": ["greedy"]}"#).unwrap();
         assert!(SweepConfig::from_json(&bad).is_err());
@@ -339,6 +366,28 @@ mod tests {
         let md = rows_to_markdown(&rows);
         assert!(md.contains("fig2"));
         assert!(md.contains("×→✓"));
+    }
+
+    #[test]
+    fn prune_toggle_changes_cost_never_results() {
+        let grid = |prune: bool| {
+            let j = Json::parse(&format!(
+                r#"{{"designs": [{{"design": "fig2", "scenarios": [[8], [16]]}}],
+                    "optimizers": ["grouped_sa"], "budget": 80, "seeds": [1],
+                    "jobs": 1, "prune": {prune}}}"#
+            ))
+            .unwrap();
+            run_sweep(&SweepConfig::from_json(&j).unwrap()).unwrap()
+        };
+        let on = grid(true);
+        let off = grid(false);
+        assert_eq!(on[0].star_latency, off[0].star_latency);
+        assert_eq!(on[0].star_bram, off[0].star_bram);
+        assert_eq!(on[0].front_size, off[0].front_size);
+        assert_eq!(on[0].evals, off[0].evals);
+        assert!(on[0].sims <= off[0].sims, "pruning must never add sims");
+        assert_eq!(off[0].oracle_rate, 0.0);
+        assert_eq!(off[0].sims_avoided, 0);
     }
 
     #[test]

@@ -33,16 +33,25 @@
 //!   annealing, grouped SA, greedy) plus baselines, Pareto extraction and
 //!   the α/β scoring. All optimizers speak the batch-first **ask/tell**
 //!   protocol ([`opt::Optimizer`]): `ask` proposes a batch, the engine
-//!   evaluates it, `tell` hands the outcomes back.
+//!   evaluates it, `tell` hands the outcomes back. [`opt::dominance`]
+//!   hosts the simulation-free pruning layer: the monotone
+//!   [`FeasibilityOracle`](opt::dominance::FeasibilityOracle) (bounded
+//!   dominance antichains over known deadlocks / known-feasible configs)
+//!   and the occupancy-clamp
+//!   [`Canonicalizer`](opt::dominance::Canonicalizer).
 //! - [`dse`] — the DSE engine layer: [`dse::EvalEngine`] owns the
 //!   black-box evaluation `x → (f_lat, f_bram)` over a workload — a
 //!   persistent worker pool (threads spawned once, each with a cloned
 //!   per-scenario [`ScenarioSim`](sim::ScenarioSim) bank), a sharded memo
-//!   cache keyed by depth vector, in-batch dedup, batched BRAM backend
-//!   calls, and engine statistics (including per-scenario sim counts and
-//!   the robustness gap) — while [`dse::drive`] is the single loop that
-//!   runs any optimizer against it with centralized budget/history
-//!   accounting (`--jobs N` on the CLI sizes the pool).
+//!   cache keyed by *clamp-canonical* depth vector, the dominance-oracle
+//!   pre-filter (proposals dominated by a known deadlock are answered
+//!   without simulating; `--no-prune` disables), scenario early exit on
+//!   the latency-only path, in-batch dedup, batched BRAM backend
+//!   calls, and engine statistics (including per-scenario sim counts,
+//!   oracle/clamp hit rates, and the robustness gap) — while
+//!   [`dse::drive`] is the single loop that runs any optimizer against
+//!   it with centralized budget/history accounting (`--jobs N` on the
+//!   CLI sizes the pool).
 //! - [`runtime`] — the batched-analytics runtime: a native interpreter
 //!   of the AOT-exported JAX/Pallas analytics computation (BRAM totals,
 //!   β-grid objectives, dominance mask), shape-bucketed like the

@@ -1,0 +1,523 @@
+//! Simulation-free proposal pruning: the monotone **feasibility oracle**
+//! and the **occupancy-clamp canonicalizer**.
+//!
+//! Both exploit structural facts about the commit-time constraint system
+//! (see `sim`'s module docs) that let the DSE engine answer many
+//! optimizer proposals without running a simulation at all:
+//!
+//! 1. **Deadlock is monotone in FIFO depths.** Whether a process ever
+//!    blocks is decided purely by *op counts*: a write as ordinal `j` on
+//!    a channel of depth `d` needs read `j − d` committed, a read needs
+//!    its write committed — commit *times* (and hence the SRL/BRAM read
+//!    latency) never gate progress. Shrinking any depth only raises the
+//!    read ordinal a write waits on, so the committed-prefix fixpoint
+//!    shrinks monotonically: if `y` deadlocks, every `x ≤ y`
+//!    (component-wise) deadlocks too, and if `y` is feasible, every
+//!    `x ≥ y` is feasible. The [`FeasibilityOracle`] maintains two
+//!    bounded Pareto antichains — maximal known-deadlock configurations
+//!    and minimal known-feasible ones — and answers dominance queries in
+//!    O(entries × channels).
+//!
+//! 2. **The schedule is invariant above the write count.** The full-FIFO
+//!    constraint on write ordinal `j` exists only when `j ≥ depth`, so
+//!    any depth at or above the channel's total write count makes the
+//!    channel's constraint set *empty* — the least-fixpoint schedule
+//!    (latency, per-scenario latencies, blocked sets, statistics) is
+//!    identical for every such depth, channel by channel and regardless
+//!    of the other channels' depths, **provided the SRL↔BRAM read-latency
+//!    class does not change**. The [`Canonicalizer`] clamps each depth
+//!    above its per-channel write-count cap down to the smallest
+//!    class-preserving representative, collapsing the entire region above
+//!    the cap onto one memo entry per read-latency class. (BRAM cost is
+//!    *not* invariant — the engine always computes it from the actual
+//!    depths.)
+//!
+//! For multi-scenario workloads the cap is the max write count over
+//! scenarios, so the clamped depth stays constraint-free in *every*
+//! scenario. The oracle works in "deadlock space" — depths clamped to the
+//! caps with no class caveat, since deadlock ignores read latency — which
+//! makes each learned deadlock dominate the whole region above the caps.
+//!
+//! The latency recorded on feasible entries is an upper bound for
+//! dominating configurations **only under uniform read latency**
+//! ([`crate::sim::SimOptions::uniform_read_latency`]); with the SRL/BRAM
+//! distinction enabled a deeper FIFO can be one cycle slower (paper
+//! footnote 2), so the engine treats it as advisory metadata.
+
+use crate::bram::SRL_THRESHOLD_BITS;
+use crate::trace::workload::Workload;
+use crate::trace::Trace;
+
+/// Entries kept per antichain before the eviction policy engages.
+pub const DEFAULT_ORACLE_CAPACITY: usize = 256;
+
+/// `a ≤ b` component-wise.
+#[inline]
+fn dominated_by(a: &[u32], b: &[u32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+// ---------------------------------------------------------------------------
+// Occupancy-clamp canonicalization
+// ---------------------------------------------------------------------------
+
+/// Clamps depths above the per-channel write-count cap onto a canonical
+/// class-preserving representative (fact 2 above). Construct once per
+/// trace/workload; `canonical` is allocation-free when nothing clamps.
+#[derive(Debug, Clone)]
+pub struct Canonicalizer {
+    /// Per-channel occupancy cap: the max write count over scenarios
+    /// (floored at 2). Depths ≥ the cap are schedule-equivalent within a
+    /// read-latency class.
+    caps: Box<[u32]>,
+    /// Per-channel largest SRL-mapped depth (`max(2, ⌊1024 / width⌋)`);
+    /// `srl_max + 1` is the smallest BRAM-class depth.
+    srl_max: Box<[u32]>,
+}
+
+/// One channel's clamp cap from its observed write count (floored at 2,
+/// saturated at `u32::MAX`). The **single** definition both the
+/// canonicalizer and the oracle use — they must agree byte-for-byte, or
+/// a raw proposal and its canonical point could classify differently.
+#[inline]
+fn write_cap(writes: u64) -> u32 {
+    (writes.min(u32::MAX as u64) as u32).max(2)
+}
+
+/// Per-channel clamp caps from one trace's write counts.
+fn trace_caps(trace: &Trace) -> Vec<u32> {
+    trace.channels.iter().map(|c| write_cap(c.writes)).collect()
+}
+
+/// Merged (max-over-scenarios) per-channel clamp caps for a workload.
+fn write_caps(workload: &Workload) -> Vec<u32> {
+    let mut caps = vec![2u32; workload.num_fifos()];
+    for s in workload.scenarios() {
+        for (cap, ch) in caps.iter_mut().zip(&s.trace.channels) {
+            *cap = (*cap).max(write_cap(ch.writes));
+        }
+    }
+    caps
+}
+
+impl Canonicalizer {
+    /// Build from explicit caps and channel widths.
+    pub fn new(caps: Vec<u32>, widths: &[u32]) -> Canonicalizer {
+        assert_eq!(caps.len(), widths.len());
+        let srl_max = widths
+            .iter()
+            .map(|&w| ((SRL_THRESHOLD_BITS / w.max(1) as u64).min(u32::MAX as u64) as u32).max(2))
+            .collect();
+        Canonicalizer {
+            caps: caps.into(),
+            srl_max,
+        }
+    }
+
+    /// Caps from one trace's observed write counts.
+    pub fn for_trace(trace: &Trace) -> Canonicalizer {
+        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        Canonicalizer::new(trace_caps(trace), &widths)
+    }
+
+    /// Caps from a workload's merged (max-over-scenarios) write counts.
+    pub fn for_workload(workload: &Workload) -> Canonicalizer {
+        let widths: Vec<u32> = workload
+            .primary()
+            .channels
+            .iter()
+            .map(|c| c.width_bits)
+            .collect();
+        Canonicalizer::new(write_caps(workload), &widths)
+    }
+
+    /// The per-channel clamp caps.
+    pub fn caps(&self) -> &[u32] {
+        &self.caps
+    }
+
+    /// Canonical representative of one channel's depth: depths at or
+    /// below the cap are their own representative; above it, the SRL
+    /// class collapses to the cap and the BRAM class to
+    /// `max(cap, srl_max + 1)` (the shallowest depth of the same class
+    /// that is still ≥ the cap).
+    #[inline]
+    pub fn canonical_depth(&self, ch: usize, d: u32) -> u32 {
+        let cap = self.caps[ch];
+        if d <= cap {
+            return d;
+        }
+        let srl_max = self.srl_max[ch];
+        if d <= srl_max {
+            cap
+        } else {
+            cap.max(srl_max + 1)
+        }
+    }
+
+    /// Canonicalize a full configuration. Returns `None` when the
+    /// configuration is already canonical (the common case — no
+    /// allocation).
+    pub fn canonical(&self, depths: &[u32]) -> Option<Box<[u32]>> {
+        debug_assert_eq!(depths.len(), self.caps.len());
+        let changed = depths
+            .iter()
+            .enumerate()
+            .any(|(ch, &d)| self.canonical_depth(ch, d) != d);
+        if !changed {
+            return None;
+        }
+        Some(
+            depths
+                .iter()
+                .enumerate()
+                .map(|(ch, &d)| self.canonical_depth(ch, d))
+                .collect(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Monotone feasibility oracle
+// ---------------------------------------------------------------------------
+
+/// Answer of a dominance query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OracleVerdict {
+    /// Component-wise ≤ a known deadlock: certainly deadlocks.
+    Infeasible,
+    /// Component-wise ≥ a known-feasible configuration: certainly
+    /// feasible. `latency_bound` is the dominated entry's latency — an
+    /// upper bound only under uniform read latency (see module docs).
+    Feasible { latency_bound: Option<u64> },
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    cfg: Box<[u32]>,
+    /// Aggregate latency of the learned run (`None` on the infeasible
+    /// antichain).
+    latency: Option<u64>,
+    hits: u64,
+    stamp: u64,
+}
+
+/// Two bounded Pareto antichains over "deadlock space" (depths clamped to
+/// the write-count caps): maximal known-infeasible configurations and
+/// minimal known-feasible ones. Learns from every engine result; answers
+/// dominance queries in O(entries × channels). Eviction removes the entry
+/// with the fewest hits (oldest stamp on ties), so the antichains stay
+/// bounded and deterministic.
+#[derive(Debug, Clone)]
+pub struct FeasibilityOracle {
+    caps: Box<[u32]>,
+    capacity: usize,
+    infeasible: Vec<Entry>,
+    feasible: Vec<Entry>,
+    clock: u64,
+    queries: u64,
+    infeasible_hits: u64,
+    feasible_hits: u64,
+    scratch: Vec<u32>,
+}
+
+impl FeasibilityOracle {
+    /// Oracle over the given per-channel caps with the default antichain
+    /// capacity.
+    pub fn new(caps: Vec<u32>) -> FeasibilityOracle {
+        Self::with_capacity(caps, DEFAULT_ORACLE_CAPACITY)
+    }
+
+    /// Oracle with an explicit per-antichain entry cap.
+    pub fn with_capacity(caps: Vec<u32>, capacity: usize) -> FeasibilityOracle {
+        let n = caps.len();
+        FeasibilityOracle {
+            caps: caps.into(),
+            capacity: capacity.max(1),
+            infeasible: Vec::new(),
+            feasible: Vec::new(),
+            clock: 0,
+            queries: 0,
+            infeasible_hits: 0,
+            feasible_hits: 0,
+            scratch: vec![0; n],
+        }
+    }
+
+    /// Caps from a workload's merged write counts.
+    pub fn for_workload(workload: &Workload) -> FeasibilityOracle {
+        Self::new(write_caps(workload))
+    }
+
+    /// Caps from one trace's write counts.
+    pub fn for_trace(trace: &Trace) -> FeasibilityOracle {
+        Self::new(trace_caps(trace))
+    }
+
+    fn clamp_into_scratch(&mut self, depths: &[u32]) {
+        debug_assert_eq!(depths.len(), self.caps.len());
+        self.scratch.clear();
+        self.scratch
+            .extend(depths.iter().zip(self.caps.iter()).map(|(&d, &c)| d.min(c)));
+    }
+
+    /// Hot-path query: is this configuration component-wise ≤ a known
+    /// deadlock? Scans only the infeasible antichain — the engine
+    /// consumes only `Infeasible` verdicts, so it skips the
+    /// feasible-side scan entirely.
+    pub fn is_dominated_infeasible(&mut self, depths: &[u32]) -> bool {
+        self.clamp_into_scratch(depths);
+        self.queries += 1;
+        self.clock += 1;
+        self.scan_infeasible()
+    }
+
+    /// Dominance query: `Some(verdict)` when the configuration's
+    /// feasibility is already decided by a learned entry, `None` when a
+    /// simulation is needed.
+    pub fn classify(&mut self, depths: &[u32]) -> Option<OracleVerdict> {
+        self.clamp_into_scratch(depths);
+        self.queries += 1;
+        self.clock += 1;
+        if self.scan_infeasible() {
+            return Some(OracleVerdict::Infeasible);
+        }
+        let clock = self.clock;
+        let mut bound: Option<Option<u64>> = None;
+        for e in self.feasible.iter_mut() {
+            if dominated_by(&e.cfg, &self.scratch) {
+                e.hits += 1;
+                e.stamp = clock;
+                let b = bound.get_or_insert(e.latency);
+                *b = match (*b, e.latency) {
+                    (Some(a), Some(c)) => Some(a.min(c)),
+                    (a, c) => a.or(c),
+                };
+            }
+        }
+        if let Some(latency_bound) = bound {
+            self.feasible_hits += 1;
+            return Some(OracleVerdict::Feasible { latency_bound });
+        }
+        None
+    }
+
+    /// Scan the infeasible antichain against the clamped scratch config,
+    /// bumping hit bookkeeping on a match.
+    fn scan_infeasible(&mut self) -> bool {
+        let clock = self.clock;
+        for e in self.infeasible.iter_mut() {
+            if dominated_by(&self.scratch, &e.cfg) {
+                e.hits += 1;
+                e.stamp = clock;
+                self.infeasible_hits += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Learn one engine result (`latency == None` means deadlock). The
+    /// configuration is clamped to deadlock space before insertion, so a
+    /// single learned deadlock covers the whole region above the caps.
+    pub fn note(&mut self, depths: &[u32], latency: Option<u64>) {
+        self.clamp_into_scratch(depths);
+        self.clock += 1;
+        let stamp = self.clock;
+        if latency.is_none() {
+            // Maximal antichain of known deadlocks.
+            if self
+                .infeasible
+                .iter()
+                .any(|e| dominated_by(&self.scratch, &e.cfg))
+            {
+                return; // already covered
+            }
+            let s = &self.scratch;
+            self.infeasible.retain(|e| !dominated_by(&e.cfg, s));
+            if self.infeasible.len() >= self.capacity {
+                evict(&mut self.infeasible);
+            }
+            self.infeasible.push(Entry {
+                cfg: self.scratch.as_slice().into(),
+                latency: None,
+                hits: 0,
+                stamp,
+            });
+        } else {
+            // Minimal antichain of known-feasible configurations.
+            if self
+                .feasible
+                .iter()
+                .any(|e| dominated_by(&e.cfg, &self.scratch))
+            {
+                return; // already covered
+            }
+            let s = &self.scratch;
+            self.feasible.retain(|e| !dominated_by(s, &e.cfg));
+            if self.feasible.len() >= self.capacity {
+                evict(&mut self.feasible);
+            }
+            self.feasible.push(Entry {
+                cfg: self.scratch.as_slice().into(),
+                latency,
+                hits: 0,
+                stamp,
+            });
+        }
+    }
+
+    /// Drop all learned entries (cold-start measurement).
+    pub fn clear(&mut self) {
+        self.infeasible.clear();
+        self.feasible.clear();
+        self.queries = 0;
+        self.infeasible_hits = 0;
+        self.feasible_hits = 0;
+    }
+
+    /// Entries on the known-deadlock antichain.
+    pub fn num_infeasible(&self) -> usize {
+        self.infeasible.len()
+    }
+
+    /// Entries on the known-feasible antichain.
+    pub fn num_feasible(&self) -> usize {
+        self.feasible.len()
+    }
+
+    /// Queries answered `Infeasible` since construction/`clear`.
+    pub fn infeasible_hits(&self) -> u64 {
+        self.infeasible_hits
+    }
+
+    /// Queries answered `Feasible` since construction/`clear`.
+    pub fn feasible_hits(&self) -> u64 {
+        self.feasible_hits
+    }
+
+    /// Total dominance queries since construction/`clear`.
+    pub fn queries(&self) -> u64 {
+        self.queries
+    }
+}
+
+/// Remove the least useful entry: fewest hits, oldest stamp on ties.
+fn evict(entries: &mut Vec<Entry>) {
+    if let Some(i) = (0..entries.len()).min_by_key(|&i| (entries[i].hits, entries[i].stamp)) {
+        entries.remove(i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bram::is_srl;
+
+    #[test]
+    fn canonicalizer_is_class_preserving_and_idempotent() {
+        // caps [4, 8], widths [32, 600]: srl_max = [32, 2].
+        let c = Canonicalizer::new(vec![4, 8], &[32, 600]);
+        // Below/at cap: unchanged.
+        assert_eq!(c.canonical(&[3, 8]), None);
+        assert_eq!(c.canonical(&[4, 2]), None);
+        // Above cap, SRL class (d ≤ 32 on ch 0): collapse to the cap.
+        assert_eq!(c.canonical(&[17, 8]).unwrap().as_ref(), &[4, 8]);
+        // Above cap, BRAM class: collapse to max(cap, srl_max + 1).
+        assert_eq!(c.canonical(&[100, 8]).unwrap().as_ref(), &[33, 8]);
+        // Wide channel: cap 8 already BRAM-class, so BRAM depths land on
+        // the cap itself.
+        assert_eq!(c.canonical(&[4, 20]).unwrap().as_ref(), &[4, 8]);
+        for (raw, ch) in [(17u32, 0usize), (100, 0), (33, 0), (20, 1), (9, 1)] {
+            let canon = c.canonical_depth(ch, raw);
+            let w = [32u32, 600][ch];
+            assert_eq!(is_srl(raw, w), is_srl(canon, w), "class flip at {raw}x{w}");
+            assert!(canon <= raw);
+            assert!(canon >= c.caps()[ch] || canon == raw);
+            // Idempotent.
+            assert_eq!(c.canonical_depth(ch, canon), canon);
+        }
+    }
+
+    #[test]
+    fn oracle_dominance_both_directions() {
+        let mut o = FeasibilityOracle::new(vec![100, 100, 100]);
+        assert_eq!(o.classify(&[2, 2, 2]), None);
+        o.note(&[8, 4, 16], None); // deadlock
+        o.note(&[32, 32, 32], Some(500)); // feasible
+        // Dominated by the deadlock.
+        assert_eq!(o.classify(&[8, 4, 16]), Some(OracleVerdict::Infeasible));
+        assert_eq!(o.classify(&[2, 4, 3]), Some(OracleVerdict::Infeasible));
+        // Dominates the feasible entry.
+        assert_eq!(
+            o.classify(&[32, 40, 32]),
+            Some(OracleVerdict::Feasible {
+                latency_bound: Some(500)
+            })
+        );
+        // Neither: unknown.
+        assert_eq!(o.classify(&[2, 100, 2]), None);
+        assert_eq!(o.infeasible_hits(), 2);
+        assert_eq!(o.feasible_hits(), 1);
+        assert_eq!(o.queries(), 5);
+        // The engine's infeasible-only fast query agrees with classify.
+        for cfg in [[8u32, 4, 16], [2, 4, 3], [32, 40, 32], [2, 100, 2]] {
+            let full = o.classify(&cfg) == Some(OracleVerdict::Infeasible);
+            assert_eq!(o.is_dominated_infeasible(&cfg), full, "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn oracle_clamps_to_deadlock_space() {
+        // Caps [4, 4]: everything above 4 is equivalent to 4.
+        let mut o = FeasibilityOracle::new(vec![4, 4]);
+        o.note(&[1000, 2], None);
+        // A huge depth on channel 0 is still dominated after clamping.
+        assert_eq!(o.classify(&[7, 2]), Some(OracleVerdict::Infeasible));
+        assert_eq!(o.classify(&[4, 2]), Some(OracleVerdict::Infeasible));
+        assert_eq!(o.classify(&[4, 3]), None);
+        // Feasible side clamps too.
+        o.note(&[4, 3], Some(9));
+        assert_eq!(
+            o.classify(&[900, 3]),
+            Some(OracleVerdict::Feasible {
+                latency_bound: Some(9)
+            })
+        );
+    }
+
+    #[test]
+    fn antichains_stay_maximal_minimal_and_bounded() {
+        let mut o = FeasibilityOracle::with_capacity(vec![100; 2], 4);
+        // Dominated deadlocks collapse into the maximal entry.
+        o.note(&[2, 2], None);
+        o.note(&[8, 8], None); // swallows [2,2]
+        assert_eq!(o.num_infeasible(), 1);
+        o.note(&[3, 3], None); // covered, no-op
+        assert_eq!(o.num_infeasible(), 1);
+        // Feasible side keeps minimal elements.
+        o.note(&[50, 50], Some(10));
+        o.note(&[20, 20], Some(20)); // swallows [50,50]
+        assert_eq!(o.num_feasible(), 1);
+        o.note(&[60, 60], Some(8)); // covered, no-op
+        assert_eq!(o.num_feasible(), 1);
+        // Capacity: incomparable entries evict deterministically.
+        for i in 0..10u32 {
+            o.note(&[10 + i, 30 - i], None);
+        }
+        assert!(o.num_infeasible() <= 4);
+        // Everything kept still answers correctly.
+        assert_eq!(o.classify(&[2, 2]), Some(OracleVerdict::Infeasible));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut o = FeasibilityOracle::new(vec![10, 10]);
+        o.note(&[5, 5], None);
+        assert_eq!(o.classify(&[2, 2]), Some(OracleVerdict::Infeasible));
+        o.clear();
+        assert_eq!(o.num_infeasible(), 0);
+        assert_eq!(o.classify(&[2, 2]), None);
+        assert_eq!(o.infeasible_hits(), 0);
+    }
+}

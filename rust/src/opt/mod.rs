@@ -40,7 +40,16 @@
 //!   serial and `--jobs N` runs); they only decide how much work each
 //!   evaluation costs. SA reports its chain incumbents, greedy and the
 //!   Vitis hunter their current base configuration.
+//!
+//! [`dominance`] hosts the simulation-free pruning layer the engine
+//! threads every latency-only proposal through: the monotone
+//! [`FeasibilityOracle`](dominance::FeasibilityOracle) (dominance
+//! antichains over known deadlocks / known-feasible configs) and the
+//! occupancy-clamp [`Canonicalizer`](dominance::Canonicalizer). Like
+//! hints, pruning never changes results — only how many simulations they
+//! cost.
 
+pub mod dominance;
 pub mod exhaustive;
 pub mod greedy;
 pub mod nsga2;

@@ -41,7 +41,14 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
         ("batches", Json::Num(s.batches as f64)),
         ("sims", Json::Num(s.sims as f64)),
         ("sims_per_sec", Json::Num(engine.sims_per_sec())),
+        ("proposals_per_sec", Json::Num(engine.proposals_per_sec())),
         ("worker_utilization", Json::Num(engine.worker_utilization())),
+        ("prune", Json::Bool(engine.prune())),
+        ("oracle_hits", Json::Num(s.oracle_hits as f64)),
+        ("oracle_rate", Json::Num(s.oracle_rate())),
+        ("clamp_hits", Json::Num(s.clamp_hits as f64)),
+        ("clamp_rate", Json::Num(s.clamp_rate())),
+        ("sims_avoided", Json::Num(s.sims_avoided as f64)),
         ("incremental_sims", Json::Num(s.incr_sims as f64)),
         ("incremental_rate", Json::Num(s.incremental_rate())),
         (
@@ -80,13 +87,25 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
     } else {
         String::new()
     };
+    let pruning = if engine.prune() {
+        format!(
+            ", pruning: {:.0}% oracle / {:.0}% clamp, {} sims avoided",
+            s.oracle_rate() * 100.0,
+            s.clamp_rate() * 100.0,
+            s.sims_avoided
+        )
+    } else {
+        ", pruning off".into()
+    };
     format!(
-        "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s, {:.0}% worker utilization, \
-         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed){scenarios}",
+        "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s ({:.0} proposals/s), \
+         {:.0}% worker utilization, \
+         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed){pruning}{scenarios}",
         engine.jobs(),
         engine.cache_shards(),
         s.hit_rate() * 100.0,
         engine.sims_per_sec(),
+        engine.proposals_per_sec(),
         engine.worker_utilization() * 100.0,
         s.incremental_rate() * 100.0,
         s.dirty_per_incremental(),

@@ -20,6 +20,14 @@
 //! statistics and [`RunInfo`] telemetry are bit-identical to calling the
 //! underlying [`FastSim`] directly, with no extra allocation or
 //! aggregation work (`tests/workload_equivalence.rs` enforces this).
+//!
+//! [`eval_latency`](ScenarioSim::eval_latency) is the engine's
+//! latency-only fast path: since deadlock in any scenario is already
+//! infeasible, it can probe scenarios in descending
+//! recent-deadlock-frequency order and stop at the first failure,
+//! skipping the remaining replays. The full blocked-set union stays on
+//! [`simulate`](ScenarioSim::simulate) and the stats path, so CLI
+//! diagnostics are unchanged.
 
 use super::fast::{BlockInfo, ChannelStats, FastSim, RunInfo, SimOutcome};
 use super::SimOptions;
@@ -47,6 +55,15 @@ pub struct ScenarioSim {
     per_lat: Vec<Option<u64>>,
     /// Scratch buffer for per-scenario stats before max-merging.
     scratch: ChannelStats,
+    /// Per-scenario deadlock counts observed so far — drives the
+    /// [`eval_latency`](Self::eval_latency) early-exit probe order.
+    dl_count: Vec<u64>,
+    /// Probe-order scratch (scenario indices).
+    probe_order: Vec<u32>,
+    /// Scenario members actually simulated by the most recent call
+    /// (< `num_scenarios` only when the early-exit path stopped at a
+    /// deadlock).
+    scen_runs: u32,
 }
 
 impl ScenarioSim {
@@ -57,6 +74,7 @@ impl ScenarioSim {
 
     /// Build with explicit [`SimOptions`] (applied to every member).
     pub fn with_options(workload: &Workload, opts: SimOptions) -> ScenarioSim {
+        let k = workload.num_scenarios();
         ScenarioSim {
             sims: workload
                 .scenarios()
@@ -70,6 +88,9 @@ impl ScenarioSim {
             gap: None,
             per_lat: Vec::new(),
             scratch: ChannelStats::new(),
+            dl_count: vec![0; k],
+            probe_order: Vec::with_capacity(k),
+            scen_runs: 0,
         }
     }
 
@@ -90,6 +111,9 @@ impl ScenarioSim {
             gap: None,
             per_lat: Vec::new(),
             scratch: ChannelStats::new(),
+            dl_count: vec![0],
+            probe_order: Vec::with_capacity(1),
+            scen_runs: 0,
         }
     }
 
@@ -143,9 +167,21 @@ impl ScenarioSim {
     }
 
     /// Per-scenario latencies of the most recent call (`None` =
-    /// deadlock in that scenario).
+    /// deadlock in that scenario). Complete only after the full-run
+    /// paths ([`simulate`](Self::simulate) /
+    /// [`simulate_with_stats`](Self::simulate_with_stats)); an
+    /// early-exited [`eval_latency`](Self::eval_latency) leaves
+    /// unprobed scenarios as `None`.
     pub fn scenario_latencies(&self) -> &[Option<u64>] {
         &self.per_lat
+    }
+
+    /// Scenario members actually simulated by the most recent call —
+    /// `num_scenarios` on the full paths, possibly fewer when
+    /// [`eval_latency`](Self::eval_latency) stopped at the first
+    /// deadlocked scenario.
+    pub fn last_scenarios_run(&self) -> u32 {
+        self.scen_runs
     }
 
     /// Per-member telemetry of the most recent call, in bank order.
@@ -161,6 +197,60 @@ impl ScenarioSim {
             return out;
         }
         self.run_all(depths, None)
+    }
+
+    /// Latency-only evaluation. With `early_exit` set (the DSE engine's
+    /// pruned fast path), any deadlock makes the configuration
+    /// infeasible, so the bank probes scenarios in descending
+    /// recent-deadlock-frequency order and **stops at the first
+    /// deadlocked scenario** — the failing scenario is usually probed
+    /// first, and the remaining members are never replayed. Without
+    /// `early_exit` this is exactly [`simulate`](Self::simulate)'s
+    /// aggregate latency (full blocked-set union semantics stay on the
+    /// `simulate`/stats paths, which diagnostics and the CLI use).
+    pub fn eval_latency(&mut self, depths: &[u32], early_exit: bool) -> Option<u64> {
+        let k = self.sims.len();
+        if k == 1 {
+            let out = self.sims[0].simulate(depths);
+            self.finish_single(&out);
+            return out.latency();
+        }
+        if !early_exit {
+            return self.run_all(depths, None).latency();
+        }
+        self.probe_order.clear();
+        self.probe_order.extend(0..k as u32);
+        {
+            let dl = &self.dl_count;
+            self.probe_order
+                .sort_by(|&a, &b| dl[b as usize].cmp(&dl[a as usize]).then(a.cmp(&b)));
+        }
+        self.info = RunInfo::default();
+        self.per_lat.clear();
+        self.per_lat.resize(k, None);
+        self.scen_runs = 0;
+        for &iu in &self.probe_order {
+            let i = iu as usize;
+            let out = self.sims[i].simulate(depths);
+            let r = self.sims[i].last_run();
+            self.info.incremental |= r.incremental;
+            self.info.dirty_channels += r.dirty_channels;
+            self.info.replayed_ops += r.replayed_ops;
+            self.info.total_ops += r.total_ops;
+            self.scen_runs += 1;
+            match out {
+                SimOutcome::Done { latency } => self.per_lat[i] = Some(latency),
+                SimOutcome::Deadlock { .. } => {
+                    self.dl_count[i] += 1;
+                    self.gap = None;
+                    return None;
+                }
+            }
+        }
+        let worst = self.per_lat.iter().flatten().max().copied().unwrap_or(0);
+        let best = self.per_lat.iter().flatten().min().copied().unwrap_or(0);
+        self.gap = Some(worst - best);
+        aggregate_latency(&self.per_lat, &self.weights, self.agg)
     }
 
     /// Evaluate with max-merged per-channel statistics.
@@ -190,6 +280,10 @@ impl ScenarioSim {
         self.per_lat.clear();
         self.per_lat.push(out.latency());
         self.gap = out.latency().map(|_| 0);
+        self.scen_runs = 1;
+        if out.is_deadlock() {
+            self.dl_count[0] += 1;
+        }
     }
 
     fn run_all(&mut self, depths: &[u32], mut stats: Option<&mut ChannelStats>) -> SimOutcome {
@@ -204,8 +298,9 @@ impl ScenarioSim {
         }
         self.per_lat.clear();
         self.info = RunInfo::default();
+        self.scen_runs = self.sims.len() as u32;
         let mut blocked: Vec<BlockInfo> = Vec::new();
-        for sim in self.sims.iter_mut() {
+        for (i, sim) in self.sims.iter_mut().enumerate() {
             let out = match stats.as_deref_mut() {
                 Some(buf) => {
                     let o = sim.simulate_with_stats_into(depths, &mut self.scratch);
@@ -231,6 +326,7 @@ impl ScenarioSim {
                 SimOutcome::Done { latency } => self.per_lat.push(Some(*latency)),
                 SimOutcome::Deadlock { blocked: b } => {
                     self.per_lat.push(None);
+                    self.dl_count[i] += 1;
                     for info in b {
                         if !blocked.contains(info) {
                             blocked.push(info.clone());
@@ -358,6 +454,52 @@ mod tests {
                 merged.read_stall[ch],
                 per.iter().map(|s| s.read_stall[ch]).max().unwrap()
             );
+        }
+    }
+
+    #[test]
+    fn eval_latency_matches_simulate_and_early_exits() {
+        let w = fig2_workload(&[8, 16, 12]);
+        let mut bank = ScenarioSim::new(&w);
+        let mut full = ScenarioSim::new(&w);
+        // Verdicts and latencies agree with the full path on feasible,
+        // deadlocked, and boundary configurations, early exit on or off.
+        for cfg in [[16u32, 2], [7, 2], [15, 2], [2, 2], [11, 3]] {
+            let want = full.simulate(&cfg).latency();
+            assert_eq!(bank.eval_latency(&cfg, true), want, "early {cfg:?}");
+            assert_eq!(bank.eval_latency(&cfg, false), want, "full {cfg:?}");
+        }
+        // Feasible evaluations run (and count) every scenario.
+        assert_eq!(bank.eval_latency(&[16, 2], true), full.simulate(&[16, 2]).latency());
+        assert_eq!(bank.last_scenarios_run(), 3);
+        assert_eq!(bank.last_gap(), full.last_gap());
+        // A deadlock stops the probe sequence; the adaptive order puts
+        // the scenario that just failed first, so an immediate re-probe
+        // of a deadlocking configuration touches exactly one member.
+        assert_eq!(bank.eval_latency(&[7, 2], true), None);
+        let first = bank.last_scenarios_run();
+        assert!(first >= 1 && first < 3, "must stop early: {first}");
+        assert_eq!(bank.eval_latency(&[7, 3], true), None);
+        assert_eq!(
+            bank.last_scenarios_run(),
+            1,
+            "failing scenario should be probed first after a deadlock"
+        );
+        assert_eq!(bank.last_gap(), None);
+    }
+
+    #[test]
+    fn eval_latency_single_bank_is_exact() {
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(
+            crate::trace::collect_trace(&bd.design, &bd.args).unwrap(),
+        );
+        let mut bank = ScenarioSim::single(t.clone());
+        let mut fast = FastSim::new(t.clone());
+        for cfg in [[16u32, 2], [2, 2], [16, 16]] {
+            assert_eq!(bank.eval_latency(&cfg, true), fast.simulate(&cfg).latency());
+            assert_eq!(bank.last_run(), fast.last_run());
+            assert_eq!(bank.last_scenarios_run(), 1);
         }
     }
 

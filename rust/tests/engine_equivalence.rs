@@ -80,11 +80,12 @@ fn engine_stats_track_cache_and_throughput() {
     assert_eq!(s.proposals as usize, ev.n_evals());
     assert_eq!(s.sims, ev.n_sim, "fresh engine: run sims == lifetime sims");
     assert_eq!(
-        s.cache_hits + s.sims,
+        s.cache_hits + s.oracle_hits + s.sims,
         s.proposals,
-        "every proposal is either a hit or a simulation"
+        "every proposal is a memo hit, an oracle answer, or a simulation"
     );
     assert!(ev.sims_per_sec() > 0.0);
+    assert!(ev.proposals_per_sec() >= ev.sims_per_sec());
     assert!(ev.worker_utilization() >= 0.0 && ev.worker_utilization() <= 1.0);
     assert!(ev.cache_shards().is_power_of_two());
 }

@@ -1,0 +1,179 @@
+//! Differential fuzzing of the simulation-free pruning layer
+//! (`opt::dominance`): randomized depth walks on every suite design
+//! asserting that
+//!
+//! - the [`FeasibilityOracle`] never contradicts a real
+//!   `FastSim`/`ScenarioSim` run in **either** verdict direction
+//!   (`Infeasible` ⇒ the simulator deadlocks, `Feasible` ⇒ it doesn't),
+//! - clamp-canonicalized configurations are outcome-identical to their
+//!   raw counterparts (full [`SimOutcome`] equality — latency *and*
+//!   blocked sets — plus per-scenario latencies on workloads), and
+//! - deadlock is monotone in depths under fuzzed configurations
+//!   (shrinking depths never rescues a deadlock).
+//!
+//! Walk configurations deliberately overshoot the DSE upper bounds so the
+//! clamp region above the observed write counts is exercised even on
+//! designs without designer depth hints.
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::opt::dominance::{Canonicalizer, FeasibilityOracle, OracleVerdict};
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::ScenarioSim;
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::trace::Trace;
+use fifoadvisor::util::Rng;
+use std::sync::Arc;
+
+fn all_with_specials() -> Vec<&'static str> {
+    let mut v = bench_suite::all_names();
+    v.extend(["fig2", "flowgnn_pna"]);
+    v
+}
+
+fn trace_of(name: &str) -> Arc<Trace> {
+    let bd = bench_suite::build(name);
+    Arc::new(collect_trace(&bd.design, &bd.args).unwrap())
+}
+
+/// A DSE-shaped random configuration in `[1, ub + pad]` — `pad` pushes
+/// past the bounds so the clamp region is reachable on unhinted designs.
+fn random_cfg(rng: &mut Rng, ub: &[u32], pad: u32) -> Vec<u32> {
+    ub.iter()
+        .map(|&u| rng.range_u32(1, u.max(2) + pad))
+        .collect()
+}
+
+#[test]
+fn oracle_never_contradicts_the_simulator_on_any_design() {
+    for name in all_with_specials() {
+        let t = trace_of(name);
+        let mut sim = FastSim::new(t.clone());
+        let mut oracle = FeasibilityOracle::for_trace(&t);
+        let ub = t.upper_bounds();
+        let mut rng = Rng::new(0x0DAC1E ^ name.len() as u64);
+        for step in 0..14 {
+            let cfg = random_cfg(&mut rng, &ub, 9);
+            let predicted = oracle.classify(&cfg);
+            let out = sim.simulate(&cfg);
+            match predicted {
+                Some(OracleVerdict::Infeasible) => {
+                    assert!(
+                        out.is_deadlock(),
+                        "{name} step {step}: oracle said Infeasible but {cfg:?} runs"
+                    );
+                }
+                Some(OracleVerdict::Feasible { .. }) => {
+                    assert!(
+                        !out.is_deadlock(),
+                        "{name} step {step}: oracle said Feasible but {cfg:?} deadlocks"
+                    );
+                }
+                None => {}
+            }
+            oracle.note(&cfg, out.latency());
+            // What was just learned must classify consistently too.
+            match oracle.classify(&cfg) {
+                Some(OracleVerdict::Infeasible) => assert!(out.is_deadlock(), "{name}"),
+                Some(OracleVerdict::Feasible { .. }) => assert!(!out.is_deadlock(), "{name}"),
+                None => panic!("{name}: a just-learned config must classify"),
+            }
+        }
+    }
+}
+
+#[test]
+fn clamp_canonical_configs_are_outcome_identical_on_every_design() {
+    for name in all_with_specials() {
+        let t = trace_of(name);
+        let canon = Canonicalizer::for_trace(&t);
+        let mut raw_sim = FastSim::new(t.clone());
+        let mut canon_sim = FastSim::new(t.clone());
+        let ub = t.upper_bounds();
+        let mut rng = Rng::new(0xC1A4 ^ name.len() as u64);
+        let mut clamped = 0usize;
+        for step in 0..12 {
+            let cfg = random_cfg(&mut rng, &ub, 17);
+            if let Some(ccfg) = canon.canonical(&cfg) {
+                clamped += 1;
+                let raw_out = raw_sim.simulate(&cfg);
+                let canon_out = canon_sim.simulate(&ccfg);
+                assert_eq!(
+                    raw_out, canon_out,
+                    "{name} step {step}: clamp changed the outcome, raw {cfg:?} vs canon {ccfg:?}"
+                );
+                // Canonicalization is idempotent.
+                assert!(canon.canonical(&ccfg).is_none(), "{name}: not idempotent");
+            }
+        }
+        assert!(
+            clamped > 0,
+            "{name}: padded walk never reached the clamp region"
+        );
+    }
+}
+
+#[test]
+fn deadlock_is_monotone_under_fuzzed_configs() {
+    for name in all_with_specials() {
+        let t = trace_of(name);
+        let mut sim = FastSim::new(t.clone());
+        let ub = t.upper_bounds();
+        let mut rng = Rng::new(0x3030 ^ name.len() as u64);
+        for step in 0..10 {
+            let big = random_cfg(&mut rng, &ub, 3);
+            // Component-wise shrink of `big`.
+            let small: Vec<u32> = big.iter().map(|&d| rng.range_u32(1, d)).collect();
+            let big_dead = sim.simulate(&big).is_deadlock();
+            let small_dead = sim.simulate(&small).is_deadlock();
+            assert!(
+                !big_dead || small_dead,
+                "{name} step {step}: shrinking {big:?} → {small:?} rescued a deadlock"
+            );
+        }
+    }
+}
+
+#[test]
+fn oracle_and_clamp_hold_on_multi_scenario_banks() {
+    for wname in ["fig2", "flowgnn_pna"] {
+        let w = Arc::new(bench_suite::build_workload(wname).unwrap());
+        assert!(w.num_scenarios() > 1, "{wname} should be multi-scenario");
+        let canon = Canonicalizer::for_workload(&w);
+        let mut oracle = FeasibilityOracle::for_workload(&w);
+        let mut bank = ScenarioSim::new(&w);
+        let mut ref_bank = ScenarioSim::new(&w);
+        let mut canon_bank = ScenarioSim::new(&w);
+        let ub = w.upper_bounds();
+        let mut rng = Rng::new(0xBA41 ^ wname.len() as u64);
+        for step in 0..12 {
+            let cfg = random_cfg(&mut rng, &ub, 5);
+            // The engine's early-exit latency path agrees with the full
+            // simulate path on every verdict and latency.
+            let fast = bank.eval_latency(&cfg, true);
+            let full = ref_bank.simulate(&cfg).latency();
+            assert_eq!(fast, full, "{wname} step {step}: early-exit diverged {cfg:?}");
+            // Oracle consistency against the aggregate verdict.
+            match oracle.classify(&cfg) {
+                Some(OracleVerdict::Infeasible) => {
+                    assert!(full.is_none(), "{wname} step {step}: bad Infeasible {cfg:?}")
+                }
+                Some(OracleVerdict::Feasible { .. }) => {
+                    assert!(full.is_some(), "{wname} step {step}: bad Feasible {cfg:?}")
+                }
+                None => {}
+            }
+            oracle.note(&cfg, full);
+            // Clamp preserves per-scenario outcomes, not just the
+            // aggregate.
+            if let Some(ccfg) = canon.canonical(&cfg) {
+                let canon_full = canon_bank.simulate(&ccfg).latency();
+                assert_eq!(full, canon_full, "{wname} step {step}: clamp diverged");
+                assert_eq!(
+                    ref_bank.scenario_latencies(),
+                    canon_bank.scenario_latencies(),
+                    "{wname} step {step}: per-scenario latencies diverged"
+                );
+            }
+        }
+    }
+}

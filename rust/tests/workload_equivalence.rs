@@ -133,6 +133,10 @@ fn multi_scenario_incremental_replay_engages_in_the_engine() {
     // chains must be served as per-scenario delta replays.
     let w = Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap());
     let mut ev = Evaluator::for_workload(w.clone(), 1);
+    // Pruning off: this test pins the *exact* unpruned accounting
+    // (every sim runs every scenario, no clamp merging); the pruned
+    // counterparts live in `pruning_*` below.
+    ev.set_prune(false);
     let base = w.baseline_max();
     ev.eval(&base);
     for ch in 0..base.len().min(8) {
@@ -144,4 +148,92 @@ fn multi_scenario_incremental_replay_engages_in_the_engine() {
     assert!(s.incr_sims > 0, "no incremental sims on mutation chain: {s:?}");
     assert!(s.replayed_ops < s.replayable_ops, "deltas must save work");
     assert_eq!(s.scenario_sims, s.sims * w.num_scenarios() as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Simulation-free pruning: identity harness
+// ---------------------------------------------------------------------------
+
+fn drive_with_prune(
+    engine_of: &dyn Fn() -> Evaluator,
+    space: &Space,
+    name: &str,
+    prune: bool,
+    budget: usize,
+) -> (HistoryRecord, u64, u64) {
+    let mut ev = engine_of();
+    ev.set_prune(prune);
+    let mut o = opt::by_name(name, 42).unwrap();
+    drive(&mut *o, &mut ev, space, budget);
+    let s = ev.stats();
+    assert_eq!(
+        s.cache_hits + s.oracle_hits + s.sims,
+        s.proposals,
+        "{name} prune={prune}: accounting invariant broken"
+    );
+    (history_of(&ev), s.sims, s.scenario_sims)
+}
+
+#[test]
+fn pruning_preserves_histories_for_all_nine_optimizers_single_trace() {
+    let bd = bench_suite::build("gesummv");
+    let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+    let space = Space::from_trace(&t);
+    for name in opt::OPTIMIZER_NAMES {
+        let make = || Evaluator::new(t.clone());
+        let (on, on_sims, _) = drive_with_prune(&make, &space, name, true, 120);
+        let (off, off_sims, _) = drive_with_prune(&make, &space, name, false, 120);
+        assert_eq!(
+            on, off,
+            "{name}: pruned vs unpruned history diverged on gesummv"
+        );
+        assert!(on_sims <= off_sims, "{name}: pruning must never add sims");
+    }
+}
+
+#[test]
+fn pruning_preserves_histories_for_all_nine_optimizers_on_a_workload() {
+    // fig2's 3-scenario workload is deadlock-heavy: the oracle and the
+    // early-exit path both engage, and every outcome classification
+    // (feasible vs deadlock, per proposal) must survive pruning intact.
+    let w = Arc::new(bench_suite::build_workload("fig2").unwrap());
+    let space = Space::from_workload(&w);
+    for name in opt::OPTIMIZER_NAMES {
+        let make = || Evaluator::for_workload(w.clone(), 1);
+        let (on, on_sims, on_scen) = drive_with_prune(&make, &space, name, true, 90);
+        let (off, off_sims, off_scen) = drive_with_prune(&make, &space, name, false, 90);
+        assert_eq!(on, off, "{name}: pruned vs unpruned diverged on fig2 workload");
+        assert!(on_sims <= off_sims, "{name}: pruning added sims");
+        assert!(on_scen <= off_scen, "{name}: pruning added scenario replays");
+    }
+}
+
+#[test]
+fn pruning_is_identical_serial_vs_parallel_on_clamped_workload() {
+    // FlowGNN's designer hints exceed the observed bursts, so the clamp
+    // canonicalizer engages; histories must stay identical across
+    // prune × jobs.
+    let w = Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap());
+    let space = Space::from_workload(&w);
+    for name in ["random", "grouped_sa", "greedy", "vitis_hunter"] {
+        let mut records: Vec<HistoryRecord> = Vec::new();
+        for prune in [true, false] {
+            for jobs in [1usize, 4] {
+                let mut ev = Evaluator::for_workload(w.clone(), jobs);
+                ev.set_prune(prune);
+                let mut o = opt::by_name(name, 9).unwrap();
+                drive(&mut *o, &mut ev, &space, 60);
+                if prune && jobs == 1 {
+                    assert!(
+                        ev.stats().clamp_hits > 0,
+                        "{name}: hinted bounds above the bursts must clamp"
+                    );
+                }
+                records.push(history_of(&ev));
+            }
+        }
+        for r in &records[1..] {
+            assert_eq!(&records[0], r, "{name}: prune/jobs grid diverged");
+        }
+    }
 }
