@@ -23,11 +23,17 @@
 //!    never more sims, strictly fewer scenario replays. Wall clock is
 //!    guarded with deliberate slack (2× + 0.25 s) so CI noise on tiny
 //!    workloads cannot flake — the sim counts are the real guarantee.
+//! 9. Graph-compiled backend (`--backend compiled`) vs fast: repeated-eval
+//!    throughput over the fig2 and FlowGNN workloads on delta (mutation)
+//!    and cold (re-randomized) walks, with a full-outcome identity assert
+//!    on every step and a hard assert that compiled throughput is ≥ fast
+//!    on at least one (workload, walk) cell.
 //!
 //! Run: `cargo bench --bench perf`. Besides `results/perf.csv` it writes
 //! machine-readable snapshots: `BENCH_2.json` (every §Perf 1–6 metric
-//! row), `BENCH_3.json` (the §Perf 7 scenario-bank rows), and
-//! `BENCH_4.json` (the §Perf 8 pruning rows).
+//! row), `BENCH_3.json` (the §Perf 7 scenario-bank rows), `BENCH_4.json`
+//! (the §Perf 8 pruning rows), and `BENCH_5.json` (the §Perf 9 backend
+//! comparison rows).
 //! Set `FIFOADVISOR_PERF_SMOKE=1` for a reduced-iteration run (the CI
 //! regression smoke): same sections, same correctness assertions, far
 //! fewer samples.
@@ -39,7 +45,7 @@ use fifoadvisor::report::csv::Csv;
 use fifoadvisor::runtime::{BatchAnalytics, XlaBram};
 use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::sim::golden::simulate_golden;
-use fifoadvisor::sim::{ScenarioSim, SimOptions};
+use fifoadvisor::sim::{BackendKind, ScenarioSim, SimOptions};
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::util::stats::{fmt_duration, Summary};
 use fifoadvisor::util::{Json, Rng};
@@ -665,8 +671,145 @@ fn main() {
         }
     }
 
+    println!("\n=== §Perf 9: graph-compiled vs fast backend (repeated evaluation) ===\n");
+    let mut backend_rows: Vec<Json> = Vec::new();
+    {
+        /// Evaluate a pre-generated walk on one backend, returning the
+        /// best-of-`reps` throughput (scheduler noise on a shared CI
+        /// runner hits single timings hard; the max over independent
+        /// repetitions is the standard de-flake) and every full outcome
+        /// of the last repetition (for the identity assert — outcomes
+        /// are deterministic, so any repetition would do).
+        fn run_walk(
+            w: &fifoadvisor::Workload,
+            base: &[u32],
+            walk: &[Vec<u32>],
+            kind: BackendKind,
+            delta: bool,
+            reps: usize,
+        ) -> (f64, Vec<fifoadvisor::SimOutcome>) {
+            let mut best = 0.0f64;
+            let mut outs = Vec::new();
+            for _ in 0..reps {
+                let mut bank = ScenarioSim::with_backend(w, SimOptions::default(), kind);
+                if delta {
+                    bank.simulate(base); // warm every scenario's retained schedule
+                } else {
+                    bank.set_incremental(false); // cold full pass every step
+                }
+                let mut o = Vec::with_capacity(walk.len());
+                let t0 = Instant::now();
+                for cfg in walk {
+                    o.push(bank.simulate(cfg));
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                best = best.max(walk.len() as f64 / dt.max(1e-12));
+                outs = o;
+            }
+            (best, outs)
+        }
+
+        let steps = if smoke { 48 } else { 256 };
+        let (mut wins, mut cells) = (0usize, 0usize);
+        for wname in ["fig2", "flowgnn_pna"] {
+            let w = bench_suite::build_workload(wname).unwrap();
+            let k = w.num_scenarios();
+            let ub = w.upper_bounds();
+            let base = w.baseline_max();
+            let nch = base.len();
+            for (mode, delta_walk) in [("delta", true), ("cold", false)] {
+                // One shared walk per cell so both backends see byte-equal
+                // inputs: DSE-shaped single-channel mutations for the
+                // delta cells, fresh random configurations for the cold
+                // cells.
+                let mut rng = Rng::new(0xBEC5 ^ wname.len() as u64);
+                let mut cur = base.clone();
+                let mut walk: Vec<Vec<u32>> = Vec::with_capacity(steps);
+                for _ in 0..steps {
+                    if delta_walk {
+                        let prev = cur.clone();
+                        while cur == prev {
+                            let i = rng.index(nch);
+                            cur[i] = match rng.below(3) {
+                                0 => base[i].max(3) - 1,
+                                1 => 2,
+                                _ => base[i],
+                            };
+                        }
+                    } else {
+                        cur = ub.iter().map(|&u| rng.range_u32(2, u.max(2))).collect();
+                    }
+                    walk.push(cur.clone());
+                }
+                let (fast_rate, fast_outs) =
+                    run_walk(&w, &base, &walk, BackendKind::Fast, delta_walk, 3);
+                let (comp_rate, comp_outs) =
+                    run_walk(&w, &base, &walk, BackendKind::Compiled, delta_walk, 3);
+                // CI guard: the backends must be bit-identical on every
+                // step — latency, deadlock verdict, and blocked sets.
+                for (i, (f, c)) in fast_outs.iter().zip(&comp_outs).enumerate() {
+                    assert_eq!(
+                        f, c,
+                        "{wname}/{mode} step {i}: compiled != fast on cfg {:?}",
+                        walk[i]
+                    );
+                }
+                cells += 1;
+                if comp_rate >= fast_rate {
+                    wins += 1;
+                }
+                println!(
+                    "  {wname:<14}[{k}] {mode:<5}: fast {fast_rate:>9.0} evals/s, \
+                     compiled {comp_rate:>9.0} evals/s ({:.2}x)",
+                    comp_rate / fast_rate.max(1e-12)
+                );
+                let label = format!("{wname}[{k}]/{mode}");
+                let mut push = |metric: &str, value: f64, unit: &str| {
+                    csv.row(vec![
+                        metric.to_string(),
+                        label.clone(),
+                        format!("{value:.6e}"),
+                        unit.into(),
+                    ]);
+                    backend_rows.push(Json::obj(vec![
+                        ("metric", Json::Str(metric.into())),
+                        ("design", Json::Str(label.clone())),
+                        ("value", Json::Num(value)),
+                        ("unit", Json::Str(unit.into())),
+                    ]));
+                };
+                push("backend_eval_rate_fast", fast_rate, "evals/s");
+                push("backend_eval_rate_compiled", comp_rate, "evals/s");
+                push(
+                    "backend_compiled_speedup",
+                    comp_rate / fast_rate.max(1e-12),
+                    "x",
+                );
+            }
+        }
+        // §Perf 9 acceptance: the graph-compiled backend matches or beats
+        // the fast simulator somewhere. The identity asserts above are
+        // the correctness guarantee; this throughput claim rides on
+        // best-of-3 timings across 4 independent cells, so a single
+        // noisy measurement cannot flip it.
+        assert!(
+            wins >= 1,
+            "compiled backend won {wins}/{cells} throughput cells — expected ≥ 1"
+        );
+        println!("  compiled ≥ fast in {wins}/{cells} cells");
+    }
+
     csv.write("results/perf.csv").unwrap();
     println!("\nwrote results/perf.csv");
+
+    let snapshot5 = Json::obj(vec![
+        ("bench", Json::Str("backend_compare".into())),
+        ("schema", Json::Str("metric-rows/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(backend_rows)),
+    ]);
+    fifoadvisor::report::write_file("BENCH_5.json", &snapshot5.to_string_pretty()).unwrap();
+    println!("wrote BENCH_5.json");
 
     let snapshot4 = Json::obj(vec![
         ("bench", Json::Str("pruning".into())),
@@ -687,13 +830,18 @@ fn main() {
     println!("wrote BENCH_3.json");
 
     // Machine-readable perf snapshot (the §Perf trajectory file). The
-    // §Perf 7 scenario rows live in BENCH_3.json only and the §Perf 8
-    // pruning rows in BENCH_4.json only, so BENCH_2.json stays
-    // row-for-row comparable with pre-workload snapshots.
+    // §Perf 7 scenario rows live in BENCH_3.json only, the §Perf 8
+    // pruning rows in BENCH_4.json only, and the §Perf 9 backend rows in
+    // BENCH_5.json only, so BENCH_2.json stays row-for-row comparable
+    // with pre-workload snapshots.
     let rows_json: Vec<Json> = csv
         .rows()
         .iter()
-        .filter(|r| !r[0].starts_with("scenario_") && !r[0].starts_with("prune_"))
+        .filter(|r| {
+            !r[0].starts_with("scenario_")
+                && !r[0].starts_with("prune_")
+                && !r[0].starts_with("backend_")
+        })
         .map(|r| {
             let value = match r[2].parse::<f64>() {
                 Ok(v) => Json::Num(v),

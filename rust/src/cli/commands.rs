@@ -6,10 +6,22 @@ use crate::dse::{drive, EvalPoint, Evaluator};
 use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
 use crate::report::{self, ascii};
+use crate::sim::BackendKind;
 use crate::trace::workload::Workload;
 use crate::util::stats::fmt_duration;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
+
+/// Parse `--backend {fast,compiled}` (defaults to the event-driven fast
+/// simulator). Backend selection never changes results — only the
+/// throughput profile.
+fn parse_backend(args: &Args) -> Result<BackendKind> {
+    match args.get("backend") {
+        None => Ok(BackendKind::Fast),
+        Some(s) => BackendKind::parse(s)
+            .ok_or_else(|| anyhow!("--backend must be fast|compiled, got '{s}'")),
+    }
+}
 
 fn load_workload(args: &Args) -> Result<(String, Arc<Workload>)> {
     // Four sources, in precedence order: a saved workload JSON, a cached
@@ -161,7 +173,7 @@ pub fn simulate(args: &Args) -> Result<()> {
             other => bail!("--baseline must be max|min, got '{other}'"),
         }
     };
-    let mut ev = Evaluator::for_workload(w.clone(), 1);
+    let mut ev = Evaluator::for_workload_with_sim(w.clone(), 1, parse_backend(args)?);
     let t0 = std::time::Instant::now();
     let (lat, bram) = ev.eval(&depths);
     let dt = t0.elapsed().as_secs_f64();
@@ -198,17 +210,19 @@ pub fn optimize(args: &Args) -> Result<()> {
         None => args.get_u64("threads", 4)?,
     } as usize;
     let alpha = args.get_f64("alpha", 0.7)?;
+    let backend = parse_backend(args)?;
 
     let mut ev = if args.has_flag("xla") {
         let analytics = crate::runtime::BatchAnalytics::load_default()?;
         println!("batched analytics: platform {}", analytics.platform());
-        Evaluator::for_workload_with_backend(
+        Evaluator::for_workload_full(
             w.clone(),
             Box::new(crate::runtime::XlaBram::new(analytics)),
             jobs,
+            backend,
         )
     } else {
-        Evaluator::for_workload(w.clone(), jobs)
+        Evaluator::for_workload_with_sim(w.clone(), jobs, backend)
     };
     // A/B escape hatch: disable the simulation-free pruning layer
     // (dominance oracle, occupancy clamp, scenario early exit). Results
@@ -354,7 +368,7 @@ pub fn optimize(args: &Args) -> Result<()> {
 pub fn hunt(args: &Args) -> Result<()> {
     let (name, w) = load_workload(args)?;
     let space = Space::from_workload(&w);
-    let mut ev = Evaluator::for_workload(w.clone(), 1);
+    let mut ev = Evaluator::for_workload_with_sim(w.clone(), 1, parse_backend(args)?);
     let hunter = opt::vitis_hunter::VitisHunter::new();
     match hunter.hunt(&mut ev, &space, 1000) {
         Some(cfg) => {

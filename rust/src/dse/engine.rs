@@ -5,7 +5,11 @@
 //!
 //! - a **persistent worker pool** ([`WorkerPool`]): `jobs` threads are
 //!   spawned once at engine construction, each holding its own cloned
-//!   [`ScenarioSim`] bank over the shared workload traces, and are fed
+//!   [`ScenarioSim`] bank over the shared workload traces (running
+//!   whichever [`BackendKind`] the engine was built with — the
+//!   event-driven `FastSim` by default, the graph-compiled `CompiledSim`
+//!   under `--backend compiled`; the memo/oracle/clamp layers above the
+//!   bank are backend-agnostic), and are fed
 //!   work over per-worker queues — no per-batch thread spawning on the
 //!   hot path. Dispatch is
 //!   **sticky and locality-aware**: every proposal is routed to the
@@ -68,6 +72,7 @@ use crate::opt::pareto::{pareto_front, ObjPoint};
 use crate::opt::{AskCtx, Optimizer, Space};
 use crate::sim::fast::{BlockInfo, ChannelStats, RunInfo, SimOutcome};
 use crate::sim::scenario::ScenarioSim;
+use crate::sim::{BackendKind, SimOptions};
 use crate::trace::workload::Workload;
 use crate::trace::Trace;
 use std::collections::{HashMap, HashSet};
@@ -597,6 +602,9 @@ pub struct EvalEngine {
     /// clamp canonicalization, scenario early exit). On by default;
     /// `--no-prune` / sweep `"prune": false` turn it off for A/B runs.
     prune: bool,
+    /// Which simulation backend the bank (and every pool worker's clone
+    /// of it) runs — the CLI's `--backend {fast,compiled}`.
+    sim_backend: BackendKind,
     canon: Canonicalizer,
     oracle: FeasibilityOracle,
     /// Per-scenario latencies memoized by canonical key — the
@@ -634,6 +642,29 @@ impl EvalEngine {
         backend: Box<dyn BramBatch>,
         jobs: usize,
     ) -> EvalEngine {
+        Self::for_workload_full(workload, backend, jobs, BackendKind::Fast)
+    }
+
+    /// Workload engine with the native BRAM backend and an explicit
+    /// simulation backend (`--backend {fast,compiled}`).
+    pub fn for_workload_with_sim(
+        workload: Arc<Workload>,
+        jobs: usize,
+        sim_backend: BackendKind,
+    ) -> EvalEngine {
+        Self::for_workload_full(workload, Box::new(NativeBram), jobs, sim_backend)
+    }
+
+    /// Full control: workload, BRAM backend, worker count, and the
+    /// simulation backend every worker's [`ScenarioSim`] bank runs. The
+    /// memo/oracle/clamp layers are backend-agnostic, so everything above
+    /// the bank behaves identically whichever backend is selected.
+    pub fn for_workload_full(
+        workload: Arc<Workload>,
+        backend: Box<dyn BramBatch>,
+        jobs: usize,
+        sim_backend: BackendKind,
+    ) -> EvalEngine {
         let widths: Vec<u32> = workload
             .primary()
             .channels
@@ -642,7 +673,7 @@ impl EvalEngine {
             .collect();
         let jobs = jobs.max(1);
         let cache = Arc::new(ShardedCache::new((jobs * 4).clamp(4, 64)));
-        let sim = ScenarioSim::new(&workload);
+        let sim = ScenarioSim::with_backend(&workload, SimOptions::default(), sim_backend);
         let pool = if jobs > 1 {
             Some(WorkerPool::new(&sim, jobs, Some(Arc::clone(&cache))))
         } else {
@@ -663,10 +694,16 @@ impl EvalEngine {
             stats: EngineStats::default(),
             start: Instant::now(),
             prune: true,
+            sim_backend,
             canon,
             oracle,
             scenario_memo: HashMap::new(),
         }
+    }
+
+    /// The simulation backend the engine's bank (and workers) run.
+    pub fn sim_backend(&self) -> BackendKind {
+        self.sim_backend
     }
 
     /// The workload being optimized.
@@ -1582,5 +1619,34 @@ mod tests {
             })
             .collect();
         assert_eq!(runs[0], runs[1]);
+    }
+
+    #[test]
+    fn compiled_backend_engine_is_identical_to_fast() {
+        // Backend selection must be invisible above the bank: identical
+        // histories (latency and BRAM per proposal) for the same
+        // optimizer/seed, serial and parallel, single-trace and workload.
+        let w = fig2_workload(&[8, 16, 12]);
+        let space = Space::from_workload(&w);
+        for jobs in [1usize, 4] {
+            let histories: Vec<Vec<(Box<[u32]>, Option<u64>, u32)>> =
+                [BackendKind::Fast, BackendKind::Compiled]
+                    .iter()
+                    .map(|&kind| {
+                        let mut ev = EvalEngine::for_workload_with_sim(w.clone(), jobs, kind);
+                        assert_eq!(ev.sim_backend(), kind);
+                        let mut o = crate::opt::random::RandomSearch::new(13, false);
+                        drive(&mut o, &mut ev, &space, 96);
+                        ev.history
+                            .iter()
+                            .map(|p| (p.depths.clone(), p.latency, p.bram))
+                            .collect()
+                    })
+                    .collect();
+            assert_eq!(
+                histories[0], histories[1],
+                "jobs={jobs}: compiled backend diverged from fast"
+            );
+        }
     }
 }

@@ -22,7 +22,9 @@
 //! [`Workload`] and the run sizes for the worst case over all of them.
 //! (`"threads"` is accepted as a legacy alias of `"jobs"`; `"prune":
 //! false` disables the simulation-free pruning layer for A/B runs, like
-//! the CLI's `--no-prune`.)
+//! the CLI's `--no-prune`; `"backend": "fast" | "compiled"` selects the
+//! simulation backend, like the CLI's `--backend` — results are
+//! bit-identical either way, only the throughput profile differs.)
 
 use crate::bench_suite;
 use crate::dse::{drive, Evaluator};
@@ -57,6 +59,9 @@ pub struct SweepConfig {
     /// default; `"prune": false` is the sweep-config escape hatch
     /// mirroring the CLI's `--no-prune`.
     pub prune: bool,
+    /// Simulation backend (`"backend"` key; mirrors the CLI's
+    /// `--backend {fast,compiled}`).
+    pub backend: crate::sim::BackendKind,
     pub out_dir: Option<String>,
 }
 
@@ -136,6 +141,11 @@ impl SweepConfig {
             .or_else(|| j.get("threads"))
             .and_then(|v| v.as_u64())
             .unwrap_or(1) as usize;
+        let backend = match j.get("backend").and_then(|v| v.as_str()) {
+            None => crate::sim::BackendKind::Fast,
+            Some(s) => crate::sim::BackendKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown backend '{s}' (expected fast|compiled)"))?,
+        };
         Ok(SweepConfig {
             designs,
             optimizers,
@@ -148,6 +158,7 @@ impl SweepConfig {
             jobs,
             alpha: j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.7),
             prune: j.get("prune").and_then(|v| v.as_bool()).unwrap_or(true),
+            backend,
             out_dir: j
                 .get("out_dir")
                 .and_then(|v| v.as_str())
@@ -206,7 +217,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
         };
         let workload = Arc::new(workload);
         let space = Space::from_workload(&workload);
-        let mut ev = Evaluator::for_workload(workload.clone(), cfg.jobs);
+        let mut ev = Evaluator::for_workload_with_sim(workload.clone(), cfg.jobs, cfg.backend);
         ev.set_prune(cfg.prune);
         let (maxp, minp) = ev.eval_baselines();
         let (base_lat, base_bram) = (
@@ -388,6 +399,40 @@ mod tests {
         assert!(on[0].sims <= off[0].sims, "pruning must never add sims");
         assert_eq!(off[0].oracle_rate, 0.0);
         assert_eq!(off[0].sims_avoided, 0);
+    }
+
+    #[test]
+    fn backend_key_selects_simulator_and_never_changes_results() {
+        let grid = |backend: &str| {
+            let j = Json::parse(&format!(
+                r#"{{"designs": [{{"design": "fig2", "scenarios": [[8], [16]]}}],
+                    "optimizers": ["grouped_sa"], "budget": 60, "seeds": [1],
+                    "jobs": 1, "backend": "{backend}"}}"#
+            ))
+            .unwrap();
+            run_sweep(&SweepConfig::from_json(&j).unwrap()).unwrap()
+        };
+        let fast = grid("fast");
+        let compiled = grid("compiled");
+        assert_eq!(fast[0].star_latency, compiled[0].star_latency);
+        assert_eq!(fast[0].star_bram, compiled[0].star_bram);
+        assert_eq!(fast[0].front_size, compiled[0].front_size);
+        assert_eq!(fast[0].evals, compiled[0].evals);
+        assert_eq!(fast[0].sims, compiled[0].sims);
+
+        let defaulted = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy"]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            SweepConfig::from_json(&defaulted).unwrap().backend,
+            crate::sim::BackendKind::Fast
+        );
+        let bad = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy"], "backend": "gpu"}"#,
+        )
+        .unwrap();
+        assert!(SweepConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -19,14 +19,23 @@
 //!   [`Workload`](trace::workload::Workload) — the unit of scenario-robust
 //!   sizing (with JSON serde for scenario sets).
 //! - [`sim`] — latency evaluation of a trace under any FIFO depth
-//!   assignment: the fast commit-time simulator ([`sim::fast`], the
-//!   LightningSim phase-2 analog, µs–ms per configuration, with
-//!   delta-incremental replay of the retained schedule), the multi-trace
-//!   scenario bank ([`sim::scenario`]: one retained-schedule simulator per
+//!   assignment, behind the [`SimBackend`](sim::SimBackend) trait: the
+//!   event-driven fast simulator ([`sim::fast`], the LightningSim
+//!   phase-2 analog, µs–ms per configuration, with delta-incremental
+//!   replay of the retained schedule), the graph-compiled simulator
+//!   ([`sim::compiled`], the LightningSimV2 analog: the trace is lowered
+//!   once into a static event graph — program-order, read-after-write
+//!   and depth-parameterized full-FIFO edges — and each configuration is
+//!   a longest-path propagation with depth-edge-only invalidation;
+//!   select per run with `--backend {fast,compiled}`), the multi-trace
+//!   scenario bank ([`sim::scenario`]: one retained-schedule backend per
 //!   workload scenario, worst-case/weighted aggregation, max-merged
 //!   channel stats), the golden cycle-stepped reference ([`sim::golden`],
-//!   the C/RTL co-simulation analog), and the co-simulation runtime cost
-//!   model ([`sim::cosim`]).
+//!   the C/RTL co-simulation analog, now exercised on every shipped
+//!   design family), and the co-simulation runtime cost model
+//!   ([`sim::cosim`]). The unified conformance harness
+//!   (`tests/backend_conformance.rs`) pins every backend bit-identical
+//!   to the others and latency-exact against golden.
 //! - [`bram`] — the BRAM18K allocation model (paper Algorithm 1), the
 //!   shift-register threshold, and the depth-breakpoint pruning of §III-C.
 //! - [`opt`] — the optimizers of §III-D (random, grouped random, simulated
@@ -61,7 +70,9 @@
 //! - [`report`] — CSV/JSON emitters and ASCII plots for benches.
 //! - [`cli`] — the command-line front end.
 //! - [`util`] — PRNG, statistics, JSON, and a mini property-test driver
-//!   (the offline crate mirror lacks rand/serde/proptest).
+//!   plus the shared fuzz-generator set ([`util::prop`]) every
+//!   randomized suite draws from (the offline crate mirror lacks
+//!   rand/serde/proptest).
 
 pub mod bench_suite;
 pub mod bram;
@@ -77,7 +88,9 @@ pub mod util;
 
 
 pub use ir::{Design, DesignBuilder};
+pub use sim::compiled::CompiledSim;
 pub use sim::fast::{FastSim, SimOutcome};
 pub use sim::scenario::ScenarioSim;
+pub use sim::{BackendKind, SimBackend};
 pub use trace::workload::Workload;
 pub use trace::Trace;

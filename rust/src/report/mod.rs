@@ -34,6 +34,7 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
     let s = engine.stats();
     Json::obj(vec![
         ("jobs", Json::Num(engine.jobs() as f64)),
+        ("sim_backend", Json::Str(engine.sim_backend().name().into())),
         ("cache_shards", Json::Num(engine.cache_shards() as f64)),
         ("proposals", Json::Num(s.proposals as f64)),
         ("cache_hits", Json::Num(s.cache_hits as f64)),
@@ -97,10 +98,14 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
     } else {
         ", pruning off".into()
     };
+    let backend = match engine.sim_backend() {
+        crate::sim::BackendKind::Fast => String::new(),
+        other => format!(", {} backend", other.name()),
+    };
     format!(
         "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s ({:.0} proposals/s), \
          {:.0}% worker utilization, \
-         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed){pruning}{scenarios}",
+         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed){backend}{pruning}{scenarios}",
         engine.jobs(),
         engine.cache_shards(),
         s.hit_rate() * 100.0,

@@ -1,0 +1,788 @@
+//! The graph-compiled trace simulator — the LightningSimV2 analog.
+//!
+//! Where [`FastSim`](super::fast::FastSim) *interprets* the trace on every
+//! evaluation (event-driven replay with process cursors, parking and
+//! wake-ups), `CompiledSim` **compiles the trace once** into a static
+//! event graph and evaluates each FIFO configuration as a longest-path
+//! propagation over it:
+//!
+//! - **Nodes** are channel op commits — one node per trace op, numbered
+//!   contiguously per process (node `base[p] + k` is op `k` of process
+//!   `p`), each carrying its channel, ordinal, delay and direction.
+//! - **Edges** are the cycle-semantics constraints:
+//!   - *program order*: op `k` starts no earlier than
+//!     `commit(k−1) + 1 + delay(k)` — a static edge to the previous node;
+//!   - *read-after-write*: read ordinal `j` on channel `c` waits
+//!     `rl(c)` cycles on write `j` — statically known endpoints, with a
+//!     per-channel weight that depends only on the depth's SRL↔BRAM
+//!     class;
+//!   - *full-FIFO*: write ordinal `j` on a depth-`d` channel waits one
+//!     cycle on read `j − d` — the only **depth-parameterized** edges,
+//!     re-derived per configuration from the compiled per-channel
+//!     ordinal→node tables.
+//!
+//! A configuration is evaluated by Kahn propagation: static in-degrees
+//! (program order + read-after-write) are restored with one `memcpy`,
+//! the depth edges mark each channel's write tail, and a worklist commits
+//! nodes whose predecessors are all committed, taking the `max` of their
+//! arrival times — the same unique least fixpoint the event-driven and
+//! golden simulators compute, so outcomes (latency, deadlock verdict
+//! *and* blocked sets) are bit-identical to [`FastSim`]
+//! (`tests/backend_conformance.rs` enforces this). A deadlock is simply a
+//! node whose in-degree never reaches zero; the blocked set falls out of
+//! the per-process committed counters.
+//!
+//! # Depth-edge-only incremental re-evaluation
+//!
+//! Between evaluations only the depth-parameterized edges (and the
+//! per-channel read-latency weights) can change, so `CompiledSim` retains
+//! the node commit times and re-evaluates a delta by invalidating exactly
+//! the region a depth change can reach: the same per-process checkpoint
+//! fixpoint as [`FastSim`]'s delta replay (seeded from dirty channels,
+//! propagated over [`ChanOpIndex`]), then a Kahn pass restricted to the
+//! invalid node suffixes, reading retained times across the
+//! valid/invalid boundary. This composes with the engine's locality-aware
+//! dispatch and PR 2's delta semantics: the same [`RunInfo`] telemetry
+//! (incremental flag, dirty channels, replayed vs total ops) feeds the
+//! same engine counters, whichever backend is selected.
+//!
+//! [`FastSim`]: super::fast::FastSim
+
+use super::fast::{BlockInfo, ChannelStats, RunInfo, SimOutcome};
+use super::{SimBackend, SimOptions};
+use crate::trace::{ChanOpIndex, Trace};
+use std::sync::Arc;
+
+const WRITE_FLAG: u32 = 1 << 31;
+const NONE: u32 = u32::MAX;
+const NO_TIME: u64 = u64::MAX;
+
+/// Fall back to a full evaluation when the checkpoint fixpoint shows at
+/// least this percentage of nodes must be recomputed anyway (same gate as
+/// [`FastSim`](super::fast::FastSim)'s delta replay).
+const INCR_FALLBACK_PCT: u64 = 90;
+
+/// The graph-compiled simulator. Construction compiles the trace;
+/// [`simulate`](CompiledSim::simulate) evaluates one depth vector per
+/// call with zero heap allocation. `Clone` duplicates the per-eval
+/// scratch and retained times; the trace, the op-index maps and the
+/// compiled graph tables are shared.
+#[derive(Clone)]
+pub struct CompiledSim {
+    trace: Arc<Trace>,
+    opts: SimOptions,
+    index: Arc<ChanOpIndex>,
+    widths: Vec<u32>,
+    /// First node id of each process (node = base[p] + op index).
+    base: Arc<[u32]>,
+    /// One-past-last node id of each process.
+    pend: Arc<[u32]>,
+    /// Per node: channel | WRITE_FLAG.
+    node_code: Arc<[u32]>,
+    /// Per node: compute delay before the op.
+    node_delay: Arc<[u32]>,
+    /// Per node: ordinal among its channel's same-kind ops.
+    node_ord: Arc<[u32]>,
+    /// Per node: owning process.
+    node_proc: Arc<[u32]>,
+    /// Per channel: node ids of its writes/reads, by ordinal.
+    wr_node: Arc<[Box<[u32]>]>,
+    rd_node: Arc<[Box<[u32]>]>,
+    /// Static in-degrees: program order + read-after-write edges only
+    /// (the depth edges are added per evaluation).
+    indeg0: Arc<[u8]>,
+    /// Nodes that can have in-degree 0: process-first writes.
+    roots: Arc<[u32]>,
+    // --- per-eval scratch / retained state ---
+    /// Node commit times (retained between runs for delta re-evaluation).
+    time: Vec<u64>,
+    indeg: Vec<u8>,
+    queue: Vec<u32>,
+    /// Per process: ops committed by the most recent evaluation.
+    done: Vec<u32>,
+    /// Per process: first op index recomputed by the current delta pass
+    /// (0 on cold evaluations — everything is recomputed).
+    restart: Vec<u32>,
+    rd_lat: Vec<u64>,
+    incremental: bool,
+    last_depths: Vec<u32>,
+    last_outcome: Option<SimOutcome>,
+    info: RunInfo,
+    /// Scratch: per-process invalidation checkpoint (op index).
+    ckpt: Vec<u32>,
+    wl: Vec<u32>,
+    in_wl: Vec<bool>,
+}
+
+impl CompiledSim {
+    /// Compile a trace into the static event graph.
+    pub fn new(trace: Arc<Trace>) -> CompiledSim {
+        Self::with_options(trace, SimOptions::default())
+    }
+
+    /// [`new`](Self::new) with explicit [`SimOptions`].
+    pub fn with_options(trace: Arc<Trace>, opts: SimOptions) -> CompiledSim {
+        let nch = trace.channels.len();
+        let nproc = trace.ops.len();
+        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        let index = Arc::new(ChanOpIndex::build(&trace));
+        let mut base = Vec::with_capacity(nproc);
+        let mut pend = Vec::with_capacity(nproc);
+        let mut n_nodes = 0usize;
+        for ops in &trace.ops {
+            base.push(n_nodes as u32);
+            n_nodes += ops.len();
+            pend.push(n_nodes as u32);
+        }
+        let mut node_code = Vec::with_capacity(n_nodes);
+        let mut node_delay = Vec::with_capacity(n_nodes);
+        let mut node_ord = Vec::with_capacity(n_nodes);
+        let mut node_proc = Vec::with_capacity(n_nodes);
+        let mut indeg0 = Vec::with_capacity(n_nodes);
+        let mut roots = Vec::new();
+        for (p, ops) in trace.ops.iter().enumerate() {
+            for (k, op) in ops.iter().enumerate() {
+                let flag = if op.is_write() { WRITE_FLAG } else { 0 };
+                node_code.push(op.chan() as u32 | flag);
+                node_delay.push(op.delay);
+                node_ord.push(index.op_ord[p][k]);
+                node_proc.push(p as u32);
+                // Static in-degree: the program-order edge (k > 0) plus,
+                // for reads, the read-after-write edge (write `j` always
+                // exists — trace collection only records matched reads).
+                indeg0.push(u8::from(k > 0) + u8::from(!op.is_write()));
+                if k == 0 && op.is_write() {
+                    // A process-first write has channel ordinal 0 (SPSC:
+                    // all writes on its channel come from this process),
+                    // so it carries no depth edge for any depth ≥ 1 —
+                    // the only way a node starts at in-degree 0.
+                    roots.push(base[p]);
+                }
+            }
+        }
+        let wr_node: Vec<Box<[u32]>> = (0..nch)
+            .map(|c| {
+                index.wr_ops[c]
+                    .iter()
+                    .map(|&op_i| base[index.writer[c] as usize] + op_i)
+                    .collect()
+            })
+            .collect();
+        let rd_node: Vec<Box<[u32]>> = (0..nch)
+            .map(|c| {
+                index.rd_ops[c]
+                    .iter()
+                    .map(|&op_i| base[index.reader[c] as usize] + op_i)
+                    .collect()
+            })
+            .collect();
+        CompiledSim {
+            trace,
+            opts,
+            index,
+            widths,
+            base: base.into(),
+            pend: pend.into(),
+            node_code: node_code.into(),
+            node_delay: node_delay.into(),
+            node_ord: node_ord.into(),
+            node_proc: node_proc.into(),
+            wr_node: wr_node.into(),
+            rd_node: rd_node.into(),
+            indeg0: indeg0.into(),
+            roots: roots.into(),
+            time: vec![0; n_nodes],
+            indeg: vec![0; n_nodes],
+            queue: Vec::with_capacity(nproc.max(16)),
+            done: vec![0; nproc],
+            restart: vec![0; nproc],
+            rd_lat: vec![0; nch],
+            incremental: true,
+            last_depths: Vec::with_capacity(nch),
+            last_outcome: None,
+            info: RunInfo::default(),
+            ckpt: vec![0; nproc],
+            wl: Vec::with_capacity(nproc),
+            in_wl: vec![false; nproc],
+        }
+    }
+
+    /// The trace this simulator evaluates.
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
+    }
+
+    /// Enable/disable retained-time delta re-evaluation (on by default).
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
+        if !on {
+            self.last_outcome = None;
+            self.last_depths.clear();
+        }
+    }
+
+    /// Telemetry of the most recent evaluation (same semantics as
+    /// [`FastSim::last_run`](super::fast::FastSim::last_run)).
+    pub fn last_run(&self) -> RunInfo {
+        self.info
+    }
+
+    /// Evaluate one FIFO depth configuration.
+    pub fn simulate(&mut self, depths: &[u32]) -> SimOutcome {
+        self.run(depths)
+    }
+
+    /// Evaluate with per-channel occupancy/stall statistics (allocating
+    /// convenience over
+    /// [`simulate_with_stats_into`](Self::simulate_with_stats_into)).
+    pub fn simulate_with_stats(&mut self, depths: &[u32]) -> (SimOutcome, ChannelStats) {
+        let mut stats = ChannelStats::new();
+        let out = self.simulate_with_stats_into(depths, &mut stats);
+        (out, stats)
+    }
+
+    /// Evaluate and collect statistics into a caller-owned buffer. The
+    /// post-passes read the retained node times through the compiled
+    /// ordinal→node tables, mirroring [`FastSim`]'s exactly.
+    ///
+    /// [`FastSim`]: super::fast::FastSim
+    pub fn simulate_with_stats_into(
+        &mut self,
+        depths: &[u32],
+        stats: &mut ChannelStats,
+    ) -> SimOutcome {
+        let outcome = self.run(depths);
+        let trace = self.trace.clone();
+        let index = self.index.clone();
+        let nch = trace.channels.len();
+        stats.max_occupancy.clear();
+        stats.max_occupancy.resize(nch, 0);
+        stats.write_stall.clear();
+        stats.write_stall.resize(nch, 0);
+        stats.read_stall.clear();
+        stats.read_stall.resize(nch, 0);
+        // Occupancy: per channel, committed writes/reads each commit in
+        // nondecreasing ordinal time, so a sorted merge tracks occupancy
+        // (writes before reads at equal times, as in FastSim).
+        for ch in 0..nch {
+            let w = index.writer[ch];
+            let wrc = if w == NONE {
+                0
+            } else {
+                index.wr_ops[ch].partition_point(|&i| i < self.done[w as usize])
+            };
+            let r = index.reader[ch];
+            let rdc = if r == NONE {
+                0
+            } else {
+                index.rd_ops[ch].partition_point(|&i| i < self.done[r as usize])
+            };
+            let (mut wi, mut ri) = (0usize, 0usize);
+            let mut occ: i64 = 0;
+            let mut max_occ: i64 = 0;
+            while wi < wrc || ri < rdc {
+                let take_write = wi < wrc
+                    && (ri >= rdc
+                        || self.time[self.wr_node[ch][wi] as usize]
+                            <= self.time[self.rd_node[ch][ri] as usize]);
+                if take_write {
+                    occ += 1;
+                    max_occ = max_occ.max(occ);
+                    wi += 1;
+                } else {
+                    occ -= 1;
+                    ri += 1;
+                }
+            }
+            stats.max_occupancy[ch] = max_occ.max(0) as u32;
+        }
+        // Stalls: unconstrained start vs committed time, per process.
+        for (pid, ops) in trace.ops.iter().enumerate() {
+            let committed = self.done[pid] as usize;
+            let b = self.base[pid] as usize;
+            let mut prev: u64 = NO_TIME;
+            for (k, op) in ops[..committed].iter().enumerate() {
+                let ch = op.chan();
+                let start = if prev == NO_TIME {
+                    op.delay as u64
+                } else {
+                    prev + 1 + op.delay as u64
+                };
+                let commit = self.time[b + k];
+                let stall = commit.saturating_sub(start);
+                if op.is_write() {
+                    stats.write_stall[ch] += stall;
+                } else {
+                    stats.read_stall[ch] += stall;
+                }
+                prev = commit;
+            }
+        }
+        outcome
+    }
+
+    /// Dispatch one evaluation: delta pass against the retained times
+    /// when possible, full graph pass otherwise.
+    fn run(&mut self, depths: &[u32]) -> SimOutcome {
+        let nch = self.trace.channels.len();
+        assert_eq!(
+            depths.len(),
+            nch,
+            "configuration has {} depths, design has {} FIFOs",
+            depths.len(),
+            nch
+        );
+        self.info = RunInfo {
+            total_ops: self.trace.total_ops() as u64,
+            ..RunInfo::default()
+        };
+        let attempt = if self.incremental && self.last_outcome.is_some() {
+            self.try_incremental(depths)
+        } else {
+            None
+        };
+        let out = match attempt {
+            Some(out) => out,
+            None => self.eval_cold(depths),
+        };
+        if self.incremental {
+            self.last_depths.clear();
+            self.last_depths.extend_from_slice(depths);
+            self.last_outcome = Some(out.clone());
+        }
+        out
+    }
+
+    /// Cold path: restore static in-degrees, add the depth edges, and
+    /// propagate the whole graph.
+    fn eval_cold(&mut self, depths: &[u32]) -> SimOutcome {
+        let trace = self.trace.clone();
+        let nch = trace.channels.len();
+        for ch in 0..nch {
+            self.rd_lat[ch] =
+                super::read_latency(depths[ch], self.widths[ch], self.opts.uniform_read_latency);
+        }
+        self.indeg.copy_from_slice(&self.indeg0);
+        // Depth edges: write ordinal j ≥ d waits on read j − d. Ordinals
+        // past the read count wait on a read that never happens — their
+        // in-degree contribution is simply never decremented.
+        for ch in 0..nch {
+            let d = depths[ch] as usize;
+            let wr = &self.wr_node[ch];
+            if d < wr.len() {
+                for &n in &wr[d..] {
+                    self.indeg[n as usize] += 1;
+                }
+            }
+        }
+        for v in &mut self.done {
+            *v = 0;
+        }
+        for v in &mut self.restart {
+            *v = 0;
+        }
+        self.queue.clear();
+        let roots = self.roots.clone();
+        for &r in roots.iter() {
+            // `indeg == 0` guards the degenerate depth-0 case, where even
+            // ordinal-0 writes carry a (cyclic) depth edge.
+            if self.indeg[r as usize] == 0 {
+                self.queue.push(r);
+            }
+        }
+        let pops = self.propagate(depths);
+        self.info.replayed_ops = pops;
+        self.outcome(&trace)
+    }
+
+    /// Delta path: seed invalidation from the dirty channels, run the
+    /// per-process checkpoint fixpoint (identical rules to `FastSim`'s
+    /// delta replay), then propagate only the invalid node suffixes,
+    /// reading retained times across the boundary. Returns `None` when a
+    /// full pass is the better choice.
+    fn try_incremental(&mut self, depths: &[u32]) -> Option<SimOutcome> {
+        let trace = self.trace.clone();
+        let index = self.index.clone();
+        let nch = trace.channels.len();
+        let nproc = trace.ops.len();
+
+        // Shared delta-invalidation core (the SAME implementation FastSim
+        // runs — see [`super::delta_checkpoints`]): dirty-channel seeding
+        // against the retained `rd_lat`, then the checkpoint fixpoint
+        // over [`ChanOpIndex`].
+        let n_dirty = super::delta_checkpoints(
+            &trace,
+            &index,
+            &self.last_depths,
+            depths,
+            &self.rd_lat,
+            &self.widths,
+            self.opts.uniform_read_latency,
+            &mut self.ckpt,
+            &mut self.wl,
+            &mut self.in_wl,
+        );
+        self.info.dirty_channels = n_dirty;
+        if n_dirty == 0 {
+            self.info.incremental = true;
+            return self.last_outcome.clone();
+        }
+
+        // Cost gate: fall back to the plain full pass when (almost)
+        // everything is invalid anyway.
+        let total = self.info.total_ops;
+        let invalid = super::invalid_ops(&trace, &self.ckpt);
+        if invalid * 100 >= total * INCR_FALLBACK_PCT {
+            self.info.dirty_channels = 0;
+            return None;
+        }
+
+        // Invalid region: everything from min(checkpoint, committed) —
+        // previously-uncommitted nodes are always re-attempted, since a
+        // depth change elsewhere may have unblocked them.
+        for ch in 0..nch {
+            self.rd_lat[ch] =
+                super::read_latency(depths[ch], self.widths[ch], self.opts.uniform_read_latency);
+        }
+        for p in 0..nproc {
+            self.restart[p] = self.ckpt[p].min(self.done[p]);
+        }
+        self.queue.clear();
+        for p in 0..nproc {
+            let restart = self.restart[p] as usize;
+            let len = trace.ops[p].len();
+            let b = self.base[p] as usize;
+            for k in restart..len {
+                let n = b + k;
+                let code = self.node_code[n];
+                let is_write = code & WRITE_FLAG != 0;
+                let ch = (code & !WRITE_FLAG) as usize;
+                let j = self.node_ord[n] as usize;
+                // In-degree counts only *invalid* predecessors; valid
+                // ones keep their retained times and are read directly.
+                let mut dg: u8 = u8::from(k > restart);
+                if is_write {
+                    let d = depths[ch] as u64;
+                    if j as u64 >= d {
+                        let need = (j as u64 - d) as usize;
+                        if need >= self.rd_node[ch].len() {
+                            dg += 1; // unsatisfiable: waits forever
+                        } else {
+                            let rn = self.rd_node[ch][need] as usize;
+                            let rp = self.node_proc[rn] as usize;
+                            if rn - self.base[rp] as usize >= self.restart[rp] as usize {
+                                dg += 1;
+                            }
+                        }
+                    }
+                } else {
+                    let wn = self.wr_node[ch][j] as usize;
+                    let wp = self.node_proc[wn] as usize;
+                    if wn - self.base[wp] as usize >= self.restart[wp] as usize {
+                        dg += 1;
+                    }
+                }
+                self.indeg[n] = dg;
+                if dg == 0 {
+                    self.queue.push(n as u32);
+                }
+            }
+            self.done[p] = self.restart[p];
+        }
+
+        self.info.incremental = true;
+        let pops = self.propagate(depths);
+        self.info.replayed_ops = pops;
+        Some(self.outcome(&trace))
+    }
+
+    /// Kahn propagation from the current queue/in-degree state. Nodes
+    /// below their process's `restart` index are the valid retained
+    /// prefix — their times are read, never recomputed, and they receive
+    /// no decrements. Returns the number of nodes committed.
+    fn propagate(&mut self, depths: &[u32]) -> u64 {
+        let mut pops = 0u64;
+        while let Some(start_node) = self.queue.pop() {
+            let mut n = start_node as usize;
+            loop {
+                let p = self.node_proc[n] as usize;
+                let code = self.node_code[n];
+                let is_write = code & WRITE_FLAG != 0;
+                let ch = (code & !WRITE_FLAG) as usize;
+                let j = self.node_ord[n] as usize;
+                let delay = self.node_delay[n] as u64;
+                let start = if n == self.base[p] as usize {
+                    delay
+                } else {
+                    self.time[n - 1] + 1 + delay
+                };
+                let t = if is_write {
+                    let d = depths[ch] as usize;
+                    if j >= d {
+                        start.max(self.time[self.rd_node[ch][j - d] as usize] + 1)
+                    } else {
+                        start
+                    }
+                } else {
+                    start.max(self.time[self.wr_node[ch][j] as usize] + self.rd_lat[ch])
+                };
+                self.time[n] = t;
+                self.done[p] += 1;
+                pops += 1;
+                // Cross-process successor: the read this write feeds, or
+                // the write whose slot this read frees.
+                if is_write {
+                    if j < self.rd_node[ch].len() {
+                        let r = self.rd_node[ch][j];
+                        self.dec_if_pending(r);
+                    }
+                } else {
+                    let w = j as u64 + depths[ch] as u64;
+                    if (w as usize as u64) == w && (w as usize) < self.wr_node[ch].len() {
+                        let wn = self.wr_node[ch][w as usize];
+                        self.dec_if_pending(wn);
+                    }
+                }
+                // Program-order successor: chain-follow when it was only
+                // waiting on us (long compute runs commit without any
+                // queue traffic).
+                let nx = n + 1;
+                if nx < self.pend[p] as usize {
+                    self.indeg[nx] -= 1;
+                    if self.indeg[nx] == 0 {
+                        n = nx;
+                        continue;
+                    }
+                }
+                break;
+            }
+        }
+        pops
+    }
+
+    /// Decrement a pending node's in-degree (valid retained-prefix nodes
+    /// counted no such predecessor and are skipped).
+    #[inline]
+    fn dec_if_pending(&mut self, m: u32) {
+        let mu = m as usize;
+        let p = self.node_proc[mu] as usize;
+        if mu - self.base[p] as usize < self.restart[p] as usize {
+            return;
+        }
+        self.indeg[mu] -= 1;
+        if self.indeg[mu] == 0 {
+            self.queue.push(m);
+        }
+    }
+
+    /// Outcome extraction from the committed counters and node times
+    /// (identical formulas and blocked-set order to `FastSim`).
+    fn outcome(&mut self, trace: &Trace) -> SimOutcome {
+        let nproc = trace.ops.len();
+        let mut blocked = Vec::new();
+        for p in 0..nproc {
+            let done = self.done[p] as usize;
+            if done < trace.ops[p].len() {
+                let op = trace.ops[p][done];
+                blocked.push(BlockInfo {
+                    process: p,
+                    channel: op.chan(),
+                    on_write: op.is_write(),
+                });
+            }
+        }
+        if !blocked.is_empty() {
+            return SimOutcome::Deadlock { blocked };
+        }
+        let mut latency = 0u64;
+        for p in 0..nproc {
+            let done_t = if trace.ops[p].is_empty() {
+                trace.tail_delays[p]
+            } else {
+                self.time[self.pend[p] as usize - 1] + 1 + trace.tail_delays[p]
+            };
+            latency = latency.max(done_t);
+        }
+        SimOutcome::Done { latency }
+    }
+}
+
+impl SimBackend for CompiledSim {
+    fn name(&self) -> &'static str {
+        "compiled"
+    }
+    fn trace(&self) -> &Arc<Trace> {
+        CompiledSim::trace(self)
+    }
+    fn simulate(&mut self, depths: &[u32]) -> SimOutcome {
+        CompiledSim::simulate(self, depths)
+    }
+    fn simulate_with_stats_into(&mut self, depths: &[u32], stats: &mut ChannelStats) -> SimOutcome {
+        CompiledSim::simulate_with_stats_into(self, depths, stats)
+    }
+    fn last_run(&self) -> RunInfo {
+        CompiledSim::last_run(self)
+    }
+    fn set_incremental(&mut self, on: bool) {
+        CompiledSim::set_incremental(self, on)
+    }
+    fn clone_box(&self) -> Box<dyn SimBackend> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DesignBuilder, Expr};
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+
+    fn compiled_for(design: &crate::ir::Design, args: &[i64]) -> CompiledSim {
+        let t = collect_trace(design, args).unwrap();
+        CompiledSim::new(Arc::new(t))
+    }
+
+    fn pipe_design(n: u64) -> crate::ir::Design {
+        let mut b = DesignBuilder::new("pipe", 0);
+        let c = b.channel("c", 32);
+        b.process("prod", move |p| {
+            p.for_n(n, |p, _| p.write(c, Expr::c(1)));
+        });
+        b.process("cons", move |p| {
+            p.for_n(n, |p, _| {
+                let _ = p.read(c);
+            });
+        });
+        b.build()
+    }
+
+    #[test]
+    fn pipe_latency_formula() {
+        let d = pipe_design(8);
+        let mut s = compiled_for(&d, &[]);
+        assert_eq!(s.simulate(&[8]), SimOutcome::Done { latency: 9 });
+        assert_eq!(s.simulate(&[2]).latency(), Some(9));
+    }
+
+    #[test]
+    fn depth_one_throttles() {
+        let d = pipe_design(4);
+        let mut s = compiled_for(&d, &[]);
+        assert_eq!(s.simulate(&[1]).latency(), Some(8));
+    }
+
+    #[test]
+    fn fig2_deadlock_blocked_set_matches_fast() {
+        let mut b = DesignBuilder::new("mult_by_2", 1);
+        let x = b.channel("x", 32);
+        let y = b.channel("y", 32);
+        b.process("producer", |p| {
+            p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+            p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+        });
+        b.process("consumer", |p| {
+            p.for_expr(Expr::arg(0), |p, _| {
+                let _ = p.read(x);
+                let _ = p.read(y);
+            });
+        });
+        let design = b.build();
+        let t = Arc::new(collect_trace(&design, &[16]).unwrap());
+        let mut compiled = CompiledSim::new(t.clone());
+        let mut fast = FastSim::new(t);
+        for cfg in [[2u32, 2], [15, 2], [16, 2], [14, 16], [16, 16]] {
+            assert_eq!(
+                compiled.simulate(&cfg),
+                fast.simulate(&cfg),
+                "cfg {cfg:?} (full outcome incl. blocked set)"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_matches_cold_on_mutation_chain() {
+        let d = pipe_design(64);
+        let t = Arc::new(collect_trace(&d, &[]).unwrap());
+        let mut warm = CompiledSim::new(t.clone());
+        let mut cold = CompiledSim::new(t.clone());
+        cold.set_incremental(false);
+        for cfg in [[4u32], [3], [4], [64], [1], [2], [2]] {
+            let w = warm.simulate(&cfg);
+            let c = cold.simulate(&cfg);
+            assert_eq!(w, c, "cfg {cfg:?}");
+            assert!(!cold.last_run().incremental);
+        }
+        // Identical configuration short-circuits with zero replay.
+        let a = warm.simulate(&[2]);
+        assert_eq!(a, warm.simulate(&[2]));
+        assert!(warm.last_run().incremental);
+        assert_eq!(warm.last_run().replayed_ops, 0);
+    }
+
+    #[test]
+    fn srl_bram_flip_invalidates_reads() {
+        // 600-bit channel: depth 1 SRL (rl 1), depth ≥ 3 BRAM (rl 2).
+        let mut b = DesignBuilder::new("flip", 0);
+        let w = b.channel("w", 600);
+        let n = b.channel("n", 8);
+        b.process("p", |p| {
+            p.for_n(32, |p, _| {
+                p.write(w, Expr::c(0));
+                p.write(n, Expr::c(0));
+            });
+        });
+        b.process("q", |p| {
+            p.for_n(32, |p, _| {
+                let _ = p.read(w);
+                let _ = p.read(n);
+            });
+        });
+        let d = b.build();
+        let t = Arc::new(collect_trace(&d, &[]).unwrap());
+        let mut warm = CompiledSim::new(t.clone());
+        let mut fast = FastSim::new(t);
+        for cfg in [[2u32, 8], [4, 8], [2, 8], [32, 8], [1, 8]] {
+            assert_eq!(warm.simulate(&cfg), fast.simulate(&cfg), "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn stats_match_fast_exactly() {
+        let mut b = DesignBuilder::new("slow", 0);
+        let c = b.channel("c", 32);
+        b.process("p", |p| {
+            p.for_n(8, |p, _| p.write(c, Expr::c(0)));
+        });
+        b.process("q", |p| {
+            p.for_n(8, |p, _| {
+                p.delay(3);
+                let _ = p.read(c);
+            });
+        });
+        let d = b.build();
+        let t = Arc::new(collect_trace(&d, &[]).unwrap());
+        let mut compiled = CompiledSim::new(t.clone());
+        let mut fast = FastSim::new(t);
+        for cfg in [[8u32], [2], [1]] {
+            let (co, cs) = compiled.simulate_with_stats(&cfg);
+            let (fo, fs) = fast.simulate_with_stats(&cfg);
+            assert_eq!(co, fo, "cfg {cfg:?}");
+            assert_eq!(cs.max_occupancy, fs.max_occupancy, "cfg {cfg:?}");
+            assert_eq!(cs.write_stall, fs.write_stall, "cfg {cfg:?}");
+            assert_eq!(cs.read_stall, fs.read_stall, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn telemetry_counts_replayed_nodes() {
+        let d = pipe_design(32);
+        let t = Arc::new(collect_trace(&d, &[]).unwrap());
+        let mut s = CompiledSim::new(t);
+        s.simulate(&[32]);
+        let info = s.last_run();
+        assert!(!info.incremental);
+        assert_eq!(info.total_ops, 64);
+        assert_eq!(info.replayed_ops, 64, "cold pass commits every node");
+    }
+}

@@ -495,36 +495,24 @@ impl FastSim {
         let nch = trace.channels.len();
         let nproc = trace.ops.len();
 
-        // Seed invalidation from the dirty channel set. `rd_lat` still
-        // holds the retained run's latencies at this point, so an
-        // SRL↔BRAM crossing shows up as a latency mismatch.
-        for p in 0..nproc {
-            self.ckpt[p] = trace.ops[p].len() as u32;
-        }
-        let mut n_dirty = 0u32;
-        for ch in 0..nch {
-            let d0 = self.last_depths[ch];
-            let d1 = depths[ch];
-            if d0 == d1 {
-                continue;
-            }
-            n_dirty += 1;
-            // Writes from ordinal min(d0, d1) see a different full-FIFO
-            // constraint.
-            let w0 = d0.min(d1) as usize;
-            if let Some(&op_i) = index.wr_ops[ch].get(w0) {
-                let w = index.writer[ch] as usize;
-                self.ckpt[w] = self.ckpt[w].min(op_i);
-            }
-            // An SRL↔BRAM crossing changes the latency of every read.
-            let rl1 = super::read_latency(d1, self.widths[ch], self.opts.uniform_read_latency);
-            if rl1 != self.rd_lat[ch] {
-                if let Some(&op_i) = index.rd_ops[ch].first() {
-                    let r = index.reader[ch] as usize;
-                    self.ckpt[r] = self.ckpt[r].min(op_i);
-                }
-            }
-        }
+        // Shared delta-invalidation core (see [`super::delta_checkpoints`]):
+        // seed from the dirty channel set — `rd_lat` still holds the
+        // retained run's latencies, so an SRL↔BRAM crossing shows up as a
+        // latency mismatch — then run the checkpoint fixpoint. One
+        // implementation serves both backends, so the invalidation rule
+        // cannot silently diverge between them.
+        let n_dirty = super::delta_checkpoints(
+            &trace,
+            &index,
+            &self.last_depths,
+            depths,
+            &self.rd_lat,
+            &self.widths,
+            self.opts.uniform_read_latency,
+            &mut self.ckpt,
+            &mut self.wl,
+            &mut self.in_wl,
+        );
         self.info.dirty_channels = n_dirty;
         if n_dirty == 0 {
             // Identical configuration: the retained schedule *is* the
@@ -533,64 +521,10 @@ impl FastSim {
             return self.last_outcome.clone();
         }
 
-        // Propagate invalidation through the constraint graph to a
-        // fixpoint over per-process checkpoints. Checkpoints only ever
-        // decrease, so the worklist terminates.
-        self.wl.clear();
-        for p in 0..nproc {
-            let invalidated = (self.ckpt[p] as usize) < trace.ops[p].len();
-            self.in_wl[p] = invalidated;
-            if invalidated {
-                self.wl.push(p as u32);
-            }
-        }
-        while let Some(p) = self.wl.pop() {
-            let p = p as usize;
-            self.in_wl[p] = false;
-            let k = self.ckpt[p];
-            for &chu in index.proc_chans[p].iter() {
-                let ch = chu as usize;
-                if index.writer[ch] as usize == p {
-                    // Writes on `ch` from op index `k` are invalid; read
-                    // `j` waits on write `j`.
-                    let w_inv = index.wr_ops[ch].partition_point(|&i| i < k);
-                    if let Some(&op_i) = index.rd_ops[ch].get(w_inv) {
-                        let r = index.reader[ch] as usize;
-                        if op_i < self.ckpt[r] {
-                            self.ckpt[r] = op_i;
-                            if !self.in_wl[r] {
-                                self.in_wl[r] = true;
-                                self.wl.push(r as u32);
-                            }
-                        }
-                    }
-                }
-                if index.reader[ch] as usize == p {
-                    // Reads from ordinal `r_inv` are invalid; write `j`
-                    // waits on read `j - d1` freeing its slot.
-                    let r_inv = index.rd_ops[ch].partition_point(|&i| i < k);
-                    let target = r_inv as u64 + depths[ch] as u64;
-                    if (target as usize) < index.wr_ops[ch].len() {
-                        let op_i = index.wr_ops[ch][target as usize];
-                        let w = index.writer[ch] as usize;
-                        if op_i < self.ckpt[w] {
-                            self.ckpt[w] = op_i;
-                            if !self.in_wl[w] {
-                                self.in_wl[w] = true;
-                                self.wl.push(w as u32);
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
         // Cost gate: when (almost) everything must be replayed, the
         // bookkeeping below is pure overhead — do a plain full replay.
         let total = self.info.total_ops;
-        let invalid: u64 = (0..nproc)
-            .map(|p| (trace.ops[p].len() as u64).saturating_sub(self.ckpt[p] as u64))
-            .sum();
+        let invalid = super::invalid_ops(&trace, &self.ckpt);
         if invalid * 100 >= total * INCR_FALLBACK_PCT {
             // Full replay: keep the documented contract that telemetry
             // reports zero dirty channels for non-incremental runs.
@@ -863,6 +797,30 @@ impl FastSim {
             latency = latency.max(done);
         }
         SimOutcome::Done { latency }
+    }
+}
+
+impl super::SimBackend for FastSim {
+    fn name(&self) -> &'static str {
+        "fast"
+    }
+    fn trace(&self) -> &Arc<Trace> {
+        FastSim::trace(self)
+    }
+    fn simulate(&mut self, depths: &[u32]) -> SimOutcome {
+        FastSim::simulate(self, depths)
+    }
+    fn simulate_with_stats_into(&mut self, depths: &[u32], stats: &mut ChannelStats) -> SimOutcome {
+        FastSim::simulate_with_stats_into(self, depths, stats)
+    }
+    fn last_run(&self) -> RunInfo {
+        FastSim::last_run(self)
+    }
+    fn set_incremental(&mut self, on: bool) {
+        FastSim::set_incremental(self, on)
+    }
+    fn clone_box(&self) -> Box<dyn super::SimBackend> {
+        Box::new(self.clone())
     }
 }
 

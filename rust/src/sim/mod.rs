@@ -1,7 +1,7 @@
 //! Latency evaluation of a [`Trace`](crate::trace::Trace) under a FIFO
 //! depth configuration.
 //!
-//! Two independent implementations of the same cycle semantics:
+//! Three independent implementations of the same cycle semantics:
 //!
 //! - [`fast`] — the production engine (LightningSim phase-2 analog):
 //!   event-driven commit-time propagation, O(total trace ops) per cold
@@ -10,18 +10,32 @@
 //!   a depth change can affect (see the [`fast`] module docs for the
 //!   invalidation rules). Zero allocation in the hot loop after
 //!   construction.
+//! - [`compiled`] — the graph-compiled engine (LightningSimV2 analog):
+//!   the trace is lowered **once** into a static event graph (nodes =
+//!   channel op commits; edges = intra-process program order +
+//!   cross-process full/empty FIFO constraints parameterized by depth),
+//!   and each configuration is evaluated as a longest-path propagation
+//!   over that graph, with depth-edge-only invalidation for incremental
+//!   re-evaluation.
 //! - [`golden`] — a deliberately simple global-time-stepped simulator used
 //!   as the accuracy reference (the paper's C/RTL co-simulation role in
 //!   Table II). Slower, structurally different, obviously correct.
 //!
+//! [`fast`] and [`compiled`] both implement the [`SimBackend`] trait and
+//! are interchangeable everywhere above this module ([`scenario`], the
+//! DSE engine, the CLI's `--backend {fast,compiled}`); the
+//! `tests/backend_conformance.rs` suite pins them bit-identical to each
+//! other (full outcomes, incl. deadlock blocked sets) and latency-exact
+//! against [`golden`].
+//!
 //! [`cosim`] models the *runtime* of traditional HLS/RTL co-simulation for
-//! the Table III comparisons. [`scenario`] lifts [`fast`] from one trace
-//! to a multi-trace [`Workload`](crate::trace::workload::Workload): one
-//! retained-schedule [`FastSim`] per scenario, worst-case/weighted
+//! the Table III comparisons. [`scenario`] lifts any [`SimBackend`] from
+//! one trace to a multi-trace [`Workload`](crate::trace::workload::Workload):
+//! one retained-schedule backend instance per scenario, worst-case/weighted
 //! latency aggregation, deadlock-in-any-scenario infeasibility, and
 //! max-merged channel statistics.
 //!
-//! # Cycle semantics (shared by both simulators)
+//! # Cycle semantics (shared by all simulators)
 //!
 //! - A process executes its trace ops in order at initiation interval 1:
 //!   op `k` may start no earlier than `commit(k-1) + 1 + delay(k)`; the
@@ -40,13 +54,19 @@
 //! - A configuration **deadlocks** iff the commit fixpoint leaves some
 //!   process blocked forever.
 
+pub mod compiled;
 pub mod cosim;
 pub mod fast;
 pub mod golden;
 pub mod scenario;
 
+pub use compiled::CompiledSim;
 pub use fast::{FastSim, RunInfo, SimOutcome};
 pub use scenario::ScenarioSim;
+
+use crate::trace::Trace;
+use fast::ChannelStats;
+use std::sync::Arc;
 
 /// Read latency (cycles from write commit to earliest read commit) for a
 /// FIFO of the given shape under the given depth.
@@ -59,11 +79,220 @@ pub fn read_latency(depth: u32, width_bits: u32, uniform: bool) -> u64 {
     }
 }
 
-/// Simulator options shared by [`fast`] and [`golden`].
+/// Simulator options shared by [`fast`], [`compiled`] and [`golden`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimOptions {
     /// Use read latency 1 for every FIFO regardless of implementation
     /// (disables the SRL/BRAM distinction). Used by property tests, where
     /// it makes latency monotonically non-increasing in depths.
     pub uniform_read_latency: bool,
+}
+
+/// The shared delta-invalidation core both retained-schedule backends
+/// run before an incremental re-evaluation: seed per-process checkpoints
+/// from the dirty channel set (writes from ordinal `min(d0, d1)`; every
+/// read on an SRL↔BRAM read-latency flip, detected against the retained
+/// `rd_lat`), then propagate to a fixpoint over [`ChanOpIndex`]
+/// (checkpoints only ever decrease, so the worklist terminates).
+///
+/// On return `ckpt[p]` is the earliest op index of process `p` whose
+/// commit time can change under `depths`; the caller owns the cost gate
+/// and the rewind. Returns the number of dirty channels (0 = identical
+/// configuration; `ckpt` is all-`len` and `wl` untouched in that case).
+/// Keeping this in ONE place is deliberate: a divergence in the
+/// invalidation rule between backends would break their bit-identity in
+/// ways only warm multi-mutation chains can expose.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn delta_checkpoints(
+    trace: &Trace,
+    index: &crate::trace::ChanOpIndex,
+    last_depths: &[u32],
+    depths: &[u32],
+    rd_lat: &[u64],
+    widths: &[u32],
+    uniform: bool,
+    ckpt: &mut [u32],
+    wl: &mut Vec<u32>,
+    in_wl: &mut [bool],
+) -> u32 {
+    let nch = trace.channels.len();
+    let nproc = trace.ops.len();
+    for p in 0..nproc {
+        ckpt[p] = trace.ops[p].len() as u32;
+    }
+    let mut n_dirty = 0u32;
+    for ch in 0..nch {
+        let d0 = last_depths[ch];
+        let d1 = depths[ch];
+        if d0 == d1 {
+            continue;
+        }
+        n_dirty += 1;
+        // Writes from ordinal min(d0, d1) see a different full-FIFO
+        // constraint.
+        let w0 = d0.min(d1) as usize;
+        if let Some(&op_i) = index.wr_ops[ch].get(w0) {
+            let w = index.writer[ch] as usize;
+            ckpt[w] = ckpt[w].min(op_i);
+        }
+        // An SRL↔BRAM crossing changes the latency of every read.
+        let rl1 = read_latency(d1, widths[ch], uniform);
+        if rl1 != rd_lat[ch] {
+            if let Some(&op_i) = index.rd_ops[ch].first() {
+                let r = index.reader[ch] as usize;
+                ckpt[r] = ckpt[r].min(op_i);
+            }
+        }
+    }
+    if n_dirty == 0 {
+        return 0;
+    }
+    wl.clear();
+    for p in 0..nproc {
+        let invalidated = (ckpt[p] as usize) < trace.ops[p].len();
+        in_wl[p] = invalidated;
+        if invalidated {
+            wl.push(p as u32);
+        }
+    }
+    while let Some(p) = wl.pop() {
+        let p = p as usize;
+        in_wl[p] = false;
+        let k = ckpt[p];
+        for &chu in index.proc_chans[p].iter() {
+            let ch = chu as usize;
+            if index.writer[ch] as usize == p {
+                // Writes on `ch` from op index `k` are invalid; read `j`
+                // waits on write `j`.
+                let w_inv = index.wr_ops[ch].partition_point(|&i| i < k);
+                if let Some(&op_i) = index.rd_ops[ch].get(w_inv) {
+                    let r = index.reader[ch] as usize;
+                    if op_i < ckpt[r] {
+                        ckpt[r] = op_i;
+                        if !in_wl[r] {
+                            in_wl[r] = true;
+                            wl.push(r as u32);
+                        }
+                    }
+                }
+            }
+            if index.reader[ch] as usize == p {
+                // Reads from ordinal `r_inv` are invalid; write `j` waits
+                // on read `j - d1` freeing its slot.
+                let r_inv = index.rd_ops[ch].partition_point(|&i| i < k);
+                let target = r_inv as u64 + depths[ch] as u64;
+                if (target as usize as u64) == target
+                    && (target as usize) < index.wr_ops[ch].len()
+                {
+                    let op_i = index.wr_ops[ch][target as usize];
+                    let w = index.writer[ch] as usize;
+                    if op_i < ckpt[w] {
+                        ckpt[w] = op_i;
+                        if !in_wl[w] {
+                            in_wl[w] = true;
+                            wl.push(w as u32);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    n_dirty
+}
+
+/// Trace ops at or past their process's checkpoint — the numerator of
+/// the shared incremental cost gate.
+pub(crate) fn invalid_ops(trace: &Trace, ckpt: &[u32]) -> u64 {
+    trace
+        .ops
+        .iter()
+        .zip(ckpt)
+        .map(|(ops, &c)| (ops.len() as u64).saturating_sub(c as u64))
+        .sum()
+}
+
+/// A single-trace simulation backend: everything [`ScenarioSim`] (and
+/// through it the DSE engine) needs from a simulator. Implemented by
+/// [`FastSim`] (event-driven, the default) and [`CompiledSim`]
+/// (graph-compiled); both must be **bit-identical** — same latencies,
+/// same deadlock verdicts, same blocked sets — on every trace and depth
+/// vector, which `tests/backend_conformance.rs` enforces. Backends are
+/// `Send` (never `Sync`-shared): each worker thread owns its own clone,
+/// including its own retained schedule.
+pub trait SimBackend: Send {
+    /// Short backend name for reports (`"fast"` / `"compiled"`).
+    fn name(&self) -> &'static str;
+    /// The trace this backend evaluates.
+    fn trace(&self) -> &Arc<Trace>;
+    /// Evaluate one FIFO depth configuration.
+    fn simulate(&mut self, depths: &[u32]) -> SimOutcome;
+    /// Evaluate and collect per-channel occupancy/stall statistics into a
+    /// caller-owned buffer.
+    fn simulate_with_stats_into(&mut self, depths: &[u32], stats: &mut ChannelStats) -> SimOutcome;
+    /// Telemetry of the most recent call.
+    fn last_run(&self) -> RunInfo;
+    /// Enable/disable schedule retention and incremental re-evaluation.
+    fn set_incremental(&mut self, on: bool);
+    /// Clone into a boxed trait object (worker-pool fan-out).
+    fn clone_box(&self) -> Box<dyn SimBackend>;
+}
+
+impl Clone for Box<dyn SimBackend> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Which [`SimBackend`] implementation to instantiate — threaded from the
+/// CLI's `--backend {fast,compiled}` / sweep `"backend"` key through
+/// [`crate::dse::EvalEngine`] and [`ScenarioSim`] down to every worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// The event-driven [`FastSim`] (default).
+    #[default]
+    Fast,
+    /// The graph-compiled [`CompiledSim`].
+    Compiled,
+}
+
+impl BackendKind {
+    /// Parse a CLI/sweep backend name.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "fast" => Some(BackendKind::Fast),
+            "compiled" => Some(BackendKind::Compiled),
+            _ => None,
+        }
+    }
+
+    /// The backend's report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Fast => "fast",
+            BackendKind::Compiled => "compiled",
+        }
+    }
+
+    /// Instantiate a backend over one trace.
+    pub fn build(self, trace: Arc<Trace>, opts: SimOptions) -> Box<dyn SimBackend> {
+        match self {
+            BackendKind::Fast => Box::new(FastSim::with_options(trace, opts)),
+            BackendKind::Compiled => Box::new(CompiledSim::with_options(trace, opts)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_and_names() {
+        assert_eq!(BackendKind::parse("fast"), Some(BackendKind::Fast));
+        assert_eq!(BackendKind::parse("compiled"), Some(BackendKind::Compiled));
+        assert_eq!(BackendKind::parse("nope"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Fast);
+        assert_eq!(BackendKind::Fast.name(), "fast");
+        assert_eq!(BackendKind::Compiled.name(), "compiled");
+    }
 }

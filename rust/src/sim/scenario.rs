@@ -1,12 +1,15 @@
-//! The scenario-bank simulator: one retained-schedule [`FastSim`] per
+//! The scenario-bank simulator: one retained-schedule [`SimBackend`] per
 //! workload scenario, evaluated together.
 //!
-//! [`ScenarioSim`] is the multi-trace counterpart of [`FastSim`]: it owns
-//! one simulator per scenario of a [`Workload`], so the delta-incremental
-//! replay of each scenario's retained schedule still applies *per
-//! scenario* — a 1-channel DSE mutation re-simulates as a cheap delta in
-//! every scenario's bank member, not just one. A configuration's outcome
-//! is aggregated across scenarios:
+//! [`ScenarioSim`] is the multi-trace counterpart of a single-trace
+//! simulator: it owns one backend instance per scenario of a
+//! [`Workload`] — [`FastSim`] by default, or any other [`SimBackend`]
+//! (the graph-compiled [`CompiledSim`](super::CompiledSim) via
+//! [`BackendKind`]) — so the delta-incremental replay of each scenario's
+//! retained schedule still applies *per scenario*: a 1-channel DSE
+//! mutation re-simulates as a cheap delta in every scenario's bank
+//! member, not just one. A configuration's outcome is aggregated across
+//! scenarios:
 //!
 //! - **deadlock in any scenario** makes the configuration infeasible
 //!   (the blocked sets are unioned for diagnostics);
@@ -30,18 +33,19 @@
 //! diagnostics are unchanged.
 
 use super::fast::{BlockInfo, ChannelStats, FastSim, RunInfo, SimOutcome};
-use super::SimOptions;
+use super::{BackendKind, SimBackend, SimOptions};
 use crate::opt::objective::{aggregate_latency, Aggregation};
 use crate::trace::workload::Workload;
 use crate::trace::Trace;
 use std::sync::Arc;
 
-/// A bank of per-scenario [`FastSim`]s evaluated as one unit. `Clone`
-/// duplicates every member's scratch (traces stay shared), giving each
-/// DSE worker its own full bank of retained schedules.
+/// A bank of per-scenario simulation backends evaluated as one unit.
+/// `Clone` duplicates every member's scratch (traces and compiled graph
+/// tables stay shared), giving each DSE worker its own full bank of
+/// retained schedules.
 #[derive(Clone)]
 pub struct ScenarioSim {
-    sims: Vec<FastSim>,
+    sims: Vec<Box<dyn SimBackend>>,
     names: Vec<String>,
     weights: Vec<f64>,
     agg: Aggregation,
@@ -67,19 +71,27 @@ pub struct ScenarioSim {
 }
 
 impl ScenarioSim {
-    /// Build a bank over a workload with default [`SimOptions`].
+    /// Build a bank over a workload with default [`SimOptions`] and the
+    /// default ([`FastSim`]) backend.
     pub fn new(workload: &Workload) -> ScenarioSim {
         Self::with_options(workload, SimOptions::default())
     }
 
     /// Build with explicit [`SimOptions`] (applied to every member).
     pub fn with_options(workload: &Workload, opts: SimOptions) -> ScenarioSim {
+        Self::with_backend(workload, opts, BackendKind::Fast)
+    }
+
+    /// Build with an explicit simulation backend — the CLI's
+    /// `--backend {fast,compiled}` bottoms out here; every scenario
+    /// member uses the same backend.
+    pub fn with_backend(workload: &Workload, opts: SimOptions, kind: BackendKind) -> ScenarioSim {
         let k = workload.num_scenarios();
         ScenarioSim {
             sims: workload
                 .scenarios()
                 .iter()
-                .map(|s| FastSim::with_options(Arc::clone(&s.trace), opts))
+                .map(|s| kind.build(Arc::clone(&s.trace), opts))
                 .collect(),
             names: workload.scenarios().iter().map(|s| s.name.clone()).collect(),
             weights: workload.weights(),
@@ -99,9 +111,14 @@ impl ScenarioSim {
         Self::from_fastsim(FastSim::new(trace))
     }
 
-    /// Wrap an existing simulator (keeps its options and retained
+    /// Wrap an existing fast simulator (keeps its options and retained
     /// schedule) as a single-scenario bank.
     pub fn from_fastsim(sim: FastSim) -> ScenarioSim {
+        Self::from_backend(Box::new(sim))
+    }
+
+    /// Wrap any existing backend instance as a single-scenario bank.
+    pub fn from_backend(sim: Box<dyn SimBackend>) -> ScenarioSim {
         ScenarioSim {
             sims: vec![sim],
             names: vec!["default".into()],
@@ -115,6 +132,11 @@ impl ScenarioSim {
             probe_order: Vec::with_capacity(1),
             scen_runs: 0,
         }
+    }
+
+    /// Report name of the simulation backend the bank members use.
+    pub fn backend_name(&self) -> &'static str {
+        self.sims[0].name()
     }
 
     pub fn num_scenarios(&self) -> usize {
@@ -500,6 +522,98 @@ mod tests {
             assert_eq!(bank.eval_latency(&cfg, true), fast.simulate(&cfg).latency());
             assert_eq!(bank.last_run(), fast.last_run());
             assert_eq!(bank.last_scenarios_run(), 1);
+        }
+    }
+
+    #[test]
+    fn compiled_backend_bank_matches_fast_backend_bank() {
+        let w = fig2_workload(&[8, 16, 12]);
+        let mut fast_bank = ScenarioSim::new(&w);
+        let mut comp_bank =
+            ScenarioSim::with_backend(&w, SimOptions::default(), BackendKind::Compiled);
+        assert_eq!(fast_bank.backend_name(), "fast");
+        assert_eq!(comp_bank.backend_name(), "compiled");
+        for cfg in [[16u32, 2], [7, 2], [2, 2], [15, 3], [16, 16]] {
+            assert_eq!(
+                fast_bank.simulate(&cfg),
+                comp_bank.simulate(&cfg),
+                "cfg {cfg:?}"
+            );
+            assert_eq!(
+                fast_bank.scenario_latencies(),
+                comp_bank.scenario_latencies(),
+                "cfg {cfg:?}"
+            );
+            let (fo, fs) = fast_bank.simulate_with_stats(&cfg);
+            let (co, cs) = comp_bank.simulate_with_stats(&cfg);
+            assert_eq!(fo, co, "cfg {cfg:?}");
+            assert_eq!(fs.max_occupancy, cs.max_occupancy, "cfg {cfg:?}");
+            assert_eq!(fs.write_stall, cs.write_stall, "cfg {cfg:?}");
+            assert_eq!(fs.read_stall, cs.read_stall, "cfg {cfg:?}");
+        }
+    }
+
+    /// Regression (probe-reordering bookkeeping): the early-exit probe
+    /// order is a pure function of the per-scenario deadlock counts with
+    /// a pinned tie-break — descending count, then ascending scenario
+    /// index — so identical call histories always probe identically, and
+    /// probe order can never change a verdict or latency.
+    #[test]
+    fn early_exit_probe_order_is_deterministic_under_ties() {
+        // fig2 scenarios n = [8, 16, 12]: x deadlocks scenario i iff
+        // depth(x) < n_i - 1 (thresholds 7, 15, 11).
+        let w = fig2_workload(&[8, 16, 12]);
+        let mut bank = ScenarioSim::new(&w);
+        let mut twin = ScenarioSim::new(&w);
+        let mut full = ScenarioSim::new(&w);
+
+        // All counts tied at 0: probes run in ascending index order, so a
+        // config that deadlocks only scenario 1 (x = 11: feasible for
+        // n=8 and n=12, deadlocks n=16) probes 0 then 1 — exactly 2 runs.
+        assert_eq!(bank.eval_latency(&[11, 2], true), None);
+        assert_eq!(bank.last_scenarios_run(), 2, "tie must break by index");
+
+        // Scenario 1 now leads the counts: it is probed first.
+        assert_eq!(bank.eval_latency(&[11, 3], true), None);
+        assert_eq!(bank.last_scenarios_run(), 1);
+
+        // Scenarios 0 and 2 still tie at 0: a config deadlocking both
+        // (x = 2) probes 1 first (count 2), and the tied remainder in
+        // index order — but it deadlocks at the first probe regardless.
+        assert_eq!(bank.eval_latency(&[2, 2], true), None);
+        assert_eq!(bank.last_scenarios_run(), 1);
+
+        // Probe order is bookkeeping, never semantics: however the two
+        // banks' histories (and therefore probe orders) differ, both
+        // always agree with the full no-early-exit path on verdict and
+        // latency. `twin` additionally replays `bank`'s exact first three
+        // calls afterwards and must land on identical scenario-run counts.
+        for cfg in [[11u32, 2], [11, 3], [2, 2], [16, 2], [10, 2], [16, 16]] {
+            let a = twin.eval_latency(&cfg, true);
+            let b = bank.eval_latency(&cfg, true);
+            let want = full.simulate(&cfg).latency();
+            assert_eq!(b, want, "cfg {cfg:?}: early-exit verdict diverged");
+            assert_eq!(a, want, "cfg {cfg:?}: twin verdict diverged");
+        }
+        let mut replay = ScenarioSim::new(&w);
+        for (cfg, runs) in [([11u32, 2], 2u32), ([11, 3], 1), ([2, 2], 1)] {
+            assert_eq!(replay.eval_latency(&cfg, true), None);
+            assert_eq!(
+                replay.last_scenarios_run(),
+                runs,
+                "cfg {cfg:?}: identical history must probe identically"
+            );
+        }
+
+        // Deadlock counts are bookkeeping, not semantics: a fresh bank
+        // (all ties, index-order probes) reaches the same verdicts.
+        let mut fresh = ScenarioSim::new(&w);
+        for cfg in [[11u32, 2], [2, 2], [16, 2], [14, 2]] {
+            assert_eq!(
+                fresh.eval_latency(&cfg, true),
+                full.simulate(&cfg).latency(),
+                "cfg {cfg:?}"
+            );
         }
     }
 

@@ -1,10 +1,60 @@
-//! A miniature property-test driver (the offline mirror lacks `proptest`).
+//! A miniature property-test driver (the offline mirror lacks `proptest`)
+//! plus the **shared generator set** every randomized suite draws from.
 //!
 //! `check(name, cases, f)` runs `f` against `cases` independently seeded
 //! [`Rng`]s and reports the first failing seed so failures are
-//! reproducible with `check_seed`.
+//! reproducible with `check_seed`. When `FIFOADVISOR_FUZZ_ARTIFACT_DIR`
+//! is set, failing seeds are additionally appended to
+//! `failing_seeds.jsonl` in that directory before the panic — the CI fuzz
+//! job uploads it as an artifact.
+//!
+//! The generators (random depth vectors, DSE-shaped depth mutations,
+//! random layered designs, the deadlock-boundary and pair-burst fixture
+//! designs, random multi-scenario workloads) used to be duplicated across
+//! `tests/incremental_fuzz.rs`, `tests/pruning_fuzz.rs` and
+//! `tests/workload_equivalence.rs`; they live here so every differential
+//! suite — including `tests/backend_conformance.rs` — explores the same
+//! seeded corpus. [`iters`] reads `FIFOADVISOR_FUZZ_ITERS` so the CI fuzz
+//! job can crank case counts without code changes.
 
 use super::rng::Rng;
+use crate::ir::{Design, DesignBuilder, Expr};
+use crate::trace::workload::Workload;
+
+/// Iteration count for randomized suites: the `FIFOADVISOR_FUZZ_ITERS`
+/// environment value when set (the CI fuzz job cranks it up in release
+/// mode), otherwise `default`.
+pub fn iters(default: u64) -> u64 {
+    std::env::var("FIFOADVISOR_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Append a failing property seed to `$FIFOADVISOR_FUZZ_ARTIFACT_DIR/
+/// failing_seeds.jsonl` (best-effort; errors are ignored so the panic
+/// with the seed always happens).
+fn dump_failing_seed(name: &str, case: u64, seed: u64) {
+    let Ok(dir) = std::env::var("FIFOADVISOR_FUZZ_ARTIFACT_DIR") else {
+        return;
+    };
+    if dir.is_empty() {
+        return;
+    }
+    let _ = std::fs::create_dir_all(&dir);
+    let path = std::path::Path::new(&dir).join("failing_seeds.jsonl");
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+    {
+        use std::io::Write;
+        let _ = writeln!(
+            f,
+            "{{\"property\": \"{name}\", \"case\": {case}, \"seed\": \"{seed:#x}\"}}"
+        );
+    }
+}
 
 /// Run `f` for `cases` random cases. Each case gets a deterministic,
 /// per-case-seeded RNG. `f` returns `Err(msg)` to fail the property.
@@ -18,6 +68,7 @@ where
         let seed = 0xF1F0_AD71_0000_0000 ^ case;
         let mut rng = Rng::new(seed);
         if let Err(msg) = f(&mut rng) {
+            dump_failing_seed(name, case, seed);
             panic!(
                 "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
                  reproduce with util::prop::check_seed({seed:#x}, ...)"
@@ -43,6 +94,188 @@ macro_rules! prop_assert {
             return Err(format!($($fmt)*));
         }
     };
+}
+
+// ---------------------------------------------------------------------------
+// Shared generators
+// ---------------------------------------------------------------------------
+
+/// Every suite design name plus the data-dependent specials (`fig2`,
+/// `flowgnn_pna`) — the canonical iteration set of the differential
+/// suites.
+pub fn suite_with_specials() -> Vec<&'static str> {
+    let mut v = crate::bench_suite::all_names();
+    v.extend(["fig2", "flowgnn_pna"]);
+    v
+}
+
+/// A DSE-shaped random depth vector in `[1, ub + pad]` per channel —
+/// `pad` pushes past the bounds so the occupancy-clamp region above the
+/// observed write counts is reachable even on unhinted designs.
+pub fn random_depths(rng: &mut Rng, ub: &[u32], pad: u32) -> Vec<u32> {
+    ub.iter()
+        .map(|&u| rng.range_u32(1, u.max(2) + pad))
+        .collect()
+}
+
+/// One DSE-shaped fuzz step: mutate 1–2 channels (occasionally
+/// re-randomize the whole vector). Mutations are biased toward corners
+/// and near-boundary values: SRL thresholds, the Vitis minimum, ±1 steps
+/// (the SA move shape), and uniform draws.
+pub fn mutate_depths(rng: &mut Rng, cfg: &mut [u32], ub: &[u32]) {
+    let full = rng.chance(0.05);
+    if full {
+        for (d, &u) in cfg.iter_mut().zip(ub) {
+            *d = rng.range_u32(1, u.max(2) + 2);
+        }
+        return;
+    }
+    let n_mut = if rng.chance(0.7) { 1 } else { 2 };
+    for _ in 0..n_mut {
+        let i = rng.index(cfg.len());
+        let u = ub[i].max(2);
+        cfg[i] = match rng.below(5) {
+            0 => 1,
+            1 => 2,
+            2 => u,
+            3 => {
+                if rng.chance(0.5) {
+                    (cfg[i] + 1).min(u + 2)
+                } else {
+                    cfg[i].saturating_sub(1).max(1)
+                }
+            }
+            _ => rng.range_u32(1, u + 2),
+        };
+    }
+}
+
+/// Bursty producers + an alternating pair-read consumer (the matmul PE
+/// access pattern): exercises the homogeneous-run and pair-burst fast
+/// paths. Channel `c` is wide (512 bits), so small depth changes flip
+/// SRL↔BRAM.
+pub fn pair_burst_design(n: u64) -> Design {
+    let mut b = DesignBuilder::new("pairburst", 0);
+    let a = b.channel("a", 32);
+    let c = b.channel("c", 512);
+    let s = b.channel("s", 32);
+    b.process("pa", move |p| {
+        p.for_n(n, |p, _| p.write(a, Expr::c(0)));
+    });
+    b.process("pc", move |p| {
+        p.for_n(n, |p, _| p.write(c, Expr::c(0)));
+    });
+    b.process("pe", move |p| {
+        p.for_n(n, |p, _| {
+            let _ = p.read(a);
+            let _ = p.read(c);
+        });
+        p.for_n(n, |p, _| p.write(s, Expr::c(0)));
+    });
+    b.process("sink", move |p| {
+        p.for_n(n, |p, _| {
+            let _ = p.read(s);
+        });
+    });
+    b.build()
+}
+
+/// Fig. 2-shaped design (one `n` kernel argument): feasibility flips as
+/// depth(x) crosses `n − 1`, so mutation chains repeatedly cross the
+/// deadlock boundary. Channel `y` is wide for SRL↔BRAM coverage.
+pub fn deadlock_boundary_design() -> Design {
+    let mut b = DesignBuilder::new("boundary", 1);
+    let x = b.channel("x", 32);
+    let y = b.channel("y", 256);
+    b.process("producer", |p| {
+        p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+        p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+    });
+    b.process("consumer", |p| {
+        p.for_expr(Expr::arg(0), |p, _| {
+            let _ = p.read(x);
+            let _ = p.read(y);
+        });
+    });
+    b.build()
+}
+
+/// Random layered DAG: 2–4 stages of fan-out channels with random widths
+/// (wide ones for SRL↔BRAM flips), token counts and delays biased toward
+/// zero so homogeneous bursts form.
+pub fn random_layered_design(rng: &mut Rng) -> Design {
+    let n_stages = 2 + rng.index(3);
+    let mut b = DesignBuilder::new("rand", 0);
+    let mut prev: Option<(Vec<usize>, u64)> = None;
+    for s in 0..n_stages {
+        let width = *rng.choose(&[8u32, 32, 64, 512]);
+        let fanout = 1 + rng.index(3);
+        let tokens = 1 + rng.below(20);
+        let chans: Vec<usize> = (0..fanout)
+            .map(|i| b.channel(&format!("c{s}_{i}"), width))
+            .collect();
+        let delay_in = if rng.chance(0.6) { 0 } else { rng.below(3) as u32 };
+        let delay_out = if rng.chance(0.6) { 0 } else { rng.below(3) as u32 };
+        match prev.clone() {
+            None => {
+                let cc = chans.clone();
+                b.process(&format!("src{s}"), move |p| {
+                    p.for_n(tokens, |p, _| {
+                        for &c in &cc {
+                            p.delay(delay_out);
+                            p.write(c, Expr::c(1));
+                        }
+                    });
+                });
+            }
+            Some((inputs, in_tokens)) => {
+                let cc = chans.clone();
+                let ins = inputs.clone();
+                b.process(&format!("stage{s}"), move |p| {
+                    p.for_n(in_tokens, |p, _| {
+                        for &c in &ins {
+                            p.delay(delay_in);
+                            let _ = p.read(c);
+                        }
+                    });
+                    p.for_n(tokens, |p, _| {
+                        for &c in &cc {
+                            p.delay(delay_out);
+                            p.write(c, Expr::c(1));
+                        }
+                    });
+                });
+            }
+        }
+        prev = Some((chans, tokens));
+    }
+    let (inputs, in_tokens) = prev.unwrap();
+    b.process("sink", move |p| {
+        p.for_n(in_tokens, |p, _| {
+            for &c in &inputs {
+                let _ = p.read(c);
+            }
+        });
+    });
+    b.build()
+}
+
+/// A random multi-scenario workload over the deadlock-boundary design:
+/// 2–4 scenarios with distinct `n` arguments, so per-scenario deadlock
+/// thresholds differ and the worst-case aggregation, the any-scenario
+/// infeasibility rule and the early-exit probe ordering all engage.
+pub fn random_workload(rng: &mut Rng) -> Workload {
+    let design = deadlock_boundary_design();
+    let k = 2 + rng.index(3);
+    let mut ns: Vec<i64> = Vec::new();
+    while ns.len() < k {
+        let n = 2 + rng.below(24) as i64;
+        if !ns.contains(&n) {
+            ns.push(n);
+        }
+    }
+    let sets: Vec<Vec<i64>> = ns.into_iter().map(|n| vec![n]).collect();
+    Workload::from_design_args(&design, &sets).expect("boundary workload must build")
 }
 
 #[cfg(test)]
@@ -83,5 +316,35 @@ mod tests {
             Ok(())
         });
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn iters_defaults_without_env() {
+        // The fuzz env var is unset in unit-test runs; the default flows
+        // through. (The cranked path is exercised by the CI fuzz job.)
+        if std::env::var("FIFOADVISOR_FUZZ_ITERS").is_err() {
+            assert_eq!(iters(17), 17);
+        }
+    }
+
+    #[test]
+    fn generators_produce_valid_designs_and_workloads() {
+        let mut rng = Rng::new(0xD5E);
+        let d = random_layered_design(&mut rng);
+        let t = crate::trace::collect_trace(&d, &[]).expect("layered design must trace");
+        assert!(t.total_ops() > 0);
+        let ub = t.upper_bounds();
+        let mut cfg = random_depths(&mut rng, &ub, 5);
+        assert_eq!(cfg.len(), ub.len());
+        assert!(cfg.iter().all(|&d| d >= 1));
+        for _ in 0..20 {
+            mutate_depths(&mut rng, &mut cfg, &ub);
+            assert!(cfg.iter().all(|&d| d >= 1));
+        }
+        let w = random_workload(&mut rng);
+        assert!(w.num_scenarios() >= 2);
+        let names = suite_with_specials();
+        assert!(names.contains(&"fig2") && names.contains(&"flowgnn_pna"));
+        assert!(names.len() >= 24);
     }
 }

@@ -1,0 +1,327 @@
+//! The unified cross-backend conformance harness.
+//!
+//! Every simulation backend must be pinned to the same semantics, at
+//! every level of the verification pyramid:
+//!
+//! 1. **golden** — the cycle-stepped reference defines the semantics;
+//! 2. **fast** (`FastSim`) and **compiled** (`CompiledSim`) must be
+//!    **bit-identical to each other** (full [`SimOutcome`]s: latency,
+//!    deadlock verdict, *and* blocked sets) and latency-exact against
+//!    golden, warm (incremental) and cold alike;
+//! 3. **bank** — `ScenarioSim` over either backend must agree on
+//!    aggregate verdicts, per-scenario latencies and merged stats;
+//! 4. **engine** — `EvalEngine` histories and Pareto fronts must be
+//!    identical for every optimizer under `--backend compiled`, serial
+//!    and `--jobs 4`.
+//!
+//! All randomness comes from the shared `util::prop` generator set, so
+//! this suite explores the same seeded corpus as the incremental and
+//! pruning fuzzers; `FIFOADVISOR_FUZZ_ITERS` cranks the case counts (the
+//! CI fuzz job runs it in release mode).
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::{drive, Evaluator};
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::sim::compiled::CompiledSim;
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::golden::simulate_golden;
+use fifoadvisor::sim::{BackendKind, ScenarioSim, SimOptions};
+use fifoadvisor::trace::collect_trace;
+use fifoadvisor::trace::Trace;
+use fifoadvisor::util::prop::{
+    self, deadlock_boundary_design, mutate_depths, pair_burst_design, random_depths,
+    random_layered_design, random_workload, suite_with_specials,
+};
+use fifoadvisor::util::Rng;
+use std::sync::Arc;
+
+/// Golden is cycle-stepped and therefore slow; spot-check it only on
+/// traces below this op count (the big Stream-HLS kernels are covered by
+/// the fast↔compiled identity plus golden's own per-family tests).
+const GOLDEN_OPS_CUTOFF: usize = 8_000;
+
+fn trace_of(name: &str) -> Arc<Trace> {
+    let bd = bench_suite::build(name);
+    Arc::new(collect_trace(&bd.design, &bd.args).unwrap())
+}
+
+/// Walk a mutation chain over one trace, holding the two warm backends
+/// (their delta paths), a cold compiled backend (its full path), and —
+/// on small traces — the golden reference to the same answers.
+fn conformance_walk(t: &Arc<Trace>, rng: &mut Rng, steps: usize, ctx: &str) {
+    let mut fast = FastSim::new(t.clone());
+    let mut comp = CompiledSim::new(t.clone());
+    let mut comp_cold = CompiledSim::new(t.clone());
+    comp_cold.set_incremental(false);
+    let ub = t.upper_bounds();
+    let golden_ok = t.total_ops() <= GOLDEN_OPS_CUTOFF;
+    let mut cfg = random_depths(rng, &ub, 3);
+    for step in 0..steps {
+        let f = fast.simulate(&cfg);
+        let c = comp.simulate(&cfg);
+        assert_eq!(
+            f, c,
+            "{ctx} step {step}: compiled (warm) != fast, cfg {cfg:?}"
+        );
+        let cc = comp_cold.simulate(&cfg);
+        assert_eq!(
+            c, cc,
+            "{ctx} step {step}: compiled warm != compiled cold, cfg {cfg:?}"
+        );
+        if golden_ok && step % 3 == 0 {
+            let g = simulate_golden(t, &cfg, SimOptions::default());
+            assert_eq!(
+                c.latency(),
+                g.latency(),
+                "{ctx} step {step}: compiled != golden, cfg {cfg:?}"
+            );
+        }
+        mutate_depths(rng, &mut cfg, &ub);
+    }
+}
+
+#[test]
+fn backends_agree_on_every_suite_design() {
+    let steps = prop::iters(6) as usize;
+    for name in suite_with_specials() {
+        let t = trace_of(name);
+        let mut rng = Rng::new(0xC0FF ^ name.len() as u64);
+        conformance_walk(&t, &mut rng, steps, name);
+    }
+}
+
+#[test]
+fn backends_agree_across_deadlock_boundaries() {
+    // Deterministic sweep straight across the fig2 feasibility threshold
+    // (x = n-1), both directions, so each backend's incremental path
+    // crosses deadlock↔feasible repeatedly.
+    let d = deadlock_boundary_design();
+    for n in [5i64, 16] {
+        let t = Arc::new(collect_trace(&d, &[n]).unwrap());
+        let mut fast = FastSim::new(t.clone());
+        let mut comp = CompiledSim::new(t.clone());
+        let thresh = (n - 1) as u32;
+        let sweep: Vec<u32> = (thresh.saturating_sub(2)..=thresh + 2)
+            .chain((thresh.saturating_sub(2)..=thresh + 2).rev())
+            .collect();
+        for dx in sweep {
+            for dy in [2u32, 3] {
+                let cfg = [dx.max(1), dy];
+                let f = fast.simulate(&cfg);
+                let c = comp.simulate(&cfg);
+                assert_eq!(f, c, "n={n} cfg {cfg:?}");
+                let g = simulate_golden(&t, &cfg, SimOptions::default());
+                assert_eq!(c.latency(), g.latency(), "n={n} cfg {cfg:?} vs golden");
+            }
+        }
+    }
+}
+
+#[test]
+fn backends_agree_across_srl_bram_flips() {
+    // Toggle the wide (512-bit) channel across the SRL threshold so the
+    // compiled backend's read-edge reweighting invalidation is exercised
+    // against fast's read invalidation.
+    let d = pair_burst_design(32);
+    let t = Arc::new(collect_trace(&d, &[]).unwrap());
+    let mut fast = FastSim::new(t.clone());
+    let mut comp = CompiledSim::new(t.clone());
+    for i in 0..24u32 {
+        let c_depth = if i % 2 == 0 { 2 } else { 3 + (i % 3) };
+        let cfg = [8u32, c_depth, 8];
+        let f = fast.simulate(&cfg);
+        let c = comp.simulate(&cfg);
+        assert_eq!(f, c, "toggle {i}, cfg {cfg:?}");
+        let g = simulate_golden(&t, &cfg, SimOptions::default());
+        assert_eq!(c.latency(), g.latency(), "toggle {i} vs golden");
+    }
+}
+
+#[test]
+fn property_backends_agree_on_random_designs() {
+    prop::check(
+        "compiled == fast == golden on random designs",
+        prop::iters(30),
+        |rng| {
+            let design = random_layered_design(rng);
+            let t = Arc::new(collect_trace(&design, &[]).map_err(|e| e.to_string())?);
+            let mut fast = FastSim::new(t.clone());
+            let mut comp = CompiledSim::new(t.clone());
+            let ub = t.upper_bounds();
+            let mut cfg: Vec<u32> = random_depths(rng, &ub, 2);
+            for step in 0..24 {
+                let f = fast.simulate(&cfg);
+                let c = comp.simulate(&cfg);
+                if f != c {
+                    return Err(format!(
+                        "step {step}: compiled {c:?} != fast {f:?} at cfg {cfg:?}"
+                    ));
+                }
+                if step % 6 == 0 {
+                    let g = simulate_golden(&t, &cfg, SimOptions::default());
+                    if c.latency() != g.latency() {
+                        return Err(format!(
+                            "step {step}: compiled {:?} != golden {:?} at cfg {cfg:?}",
+                            c.latency(),
+                            g.latency()
+                        ));
+                    }
+                }
+                mutate_depths(rng, &mut cfg, &ub);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_stats_agree_on_random_designs() {
+    // The stats path (occupancy merge + stall post-pass) drives greedy's
+    // ranking and the targeted hunter; both backends must produce the
+    // same numbers, not just the same outcomes.
+    prop::check(
+        "compiled stats == fast stats on random designs",
+        prop::iters(15),
+        |rng| {
+            let design = random_layered_design(rng);
+            let t = Arc::new(collect_trace(&design, &[]).map_err(|e| e.to_string())?);
+            let mut fast = FastSim::new(t.clone());
+            let mut comp = CompiledSim::new(t.clone());
+            let ub = t.upper_bounds();
+            for _ in 0..6 {
+                let cfg = random_depths(rng, &ub, 2);
+                let (fo, fs) = fast.simulate_with_stats(&cfg);
+                let (co, cs) = comp.simulate_with_stats(&cfg);
+                prop_check(fo == co, format!("outcome diverged at {cfg:?}"))?;
+                prop_check(
+                    fs.max_occupancy == cs.max_occupancy,
+                    format!("occupancy diverged at {cfg:?}"),
+                )?;
+                prop_check(
+                    fs.write_stall == cs.write_stall && fs.read_stall == cs.read_stall,
+                    format!("stalls diverged at {cfg:?}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn prop_check(cond: bool, msg: String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg)
+    }
+}
+
+#[test]
+fn property_random_workload_banks_agree() {
+    prop::check(
+        "fast bank == compiled bank on random workloads",
+        prop::iters(20),
+        |rng| {
+            let w = random_workload(rng);
+            let mut fast_bank = ScenarioSim::new(&w);
+            let mut comp_bank =
+                ScenarioSim::with_backend(&w, SimOptions::default(), BackendKind::Compiled);
+            let mut full = ScenarioSim::new(&w);
+            let ub = w.upper_bounds();
+            let mut cfg = random_depths(rng, &ub, 2);
+            for step in 0..12 {
+                let f = fast_bank.simulate(&cfg);
+                let c = comp_bank.simulate(&cfg);
+                prop_check(
+                    f == c,
+                    format!("step {step}: bank outcome diverged at {cfg:?}"),
+                )?;
+                prop_check(
+                    fast_bank.scenario_latencies() == comp_bank.scenario_latencies(),
+                    format!("step {step}: per-scenario latencies diverged at {cfg:?}"),
+                )?;
+                // The early-exit probe path agrees with both backends'
+                // full-path verdicts regardless of probe history.
+                let fast_early = full.eval_latency(&cfg, true);
+                prop_check(
+                    fast_early == c.latency(),
+                    format!("step {step}: early-exit diverged at {cfg:?}"),
+                )?;
+                mutate_depths(rng, &mut cfg, &ub);
+            }
+            Ok(())
+        },
+    );
+}
+
+type HistoryRecord = Vec<(Box<[u32]>, Option<u64>, u32)>;
+type FrontRecord = Vec<(Option<u64>, u32, Box<[u32]>)>;
+
+fn history_of(ev: &Evaluator) -> HistoryRecord {
+    ev.history
+        .iter()
+        .map(|p| (p.depths.clone(), p.latency, p.bram))
+        .collect()
+}
+
+fn front_of(ev: &Evaluator) -> FrontRecord {
+    ev.pareto()
+        .iter()
+        .map(|p| (p.latency, p.bram, p.depths.clone()))
+        .collect()
+}
+
+#[test]
+fn engine_identity_for_all_optimizers_under_compiled_on_a_workload() {
+    // fig2's 3-scenario workload is deadlock-heavy, so the oracle, the
+    // clamp and the early-exit path all engage *on top of* the compiled
+    // backend — and every optimizer (greedy's stats path included) must
+    // still produce the exact fast-backend history and front, serial and
+    // --jobs 4.
+    let w = Arc::new(bench_suite::build_workload("fig2").unwrap());
+    let space = Space::from_workload(&w);
+    for name in opt::OPTIMIZER_NAMES {
+        for jobs in [1usize, 4] {
+            let run = |kind: BackendKind| {
+                let mut ev = Evaluator::for_workload_with_sim(w.clone(), jobs, kind);
+                let mut o = opt::by_name(name, 42).unwrap();
+                drive(&mut *o, &mut ev, &space, 90);
+                let s = ev.stats();
+                assert_eq!(
+                    s.cache_hits + s.oracle_hits + s.sims,
+                    s.proposals,
+                    "{name} jobs={jobs} {:?}: accounting invariant broken",
+                    kind
+                );
+                (history_of(&ev), front_of(&ev), s.sims)
+            };
+            let (fh, ff, fsims) = run(BackendKind::Fast);
+            let (ch, cf, csims) = run(BackendKind::Compiled);
+            assert_eq!(fh, ch, "{name} jobs={jobs}: history diverged");
+            assert_eq!(ff, cf, "{name} jobs={jobs}: Pareto front diverged");
+            assert_eq!(fsims, csims, "{name} jobs={jobs}: sim counts diverged");
+        }
+    }
+}
+
+#[test]
+fn engine_identity_for_all_optimizers_under_compiled_single_trace() {
+    // Static single-trace engine (gesummv): every optimizer, serial, with
+    // the clamp region reachable through the padded proposals some
+    // optimizers generate.
+    let t = trace_of("gesummv");
+    let space = Space::from_trace(&t);
+    for name in opt::OPTIMIZER_NAMES {
+        let run = |kind: BackendKind| {
+            let w = Arc::new(fifoadvisor::trace::workload::Workload::single(t.clone()));
+            let mut ev = Evaluator::for_workload_with_sim(w, 1, kind);
+            let mut o = opt::by_name(name, 7).unwrap();
+            drive(&mut *o, &mut ev, &space, 100);
+            (history_of(&ev), front_of(&ev))
+        };
+        assert_eq!(
+            run(BackendKind::Fast),
+            run(BackendKind::Compiled),
+            "{name}: single-trace history/front diverged"
+        );
+    }
+}

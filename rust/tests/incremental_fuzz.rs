@@ -13,49 +13,22 @@
 //! Full [`SimOutcome`]s are compared — latency *and* the deadlock blocked
 //! sets — so a delta replay that reaches the wrong fixpoint cannot hide.
 //! The mutation chains are DSE-shaped (1–2 channel deltas with occasional
-//! full re-randomization), and the design families deliberately cover the
-//! simulator's fast paths: homogeneous write/read bursts, alternating
-//! pair-read bursts (the matmul PE pattern), SRL↔BRAM read-latency flips
-//! on wide channels, and deadlock↔feasible boundaries.
+//! full re-randomization; the shared `util::prop` generator set), and the
+//! design families deliberately cover the simulator's fast paths:
+//! homogeneous write/read bursts, alternating pair-read bursts (the
+//! matmul PE pattern), SRL↔BRAM read-latency flips on wide channels, and
+//! deadlock↔feasible boundaries. Compiled-vs-fast conformance for the
+//! same corpus lives in `tests/backend_conformance.rs`.
 
-use fifoadvisor::ir::{DesignBuilder, Expr};
 use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::sim::golden::simulate_golden;
 use fifoadvisor::sim::SimOptions;
 use fifoadvisor::trace::collect_trace;
+use fifoadvisor::util::prop::{
+    deadlock_boundary_design, mutate_depths, pair_burst_design, random_layered_design,
+};
 use fifoadvisor::util::{prop, Rng};
 use std::sync::Arc;
-
-/// One fuzz step: mutate 1–2 channels (occasionally re-randomize all).
-fn mutate(rng: &mut Rng, cfg: &mut [u32], ub: &[u32]) {
-    let full = rng.chance(0.05);
-    if full {
-        for (d, &u) in cfg.iter_mut().zip(ub) {
-            *d = rng.range_u32(1, u.max(2) + 2);
-        }
-        return;
-    }
-    let n_mut = if rng.chance(0.7) { 1 } else { 2 };
-    for _ in 0..n_mut {
-        let i = rng.index(cfg.len());
-        let u = ub[i].max(2);
-        cfg[i] = match rng.below(5) {
-            // Corners and near-boundary values: SRL thresholds, the Vitis
-            // minimum, ±1 steps (the SA move shape), and uniform.
-            0 => 1,
-            1 => 2,
-            2 => u,
-            3 => {
-                if rng.chance(0.5) {
-                    (cfg[i] + 1).min(u + 2)
-                } else {
-                    cfg[i].saturating_sub(1).max(1)
-                }
-            }
-            _ => rng.range_u32(1, u + 2),
-        };
-    }
-}
 
 /// Drive `steps` mutation steps, asserting warm == cold (full outcome)
 /// and, every few steps, fast == golden (latency/deadlock verdict).
@@ -81,7 +54,7 @@ fn fuzz_design(design: &fifoadvisor::ir::Design, args: &[i64], rng: &mut Rng, st
                 "step {step}: fast != golden, cfg {cfg:?}"
             );
         }
-        mutate(rng, &mut cfg, &ub);
+        mutate_depths(rng, &mut cfg, &ub);
     }
     // Retention sanity: an identical-configuration re-run is always an
     // incremental (zero-replay) hit after any history.
@@ -92,119 +65,11 @@ fn fuzz_design(design: &fifoadvisor::ir::Design, args: &[i64], rng: &mut Rng, st
     assert_eq!(warm.last_run().replayed_ops, 0);
 }
 
-/// Bursty producers + an alternating pair-read consumer (the matmul PE
-/// access pattern): exercises the homogeneous-run and pair-burst fast
-/// paths. Channel `c` is wide, so small depth changes flip SRL↔BRAM.
-fn pair_burst_design(n: u64) -> fifoadvisor::ir::Design {
-    let mut b = DesignBuilder::new("pairburst", 0);
-    let a = b.channel("a", 32);
-    let c = b.channel("c", 512);
-    let s = b.channel("s", 32);
-    b.process("pa", move |p| {
-        p.for_n(n, |p, _| p.write(a, Expr::c(0)));
-    });
-    b.process("pc", move |p| {
-        p.for_n(n, |p, _| p.write(c, Expr::c(0)));
-    });
-    b.process("pe", move |p| {
-        p.for_n(n, |p, _| {
-            let _ = p.read(a);
-            let _ = p.read(c);
-        });
-        p.for_n(n, |p, _| p.write(s, Expr::c(0)));
-    });
-    b.process("sink", move |p| {
-        p.for_n(n, |p, _| {
-            let _ = p.read(s);
-        });
-    });
-    b.build()
-}
-
-/// Fig. 2-shaped design: feasibility flips as depth(x) crosses n-1, so
-/// mutation chains repeatedly cross the deadlock boundary.
-fn deadlock_boundary_design() -> fifoadvisor::ir::Design {
-    let mut b = DesignBuilder::new("boundary", 1);
-    let x = b.channel("x", 32);
-    let y = b.channel("y", 256);
-    b.process("producer", |p| {
-        p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
-        p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
-    });
-    b.process("consumer", |p| {
-        p.for_expr(Expr::arg(0), |p, _| {
-            let _ = p.read(x);
-            let _ = p.read(y);
-        });
-    });
-    b.build()
-}
-
-/// Random layered DAG (same family as `sim_equivalence.rs`, plus wide
-/// channels for SRL↔BRAM flips and zero-delay bursts).
-fn random_layered_design(rng: &mut Rng) -> fifoadvisor::ir::Design {
-    let n_stages = 2 + rng.index(3);
-    let mut b = DesignBuilder::new("rand", 0);
-    let mut prev: Option<(Vec<usize>, u64)> = None;
-    for s in 0..n_stages {
-        let width = *rng.choose(&[8u32, 32, 64, 512]);
-        let fanout = 1 + rng.index(3);
-        let tokens = 1 + rng.below(20);
-        let chans: Vec<usize> = (0..fanout)
-            .map(|i| b.channel(&format!("c{s}_{i}"), width))
-            .collect();
-        // Bias toward zero delays so homogeneous bursts form.
-        let delay_in = if rng.chance(0.6) { 0 } else { rng.below(3) as u32 };
-        let delay_out = if rng.chance(0.6) { 0 } else { rng.below(3) as u32 };
-        match prev.clone() {
-            None => {
-                let cc = chans.clone();
-                b.process(&format!("src{s}"), move |p| {
-                    p.for_n(tokens, |p, _| {
-                        for &c in &cc {
-                            p.delay(delay_out);
-                            p.write(c, Expr::c(1));
-                        }
-                    });
-                });
-            }
-            Some((inputs, in_tokens)) => {
-                let cc = chans.clone();
-                let ins = inputs.clone();
-                b.process(&format!("stage{s}"), move |p| {
-                    p.for_n(in_tokens, |p, _| {
-                        for &c in &ins {
-                            p.delay(delay_in);
-                            let _ = p.read(c);
-                        }
-                    });
-                    p.for_n(tokens, |p, _| {
-                        for &c in &cc {
-                            p.delay(delay_out);
-                            p.write(c, Expr::c(1));
-                        }
-                    });
-                });
-            }
-        }
-        prev = Some((chans, tokens));
-    }
-    let (inputs, in_tokens) = prev.unwrap();
-    b.process("sink", move |p| {
-        p.for_n(in_tokens, |p, _| {
-            for &c in &inputs {
-                let _ = p.read(c);
-            }
-        });
-    });
-    b.build()
-}
-
 #[test]
 fn fuzz_pair_burst_design() {
     let mut rng = Rng::new(0x14C0);
     let d = pair_burst_design(48);
-    fuzz_design(&d, &[], &mut rng, 120);
+    fuzz_design(&d, &[], &mut rng, prop::iters(120) as usize);
 }
 
 #[test]
@@ -212,7 +77,7 @@ fn fuzz_deadlock_boundary() {
     let mut rng = Rng::new(0xB0DA);
     let d = deadlock_boundary_design();
     for n in [4i64, 16, 33] {
-        fuzz_design(&d, &[n], &mut rng, 80);
+        fuzz_design(&d, &[n], &mut rng, prop::iters(80) as usize);
     }
 }
 
@@ -239,36 +104,40 @@ fn fuzz_srl_bram_toggle_chain() {
 
 #[test]
 fn property_random_designs_incremental_equals_cold_full() {
-    prop::check("incremental == cold == golden on random designs", 40, |rng| {
-        let design = random_layered_design(rng);
-        let t = Arc::new(collect_trace(&design, &[]).map_err(|e| e.to_string())?);
-        let mut warm = FastSim::new(t.clone());
-        let mut cold = FastSim::new(t.clone());
-        cold.set_incremental(false);
-        let ub = t.upper_bounds();
-        let mut cfg: Vec<u32> = ub.iter().map(|&u| rng.range_u32(1, u.max(2))).collect();
-        for step in 0..30 {
-            let w = warm.simulate(&cfg);
-            let c = cold.simulate(&cfg);
-            if w != c {
-                return Err(format!(
-                    "step {step}: warm {w:?} != cold {c:?} at cfg {cfg:?}"
-                ));
-            }
-            if step % 6 == 0 {
-                let g = simulate_golden(&t, &cfg, SimOptions::default());
-                if w.latency() != g.latency() {
+    prop::check(
+        "incremental == cold == golden on random designs",
+        prop::iters(40),
+        |rng| {
+            let design = random_layered_design(rng);
+            let t = Arc::new(collect_trace(&design, &[]).map_err(|e| e.to_string())?);
+            let mut warm = FastSim::new(t.clone());
+            let mut cold = FastSim::new(t.clone());
+            cold.set_incremental(false);
+            let ub = t.upper_bounds();
+            let mut cfg: Vec<u32> = ub.iter().map(|&u| rng.range_u32(1, u.max(2))).collect();
+            for step in 0..30 {
+                let w = warm.simulate(&cfg);
+                let c = cold.simulate(&cfg);
+                if w != c {
                     return Err(format!(
-                        "step {step}: fast {:?} != golden {:?} at cfg {cfg:?}",
-                        w.latency(),
-                        g.latency()
+                        "step {step}: warm {w:?} != cold {c:?} at cfg {cfg:?}"
                     ));
                 }
+                if step % 6 == 0 {
+                    let g = simulate_golden(&t, &cfg, SimOptions::default());
+                    if w.latency() != g.latency() {
+                        return Err(format!(
+                            "step {step}: fast {:?} != golden {:?} at cfg {cfg:?}",
+                            w.latency(),
+                            g.latency()
+                        ));
+                    }
+                }
+                mutate_depths(rng, &mut cfg, &ub);
             }
-            mutate(rng, &mut cfg, &ub);
-        }
-        Ok(())
-    });
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -282,7 +151,7 @@ fn warm_simulator_matches_freshly_built_one() {
     let ub = t.upper_bounds();
     let mut cfg: Vec<u32> = ub.iter().map(|&u| u.max(2)).collect();
     for _ in 0..40 {
-        mutate(&mut rng, &mut cfg, &ub);
+        mutate_depths(&mut rng, &mut cfg, &ub);
         let w = warm.simulate(&cfg);
         let f = FastSim::new(t.clone()).simulate(&cfg);
         assert_eq!(w, f, "cfg {cfg:?}");

@@ -13,7 +13,8 @@
 //!
 //! Walk configurations deliberately overshoot the DSE upper bounds so the
 //! clamp region above the observed write counts is exercised even on
-//! designs without designer depth hints.
+//! designs without designer depth hints (the shared
+//! `util::prop::random_depths` generator).
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::opt::dominance::{Canonicalizer, FeasibilityOracle, OracleVerdict};
@@ -21,26 +22,15 @@ use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::sim::ScenarioSim;
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::trace::Trace;
+use fifoadvisor::util::prop::{
+    random_depths as random_cfg, suite_with_specials as all_with_specials,
+};
 use fifoadvisor::util::Rng;
 use std::sync::Arc;
-
-fn all_with_specials() -> Vec<&'static str> {
-    let mut v = bench_suite::all_names();
-    v.extend(["fig2", "flowgnn_pna"]);
-    v
-}
 
 fn trace_of(name: &str) -> Arc<Trace> {
     let bd = bench_suite::build(name);
     Arc::new(collect_trace(&bd.design, &bd.args).unwrap())
-}
-
-/// A DSE-shaped random configuration in `[1, ub + pad]` — `pad` pushes
-/// past the bounds so the clamp region is reachable on unhinted designs.
-fn random_cfg(rng: &mut Rng, ub: &[u32], pad: u32) -> Vec<u32> {
-    ub.iter()
-        .map(|&u| rng.range_u32(1, u.max(2) + pad))
-        .collect()
 }
 
 #[test]

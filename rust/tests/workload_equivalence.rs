@@ -14,13 +14,8 @@ use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::sim::ScenarioSim;
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::trace::workload::Workload;
+use fifoadvisor::util::prop::suite_with_specials as all_with_specials;
 use std::sync::Arc;
-
-fn all_with_specials() -> Vec<&'static str> {
-    let mut v = bench_suite::all_names();
-    v.extend(["fig2", "flowgnn_pna"]);
-    v
-}
 
 #[test]
 fn single_scenario_bank_is_bit_identical_to_fastsim_on_every_design() {
