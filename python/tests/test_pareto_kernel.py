@@ -48,3 +48,66 @@ def test_inf_never_dominates():
     # the caller masks padding by index.
     assert got[0] == 0
     assert got[1:].all()
+
+
+def test_exact_ties_are_undominated():
+    # No strict inequality on either axis => duplicates never dominate
+    # each other; the dominance condition requires at least one strict.
+    lat = np.full(128, np.inf, dtype=np.float32)
+    bram = np.zeros(128, dtype=np.float32)
+    lat[:4] = 7.0
+    bram[:4] = 3.0
+    got = np.asarray(pareto_kernel.dominated_mask(lat, bram))
+    assert got[:4].tolist() == [0, 0, 0, 0]
+    np.testing.assert_array_equal(got, ref.dominated_mask_ref(lat, bram))
+
+
+def test_one_axis_tie_with_strict_other_axis_dominates():
+    # (10, 5) vs (10, 3): latency ties, BRAM is strictly better => the
+    # bigger-BRAM row is dominated. Symmetric case on the latency axis.
+    lat = np.full(128, np.inf, dtype=np.float32)
+    bram = np.zeros(128, dtype=np.float32)
+    lat[:4] = [10.0, 10.0, 8.0, 9.0]
+    bram[:4] = [5.0, 3.0, 4.0, 4.0]
+    got = np.asarray(pareto_kernel.dominated_mask(lat, bram))
+    # Row 0 dominated by row 1 (lat tie, less BRAM); row 3 dominated by
+    # row 2 (BRAM tie, lower latency); rows 1 and 2 are the front.
+    assert got[:4].tolist() == [1, 0, 0, 1]
+    np.testing.assert_array_equal(got, ref.dominated_mask_ref(lat, bram))
+
+
+def test_inf_padding_parity_with_reference():
+    # A realistic engine batch shape: a short valid prefix of evaluated
+    # lanes (some deadlocked => +inf) followed by +inf padding rows up to
+    # the export batch. Kernel and O(B^2) reference must agree on every
+    # row, valid and padding alike.
+    rng = np.random.default_rng(0xF1F0)
+    b, valid = 256, 37
+    lat = np.full(b, np.inf, dtype=np.float32)
+    bram = np.zeros(b, dtype=np.float32)
+    lat[:valid] = rng.integers(1, 50, size=valid).astype(np.float32)
+    lat[:valid][rng.random(valid) < 0.2] = np.inf  # deadlocked lanes
+    bram[:valid] = rng.integers(0, 20, size=valid).astype(np.float32)
+    got = np.asarray(pareto_kernel.dominated_mask(lat, bram))
+    np.testing.assert_array_equal(got, ref.dominated_mask_ref(lat, bram))
+    # Zero-BRAM +inf padding rows tie exactly with each other (inf <= inf
+    # holds, inf < inf does not; bram 0 == 0): undominated unless some
+    # valid feasible row has bram == 0.
+    if not np.any(np.isfinite(lat[:valid]) & (bram[:valid] == 0)):
+        assert not got[valid:][bram[valid:] == 0].any()
+
+
+def test_all_inf_batch_follows_ieee_bram_ordering():
+    # Every row deadlocked: dominance degenerates to the BRAM ordering
+    # (the IEEE corner the Rust runtime interpreter documents — a
+    # deadlocked row IS dominated by another deadlocked row with strictly
+    # smaller BRAM, since inf <= inf holds but inf < inf does not).
+    lat = np.full(128, np.inf, dtype=np.float32)
+    bram = np.arange(128, dtype=np.float32)
+    got = np.asarray(pareto_kernel.dominated_mask(lat, bram))
+    assert got[0] == 0, "smallest-BRAM deadlock row is undominated"
+    assert got[1:].all(), "every larger-BRAM deadlock row is dominated"
+    np.testing.assert_array_equal(got, ref.dominated_mask_ref(lat, bram))
+    # With equal BRAM everywhere, nothing is strict: all undominated.
+    flat = np.asarray(pareto_kernel.dominated_mask(lat, np.zeros(128, np.float32)))
+    assert not flat.any()

@@ -28,12 +28,21 @@
 //!    and cold (re-randomized) walks, with a full-outcome identity assert
 //!    on every step and a hard assert that compiled throughput is ≥ fast
 //!    on at least one (workload, walk) cell.
+//! 10. Lane-batched backend (`--backend batched`) vs compiled:
+//!    configs-per-second at batch sizes K ∈ {1, 8, 64, 256} over the
+//!    fig2 and FlowGNN workloads, one shared random config stream per
+//!    workload. Hard asserts: primary-trace full-outcome identity
+//!    (latency, deadlock verdict AND blocked set) of every lane against
+//!    `CompiledSim`, bank-level latency identity on every step of every
+//!    K cell, and batched throughput ≥ compiled on at least one K ≥ 8
+//!    cell.
 //!
 //! Run: `cargo bench --bench perf`. Besides `results/perf.csv` it writes
 //! machine-readable snapshots: `BENCH_2.json` (every §Perf 1–6 metric
 //! row), `BENCH_3.json` (the §Perf 7 scenario-bank rows), `BENCH_4.json`
-//! (the §Perf 8 pruning rows), and `BENCH_5.json` (the §Perf 9 backend
-//! comparison rows).
+//! (the §Perf 8 pruning rows), `BENCH_5.json` (the §Perf 9 backend
+//! comparison rows), and `BENCH_6.json` (the §Perf 10 lane-batched
+//! rows).
 //! Set `FIFOADVISOR_PERF_SMOKE=1` for a reduced-iteration run (the CI
 //! regression smoke): same sections, same correctness assertions, far
 //! fewer samples.
@@ -799,8 +808,169 @@ fn main() {
         println!("  compiled ≥ fast in {wins}/{cells} cells");
     }
 
+    println!("\n=== §Perf 10: lane-batched vs compiled backend (batch evaluation) ===\n");
+    let mut batched_rows: Vec<Json> = Vec::new();
+    {
+        use fifoadvisor::{BatchedSim, CompiledSim, SimOutcome};
+
+        let total = if smoke { 64 } else { 512 };
+        let reps = 3;
+        let (mut wins, mut cells) = (0usize, 0usize);
+        for wname in ["fig2", "flowgnn_pna"] {
+            let w = bench_suite::build_workload(wname).unwrap();
+            let nscen = w.num_scenarios();
+            let ub = w.upper_bounds();
+            // One shared random config stream per workload: every K cell
+            // chunks the same `total` configurations, so rates are
+            // comparable across batch sizes and against the per-config
+            // compiled reference.
+            let mut rng = Rng::new(0xBA7C ^ wname.len() as u64);
+            let cfgs: Vec<Box<[u32]>> = (0..total)
+                .map(|_| ub.iter().map(|&u| rng.range_u32(2, u.max(2))).collect())
+                .collect();
+
+            // Primary-trace conformance: every lane of a ragged batched
+            // walk over the stream carries the exact full SimOutcome
+            // (latency, deadlock verdict, blocked set) the compiled
+            // backend computes for that configuration alone.
+            {
+                let t = Arc::clone(w.primary());
+                let mut bat = BatchedSim::new(Arc::clone(&t));
+                let mut comp = CompiledSim::new(t);
+                comp.set_incremental(false);
+                for chunk in cfgs.chunks(48) {
+                    for ((out, _), cfg) in bat.eval_batch(chunk).iter().zip(chunk) {
+                        assert_eq!(
+                            *out,
+                            comp.simulate(cfg),
+                            "{wname}: batched lane != compiled on cfg {cfg:?}"
+                        );
+                    }
+                }
+            }
+
+            // Compiled reference rate: per-config bank evaluation, cold
+            // (the configs are re-randomized, matching §Perf 9's cold
+            // cells and the always-cold batched walk).
+            let mut comp_rate = 0.0f64;
+            let mut lat_c: Vec<Option<u64>> = Vec::new();
+            for _ in 0..reps {
+                let mut bank =
+                    ScenarioSim::with_backend(&w, SimOptions::default(), BackendKind::Compiled);
+                bank.set_incremental(false);
+                let mut l = Vec::with_capacity(total);
+                let t0 = Instant::now();
+                for cfg in &cfgs {
+                    l.push(match bank.simulate(cfg) {
+                        SimOutcome::Done { latency } => Some(latency),
+                        SimOutcome::Deadlock { .. } => None,
+                    });
+                }
+                let dt = t0.elapsed().as_secs_f64();
+                comp_rate = comp_rate.max(total as f64 / dt.max(1e-12));
+                lat_c = l;
+            }
+
+            let label_w = format!("{wname}[{nscen}]");
+            {
+                let mut push = |metric: &str, value: f64, unit: &str| {
+                    csv.row(vec![
+                        metric.to_string(),
+                        label_w.clone(),
+                        format!("{value:.6e}"),
+                        unit.into(),
+                    ]);
+                    batched_rows.push(Json::obj(vec![
+                        ("metric", Json::Str(metric.into())),
+                        ("design", Json::Str(label_w.clone())),
+                        ("value", Json::Num(value)),
+                        ("unit", Json::Str(unit.into())),
+                    ]));
+                };
+                push("batched_ref_rate_compiled", comp_rate, "cfgs/s");
+            }
+
+            for kk in [1usize, 8, 64, 256] {
+                let mut bat_rate = 0.0f64;
+                let mut lat_b: Vec<Option<u64>> = Vec::new();
+                for _ in 0..reps {
+                    let mut bank =
+                        ScenarioSim::with_backend(&w, SimOptions::default(), BackendKind::Batched);
+                    let mut l = Vec::with_capacity(total);
+                    let t0 = Instant::now();
+                    for chunk in cfgs.chunks(kk) {
+                        for le in bank.eval_batch(chunk, true) {
+                            l.push(le.latency);
+                        }
+                    }
+                    let dt = t0.elapsed().as_secs_f64();
+                    bat_rate = bat_rate.max(total as f64 / dt.max(1e-12));
+                    lat_b = l;
+                }
+                // CI guard: bank-level latency identity on every step.
+                for (i, (b, c)) in lat_b.iter().zip(&lat_c).enumerate() {
+                    assert_eq!(
+                        b, c,
+                        "{wname}/K{kk} step {i}: batched != compiled on cfg {:?}",
+                        cfgs[i]
+                    );
+                }
+                if kk >= 8 {
+                    cells += 1;
+                    if bat_rate >= comp_rate {
+                        wins += 1;
+                    }
+                }
+                println!(
+                    "  {wname:<14}[{nscen}] K={kk:<4}: batched {bat_rate:>9.0} cfgs/s, \
+                     compiled {comp_rate:>9.0} cfgs/s ({:.2}x)",
+                    bat_rate / comp_rate.max(1e-12)
+                );
+                let label = format!("{label_w}/K{kk}");
+                let mut push = |metric: &str, value: f64, unit: &str| {
+                    csv.row(vec![
+                        metric.to_string(),
+                        label.clone(),
+                        format!("{value:.6e}"),
+                        unit.into(),
+                    ]);
+                    batched_rows.push(Json::obj(vec![
+                        ("metric", Json::Str(metric.into())),
+                        ("design", Json::Str(label.clone())),
+                        ("value", Json::Num(value)),
+                        ("unit", Json::Str(unit.into())),
+                    ]));
+                };
+                push("batched_eval_rate", bat_rate, "cfgs/s");
+                push(
+                    "batched_speedup_vs_compiled",
+                    bat_rate / comp_rate.max(1e-12),
+                    "x",
+                );
+            }
+        }
+        // §Perf 10 acceptance: lane batching matches or beats per-config
+        // compiled evaluation at some K ≥ 8. The identity asserts above
+        // are the correctness guarantee; the throughput claim rides on
+        // best-of-3 timings across 6 independent K ≥ 8 cells.
+        assert!(
+            wins >= 1,
+            "batched backend won {wins}/{cells} K ≥ 8 throughput cells — expected ≥ 1"
+        );
+        println!("  batched ≥ compiled in {wins}/{cells} K ≥ 8 cells");
+    }
+
     csv.write("results/perf.csv").unwrap();
     println!("\nwrote results/perf.csv");
+
+    let snapshot6 = Json::obj(vec![
+        ("bench", Json::Str("batched_backend".into())),
+        ("schema", Json::Str("metric-rows/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(batched_rows)),
+    ]);
+    fifoadvisor::report::write_file("BENCH_6.json", &snapshot6.to_string_pretty()).unwrap();
+    println!("wrote BENCH_6.json");
 
     let snapshot5 = Json::obj(vec![
         ("bench", Json::Str("backend_compare".into())),
@@ -831,8 +1001,9 @@ fn main() {
 
     // Machine-readable perf snapshot (the §Perf trajectory file). The
     // §Perf 7 scenario rows live in BENCH_3.json only, the §Perf 8
-    // pruning rows in BENCH_4.json only, and the §Perf 9 backend rows in
-    // BENCH_5.json only, so BENCH_2.json stays row-for-row comparable
+    // pruning rows in BENCH_4.json only, the §Perf 9 backend rows in
+    // BENCH_5.json only, and the §Perf 10 lane-batched rows in
+    // BENCH_6.json only, so BENCH_2.json stays row-for-row comparable
     // with pre-workload snapshots.
     let rows_json: Vec<Json> = csv
         .rows()
@@ -841,6 +1012,7 @@ fn main() {
             !r[0].starts_with("scenario_")
                 && !r[0].starts_with("prune_")
                 && !r[0].starts_with("backend_")
+                && !r[0].starts_with("batched_")
         })
         .map(|r| {
             let value = match r[2].parse::<f64>() {

@@ -12,14 +12,13 @@ use crate::util::stats::fmt_duration;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 
-/// Parse `--backend {fast,compiled}` (defaults to the event-driven fast
-/// simulator). Backend selection never changes results — only the
-/// throughput profile.
+/// Parse `--backend {fast,compiled,batched}` (defaults to the
+/// event-driven fast simulator). Backend selection never changes
+/// results — only the throughput profile.
 fn parse_backend(args: &Args) -> Result<BackendKind> {
     match args.get("backend") {
         None => Ok(BackendKind::Fast),
-        Some(s) => BackendKind::parse(s)
-            .ok_or_else(|| anyhow!("--backend must be fast|compiled, got '{s}'")),
+        Some(s) => BackendKind::parse(s).map_err(|e| anyhow!("--backend: {e}")),
     }
 }
 

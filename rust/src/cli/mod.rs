@@ -7,7 +7,7 @@
 //! fifoadvisor optimize --design NAME --optimizer grouped_sa [--budget 1000]
 //!                      [--seed 1] [--jobs 4] [--xla] [--alpha 0.7]
 //!                      [--out results/run.json] [--no-prune]
-//!                      [--backend fast|compiled]
+//!                      [--backend fast|compiled|batched]
 //! fifoadvisor hunt     --design NAME
 //! ```
 //!
@@ -58,17 +58,18 @@ USAGE:
   fifoadvisor simulate --design NAME [--baseline max|min | --depths D1,D2,..]
   fifoadvisor optimize --design NAME --optimizer OPT [--budget N] [--seed S]
                        [--jobs N] [--xla] [--alpha 0.7] [--out FILE.json]
-                       [--no-prune] [--backend fast|compiled]
+                       [--no-prune] [--backend fast|compiled|batched]
                        (--jobs sizes the persistent worker pool; --threads
                         is accepted as a legacy alias. --no-prune disables
                         the simulation-free pruning layer — dominance
                         oracle, occupancy clamp, scenario early exit — for
                         A/B debugging; results are identical either way.
                         --backend picks the simulation core: the
-                        event-driven fast simulator (default) or the
-                        graph-compiled one; outcomes are bit-identical,
-                        only throughput differs. simulate/hunt accept
-                        --backend too)
+                        event-driven fast simulator (default), the
+                        graph-compiled one, or the lane-batched SoA one
+                        that answers a whole proposal batch in one graph
+                        walk; outcomes are bit-identical, only throughput
+                        differs. simulate/hunt accept --backend too)
   fifoadvisor hunt     --design NAME
   fifoadvisor sweep    --config sweep.json
 

@@ -462,6 +462,15 @@ pub struct EngineStats {
     /// proposals served from an existing canonical evaluation instead of
     /// a fresh simulation of their own.
     pub sims_avoided: u64,
+    /// Lane-batched SoA graph walks executed (one per scenario member
+    /// with live lanes, per miss batch) — nonzero only under the
+    /// batched backend.
+    pub batch_walks: u64,
+    /// Depth-vector lanes packed into those walks.
+    pub lanes_packed: u64,
+    /// Lane capacity of those walks (walks × batch width) — the
+    /// occupancy denominator.
+    pub lane_slots: u64,
 }
 
 impl EngineStats {
@@ -528,6 +537,32 @@ impl EngineStats {
         } else {
             self.clamp_hits as f64 / self.proposals as f64
         }
+    }
+
+    /// Mean depth-vector lanes answered per lane-batched graph walk
+    /// (0 when the batched backend never ran).
+    pub fn lanes_per_walk(&self) -> f64 {
+        if self.batch_walks == 0 {
+            0.0
+        } else {
+            self.lanes_packed as f64 / self.batch_walks as f64
+        }
+    }
+
+    /// Fraction of lane capacity actually occupied across all batched
+    /// walks (< 1.0 when scenario early exit dropped deadlocked lanes).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.lane_slots == 0 {
+            0.0
+        } else {
+            self.lanes_packed as f64 / self.lane_slots as f64
+        }
+    }
+
+    /// Graph traversals saved by lane packing vs evaluating each lane
+    /// with its own walk.
+    pub fn walks_saved(&self) -> u64 {
+        self.lanes_packed.saturating_sub(self.batch_walks)
     }
 
     /// Fold one simulator run's telemetry into the counters.
@@ -603,7 +638,7 @@ pub struct EvalEngine {
     /// `--no-prune` / sweep `"prune": false` turn it off for A/B runs.
     prune: bool,
     /// Which simulation backend the bank (and every pool worker's clone
-    /// of it) runs — the CLI's `--backend {fast,compiled}`.
+    /// of it) runs — the CLI's `--backend {fast,compiled,batched}`.
     sim_backend: BackendKind,
     canon: Canonicalizer,
     oracle: FeasibilityOracle,
@@ -646,7 +681,7 @@ impl EvalEngine {
     }
 
     /// Workload engine with the native BRAM backend and an explicit
-    /// simulation backend (`--backend {fast,compiled}`).
+    /// simulation backend (`--backend {fast,compiled,batched}`).
     pub fn for_workload_with_sim(
         workload: Arc<Workload>,
         jobs: usize,
@@ -674,7 +709,11 @@ impl EvalEngine {
         let jobs = jobs.max(1);
         let cache = Arc::new(ShardedCache::new((jobs * 4).clamp(4, 64)));
         let sim = ScenarioSim::with_backend(&workload, SimOptions::default(), sim_backend);
-        let pool = if jobs > 1 {
+        // Under the lane-batched backend the whole miss batch rides one
+        // SoA walk per scenario — lane packing replaces sticky worker
+        // dispatch, so no pool is spun up and serial vs `--jobs N`
+        // identity is trivial (same code path).
+        let pool = if jobs > 1 && sim_backend != BackendKind::Batched {
             Some(WorkerPool::new(&sim, jobs, Some(Arc::clone(&cache))))
         } else {
             None
@@ -1032,10 +1071,27 @@ impl EvalEngine {
             }
         }
 
-        // Phase 2 — simulate the canonical misses (pool or inline).
+        // Phase 2 — simulate the canonical misses. Under the batched
+        // backend the whole miss batch is packed into SoA lanes and
+        // answered by one graph walk per scenario member; otherwise the
+        // misses fan out to the worker pool (or run inline when serial).
         let early = self.prune && self.sim.num_scenarios() > 1;
         let lats: Vec<Option<u64>> = if misses.is_empty() {
             Vec::new()
+        } else if self.sim_backend == BackendKind::Batched {
+            let t0 = Instant::now();
+            let lanes = self.sim.eval_batch(&misses, early);
+            self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
+            for le in &lanes {
+                self.stats.note_run(&le.run, le.scen_runs, le.gap);
+            }
+            let tel = self.sim.last_batch_telemetry();
+            self.stats.batch_walks += tel.walks;
+            self.stats.lanes_packed += tel.lanes_packed;
+            self.stats.lane_slots += tel.lane_slots;
+            self.n_sim += misses.len() as u64;
+            self.stats.sims += misses.len() as u64;
+            lanes.into_iter().map(|le| le.latency).collect()
         } else {
             match &mut self.pool {
                 Some(pool) if misses.len() > 1 => {
@@ -1630,13 +1686,27 @@ mod tests {
         let space = Space::from_workload(&w);
         for jobs in [1usize, 4] {
             let histories: Vec<Vec<(Box<[u32]>, Option<u64>, u32)>> =
-                [BackendKind::Fast, BackendKind::Compiled]
+                [BackendKind::Fast, BackendKind::Compiled, BackendKind::Batched]
                     .iter()
                     .map(|&kind| {
                         let mut ev = EvalEngine::for_workload_with_sim(w.clone(), jobs, kind);
                         assert_eq!(ev.sim_backend(), kind);
                         let mut o = crate::opt::random::RandomSearch::new(13, false);
                         drive(&mut o, &mut ev, &space, 96);
+                        if kind == BackendKind::Batched {
+                            let s = ev.stats();
+                            assert!(s.batch_walks > 0, "batched engine must lane-batch");
+                            assert!(s.lanes_packed >= s.batch_walks);
+                            assert!(s.lanes_per_walk() >= 1.0);
+                            assert!(s.batch_occupancy() > 0.0 && s.batch_occupancy() <= 1.0);
+                            assert_eq!(
+                                s.cache_hits + s.oracle_hits + s.sims,
+                                s.proposals,
+                                "accounting invariant under the batched backend"
+                            );
+                        } else {
+                            assert_eq!(ev.stats().batch_walks, 0);
+                        }
                         ev.history
                             .iter()
                             .map(|p| (p.depths.clone(), p.latency, p.bram))
@@ -1647,6 +1717,38 @@ mod tests {
                 histories[0], histories[1],
                 "jobs={jobs}: compiled backend diverged from fast"
             );
+            assert_eq!(
+                histories[0], histories[2],
+                "jobs={jobs}: batched backend diverged from fast"
+            );
         }
+    }
+
+    /// The batched backend never spins up a worker pool — lane packing
+    /// replaces sticky dispatch — so `--jobs N` is the serial code path
+    /// and walk telemetry is identical whatever the job count.
+    #[test]
+    fn batched_engine_lane_telemetry_is_jobs_invariant() {
+        let w = fig2_workload(&[8, 16]);
+        let space = Space::from_workload(&w);
+        let stats: Vec<EngineStats> = [1usize, 4]
+            .iter()
+            .map(|&jobs| {
+                let mut ev =
+                    EvalEngine::for_workload_with_sim(w.clone(), jobs, BackendKind::Batched);
+                let mut o = crate::opt::random::RandomSearch::new(23, false);
+                drive(&mut o, &mut ev, &space, 80);
+                *ev.stats()
+            })
+            .collect();
+        for s in &stats {
+            assert!(s.batch_walks > 0);
+            assert_eq!(s.walks_saved(), s.lanes_packed - s.batch_walks);
+        }
+        assert_eq!(stats[0].batch_walks, stats[1].batch_walks);
+        assert_eq!(stats[0].lanes_packed, stats[1].lanes_packed);
+        assert_eq!(stats[0].lane_slots, stats[1].lane_slots);
+        assert_eq!(stats[0].sims, stats[1].sims);
+        assert_eq!(stats[0].scenario_sims, stats[1].scenario_sims);
     }
 }

@@ -11,6 +11,13 @@
 //! here handles every edge case uniformly: an empty slice returns
 //! immediately, a single configuration runs inline, and `threads`
 //! larger than the batch simply leaves the surplus workers idle.
+//!
+//! Under the lane-batched backend ([`BatchedSim`](crate::sim::BatchedSim))
+//! thread fan-out is the wrong tool: one SoA graph walk already answers
+//! the whole batch, so [`lane_latencies`] packs the configurations into
+//! lanes of a single bank instead of dispatching jobs — the same
+//! replacement [`EvalEngine`](super::EvalEngine) makes when
+//! `--backend batched` is selected.
 
 use super::engine::WorkerPool;
 use crate::sim::fast::FastSim;
@@ -36,6 +43,22 @@ pub fn parallel_latencies(
     let bank = ScenarioSim::from_fastsim(proto.clone());
     let mut pool = WorkerPool::new(&bank, threads.min(configs.len()), None);
     pool.run_latencies(configs)
+}
+
+/// Lane-batched counterpart of [`parallel_latencies`]: evaluate every
+/// configuration through one [`ScenarioSim::eval_batch`] call on a clone
+/// of `bank` (no threads, no pool) — with a lane-batched backend the
+/// whole batch is one SoA walk per scenario member. Order-preserving;
+/// `None` = deadlock in some scenario.
+pub fn lane_latencies(bank: &ScenarioSim, configs: &[Box<[u32]>]) -> Vec<Option<u64>> {
+    if configs.is_empty() {
+        return Vec::new();
+    }
+    let mut bank = bank.clone();
+    bank.eval_batch(configs, false)
+        .into_iter()
+        .map(|le| le.latency)
+        .collect()
 }
 
 #[cfg(test)]
@@ -92,6 +115,32 @@ mod tests {
         for threads in [3, 4, 7, 128] {
             assert_eq!(parallel_latencies(&proto, &configs, threads), serial);
         }
+    }
+
+    #[test]
+    fn lane_latencies_match_thread_fanout() {
+        use crate::sim::{BackendKind, SimOptions};
+        use crate::trace::workload::Workload;
+        let bd = bench_suite::build("fig2");
+        let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+        let proto = FastSim::new(t.clone());
+        let mut rng = Rng::new(17);
+        let ub = t.upper_bounds();
+        let configs: Vec<Box<[u32]>> = (0..25)
+            .map(|_| {
+                ub.iter()
+                    .map(|&u| rng.range_u32(2, u.max(2)))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        let want = parallel_latencies(&proto, &configs, 4);
+        let w = Workload::single(Arc::clone(&t));
+        for kind in [BackendKind::Fast, BackendKind::Compiled, BackendKind::Batched] {
+            let bank = ScenarioSim::with_backend(&w, SimOptions::default(), kind);
+            assert_eq!(lane_latencies(&bank, &configs), want, "{kind:?}");
+        }
+        let bank = ScenarioSim::from_fastsim(proto);
+        assert!(lane_latencies(&bank, &[]).is_empty());
     }
 
     #[test]

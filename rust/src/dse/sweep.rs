@@ -22,9 +22,9 @@
 //! [`Workload`] and the run sizes for the worst case over all of them.
 //! (`"threads"` is accepted as a legacy alias of `"jobs"`; `"prune":
 //! false` disables the simulation-free pruning layer for A/B runs, like
-//! the CLI's `--no-prune`; `"backend": "fast" | "compiled"` selects the
-//! simulation backend, like the CLI's `--backend` — results are
-//! bit-identical either way, only the throughput profile differs.)
+//! the CLI's `--no-prune`; `"backend": "fast" | "compiled" | "batched"`
+//! selects the simulation backend, like the CLI's `--backend` — results
+//! are bit-identical either way, only the throughput profile differs.)
 
 use crate::bench_suite;
 use crate::dse::{drive, Evaluator};
@@ -60,7 +60,7 @@ pub struct SweepConfig {
     /// mirroring the CLI's `--no-prune`.
     pub prune: bool,
     /// Simulation backend (`"backend"` key; mirrors the CLI's
-    /// `--backend {fast,compiled}`).
+    /// `--backend {fast,compiled,batched}`).
     pub backend: crate::sim::BackendKind,
     pub out_dir: Option<String>,
 }
@@ -144,7 +144,7 @@ impl SweepConfig {
         let backend = match j.get("backend").and_then(|v| v.as_str()) {
             None => crate::sim::BackendKind::Fast,
             Some(s) => crate::sim::BackendKind::parse(s)
-                .ok_or_else(|| anyhow!("unknown backend '{s}' (expected fast|compiled)"))?,
+                .map_err(|e| anyhow!("sweep config: {e}"))?,
         };
         Ok(SweepConfig {
             designs,
@@ -194,6 +194,13 @@ pub struct SweepRow {
     pub clamp_rate: f64,
     /// Simulations avoided outright by the pruning layer.
     pub sims_avoided: u64,
+    /// Mean depth-vector lanes per lane-batched graph walk (0 unless
+    /// the batched backend ran).
+    pub lanes_per_walk: f64,
+    /// Fraction of lane capacity occupied across batched walks.
+    pub batch_occupancy: f64,
+    /// Graph traversals saved by lane packing vs one walk per lane.
+    pub walks_saved: u64,
     pub elapsed_secs: f64,
     pub front_size: usize,
     pub star_latency: u64,
@@ -250,6 +257,9 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
                     oracle_rate: ev.stats().oracle_rate(),
                     clamp_rate: ev.stats().clamp_rate(),
                     sims_avoided: ev.stats().sims_avoided,
+                    lanes_per_walk: ev.stats().lanes_per_walk(),
+                    batch_occupancy: ev.stats().batch_occupancy(),
+                    walks_saved: ev.stats().walks_saved(),
                     elapsed_secs: dt,
                     front_size: front.len(),
                     star_latency: star.0,
@@ -297,6 +307,8 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                 format!("{:.0}%", r.oracle_rate * 100.0),
                 format!("{:.0}%", r.clamp_rate * 100.0),
                 r.sims_avoided.to_string(),
+                format!("{:.1}", r.lanes_per_walk),
+                format!("{:.0}%", r.batch_occupancy * 100.0),
                 r.front_size.to_string(),
                 format!("{:.4}", r.star_latency as f64 / r.base_latency as f64),
                 format!(
@@ -310,7 +322,7 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
     report::markdown_table(
         &[
             "design", "optimizer", "seed", "scen", "secs", "sims", "incr%", "replay%", "orcl%",
-            "clmp%", "avoid", "front", "lat×", "BRAM↓", "rescue",
+            "clmp%", "avoid", "ln/wk", "occ%", "front", "lat×", "BRAM↓", "rescue",
         ],
         &table_rows,
     )
@@ -413,12 +425,22 @@ mod tests {
             run_sweep(&SweepConfig::from_json(&j).unwrap()).unwrap()
         };
         let fast = grid("fast");
-        let compiled = grid("compiled");
-        assert_eq!(fast[0].star_latency, compiled[0].star_latency);
-        assert_eq!(fast[0].star_bram, compiled[0].star_bram);
-        assert_eq!(fast[0].front_size, compiled[0].front_size);
-        assert_eq!(fast[0].evals, compiled[0].evals);
-        assert_eq!(fast[0].sims, compiled[0].sims);
+        for backend in ["compiled", "batched"] {
+            let other = grid(backend);
+            assert_eq!(fast[0].star_latency, other[0].star_latency, "{backend}");
+            assert_eq!(fast[0].star_bram, other[0].star_bram, "{backend}");
+            assert_eq!(fast[0].front_size, other[0].front_size, "{backend}");
+            assert_eq!(fast[0].evals, other[0].evals, "{backend}");
+            assert_eq!(fast[0].sims, other[0].sims, "{backend}");
+            if backend == "batched" {
+                assert!(other[0].lanes_per_walk >= 1.0, "lane telemetry missing");
+                assert!(other[0].batch_occupancy > 0.0);
+            } else {
+                assert_eq!(other[0].lanes_per_walk, 0.0);
+            }
+        }
+        assert_eq!(fast[0].lanes_per_walk, 0.0);
+        assert_eq!(fast[0].walks_saved, 0);
 
         let defaulted = Json::parse(
             r#"{"designs": ["fig2"], "optimizers": ["greedy"]}"#,

@@ -26,16 +26,22 @@
 //!   ([`sim::compiled`], the LightningSimV2 analog: the trace is lowered
 //!   once into a static event graph — program-order, read-after-write
 //!   and depth-parameterized full-FIFO edges — and each configuration is
-//!   a longest-path propagation with depth-edge-only invalidation;
-//!   select per run with `--backend {fast,compiled}`), the multi-trace
-//!   scenario bank ([`sim::scenario`]: one retained-schedule backend per
-//!   workload scenario, worst-case/weighted aggregation, max-merged
-//!   channel stats), the golden cycle-stepped reference ([`sim::golden`],
+//!   a longest-path propagation with depth-edge-only invalidation), and
+//!   the lane-batched simulator ([`sim::batched`]: the same event graph
+//!   in SoA layout — K depth vectors evaluated as K contiguous lanes
+//!   per node in a single Kahn walk, with per-lane deadlock detection;
+//!   select per run with `--backend {fast,compiled,batched}`), the
+//!   multi-trace scenario bank ([`sim::scenario`]: one retained-schedule
+//!   backend per workload scenario, worst-case/weighted aggregation,
+//!   max-merged channel stats, lane-batched
+//!   [`eval_batch`](sim::ScenarioSim::eval_batch)), the golden
+//!   cycle-stepped reference ([`sim::golden`],
 //!   the C/RTL co-simulation analog, now exercised on every shipped
 //!   design family), and the co-simulation runtime cost model
 //!   ([`sim::cosim`]). The unified conformance harness
 //!   (`tests/backend_conformance.rs`) pins every backend bit-identical
-//!   to the others and latency-exact against golden.
+//!   to the others (per lane, for the batched core) and latency-exact
+//!   against golden.
 //! - [`bram`] — the BRAM18K allocation model (paper Algorithm 1), the
 //!   shift-register threshold, and the depth-breakpoint pruning of §III-C.
 //! - [`opt`] — the optimizers of §III-D (random, grouped random, simulated
@@ -56,8 +62,11 @@
 //!   pre-filter (proposals dominated by a known deadlock are answered
 //!   without simulating; `--no-prune` disables), scenario early exit on
 //!   the latency-only path, in-batch dedup, batched BRAM backend
-//!   calls, and engine statistics (including per-scenario sim counts,
-//!   oracle/clamp hit rates, and the robustness gap) — while
+//!   calls, lane-packed whole-batch dispatch under `--backend batched`
+//!   (one `eval_batch` graph walk per scenario replaces the worker
+//!   pool), and engine statistics (including per-scenario sim counts,
+//!   oracle/clamp hit rates, lane-batching telemetry, and the
+//!   robustness gap) — while
 //!   [`dse::drive`] is the single loop that runs any optimizer against
 //!   it with centralized budget/history accounting (`--jobs N` on the
 //!   CLI sizes the pool).
@@ -88,6 +97,7 @@ pub mod util;
 
 
 pub use ir::{Design, DesignBuilder};
+pub use sim::batched::BatchedSim;
 pub use sim::compiled::CompiledSim;
 pub use sim::fast::{FastSim, SimOutcome};
 pub use sim::scenario::ScenarioSim;

@@ -72,6 +72,11 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
         ),
         ("scenario_sims", Json::Num(s.scenario_sims as f64)),
         ("robustness_gap_mean", Json::Num(s.mean_robustness_gap())),
+        ("batch_walks", Json::Num(s.batch_walks as f64)),
+        ("lanes_packed", Json::Num(s.lanes_packed as f64)),
+        ("lanes_per_walk", Json::Num(s.lanes_per_walk())),
+        ("batch_occupancy", Json::Num(s.batch_occupancy())),
+        ("walks_saved", Json::Num(s.walks_saved() as f64)),
     ])
 }
 
@@ -102,10 +107,21 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
         crate::sim::BackendKind::Fast => String::new(),
         other => format!(", {} backend", other.name()),
     };
+    let lanes = if s.batch_walks > 0 {
+        format!(
+            ", lane batching: {:.1} lanes/walk at {:.0}% occupancy, {} walks saved",
+            s.lanes_per_walk(),
+            s.batch_occupancy() * 100.0,
+            s.walks_saved()
+        )
+    } else {
+        String::new()
+    };
     format!(
         "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s ({:.0} proposals/s), \
          {:.0}% worker utilization, \
-         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed){backend}{pruning}{scenarios}",
+         {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed)\
+         {backend}{lanes}{pruning}{scenarios}",
         engine.jobs(),
         engine.cache_shards(),
         s.hit_rate() * 100.0,

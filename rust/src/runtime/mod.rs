@@ -216,6 +216,37 @@ impl BatchAnalytics {
             dominated,
         })
     }
+
+    /// The fused batched pipeline: evaluate a whole proposal batch
+    /// through an [`EvalEngine`](crate::dse::EvalEngine) (one lane-packed
+    /// SoA walk per scenario when the engine runs `--backend batched`,
+    /// memo/oracle/clamp layers intact) and feed the resulting per-batch
+    /// outcome arrays straight into one analytics execution — BRAM
+    /// totals, β-grid objectives and the dominance mask in a single
+    /// batched call, mirroring the exported Pallas pipeline
+    /// (`python/compile/kernels/{bram,pareto}.py`). This interpreter is
+    /// the conformance reference those kernels are tested against.
+    ///
+    /// The batch must fit one export batch (`configs.len() <=`
+    /// [`Self::batch`]) because the dominance mask is a per-batch
+    /// construct; chunk larger sets at the call site.
+    pub fn evaluate_engine_batch(
+        &mut self,
+        engine: &mut crate::dse::EvalEngine,
+        configs: &[Box<[u32]>],
+        betas: &[f64],
+    ) -> Result<AnalyticsOut> {
+        if configs.len() > self.batch {
+            bail!("batch {} exceeds export size {}", configs.len(), self.batch);
+        }
+        let widths = engine.widths.clone();
+        let latencies: Vec<Option<u64>> = engine
+            .eval_results(configs, false)
+            .into_iter()
+            .map(|r| r.latency)
+            .collect();
+        self.evaluate(configs, &widths, &latencies, betas)
+    }
 }
 
 /// [`BramBatch`] backend over the analytics module: lets the DSE engine
@@ -267,6 +298,63 @@ mod tests {
         assert!(a.max_fifos() >= 848, "FeedForward must fit a bucket");
         assert!(a.batch >= 64);
         assert!(a.betas >= 2);
+    }
+
+    #[test]
+    fn fused_engine_batch_matches_native_references() {
+        use crate::dse::EvalEngine;
+        use crate::sim::BackendKind;
+        use crate::trace::workload::Workload;
+        use std::sync::Arc;
+
+        let bd = crate::bench_suite::build("fig2");
+        let t = Arc::new(crate::trace::collect_trace(&bd.design, &bd.args).unwrap());
+        let w = Arc::new(Workload::single(t.clone()));
+        let mut a = BatchAnalytics::with_defaults();
+        let betas: Vec<f64> = (0..a.betas).map(|i| i as f64 / 10.0).collect();
+        // Mixed batch: feasible, deadlocked, duplicate and clamp-region
+        // lanes.
+        let configs: Vec<Box<[u32]>> = [
+            [16u32, 2],
+            [2, 2],
+            [15, 2],
+            [16, 2],
+            [7, 3],
+            [16, 16],
+        ]
+        .iter()
+        .map(|c| c.to_vec().into_boxed_slice())
+        .collect();
+        let mut ev = EvalEngine::for_workload_with_sim(w.clone(), 1, BackendKind::Batched);
+        let out = a.evaluate_engine_batch(&mut ev, &configs, &betas).unwrap();
+        // Engine results are identical to a fast-backend engine.
+        let mut fast = EvalEngine::for_workload_with_sim(w, 1, BackendKind::Fast);
+        let want: Vec<(Option<u64>, u32)> = fast.eval_batch(&configs);
+        // BRAM totals match Algorithm 1 per config.
+        for (i, (cfg, &b)) in configs.iter().zip(&out.bram_totals).enumerate() {
+            assert_eq!(b, crate::bram::bram_total(cfg, &ev.widths), "row {i}");
+            assert_eq!(b, want[i].1, "row {i}: engine BRAM diverged");
+        }
+        // Dominance mask matches an O(B²) reference over the fused
+        // latency/BRAM arrays.
+        let enc: Vec<(f64, u32)> = want
+            .iter()
+            .map(|&(l, b)| (l.map(|l| l as f64).unwrap_or(f64::INFINITY), b))
+            .collect();
+        for (i, &(li, bi)) in enc.iter().enumerate() {
+            let dom = enc
+                .iter()
+                .any(|&(lj, bj)| lj <= li && bj <= bi && (lj < li || bj < bi));
+            assert_eq!(out.dominated[i], dom, "row {i}: dominance diverged");
+        }
+        // β-grid scores: +inf exactly on the deadlocked rows.
+        for row in &out.scores {
+            assert_eq!(row.len(), configs.len());
+            for (s, &(l, _)) in row.iter().zip(&want) {
+                assert_eq!(s.is_infinite(), l.is_none());
+            }
+        }
+        assert!(ev.stats().batch_walks > 0, "fused path must lane-batch");
     }
 
     #[test]

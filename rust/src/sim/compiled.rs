@@ -53,14 +53,123 @@ use super::{SimBackend, SimOptions};
 use crate::trace::{ChanOpIndex, Trace};
 use std::sync::Arc;
 
-const WRITE_FLAG: u32 = 1 << 31;
-const NONE: u32 = u32::MAX;
-const NO_TIME: u64 = u64::MAX;
+pub(crate) const WRITE_FLAG: u32 = 1 << 31;
+pub(crate) const NONE: u32 = u32::MAX;
+pub(crate) const NO_TIME: u64 = u64::MAX;
 
 /// Fall back to a full evaluation when the checkpoint fixpoint shows at
 /// least this percentage of nodes must be recomputed anyway (same gate as
 /// [`FastSim`](super::fast::FastSim)'s delta replay).
 const INCR_FALLBACK_PCT: u64 = 90;
+
+/// The static event-graph lowering of a trace — the compile product both
+/// [`CompiledSim`] (one depth vector per walk) and
+/// [`BatchedSim`](super::batched::BatchedSim) (K depth-vector lanes per
+/// walk) evaluate. Keeping the lowering in ONE place is deliberate: a
+/// divergence in node numbering, ordinals or static in-degrees between
+/// the two graph backends would break their bit-identity in ways only
+/// the conformance fuzzers could expose. All tables are `Arc`-shared, so
+/// cloning an `EventGraph` (or a simulator holding its tables) duplicates
+/// pointers, never the compiled graph.
+#[derive(Clone)]
+pub(crate) struct EventGraph {
+    /// First node id of each process (node = base[p] + op index).
+    pub(crate) base: Arc<[u32]>,
+    /// One-past-last node id of each process.
+    pub(crate) pend: Arc<[u32]>,
+    /// Per node: channel | WRITE_FLAG.
+    pub(crate) node_code: Arc<[u32]>,
+    /// Per node: compute delay before the op.
+    pub(crate) node_delay: Arc<[u32]>,
+    /// Per node: ordinal among its channel's same-kind ops.
+    pub(crate) node_ord: Arc<[u32]>,
+    /// Per node: owning process.
+    pub(crate) node_proc: Arc<[u32]>,
+    /// Per channel: node ids of its writes/reads, by ordinal.
+    pub(crate) wr_node: Arc<[Box<[u32]>]>,
+    pub(crate) rd_node: Arc<[Box<[u32]>]>,
+    /// Static in-degrees: program order + read-after-write edges only
+    /// (the depth edges are added per evaluation).
+    pub(crate) indeg0: Arc<[u8]>,
+    /// Nodes that can have in-degree 0: process-first writes.
+    pub(crate) roots: Arc<[u32]>,
+}
+
+impl EventGraph {
+    /// Lower a trace into the static event graph (see the module docs
+    /// for the node/edge semantics).
+    pub(crate) fn compile(trace: &Trace, index: &ChanOpIndex) -> EventGraph {
+        let nch = trace.channels.len();
+        let nproc = trace.ops.len();
+        let mut base = Vec::with_capacity(nproc);
+        let mut pend = Vec::with_capacity(nproc);
+        let mut n_nodes = 0usize;
+        for ops in &trace.ops {
+            base.push(n_nodes as u32);
+            n_nodes += ops.len();
+            pend.push(n_nodes as u32);
+        }
+        let mut node_code = Vec::with_capacity(n_nodes);
+        let mut node_delay = Vec::with_capacity(n_nodes);
+        let mut node_ord = Vec::with_capacity(n_nodes);
+        let mut node_proc = Vec::with_capacity(n_nodes);
+        let mut indeg0 = Vec::with_capacity(n_nodes);
+        let mut roots = Vec::new();
+        for (p, ops) in trace.ops.iter().enumerate() {
+            for (k, op) in ops.iter().enumerate() {
+                let flag = if op.is_write() { WRITE_FLAG } else { 0 };
+                node_code.push(op.chan() as u32 | flag);
+                node_delay.push(op.delay);
+                node_ord.push(index.op_ord[p][k]);
+                node_proc.push(p as u32);
+                // Static in-degree: the program-order edge (k > 0) plus,
+                // for reads, the read-after-write edge (write `j` always
+                // exists — trace collection only records matched reads).
+                indeg0.push(u8::from(k > 0) + u8::from(!op.is_write()));
+                if k == 0 && op.is_write() {
+                    // A process-first write has channel ordinal 0 (SPSC:
+                    // all writes on its channel come from this process),
+                    // so it carries no depth edge for any depth ≥ 1 —
+                    // the only way a node starts at in-degree 0.
+                    roots.push(base[p]);
+                }
+            }
+        }
+        let wr_node: Vec<Box<[u32]>> = (0..nch)
+            .map(|c| {
+                index.wr_ops[c]
+                    .iter()
+                    .map(|&op_i| base[index.writer[c] as usize] + op_i)
+                    .collect()
+            })
+            .collect();
+        let rd_node: Vec<Box<[u32]>> = (0..nch)
+            .map(|c| {
+                index.rd_ops[c]
+                    .iter()
+                    .map(|&op_i| base[index.reader[c] as usize] + op_i)
+                    .collect()
+            })
+            .collect();
+        EventGraph {
+            base: base.into(),
+            pend: pend.into(),
+            node_code: node_code.into(),
+            node_delay: node_delay.into(),
+            node_ord: node_ord.into(),
+            node_proc: node_proc.into(),
+            wr_node: wr_node.into(),
+            rd_node: rd_node.into(),
+            indeg0: indeg0.into(),
+            roots: roots.into(),
+        }
+    }
+
+    /// Total node count (one node per trace op).
+    pub(crate) fn n_nodes(&self) -> usize {
+        self.node_code.len()
+    }
+}
 
 /// The graph-compiled simulator. Construction compiles the trace;
 /// [`simulate`](CompiledSim::simulate) evaluates one depth vector per
@@ -126,71 +235,23 @@ impl CompiledSim {
         let nproc = trace.ops.len();
         let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
         let index = Arc::new(ChanOpIndex::build(&trace));
-        let mut base = Vec::with_capacity(nproc);
-        let mut pend = Vec::with_capacity(nproc);
-        let mut n_nodes = 0usize;
-        for ops in &trace.ops {
-            base.push(n_nodes as u32);
-            n_nodes += ops.len();
-            pend.push(n_nodes as u32);
-        }
-        let mut node_code = Vec::with_capacity(n_nodes);
-        let mut node_delay = Vec::with_capacity(n_nodes);
-        let mut node_ord = Vec::with_capacity(n_nodes);
-        let mut node_proc = Vec::with_capacity(n_nodes);
-        let mut indeg0 = Vec::with_capacity(n_nodes);
-        let mut roots = Vec::new();
-        for (p, ops) in trace.ops.iter().enumerate() {
-            for (k, op) in ops.iter().enumerate() {
-                let flag = if op.is_write() { WRITE_FLAG } else { 0 };
-                node_code.push(op.chan() as u32 | flag);
-                node_delay.push(op.delay);
-                node_ord.push(index.op_ord[p][k]);
-                node_proc.push(p as u32);
-                // Static in-degree: the program-order edge (k > 0) plus,
-                // for reads, the read-after-write edge (write `j` always
-                // exists — trace collection only records matched reads).
-                indeg0.push(u8::from(k > 0) + u8::from(!op.is_write()));
-                if k == 0 && op.is_write() {
-                    // A process-first write has channel ordinal 0 (SPSC:
-                    // all writes on its channel come from this process),
-                    // so it carries no depth edge for any depth ≥ 1 —
-                    // the only way a node starts at in-degree 0.
-                    roots.push(base[p]);
-                }
-            }
-        }
-        let wr_node: Vec<Box<[u32]>> = (0..nch)
-            .map(|c| {
-                index.wr_ops[c]
-                    .iter()
-                    .map(|&op_i| base[index.writer[c] as usize] + op_i)
-                    .collect()
-            })
-            .collect();
-        let rd_node: Vec<Box<[u32]>> = (0..nch)
-            .map(|c| {
-                index.rd_ops[c]
-                    .iter()
-                    .map(|&op_i| base[index.reader[c] as usize] + op_i)
-                    .collect()
-            })
-            .collect();
+        let g = EventGraph::compile(&trace, &index);
+        let n_nodes = g.n_nodes();
         CompiledSim {
             trace,
             opts,
             index,
             widths,
-            base: base.into(),
-            pend: pend.into(),
-            node_code: node_code.into(),
-            node_delay: node_delay.into(),
-            node_ord: node_ord.into(),
-            node_proc: node_proc.into(),
-            wr_node: wr_node.into(),
-            rd_node: rd_node.into(),
-            indeg0: indeg0.into(),
-            roots: roots.into(),
+            base: g.base,
+            pend: g.pend,
+            node_code: g.node_code,
+            node_delay: g.node_delay,
+            node_ord: g.node_ord,
+            node_proc: g.node_proc,
+            wr_node: g.wr_node,
+            rd_node: g.rd_node,
+            indeg0: g.indeg0,
+            roots: g.roots,
             time: vec![0; n_nodes],
             indeg: vec![0; n_nodes],
             queue: Vec::with_capacity(nproc.max(16)),

@@ -17,16 +17,22 @@
 //!   and each configuration is evaluated as a longest-path propagation
 //!   over that graph, with depth-edge-only invalidation for incremental
 //!   re-evaluation.
+//! - [`batched`] — the lane-batched SoA evaluator over the same compiled
+//!   event graph: K depth vectors per Kahn walk, with lane-major node
+//!   times, lane-parameterized full-FIFO edges, and per-lane deadlock
+//!   detection and blocked-set recovery. Answers a whole optimizer batch
+//!   in one traversal of the graph tables.
 //! - [`golden`] — a deliberately simple global-time-stepped simulator used
 //!   as the accuracy reference (the paper's C/RTL co-simulation role in
 //!   Table II). Slower, structurally different, obviously correct.
 //!
-//! [`fast`] and [`compiled`] both implement the [`SimBackend`] trait and
-//! are interchangeable everywhere above this module ([`scenario`], the
-//! DSE engine, the CLI's `--backend {fast,compiled}`); the
+//! [`fast`], [`compiled`] and [`batched`] all implement the
+//! [`SimBackend`] trait and are interchangeable everywhere above this
+//! module ([`scenario`], the DSE engine, the CLI's
+//! `--backend {fast,compiled,batched}`); the
 //! `tests/backend_conformance.rs` suite pins them bit-identical to each
-//! other (full outcomes, incl. deadlock blocked sets) and latency-exact
-//! against [`golden`].
+//! other (full outcomes, incl. deadlock blocked sets — per lane for the
+//! batched backend) and latency-exact against [`golden`].
 //!
 //! [`cosim`] models the *runtime* of traditional HLS/RTL co-simulation for
 //! the Table III comparisons. [`scenario`] lifts any [`SimBackend`] from
@@ -54,12 +60,14 @@
 //! - A configuration **deadlocks** iff the commit fixpoint leaves some
 //!   process blocked forever.
 
+pub mod batched;
 pub mod compiled;
 pub mod cosim;
 pub mod fast;
 pub mod golden;
 pub mod scenario;
 
+pub use batched::BatchedSim;
 pub use compiled::CompiledSim;
 pub use fast::{FastSim, RunInfo, SimOutcome};
 pub use scenario::ScenarioSim;
@@ -213,14 +221,16 @@ pub(crate) fn invalid_ops(trace: &Trace, ckpt: &[u32]) -> u64 {
 
 /// A single-trace simulation backend: everything [`ScenarioSim`] (and
 /// through it the DSE engine) needs from a simulator. Implemented by
-/// [`FastSim`] (event-driven, the default) and [`CompiledSim`]
-/// (graph-compiled); both must be **bit-identical** — same latencies,
-/// same deadlock verdicts, same blocked sets — on every trace and depth
-/// vector, which `tests/backend_conformance.rs` enforces. Backends are
-/// `Send` (never `Sync`-shared): each worker thread owns its own clone,
-/// including its own retained schedule.
+/// [`FastSim`] (event-driven, the default), [`CompiledSim`]
+/// (graph-compiled) and [`BatchedSim`] (lane-batched SoA); all must be
+/// **bit-identical** — same latencies, same deadlock verdicts, same
+/// blocked sets — on every trace and depth vector, which
+/// `tests/backend_conformance.rs` enforces. Backends are `Send` (never
+/// `Sync`-shared): each worker thread owns its own clone, including its
+/// own retained schedule.
 pub trait SimBackend: Send {
-    /// Short backend name for reports (`"fast"` / `"compiled"`).
+    /// Short backend name for reports (`"fast"` / `"compiled"` /
+    /// `"batched"`).
     fn name(&self) -> &'static str;
     /// The trace this backend evaluates.
     fn trace(&self) -> &Arc<Trace>;
@@ -229,6 +239,21 @@ pub trait SimBackend: Send {
     /// Evaluate and collect per-channel occupancy/stall statistics into a
     /// caller-owned buffer.
     fn simulate_with_stats_into(&mut self, depths: &[u32], stats: &mut ChannelStats) -> SimOutcome;
+    /// Evaluate a batch of configurations, returning each lane's outcome
+    /// and telemetry in input order. The default implementation is a loop
+    /// of [`simulate`](Self::simulate) — the retained-schedule backends
+    /// ([`FastSim`], [`CompiledSim`]) are unchanged by batching and still
+    /// delta-replay between consecutive lanes — while [`BatchedSim`]
+    /// overrides it with a single lane-packed SoA Kahn walk.
+    fn eval_batch(&mut self, configs: &[Box<[u32]>]) -> Vec<(SimOutcome, RunInfo)> {
+        configs
+            .iter()
+            .map(|c| {
+                let out = self.simulate(c);
+                (out, self.last_run())
+            })
+            .collect()
+    }
     /// Telemetry of the most recent call.
     fn last_run(&self) -> RunInfo;
     /// Enable/disable schedule retention and incremental re-evaluation.
@@ -244,8 +269,9 @@ impl Clone for Box<dyn SimBackend> {
 }
 
 /// Which [`SimBackend`] implementation to instantiate — threaded from the
-/// CLI's `--backend {fast,compiled}` / sweep `"backend"` key through
-/// [`crate::dse::EvalEngine`] and [`ScenarioSim`] down to every worker.
+/// CLI's `--backend {fast,compiled,batched}` / sweep `"backend"` key
+/// through [`crate::dse::EvalEngine`] and [`ScenarioSim`] down to every
+/// worker.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BackendKind {
     /// The event-driven [`FastSim`] (default).
@@ -253,15 +279,22 @@ pub enum BackendKind {
     Fast,
     /// The graph-compiled [`CompiledSim`].
     Compiled,
+    /// The lane-batched SoA [`BatchedSim`].
+    Batched,
 }
 
+/// Every backend name [`BackendKind::parse`] accepts, for error messages
+/// and help text.
+pub const BACKEND_NAMES: &str = "fast, compiled, batched";
+
 impl BackendKind {
-    /// Parse a CLI/sweep backend name.
-    pub fn parse(s: &str) -> Option<BackendKind> {
+    /// Parse a CLI/sweep backend name. The error names every valid value.
+    pub fn parse(s: &str) -> Result<BackendKind, String> {
         match s {
-            "fast" => Some(BackendKind::Fast),
-            "compiled" => Some(BackendKind::Compiled),
-            _ => None,
+            "fast" => Ok(BackendKind::Fast),
+            "compiled" => Ok(BackendKind::Compiled),
+            "batched" => Ok(BackendKind::Batched),
+            _ => Err(format!("unknown backend '{s}' (expected one of: {BACKEND_NAMES})")),
         }
     }
 
@@ -270,6 +303,7 @@ impl BackendKind {
         match self {
             BackendKind::Fast => "fast",
             BackendKind::Compiled => "compiled",
+            BackendKind::Batched => "batched",
         }
     }
 
@@ -278,6 +312,7 @@ impl BackendKind {
         match self {
             BackendKind::Fast => Box::new(FastSim::with_options(trace, opts)),
             BackendKind::Compiled => Box::new(CompiledSim::with_options(trace, opts)),
+            BackendKind::Batched => Box::new(BatchedSim::with_options(trace, opts)),
         }
     }
 }
@@ -288,11 +323,17 @@ mod tests {
 
     #[test]
     fn backend_kind_parses_and_names() {
-        assert_eq!(BackendKind::parse("fast"), Some(BackendKind::Fast));
-        assert_eq!(BackendKind::parse("compiled"), Some(BackendKind::Compiled));
-        assert_eq!(BackendKind::parse("nope"), None);
+        assert_eq!(BackendKind::parse("fast"), Ok(BackendKind::Fast));
+        assert_eq!(BackendKind::parse("compiled"), Ok(BackendKind::Compiled));
+        assert_eq!(BackendKind::parse("batched"), Ok(BackendKind::Batched));
         assert_eq!(BackendKind::default(), BackendKind::Fast);
         assert_eq!(BackendKind::Fast.name(), "fast");
         assert_eq!(BackendKind::Compiled.name(), "compiled");
+        assert_eq!(BackendKind::Batched.name(), "batched");
+        // Satellite: the parse error names every valid backend.
+        let err = BackendKind::parse("nope").unwrap_err();
+        for name in ["fast", "compiled", "batched"] {
+            assert!(err.contains(name), "error must name '{name}': {err}");
+        }
     }
 }

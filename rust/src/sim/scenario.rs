@@ -39,6 +39,40 @@ use crate::trace::workload::Workload;
 use crate::trace::Trace;
 use std::sync::Arc;
 
+/// Per-lane result of one [`ScenarioSim::eval_batch`] call: the
+/// workload-aggregated latency (`None` = deadlock in some scenario), the
+/// robustness gap, how many scenario members evaluated the lane, and the
+/// lane's merged simulator telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneEval {
+    /// Aggregated latency (`None` = infeasible).
+    pub latency: Option<u64>,
+    /// Worst − best per-scenario latency (`None` on deadlock).
+    pub gap: Option<u64>,
+    /// Scenario members that evaluated this lane (< `num_scenarios` only
+    /// when the early-exit path dropped a deadlocked lane from later
+    /// sub-batches).
+    pub scen_runs: u32,
+    /// Merged telemetry (summed over the scenarios that ran the lane).
+    pub run: RunInfo,
+}
+
+/// Lane-packing telemetry of one [`ScenarioSim::eval_batch`] call — the
+/// engine folds these into [`EngineStats`](crate::dse::EngineStats)'
+/// lane counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchTelemetry {
+    /// Lane-batched member walks executed (one `eval_batch` per scenario
+    /// member with at least one live lane).
+    pub walks: u64,
+    /// Depth-vector lanes packed across those walks.
+    pub lanes_packed: u64,
+    /// Lane capacity of those walks (walks × full batch width) — the
+    /// occupancy denominator; shortfall vs `lanes_packed` is lanes the
+    /// early-exit path dropped after a deadlock.
+    pub lane_slots: u64,
+}
+
 /// A bank of per-scenario simulation backends evaluated as one unit.
 /// `Clone` duplicates every member's scratch (traces and compiled graph
 /// tables stay shared), giving each DSE worker its own full bank of
@@ -68,6 +102,9 @@ pub struct ScenarioSim {
     /// (< `num_scenarios` only when the early-exit path stopped at a
     /// deadlock).
     scen_runs: u32,
+    /// Lane-packing telemetry of the most recent
+    /// [`eval_batch`](Self::eval_batch) call.
+    batch_tel: BatchTelemetry,
 }
 
 impl ScenarioSim {
@@ -83,8 +120,8 @@ impl ScenarioSim {
     }
 
     /// Build with an explicit simulation backend — the CLI's
-    /// `--backend {fast,compiled}` bottoms out here; every scenario
-    /// member uses the same backend.
+    /// `--backend {fast,compiled,batched}` bottoms out here; every
+    /// scenario member uses the same backend.
     pub fn with_backend(workload: &Workload, opts: SimOptions, kind: BackendKind) -> ScenarioSim {
         let k = workload.num_scenarios();
         ScenarioSim {
@@ -103,6 +140,7 @@ impl ScenarioSim {
             dl_count: vec![0; k],
             probe_order: Vec::with_capacity(k),
             scen_runs: 0,
+            batch_tel: BatchTelemetry::default(),
         }
     }
 
@@ -131,6 +169,7 @@ impl ScenarioSim {
             dl_count: vec![0],
             probe_order: Vec::with_capacity(1),
             scen_runs: 0,
+            batch_tel: BatchTelemetry::default(),
         }
     }
 
@@ -273,6 +312,109 @@ impl ScenarioSim {
         let best = self.per_lat.iter().flatten().min().copied().unwrap_or(0);
         self.gap = Some(worst - best);
         aggregate_latency(&self.per_lat, &self.weights, self.agg)
+    }
+
+    /// Lane-packing telemetry of the most recent
+    /// [`eval_batch`](Self::eval_batch) call.
+    pub fn last_batch_telemetry(&self) -> BatchTelemetry {
+        self.batch_tel
+    }
+
+    /// Latency-only evaluation of a whole batch of configurations: for
+    /// each scenario member (in bank-index order) the live lanes are
+    /// packed into one [`SimBackend::eval_batch`] call, so a
+    /// lane-batched backend ([`BatchedSim`](super::BatchedSim)) answers
+    /// all of them in a single SoA graph walk. Per lane this computes
+    /// exactly what [`eval_latency`](Self::eval_latency) computes for
+    /// that configuration — deadlock in any scenario → `None`, else the
+    /// weighted/worst aggregate plus the robustness gap. With
+    /// `early_exit` set, lanes already deadlocked are dropped from the
+    /// remaining scenarios' sub-batches (the lane-parallel analogue of
+    /// `eval_latency`'s first-deadlock stop; member order here is fixed
+    /// bank order, which — like the probe order — is bookkeeping, never
+    /// semantics).
+    ///
+    /// The bank-level single-call accessors ([`last_run`](Self::last_run),
+    /// [`last_gap`](Self::last_gap),
+    /// [`scenario_latencies`](Self::scenario_latencies),
+    /// [`last_scenarios_run`](Self::last_scenarios_run)) describe
+    /// single-configuration calls and are **not** updated by this
+    /// method; each lane's [`LaneEval`] carries the per-lane equivalents
+    /// instead. Only [`last_batch_telemetry`](Self::last_batch_telemetry)
+    /// and the adaptive deadlock counters are refreshed.
+    pub fn eval_batch(&mut self, configs: &[Box<[u32]>], early_exit: bool) -> Vec<LaneEval> {
+        let nb = configs.len();
+        let kk = self.sims.len();
+        self.batch_tel = BatchTelemetry::default();
+        if nb == 0 {
+            return Vec::new();
+        }
+        // Per-lane accumulators.
+        let mut runs = vec![RunInfo::default(); nb];
+        let mut scen_runs = vec![0u32; nb];
+        let mut dead = vec![false; nb];
+        // Flat per-lane per-scenario latencies (lane-major: b * kk + i).
+        let mut per = vec![None; nb * kk];
+        // Packing scratch: sub-batch configs and their source lanes.
+        let mut sub: Vec<Box<[u32]>> = Vec::with_capacity(nb);
+        let mut src: Vec<usize> = Vec::with_capacity(nb);
+        for i in 0..kk {
+            sub.clear();
+            src.clear();
+            for (b, cfg) in configs.iter().enumerate() {
+                if early_exit && dead[b] {
+                    continue;
+                }
+                sub.push(cfg.clone());
+                src.push(b);
+            }
+            if sub.is_empty() {
+                break;
+            }
+            self.batch_tel.walks += 1;
+            self.batch_tel.lanes_packed += sub.len() as u64;
+            self.batch_tel.lane_slots += nb as u64;
+            let outs = self.sims[i].eval_batch(&sub);
+            debug_assert_eq!(outs.len(), sub.len());
+            for ((out, run), &b) in outs.iter().zip(&src) {
+                runs[b].incremental |= run.incremental;
+                runs[b].dirty_channels += run.dirty_channels;
+                runs[b].replayed_ops += run.replayed_ops;
+                runs[b].total_ops += run.total_ops;
+                scen_runs[b] += 1;
+                match out {
+                    SimOutcome::Done { latency } => per[b * kk + i] = Some(*latency),
+                    SimOutcome::Deadlock { .. } => {
+                        // Adaptive probe counters: one bump per
+                        // (lane, scenario) deadlock, same as the
+                        // single-call paths.
+                        self.dl_count[i] += 1;
+                        dead[b] = true;
+                    }
+                }
+            }
+        }
+        (0..nb)
+            .map(|b| {
+                let lane = &per[b * kk..b * kk + kk];
+                let (latency, gap) = if dead[b] {
+                    (None, None)
+                } else {
+                    let worst = lane.iter().flatten().max().copied().unwrap_or(0);
+                    let best = lane.iter().flatten().min().copied().unwrap_or(0);
+                    (
+                        aggregate_latency(lane, &self.weights, self.agg),
+                        Some(worst - best),
+                    )
+                };
+                LaneEval {
+                    latency,
+                    gap,
+                    scen_runs: scen_runs[b],
+                    run: runs[b],
+                }
+            })
+            .collect()
     }
 
     /// Evaluate with max-merged per-channel statistics.
@@ -615,6 +757,62 @@ mod tests {
                 "cfg {cfg:?}"
             );
         }
+    }
+
+    /// The lane-batched bank path computes, per lane, exactly what the
+    /// single-configuration path computes — latency, gap, and scenario
+    /// run counts — with early exit on or off, for every backend kind.
+    #[test]
+    fn eval_batch_lanes_match_per_config_eval() {
+        let w = fig2_workload(&[8, 16, 12]);
+        let cfgs: Vec<Box<[u32]>> = [
+            [16u32, 2],
+            [7, 2],   // deadlocks n=16 only
+            [15, 2],  // boundary: feasible everywhere
+            [2, 2],   // deadlocks everywhere
+            [16, 2],  // duplicate of lane 0
+            [11, 3],  // deadlocks n=16 only
+            [16, 16], // ample
+        ]
+        .iter()
+        .map(|c| c.to_vec().into_boxed_slice())
+        .collect();
+        for kind in [BackendKind::Fast, BackendKind::Compiled, BackendKind::Batched] {
+            for early in [false, true] {
+                let mut bank = ScenarioSim::with_backend(&w, SimOptions::default(), kind);
+                let mut solo = ScenarioSim::new(&w);
+                let lanes = bank.eval_batch(&cfgs, early);
+                assert_eq!(lanes.len(), cfgs.len());
+                for (le, cfg) in lanes.iter().zip(&cfgs) {
+                    let want = solo.simulate(cfg).latency();
+                    assert_eq!(le.latency, want, "{kind:?} early={early} cfg {cfg:?}");
+                    assert_eq!(le.gap, solo.last_gap(), "{kind:?} early={early} cfg {cfg:?}");
+                    if !early {
+                        assert_eq!(le.scen_runs, 3);
+                        assert_eq!(le.run.total_ops, solo.last_run().total_ops);
+                    } else if want.is_some() {
+                        assert_eq!(le.scen_runs, 3, "feasible lanes run every scenario");
+                    } else {
+                        assert!(le.scen_runs >= 1 && le.scen_runs <= 3);
+                    }
+                }
+                // Telemetry: every scenario walks once without early exit
+                // (full lane occupancy); with it, dead lanes drop out of
+                // later walks.
+                let tel = bank.last_batch_telemetry();
+                assert_eq!(tel.walks, 3);
+                assert_eq!(tel.lane_slots, 3 * cfgs.len() as u64);
+                if early {
+                    assert!(tel.lanes_packed < tel.lane_slots, "{tel:?}");
+                } else {
+                    assert_eq!(tel.lanes_packed, tel.lane_slots);
+                }
+            }
+        }
+        // Empty batches are a no-op.
+        let mut bank = ScenarioSim::new(&w);
+        assert!(bank.eval_batch(&[], true).is_empty());
+        assert_eq!(bank.last_batch_telemetry(), BatchTelemetry::default());
     }
 
     #[test]

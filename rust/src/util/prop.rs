@@ -260,6 +260,31 @@ pub fn random_layered_design(rng: &mut Rng) -> Design {
     b.build()
 }
 
+/// The lane-count grid the batched-backend conformance suites sweep:
+/// K = 1 (degenerate single lane), small odd, a mid batch, and a wide
+/// one that crosses typical optimizer batch widths.
+pub const LANE_GRID: [usize; 4] = [1, 3, 8, 64];
+
+/// A DSE-shaped batch of `k` depth vectors for lane-batched evaluation:
+/// generated as a mutation chain (each lane is a 1–2 channel mutation of
+/// the previous, the SA/NSGA-II proposal shape) with ~15% of lanes
+/// duplicating an earlier lane exactly — duplicate configurations in one
+/// batch are legal and must produce identical per-lane outcomes.
+pub fn random_lane_batch(rng: &mut Rng, ub: &[u32], k: usize) -> Vec<Box<[u32]>> {
+    let mut batch: Vec<Box<[u32]>> = Vec::with_capacity(k);
+    let mut cur = random_depths(rng, ub, 2);
+    for _ in 0..k {
+        if !batch.is_empty() && rng.chance(0.15) {
+            let i = rng.index(batch.len());
+            batch.push(batch[i].clone());
+            continue;
+        }
+        batch.push(cur.clone().into_boxed_slice());
+        mutate_depths(rng, &mut cur, ub);
+    }
+    batch
+}
+
 /// A random multi-scenario workload over the deadlock-boundary design:
 /// 2–4 scenarios with distinct `n` arguments, so per-scenario deadlock
 /// thresholds differ and the worst-case aggregation, the any-scenario
@@ -346,5 +371,12 @@ mod tests {
         let names = suite_with_specials();
         assert!(names.contains(&"fig2") && names.contains(&"flowgnn_pna"));
         assert!(names.len() >= 24);
+        for &k in &LANE_GRID {
+            let batch = random_lane_batch(&mut rng, &ub, k);
+            assert_eq!(batch.len(), k);
+            assert!(batch
+                .iter()
+                .all(|c| c.len() == ub.len() && c.iter().all(|&d| d >= 1)));
+        }
     }
 }

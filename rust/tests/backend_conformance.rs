@@ -8,11 +8,17 @@
 //!    **bit-identical to each other** (full [`SimOutcome`]s: latency,
 //!    deadlock verdict, *and* blocked sets) and latency-exact against
 //!    golden, warm (incremental) and cold alike;
-//! 3. **bank** — `ScenarioSim` over either backend must agree on
-//!    aggregate verdicts, per-scenario latencies and merged stats;
-//! 4. **engine** — `EvalEngine` histories and Pareto fronts must be
-//!    identical for every optimizer under `--backend compiled`, serial
-//!    and `--jobs 4`.
+//! 3. **batched** (`BatchedSim`) must be bit-identical **per lane** to
+//!    the single-config backends for every lane of every batch shape —
+//!    the `util::prop::LANE_GRID` K values, ragged final batches,
+//!    duplicate configurations in one batch, and mixed per-lane deadlock
+//!    verdicts (blocked sets included);
+//! 4. **bank** — `ScenarioSim` over any backend must agree on aggregate
+//!    verdicts, per-scenario latencies and merged stats, including the
+//!    lane-batched `eval_batch` bank path;
+//! 5. **engine** — `EvalEngine` histories and Pareto fronts must be
+//!    identical for every optimizer under `--backend compiled` and
+//!    `--backend batched`, serial and `--jobs 4`, pruning on and off.
 //!
 //! All randomness comes from the shared `util::prop` generator set, so
 //! this suite explores the same seeded corpus as the incremental and
@@ -22,6 +28,7 @@
 use fifoadvisor::bench_suite;
 use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::{self, Space};
+use fifoadvisor::sim::batched::BatchedSim;
 use fifoadvisor::sim::compiled::CompiledSim;
 use fifoadvisor::sim::fast::FastSim;
 use fifoadvisor::sim::golden::simulate_golden;
@@ -30,7 +37,7 @@ use fifoadvisor::trace::collect_trace;
 use fifoadvisor::trace::Trace;
 use fifoadvisor::util::prop::{
     self, deadlock_boundary_design, mutate_depths, pair_burst_design, random_depths,
-    random_layered_design, random_workload, suite_with_specials,
+    random_lane_batch, random_layered_design, random_workload, suite_with_specials, LANE_GRID,
 };
 use fifoadvisor::util::Rng;
 use std::sync::Arc;
@@ -253,6 +260,157 @@ fn property_random_workload_banks_agree() {
     );
 }
 
+/// Assert one `BatchedSim::eval_batch` against per-config `FastSim`
+/// ground truth: full per-lane `SimOutcome` identity (latency, deadlock
+/// verdict, blocked sets).
+fn assert_lanes_match_fast(
+    t: &Arc<Trace>,
+    bat: &mut BatchedSim,
+    batch: &[Box<[u32]>],
+    ctx: &str,
+) -> Result<(), String> {
+    let mut fast = FastSim::new(t.clone());
+    let outs = bat.eval_batch(batch);
+    if outs.len() != batch.len() {
+        return Err(format!("{ctx}: lane count {} != {}", outs.len(), batch.len()));
+    }
+    for (l, ((out, run), cfg)) in outs.iter().zip(batch).enumerate() {
+        let want = fast.simulate(cfg);
+        if *out != want {
+            return Err(format!(
+                "{ctx} lane {l}: batched {out:?} != fast {want:?} at cfg {cfg:?}"
+            ));
+        }
+        if run.total_ops != t.total_ops() as u64 {
+            return Err(format!("{ctx} lane {l}: total_ops {run:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn batched_lanes_agree_on_every_suite_design() {
+    // One BatchedSim per design, reused across the lane grid — ragged
+    // re-sizing of the SoA scratch between batches is part of the test.
+    for name in suite_with_specials() {
+        let t = trace_of(name);
+        let mut bat = BatchedSim::new(t.clone());
+        let ub = t.upper_bounds();
+        let mut rng = Rng::new(0xBA7C ^ name.len() as u64);
+        for &k in &[1usize, 3, 8] {
+            let batch = random_lane_batch(&mut rng, &ub, k);
+            assert_lanes_match_fast(&t, &mut bat, &batch, &format!("{name} K={k}"))
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+}
+
+#[test]
+fn property_batched_lane_grid_on_random_designs() {
+    // The full K grid (incl. 64), ragged final batches and duplicate
+    // configurations, on random layered designs.
+    prop::check(
+        "batched == fast per lane across the lane grid",
+        prop::iters(20),
+        |rng| {
+            let design = random_layered_design(rng);
+            let t = Arc::new(collect_trace(&design, &[]).map_err(|e| e.to_string())?);
+            let mut bat = BatchedSim::new(t.clone());
+            let ub = t.upper_bounds();
+            let k = *rng.choose(&LANE_GRID);
+            assert_lanes_match_fast(
+                &t,
+                &mut bat,
+                &random_lane_batch(rng, &ub, k),
+                &format!("K={k}"),
+            )?;
+            // A ragged follow-up batch (K not from the grid) reuses the
+            // same simulator's scratch at a different width.
+            let ragged = 1 + rng.index(5);
+            assert_lanes_match_fast(
+                &t,
+                &mut bat,
+                &random_lane_batch(rng, &ub, ragged),
+                &format!("ragged K={ragged}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn batched_lanes_split_deadlock_boundaries() {
+    // One batch holding lanes on both sides of the feasibility threshold
+    // (x = n − 1): per-lane verdicts must split exactly, with fast's
+    // blocked sets on the deadlocked lanes.
+    let d = deadlock_boundary_design();
+    for n in [5i64, 16] {
+        let t = Arc::new(collect_trace(&d, &[n]).unwrap());
+        let thresh = (n - 1) as u32;
+        let batch: Vec<Box<[u32]>> = (thresh.saturating_sub(2)..=thresh + 2)
+            .flat_map(|dx| [2u32, 3].map(|dy| vec![dx.max(1), dy].into_boxed_slice()))
+            .collect();
+        let mut bat = BatchedSim::new(t.clone());
+        assert_lanes_match_fast(&t, &mut bat, &batch, &format!("boundary n={n}"))
+            .unwrap_or_else(|e| panic!("{e}"));
+        // Sanity: the batch genuinely mixes verdicts.
+        let outs = bat.eval_batch(&batch);
+        assert!(outs.iter().any(|(o, _)| o.is_deadlock()), "n={n}");
+        assert!(outs.iter().any(|(o, _)| !o.is_deadlock()), "n={n}");
+    }
+}
+
+#[test]
+fn batched_lanes_cover_srl_bram_flips() {
+    // The SRL↔BRAM read-latency flip on the wide channel is a per-lane
+    // edge weight: lanes on both sides of the threshold share one walk.
+    let d = pair_burst_design(32);
+    let t = Arc::new(collect_trace(&d, &[]).unwrap());
+    let batch: Vec<Box<[u32]>> = (0..24u32)
+        .map(|i| {
+            let c_depth = if i % 2 == 0 { 2 } else { 3 + (i % 3) };
+            vec![8u32, c_depth, 8].into_boxed_slice()
+        })
+        .collect();
+    let mut bat = BatchedSim::new(t.clone());
+    assert_lanes_match_fast(&t, &mut bat, &batch, "srl-bram")
+        .unwrap_or_else(|e| panic!("{e}"));
+}
+
+#[test]
+fn property_random_workload_banks_agree_batched() {
+    // Bank-level lane batching: `ScenarioSim::eval_batch` over the
+    // batched backend vs per-config fast-bank evaluation on random
+    // multi-scenario workloads, early exit on and off.
+    prop::check(
+        "batched bank lanes == fast bank per config",
+        prop::iters(15),
+        |rng| {
+            let w = random_workload(rng);
+            let mut bat_bank =
+                ScenarioSim::with_backend(&w, SimOptions::default(), BackendKind::Batched);
+            let mut fast_bank = ScenarioSim::new(&w);
+            let ub = w.upper_bounds();
+            let k = *rng.choose(&LANE_GRID[..3]);
+            let batch = random_lane_batch(rng, &ub, k);
+            for early in [false, true] {
+                let lanes = bat_bank.eval_batch(&batch, early);
+                for (l, (le, cfg)) in lanes.iter().zip(&batch).enumerate() {
+                    let want = fast_bank.simulate(cfg).latency();
+                    prop_check(
+                        le.latency == want,
+                        format!("early={early} lane {l}: {:?} != {want:?} at {cfg:?}", le.latency),
+                    )?;
+                    prop_check(
+                        le.gap == fast_bank.last_gap(),
+                        format!("early={early} lane {l}: gap diverged at {cfg:?}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 type HistoryRecord = Vec<(Box<[u32]>, Option<u64>, u32)>;
 type FrontRecord = Vec<(Option<u64>, u32, Box<[u32]>)>;
 
@@ -304,6 +462,50 @@ fn engine_identity_for_all_optimizers_under_compiled_on_a_workload() {
 }
 
 #[test]
+fn engine_identity_for_all_optimizers_under_batched_on_a_workload() {
+    // The lane-batched backend replaces sticky pool dispatch with lane
+    // packing, so serial and --jobs 4 share a code path — but both must
+    // still reproduce the fast backend's exact history, front and sim
+    // count for every optimizer, with the pruning layers on and off
+    // (early exit changes which lanes ride later walks, never results).
+    let w = Arc::new(bench_suite::build_workload("fig2").unwrap());
+    let space = Space::from_workload(&w);
+    for name in opt::OPTIMIZER_NAMES {
+        for jobs in [1usize, 4] {
+            for prune in [true, false] {
+                let run = |kind: BackendKind| {
+                    let mut ev = Evaluator::for_workload_with_sim(w.clone(), jobs, kind);
+                    ev.set_prune(prune);
+                    let mut o = opt::by_name(name, 42).unwrap();
+                    drive(&mut *o, &mut ev, &space, 90);
+                    let s = ev.stats();
+                    assert_eq!(
+                        s.cache_hits + s.oracle_hits + s.sims,
+                        s.proposals,
+                        "{name} jobs={jobs} prune={prune} {kind:?}: accounting invariant broken"
+                    );
+                    if kind == BackendKind::Batched {
+                        assert!(
+                            s.lanes_packed >= s.batch_walks,
+                            "{name} jobs={jobs} prune={prune}: lane telemetry inconsistent"
+                        );
+                    }
+                    (history_of(&ev), front_of(&ev), s.sims)
+                };
+                let (fh, ff, fsims) = run(BackendKind::Fast);
+                let (bh, bf, bsims) = run(BackendKind::Batched);
+                assert_eq!(fh, bh, "{name} jobs={jobs} prune={prune}: history diverged");
+                assert_eq!(ff, bf, "{name} jobs={jobs} prune={prune}: front diverged");
+                assert_eq!(
+                    fsims, bsims,
+                    "{name} jobs={jobs} prune={prune}: sim counts diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn engine_identity_for_all_optimizers_under_compiled_single_trace() {
     // Static single-trace engine (gesummv): every optimizer, serial, with
     // the clamp region reachable through the padded proposals some
@@ -318,10 +520,16 @@ fn engine_identity_for_all_optimizers_under_compiled_single_trace() {
             drive(&mut *o, &mut ev, &space, 100);
             (history_of(&ev), front_of(&ev))
         };
+        let fast = run(BackendKind::Fast);
         assert_eq!(
-            run(BackendKind::Fast),
+            fast,
             run(BackendKind::Compiled),
-            "{name}: single-trace history/front diverged"
+            "{name}: single-trace history/front diverged (compiled)"
+        );
+        assert_eq!(
+            fast,
+            run(BackendKind::Batched),
+            "{name}: single-trace history/front diverged (batched)"
         );
     }
 }
