@@ -74,6 +74,24 @@ impl Args {
         }
     }
 
+    /// A strictly positive number (budgets and timeouts — zero or
+    /// negative values are config errors, not "disabled"); `None` when
+    /// the flag is absent.
+    pub fn get_positive_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let x: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow!("--{key} expects a number, got '{v}'"))?;
+                if !x.is_finite() || x <= 0.0 {
+                    bail!("--{key} must be a positive number, got '{v}'");
+                }
+                Ok(Some(x))
+            }
+        }
+    }
+
     /// Comma-separated integer list (last occurrence).
     pub fn get_list(&self, key: &str) -> Result<Option<Vec<i64>>> {
         match self.get(key) {
@@ -151,6 +169,19 @@ mod tests {
         assert!(a.get_lists("missing").unwrap().is_empty());
         let bad = Args::parse(&sv(&["--args", "1", "--args", "x"])).unwrap();
         assert!(bad.get_lists("args").is_err());
+    }
+
+    #[test]
+    fn positive_f64_validates() {
+        let a = Args::parse(&sv(&["--timeout-secs", "2.5"])).unwrap();
+        assert_eq!(a.get_positive_f64("timeout-secs").unwrap(), Some(2.5));
+        assert_eq!(a.get_positive_f64("missing").unwrap(), None);
+        let zero = Args::parse(&sv(&["--timeout-secs", "0"])).unwrap();
+        assert!(zero.get_positive_f64("timeout-secs").is_err());
+        let neg = Args::parse(&sv(&["--timeout-secs", "-3"])).unwrap();
+        assert!(neg.get_positive_f64("timeout-secs").is_err());
+        let junk = Args::parse(&sv(&["--timeout-secs", "soon"])).unwrap();
+        assert!(junk.get_positive_f64("timeout-secs").is_err());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use super::Args;
 use crate::bench_suite;
-use crate::dse::{drive, EvalPoint, Evaluator};
+use crate::dse::{drive, CancelToken, EvalPoint, Evaluator};
 use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
 use crate::report::{self, ascii};
@@ -74,25 +74,65 @@ fn load_workload(args: &Args) -> Result<(String, Arc<Workload>)> {
     Ok((name, Arc::new(w)))
 }
 
-/// Run a sweep configuration file (designs × optimizers × seeds).
+/// Run a sweep configuration file (designs × optimizers × seeds)
+/// through the fault-tolerant orchestrator. `--resume`, `--shard i/n`,
+/// and `--out-dir DIR` override the matching config keys, so one config
+/// file serves every shard of a CI matrix and the final merge pass.
 pub fn sweep(args: &Args) -> Result<()> {
     let path = args.require("config")?;
-    let cfg = crate::dse::sweep::SweepConfig::from_file(path)?;
+    let mut cfg = crate::dse::sweep::SweepConfig::from_file(path)?;
+    if args.has_flag("resume") {
+        cfg.resume = true;
+    }
+    if let Some(dir) = args.get("out-dir") {
+        cfg.out_dir = Some(dir.to_string());
+    }
+    if let Some(s) = args.get("shard") {
+        cfg.shard = Some(crate::dse::sweep::parse_shard(s)?);
+    }
     println!(
-        "sweep: {} designs × {} optimizers × {} seeds, budget {}",
+        "sweep: {} designs × {} optimizers × {} seeds, budget {}{}{}",
         cfg.designs.len(),
         cfg.optimizers.len(),
         cfg.seeds.len(),
-        cfg.budget
+        cfg.budget,
+        match cfg.shard {
+            Some((i, n)) => format!(", shard {i}/{n}"),
+            None => String::new(),
+        },
+        if cfg.resume { ", resuming" } else { "" }
     );
-    let rows = crate::dse::sweep::run_sweep(&cfg)?;
-    print!("{}", crate::dse::sweep::rows_to_markdown(&rows));
+    let out = crate::dse::sweep::run_sweep_with(&cfg, &Default::default())?;
+    print!("{}", crate::dse::sweep::rows_to_markdown(&out.rows));
+    if out.resumed > 0 {
+        println!("resumed {} done cell(s) from the manifest", out.resumed);
+    }
+    if out.truncated > 0 {
+        println!(
+            "{} cell(s) hit a per-cell budget and kept best-so-far fronts (✂)",
+            out.truncated
+        );
+    }
     if let Some(dir) = &cfg.out_dir {
-        report::write_file(
-            &format!("{dir}/summary.md"),
-            &crate::dse::sweep::rows_to_markdown(&rows),
-        )?;
-        println!("per-run JSON + summary.md written to {dir}/");
+        if cfg.shard.is_none() {
+            report::write_file(
+                &format!("{dir}/summary.md"),
+                &crate::dse::sweep::rows_to_markdown(&out.rows),
+            )?;
+        }
+        println!("per-run JSON + manifest written to {dir}/");
+    }
+    if !out.failed.is_empty() {
+        for f in &out.failed {
+            println!(
+                "FAILED {}/{}/s{} after {} attempt(s): {}",
+                f.design, f.optimizer, f.seed, f.attempts, f.reason
+            );
+        }
+        bail!(
+            "sweep: {} cell(s) failed (recorded in the manifest; rerun with --resume to retry)",
+            out.failed.len()
+        );
     }
     Ok(())
 }
@@ -210,6 +250,7 @@ pub fn optimize(args: &Args) -> Result<()> {
     } as usize;
     let alpha = args.get_f64("alpha", 0.7)?;
     let backend = parse_backend(args)?;
+    let timeout_secs = args.get_positive_f64("timeout-secs")?;
 
     let mut ev = if args.has_flag("xla") {
         let analytics = crate::runtime::BatchAnalytics::load_default()?;
@@ -232,6 +273,12 @@ pub fn optimize(args: &Args) -> Result<()> {
     let space = Space::from_workload(&w);
     let (base, minp) = ev.eval_baselines();
     ev.reset_run(false);
+    // Wall-clock budget: drive stops at the next ask/tell round once the
+    // deadline passes, keeping the best-so-far front (flagged truncated).
+    if let Some(t) = timeout_secs {
+        let limit = std::time::Duration::from_secs_f64(t);
+        ev.set_cancel_token(CancelToken::with_timeout(limit));
+    }
 
     let mut optimizer = opt::by_name(&opt_name, seed)
         .ok_or_else(|| anyhow!("unknown optimizer '{opt_name}'"))?;
@@ -248,6 +295,13 @@ pub fn optimize(args: &Args) -> Result<()> {
         front.len()
     );
     println!("  engine: {}", report::engine_stats_line(&ev));
+    if ev.truncated() {
+        println!(
+            "  NOTE: hit --timeout-secs {} — best-so-far front below; the run JSON is \
+             flagged \"truncated\"",
+            timeout_secs.unwrap_or(0.0)
+        );
+    }
     let base_lat = base.latency.unwrap();
     println!(
         "  Baseline-Max: {} cycles / {} BRAM   Baseline-Min: {}",
@@ -368,6 +422,10 @@ pub fn hunt(args: &Args) -> Result<()> {
     let (name, w) = load_workload(args)?;
     let space = Space::from_workload(&w);
     let mut ev = Evaluator::for_workload_with_sim(w.clone(), 1, parse_backend(args)?);
+    if let Some(t) = args.get_positive_f64("timeout-secs")? {
+        let limit = std::time::Duration::from_secs_f64(t);
+        ev.set_cancel_token(CancelToken::with_timeout(limit));
+    }
     let hunter = opt::vitis_hunter::VitisHunter::new();
     match hunter.hunt(&mut ev, &space, 1000) {
         Some(cfg) => {
@@ -378,6 +436,9 @@ pub fn hunt(args: &Args) -> Result<()> {
                 lat.unwrap(),
                 bram
             );
+        }
+        None if ev.truncated() => {
+            println!("{name}: hunter hit --timeout-secs before finding a feasible config")
         }
         None => println!("{name}: hunter failed within budget"),
     }

@@ -7,8 +7,10 @@
 //! fifoadvisor optimize --design NAME --optimizer grouped_sa [--budget 1000]
 //!                      [--seed 1] [--jobs 4] [--xla] [--alpha 0.7]
 //!                      [--out results/run.json] [--no-prune]
-//!                      [--backend fast|compiled|batched]
-//! fifoadvisor hunt     --design NAME
+//!                      [--backend fast|compiled|batched] [--timeout-secs T]
+//! fifoadvisor hunt     --design NAME [--timeout-secs T]
+//! fifoadvisor sweep    --config sweep.json [--resume] [--shard i/n]
+//!                      [--out-dir DIR]
 //! ```
 //!
 //! Repeating `--args` builds a multi-scenario [`Workload`]
@@ -69,9 +71,20 @@ USAGE:
                         graph-compiled one, or the lane-batched SoA one
                         that answers a whole proposal batch in one graph
                         walk; outcomes are bit-identical, only throughput
-                        differs. simulate/hunt accept --backend too)
-  fifoadvisor hunt     --design NAME
-  fifoadvisor sweep    --config sweep.json
+                        differs. simulate/hunt accept --backend too.
+                        --timeout-secs cuts the run off at the next
+                        ask/tell round once the wall-clock budget passes;
+                        the best-so-far front is reported and the run
+                        JSON is flagged \"truncated\")
+  fifoadvisor hunt     --design NAME [--timeout-secs T]
+  fifoadvisor sweep    --config sweep.json [--resume] [--shard i/n]
+                       [--out-dir DIR]
+                       (the fault-tolerant grid orchestrator: every cell
+                        is checkpointed into out_dir/manifest.json;
+                        --resume skips done cells and retries failed
+                        ones, --shard i/n runs a deterministic 1/n slice
+                        of the grid for CI matrix jobs, --out-dir
+                        overrides the config's out_dir)
 
 Any command accepting --design also accepts:
   --design-file F.fadl   a FADL text design (see rust/src/ir/fadl.rs)

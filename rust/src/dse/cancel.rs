@@ -1,0 +1,135 @@
+//! Cooperative cancellation for DSE runs.
+//!
+//! A [`CancelToken`] bundles the three ways a run can be cut short —
+//! an explicit [`cancel`](CancelToken::cancel) call, a wall-clock
+//! deadline, and a simulation-count budget — behind one cheap
+//! [`triggered`](CancelToken::triggered) check. [`drive`](crate::dse::drive)
+//! consults the engine's token once per ask/tell round, so cancellation
+//! is cooperative: a run stops at the next round boundary with its
+//! history and Pareto front intact (the engine flags the run
+//! [`truncated`](crate::dse::EvalEngine::truncated)), never mid-batch.
+//!
+//! Tokens are `Clone` + `Send` + `Sync` and share state through an
+//! `Arc`, so an orchestrator can hold one handle to cancel a cell while
+//! the cell's engine polls another.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Inner {
+    cancelled: AtomicBool,
+    /// Absolute wall-clock cutoff (set at construction; the clock starts
+    /// when the token is created, not when the run starts).
+    deadline: Option<Instant>,
+    /// Maximum simulator invocations before the run is cut off.
+    sim_budget: Option<u64>,
+}
+
+/// Shared cancellation handle. The default token never triggers.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CancelToken {
+    /// A token that only triggers on an explicit [`cancel`](Self::cancel).
+    pub fn new() -> CancelToken {
+        Self::with_limits(None, None)
+    }
+
+    /// A token that triggers once `timeout` has elapsed from now.
+    pub fn with_timeout(timeout: Duration) -> CancelToken {
+        Self::with_limits(Some(timeout), None)
+    }
+
+    /// A token with any combination of wall-clock and simulation-count
+    /// budgets (`None` = unlimited).
+    pub fn with_limits(timeout: Option<Duration>, sim_budget: Option<u64>) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: timeout.map(|t| Instant::now() + t),
+                sim_budget,
+            }),
+        }
+    }
+
+    /// Request cancellation; every clone of this token observes it.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    /// True once [`cancel`](Self::cancel) has been called.
+    pub fn cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// True once the wall-clock deadline (if any) has passed.
+    pub fn deadline_exceeded(&self) -> bool {
+        self.inner.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// The simulation budget this token enforces, if any.
+    pub fn sim_budget(&self) -> Option<u64> {
+        self.inner.sim_budget
+    }
+
+    /// Should a run that has performed `sims` simulations stop now?
+    /// Checked at round boundaries, so a run may overshoot the budget by
+    /// at most one batch.
+    pub fn triggered(&self, sims: u64) -> bool {
+        self.cancelled()
+            || self.deadline_exceeded()
+            || self.inner.sim_budget.is_some_and(|b| sims >= b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_token_never_triggers() {
+        let t = CancelToken::new();
+        assert!(!t.triggered(0));
+        assert!(!t.triggered(u64::MAX));
+        assert!(!t.deadline_exceeded());
+        assert_eq!(t.sim_budget(), None);
+    }
+
+    #[test]
+    fn explicit_cancel_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!clone.triggered(0));
+        t.cancel();
+        assert!(clone.cancelled());
+        assert!(clone.triggered(0));
+    }
+
+    #[test]
+    fn sim_budget_triggers_at_threshold() {
+        let t = CancelToken::with_limits(None, Some(10));
+        assert!(!t.triggered(9));
+        assert!(t.triggered(10));
+        assert!(t.triggered(11));
+    }
+
+    #[test]
+    fn deadline_triggers_after_elapse() {
+        let t = CancelToken::with_timeout(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.deadline_exceeded());
+        assert!(t.triggered(0));
+        // A generous deadline has not passed yet.
+        let slow = CancelToken::with_timeout(Duration::from_secs(3600));
+        assert!(!slow.triggered(0));
+    }
+}

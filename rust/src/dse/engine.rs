@@ -67,6 +67,7 @@
 
 use super::{BramBatch, EvalPoint, NativeBram};
 use crate::bram;
+use crate::dse::cancel::CancelToken;
 use crate::opt::dominance::{Canonicalizer, FeasibilityOracle};
 use crate::opt::pareto::{pareto_front, ObjPoint};
 use crate::opt::{AskCtx, Optimizer, Space};
@@ -646,6 +647,15 @@ pub struct EvalEngine {
     /// [`Self::per_scenario_latencies`] diagnostic path, so repeated
     /// frontier-table rendering does not pay full scenario replays.
     scenario_memo: HashMap<Box<[u32]>, Box<[Option<u64>]>>,
+    /// Cooperative cancellation handle: [`drive`] checks it once per
+    /// ask/tell round against this run's sim count (wall-clock deadline,
+    /// sim budget, or an orchestrator's explicit cancel). The default
+    /// token never triggers.
+    cancel: CancelToken,
+    /// Set by [`drive`] when the last run stopped early because the
+    /// token triggered — history/front are best-so-far, not
+    /// budget-complete. Cleared by [`Self::reset_run`].
+    truncated: bool,
 }
 
 impl EvalEngine {
@@ -700,6 +710,24 @@ impl EvalEngine {
         jobs: usize,
         sim_backend: BackendKind,
     ) -> EvalEngine {
+        let sim = ScenarioSim::with_backend(&workload, SimOptions::default(), sim_backend);
+        Self::for_workload_with_bank(workload, backend, jobs, sim, sim_backend)
+    }
+
+    /// Engine over a pre-built scenario bank — the sweep orchestrator's
+    /// cross-cell reuse path: cells sharing a design clone one prototype
+    /// bank, so compiled/batched event-graph tables stay `Arc`-shared
+    /// across cells instead of being recompiled per cell. `sim` must
+    /// have been built from `workload` with backend `sim_backend`; a
+    /// pristine clone is indistinguishable from a fresh bank, so results
+    /// are identical either way.
+    pub fn for_workload_with_bank(
+        workload: Arc<Workload>,
+        backend: Box<dyn BramBatch>,
+        jobs: usize,
+        sim: ScenarioSim,
+        sim_backend: BackendKind,
+    ) -> EvalEngine {
         let widths: Vec<u32> = workload
             .primary()
             .channels
@@ -708,7 +736,6 @@ impl EvalEngine {
             .collect();
         let jobs = jobs.max(1);
         let cache = Arc::new(ShardedCache::new((jobs * 4).clamp(4, 64)));
-        let sim = ScenarioSim::with_backend(&workload, SimOptions::default(), sim_backend);
         // Under the lane-batched backend the whole miss batch rides one
         // SoA walk per scenario — lane packing replaces sticky worker
         // dispatch, so no pool is spun up and serial vs `--jobs N`
@@ -737,6 +764,8 @@ impl EvalEngine {
             canon,
             oracle,
             scenario_memo: HashMap::new(),
+            cancel: CancelToken::new(),
+            truncated: false,
         }
     }
 
@@ -880,6 +909,7 @@ impl EvalEngine {
     pub fn reset_run(&mut self, clear_cache: bool) {
         self.history.clear();
         self.stats = EngineStats::default();
+        self.truncated = false;
         if clear_cache {
             self.cache.clear();
             self.oracle.clear();
@@ -887,6 +917,31 @@ impl EvalEngine {
             self.n_sim = 0;
         }
         self.start = Instant::now();
+    }
+
+    /// Install a cancellation token; [`drive`] checks it per ask/tell
+    /// round. [`Self::reset_run`] keeps the token (budgets usually span
+    /// one cell's whole run), so install a fresh one per run.
+    pub fn set_cancel_token(&mut self, token: CancelToken) {
+        self.cancel = token;
+    }
+
+    /// The active cancellation token (clone it to cancel from another
+    /// thread).
+    pub fn cancel_token(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    /// Has the token triggered given this run's simulation count?
+    pub fn cancel_triggered(&self) -> bool {
+        self.cancel.triggered(self.stats.sims)
+    }
+
+    /// True when the last [`drive`] run stopped early on the
+    /// cancellation token — the history/front is best-so-far rather than
+    /// budget-complete (surfaced as `"truncated"` in run JSON).
+    pub fn truncated(&self) -> bool {
+        self.truncated
     }
 
     /// Seconds since engine creation / last [`Self::reset_run`].
@@ -1301,6 +1356,13 @@ pub fn drive(
     let start_evals = engine.n_evals();
     loop {
         if opt.done() {
+            break;
+        }
+        // Cooperative cancellation: stop at the round boundary with the
+        // best-so-far history/front intact. Checked here (not mid-batch)
+        // so serial/parallel bit-identity of completed rounds holds.
+        if engine.cancel_triggered() {
+            engine.truncated = true;
             break;
         }
         let proposed = engine.n_evals() - start_evals;
@@ -1750,5 +1812,39 @@ mod tests {
         assert_eq!(stats[0].lane_slots, stats[1].lane_slots);
         assert_eq!(stats[0].sims, stats[1].sims);
         assert_eq!(stats[0].scenario_sims, stats[1].scenario_sims);
+    }
+
+    /// A sim-budget token makes `drive` stop at a round boundary with
+    /// best-so-far history and the engine flagged truncated; the
+    /// completed rounds match an uncancelled run's prefix.
+    #[test]
+    fn drive_truncates_on_cancel_token() {
+        let t = trace_of("bicg");
+        let space = Space::from_trace(&t);
+
+        let mut full = EvalEngine::new(t.clone());
+        let mut o = crate::opt::random::RandomSearch::new(7, false);
+        drive(&mut o, &mut full, &space, 200);
+        assert!(!full.truncated(), "no token: never truncated");
+
+        let mut cut = EvalEngine::new(t.clone());
+        cut.set_cancel_token(CancelToken::with_limits(None, Some(1)));
+        let mut o = crate::opt::random::RandomSearch::new(7, false);
+        let n = drive(&mut o, &mut cut, &space, 200);
+        assert!(cut.truncated(), "budget hit must flag truncation");
+        assert!(n < full.n_evals(), "truncated run stops early");
+        assert!(n > 0, "the first round completes before the check");
+        for (a, b) in cut.history.iter().zip(&full.history) {
+            assert_eq!(a.depths, b.depths);
+            assert_eq!(a.latency, b.latency);
+        }
+        // reset_run clears the flag; an explicit cancel() pre-trigger
+        // stops the next drive before any proposals.
+        cut.reset_run(false);
+        assert!(!cut.truncated());
+        cut.cancel_token().cancel();
+        let mut o = crate::opt::random::RandomSearch::new(7, false);
+        assert_eq!(drive(&mut o, &mut cut, &space, 200), 0);
+        assert!(cut.truncated());
     }
 }

@@ -11,15 +11,22 @@
 //!   (single-trace constructors wrap a single-scenario workload).
 //! - [`pool`] — a thin latency-only shim over the engine's worker pool
 //!   (kept for benches and direct simulator fan-out).
-//! - [`sweep`] — the JSON-configured experiment-grid launcher.
+//! - [`cancel`] — cooperative cancellation: [`CancelToken`] bundles
+//!   explicit cancel / wall-clock deadline / simulation budget behind
+//!   one check that [`drive`] consults per ask/tell round.
+//! - [`sweep`] — the fault-tolerant experiment-grid orchestrator:
+//!   checkpointed cells, a resumable manifest, deterministic sharding,
+//!   per-cell budgets, and panic isolation.
 //!
 //! [`Evaluator`] is an alias of [`EvalEngine`] kept for the pervasive
 //! call sites that predate the ask/tell refactor.
 
+pub mod cancel;
 pub mod engine;
 pub mod pool;
 pub mod sweep;
 
+pub use cancel::CancelToken;
 pub use engine::{drive, EngineStats, EvalEngine, EvalResult, ShardedCache, WorkerPool};
 
 /// Back-compat name for the evaluation engine.

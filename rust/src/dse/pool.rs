@@ -18,6 +18,13 @@
 //! lanes of a single bank instead of dispatching jobs — the same
 //! replacement [`EvalEngine`](super::EvalEngine) makes when
 //! `--backend batched` is selected.
+//!
+//! The pool deliberately has **no** panic isolation: a worker panic
+//! propagates and fails the run. Containing faults is the sweep
+//! orchestrator's job alone — [`dse::sweep`](super::sweep) catches at
+//! the cell boundary, records the cell as failed in its manifest, and
+//! keeps sibling cells running (CI audits that `catch_unwind` appears
+//! nowhere else).
 
 use super::engine::WorkerPool;
 use crate::sim::fast::FastSim;

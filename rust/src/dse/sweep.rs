@@ -1,6 +1,9 @@
-//! The sweep launcher: a JSON run-configuration describing a whole
-//! experiment grid (designs × optimizers × seeds), executed in one
-//! command — the front end the benches and CI use.
+//! The fault-tolerant sweep orchestrator: a JSON run-configuration
+//! describing a whole experiment grid (designs × optimizers × seeds),
+//! executed as independently checkpointed *cells* by a work-stealing
+//! runner that survives crashes, panics, and budget blowouts — the
+//! front end the benches, CI matrix jobs, and the fleet-scale service
+//! path use.
 //!
 //! ```json
 //! {
@@ -12,7 +15,13 @@
 //!   "seeds": [1, 2],
 //!   "jobs": 4,
 //!   "alpha": 0.7,
-//!   "out_dir": "results/sweep"
+//!   "out_dir": "results/sweep",
+//!   "resume": false,
+//!   "shard": "0/2",
+//!   "max_retries": 1,
+//!   "cell_timeout_secs": 120.0,
+//!   "cell_sim_budget": 100000,
+//!   "cell_workers": 1
 //! }
 //! ```
 //!
@@ -25,25 +34,99 @@
 //! the CLI's `--no-prune`; `"backend": "fast" | "compiled" | "batched"`
 //! selects the simulation backend, like the CLI's `--backend` — results
 //! are bit-identical either way, only the throughput profile differs.)
+//! Unknown top-level keys are rejected with the accepted key set, so a
+//! typo never falls through to a silent default.
+//!
+//! # Orchestration model
+//!
+//! The grid is flattened into cells — one [`CellKey`] per
+//! (design, optimizer, seed) — each identified by a **stable 64-bit id**
+//! (FNV-1a over the design name, its scenario arg-sets, the optimizer,
+//! the seed, and every result-affecting config field: backend, budget,
+//! alpha, prune, sim budget). Because cell results are deterministic
+//! (serial/parallel, pruned/unpruned, and all backends are bit-identical
+//! by pinned invariant), a cell id names its result, which is what makes
+//! the following safe:
+//!
+//! - **Checkpointing** — every artifact (per-cell run record, the
+//!   `manifest.json` status map, aggregates) is written atomically via
+//!   [`crate::util::atomic_write`]; a crash leaves whole old files or
+//!   whole new files, never prefixes. The manifest flips a cell
+//!   `pending` → `done`/`failed{reason}` only *after* its record file
+//!   landed.
+//! - **Resume** (`"resume": true`) — prior `manifest*.json` files in
+//!   `out_dir` are merged (config-hash-checked so incompatible sweeps
+//!   can't mix); `done` cells are replayed from their embedded result
+//!   rows without touching their record files (byte-for-byte skip), and
+//!   `failed` cells are retried up to `"max_retries"` more times with
+//!   exponential backoff (`"retry_backoff_ms"` doubling per attempt).
+//! - **Sharding** (`"shard": "i/n"`) — a cell belongs to shard
+//!   `id % n == i`, a deterministic partition, so CI matrix jobs split
+//!   one sweep across machines; their out-dirs merge cleanly and a final
+//!   unsharded `--resume` pass over the merged directory re-runs nothing
+//!   and emits the aggregate CSV/JSON.
+//! - **Graceful degradation** — each cell's engine carries a
+//!   [`CancelToken`] with the config's wall-clock / simulation budgets
+//!   ([`drive`](crate::dse::drive) checks it per ask/tell round;
+//!   best-so-far front survives, flagged `truncated`), and the whole
+//!   cell body runs under `catch_unwind` so a poisoned design records a
+//!   `failed` entry with the panic message while sibling cells continue.
+//!   (Worker-pool threads own cloned sims, so unwinding a cell cannot
+//!   corrupt another cell's state; `catch_unwind` is confined to this
+//!   module, audited in CI.)
+//!
+//! Cells sharing a design clone one prototype [`ScenarioSim`] bank, so
+//! compiled/batched event-graph tables are built once per design and
+//! `Arc`-shared across cells instead of recompiled per cell.
 
 use crate::bench_suite;
-use crate::dse::{drive, Evaluator};
+use crate::dse::cancel::CancelToken;
+use crate::dse::{drive, Evaluator, NativeBram};
 use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
-use crate::report;
+use crate::report::{self, csv::Csv};
+use crate::sim::scenario::ScenarioSim;
+use crate::sim::{BackendKind, SimOptions};
 use crate::trace::collect_trace;
 use crate::trace::workload::Workload;
 use crate::util::Json;
-use anyhow::{anyhow, Context, Result};
-use std::sync::Arc;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// One design entry of a sweep: a suite design plus the scenario
 /// argument sets to size for (empty = the suite's default args).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct DesignSpec {
     pub name: String,
     pub arg_sets: Vec<Vec<i64>>,
 }
+
+/// The accepted top-level sweep-config keys. Parsing rejects anything
+/// else by name, so a typo (`"budgett"`) fails loudly instead of
+/// falling through to a silent default.
+pub const ACCEPTED_KEYS: &[&str] = &[
+    "alpha",
+    "backend",
+    "budget",
+    "cell_sim_budget",
+    "cell_timeout_secs",
+    "cell_workers",
+    "designs",
+    "jobs",
+    "max_retries",
+    "optimizers",
+    "out_dir",
+    "prune",
+    "resume",
+    "retry_backoff_ms",
+    "seeds",
+    "shard",
+    "threads",
+];
 
 /// Parsed sweep configuration.
 #[derive(Debug, Clone)]
@@ -61,12 +144,64 @@ pub struct SweepConfig {
     pub prune: bool,
     /// Simulation backend (`"backend"` key; mirrors the CLI's
     /// `--backend {fast,compiled,batched}`).
-    pub backend: crate::sim::BackendKind,
+    pub backend: BackendKind,
     pub out_dir: Option<String>,
+    /// Merge prior `manifest*.json` files in `out_dir` and skip `done`
+    /// cells byte-for-byte (`--resume`).
+    pub resume: bool,
+    /// Extra attempts for a failed cell beyond the first (so a cell runs
+    /// at most `1 + max_retries` times per invocation).
+    pub max_retries: u64,
+    /// Base backoff between retry attempts; doubles per attempt.
+    pub retry_backoff_ms: u64,
+    /// Per-cell wall-clock budget; on expiry the cell keeps its
+    /// best-so-far front, flagged truncated.
+    pub cell_timeout_secs: Option<f64>,
+    /// Per-cell simulation-count budget (checked per ask/tell round).
+    pub cell_sim_budget: Option<u64>,
+    /// Deterministic cell partition `(i, n)`: this invocation runs only
+    /// cells with `id % n == i` (`--shard i/n`).
+    pub shard: Option<(usize, usize)>,
+    /// Concurrent cell workers (each cell still gets `jobs` simulation
+    /// workers; 1 = cells run one at a time).
+    pub cell_workers: usize,
+}
+
+/// Parse a `"i/n"` shard designator, validating `n >= 1` and `i < n`.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once('/')
+        .ok_or_else(|| anyhow!("shard must be 'i/n' (e.g. '0/4'), got '{s}'"))?;
+    let idx: usize = a
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("shard index must be an integer, got '{a}'"))?;
+    let total: usize = b
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("shard count must be an integer, got '{b}'"))?;
+    if total == 0 {
+        bail!("shard count must be >= 1, got '{s}'");
+    }
+    if idx >= total {
+        bail!("shard index {idx} out of range for {total} shard(s)");
+    }
+    Ok((idx, total))
 }
 
 impl SweepConfig {
     pub fn from_json(j: &Json) -> Result<SweepConfig> {
+        let Json::Obj(map) = j else {
+            bail!("sweep config must be a JSON object");
+        };
+        for k in map.keys() {
+            if !ACCEPTED_KEYS.contains(&k.as_str()) {
+                bail!(
+                    "sweep config: unknown key '{k}' (accepted keys: {})",
+                    ACCEPTED_KEYS.join(", ")
+                );
+            }
+        }
         let strs = |key: &str| -> Result<Vec<String>> {
             j.get(key)
                 .and_then(|v| v.as_arr())
@@ -142,9 +277,29 @@ impl SweepConfig {
             .and_then(|v| v.as_u64())
             .unwrap_or(1) as usize;
         let backend = match j.get("backend").and_then(|v| v.as_str()) {
-            None => crate::sim::BackendKind::Fast,
-            Some(s) => crate::sim::BackendKind::parse(s)
-                .map_err(|e| anyhow!("sweep config: {e}"))?,
+            None => BackendKind::Fast,
+            Some(s) => BackendKind::parse(s).map_err(|e| anyhow!("sweep config: {e}"))?,
+        };
+        let shard = match j.get("shard") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    anyhow!("sweep config: 'shard' must be a string like \"0/2\"")
+                })?;
+                Some(parse_shard(s)?)
+            }
+        };
+        let cell_timeout_secs = match j.get("cell_timeout_secs") {
+            None => None,
+            Some(v) => {
+                let t = v.as_f64().ok_or_else(|| {
+                    anyhow!("sweep config: 'cell_timeout_secs' must be a number")
+                })?;
+                if t <= 0.0 {
+                    bail!("sweep config: 'cell_timeout_secs' must be positive");
+                }
+                Some(t)
+            }
         };
         Ok(SweepConfig {
             designs,
@@ -163,12 +318,124 @@ impl SweepConfig {
                 .get("out_dir")
                 .and_then(|v| v.as_str())
                 .map(str::to_string),
+            resume: j.get("resume").and_then(|v| v.as_bool()).unwrap_or(false),
+            max_retries: j.get("max_retries").and_then(|v| v.as_u64()).unwrap_or(1),
+            retry_backoff_ms: j
+                .get("retry_backoff_ms")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(250),
+            cell_timeout_secs,
+            cell_sim_budget: j.get("cell_sim_budget").and_then(|v| v.as_u64()),
+            shard,
+            cell_workers: j
+                .get("cell_workers")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(1)
+                .max(1) as usize,
         })
     }
 
     pub fn from_file(path: &str) -> Result<SweepConfig> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         Self::from_json(&Json::parse(&text).context("parsing sweep config")?)
+    }
+
+    /// Canonical encoding of every config field that can change a cell's
+    /// *results*. `jobs` is excluded (serial/parallel bit-identity is a
+    /// pinned invariant), grid membership is excluded (shards and
+    /// extended grids stay resume-compatible), and the wall-clock budget
+    /// is excluded (nondeterministic by nature — a timeout-truncated
+    /// cell is flagged in its row instead).
+    fn fingerprint(&self) -> String {
+        format!(
+            "v1|budget={}|alpha={}|prune={}|backend={}|sim_budget={:?}",
+            self.budget,
+            self.alpha,
+            self.prune,
+            self.backend.name(),
+            self.cell_sim_budget
+        )
+    }
+
+    /// Stable hash of the result-affecting config fields; manifests from
+    /// a different hash refuse to merge on resume.
+    pub fn config_hash(&self) -> u64 {
+        fnv1a(self.fingerprint().as_bytes())
+    }
+}
+
+/// FNV-1a 64-bit — stable across Rust versions and machines (unlike
+/// `DefaultHasher`), which is what lets cell ids name results in
+/// manifests shared between CI shards.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One (design × optimizer × seed) cell of the sweep grid.
+#[derive(Debug, Clone)]
+pub struct CellKey {
+    pub design: DesignSpec,
+    pub optimizer: String,
+    pub seed: u64,
+}
+
+impl CellKey {
+    /// Stable 64-bit cell id: FNV-1a over the cell coordinates and the
+    /// config fingerprint. Deterministic results mean this id names the
+    /// cell's *result*, so manifests keyed by it can be merged across
+    /// shards and resumed across processes.
+    pub fn id(&self, cfg: &SweepConfig) -> u64 {
+        let mut s = format!("design={}", self.design.name);
+        for set in &self.design.arg_sets {
+            s.push(';');
+            for a in set {
+                s.push_str(&a.to_string());
+                s.push(',');
+            }
+        }
+        s.push_str(&format!(
+            "|opt={}|seed={}|{}",
+            self.optimizer,
+            self.seed,
+            cfg.fingerprint()
+        ));
+        fnv1a(s.as_bytes())
+    }
+
+    /// The manifest key: the cell id as 16 hex digits.
+    pub fn id_hex(&self, cfg: &SweepConfig) -> String {
+        format!("{:016x}", self.id(cfg))
+    }
+
+    /// File stem of the per-cell run record. Bare designs keep the
+    /// historical `{design}_{optimizer}_s{seed}` name; multi-scenario
+    /// entries insert a hash of their arg-sets so two workloads of the
+    /// same design never collide on one file.
+    pub fn file_stem(&self) -> String {
+        if self.design.arg_sets.is_empty() {
+            format!("{}_{}_s{}", self.design.name, self.optimizer, self.seed)
+        } else {
+            let mut enc = String::new();
+            for set in &self.design.arg_sets {
+                enc.push(';');
+                for a in set {
+                    enc.push_str(&a.to_string());
+                    enc.push(',');
+                }
+            }
+            format!(
+                "{}_w{:08x}_{}_s{}",
+                self.design.name,
+                (fnv1a(enc.as_bytes()) & 0xffff_ffff) as u32,
+                self.optimizer,
+                self.seed
+            )
+        }
     }
 }
 
@@ -208,86 +475,903 @@ pub struct SweepRow {
     pub base_latency: u64,
     pub base_bram: u32,
     pub min_deadlocked: bool,
+    /// The cell hit its wall-clock or simulation budget and kept its
+    /// best-so-far front instead of completing the proposal budget.
+    pub truncated: bool,
 }
 
-/// Execute the sweep; returns all rows (and writes per-run JSON when
-/// `out_dir` is set).
-pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
-    let mut rows = Vec::new();
-    for spec in &cfg.designs {
-        let design = &spec.name;
-        let bd = bench_suite::build(design);
-        let workload = if spec.arg_sets.is_empty() {
-            Workload::single(Arc::new(collect_trace(&bd.design, &bd.args)?))
-        } else {
-            Workload::from_design_args(&bd.design, &spec.arg_sets)?
-        };
-        let workload = Arc::new(workload);
-        let space = Space::from_workload(&workload);
-        let mut ev = Evaluator::for_workload_with_sim(workload.clone(), cfg.jobs, cfg.backend);
-        ev.set_prune(cfg.prune);
-        let (maxp, minp) = ev.eval_baselines();
-        let (base_lat, base_bram) = (
-            maxp.latency
-                .ok_or_else(|| anyhow!("{design}: Baseline-Max deadlocks"))?,
-            maxp.bram,
-        );
-        for optimizer in &cfg.optimizers {
-            for &seed in &cfg.seeds {
-                ev.reset_run(true);
-                let mut o = opt::by_name(optimizer, seed).unwrap();
-                let t0 = std::time::Instant::now();
-                drive(&mut *o, &mut ev, &space, cfg.budget);
-                let dt = t0.elapsed().as_secs_f64();
-                let front = ev.pareto();
-                let pts: Vec<(u64, u32)> =
-                    front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
-                let star = select_highlight(&pts, cfg.alpha, base_lat, base_bram)
-                    .map(|i| pts[i])
-                    .unwrap_or((base_lat, base_bram));
-                rows.push(SweepRow {
-                    design: design.clone(),
-                    optimizer: optimizer.clone(),
-                    seed,
-                    scenarios: workload.num_scenarios(),
-                    evals: ev.n_evals(),
-                    sims: ev.n_sim,
-                    incr_rate: ev.stats().incremental_rate(),
-                    replay_frac: ev.stats().replay_fraction(),
-                    oracle_rate: ev.stats().oracle_rate(),
-                    clamp_rate: ev.stats().clamp_rate(),
-                    sims_avoided: ev.stats().sims_avoided,
-                    lanes_per_walk: ev.stats().lanes_per_walk(),
-                    batch_occupancy: ev.stats().batch_occupancy(),
-                    walks_saved: ev.stats().walks_saved(),
-                    elapsed_secs: dt,
-                    front_size: front.len(),
-                    star_latency: star.0,
-                    star_bram: star.1,
-                    base_latency: base_lat,
-                    base_bram,
-                    min_deadlocked: !minp.is_feasible(),
-                });
-                if let Some(dir) = &cfg.out_dir {
-                    let j = report::run_to_json(
-                        design,
-                        optimizer,
-                        seed,
-                        cfg.budget,
-                        &ev.history,
-                        &front,
-                        dt,
-                        Some(&ev),
-                    );
-                    report::write_file(
-                        &format!("{dir}/{design}_{optimizer}_s{seed}.json"),
-                        &j.to_string_pretty(),
-                    )?;
+/// Serialize a result row. `include_elapsed` is true for manifest
+/// embedding (full fidelity) and false for the aggregate JSON, which
+/// carries only deterministic fields so interrupted-then-resumed and
+/// uninterrupted runs emit identical bytes.
+fn row_to_json(r: &SweepRow, include_elapsed: bool) -> Json {
+    let mut f = vec![
+        ("design", Json::Str(r.design.clone())),
+        ("optimizer", Json::Str(r.optimizer.clone())),
+        ("seed", Json::Num(r.seed as f64)),
+        ("scenarios", Json::Num(r.scenarios as f64)),
+        ("evals", Json::Num(r.evals as f64)),
+        ("sims", Json::Num(r.sims as f64)),
+        ("incr_rate", Json::Num(r.incr_rate)),
+        ("replay_frac", Json::Num(r.replay_frac)),
+        ("oracle_rate", Json::Num(r.oracle_rate)),
+        ("clamp_rate", Json::Num(r.clamp_rate)),
+        ("sims_avoided", Json::Num(r.sims_avoided as f64)),
+        ("lanes_per_walk", Json::Num(r.lanes_per_walk)),
+        ("batch_occupancy", Json::Num(r.batch_occupancy)),
+        ("walks_saved", Json::Num(r.walks_saved as f64)),
+        ("front_size", Json::Num(r.front_size as f64)),
+        ("star_latency", Json::Num(r.star_latency as f64)),
+        ("star_bram", Json::Num(r.star_bram as f64)),
+        ("base_latency", Json::Num(r.base_latency as f64)),
+        ("base_bram", Json::Num(r.base_bram as f64)),
+        ("min_deadlocked", Json::Bool(r.min_deadlocked)),
+        ("truncated", Json::Bool(r.truncated)),
+    ];
+    if include_elapsed {
+        f.push(("elapsed_secs", Json::Num(r.elapsed_secs)));
+    }
+    Json::obj(f)
+}
+
+fn row_from_json(j: &Json) -> Result<SweepRow> {
+    let num = |k: &str| -> Result<f64> {
+        j.get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("manifest row: missing numeric '{k}'"))
+    };
+    let text = |k: &str| -> Result<String> {
+        j.get(k)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("manifest row: missing string '{k}'"))
+    };
+    let flag = |k: &str| -> Result<bool> {
+        j.get(k)
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| anyhow!("manifest row: missing bool '{k}'"))
+    };
+    Ok(SweepRow {
+        design: text("design")?,
+        optimizer: text("optimizer")?,
+        seed: num("seed")? as u64,
+        scenarios: num("scenarios")? as usize,
+        evals: num("evals")? as usize,
+        sims: num("sims")? as u64,
+        incr_rate: num("incr_rate")?,
+        replay_frac: num("replay_frac")?,
+        oracle_rate: num("oracle_rate")?,
+        clamp_rate: num("clamp_rate")?,
+        sims_avoided: num("sims_avoided")? as u64,
+        lanes_per_walk: num("lanes_per_walk")?,
+        batch_occupancy: num("batch_occupancy")?,
+        walks_saved: num("walks_saved")? as u64,
+        elapsed_secs: num("elapsed_secs")?,
+        front_size: num("front_size")? as usize,
+        star_latency: num("star_latency")? as u64,
+        star_bram: num("star_bram")? as u32,
+        base_latency: num("base_latency")? as u64,
+        base_bram: num("base_bram")? as u32,
+        min_deadlocked: flag("min_deadlocked")?,
+        truncated: flag("truncated")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The manifest
+// ---------------------------------------------------------------------------
+
+/// Lifecycle state of one cell in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CellStatus {
+    Pending,
+    Done { truncated: bool },
+    Failed { reason: String },
+}
+
+/// One manifest entry, keyed by the cell's 16-hex id.
+#[derive(Debug, Clone)]
+pub struct CellEntry {
+    pub design: String,
+    pub optimizer: String,
+    pub seed: u64,
+    pub status: CellStatus,
+    /// Cumulative run attempts across invocations.
+    pub attempts: u64,
+    /// The full result row (present iff the cell is done).
+    pub row: Option<SweepRow>,
+}
+
+/// The checkpoint file tracking cell status for resume/shard merging.
+/// Written atomically after every cell completion; keyed by stable cell
+/// ids so shard manifests from different machines merge by union.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// [`SweepConfig::config_hash`] of the writing config — resume
+    /// refuses to merge manifests from an incompatible config.
+    pub config_hash: u64,
+    /// This writer's shard, for provenance (unsharded writers store
+    /// `None`).
+    pub shard: Option<(usize, usize)>,
+    pub cells: BTreeMap<String, CellEntry>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let mut cells = BTreeMap::new();
+        for (k, e) in &self.cells {
+            let mut f = vec![
+                ("design", Json::Str(e.design.clone())),
+                ("optimizer", Json::Str(e.optimizer.clone())),
+                ("seed", Json::Num(e.seed as f64)),
+                ("attempts", Json::Num(e.attempts as f64)),
+            ];
+            match &e.status {
+                CellStatus::Pending => f.push(("status", Json::Str("pending".into()))),
+                CellStatus::Done { truncated } => {
+                    f.push(("status", Json::Str("done".into())));
+                    f.push(("truncated", Json::Bool(*truncated)));
                 }
+                CellStatus::Failed { reason } => {
+                    f.push(("status", Json::Str("failed".into())));
+                    f.push(("reason", Json::Str(reason.clone())));
+                }
+            }
+            if let Some(r) = &e.row {
+                f.push(("row", row_to_json(r, true)));
+            }
+            cells.insert(k.clone(), Json::obj(f));
+        }
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("config_hash", Json::Str(format!("{:016x}", self.config_hash))),
+            (
+                "shard",
+                match self.shard {
+                    Some((i, n)) => Json::Str(format!("{i}/{n}")),
+                    None => Json::Null,
+                },
+            ),
+            ("cells", Json::Obj(cells)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+        if version != 1 {
+            bail!("manifest: unsupported version {version} (expected 1)");
+        }
+        let config_hash = j
+            .get("config_hash")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| anyhow!("manifest: missing or malformed 'config_hash'"))?;
+        let shard = match j.get("shard") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("manifest: 'shard' must be a string or null"))?;
+                Some(parse_shard(s)?)
+            }
+        };
+        let Some(Json::Obj(cells_json)) = j.get("cells") else {
+            bail!("manifest: 'cells' must be an object");
+        };
+        let mut cells = BTreeMap::new();
+        for (k, c) in cells_json {
+            let text = |key: &str| -> Result<String> {
+                c.get(key)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("manifest cell {k}: missing string '{key}'"))
+            };
+            let status = match text("status")?.as_str() {
+                "pending" => CellStatus::Pending,
+                "done" => CellStatus::Done {
+                    truncated: c
+                        .get("truncated")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                },
+                "failed" => CellStatus::Failed {
+                    reason: text("reason").unwrap_or_else(|_| "unknown".into()),
+                },
+                other => bail!("manifest cell {k}: unknown status '{other}'"),
+            };
+            let row = match c.get("row") {
+                Some(r) => Some(row_from_json(r).with_context(|| format!("manifest cell {k}"))?),
+                None => None,
+            };
+            if matches!(status, CellStatus::Done { .. }) && row.is_none() {
+                bail!("manifest cell {k}: done without an embedded row");
+            }
+            cells.insert(
+                k.clone(),
+                CellEntry {
+                    design: text("design")?,
+                    optimizer: text("optimizer")?,
+                    seed: c
+                        .get("seed")
+                        .and_then(|v| v.as_u64())
+                        .ok_or_else(|| anyhow!("manifest cell {k}: missing 'seed'"))?,
+                    status,
+                    attempts: c.get("attempts").and_then(|v| v.as_u64()).unwrap_or(0),
+                    row,
+                },
+            );
+        }
+        Ok(Manifest {
+            config_hash,
+            shard,
+            cells,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        report::write_file(path, &self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_json(&Json::parse(&text).with_context(|| format!("parsing {path}"))?)
+    }
+}
+
+/// Path of the manifest this invocation writes.
+fn manifest_file(dir: &str, shard: Option<(usize, usize)>) -> String {
+    match shard {
+        Some((i, n)) => format!("{dir}/manifest.shard-{i}-of-{n}.json"),
+        None => format!("{dir}/manifest.json"),
+    }
+}
+
+/// All manifests in `dir` (the unsharded one plus any shard manifests),
+/// in sorted filename order for a deterministic merge. A missing or
+/// empty directory is a fresh start, not an error.
+fn load_prior_manifests(dir: &str) -> Result<Vec<(String, Manifest)>> {
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return Ok(Vec::new());
+    };
+    let mut names: Vec<String> = rd
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| {
+            n == "manifest.json" || (n.starts_with("manifest.shard-") && n.ends_with(".json"))
+        })
+        .collect();
+    names.sort();
+    let mut out = Vec::new();
+    for n in names {
+        let path = format!("{dir}/{n}");
+        out.push((path.clone(), Manifest::load(&path)?));
+    }
+    Ok(out)
+}
+
+/// Union-merge a prior manifest entry: done beats failed beats pending;
+/// ties keep the existing entry but carry the larger attempt count.
+fn merge_entry(cells: &mut BTreeMap<String, CellEntry>, key: String, e: CellEntry) {
+    use std::collections::btree_map::Entry;
+    let rank = |s: &CellStatus| match s {
+        CellStatus::Done { .. } => 2,
+        CellStatus::Failed { .. } => 1,
+        CellStatus::Pending => 0,
+    };
+    match cells.entry(key) {
+        Entry::Vacant(v) => {
+            v.insert(e);
+        }
+        Entry::Occupied(mut o) => {
+            let cur = o.get_mut();
+            if rank(&e.status) > rank(&cur.status) {
+                *cur = e;
+            } else {
+                cur.attempts = cur.attempts.max(e.attempts);
             }
         }
     }
-    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Orchestration
+// ---------------------------------------------------------------------------
+
+/// Orchestration callbacks for tests and embedders.
+#[derive(Default)]
+pub struct SweepHooks {
+    /// Called at the start of every cell *attempt* (not for cells
+    /// skipped via resume), with the attempt number (1-based, this
+    /// invocation). Runs inside the cell's panic isolation, so a
+    /// panicking hook records that cell as failed — the fault-injection
+    /// point the panic-isolation tests use.
+    #[allow(clippy::type_complexity)]
+    pub on_cell_start: Option<Box<dyn Fn(&CellKey, u64) + Send + Sync>>,
+    /// Stop claiming new cells once this many have completed (resumed
+    /// skips count) — the crash-injection knob for resume tests.
+    pub stop_after_cells: Option<usize>,
+}
+
+/// A failed cell as reported in [`SweepOutcome`] and the aggregates.
+#[derive(Debug, Clone)]
+pub struct FailedCell {
+    pub design: String,
+    pub optimizer: String,
+    pub seed: u64,
+    pub reason: String,
+    pub attempts: u64,
+}
+
+/// Everything a finished (or early-stopped) sweep invocation produced.
+pub struct SweepOutcome {
+    /// Result rows in grid order (failed cells are absent).
+    pub rows: Vec<SweepRow>,
+    /// Cells that exhausted their attempts, in grid order.
+    pub failed: Vec<FailedCell>,
+    /// Cells served from the resume manifest without re-running.
+    pub resumed: usize,
+    /// Cells that hit a wall-clock/simulation budget (their rows are
+    /// flagged `truncated`).
+    pub truncated: usize,
+    /// True when [`SweepHooks::stop_after_cells`] halted the run before
+    /// every cell completed (aggregates are withheld).
+    pub stopped_early: bool,
+    /// The manifest this invocation wrote, when `out_dir` is set.
+    pub manifest_path: Option<String>,
+}
+
+/// Per-design shared state: the workload plus one prototype scenario
+/// bank every cell of the design clones (compiled/batched event-graph
+/// tables stay `Arc`-shared across cells). The bank sits behind a mutex
+/// only because `ScenarioSim` is `Send` but not `Sync`; workers lock it
+/// just long enough to clone.
+enum Proto {
+    Ready {
+        workload: Arc<Workload>,
+        bank: Mutex<ScenarioSim>,
+    },
+    /// Trace collection or workload validation failed (deterministic —
+    /// retrying is pointless), or panicked.
+    Broken(String),
+}
+
+impl Proto {
+    fn build(spec: &DesignSpec, backend: BackendKind) -> Proto {
+        let build = || -> Result<(Arc<Workload>, ScenarioSim)> {
+            let bd = bench_suite::build(&spec.name);
+            let workload = if spec.arg_sets.is_empty() {
+                Workload::single(Arc::new(collect_trace(&bd.design, &bd.args)?))
+            } else {
+                Workload::from_design_args(&bd.design, &spec.arg_sets)?
+            };
+            let workload = Arc::new(workload);
+            let bank = ScenarioSim::with_backend(&workload, SimOptions::default(), backend);
+            Ok((workload, bank))
+        };
+        match catch_unwind(AssertUnwindSafe(build)) {
+            Ok(Ok((workload, bank))) => Proto::Ready {
+                workload,
+                bank: Mutex::new(bank),
+            },
+            Ok(Err(e)) => Proto::Broken(format!("error: {e:#}")),
+            Err(payload) => Proto::Broken(format!("panicked: {}", panic_message(&payload))),
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Mutable state the cell workers share under one lock.
+struct SharedState {
+    manifest: Manifest,
+    /// Result slot per cell index — grid order regardless of which
+    /// worker finishes when.
+    rows: Vec<Option<SweepRow>>,
+    /// `(cell index, failure)` so failures can be reported in grid
+    /// order.
+    failed: Vec<(usize, FailedCell)>,
+    /// First checkpoint-write error, surfaced after the run.
+    save_error: Option<String>,
+}
+
+/// Borrowed context handed to every cell worker.
+struct RunCtx<'a> {
+    cfg: &'a SweepConfig,
+    hooks: &'a SweepHooks,
+    cells: &'a [CellKey],
+    protos: &'a HashMap<DesignSpec, Proto>,
+    next: &'a AtomicUsize,
+    completed: &'a AtomicUsize,
+    resumed: &'a AtomicUsize,
+    shared: &'a Mutex<SharedState>,
+    manifest_path: Option<&'a str>,
+}
+
+/// Execute the sweep; returns all rows in grid order (and writes
+/// per-run JSON, the manifest, and aggregates when `out_dir` is set).
+/// Any failed cell turns into an error *after* the whole grid has been
+/// given its chance — use [`run_sweep_with`] to inspect partial
+/// outcomes instead.
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepRow>> {
+    let out = run_sweep_with(cfg, &SweepHooks::default())?;
+    if !out.failed.is_empty() {
+        let list: Vec<String> = out
+            .failed
+            .iter()
+            .map(|f| format!("{}/{}/s{}: {}", f.design, f.optimizer, f.seed, f.reason))
+            .collect();
+        bail!(
+            "sweep: {} cell(s) failed:\n  {}",
+            out.failed.len(),
+            list.join("\n  ")
+        );
+    }
+    Ok(out.rows)
+}
+
+/// The fault-tolerant orchestrator (see the module docs for the model).
+/// Work-stealing over the (possibly sharded, possibly resumed) cell
+/// list with `cell_workers` threads; each cell is retried, budgeted,
+/// panic-isolated, and checkpointed independently.
+pub fn run_sweep_with(cfg: &SweepConfig, hooks: &SweepHooks) -> Result<SweepOutcome> {
+    if cfg.resume && cfg.out_dir.is_none() {
+        bail!("sweep config: \"resume\": true requires \"out_dir\"");
+    }
+    // The full grid, design-major — cell index is grid (row) order.
+    let mut all: Vec<CellKey> = Vec::new();
+    for d in &cfg.designs {
+        for o in &cfg.optimizers {
+            for &seed in &cfg.seeds {
+                all.push(CellKey {
+                    design: d.clone(),
+                    optimizer: o.clone(),
+                    seed,
+                });
+            }
+        }
+    }
+    let cells: Vec<CellKey> = match cfg.shard {
+        None => all,
+        Some((i, n)) => all
+            .into_iter()
+            .filter(|c| c.id(cfg) % n as u64 == i as u64)
+            .collect(),
+    };
+
+    let mut manifest = Manifest {
+        config_hash: cfg.config_hash(),
+        shard: cfg.shard,
+        cells: BTreeMap::new(),
+    };
+    if cfg.resume {
+        let dir = cfg.out_dir.as_deref().unwrap();
+        for (path, prior) in load_prior_manifests(dir)? {
+            if prior.config_hash != manifest.config_hash {
+                bail!(
+                    "resume: {path} was written by an incompatible sweep config \
+                     (its hash {:016x}, this config {:016x}) — refusing to mix results",
+                    prior.config_hash,
+                    manifest.config_hash
+                );
+            }
+            for (k, e) in prior.cells {
+                merge_entry(&mut manifest.cells, k, e);
+            }
+        }
+    }
+    for c in &cells {
+        manifest
+            .cells
+            .entry(c.id_hex(cfg))
+            .or_insert_with(|| CellEntry {
+                design: c.design.name.clone(),
+                optimizer: c.optimizer.clone(),
+                seed: c.seed,
+                status: CellStatus::Pending,
+                attempts: 0,
+                row: None,
+            });
+    }
+    let manifest_path = cfg.out_dir.as_ref().map(|d| manifest_file(d, cfg.shard));
+    if let Some(p) = &manifest_path {
+        manifest.save(p).with_context(|| format!("writing {p}"))?;
+    }
+
+    // One workload + prototype bank per distinct design that still has
+    // cells to run (built up front, panic-isolated per design).
+    let mut protos: HashMap<DesignSpec, Proto> = HashMap::new();
+    for c in &cells {
+        if matches!(
+            manifest.cells[&c.id_hex(cfg)].status,
+            CellStatus::Done { .. }
+        ) {
+            continue;
+        }
+        protos
+            .entry(c.design.clone())
+            .or_insert_with(|| Proto::build(&c.design, cfg.backend));
+    }
+
+    let next = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(0);
+    let resumed = AtomicUsize::new(0);
+    let shared = Mutex::new(SharedState {
+        manifest,
+        rows: vec![None; cells.len()],
+        failed: Vec::new(),
+        save_error: None,
+    });
+    let ctx = RunCtx {
+        cfg,
+        hooks,
+        cells: &cells,
+        protos: &protos,
+        next: &next,
+        completed: &completed,
+        resumed: &resumed,
+        shared: &shared,
+        manifest_path: manifest_path.as_deref(),
+    };
+    let workers = cfg.cell_workers.clamp(1, cells.len().max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| cell_worker(&ctx));
+        }
+    });
+
+    let state = shared.into_inner().unwrap();
+    if let Some(e) = state.save_error {
+        bail!("sweep: checkpoint write failed: {e}");
+    }
+    let stopped_early = completed.load(Ordering::SeqCst) < cells.len();
+    let rows: Vec<SweepRow> = state.rows.into_iter().flatten().collect();
+    let mut failed_indexed = state.failed;
+    failed_indexed.sort_by_key(|(i, _)| *i);
+    let failed: Vec<FailedCell> = failed_indexed.into_iter().map(|(_, f)| f).collect();
+    let truncated = rows.iter().filter(|r| r.truncated).count();
+
+    // Aggregates only from a complete, unsharded view of the grid —
+    // shard invocations leave them to the final merged resume pass.
+    if let (Some(dir), None, false) = (&cfg.out_dir, cfg.shard, stopped_early) {
+        write_aggregates(dir, &rows, &failed, cfg)?;
+    }
+
+    Ok(SweepOutcome {
+        rows,
+        failed,
+        resumed: resumed.load(Ordering::SeqCst),
+        truncated,
+        stopped_early,
+        manifest_path,
+    })
+}
+
+/// One work-stealing worker: claim the next cell index, skip it if the
+/// (possibly resumed) manifest already has it done, otherwise run it
+/// with retries and checkpoint the result.
+fn cell_worker(ctx: &RunCtx) {
+    loop {
+        if ctx
+            .hooks
+            .stop_after_cells
+            .is_some_and(|n| ctx.completed.load(Ordering::SeqCst) >= n)
+        {
+            return;
+        }
+        let i = ctx.next.fetch_add(1, Ordering::SeqCst);
+        if i >= ctx.cells.len() {
+            return;
+        }
+        let cell = &ctx.cells[i];
+        let key = cell.id_hex(ctx.cfg);
+        // Resume skip: replay the embedded row; the cell's record file
+        // on disk stays byte-for-byte untouched.
+        {
+            let mut st = ctx.shared.lock().unwrap();
+            let done_row = match st.manifest.cells.get(&key) {
+                Some(e) if matches!(e.status, CellStatus::Done { .. }) => e.row.clone(),
+                _ => None,
+            };
+            if let Some(row) = done_row {
+                st.rows[i] = Some(row);
+                drop(st);
+                ctx.resumed.fetch_add(1, Ordering::SeqCst);
+                ctx.completed.fetch_add(1, Ordering::SeqCst);
+                continue;
+            }
+        }
+        let outcome = run_cell_with_retries(ctx, cell);
+        let mut st = ctx.shared.lock().unwrap();
+        let entry = st
+            .manifest
+            .cells
+            .get_mut(&key)
+            .expect("every claimed cell was seeded into the manifest");
+        entry.attempts += outcome.attempts;
+        let attempts_total = entry.attempts;
+        match outcome.result {
+            Ok(row) => {
+                entry.status = CellStatus::Done {
+                    truncated: row.truncated,
+                };
+                entry.row = Some(row.clone());
+                st.rows[i] = Some(row);
+            }
+            Err(reason) => {
+                entry.status = CellStatus::Failed {
+                    reason: reason.clone(),
+                };
+                entry.row = None;
+                st.failed.push((
+                    i,
+                    FailedCell {
+                        design: cell.design.name.clone(),
+                        optimizer: cell.optimizer.clone(),
+                        seed: cell.seed,
+                        reason,
+                        attempts: attempts_total,
+                    },
+                ));
+            }
+        }
+        // Checkpoint under the lock so manifest writes serialize; the
+        // write itself is atomic (temp + rename).
+        if let Some(p) = ctx.manifest_path {
+            if let Err(e) = st.manifest.save(p) {
+                if st.save_error.is_none() {
+                    st.save_error = Some(e.to_string());
+                }
+            }
+        }
+        drop(st);
+        ctx.completed.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+struct CellOutcome {
+    result: std::result::Result<SweepRow, String>,
+    /// Attempts consumed this invocation.
+    attempts: u64,
+}
+
+/// Run one cell under panic isolation, retrying up to
+/// `1 + max_retries` attempts with exponential backoff. The prototype
+/// bank is cloned *outside* the unwind boundary so a panicking cell can
+/// never poison the design's shared bank.
+fn run_cell_with_retries(ctx: &RunCtx, cell: &CellKey) -> CellOutcome {
+    let (workload, bank_slot) = match ctx.protos.get(&cell.design) {
+        Some(Proto::Ready { workload, bank }) => (workload, bank),
+        Some(Proto::Broken(msg)) => {
+            return CellOutcome {
+                result: Err(msg.clone()),
+                attempts: 1,
+            }
+        }
+        None => {
+            return CellOutcome {
+                result: Err("internal: no prototype bank for design".into()),
+                attempts: 1,
+            }
+        }
+    };
+    let mut attempt = 0u64;
+    loop {
+        attempt += 1;
+        let bank = bank_slot.lock().unwrap().clone();
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(h) = &ctx.hooks.on_cell_start {
+                h(cell, attempt);
+            }
+            run_cell(ctx.cfg, cell, workload, bank)
+        }));
+        let reason = match run {
+            Ok(Ok(row)) => {
+                return CellOutcome {
+                    result: Ok(row),
+                    attempts: attempt,
+                }
+            }
+            Ok(Err(e)) => format!("error: {e:#}"),
+            Err(payload) => format!("panicked: {}", panic_message(&payload)),
+        };
+        if attempt > ctx.cfg.max_retries {
+            return CellOutcome {
+                result: Err(reason),
+                attempts: attempt,
+            };
+        }
+        let backoff = ctx
+            .cfg
+            .retry_backoff_ms
+            .saturating_mul(1 << (attempt - 1).min(10))
+            .min(60_000);
+        std::thread::sleep(Duration::from_millis(backoff));
+    }
+}
+
+/// One cell: fresh engine over the design's shared workload (cloning
+/// the prototype bank), baselines, budgeted drive, result row, and the
+/// atomic per-cell record write. Fresh per-cell engines are what make
+/// resumed and uninterrupted sweeps bit-identical — no state leaks
+/// between cells.
+fn run_cell(
+    cfg: &SweepConfig,
+    cell: &CellKey,
+    workload: &Arc<Workload>,
+    bank: ScenarioSim,
+) -> Result<SweepRow> {
+    let design = &cell.design.name;
+    let space = Space::from_workload(workload);
+    let mut ev = Evaluator::for_workload_with_bank(
+        workload.clone(),
+        Box::new(NativeBram),
+        cfg.jobs,
+        bank,
+        cfg.backend,
+    );
+    ev.set_prune(cfg.prune);
+    let (maxp, minp) = ev.eval_baselines();
+    let (base_lat, base_bram) = (
+        maxp.latency
+            .ok_or_else(|| anyhow!("{design}: Baseline-Max deadlocks"))?,
+        maxp.bram,
+    );
+    ev.reset_run(true);
+    ev.set_cancel_token(CancelToken::with_limits(
+        cfg.cell_timeout_secs.map(Duration::from_secs_f64),
+        cfg.cell_sim_budget,
+    ));
+    let mut o = opt::by_name(&cell.optimizer, cell.seed)
+        .ok_or_else(|| anyhow!("unknown optimizer '{}'", cell.optimizer))?;
+    let t0 = Instant::now();
+    drive(&mut *o, &mut ev, &space, cfg.budget);
+    let dt = t0.elapsed().as_secs_f64();
+    let front = ev.pareto();
+    let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
+    let star = select_highlight(&pts, cfg.alpha, base_lat, base_bram)
+        .map(|i| pts[i])
+        .unwrap_or((base_lat, base_bram));
+    let row = SweepRow {
+        design: design.clone(),
+        optimizer: cell.optimizer.clone(),
+        seed: cell.seed,
+        scenarios: workload.num_scenarios(),
+        evals: ev.n_evals(),
+        sims: ev.n_sim,
+        incr_rate: ev.stats().incremental_rate(),
+        replay_frac: ev.stats().replay_fraction(),
+        oracle_rate: ev.stats().oracle_rate(),
+        clamp_rate: ev.stats().clamp_rate(),
+        sims_avoided: ev.stats().sims_avoided,
+        lanes_per_walk: ev.stats().lanes_per_walk(),
+        batch_occupancy: ev.stats().batch_occupancy(),
+        walks_saved: ev.stats().walks_saved(),
+        elapsed_secs: dt,
+        front_size: front.len(),
+        star_latency: star.0,
+        star_bram: star.1,
+        base_latency: base_lat,
+        base_bram,
+        min_deadlocked: !minp.is_feasible(),
+        truncated: ev.truncated(),
+    };
+    // The record file lands (atomically) before the manifest flips this
+    // cell to done — a crash between the two just re-runs the cell,
+    // which rewrites the same deterministic content.
+    if let Some(dir) = &cfg.out_dir {
+        let j = report::run_to_json(
+            design,
+            &cell.optimizer,
+            cell.seed,
+            cfg.budget,
+            &ev.history,
+            &front,
+            dt,
+            Some(&ev),
+        );
+        report::write_file(
+            &format!("{dir}/{}.json", cell.file_stem()),
+            &j.to_string_pretty(),
+        )?;
+    }
+    Ok(row)
+}
+
+/// Aggregate CSV + JSON over the completed grid. Only deterministic
+/// fields are emitted (no wall-clock), so an interrupted-then-resumed
+/// sweep and an uninterrupted one produce identical bytes — the
+/// regression the orchestration tests pin.
+fn write_aggregates(
+    dir: &str,
+    rows: &[SweepRow],
+    failed: &[FailedCell],
+    cfg: &SweepConfig,
+) -> Result<()> {
+    let mut csv = Csv::new(&[
+        "design",
+        "optimizer",
+        "seed",
+        "scenarios",
+        "evals",
+        "sims",
+        "incr_rate",
+        "replay_frac",
+        "oracle_rate",
+        "clamp_rate",
+        "sims_avoided",
+        "lanes_per_walk",
+        "batch_occupancy",
+        "walks_saved",
+        "front_size",
+        "star_latency",
+        "star_bram",
+        "base_latency",
+        "base_bram",
+        "min_deadlocked",
+        "truncated",
+    ]);
+    for r in rows {
+        csv.row(vec![
+            r.design.clone(),
+            r.optimizer.clone(),
+            r.seed.to_string(),
+            r.scenarios.to_string(),
+            r.evals.to_string(),
+            r.sims.to_string(),
+            r.incr_rate.to_string(),
+            r.replay_frac.to_string(),
+            r.oracle_rate.to_string(),
+            r.clamp_rate.to_string(),
+            r.sims_avoided.to_string(),
+            r.lanes_per_walk.to_string(),
+            r.batch_occupancy.to_string(),
+            r.walks_saved.to_string(),
+            r.front_size.to_string(),
+            r.star_latency.to_string(),
+            r.star_bram.to_string(),
+            r.base_latency.to_string(),
+            r.base_bram.to_string(),
+            r.min_deadlocked.to_string(),
+            r.truncated.to_string(),
+        ]);
+    }
+    csv.write(&format!("{dir}/aggregate.csv"))?;
+    let j = Json::obj(vec![
+        (
+            "config_hash",
+            Json::Str(format!("{:016x}", cfg.config_hash())),
+        ),
+        (
+            "rows",
+            Json::Arr(rows.iter().map(|r| row_to_json(r, false)).collect()),
+        ),
+        (
+            "failed",
+            Json::Arr(
+                failed
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("design", Json::Str(f.design.clone())),
+                            ("optimizer", Json::Str(f.optimizer.clone())),
+                            ("seed", Json::Num(f.seed as f64)),
+                            ("reason", Json::Str(f.reason.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    report::write_file(&format!("{dir}/aggregate.json"), &j.to_string_pretty())?;
+    Ok(())
 }
 
 /// Render sweep rows as a markdown summary table.
@@ -316,13 +1400,14 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                     (r.base_bram as f64 - r.star_bram as f64) / r.base_bram.max(1) as f64 * 100.0
                 ),
                 if r.min_deadlocked { "×→✓" } else { "" }.to_string(),
+                if r.truncated { "✂" } else { "" }.to_string(),
             ]
         })
         .collect();
     report::markdown_table(
         &[
             "design", "optimizer", "seed", "scen", "secs", "sims", "incr%", "replay%", "orcl%",
-            "clmp%", "avoid", "ln/wk", "occ%", "front", "lat×", "BRAM↓", "rescue",
+            "clmp%", "avoid", "ln/wk", "occ%", "front", "lat×", "BRAM↓", "rescue", "cut",
         ],
         &table_rows,
     )
@@ -352,6 +1437,11 @@ mod tests {
         assert_eq!(cfg.alpha, 0.7);
         assert_eq!(cfg.jobs, 1, "threads accepted as legacy alias");
         assert!(cfg.prune, "pruning defaults on");
+        assert!(!cfg.resume);
+        assert_eq!(cfg.max_retries, 1);
+        assert_eq!(cfg.retry_backoff_ms, 250);
+        assert_eq!(cfg.shard, None);
+        assert_eq!(cfg.cell_workers, 1);
 
         let j = Json::parse(r#"{"designs": ["fig2"], "optimizers": ["greedy"], "jobs": 4}"#)
             .unwrap();
@@ -370,6 +1460,171 @@ mod tests {
     }
 
     #[test]
+    fn unknown_keys_are_rejected_by_name() {
+        let bad = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy"], "budgett": 50}"#,
+        )
+        .unwrap();
+        let err = SweepConfig::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("budgett"), "must name the offending key: {err}");
+        assert!(
+            err.contains("accepted keys") && err.contains("budget"),
+            "must list the accepted key set: {err}"
+        );
+        let not_obj = Json::parse(r#"[1, 2]"#).unwrap();
+        assert!(SweepConfig::from_json(&not_obj).is_err());
+    }
+
+    #[test]
+    fn shard_parsing_and_validation() {
+        assert_eq!(parse_shard("0/2").unwrap(), (0, 2));
+        assert_eq!(parse_shard("3/4").unwrap(), (3, 4));
+        assert!(parse_shard("2/2").is_err(), "index must be < count");
+        assert!(parse_shard("0/0").is_err(), "count must be >= 1");
+        assert!(parse_shard("x/2").is_err());
+        assert!(parse_shard("02").is_err(), "missing slash");
+
+        let j = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy"], "shard": "1/3"}"#,
+        )
+        .unwrap();
+        assert_eq!(SweepConfig::from_json(&j).unwrap().shard, Some((1, 3)));
+        let bad = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy"], "shard": "3/3"}"#,
+        )
+        .unwrap();
+        assert!(SweepConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn cell_ids_are_stable_and_config_sensitive() {
+        let cfg = |budget: usize| {
+            let j = Json::parse(&format!(
+                r#"{{"designs": ["fig2", "gesummv"], "optimizers": ["greedy"],
+                    "budget": {budget}, "seeds": [1, 2]}}"#
+            ))
+            .unwrap();
+            SweepConfig::from_json(&j).unwrap()
+        };
+        let a = cfg(60);
+        let cell = CellKey {
+            design: a.designs[0].clone(),
+            optimizer: "greedy".into(),
+            seed: 1,
+        };
+        assert_eq!(cell.id(&a), cell.id(&a), "id is a pure function");
+        assert_eq!(cell.id_hex(&a).len(), 16);
+        // Different seed, design, or budget → different id.
+        let other_seed = CellKey {
+            seed: 2,
+            ..cell.clone()
+        };
+        assert_ne!(cell.id(&a), other_seed.id(&a));
+        let other_design = CellKey {
+            design: a.designs[1].clone(),
+            ..cell.clone()
+        };
+        assert_ne!(cell.id(&a), other_design.id(&a));
+        assert_ne!(cell.id(&a), cell.id(&cfg(61)));
+        assert_ne!(a.config_hash(), cfg(61).config_hash());
+        assert_eq!(a.config_hash(), cfg(60).config_hash());
+        // Bare-design record files keep the historical name; workload
+        // entries get a disambiguating hash.
+        assert_eq!(cell.file_stem(), "fig2_greedy_s1");
+        let wl = CellKey {
+            design: DesignSpec {
+                name: "fig2".into(),
+                arg_sets: vec![vec![8], vec![16]],
+            },
+            optimizer: "greedy".into(),
+            seed: 1,
+        };
+        assert!(wl.file_stem().starts_with("fig2_w"));
+        assert!(wl.file_stem().ends_with("_greedy_s1"));
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json() {
+        let row = SweepRow {
+            design: "fig2".into(),
+            optimizer: "greedy".into(),
+            seed: 1,
+            scenarios: 2,
+            evals: 60,
+            sims: 41,
+            incr_rate: 0.512345678901,
+            replay_frac: 0.25,
+            oracle_rate: 0.1,
+            clamp_rate: 0.0,
+            sims_avoided: 7,
+            lanes_per_walk: 3.5,
+            batch_occupancy: 0.875,
+            walks_saved: 11,
+            elapsed_secs: 0.123456,
+            front_size: 4,
+            star_latency: 1234,
+            star_bram: 5,
+            base_latency: 2000,
+            base_bram: 9,
+            min_deadlocked: true,
+            truncated: false,
+        };
+        let mut cells = BTreeMap::new();
+        cells.insert(
+            "00000000deadbeef".to_string(),
+            CellEntry {
+                design: "fig2".into(),
+                optimizer: "greedy".into(),
+                seed: 1,
+                status: CellStatus::Done { truncated: false },
+                attempts: 1,
+                row: Some(row.clone()),
+            },
+        );
+        cells.insert(
+            "00000000cafebabe".to_string(),
+            CellEntry {
+                design: "gesummv".into(),
+                optimizer: "random".into(),
+                seed: 2,
+                status: CellStatus::Failed {
+                    reason: "panicked: boom".into(),
+                },
+                attempts: 2,
+                row: None,
+            },
+        );
+        let m = Manifest {
+            config_hash: 0xdead_beef_cafe_0123,
+            shard: Some((1, 2)),
+            cells,
+        };
+        let text = m.to_json().to_string_pretty();
+        let back = Manifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.config_hash, m.config_hash);
+        assert_eq!(back.shard, Some((1, 2)));
+        assert_eq!(back.cells.len(), 2);
+        let done = &back.cells["00000000deadbeef"];
+        assert_eq!(done.status, CellStatus::Done { truncated: false });
+        let r = done.row.as_ref().unwrap();
+        assert_eq!(r.sims, row.sims);
+        assert_eq!(r.incr_rate, row.incr_rate, "floats roundtrip exactly");
+        assert_eq!(r.elapsed_secs, row.elapsed_secs);
+        assert!(r.min_deadlocked);
+        let failed = &back.cells["00000000cafebabe"];
+        assert_eq!(
+            failed.status,
+            CellStatus::Failed {
+                reason: "panicked: boom".into()
+            }
+        );
+        assert_eq!(failed.attempts, 2);
+        // A done cell without a row is corrupt.
+        let corrupt = text.replace("\"row\"", "\"not_row\"");
+        assert!(Manifest::from_json(&Json::parse(&corrupt).unwrap()).is_err());
+    }
+
+    #[test]
     fn sweep_executes_grid() {
         let j = Json::parse(
             r#"{"designs": ["fig2", "gesummv"], "optimizers": ["greedy", "grouped_sa"],
@@ -383,6 +1638,7 @@ mod tests {
             assert!(r.front_size >= 1, "{}/{}", r.design, r.optimizer);
             assert!(r.star_latency > 0);
             assert!(r.sims as usize <= r.evals + 2);
+            assert!(!r.truncated, "no budgets configured");
         }
         assert!(rows.iter().any(|r| r.design == "fig2" && r.min_deadlocked));
         assert!(rows.iter().all(|r| r.scenarios == 1));
@@ -448,7 +1704,7 @@ mod tests {
         .unwrap();
         assert_eq!(
             SweepConfig::from_json(&defaulted).unwrap().backend,
-            crate::sim::BackendKind::Fast
+            BackendKind::Fast
         );
         let bad = Json::parse(
             r#"{"designs": ["fig2"], "optimizers": ["greedy"], "backend": "gpu"}"#,
@@ -492,5 +1748,26 @@ mod tests {
         )
         .unwrap();
         assert!(SweepConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn cell_sim_budget_truncates_without_failing() {
+        let j = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["grouped_sa"], "budget": 200,
+                "seeds": [1], "jobs": 1, "cell_sim_budget": 1}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json(&j).unwrap();
+        let out = run_sweep_with(&cfg, &SweepHooks::default()).unwrap();
+        assert!(out.failed.is_empty(), "budget exhaustion is not failure");
+        assert_eq!(out.rows.len(), 1);
+        assert!(out.rows[0].truncated, "sim budget must flag truncation");
+        assert_eq!(out.truncated, 1);
+        assert!(
+            out.rows[0].evals < 200,
+            "truncated run must stop well short of the proposal budget"
+        );
+        let md = rows_to_markdown(&out.rows);
+        assert!(md.contains("✂"), "markdown must mark truncated rows");
     }
 }

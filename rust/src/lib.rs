@@ -69,7 +69,15 @@
 //!   robustness gap) — while
 //!   [`dse::drive`] is the single loop that runs any optimizer against
 //!   it with centralized budget/history accounting (`--jobs N` on the
-//!   CLI sizes the pool).
+//!   CLI sizes the pool). [`dse::cancel`] adds cooperative cancellation
+//!   ([`CancelToken`](dse::CancelToken): explicit cancel, wall-clock
+//!   deadline, simulation budget — checked by `drive` per ask/tell
+//!   round, keeping the best-so-far front flagged truncated), and
+//!   [`dse::sweep`] is the fault-tolerant experiment-grid orchestrator:
+//!   work-stealing cell runner with atomic checkpointing into a
+//!   resumable `manifest.json`, deterministic `--shard i/n`
+//!   partitioning, per-cell retry with backoff, and per-cell panic
+//!   isolation.
 //! - [`runtime`] — the batched-analytics runtime: a native interpreter
 //!   of the AOT-exported JAX/Pallas analytics computation (BRAM totals,
 //!   β-grid objectives, dominance mask), shape-bucketed like the
@@ -78,7 +86,9 @@
 //!   (Stream-HLS-like kernels, the Fig. 2 example, FlowGNN-PNA).
 //! - [`report`] — CSV/JSON emitters and ASCII plots for benches.
 //! - [`cli`] — the command-line front end.
-//! - [`util`] — PRNG, statistics, JSON, and a mini property-test driver
+//! - [`util`] — PRNG, statistics, JSON, crash-safe atomic file writes
+//!   ([`util::atomic_write`]: temp + fsync + rename, the primitive every
+//!   artifact writer routes through), and a mini property-test driver
 //!   plus the shared fuzz-generator set ([`util::prop`]) every
 //!   randomized suite draws from (the offline crate mirror lacks
 //!   rand/serde/proptest).

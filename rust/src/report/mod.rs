@@ -160,6 +160,7 @@ pub fn run_to_json(
         ),
     ];
     if let Some(e) = engine {
+        fields.push(("truncated", Json::Bool(e.truncated())));
         fields.push(("engine", engine_stats_to_json(e)));
     }
     Json::obj(fields)
@@ -183,12 +184,13 @@ pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     out
 }
 
-/// Write a string to a file, creating parent directories.
+/// Write a string to a file, creating parent directories. Delegates to
+/// [`crate::util::atomic_write`], so every artifact routed through here
+/// (run records, workload JSON, CSV tables, sweep manifests) is
+/// crash-safe: readers see the old file or the new file, never a
+/// truncated one.
 pub fn write_file(path: &str, contents: &str) -> std::io::Result<()> {
-    if let Some(parent) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    std::fs::write(path, contents)
+    crate::util::atomic_write(path, contents)
 }
 
 #[cfg(test)]

@@ -284,7 +284,11 @@ impl Workload {
         Ok(w)
     }
 
-    /// Save the workload to a file.
+    /// Save the workload to a file. Crash-safe: the write routes
+    /// through [`report::write_file`](crate::report::write_file) →
+    /// [`util::atomic_write`](crate::util::atomic_write) (temp + fsync
+    /// + rename), so an interrupted save never leaves a torn or empty
+    /// workload file behind.
     pub fn save(&self, path: &str) -> Result<()> {
         crate::report::write_file(path, &self.to_json().to_string_compact())
             .with_context(|| format!("writing {path}"))

@@ -1,0 +1,91 @@
+//! Atomic file writes — the durability primitive under every artifact
+//! the toolchain persists (run records, sweep manifests, workload JSON,
+//! CSV tables).
+//!
+//! A crash mid-`fs::write` leaves a truncated file that a later
+//! `--resume` would try to parse; [`atomic_write`] closes that window by
+//! writing to a sibling temp file, syncing it to disk, and `rename`ing
+//! onto the destination. On POSIX filesystems the rename is atomic, so
+//! readers observe either the old bytes or the new bytes — never a
+//! prefix.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic suffix so concurrent writers targeting the same path (e.g.
+/// two sweep cell workers checkpointing one manifest) never share a temp
+/// file.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `contents` to `path` atomically: parent directories are
+/// created, the bytes land in a same-directory temp file (so the final
+/// `rename` cannot cross filesystems), the temp file is fsynced, and
+/// the rename publishes it. The temp file is removed on any failure.
+pub fn atomic_write(path: &str, contents: &str) -> io::Result<()> {
+    let target = Path::new(path);
+    if let Some(dir) = target.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = format!(
+        "{path}.tmp.{}.{}",
+        std::process::id(),
+        TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    );
+    let result = (|| {
+        let mut f = File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+        fs::rename(&tmp, target)
+    })();
+    if result.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tempdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fifoadvisor_fs_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_overwrites() {
+        let dir = tempdir("basic");
+        let path = dir.join("nested/deeper/out.json");
+        let path = path.to_str().unwrap();
+        atomic_write(path, "first").unwrap();
+        assert_eq!(fs::read_to_string(path).unwrap(), "first");
+        atomic_write(path, "second").unwrap();
+        assert_eq!(fs::read_to_string(path).unwrap(), "second");
+        // No temp litter once the write has landed.
+        let parent = Path::new(path).parent().unwrap();
+        let leftovers: Vec<_> = fs::read_dir(parent)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failure_cleans_up_temp_file() {
+        let dir = tempdir("fail");
+        // Renaming onto a path whose parent is a *file* must fail.
+        let blocker = dir.join("blocker");
+        fs::write(&blocker, "x").unwrap();
+        let target = blocker.join("child.json");
+        assert!(atomic_write(target.to_str().unwrap(), "data").is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,11 +1,14 @@
-//! Small self-contained utilities: PRNG, statistics, JSON, property-test
-//! driver. The offline crate mirror ships neither `rand`, `serde`, nor
-//! `proptest`, so these are hand-rolled (and unit-tested) here.
+//! Small self-contained utilities: PRNG, statistics, JSON, atomic file
+//! writes, property-test driver. The offline crate mirror ships neither
+//! `rand`, `serde`, nor `proptest`, so these are hand-rolled (and
+//! unit-tested) here.
 
+pub mod fs;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use fs::atomic_write;
 pub use json::Json;
 pub use rng::Rng;

@@ -1,0 +1,277 @@
+//! Fault-tolerance contract of the sweep orchestrator: an interrupted
+//! grid resumed from its manifest is indistinguishable from an
+//! uninterrupted one (bit-identical aggregates, untouched record
+//! files), shards partition the grid deterministically and merge
+//! cleanly, a panicking cell fails in the manifest without taking its
+//! siblings down, and budget-exhausted cells land as done-but-truncated.
+
+use fifoadvisor::dse::sweep::{run_sweep_with, CellStatus, Manifest, SweepConfig, SweepHooks};
+use fifoadvisor::util::Json;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("fifoadvisor_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_string_lossy().into_owned()
+}
+
+/// 2 designs × 1 optimizer × 2 seeds = 4 cells, small budget.
+fn base_cfg(out_dir: &str) -> SweepConfig {
+    let j = Json::parse(
+        r#"{"designs": ["fig2", "gesummv"], "optimizers": ["greedy"],
+            "budget": 60, "seeds": [1, 2], "jobs": 1}"#,
+    )
+    .unwrap();
+    let mut cfg = SweepConfig::from_json(&j).unwrap();
+    cfg.out_dir = Some(out_dir.to_string());
+    cfg
+}
+
+/// Per-cell record files (everything but manifests/aggregates), with
+/// their exact bytes, sorted by path.
+fn record_files(dir: &str) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| {
+            n.ends_with(".json") && !n.starts_with("manifest") && !n.starts_with("aggregate")
+        })
+        .map(|n| {
+            let p = format!("{dir}/{n}");
+            let bytes = std::fs::read(&p).unwrap();
+            (p, bytes)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn interrupted_then_resumed_matches_uninterrupted() {
+    let full_dir = tmpdir("full");
+    let res_dir = tmpdir("resumed");
+
+    let full = run_sweep_with(&base_cfg(&full_dir), &SweepHooks::default()).unwrap();
+    assert_eq!(full.rows.len(), 4);
+    assert!(!full.stopped_early);
+    assert!(full.failed.is_empty());
+
+    // "Crash" after two cells: the runner stops claiming work, leaving
+    // two done cells checkpointed and two pending in the manifest.
+    let hooks = SweepHooks {
+        stop_after_cells: Some(2),
+        ..Default::default()
+    };
+    let cut = run_sweep_with(&base_cfg(&res_dir), &hooks).unwrap();
+    assert!(cut.stopped_early);
+    assert_eq!(cut.rows.len(), 2);
+    assert!(
+        !Path::new(&format!("{res_dir}/aggregate.csv")).exists(),
+        "a partial run must not write aggregates"
+    );
+    let manifest = Manifest::load(&format!("{res_dir}/manifest.json")).unwrap();
+    let done = manifest
+        .cells
+        .values()
+        .filter(|e| matches!(e.status, CellStatus::Done { .. }))
+        .count();
+    assert_eq!(done, 2);
+    let checkpointed = record_files(&res_dir);
+    assert_eq!(checkpointed.len(), 2);
+
+    let mut cfg = base_cfg(&res_dir);
+    cfg.resume = true;
+    let resumed = run_sweep_with(&cfg, &SweepHooks::default()).unwrap();
+    assert_eq!(resumed.resumed, 2, "both done cells must be skipped");
+    assert_eq!(resumed.rows.len(), 4);
+    assert!(resumed.failed.is_empty());
+    assert!(!resumed.stopped_early);
+
+    // Skipped cells' record files survive the resume byte-for-byte.
+    for (path, before) in &checkpointed {
+        assert_eq!(&std::fs::read(path).unwrap(), before, "{path} rewritten");
+    }
+    // The deterministic aggregates are bit-identical to the
+    // uninterrupted run's.
+    for f in ["aggregate.csv", "aggregate.json"] {
+        let a = std::fs::read(format!("{full_dir}/{f}")).unwrap();
+        let b = std::fs::read(format!("{res_dir}/{f}")).unwrap();
+        assert_eq!(a, b, "{f} differs between full and resumed runs");
+    }
+
+    let _ = std::fs::remove_dir_all(&full_dir);
+    let _ = std::fs::remove_dir_all(&res_dir);
+}
+
+#[test]
+fn shards_partition_the_grid_and_merge_cleanly() {
+    let dir = tmpdir("shards");
+    let full_dir = tmpdir("shards_full");
+
+    let full = run_sweep_with(&base_cfg(&full_dir), &SweepHooks::default()).unwrap();
+    assert_eq!(full.rows.len(), 4);
+
+    // Run both shards into ONE out-dir, as a CI matrix would.
+    let mut union = std::collections::BTreeSet::new();
+    let mut total = 0;
+    for i in 0..2 {
+        let mut cfg = base_cfg(&dir);
+        cfg.shard = Some((i, 2));
+        let out = run_sweep_with(&cfg, &SweepHooks::default()).unwrap();
+        assert!(out.failed.is_empty());
+        total += out.rows.len();
+        let m = Manifest::load(&format!("{dir}/manifest.shard-{i}-of-2.json")).unwrap();
+        for (k, e) in &m.cells {
+            assert!(
+                matches!(e.status, CellStatus::Done { .. }),
+                "shard {i} left {k} unfinished"
+            );
+            assert!(union.insert(k.clone()), "cell {k} ran in both shards");
+        }
+    }
+    assert_eq!(total, 4, "shards must cover the whole grid");
+    assert_eq!(union.len(), 4, "shard union must equal the full grid");
+    assert!(
+        !Path::new(&format!("{dir}/aggregate.csv")).exists(),
+        "sharded invocations must leave aggregation to the merge pass"
+    );
+
+    // Final unsharded resume over the merged dir: re-runs nothing and
+    // emits aggregates identical to an uninterrupted single-machine run.
+    let ran = Arc::new(AtomicUsize::new(0));
+    let ran_in_hook = ran.clone();
+    let hooks = SweepHooks {
+        on_cell_start: Some(Box::new(move |_, _| {
+            ran_in_hook.fetch_add(1, Ordering::SeqCst);
+        })),
+        stop_after_cells: None,
+    };
+    let mut cfg = base_cfg(&dir);
+    cfg.resume = true;
+    let merged = run_sweep_with(&cfg, &hooks).unwrap();
+    assert_eq!(merged.resumed, 4);
+    assert_eq!(ran.load(Ordering::SeqCst), 0, "merge pass re-ran a cell");
+    assert_eq!(merged.rows.len(), 4);
+    for f in ["aggregate.csv", "aggregate.json"] {
+        let a = std::fs::read(format!("{full_dir}/{f}")).unwrap();
+        let b = std::fs::read(format!("{dir}/{f}")).unwrap();
+        assert_eq!(a, b, "{f} differs between full and shard-merged runs");
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&full_dir);
+}
+
+#[test]
+fn panicking_cells_fail_in_manifest_without_aborting_siblings() {
+    let clean_dir = tmpdir("panic_clean");
+    let clean = run_sweep_with(&base_cfg(&clean_dir), &SweepHooks::default()).unwrap();
+
+    // Every gesummv cell panics; fig2 cells must be unaffected.
+    let dir = tmpdir("panic");
+    let mut cfg = base_cfg(&dir);
+    cfg.max_retries = 0;
+    let hooks = SweepHooks {
+        on_cell_start: Some(Box::new(|cell, _attempt| {
+            if cell.design.name == "gesummv" {
+                panic!("injected fault");
+            }
+        })),
+        stop_after_cells: None,
+    };
+    let out = run_sweep_with(&cfg, &hooks).unwrap();
+    assert_eq!(out.failed.len(), 2);
+    assert_eq!(out.rows.len(), 2);
+    for f in &out.failed {
+        assert_eq!(f.design, "gesummv");
+        assert_eq!(f.attempts, 1, "max_retries 0 means one attempt");
+        assert!(f.reason.contains("injected fault"), "{}", f.reason);
+    }
+    let m = Manifest::load(&format!("{dir}/manifest.json")).unwrap();
+    let failed = m
+        .cells
+        .values()
+        .filter(|e| {
+            matches!(&e.status, CellStatus::Failed { reason } if reason.contains("injected fault"))
+        })
+        .count();
+    assert_eq!(failed, 2, "both faults must be recorded in the manifest");
+    let fig2_clean: Vec<_> = clean.rows.iter().filter(|r| r.design == "fig2").collect();
+    let fig2_hurt: Vec<_> = out.rows.iter().filter(|r| r.design == "fig2").collect();
+    assert_eq!(fig2_clean.len(), fig2_hurt.len());
+    for (a, b) in fig2_clean.iter().zip(&fig2_hurt) {
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.star_latency, b.star_latency);
+        assert_eq!(a.star_bram, b.star_bram);
+        assert_eq!(a.sims, b.sims, "sibling cells must be bit-identical");
+    }
+
+    // A transient fault (first attempt only) is absorbed by one retry,
+    // and the retried result is still deterministic.
+    let flaky_dir = tmpdir("panic_retry");
+    let mut cfg = base_cfg(&flaky_dir);
+    cfg.max_retries = 1;
+    cfg.retry_backoff_ms = 1;
+    let hooks = SweepHooks {
+        on_cell_start: Some(Box::new(|cell, attempt| {
+            if cell.design.name == "gesummv" && attempt == 1 {
+                panic!("transient fault");
+            }
+        })),
+        stop_after_cells: None,
+    };
+    let retried = run_sweep_with(&cfg, &hooks).unwrap();
+    assert!(retried.failed.is_empty(), "one retry must absorb the fault");
+    assert_eq!(retried.rows.len(), 4);
+    let m = Manifest::load(&format!("{flaky_dir}/manifest.json")).unwrap();
+    for e in m.cells.values() {
+        let expected = if e.design == "gesummv" { 2 } else { 1 };
+        assert_eq!(e.attempts, expected, "{}/s{}", e.design, e.seed);
+    }
+    let ges_clean: Vec<_> = clean.rows.iter().filter(|r| r.design == "gesummv").collect();
+    let ges_retried: Vec<_> = retried
+        .rows
+        .iter()
+        .filter(|r| r.design == "gesummv")
+        .collect();
+    for (a, b) in ges_clean.iter().zip(&ges_retried) {
+        assert_eq!(a.star_latency, b.star_latency);
+        assert_eq!(a.sims, b.sims, "retried cells must be bit-identical");
+    }
+
+    let _ = std::fs::remove_dir_all(&clean_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&flaky_dir);
+}
+
+#[test]
+fn budget_exhausted_cells_are_done_truncated_and_hash_checked() {
+    let dir = tmpdir("budget");
+    let mut cfg = base_cfg(&dir);
+    cfg.budget = 200;
+    cfg.cell_sim_budget = Some(1);
+    let out = run_sweep_with(&cfg, &SweepHooks::default()).unwrap();
+    assert!(out.failed.is_empty(), "budget exhaustion is not failure");
+    assert_eq!(out.rows.len(), 4);
+    assert_eq!(out.truncated, 4);
+    let m = Manifest::load(&format!("{dir}/manifest.json")).unwrap();
+    for e in m.cells.values() {
+        assert_eq!(e.status, CellStatus::Done { truncated: true });
+        assert!(e.row.as_ref().unwrap().truncated);
+    }
+
+    // A resume under a different result-affecting config (no sim budget)
+    // must refuse to mix with these manifests.
+    let mut incompatible = base_cfg(&dir);
+    incompatible.resume = true;
+    let err = run_sweep_with(&incompatible, &SweepHooks::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("incompatible"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
