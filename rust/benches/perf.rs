@@ -36,13 +36,23 @@
 //!    `CompiledSim`, bank-level latency identity on every step of every
 //!    K cell, and batched throughput ≥ compiled on at least one K ≥ 8
 //!    cell.
+//! 11. Analytic depth bounds: (a) engine-toggle A/B on the shared
+//!    bounded space — bit-identical histories/fronts with the bounds
+//!    layer on vs off, never more sims; (b) full-pipeline A/B — the
+//!    bounded space + engine bounds vs the pre-bounds pipeline
+//!    (write-count space, engine layer off) on the fig2, k15mmtree, and
+//!    FlowGNN suites, comparing total simulations and wall clock under
+//!    the same proposal budget. Hard asserts: identical min-latency
+//!    corner in both arms (the cap-soundness theorem end-to-end) and a
+//!    strict simulation reduction on at least one of the k15mmtree /
+//!    FlowGNN suites.
 //!
 //! Run: `cargo bench --bench perf`. Besides `results/perf.csv` it writes
 //! machine-readable snapshots: `BENCH_2.json` (every §Perf 1–6 metric
 //! row), `BENCH_3.json` (the §Perf 7 scenario-bank rows), `BENCH_4.json`
 //! (the §Perf 8 pruning rows), `BENCH_5.json` (the §Perf 9 backend
-//! comparison rows), and `BENCH_6.json` (the §Perf 10 lane-batched
-//! rows).
+//! comparison rows), `BENCH_6.json` (the §Perf 10 lane-batched rows),
+//! and `BENCH_8.json` (the §Perf 11 depth-bounds rows).
 //! Set `FIFOADVISOR_PERF_SMOKE=1` for a reduced-iteration run (the CI
 //! regression smoke): same sections, same correctness assertions, far
 //! fewer samples.
@@ -960,8 +970,180 @@ fn main() {
         println!("  batched ≥ compiled in {wins}/{cells} K ≥ 8 cells");
     }
 
+    println!("\n=== §Perf 11: analytic depth bounds (search-space collapse) ===\n");
+    let mut bounds_rows: Vec<Json> = Vec::new();
+    {
+        use fifoadvisor::dse::drive;
+        use fifoadvisor::opt::bounds::DepthBounds;
+        use fifoadvisor::opt::{self, Space};
+        use fifoadvisor::Workload;
+
+        type HistoryRecord = Vec<(Box<[u32]>, Option<u64>, u32)>;
+        fn history_of(ev: &EvalEngine) -> HistoryRecord {
+            ev.history
+                .iter()
+                .map(|p| (p.depths.clone(), p.latency, p.bram))
+                .collect()
+        }
+        fn front_of(ev: &EvalEngine) -> Vec<(Option<u64>, u32)> {
+            ev.pareto().iter().map(|p| (p.latency, p.bram)).collect()
+        }
+
+        let budget = if smoke { 120 } else { 400 };
+        let optimizers = ["greedy", "grouped_sa"];
+        let suites: Vec<(&str, Arc<Workload>)> = vec![
+            ("fig2", Arc::new(bench_suite::build_workload("fig2").unwrap())),
+            ("k15mmtree", {
+                let bd = bench_suite::build("k15mmtree");
+                Arc::new(Workload::single(Arc::new(
+                    collect_trace(&bd.design, &bd.args).unwrap(),
+                )))
+            }),
+            (
+                "flowgnn_pna",
+                Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap()),
+            ),
+        ];
+        let mut reduced = 0usize;
+        for (wname, w) in &suites {
+            let db = DepthBounds::for_workload(w);
+            let space_on = Space::from_workload(w);
+            let space_off = Space::from_workload_unbounded(w);
+            let cands =
+                |s: &Space| -> f64 { s.per_fifo.iter().map(|c| c.len() as f64).product() };
+
+            // (a) Engine toggle on the shared bounded space: the bounds
+            // layer must be invisible in the results — bit-identical
+            // histories and fronts, never more sims.
+            let (mut t_sims_on, mut t_sims_off, mut floor_hits) = (0u64, 0u64, 0u64);
+            for oname in optimizers {
+                let mut ev_on = EvalEngine::for_workload(w.clone(), 1);
+                let mut ev_off = EvalEngine::for_workload(w.clone(), 1);
+                ev_off.set_bounds(false);
+                ev_on.eval_baselines();
+                ev_off.eval_baselines();
+                drive(&mut *opt::by_name(oname, 13).unwrap(), &mut ev_on, &space_on, budget);
+                drive(&mut *opt::by_name(oname, 13).unwrap(), &mut ev_off, &space_on, budget);
+                assert_eq!(
+                    history_of(&ev_on),
+                    history_of(&ev_off),
+                    "{wname}/{oname}: bounds toggle changed the history"
+                );
+                assert_eq!(
+                    front_of(&ev_on),
+                    front_of(&ev_off),
+                    "{wname}/{oname}: bounds toggle changed the front"
+                );
+                assert!(
+                    ev_on.stats().sims <= ev_off.stats().sims,
+                    "{wname}/{oname}: bounds added sims"
+                );
+                t_sims_on += ev_on.stats().sims;
+                t_sims_off += ev_off.stats().sims;
+                floor_hits += ev_on.stats().bounds_floor_hits;
+            }
+
+            // (b) Full pipeline A/B under the same proposal budget: the
+            // bounded space with the engine layer on vs the pre-bounds
+            // pipeline (write-count candidate ranges, engine layer off).
+            let (mut p_sims_on, mut p_sims_off) = (0u64, 0u64);
+            let (mut p_secs_on, mut p_secs_off) = (0.0f64, 0.0f64);
+            for oname in optimizers {
+                let mut ev_on = EvalEngine::for_workload(w.clone(), 1);
+                let t0 = Instant::now();
+                ev_on.eval_baselines();
+                drive(&mut *opt::by_name(oname, 13).unwrap(), &mut ev_on, &space_on, budget);
+                p_secs_on += t0.elapsed().as_secs_f64();
+                let mut ev_off = EvalEngine::for_workload(w.clone(), 1);
+                ev_off.set_bounds(false);
+                let t0 = Instant::now();
+                ev_off.eval_baselines();
+                drive(&mut *opt::by_name(oname, 13).unwrap(), &mut ev_off, &space_off, budget);
+                p_secs_off += t0.elapsed().as_secs_f64();
+                // Cap-soundness end-to-end: both arms carry their
+                // Baseline-Max corner, and raising any depth above the
+                // tightened cap cannot change the outcome — so the
+                // minimal achievable latency must agree exactly.
+                let min_lat = |f: &[(Option<u64>, u32)]| {
+                    f.iter().filter_map(|&(l, _)| l).min().unwrap()
+                };
+                assert_eq!(
+                    min_lat(&front_of(&ev_on)),
+                    min_lat(&front_of(&ev_off)),
+                    "{wname}/{oname}: bounded arm lost the min-latency corner"
+                );
+                p_sims_on += ev_on.stats().sims;
+                p_sims_off += ev_off.stats().sims;
+            }
+            if *wname != "fig2" && p_sims_on < p_sims_off {
+                reduced += 1;
+            }
+            println!(
+                "  {wname:<14} {} floor(s) / {} tightened cap(s): space {:.3e} → {:.3e} configs, \
+                 toggle sims {} → {} ({} floor hits), pipeline sims {} → {}, wall {} → {}",
+                db.num_floored(),
+                db.num_cap_tightenings(),
+                cands(&space_off),
+                cands(&space_on),
+                t_sims_off,
+                t_sims_on,
+                floor_hits,
+                p_sims_off,
+                p_sims_on,
+                fmt_duration(p_secs_off),
+                fmt_duration(p_secs_on)
+            );
+            let mut push = |metric: &str, value: f64, unit: &str| {
+                csv.row(vec![
+                    metric.to_string(),
+                    wname.to_string(),
+                    format!("{value:.6e}"),
+                    unit.into(),
+                ]);
+                bounds_rows.push(Json::obj(vec![
+                    ("metric", Json::Str(metric.into())),
+                    ("design", Json::Str(wname.to_string())),
+                    ("value", Json::Num(value)),
+                    ("unit", Json::Str(unit.into())),
+                ]));
+            };
+            push("bounds_analytic_floors", db.num_floored() as f64, "");
+            push("bounds_cap_tightenings", db.num_cap_tightenings() as f64, "");
+            push("bounds_space_configs", cands(&space_on), "configs");
+            push("bounds_space_configs_unbounded", cands(&space_off), "configs");
+            push("bounds_toggle_sims", t_sims_on as f64, "");
+            push("bounds_toggle_sims_off", t_sims_off as f64, "");
+            push("bounds_floor_hits", floor_hits as f64, "");
+            push("bounds_pipeline_sims", p_sims_on as f64, "");
+            push("bounds_pipeline_sims_off", p_sims_off as f64, "");
+            push(
+                "bounds_pipeline_sims_saved",
+                p_sims_off.saturating_sub(p_sims_on) as f64,
+                "",
+            );
+            push("bounds_pipeline_secs", p_secs_on, "s");
+            push("bounds_pipeline_secs_off", p_secs_off, "s");
+        }
+        // §Perf 11 acceptance: the bounds pass must strictly reduce
+        // simulations-to-frontier on at least one non-toy suite. fig2 is
+        // reported for reference but excluded from the gate.
+        assert!(
+            reduced >= 1,
+            "bounds reduced pipeline sims on neither k15mmtree nor flowgnn_pna"
+        );
+    }
+
     csv.write("results/perf.csv").unwrap();
     println!("\nwrote results/perf.csv");
+
+    let snapshot8 = Json::obj(vec![
+        ("bench", Json::Str("bounds".into())),
+        ("schema", Json::Str("metric-rows/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(bounds_rows)),
+    ]);
+    fifoadvisor::report::write_file("BENCH_8.json", &snapshot8.to_string_pretty()).unwrap();
+    println!("wrote BENCH_8.json");
 
     let snapshot6 = Json::obj(vec![
         ("bench", Json::Str("batched_backend".into())),
@@ -1002,9 +1184,10 @@ fn main() {
     // Machine-readable perf snapshot (the §Perf trajectory file). The
     // §Perf 7 scenario rows live in BENCH_3.json only, the §Perf 8
     // pruning rows in BENCH_4.json only, the §Perf 9 backend rows in
-    // BENCH_5.json only, and the §Perf 10 lane-batched rows in
-    // BENCH_6.json only, so BENCH_2.json stays row-for-row comparable
-    // with pre-workload snapshots.
+    // BENCH_5.json only, the §Perf 10 lane-batched rows in BENCH_6.json
+    // only, and the §Perf 11 depth-bounds rows in BENCH_8.json only, so
+    // BENCH_2.json stays row-for-row comparable with pre-workload
+    // snapshots.
     let rows_json: Vec<Json> = csv
         .rows()
         .iter()
@@ -1013,6 +1196,7 @@ fn main() {
                 && !r[0].starts_with("prune_")
                 && !r[0].starts_with("backend_")
                 && !r[0].starts_with("batched_")
+                && !r[0].starts_with("bounds_")
         })
         .map(|r| {
             let value = match r[2].parse::<f64>() {

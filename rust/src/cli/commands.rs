@@ -180,6 +180,7 @@ pub fn info(args: &Args) -> Result<()> {
     println!("groups       : {}", space.groups.len());
     println!("trace ops    : {}", w.total_ops());
     println!("pruned space : 10^{:.1} configurations", space.log10_size());
+    print_depth_bounds(&w, &space);
     let mut ev = Evaluator::for_workload(w.clone(), 1);
     let (maxp, minp) = ev.eval_baselines();
     println!(
@@ -192,6 +193,53 @@ pub fn info(args: &Args) -> Result<()> {
         None => println!("Baseline-Min : DEADLOCK"),
     }
     Ok(())
+}
+
+/// The per-channel `[lower, cap]` ranges the optimizers actually search,
+/// with each bound's provenance. Small designs get the full table;
+/// larger ones list only the channels where the analytic pass improved
+/// on the trivial `[2, write-count]` range.
+fn print_depth_bounds(w: &Workload, space: &Space) {
+    use crate::opt::bounds::{BoundSource, DepthBounds};
+    let b = DepthBounds::for_workload(w);
+    let n = b.num_fifos();
+    println!(
+        "depth bounds : {} analytic floor(s), {} tightened cap(s)",
+        b.num_floored(),
+        b.num_cap_tightenings()
+    );
+    let src = |s: BoundSource| match s {
+        BoundSource::Analytic => "analytic",
+        BoundSource::WriteCount => "write-count",
+    };
+    let rows: Vec<usize> = if n <= 16 {
+        (0..n).collect()
+    } else {
+        (0..n)
+            .filter(|&ch| {
+                b.floor_source(ch) == BoundSource::Analytic
+                    || b.cap_source(ch) == BoundSource::Analytic
+            })
+            .collect()
+    };
+    if n > 16 && !rows.is_empty() {
+        println!("    ({} of {n} channels have a non-trivial bound)", rows.len());
+    }
+    const MAX_ROWS: usize = 32;
+    let names = &w.primary().channels;
+    for &ch in rows.iter().take(MAX_ROWS) {
+        println!(
+            "    {:<24} [{:>5}, {:>6}]  floor: {}, cap: {}",
+            names[ch].name,
+            space.min_depth(ch).min(space.bounds[ch].max(2)),
+            space.bounds[ch].max(2),
+            src(b.floor_source(ch)),
+            src(b.cap_source(ch)),
+        );
+    }
+    if rows.len() > MAX_ROWS {
+        println!("    ... {} more", rows.len() - MAX_ROWS);
+    }
 }
 
 pub fn simulate(args: &Args) -> Result<()> {
@@ -269,6 +317,22 @@ pub fn optimize(args: &Args) -> Result<()> {
     // are identical either way; only the sims/sec differ.
     if args.has_flag("no-prune") {
         ev.set_prune(false);
+    }
+    // Same for the analytic depth-bounds layer (floor short-circuit,
+    // oracle seeding, tightened clamp caps). The search space keeps its
+    // analytic collapse either way — the flag only toggles the engine
+    // side, so histories stay bit-identical for the A/B comparison.
+    if args.has_flag("no-bounds") {
+        ev.set_bounds(false);
+    }
+    let b = ev.depth_bounds();
+    if b.num_floored() > 0 || b.num_cap_tightenings() > 0 {
+        println!(
+            "  bounds: {} analytic floor(s), {} tightened cap(s){}",
+            b.num_floored(),
+            b.num_cap_tightenings(),
+            if ev.bounds() { "" } else { " (engine layer OFF)" }
+        );
     }
     let space = Space::from_workload(&w);
     let (base, minp) = ev.eval_baselines();

@@ -6,7 +6,7 @@
 //! fifoadvisor simulate --design NAME [--baseline max|min | --depths 2,4,..]
 //! fifoadvisor optimize --design NAME --optimizer grouped_sa [--budget 1000]
 //!                      [--seed 1] [--jobs 4] [--xla] [--alpha 0.7]
-//!                      [--out results/run.json] [--no-prune]
+//!                      [--out results/run.json] [--no-prune] [--no-bounds]
 //!                      [--backend fast|compiled|batched] [--timeout-secs T]
 //! fifoadvisor hunt     --design NAME [--timeout-secs T]
 //! fifoadvisor sweep    --config sweep.json [--resume] [--shard i/n]
@@ -60,12 +60,17 @@ USAGE:
   fifoadvisor simulate --design NAME [--baseline max|min | --depths D1,D2,..]
   fifoadvisor optimize --design NAME --optimizer OPT [--budget N] [--seed S]
                        [--jobs N] [--xla] [--alpha 0.7] [--out FILE.json]
-                       [--no-prune] [--backend fast|compiled|batched]
+                       [--no-prune] [--no-bounds]
+                       [--backend fast|compiled|batched]
                        (--jobs sizes the persistent worker pool; --threads
                         is accepted as a legacy alias. --no-prune disables
                         the simulation-free pruning layer — dominance
                         oracle, occupancy clamp, scenario early exit — for
                         A/B debugging; results are identical either way.
+                        --no-bounds likewise disables the engine side of
+                        the analytic depth-bounds pass — sub-floor
+                        short-circuit, oracle seeding, tightened clamp
+                        caps — again without changing any result.
                         --backend picks the simulation core: the
                         event-driven fast simulator (default), the
                         graph-compiled one, or the lane-batched SoA one

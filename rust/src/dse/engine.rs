@@ -64,10 +64,24 @@
 //! the stats-evaluation path (greedy ranking, targeted hunter) always
 //! simulates, since it exists to collect per-channel statistics and
 //! deadlock block info.
+//!
+//! # Analytic depth bounds
+//!
+//! On top of the learned pruning layer, the engine runs the
+//! [`crate::opt::bounds`] pass once at construction: per-channel
+//! deadlock floors and tightened clamp caps mined from the compiled
+//! event graph. With bounds on (the default) the engine answers any
+//! proposal below a floor as `Deadlock` with **zero** simulation (before
+//! the oracle is even consulted), seeds the oracle's infeasible
+//! antichain with the one-below-floor frontier, and canonicalizes with
+//! the tightened caps instead of the raw write counts. Like pruning,
+//! the bounds layer never changes results — `--no-bounds` /
+//! [`EvalEngine::set_bounds`] switch it off for A/B runs.
 
 use super::{BramBatch, EvalPoint, NativeBram};
 use crate::bram;
 use crate::dse::cancel::CancelToken;
+use crate::opt::bounds::DepthBounds;
 use crate::opt::dominance::{Canonicalizer, FeasibilityOracle};
 use crate::opt::pareto::{pareto_front, ObjPoint};
 use crate::opt::{AskCtx, Optimizer, Space};
@@ -463,6 +477,13 @@ pub struct EngineStats {
     /// proposals served from an existing canonical evaluation instead of
     /// a fresh simulation of their own.
     pub sims_avoided: u64,
+    /// Proposals answered `Deadlock` by the analytic depth-floor
+    /// short-circuit — a subset of [`oracle_hits`](Self::oracle_hits)
+    /// (counted into both so the accounting invariant is unchanged).
+    pub bounds_floor_hits: u64,
+    /// Channels whose clamp cap the analytic bounds pass tightened below
+    /// the PR 4 write count (static per workload; 0 with bounds off).
+    pub cap_tightenings: u64,
     /// Lane-batched SoA graph walks executed (one per scenario member
     /// with live lanes, per miss batch) — nonzero only under the
     /// batched backend.
@@ -638,6 +659,13 @@ pub struct EvalEngine {
     /// clamp canonicalization, scenario early exit). On by default;
     /// `--no-prune` / sweep `"prune": false` turn it off for A/B runs.
     prune: bool,
+    /// Master switch for the analytic depth-bounds layer (floor
+    /// short-circuit, oracle seeding, tightened clamp caps). On by
+    /// default; `--no-bounds` / sweep `"bounds": false` turn it off for
+    /// A/B runs. Independent of [`prune`](Self::prune).
+    bounds: bool,
+    /// The once-per-workload analytic bounds ([`DepthBounds`]).
+    depth_bounds: DepthBounds,
     /// Which simulation backend the bank (and every pool worker's clone
     /// of it) runs — the CLI's `--backend {fast,compiled,batched}`.
     sim_backend: BackendKind,
@@ -745,9 +773,13 @@ impl EvalEngine {
         } else {
             None
         };
-        let canon = Canonicalizer::for_workload(&workload);
+        // The analytic bounds pass (once per workload): tightened clamp
+        // caps feed the canonicalizer, the deadlock floors seed the
+        // oracle and back the sub-floor short-circuit.
+        let depth_bounds = DepthBounds::for_workload(&workload);
+        let canon = Canonicalizer::new(depth_bounds.caps.clone(), &widths);
         let oracle = FeasibilityOracle::for_workload(&workload);
-        EvalEngine {
+        let mut engine = EvalEngine {
             sim,
             workload,
             widths,
@@ -760,12 +792,42 @@ impl EvalEngine {
             stats: EngineStats::default(),
             start: Instant::now(),
             prune: true,
+            bounds: true,
+            depth_bounds,
             sim_backend,
             canon,
             oracle,
             scenario_memo: HashMap::new(),
             cancel: CancelToken::new(),
             truncated: false,
+        };
+        engine.stats.cap_tightenings = engine.depth_bounds.num_cap_tightenings() as u64;
+        engine.seed_oracle_from_bounds();
+        engine
+    }
+
+    /// Seed the oracle's infeasible antichain with the one-below-floor
+    /// frontier: for every channel with a non-trivial analytic floor,
+    /// the configuration at `floor − 1` with every sibling fully relaxed
+    /// is a proven deadlock (the floor holds for *any* sibling depths),
+    /// so everything below the floor is dominated. No-op with bounds
+    /// off.
+    fn seed_oracle_from_bounds(&mut self) {
+        if !self.bounds {
+            return;
+        }
+        let wcaps: Vec<u32> = self
+            .depth_bounds
+            .write_caps()
+            .iter()
+            .map(|&w| w.max(2))
+            .collect();
+        for (ch, &f) in self.depth_bounds.floors.iter().enumerate() {
+            if f > 2 {
+                let mut v = wcaps.clone();
+                v[ch] = f - 1;
+                self.oracle.note(&v, None);
+            }
         }
     }
 
@@ -829,6 +891,44 @@ impl EvalEngine {
     /// Whether the pruning layer is active.
     pub fn prune(&self) -> bool {
         self.prune
+    }
+
+    /// Enable/disable the analytic depth-bounds layer (on by default).
+    /// Like pruning, bounds never change results — only how many
+    /// simulations they cost. Disabling rebuilds the canonicalizer on
+    /// the raw write-count caps and forgets the oracle's floor seeds
+    /// (along with anything else it learned); re-enabling restores the
+    /// tightened caps and re-seeds.
+    pub fn set_bounds(&mut self, on: bool) {
+        if on == self.bounds {
+            return;
+        }
+        self.bounds = on;
+        let caps = if on {
+            self.depth_bounds.caps.clone()
+        } else {
+            self.depth_bounds.write_caps().to_vec()
+        };
+        self.canon = Canonicalizer::new(caps, &self.widths);
+        self.oracle.clear();
+        self.stats.cap_tightenings = if on {
+            self.depth_bounds.num_cap_tightenings() as u64
+        } else {
+            0
+        };
+        self.seed_oracle_from_bounds();
+    }
+
+    /// Whether the analytic depth-bounds layer is active.
+    pub fn bounds(&self) -> bool {
+        self.bounds
+    }
+
+    /// The analytic per-channel depth bounds of this workload
+    /// (computed once at construction; valid whether or not the layer
+    /// is [active](Self::bounds)).
+    pub fn depth_bounds(&self) -> &DepthBounds {
+        &self.depth_bounds
     }
 
     /// The dominance oracle's current knowledge (diagnostics/tests).
@@ -909,12 +1009,16 @@ impl EvalEngine {
     pub fn reset_run(&mut self, clear_cache: bool) {
         self.history.clear();
         self.stats = EngineStats::default();
+        if self.bounds {
+            self.stats.cap_tightenings = self.depth_bounds.num_cap_tightenings() as u64;
+        }
         self.truncated = false;
         if clear_cache {
             self.cache.clear();
             self.oracle.clear();
             self.scenario_memo.clear();
             self.n_sim = 0;
+            self.seed_oracle_from_bounds();
         }
         self.start = Instant::now();
     }
@@ -982,7 +1086,17 @@ impl EvalEngine {
                 v
             }
             None => {
-                if self.prune && self.oracle.is_dominated_infeasible(depths) {
+                if self.bounds && self.depth_bounds.below_floor(depths) {
+                    // Below an analytic deadlock floor: provably
+                    // infeasible whatever the sibling depths, no
+                    // simulation (and no oracle query needed).
+                    self.stats.oracle_hits += 1;
+                    self.stats.bounds_floor_hits += 1;
+                    self.stats.sims_avoided += 1;
+                    let br = bram::bram_total(depths, &self.widths);
+                    self.cache.insert(key.clone(), (None, br));
+                    (None, br)
+                } else if self.prune && self.oracle.is_dominated_infeasible(depths) {
                     // Dominated by a known deadlock: no simulation.
                     self.stats.oracle_hits += 1;
                     self.stats.sims_avoided += 1;
@@ -1086,6 +1200,15 @@ impl EvalEngine {
             for (i, c) in configs.iter().enumerate() {
                 if self.cache.get(c).is_some() || !seen_raw.insert(c.as_ref()) {
                     self.stats.cache_hits += 1;
+                    continue;
+                }
+                if self.bounds && self.depth_bounds.below_floor(c) {
+                    // Below an analytic deadlock floor: certain
+                    // infeasibility, same fill path as an oracle answer.
+                    self.stats.oracle_hits += 1;
+                    self.stats.bounds_floor_hits += 1;
+                    self.stats.sims_avoided += 1;
+                    extras.push((c.clone(), Fill::OracleDeadlock));
                     continue;
                 }
                 if self.prune && self.oracle.is_dominated_infeasible(c) {
@@ -1553,6 +1676,8 @@ mod tests {
     fn workload_engine_aggregates_worst_case_and_counts_scenarios() {
         let w = fig2_workload(&[8, 16]);
         let mut ev = EvalEngine::for_workload(w.clone(), 1);
+        // Bounds off so the sub-floor probe below really simulates.
+        ev.set_bounds(false);
         let cfg = w.baseline_max();
         let (lat, _) = ev.eval(&cfg);
         let per: Vec<Option<u64>> = w
@@ -1600,6 +1725,9 @@ mod tests {
     fn oracle_answers_dominated_deadlocks_without_simulating() {
         let t = trace_of("fig2"); // n = 16: x < 15 deadlocks
         let mut ev = EvalEngine::new(t.clone());
+        // Bounds off: this test exercises the *learned* oracle, and the
+        // analytic floor would otherwise answer everything below x = 15.
+        ev.set_bounds(false);
         let (lat, _) = ev.eval(&[2, 16]);
         assert_eq!(lat, None);
         assert_eq!(ev.n_sim, 1);
@@ -1621,6 +1749,7 @@ mod tests {
         // Identical to an unpruned engine.
         let mut cold = EvalEngine::new(t);
         cold.set_prune(false);
+        cold.set_bounds(false);
         assert_eq!(cold.eval(&[2, 2]).0, None);
         assert_eq!(cold.stats().oracle_hits, 0);
         assert_eq!(cold.n_sim, 1);
@@ -1681,6 +1810,9 @@ mod tests {
     fn early_exit_and_oracle_compose_on_workloads() {
         let w = fig2_workload(&[8, 16]);
         let mut ev = EvalEngine::for_workload(w.clone(), 1);
+        // Bounds off: every probe here sits below the analytic x floor,
+        // and the point is to watch the oracle/early-exit machinery.
+        ev.set_bounds(false);
         // Feasible on n=8, deadlocks on n=16: probed in index order the
         // first time, so both scenarios run.
         let (lat, _) = ev.eval(&[7, 2]);
@@ -1699,6 +1831,7 @@ mod tests {
         // An unpruned engine reaches the same verdicts with full replays.
         let mut off = EvalEngine::for_workload(w, 1);
         off.set_prune(false);
+        off.set_bounds(false);
         for cfg in [[7u32, 2], [6, 2], [7, 3]] {
             assert_eq!(off.eval(&cfg).0, None, "{cfg:?}");
         }
@@ -1812,6 +1945,9 @@ mod tests {
         assert_eq!(stats[0].lane_slots, stats[1].lane_slots);
         assert_eq!(stats[0].sims, stats[1].sims);
         assert_eq!(stats[0].scenario_sims, stats[1].scenario_sims);
+        // The bounds counters are deterministic too.
+        assert_eq!(stats[0].bounds_floor_hits, stats[1].bounds_floor_hits);
+        assert_eq!(stats[0].cap_tightenings, stats[1].cap_tightenings);
     }
 
     /// A sim-budget token makes `drive` stop at a round boundary with
@@ -1846,5 +1982,95 @@ mod tests {
         let mut o = crate::opt::random::RandomSearch::new(7, false);
         assert_eq!(drive(&mut o, &mut cut, &space, 200), 0);
         assert!(cut.truncated());
+    }
+
+    #[test]
+    fn bounds_floor_short_circuit_answers_without_simulating() {
+        let t = trace_of("fig2"); // n = 16: x floors at 15
+        let mut ev = EvalEngine::new(t.clone());
+        assert!(ev.bounds(), "bounds layer is on by default");
+        assert_eq!(ev.depth_bounds().floors, vec![15, 1]);
+        let (lat, br) = ev.eval(&[2, 16]);
+        assert_eq!(lat, None);
+        assert_eq!(br, bram::bram_total(&[2, 16], &ev.widths));
+        assert_eq!(ev.n_sim, 0, "sub-floor proposals never simulate");
+        let s = ev.stats();
+        assert_eq!(s.bounds_floor_hits, 1);
+        assert_eq!(s.oracle_hits, 1, "floor hits count as oracle answers");
+        assert_eq!(s.sims_avoided, 1);
+        assert_eq!(s.cache_hits + s.oracle_hits + s.sims, s.proposals);
+        // The answer is memoized: a repeat is a plain cache hit.
+        ev.eval(&[2, 16]);
+        assert_eq!(ev.stats().bounds_floor_hits, 1);
+        assert_eq!(ev.stats().cache_hits, 1);
+        // The batch path takes the same short-circuit; at the floor
+        // itself the design runs.
+        let out = ev.eval_batch(&[[14u32, 2].into(), [15, 2].into()]);
+        assert_eq!(out[0].0, None);
+        assert!(out[1].0.is_some(), "at the floor the design runs");
+        assert_eq!(ev.stats().bounds_floor_hits, 2);
+        assert_eq!(ev.n_sim, 1);
+        // Bit-identical verdict from an engine with bounds disabled —
+        // it just pays a simulation for it.
+        let mut off = EvalEngine::new(t);
+        off.set_bounds(false);
+        assert!(!off.bounds());
+        assert_eq!(off.eval(&[2, 16]).0, None);
+        assert_eq!(off.stats().bounds_floor_hits, 0);
+        assert_eq!(off.stats().cap_tightenings, 0);
+        assert_eq!(off.n_sim, 1);
+    }
+
+    #[test]
+    fn engine_seeds_oracle_from_analytic_floors() {
+        let t = trace_of("fig2");
+        let mut ev = EvalEngine::new(t);
+        // The one-below-floor frontier is pre-learned: [14, 16] (x one
+        // below its floor, y fully relaxed) dominates every sub-floor x.
+        assert_eq!(ev.oracle().num_infeasible(), 1);
+        // reset_run with a cache clear forgets and re-seeds.
+        ev.reset_run(true);
+        assert_eq!(ev.oracle().num_infeasible(), 1);
+        // Disabling bounds forgets the seeds (and restores the
+        // write-count clamp caps); re-enabling restores both.
+        ev.set_bounds(false);
+        assert_eq!(ev.oracle().num_infeasible(), 0);
+        ev.reset_run(true);
+        assert_eq!(ev.oracle().num_infeasible(), 0, "no seeds while off");
+        ev.set_bounds(true);
+        assert_eq!(ev.oracle().num_infeasible(), 1);
+    }
+
+    #[test]
+    fn bounds_toggle_never_changes_results() {
+        // Histories and fronts are bit-identical with the bounds layer
+        // on or off — only the simulation counts differ (the baselines
+        // include the sub-floor Baseline-Min, so the on-arm strictly
+        // saves at least one simulation).
+        let w = fig2_workload(&[8, 16]);
+        let space = Space::from_workload(&w);
+        let mut histories: Vec<Vec<(Box<[u32]>, Option<u64>, u32)>> = Vec::new();
+        let mut sims = Vec::new();
+        for &on in &[true, false] {
+            let mut ev = EvalEngine::for_workload(w.clone(), 1);
+            ev.set_bounds(on);
+            ev.eval_baselines();
+            let mut o = crate::opt::random::RandomSearch::new(5, false);
+            drive(&mut o, &mut ev, &space, 100);
+            sims.push(ev.stats().sims);
+            histories.push(
+                ev.history
+                    .iter()
+                    .map(|p| (p.depths.clone(), p.latency, p.bram))
+                    .collect(),
+            );
+        }
+        assert_eq!(histories[0], histories[1]);
+        assert!(
+            sims[0] < sims[1],
+            "bounds must save simulations: {} vs {}",
+            sims[0],
+            sims[1]
+        );
     }
 }

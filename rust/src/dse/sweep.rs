@@ -31,7 +31,9 @@
 //! [`Workload`] and the run sizes for the worst case over all of them.
 //! (`"threads"` is accepted as a legacy alias of `"jobs"`; `"prune":
 //! false` disables the simulation-free pruning layer for A/B runs, like
-//! the CLI's `--no-prune`; `"backend": "fast" | "compiled" | "batched"`
+//! the CLI's `--no-prune`; `"bounds": false` likewise disables the
+//! engine side of the analytic depth-bounds pass, like the CLI's
+//! `--no-bounds`; `"backend": "fast" | "compiled" | "batched"`
 //! selects the simulation backend, like the CLI's `--backend` — results
 //! are bit-identical either way, only the throughput profile differs.)
 //! Unknown top-level keys are rejected with the accepted key set, so a
@@ -43,8 +45,9 @@
 //! (design, optimizer, seed) — each identified by a **stable 64-bit id**
 //! (FNV-1a over the design name, its scenario arg-sets, the optimizer,
 //! the seed, and every result-affecting config field: backend, budget,
-//! alpha, prune, sim budget). Because cell results are deterministic
-//! (serial/parallel, pruned/unpruned, and all backends are bit-identical
+//! alpha, prune, bounds, sim budget). Because cell results are
+//! deterministic (serial/parallel, pruned/unpruned, bounded/unbounded,
+//! and all backends are bit-identical
 //! by pinned invariant), a cell id names its result, which is what makes
 //! the following safe:
 //!
@@ -111,6 +114,7 @@ pub struct DesignSpec {
 pub const ACCEPTED_KEYS: &[&str] = &[
     "alpha",
     "backend",
+    "bounds",
     "budget",
     "cell_sim_budget",
     "cell_timeout_secs",
@@ -142,6 +146,10 @@ pub struct SweepConfig {
     /// default; `"prune": false` is the sweep-config escape hatch
     /// mirroring the CLI's `--no-prune`.
     pub prune: bool,
+    /// Engine-side analytic depth bounds (sub-floor short-circuit,
+    /// oracle seeding, tightened clamp caps). On by default; `"bounds":
+    /// false` mirrors the CLI's `--no-bounds`.
+    pub bounds: bool,
     /// Simulation backend (`"backend"` key; mirrors the CLI's
     /// `--backend {fast,compiled,batched}`).
     pub backend: BackendKind,
@@ -313,6 +321,7 @@ impl SweepConfig {
             jobs,
             alpha: j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.7),
             prune: j.get("prune").and_then(|v| v.as_bool()).unwrap_or(true),
+            bounds: j.get("bounds").and_then(|v| v.as_bool()).unwrap_or(true),
             backend,
             out_dir: j
                 .get("out_dir")
@@ -348,12 +357,13 @@ impl SweepConfig {
     /// cell is flagged in its row instead).
     fn fingerprint(&self) -> String {
         format!(
-            "v1|budget={}|alpha={}|prune={}|backend={}|sim_budget={:?}",
+            "v1|budget={}|alpha={}|prune={}|backend={}|sim_budget={:?}|bounds={}",
             self.budget,
             self.alpha,
             self.prune,
             self.backend.name(),
-            self.cell_sim_budget
+            self.cell_sim_budget,
+            self.bounds
         )
     }
 
@@ -461,6 +471,11 @@ pub struct SweepRow {
     pub clamp_rate: f64,
     /// Simulations avoided outright by the pruning layer.
     pub sims_avoided: u64,
+    /// Proposals answered by the analytic sub-floor short-circuit.
+    pub bounds_floor_hits: u64,
+    /// Channels whose clamp cap the analytic bound tightened below the
+    /// write count (static per workload).
+    pub cap_tightenings: u64,
     /// Mean depth-vector lanes per lane-batched graph walk (0 unless
     /// the batched backend ran).
     pub lanes_per_walk: f64,
@@ -497,6 +512,8 @@ fn row_to_json(r: &SweepRow, include_elapsed: bool) -> Json {
         ("oracle_rate", Json::Num(r.oracle_rate)),
         ("clamp_rate", Json::Num(r.clamp_rate)),
         ("sims_avoided", Json::Num(r.sims_avoided as f64)),
+        ("bounds_floor_hits", Json::Num(r.bounds_floor_hits as f64)),
+        ("cap_tightenings", Json::Num(r.cap_tightenings as f64)),
         ("lanes_per_walk", Json::Num(r.lanes_per_walk)),
         ("batch_occupancy", Json::Num(r.batch_occupancy)),
         ("walks_saved", Json::Num(r.walks_saved as f64)),
@@ -543,6 +560,8 @@ fn row_from_json(j: &Json) -> Result<SweepRow> {
         oracle_rate: num("oracle_rate")?,
         clamp_rate: num("clamp_rate")?,
         sims_avoided: num("sims_avoided")? as u64,
+        bounds_floor_hits: num("bounds_floor_hits")? as u64,
+        cap_tightenings: num("cap_tightenings")? as u64,
         lanes_per_walk: num("lanes_per_walk")?,
         batch_occupancy: num("batch_occupancy")?,
         walks_saved: num("walks_saved")? as u64,
@@ -1218,6 +1237,7 @@ fn run_cell(
         cfg.backend,
     );
     ev.set_prune(cfg.prune);
+    ev.set_bounds(cfg.bounds);
     let (maxp, minp) = ev.eval_baselines();
     let (base_lat, base_bram) = (
         maxp.latency
@@ -1251,6 +1271,8 @@ fn run_cell(
         oracle_rate: ev.stats().oracle_rate(),
         clamp_rate: ev.stats().clamp_rate(),
         sims_avoided: ev.stats().sims_avoided,
+        bounds_floor_hits: ev.stats().bounds_floor_hits,
+        cap_tightenings: ev.stats().cap_tightenings,
         lanes_per_walk: ev.stats().lanes_per_walk(),
         batch_occupancy: ev.stats().batch_occupancy(),
         walks_saved: ev.stats().walks_saved(),
@@ -1307,6 +1329,8 @@ fn write_aggregates(
         "oracle_rate",
         "clamp_rate",
         "sims_avoided",
+        "bounds_floor_hits",
+        "cap_tightenings",
         "lanes_per_walk",
         "batch_occupancy",
         "walks_saved",
@@ -1331,6 +1355,8 @@ fn write_aggregates(
             r.oracle_rate.to_string(),
             r.clamp_rate.to_string(),
             r.sims_avoided.to_string(),
+            r.bounds_floor_hits.to_string(),
+            r.cap_tightenings.to_string(),
             r.lanes_per_walk.to_string(),
             r.batch_occupancy.to_string(),
             r.walks_saved.to_string(),
@@ -1391,6 +1417,7 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                 format!("{:.0}%", r.oracle_rate * 100.0),
                 format!("{:.0}%", r.clamp_rate * 100.0),
                 r.sims_avoided.to_string(),
+                r.bounds_floor_hits.to_string(),
                 format!("{:.1}", r.lanes_per_walk),
                 format!("{:.0}%", r.batch_occupancy * 100.0),
                 r.front_size.to_string(),
@@ -1407,7 +1434,7 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
     report::markdown_table(
         &[
             "design", "optimizer", "seed", "scen", "secs", "sims", "incr%", "replay%", "orcl%",
-            "clmp%", "avoid", "ln/wk", "occ%", "front", "lat×", "BRAM↓", "rescue", "cut",
+            "clmp%", "avoid", "flr", "ln/wk", "occ%", "front", "lat×", "BRAM↓", "rescue", "cut",
         ],
         &table_rows,
     )
@@ -1437,6 +1464,7 @@ mod tests {
         assert_eq!(cfg.alpha, 0.7);
         assert_eq!(cfg.jobs, 1, "threads accepted as legacy alias");
         assert!(cfg.prune, "pruning defaults on");
+        assert!(cfg.bounds, "bounds default on");
         assert!(!cfg.resume);
         assert_eq!(cfg.max_retries, 1);
         assert_eq!(cfg.retry_backoff_ms, 250);
@@ -1452,6 +1480,12 @@ mod tests {
         )
         .unwrap();
         assert!(!SweepConfig::from_json(&j).unwrap().prune);
+
+        let j = Json::parse(
+            r#"{"designs": ["fig2"], "optimizers": ["greedy"], "bounds": false}"#,
+        )
+        .unwrap();
+        assert!(!SweepConfig::from_json(&j).unwrap().bounds);
 
         let bad = Json::parse(r#"{"designs": ["nope"], "optimizers": ["greedy"]}"#).unwrap();
         assert!(SweepConfig::from_json(&bad).is_err());
@@ -1557,6 +1591,8 @@ mod tests {
             oracle_rate: 0.1,
             clamp_rate: 0.0,
             sims_avoided: 7,
+            bounds_floor_hits: 3,
+            cap_tightenings: 1,
             lanes_per_walk: 3.5,
             batch_occupancy: 0.875,
             walks_saved: 11,
@@ -1608,6 +1644,8 @@ mod tests {
         assert_eq!(done.status, CellStatus::Done { truncated: false });
         let r = done.row.as_ref().unwrap();
         assert_eq!(r.sims, row.sims);
+        assert_eq!(r.bounds_floor_hits, 3);
+        assert_eq!(r.cap_tightenings, 1);
         assert_eq!(r.incr_rate, row.incr_rate, "floats roundtrip exactly");
         assert_eq!(r.elapsed_secs, row.elapsed_secs);
         assert!(r.min_deadlocked);
@@ -1667,6 +1705,31 @@ mod tests {
         assert!(on[0].sims <= off[0].sims, "pruning must never add sims");
         assert_eq!(off[0].oracle_rate, 0.0);
         assert_eq!(off[0].sims_avoided, 0);
+    }
+
+    #[test]
+    fn bounds_toggle_changes_cost_never_results() {
+        let grid = |bounds: bool| {
+            let j = Json::parse(&format!(
+                r#"{{"designs": [{{"design": "fig2", "scenarios": [[8], [16]]}}],
+                    "optimizers": ["grouped_sa"], "budget": 80, "seeds": [1],
+                    "jobs": 1, "bounds": {bounds}}}"#
+            ))
+            .unwrap();
+            run_sweep(&SweepConfig::from_json(&j).unwrap()).unwrap()
+        };
+        let on = grid(true);
+        let off = grid(false);
+        assert_eq!(on[0].star_latency, off[0].star_latency);
+        assert_eq!(on[0].star_bram, off[0].star_bram);
+        assert_eq!(on[0].front_size, off[0].front_size);
+        assert_eq!(on[0].evals, off[0].evals);
+        assert!(on[0].sims <= off[0].sims, "bounds must never add sims");
+        // The Baseline-Min probe sits below fig2's analytic floor, so the
+        // bounded run answers at least that one without simulating.
+        assert!(on[0].bounds_floor_hits >= 1);
+        assert_eq!(off[0].bounds_floor_hits, 0);
+        assert_eq!(off[0].cap_tightenings, 0);
     }
 
     #[test]

@@ -53,7 +53,14 @@
 //!   [`FeasibilityOracle`](opt::dominance::FeasibilityOracle) (bounded
 //!   dominance antichains over known deadlocks / known-feasible configs)
 //!   and the occupancy-clamp
-//!   [`Canonicalizer`](opt::dominance::Canonicalizer).
+//!   [`Canonicalizer`](opt::dominance::Canonicalizer). [`opt::bounds`]
+//!   is the analytic search-space collapse pass: per-channel deadlock
+//!   floors and tightened clamp caps proved once per workload from the
+//!   compiled event graph ([`DepthBounds`](opt::bounds::DepthBounds)),
+//!   shrinking [`opt::Space`], pre-seeding the oracle and
+//!   the clamp, short-circuiting sub-floor proposals in the engine
+//!   (`--no-bounds` toggles the engine side for A/B runs), and giving
+//!   greedy/the hunter their analytic starting points.
 //! - [`dse`] — the DSE engine layer: [`dse::EvalEngine`] owns the
 //!   black-box evaluation `x → (f_lat, f_bram)` over a workload — a
 //!   persistent worker pool (threads spawned once, each with a cloned

@@ -1,0 +1,246 @@
+//! Analytic per-channel depth bounds — the simulation-free search-space
+//! collapse pass.
+//!
+//! The DSE loop treats FIFO sizing as black-box optimization because
+//! simulation is the only *complete* analysis for data-dependent designs
+//! — but the compiled event graph ([`sim::compiled`]) makes two partial
+//! analyses cheap and exact on the recorded trace:
+//!
+//! 1. **Deadlock floors.** A full-FIFO back-edge (write `w` waits on
+//!    read `w − d`) closes a cycle whenever some write `w ≥ j + d` is
+//!    already an *ancestor* of read `j` in the unconstrained DAG — the
+//!    write-lead over read commits along program order. The largest such
+//!    lead, `max_j (W_anc(j) − j)`, is a per-channel depth floor: every
+//!    configuration below it deadlocks **regardless of every other
+//!    channel's depth**, so the engine can answer it without simulating
+//!    and the optimizers never need to sample there.
+//! 2. **Tightened caps.** Above the PR 4 write-count cap the channel's
+//!    constraint set is *empty*; the analytic cap shows where it becomes
+//!    *implied* instead: once every potentially-binding full-FIFO edge is
+//!    subsumed by a ≥ 2-edge DAG path (each edge costs ≥ 1 cycle, which
+//!    covers the BRAM-class weight-2 read edge), the fixpoint cannot
+//!    move, for any sibling depths and either read-latency class. The
+//!    final cap is `min(write_cap, max(analytic_cap, 2))` — never wider
+//!    than PR 4's, so the SRL/BRAM-class clamp soundness argument carries
+//!    over unchanged.
+//!
+//! Both bounds are computed once per trace by
+//! [`EventGraph::analytic_depth_bounds`] and max-merged over a workload's
+//! scenarios (a deadlock in *any* scenario makes the workload
+//! infeasible; the cap must pin the schedule in *every* scenario — the
+//! same merge rule as the write-count caps and
+//! [`Workload::upper_bounds`]). They feed [`opt::Space`](super::Space)
+//! (shrunk per-dimension candidate ranges), the
+//! [`EvalEngine`](crate::dse::EvalEngine) (floor short-circuit, oracle
+//! seeding, tightened clamp caps) and the `greedy`/`vitis_hunter`
+//! starting points.
+//!
+//! [`sim::compiled`]: crate::sim::compiled
+//! [`EventGraph::analytic_depth_bounds`]: crate::sim::compiled::EventGraph
+//! [`Workload::upper_bounds`]: crate::trace::workload::Workload::upper_bounds
+
+use super::dominance;
+use crate::sim::compiled::EventGraph;
+use crate::trace::workload::Workload;
+use crate::trace::{ChanOpIndex, Trace};
+
+/// Where a reported bound comes from (for `fifoadvisor info`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundSource {
+    /// Derived from the event graph (floor > 1, or cap < write count).
+    Analytic,
+    /// The trivial bound: floor 1 / the PR 4 write-count cap.
+    WriteCount,
+}
+
+/// Per-channel analytic depth bounds for one trace or a whole workload.
+#[derive(Debug, Clone)]
+pub struct DepthBounds {
+    /// Deadlock floors: `depth[c] < floors[c]` ⇒ deadlock, for any other
+    /// depths (0 on never-written channels — nothing to prove there).
+    pub floors: Vec<u32>,
+    /// Clamp caps: `min(write_cap, max(analytic_cap, 2))`, schedule-
+    /// invariant above within a read-latency class. Always ≥ `floors`.
+    pub caps: Vec<u32>,
+    /// The PR 4 write-count caps the analytic caps tightened from.
+    write_caps: Vec<u32>,
+}
+
+impl DepthBounds {
+    fn combine(analytic: (Vec<u32>, Vec<u32>), write_caps: Vec<u32>) -> DepthBounds {
+        let (floors, acaps) = analytic;
+        let caps: Vec<u32> = acaps
+            .iter()
+            .zip(&write_caps)
+            .map(|(&a, &w)| w.min(a.max(2)))
+            .collect();
+        for (ch, (&f, &c)) in floors.iter().zip(&caps).enumerate() {
+            debug_assert!(f <= c, "channel {ch}: floor {f} above cap {c}");
+        }
+        DepthBounds {
+            floors,
+            caps,
+            write_caps,
+        }
+    }
+
+    /// Bounds for a single trace.
+    pub fn for_trace(trace: &Trace) -> DepthBounds {
+        let index = ChanOpIndex::build(trace);
+        let g = EventGraph::compile(trace, &index);
+        Self::combine(g.analytic_depth_bounds(), dominance::trace_caps(trace))
+    }
+
+    /// Max-merged bounds over every scenario of a workload.
+    pub fn for_workload(workload: &Workload) -> DepthBounds {
+        let mut floors = vec![0u32; workload.num_fifos()];
+        let mut caps = vec![0u32; workload.num_fifos()];
+        for s in workload.scenarios() {
+            let b = Self::for_trace(&s.trace);
+            for ch in 0..floors.len() {
+                floors[ch] = floors[ch].max(b.floors[ch]);
+                caps[ch] = caps[ch].max(b.caps[ch]);
+            }
+        }
+        DepthBounds {
+            floors,
+            caps,
+            write_caps: dominance::write_caps(workload),
+        }
+    }
+
+    /// Number of channels.
+    pub fn num_fifos(&self) -> usize {
+        self.floors.len()
+    }
+
+    /// The untightened PR 4 write-count caps.
+    pub fn write_caps(&self) -> &[u32] {
+        &self.write_caps
+    }
+
+    /// Source of a channel's lower bound.
+    pub fn floor_source(&self, ch: usize) -> BoundSource {
+        if self.floors[ch] > 1 {
+            BoundSource::Analytic
+        } else {
+            BoundSource::WriteCount
+        }
+    }
+
+    /// Source of a channel's upper cap.
+    pub fn cap_source(&self, ch: usize) -> BoundSource {
+        if self.caps[ch] < self.write_caps[ch] {
+            BoundSource::Analytic
+        } else {
+            BoundSource::WriteCount
+        }
+    }
+
+    /// Channels whose cap the analysis tightened below the write count.
+    pub fn num_cap_tightenings(&self) -> usize {
+        (0..self.num_fifos())
+            .filter(|&ch| self.cap_source(ch) == BoundSource::Analytic)
+            .count()
+    }
+
+    /// Channels with a non-trivial deadlock floor (> the search minimum
+    /// of 2 — the ones the engine's short-circuit and the oracle seeds
+    /// can actually exploit).
+    pub fn num_floored(&self) -> usize {
+        self.floors.iter().filter(|&&f| f > 2).count()
+    }
+
+    /// Does this configuration sit below some channel's deadlock floor
+    /// (⇒ certainly infeasible, no simulation needed)?
+    pub fn below_floor(&self, depths: &[u32]) -> bool {
+        debug_assert_eq!(depths.len(), self.floors.len());
+        depths.iter().zip(&self.floors).any(|(&d, &f)| d < f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::sim::fast::FastSim;
+    use crate::trace::collect_trace;
+    use std::sync::Arc;
+
+    fn fig2_trace(n: i64) -> Trace {
+        let bd = bench_suite::build("fig2");
+        collect_trace(&bd.design, &[n]).unwrap()
+    }
+
+    #[test]
+    fn fig2_floor_matches_paper_threshold() {
+        let b = DepthBounds::for_trace(&fig2_trace(16));
+        assert_eq!(b.floors, vec![15, 1]);
+        assert_eq!(b.caps, vec![16, 16]);
+        assert_eq!(b.floor_source(0), BoundSource::Analytic);
+        assert_eq!(b.floor_source(1), BoundSource::WriteCount);
+        // Feed-forward producer: no cap tightens below the write count.
+        assert_eq!(b.cap_source(0), BoundSource::WriteCount);
+        assert_eq!(b.num_cap_tightenings(), 0);
+        assert_eq!(b.num_floored(), 1);
+        assert!(b.below_floor(&[14, 16]));
+        assert!(!b.below_floor(&[15, 2]));
+    }
+
+    #[test]
+    fn workload_merge_takes_worst_scenario() {
+        let bd = bench_suite::build("fig2");
+        let w = Workload::from_design_args(&bd.design, &[vec![8], vec![16]]).unwrap();
+        let b = DepthBounds::for_workload(&w);
+        // n16 dominates the x floor; caps merge to the larger write count.
+        assert_eq!(b.floors, vec![15, 1]);
+        assert_eq!(b.caps, vec![16, 16]);
+    }
+
+    #[test]
+    fn flowgnn_msg_floors_equal_burst_sizes() {
+        // The gather lanes read `deg` before draining `msg`, and `deg` is
+        // written only after the full edge scan — so each msg FIFO's
+        // analytic floor is exactly its data-dependent burst size
+        // (the threshold flowgnn's own tests establish by simulation).
+        let bd = bench_suite::build("flowgnn_pna");
+        let t = collect_trace(&bd.design, &bd.args).unwrap();
+        let b = DepthBounds::for_trace(&t);
+        for lane in 0..crate::bench_suite::flowgnn::LANES {
+            assert_eq!(
+                b.floors[lane] as u64, t.channels[lane].writes,
+                "lane {lane} floor must equal its burst"
+            );
+        }
+        assert!(b.num_floored() > 0);
+    }
+
+    #[test]
+    fn floors_are_sound_across_the_suite() {
+        // For every shipped design: one-below-floor with every other
+        // channel fully relaxed must deadlock (the floor's defining
+        // property), checked against the event-driven simulator.
+        for name in bench_suite::all_names() {
+            let bd = bench_suite::build(name);
+            let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+            let b = DepthBounds::for_trace(&t);
+            let relaxed: Vec<u32> = t
+                .channels
+                .iter()
+                .map(|c| (c.writes.max(2).min(u32::MAX as u64)) as u32)
+                .collect();
+            let mut s = FastSim::new(t.clone());
+            for (ch, &f) in b.floors.iter().enumerate() {
+                assert!(f <= b.caps[ch], "{name} ch {ch}: floor above cap");
+                if f > 2 {
+                    let mut cfg = relaxed.clone();
+                    cfg[ch] = f - 1;
+                    assert!(
+                        s.simulate(&cfg).is_deadlock(),
+                        "{name} ch {ch}: below floor {f} must deadlock"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -80,17 +80,17 @@ pub struct Canonicalizer {
 /// canonicalizer and the oracle use — they must agree byte-for-byte, or
 /// a raw proposal and its canonical point could classify differently.
 #[inline]
-fn write_cap(writes: u64) -> u32 {
+pub(crate) fn write_cap(writes: u64) -> u32 {
     (writes.min(u32::MAX as u64) as u32).max(2)
 }
 
 /// Per-channel clamp caps from one trace's write counts.
-fn trace_caps(trace: &Trace) -> Vec<u32> {
+pub(crate) fn trace_caps(trace: &Trace) -> Vec<u32> {
     trace.channels.iter().map(|c| write_cap(c.writes)).collect()
 }
 
 /// Merged (max-over-scenarios) per-channel clamp caps for a workload.
-fn write_caps(workload: &Workload) -> Vec<u32> {
+pub(crate) fn write_caps(workload: &Workload) -> Vec<u32> {
     let mut caps = vec![2u32; workload.num_fifos()];
     for s in workload.scenarios() {
         for (cap, ch) in caps.iter_mut().zip(&s.trace.channels) {

@@ -1,9 +1,11 @@
 //! The greedy heuristic (§III-D), adopted from INR-Arch: rank FIFOs by
 //! their observed occupancy under the baseline configuration, then — from
-//! largest to smallest — try collapsing each FIFO to depth 2, keeping the
-//! reduction unless it deadlocks or inflates latency beyond a fixed
-//! percentage of the baseline. Deterministic; chooses its own stopping
-//! point (between `num_fifos` and ~2·`num_fifos` + 1 evaluations).
+//! largest to smallest — try collapsing each FIFO to its search minimum
+//! (`max(2, analytic floor)` — collapsing below the floor is a proven
+//! deadlock, so the trial would be wasted), keeping the reduction unless
+//! it deadlocks or inflates latency beyond a fixed percentage of the
+//! baseline. Deterministic; chooses its own stopping point (between
+//! `num_fifos` and ~2·`num_fifos` + 1 evaluations).
 //!
 //! Ask/tell phases: one stats evaluation of the baseline (the occupancy
 //! ranking — requested through [`Optimizer::wants_stats`]), then a
@@ -34,6 +36,9 @@ pub struct Greedy {
     order: Vec<usize>,
     pos: usize,
     cur: Vec<u32>,
+    /// Per-channel collapse targets (`space.min_depth`), captured at
+    /// baseline time.
+    floors: Vec<u32>,
     saved: u32,
     trying: Option<usize>,
     max_lat: u64,
@@ -54,6 +59,7 @@ impl Greedy {
             order: Vec::new(),
             pos: 0,
             cur: Vec::new(),
+            floors: Vec::new(),
             saved: 0,
             trying: None,
             max_lat: 0,
@@ -80,6 +86,9 @@ impl Optimizer for Greedy {
                 // Baseline-Max: every FIFO at its upper bound (the space
                 // carries the trace's `u_i`, already floored at 2).
                 self.cur = ctx.space.bounds.iter().map(|&u| u.max(2)).collect();
+                self.floors = (0..ctx.space.num_fifos())
+                    .map(|i| ctx.space.min_depth(i).min(ctx.space.bounds[i].max(2)))
+                    .collect();
                 self.hint_buf.push(None);
                 vec![self.cur.clone().into()]
             }
@@ -89,7 +98,7 @@ impl Optimizer for Greedy {
                         break;
                     }
                     let i = self.order[self.pos];
-                    if self.cur[i] <= 2 {
+                    if self.cur[i] <= self.floors[i] {
                         self.pos += 1;
                         continue;
                     }
@@ -97,7 +106,7 @@ impl Optimizer for Greedy {
                     // base — report that base as the locality hint.
                     self.hint_buf.push(Some(self.cur.clone().into()));
                     self.saved = self.cur[i];
-                    self.cur[i] = 2;
+                    self.cur[i] = self.floors[i];
                     self.trying = Some(i);
                     return vec![self.cur.clone().into()];
                 }

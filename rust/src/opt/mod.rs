@@ -47,8 +47,14 @@
 //! antichains over known deadlocks / known-feasible configs) and the
 //! occupancy-clamp [`Canonicalizer`](dominance::Canonicalizer). Like
 //! hints, pruning never changes results — only how many simulations they
-//! cost.
+//! cost. [`bounds`] adds the analytic depth-bounds pass on top: per-
+//! channel deadlock floors and tightened clamp caps mined from the
+//! compiled event graph, which shrink every [`Space`] dimension, seed
+//! the oracle, and let the engine answer sub-floor proposals with zero
+//! simulation (`--no-bounds` disables the engine side, mirroring
+//! `--no-prune`).
 
+pub mod bounds;
 pub mod dominance;
 pub mod exhaustive;
 pub mod greedy;

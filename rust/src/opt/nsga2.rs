@@ -357,7 +357,9 @@ mod tests {
             for ids in &space.groups {
                 let mx = ids.iter().map(|&i| p.depths[i]).max().unwrap();
                 for &i in ids {
-                    assert!(p.depths[i] == mx || p.depths[i] == space.bounds[i].max(2));
+                    let hi = space.bounds[i].max(2);
+                    let d = p.depths[i];
+                    assert!(d == mx || d == hi || d == space.min_depth(i).min(hi));
                 }
             }
         }

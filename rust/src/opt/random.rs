@@ -123,11 +123,12 @@ mod tests {
         for p in &ev.history {
             for ids in &space.groups {
                 // All members share the group draw, modulo per-member
-                // bound clamping.
+                // bound/floor clamping.
                 let draws: Vec<u32> = ids.iter().map(|&i| p.depths[i]).collect();
                 let max = *draws.iter().max().unwrap();
                 for (&i, &d) in ids.iter().zip(&draws) {
-                    assert!(d == max || d == space.bounds[i].max(2));
+                    let hi = space.bounds[i].max(2);
+                    assert!(d == max || d == hi || d == space.min_depth(i).min(hi));
                 }
             }
         }

@@ -281,7 +281,8 @@ mod tests {
         let feasible = ev.history.iter().filter(|p| p.is_feasible()).count();
         assert!(feasible >= DEFAULT_CHAINS, "at least the chain starts");
         // Exploration: fig2's pruned space has exactly 4 configurations
-        // ({2,16} × {2,16}); SA should visit all of them.
+        // ({15,16} × {2,16} after the analytic floor collapse); SA
+        // should visit all of them.
         let distinct: std::collections::HashSet<_> =
             ev.history.iter().map(|p| p.depths.clone()).collect();
         assert_eq!(distinct.len(), 4);
@@ -296,7 +297,8 @@ mod tests {
                 let max = ids.iter().map(|&i| p.depths[i]).max().unwrap();
                 for &i in ids {
                     let d = p.depths[i];
-                    assert!(d == max || d == space.bounds[i].max(2));
+                    let hi = space.bounds[i].max(2);
+                    assert!(d == max || d == hi || d == space.min_depth(i).min(hi));
                 }
             }
         }

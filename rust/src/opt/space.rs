@@ -1,7 +1,18 @@
 //! The pruned search space (§III-C): per-FIFO candidate depth lists from
 //! the BRAM model's plateau breakpoints, plus the stream-array group
 //! structure the grouped optimizers exploit (§III-D).
+//!
+//! Since PR 8 the space is additionally collapsed by the analytic depth
+//! bounds ([`super::bounds`]): each dimension's range is
+//! `[max(2, floor), min(upper, cap)]` — candidates below a channel's
+//! deadlock floor are provably infeasible and candidates above its
+//! tightened cap are schedule-equivalent to the cap, so no optimizer
+//! needs to sample either region. The floor itself is always a candidate
+//! (it need not be a BRAM breakpoint — fig2's x channel floors at 15).
+//! Use the `*_unbounded` constructors to reconstruct the PR 7 space for
+//! A/B measurement.
 
+use super::bounds::DepthBounds;
 use crate::bram::candidate_depths;
 use crate::trace::Trace;
 
@@ -9,55 +20,104 @@ use crate::trace::Trace;
 #[derive(Debug, Clone)]
 pub struct Space {
     /// Per-channel sorted candidate depths (each maximally utilizes its
-    /// BRAM allocation; always contains 2 and the upper bound).
+    /// BRAM allocation; always contains `max(2, floor)` and the upper
+    /// bound).
     pub per_fifo: Vec<Vec<u32>>,
-    /// Per-channel upper bounds `u_i`.
+    /// Per-channel upper bounds `u_i` (tightened by the analytic caps).
     pub bounds: Vec<u32>,
+    /// Per-channel analytic deadlock floors (0/1 where trivial; the
+    /// effective search minimum is `max(2, floors[i])`).
+    pub floors: Vec<u32>,
     /// Per-channel element widths (bits).
     pub widths: Vec<u32>,
     /// Stream-array groups: channel indices per group (singletons for
     /// ungrouped channels).
     pub groups: Vec<Vec<usize>>,
     /// Per-group candidate depths (breakpoints of the group's widest
-    /// member at the group's largest bound).
+    /// member at the group's largest bound, floored at the group's
+    /// largest member floor).
     pub per_group: Vec<Vec<u32>>,
 }
 
 impl Space {
-    /// Build the pruned space for a trace.
+    /// Build the pruned space for a trace (bounds collapsed by the
+    /// analytic depth-bounds pass).
     pub fn from_trace(trace: &Trace) -> Space {
         let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
-        Self::build(trace.upper_bounds(), widths, trace.groups())
+        let b = DepthBounds::for_trace(trace);
+        Self::build(trace.upper_bounds(), Some(&b), widths, trace.groups())
+    }
+
+    /// [`from_trace`](Self::from_trace) without the analytic collapse —
+    /// the PR 7 space, kept for A/B measurement (§Perf 11).
+    pub fn from_trace_unbounded(trace: &Trace) -> Space {
+        let widths: Vec<u32> = trace.channels.iter().map(|c| c.width_bits).collect();
+        Self::build(trace.upper_bounds(), None, widths, trace.groups())
     }
 
     /// Build the pruned space for a multi-trace
     /// [`Workload`](crate::trace::workload::Workload): bounds are the
-    /// merged (max-over-scenarios) upper bounds, topology from the
-    /// primary scenario. For single-scenario workloads this equals
-    /// [`from_trace`](Self::from_trace) on the trace.
+    /// merged (max-over-scenarios) upper bounds and analytic bounds,
+    /// topology from the primary scenario. For single-scenario workloads
+    /// this equals [`from_trace`](Self::from_trace) on the trace.
     pub fn from_workload(workload: &crate::trace::workload::Workload) -> Space {
         let primary = workload.primary();
         let widths: Vec<u32> = primary.channels.iter().map(|c| c.width_bits).collect();
-        Self::build(workload.upper_bounds(), widths, primary.groups())
+        let b = DepthBounds::for_workload(workload);
+        Self::build(workload.upper_bounds(), Some(&b), widths, primary.groups())
     }
 
-    fn build(bounds: Vec<u32>, widths: Vec<u32>, groups: Vec<Vec<usize>>) -> Space {
+    /// [`from_workload`](Self::from_workload) without the analytic
+    /// collapse (the PR 7 space).
+    pub fn from_workload_unbounded(workload: &crate::trace::workload::Workload) -> Space {
+        let primary = workload.primary();
+        let widths: Vec<u32> = primary.channels.iter().map(|c| c.width_bits).collect();
+        Self::build(workload.upper_bounds(), None, widths, primary.groups())
+    }
+
+    fn build(
+        uppers: Vec<u32>,
+        depth_bounds: Option<&DepthBounds>,
+        widths: Vec<u32>,
+        groups: Vec<Vec<usize>>,
+    ) -> Space {
+        let n = uppers.len();
+        let bounds: Vec<u32> = match depth_bounds {
+            Some(b) => uppers
+                .iter()
+                .zip(&b.caps)
+                .map(|(&u, &c)| u.min(c).max(2))
+                .collect(),
+            None => uppers,
+        };
+        let floors: Vec<u32> = match depth_bounds {
+            Some(b) => b
+                .floors
+                .iter()
+                .zip(&bounds)
+                .map(|(&f, &u)| f.min(u.max(2)))
+                .collect(),
+            None => vec![0; n],
+        };
         let per_fifo: Vec<Vec<u32>> = bounds
             .iter()
             .zip(&widths)
-            .map(|(&u, &w)| candidate_depths(w, u))
+            .zip(&floors)
+            .map(|((&u, &w), &f)| floored_candidates(w, u, f))
             .collect();
         let per_group = groups
             .iter()
             .map(|ids| {
                 let u = ids.iter().map(|&i| bounds[i]).max().unwrap();
                 let w = ids.iter().map(|&i| widths[i]).max().unwrap();
-                candidate_depths(w, u)
+                let f = ids.iter().map(|&i| floors[i]).max().unwrap();
+                floored_candidates(w, u, f.min(u.max(2)))
             })
             .collect();
         Space {
             per_fifo,
             bounds,
+            floors,
             widths,
             groups,
             per_group,
@@ -69,31 +129,55 @@ impl Space {
         self.per_fifo.len()
     }
 
+    /// Effective per-channel search minimum: `max(2, floors[i])`.
+    #[inline]
+    pub fn min_depth(&self, i: usize) -> u32 {
+        self.floors[i].max(2)
+    }
+
     /// log10 of the pruned per-FIFO space size (design-space cardinality
     /// diagnostic; the raw space is Π(uᵢ - 1)).
     pub fn log10_size(&self) -> f64 {
         self.per_fifo.iter().map(|c| (c.len() as f64).log10()).sum()
     }
 
-    /// Clamp an arbitrary depth vector into bounds (≥2, ≤uᵢ).
+    /// Clamp an arbitrary depth vector into bounds (≥ max(2, floor),
+    /// ≤ uᵢ).
     pub fn clamp(&self, depths: &mut [u32]) {
-        for (d, &u) in depths.iter_mut().zip(&self.bounds) {
-            *d = (*d).clamp(2, u.max(2));
+        for (i, d) in depths.iter_mut().enumerate() {
+            let hi = self.bounds[i].max(2);
+            *d = (*d).clamp(self.min_depth(i).min(hi), hi);
         }
     }
 
     /// Expand per-group depths into a full per-channel configuration
-    /// (each member clamped to its own bound).
+    /// (each member clamped to its own floor/bound).
     pub fn expand_group_depths(&self, group_depths: &[u32]) -> Vec<u32> {
         assert_eq!(group_depths.len(), self.groups.len());
         let mut out = vec![2u32; self.num_fifos()];
         for (g, ids) in self.groups.iter().enumerate() {
             for &i in ids {
-                out[i] = group_depths[g].clamp(2, self.bounds[i].max(2));
+                let hi = self.bounds[i].max(2);
+                out[i] = group_depths[g].clamp(self.min_depth(i).min(hi), hi);
             }
         }
         out
     }
+}
+
+/// The candidate list for one dimension: the BRAM plateau breakpoints in
+/// `[lo, u]` with the floor itself prepended when it is not a breakpoint
+/// (`lo = max(2, floor)`).
+fn floored_candidates(width: u32, upper: u32, floor: u32) -> Vec<u32> {
+    let lo = floor.max(2).min(upper.max(2));
+    let mut c: Vec<u32> = candidate_depths(width, upper)
+        .into_iter()
+        .filter(|&d| d >= lo)
+        .collect();
+    if c.first() != Some(&lo) {
+        c.insert(0, lo);
+    }
+    c
 }
 
 #[cfg(test)]
@@ -112,8 +196,8 @@ mod tests {
     fn candidates_bounded_and_sorted() {
         let s = space_for("gemm");
         assert_eq!(s.num_fifos(), 84);
-        for (c, &u) in s.per_fifo.iter().zip(&s.bounds) {
-            assert_eq!(c[0], 2);
+        for (i, (c, &u)) in s.per_fifo.iter().zip(&s.bounds).enumerate() {
+            assert_eq!(c[0], s.min_depth(i).min(u.max(2)));
             assert_eq!(*c.last().unwrap(), u.max(2));
             assert!(c.windows(2).all(|w| w[0] < w[1]));
         }
@@ -141,7 +225,9 @@ mod tests {
         assert!(s.groups.len() < s.num_fifos());
         assert_eq!(s.groups.len(), s.per_group.len());
         let cfg = s.expand_group_depths(&vec![2; s.groups.len()]);
-        assert!(cfg.iter().all(|&d| d == 2));
+        for (i, &d) in cfg.iter().enumerate() {
+            assert_eq!(d, s.min_depth(i).min(s.bounds[i].max(2)));
+        }
         let maxes: Vec<u32> = s
             .groups
             .iter()
@@ -166,14 +252,36 @@ mod tests {
         let s = Space::from_workload(&w);
         // Bounds come from the larger scenario (n = 16 writes per chan).
         assert_eq!(s.bounds, vec![16, 16]);
+        // ...and so do the floors (x deadlocks below 15 at n = 16).
+        assert_eq!(s.floors, vec![15, 1]);
         // A single-scenario workload space equals the trace space.
         let w1 = Workload::from_design(&bd.design, &scen[..1]).unwrap();
         let t = w1.primary().clone();
         let sw = Space::from_workload(&w1);
         let st = Space::from_trace(&t);
         assert_eq!(sw.bounds, st.bounds);
+        assert_eq!(sw.floors, st.floors);
         assert_eq!(sw.per_fifo, st.per_fifo);
         assert_eq!(sw.groups, st.groups);
+    }
+
+    #[test]
+    fn floors_collapse_fig2_candidates() {
+        let s = space_for("fig2");
+        // x floors at 15 (not a BRAM breakpoint — prepended), y is free.
+        assert_eq!(s.per_fifo[0], vec![15, 16]);
+        assert_eq!(s.per_fifo[0][0], s.min_depth(0));
+        assert!(s.per_fifo[1].contains(&2));
+        // The unbounded space still starts every dimension at 2.
+        let bd = bench_suite::build("fig2");
+        let t = collect_trace(&bd.design, &bd.args).unwrap();
+        let u = Space::from_trace_unbounded(&t);
+        assert_eq!(u.floors, vec![0, 0]);
+        assert_eq!(u.per_fifo[0][0], 2);
+        // Clamping pulls sub-floor depths up to the floor.
+        let mut cfg = vec![2u32, 2];
+        s.clamp(&mut cfg);
+        assert_eq!(cfg, vec![15, 2]);
     }
 
     #[test]
@@ -181,7 +289,9 @@ mod tests {
         let s = space_for("bicg");
         let mut cfg = vec![0u32; s.num_fifos()];
         s.clamp(&mut cfg);
-        assert!(cfg.iter().all(|&d| d >= 2));
+        for (i, &d) in cfg.iter().enumerate() {
+            assert_eq!(d, s.min_depth(i).min(s.bounds[i].max(2)));
+        }
         let mut cfg = vec![u32::MAX; s.num_fifos()];
         s.clamp(&mut cfg);
         for (i, &d) in cfg.iter().enumerate() {

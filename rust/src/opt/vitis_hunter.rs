@@ -1,5 +1,7 @@
 //! The Vitis-style deadlock hunter (Fig. 1 left of the paper): start from
-//! minimal FIFOs and repeatedly re-simulate with doubled sizes until the
+//! minimal FIFOs (the space's per-channel search minimum — the analytic
+//! deadlock floor where one exists, so no round is wasted on proven
+//! deadlocks) and repeatedly re-simulate with doubled sizes until the
 //! design stops deadlocking. It finds *one feasible* configuration, not a
 //! frontier — included as the comparison baseline and for the
 //! deadlock-rescue example.
@@ -100,7 +102,10 @@ impl Optimizer for VitisHunter {
         match self.phase {
             Phase::Fresh => {
                 self.bounds = ctx.space.bounds.clone();
-                self.cur = vec![2; self.bounds.len()]; // Baseline-Min
+                // Baseline-Min, floored at the analytic bounds.
+                self.cur = (0..ctx.space.num_fifos())
+                    .map(|i| ctx.space.min_depth(i).min(ctx.space.bounds[i].max(2)))
+                    .collect();
                 self.iters_left = ctx.budget_left.max(1);
                 self.phase = Phase::Running;
                 let prop: Box<[u32]> = self.cur.clone().into();

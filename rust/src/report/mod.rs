@@ -50,6 +50,9 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
         ("clamp_hits", Json::Num(s.clamp_hits as f64)),
         ("clamp_rate", Json::Num(s.clamp_rate())),
         ("sims_avoided", Json::Num(s.sims_avoided as f64)),
+        ("bounds", Json::Bool(engine.bounds())),
+        ("bounds_floor_hits", Json::Num(s.bounds_floor_hits as f64)),
+        ("cap_tightenings", Json::Num(s.cap_tightenings as f64)),
         ("incremental_sims", Json::Num(s.incr_sims as f64)),
         ("incremental_rate", Json::Num(s.incremental_rate())),
         (
@@ -103,6 +106,14 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
     } else {
         ", pruning off".into()
     };
+    let bounds = if engine.bounds() {
+        format!(
+            ", bounds: {} floor hits, {} caps tightened",
+            s.bounds_floor_hits, s.cap_tightenings
+        )
+    } else {
+        ", bounds off".into()
+    };
     let backend = match engine.sim_backend() {
         crate::sim::BackendKind::Fast => String::new(),
         other => format!(", {} backend", other.name()),
@@ -121,7 +132,7 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
         "{} jobs / {} cache shards: {:.1}% cache hits, {:.0} sims/s ({:.0} proposals/s), \
          {:.0}% worker utilization, \
          {:.0}% incremental ({:.1} dirty ch/sim, {:.1}% ops replayed)\
-         {backend}{lanes}{pruning}{scenarios}",
+         {backend}{lanes}{pruning}{bounds}{scenarios}",
         engine.jobs(),
         engine.cache_shards(),
         s.hit_rate() * 100.0,

@@ -169,6 +169,161 @@ impl EventGraph {
     pub(crate) fn n_nodes(&self) -> usize {
         self.node_code.len()
     }
+
+    /// One topological order of the **unconstrained** (infinite-depth)
+    /// event DAG — program-order and read-after-write edges only. The
+    /// unconstrained run always completes (writes never block, and every
+    /// recorded read has its matching write), so the walk covers every
+    /// node. This is the substrate for the analytic depth-bounds pass.
+    pub(crate) fn topo_order(&self) -> Vec<u32> {
+        let n = self.n_nodes();
+        let mut topo = Vec::with_capacity(n);
+        let mut indeg: Vec<u8> = self.indeg0.to_vec();
+        let mut queue: Vec<u32> = self.roots.to_vec();
+        while let Some(start) = queue.pop() {
+            let mut v = start as usize;
+            loop {
+                topo.push(v as u32);
+                let code = self.node_code[v];
+                if code & WRITE_FLAG != 0 {
+                    let ch = (code & !WRITE_FLAG) as usize;
+                    let j = self.node_ord[v] as usize;
+                    if j < self.rd_node[ch].len() {
+                        let r = self.rd_node[ch][j] as usize;
+                        indeg[r] -= 1;
+                        if indeg[r] == 0 {
+                            queue.push(r as u32);
+                        }
+                    }
+                }
+                // Program-order successor: chain-follow when it was only
+                // waiting on us (mirrors the evaluation walk).
+                let p = self.node_proc[v] as usize;
+                let nx = v + 1;
+                if nx < self.pend[p] as usize {
+                    indeg[nx] -= 1;
+                    if indeg[nx] == 0 {
+                        v = nx;
+                        continue;
+                    }
+                }
+                break;
+            }
+        }
+        debug_assert_eq!(topo.len(), n, "unconstrained DAG walk must cover all nodes");
+        topo
+    }
+
+    /// Analytic per-channel depth bounds mined from the unconstrained
+    /// event DAG. Returns `(floors, caps)`:
+    ///
+    /// - `floors[c]`: every configuration with `depth[c] < floors[c]`
+    ///   deadlocks, **regardless of every other channel's depth**. Write
+    ///   ordinal `w` at depth `d` carries a full-FIFO edge from read
+    ///   `w − d`; if some write `w ≥ j + d` is already an *ancestor* of
+    ///   read `j` in the unconstrained DAG, that edge closes a cycle
+    ///   (the write needs a later read of its own channel committed
+    ///   first, and reads are program-ordered in the single reader), so
+    ///   `d` must satisfy `d ≥ W_anc(j) − j` for every read ordinal `j`,
+    ///   where `W_anc(j)` is one past the largest `c`-write ordinal among
+    ///   read `j`'s ancestors. Writes past the recorded read count add
+    ///   the trailing term `n_wr − n_rd` (they wait on reads that never
+    ///   happen). Unwritten channels get floor 0 (any depth, even 0, is
+    ///   trivially fine).
+    /// - `caps[c]`: for every `d ≥ caps[c]` the schedule is identical to
+    ///   the unconstrained one **on this channel's edges**, again for any
+    ///   other depths and either SRL/BRAM read-latency class: with
+    ///   `W_free(j)` the first `c`-write ordinal that *depends on* read
+    ///   `j` (or `n_wr` if none), `d ≥ min(W_free(j)+1, n_wr) − j` makes
+    ///   the full-FIFO edge of every write `w = j + d` either absent
+    ///   (`w ≥ n_wr`) or implied through a ≥ 2-edge DAG path (each edge
+    ///   costs ≥ 1 cycle, covering the BRAM-class weight-2 edge), so the
+    ///   edge can never move the fixpoint. The trailing term keeps the
+    ///   never-satisfied edges of a write-heavy channel out of the
+    ///   capped region. `floors[c] ≤ caps[c]` always (a write cannot be
+    ///   both an ancestor and a strict dependant of the same read).
+    pub(crate) fn analytic_depth_bounds(&self) -> (Vec<u32>, Vec<u32>) {
+        let n = self.n_nodes();
+        let nch = self.wr_node.len();
+        let topo = self.topo_order();
+        let mut floors = vec![0u32; nch];
+        let mut caps = vec![0u32; nch];
+        // Reused per-channel DP tables: 1 + the largest ch-write (`anc`) /
+        // ch-read (`ranc`) ordinal among a node's ancestors (self
+        // included), 0 if none. Every slot is overwritten on every pass,
+        // so no clearing between channels.
+        let mut anc: Vec<u32> = vec![0; n];
+        let mut ranc: Vec<u32> = vec![0; n];
+        for ch in 0..nch {
+            let n_wr = self.wr_node[ch].len() as u32;
+            let n_rd = self.rd_node[ch].len() as u32;
+            let trailing = n_wr.saturating_sub(n_rd);
+            if n_wr == 0 {
+                continue; // never written: floor 0, cap 0
+            }
+            if n_rd == 0 {
+                // Every write past the depth waits forever.
+                floors[ch] = n_wr;
+                caps[ch] = n_wr;
+                continue;
+            }
+            let mut floor_core = 0u32;
+            for &tn in &topo {
+                let v = tn as usize;
+                let p = self.node_proc[v] as usize;
+                let code = self.node_code[v];
+                let is_write = code & WRITE_FLAG != 0;
+                let c2 = (code & !WRITE_FLAG) as usize;
+                let j = self.node_ord[v] as u32;
+                let (mut a, mut r) = if v > self.base[p] as usize {
+                    (anc[v - 1], ranc[v - 1])
+                } else {
+                    (0, 0)
+                };
+                if !is_write {
+                    let w = self.wr_node[c2][j as usize] as usize;
+                    a = a.max(anc[w]);
+                    r = r.max(ranc[w]);
+                }
+                if c2 == ch {
+                    if is_write {
+                        a = a.max(j + 1);
+                    } else {
+                        // `a` here is W_anc(j); the RAW edge from write
+                        // `j` guarantees a ≥ j + 1.
+                        floor_core = floor_core.max(a - j);
+                        r = r.max(j + 1);
+                    }
+                }
+                anc[v] = a;
+                ranc[v] = r;
+            }
+            // Two-pointer over the writer's program order: ranc at the
+            // ch-writes is nondecreasing in ordinal, so W_free(j) only
+            // moves forward as j grows.
+            let wr = &self.wr_node[ch];
+            let mut w = 0usize;
+            let mut cap_core = 0u32;
+            for j in 0..n_rd {
+                while w < wr.len() && ranc[wr[w] as usize] < j + 1 {
+                    w += 1;
+                }
+                let lim = if w < wr.len() {
+                    (w as u32 + 1).min(n_wr)
+                } else {
+                    n_wr
+                };
+                cap_core = cap_core.max(lim - j);
+                if w == wr.len() {
+                    break; // lim − j only shrinks from here on
+                }
+            }
+            floors[ch] = floor_core.max(trailing).max(1);
+            caps[ch] = cap_core.max(trailing);
+            debug_assert!(floors[ch] <= caps[ch], "floor must not exceed cap");
+        }
+        (floors, caps)
+    }
 }
 
 /// The graph-compiled simulator. Construction compiles the trace;
@@ -833,6 +988,142 @@ mod tests {
             assert_eq!(cs.write_stall, fs.write_stall, "cfg {cfg:?}");
             assert_eq!(cs.read_stall, fs.read_stall, "cfg {cfg:?}");
         }
+    }
+
+    fn graph_of(design: &crate::ir::Design, args: &[i64]) -> EventGraph {
+        let t = collect_trace(design, args).unwrap();
+        let index = ChanOpIndex::build(&t);
+        EventGraph::compile(&t, &index)
+    }
+
+    #[test]
+    fn analytic_bounds_on_pipe_are_trivial() {
+        // Feed-forward pipe: no write depends on any read, so the cap is
+        // the write count and the floor is 1.
+        let d = pipe_design(8);
+        let (floors, caps) = graph_of(&d, &[]).analytic_depth_bounds();
+        assert_eq!(floors, vec![1]);
+        assert_eq!(caps, vec![8]);
+    }
+
+    #[test]
+    fn analytic_floor_finds_fig2_deadlock_threshold() {
+        // The Fig. 2 shape: the producer writes ALL n x-tokens before any
+        // y-token, while the consumer alternates reads. Read x_j (j ≥ 1)
+        // has write y_{j−1} among its ancestors, which in producer
+        // program order follows every x-write — so x needs depth ≥ n − 1.
+        let mut b = DesignBuilder::new("mult_by_2", 1);
+        let x = b.channel("x", 32);
+        let y = b.channel("y", 32);
+        b.process("producer", |p| {
+            p.for_expr(Expr::arg(0), |p, _| p.write(x, Expr::c(1)));
+            p.for_expr(Expr::arg(0), |p, _| p.write(y, Expr::c(1)));
+        });
+        b.process("consumer", |p| {
+            p.for_expr(Expr::arg(0), |p, _| {
+                let _ = p.read(x);
+                let _ = p.read(y);
+            });
+        });
+        let design = b.build();
+        let (floors, caps) = graph_of(&design, &[16]).analytic_depth_bounds();
+        assert_eq!(floors, vec![15, 1]);
+        assert_eq!(caps, vec![16, 16]);
+        // The floor is exact: one below deadlocks, the floor itself runs
+        // (with the sibling channel relaxed).
+        let t = Arc::new(collect_trace(&design, &[16]).unwrap());
+        let mut s = FastSim::new(t);
+        assert!(s.simulate(&[14, 16]).is_deadlock());
+        assert!(!s.simulate(&[15, 2]).is_deadlock());
+    }
+
+    #[test]
+    fn analytic_floor_is_sound_on_every_channel() {
+        // Differential check on a reconvergent design: for each channel,
+        // one-below-floor with everything else relaxed must deadlock.
+        let mut b = DesignBuilder::new("reconv", 0);
+        let direct = b.channel("direct", 32);
+        let via = b.channel("via", 32);
+        let out = b.channel("out", 32);
+        b.process("split", move |p| {
+            p.for_n(12, |p, _| p.write(direct, Expr::c(1)));
+            p.for_n(12, |p, _| p.write(via, Expr::c(2)));
+        });
+        b.process("relay", move |p| {
+            p.for_n(12, |p, _| {
+                let v = p.read(via);
+                p.write(out, Expr::var(v));
+            });
+        });
+        b.process("join", move |p| {
+            p.for_n(12, |p, _| {
+                let _ = p.read(out);
+                let _ = p.read(direct);
+            });
+        });
+        let design = b.build();
+        let t = Arc::new(collect_trace(&design, &[]).unwrap());
+        let index = ChanOpIndex::build(&t);
+        let (floors, caps) = EventGraph::compile(&t, &index).analytic_depth_bounds();
+        let relaxed: Vec<u32> = t.channels.iter().map(|c| c.writes.max(2) as u32).collect();
+        let mut s = FastSim::new(t.clone());
+        for (ch, &f) in floors.iter().enumerate() {
+            assert!(f <= caps[ch], "channel {ch}: floor {f} > cap {}", caps[ch]);
+            if f > 1 {
+                let mut cfg = relaxed.clone();
+                cfg[ch] = f - 1;
+                assert!(
+                    s.simulate(&cfg).is_deadlock(),
+                    "channel {ch}: depth {} below floor {f} must deadlock",
+                    f - 1
+                );
+            }
+            let mut cfg = relaxed.clone();
+            cfg[ch] = f.max(1);
+            assert!(
+                !s.simulate(&cfg).is_deadlock(),
+                "channel {ch}: floor {f} with others relaxed must run"
+            );
+        }
+    }
+
+    #[test]
+    fn analytic_cap_pins_schedule_above_it() {
+        // Raising any single channel above its cap never changes the
+        // outcome (checked within one read-latency class: the caps keep
+        // +1 slack so this holds for BRAM-class weights too).
+        let d = pipe_design(16);
+        let t = Arc::new(collect_trace(&d, &[]).unwrap());
+        let index = ChanOpIndex::build(&t);
+        let (_, caps) = EventGraph::compile(&t, &index).analytic_depth_bounds();
+        let mut s = FastSim::new(t);
+        let at_cap = s.simulate(&caps).latency();
+        for extra in [1u32, 5, 100] {
+            let cfg: Vec<u32> = caps.iter().map(|&c| c + extra).collect();
+            assert_eq!(s.simulate(&cfg).latency(), at_cap);
+        }
+    }
+
+    #[test]
+    fn analytic_bounds_edge_cases() {
+        // A channel that is written but never read floors at its write
+        // count (the writer can only finish once every write has a slot).
+        let mut b = DesignBuilder::new("unread", 0);
+        let dead = b.channel("dead", 32);
+        let live = b.channel("live", 32);
+        b.process("p", move |p| {
+            p.for_n(5, |p, _| p.write(dead, Expr::c(0)));
+            p.for_n(3, |p, _| p.write(live, Expr::c(0)));
+        });
+        b.process("q", move |p| {
+            p.for_n(3, |p, _| {
+                let _ = p.read(live);
+            });
+        });
+        let design = b.build();
+        let (floors, caps) = graph_of(&design, &[]).analytic_depth_bounds();
+        assert_eq!(floors, vec![5, 1]);
+        assert_eq!(caps, vec![5, 3]);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!    lane-batched `eval_batch` bank path;
 //! 5. **engine** — `EvalEngine` histories and Pareto fronts must be
 //!    identical for every optimizer under `--backend compiled` and
-//!    `--backend batched`, serial and `--jobs 4`, pruning on and off.
+//!    `--backend batched`, serial and `--jobs 4`, pruning on and off,
+//!    and the analytic-bounds telemetry (`bounds_floor_hits`,
+//!    `cap_tightenings`) must be invariant across jobs and backends.
 //!
 //! All randomness comes from the shared `util::prop` generator set, so
 //! this suite explores the same seeded corpus as the incremental and
@@ -501,6 +503,38 @@ fn engine_identity_for_all_optimizers_under_batched_on_a_workload() {
                     "{name} jobs={jobs} prune={prune}: sim counts diverged"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn engine_bounds_counters_are_jobs_and_backend_invariant() {
+    // The analytic-bounds telemetry is part of the deterministic
+    // contract: a run's floor-hit and cap-tightening counts must not
+    // depend on the worker count or the simulation backend, because the
+    // short-circuit fires per proposal, before any dispatch decision.
+    let w = Arc::new(bench_suite::build_workload("fig2").unwrap());
+    let space = Space::from_workload(&w);
+    for name in ["greedy", "grouped_sa"] {
+        let mut seen: Vec<(u64, u64)> = Vec::new();
+        for kind in [BackendKind::Fast, BackendKind::Compiled, BackendKind::Batched] {
+            for jobs in [1usize, 4] {
+                let mut ev = Evaluator::for_workload_with_sim(w.clone(), jobs, kind);
+                // A sub-floor probe (fig2's Baseline-Min sits below the
+                // x floor of n − 1) so at least one hit is guaranteed.
+                ev.eval(&w.baseline_min());
+                let mut o = opt::by_name(name, 42).unwrap();
+                drive(&mut *o, &mut ev, &space, 60);
+                let s = ev.stats();
+                seen.push((s.bounds_floor_hits, s.cap_tightenings));
+            }
+        }
+        assert!(seen[0].0 >= 1, "{name}: the sub-floor probe must hit the floor");
+        for v in &seen[1..] {
+            assert_eq!(
+                &seen[0], v,
+                "{name}: bounds counters vary across jobs/backends"
+            );
         }
     }
 }

@@ -1,0 +1,254 @@
+//! Differential fuzzing of the analytic depth bounds (`opt::bounds`):
+//! randomized walks over the suite designs, the shared fixture designs
+//! and random layered DAGs / workloads asserting that
+//!
+//! - **floors are sound** — no feasible configuration exists below a
+//!   derived deadlock floor, for *any* sibling depths (checked against
+//!   `FastSim`/`ScenarioSim`, and against the golden reference on the
+//!   deadlock-boundary fixture where the floor is exactly the paper's
+//!   `n − 1` threshold),
+//! - **tightened caps preserve outcomes** — a configuration clamped
+//!   through a [`Canonicalizer`] built on the analytic caps is
+//!   outcome-identical to its raw counterpart (full `SimOutcome`
+//!   equality plus per-scenario latencies on workloads), including on
+//!   the wide-channel fixtures where depth changes flip SRL↔BRAM read
+//!   latency classes, and
+//! - **the engine's floor short-circuit is invisible** — an
+//!   [`EvalEngine`] with bounds on agrees with a plain scenario bank on
+//!   every probe, below-floor probes included.
+//!
+//! Cases run under `util::prop::check`, so a failure reports its seed
+//! (and the CI fuzz job cranks counts via `FIFOADVISOR_FUZZ_ITERS` and
+//! uploads failing seeds through `FIFOADVISOR_FUZZ_ARTIFACT_DIR`).
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::EvalEngine;
+use fifoadvisor::opt::bounds::DepthBounds;
+use fifoadvisor::opt::dominance::Canonicalizer;
+use fifoadvisor::sim::fast::FastSim;
+use fifoadvisor::sim::golden::simulate_golden;
+use fifoadvisor::sim::{ScenarioSim, SimOptions};
+use fifoadvisor::trace::{collect_trace, Trace};
+use fifoadvisor::util::prop::{
+    check, deadlock_boundary_design, iters, pair_burst_design, random_depths,
+    random_layered_design, random_workload, suite_with_specials,
+};
+use fifoadvisor::util::Rng;
+use std::sync::Arc;
+
+fn trace_of(name: &str) -> Arc<Trace> {
+    let bd = bench_suite::build(name);
+    Arc::new(collect_trace(&bd.design, &bd.args).unwrap())
+}
+
+fn widths_of(t: &Trace) -> Vec<u32> {
+    t.channels.iter().map(|c| c.width_bits).collect()
+}
+
+/// Clamp-differential on one trace: random over-cap configurations must
+/// be outcome-identical (latency AND blocked sets) to their canonical
+/// forms under a canonicalizer built on the *analytic* caps.
+fn assert_caps_preserve_outcomes(name: &str, t: &Arc<Trace>, rng: &mut Rng, steps: u64) {
+    let b = DepthBounds::for_trace(t);
+    let widths = widths_of(t);
+    let canon = Canonicalizer::new(b.caps.clone(), &widths);
+    let mut raw_sim = FastSim::new(t.clone());
+    let mut canon_sim = FastSim::new(t.clone());
+    let ub = t.upper_bounds();
+    for step in 0..steps {
+        let cfg = random_depths(rng, &ub, 17);
+        if let Some(ccfg) = canon.canonical(&cfg) {
+            let raw_out = raw_sim.simulate(&cfg);
+            let canon_out = canon_sim.simulate(&ccfg);
+            assert_eq!(
+                raw_out, canon_out,
+                "{name} step {step}: tightened-cap clamp changed the outcome, \
+                 raw {cfg:?} vs canon {ccfg:?} (caps {:?})",
+                b.caps
+            );
+            assert!(canon.canonical(&ccfg).is_none(), "{name}: not idempotent");
+        }
+    }
+}
+
+#[test]
+fn no_feasible_config_below_the_floor_on_any_suite_design() {
+    for name in suite_with_specials() {
+        let t = trace_of(name);
+        let b = DepthBounds::for_trace(&t);
+        let mut sim = FastSim::new(t.clone());
+        let ub = t.upper_bounds();
+        let mut rng = Rng::new(0xF100 ^ name.len() as u64);
+        for (ch, &f) in b.floors.iter().enumerate() {
+            if f < 2 {
+                continue; // depth 0 is unrepresentable: nothing to prove
+            }
+            // The floor claims deadlock for ANY sibling depths — fuzz
+            // them, padded past the caps.
+            for _ in 0..3 {
+                let mut cfg = random_depths(&mut rng, &ub, 6);
+                cfg[ch] = rng.range_u32(1, f - 1);
+                assert!(
+                    sim.simulate(&cfg).is_deadlock(),
+                    "{name} ch {ch}: {cfg:?} runs below the floor {f}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn floors_are_sound_on_random_layered_designs() {
+    check("bounds floor sound on layered DAGs", iters(12), |rng| {
+        let d = random_layered_design(rng);
+        let t = Arc::new(collect_trace(&d, &[]).map_err(|e| e.to_string())?);
+        let b = DepthBounds::for_trace(&t);
+        let mut sim = FastSim::new(t.clone());
+        let ub = t.upper_bounds();
+        for (ch, &f) in b.floors.iter().enumerate() {
+            if f < 2 {
+                continue;
+            }
+            let mut cfg = random_depths(rng, &ub, 3);
+            cfg[ch] = rng.range_u32(1, f - 1);
+            if !sim.simulate(&cfg).is_deadlock() {
+                return Err(format!("ch {ch}: {cfg:?} runs below the floor {f}"));
+            }
+        }
+        // Caps on the same design: clamp is outcome-invisible.
+        assert_caps_preserve_outcomes("layered", &t, rng, 4);
+        Ok(())
+    });
+}
+
+#[test]
+fn boundary_floor_is_exact_against_the_golden_simulator() {
+    check("boundary floor exact vs golden", iters(8), |rng| {
+        let n = 3 + rng.below(12) as i64;
+        let d = deadlock_boundary_design();
+        let t = Arc::new(collect_trace(&d, &[n]).map_err(|e| e.to_string())?);
+        let b = DepthBounds::for_trace(&t);
+        if b.floors[0] as i64 != n - 1 {
+            return Err(format!(
+                "n = {n}: x floor {} != the paper threshold {}",
+                b.floors[0],
+                n - 1
+            ));
+        }
+        // One below the floor deadlocks in the golden reference even
+        // with every sibling fully relaxed; at the floor the design
+        // runs with the sibling at the Vitis minimum.
+        let ub = t.upper_bounds();
+        let mut below: Vec<u32> = ub.iter().map(|&u| u.max(2) + 2).collect();
+        below[0] = rng.range_u32(1, b.floors[0] - 1);
+        if !simulate_golden(&t, &below, SimOptions::default()).is_deadlock() {
+            return Err(format!("golden ran {below:?} below the floor"));
+        }
+        let at = vec![b.floors[0], 2];
+        if simulate_golden(&t, &at, SimOptions::default()).is_deadlock() {
+            return Err(format!("golden deadlocked {at:?} at the floor — floor too high"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tightened_caps_preserve_outcomes_on_every_design() {
+    for name in suite_with_specials() {
+        let t = trace_of(name);
+        let mut rng = Rng::new(0xCA95 ^ name.len() as u64);
+        assert_caps_preserve_outcomes(name, &t, &mut rng, iters(10));
+    }
+}
+
+#[test]
+fn tightened_caps_hold_across_srl_bram_flips() {
+    // The pair-burst fixture's 512-bit channel crosses the SRL↔BRAM
+    // read-latency class inside the fuzzed depth range — the case the
+    // cap's +1 safety margin exists for.
+    check("caps sound across SRL/BRAM flips", iters(10), |rng| {
+        let n = 2 + rng.below(12);
+        let d = pair_burst_design(n);
+        let t = Arc::new(collect_trace(&d, &[]).map_err(|e| e.to_string())?);
+        assert_caps_preserve_outcomes("pairburst", &t, rng, 8);
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_bounds_agree_with_the_scenario_bank() {
+    check("workload floors and caps sound", iters(8), |rng| {
+        let w = Arc::new(random_workload(rng));
+        let b = DepthBounds::for_workload(&w);
+        let ub = w.upper_bounds();
+        // Floors merge to the worst scenario: below one, some scenario
+        // deadlocks, which makes the whole workload infeasible.
+        let mut bank = ScenarioSim::new(&w);
+        for (ch, &f) in b.floors.iter().enumerate() {
+            if f < 2 {
+                continue;
+            }
+            let mut cfg = random_depths(rng, &ub, 3);
+            cfg[ch] = rng.range_u32(1, f - 1);
+            if bank.simulate(&cfg).latency().is_some() {
+                return Err(format!("ch {ch}: workload ran {cfg:?} below the floor {f}"));
+            }
+        }
+        // Caps preserve per-scenario latencies, not just the aggregate.
+        let widths = widths_of(w.primary());
+        let canon = Canonicalizer::new(b.caps.clone(), &widths);
+        let mut raw_bank = ScenarioSim::new(&w);
+        let mut canon_bank = ScenarioSim::new(&w);
+        for _ in 0..4 {
+            let cfg = random_depths(rng, &ub, 9);
+            if let Some(ccfg) = canon.canonical(&cfg) {
+                let raw = raw_bank.simulate(&cfg).latency();
+                let can = canon_bank.simulate(&ccfg).latency();
+                if raw != can {
+                    return Err(format!("clamp diverged: {raw:?} vs {can:?} on {cfg:?}"));
+                }
+                if raw_bank.scenario_latencies() != canon_bank.scenario_latencies() {
+                    return Err(format!("per-scenario latencies diverged on {cfg:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_floor_short_circuit_matches_real_simulation() {
+    check("engine floor short-circuit invisible", iters(8), |rng| {
+        let w = Arc::new(random_workload(rng));
+        let b = DepthBounds::for_workload(&w);
+        let mut ev = EvalEngine::for_workload(w.clone(), 1);
+        let mut bank = ScenarioSim::new(&w);
+        let ub = w.upper_bounds();
+        for _ in 0..6 {
+            let mut cfg = random_depths(rng, &ub, 2);
+            // Bias half the probes below a non-trivial floor so the
+            // short-circuit path actually fires.
+            if rng.chance(0.5) {
+                let floored: Vec<(usize, u32)> = b
+                    .floors
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &f)| f >= 2)
+                    .map(|(ch, &f)| (ch, f))
+                    .collect();
+                if !floored.is_empty() {
+                    let (ch, f) = floored[rng.index(floored.len())];
+                    cfg[ch] = rng.range_u32(1, f - 1);
+                }
+            }
+            let (lat, _) = ev.eval(&cfg);
+            let real = bank.simulate(&cfg).latency();
+            if lat != real {
+                return Err(format!(
+                    "engine answered {lat:?} but the bank says {real:?} on {cfg:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -5,13 +5,16 @@
 //! sets), same channel statistics, same incremental-replay telemetry,
 //! and — at the engine level — the same history and counters (modulo
 //! timing) for every optimizer, serial and `--jobs 4`. Multi-scenario
-//! engines must additionally be deterministic across worker counts.
+//! engines must additionally be deterministic across worker counts, and
+//! the simulation-free layers (pruning, analytic bounds) must change
+//! only costs, never results — pinned by the prune × bounds × jobs ×
+//! backend grids below.
 
 use fifoadvisor::bench_suite;
 use fifoadvisor::dse::{drive, Evaluator};
 use fifoadvisor::opt::{self, Space};
 use fifoadvisor::sim::fast::FastSim;
-use fifoadvisor::sim::ScenarioSim;
+use fifoadvisor::sim::{BackendKind, ScenarioSim};
 use fifoadvisor::trace::collect_trace;
 use fifoadvisor::trace::workload::Workload;
 use fifoadvisor::util::prop::suite_with_specials as all_with_specials;
@@ -146,89 +149,201 @@ fn multi_scenario_incremental_replay_engages_in_the_engine() {
 }
 
 // ---------------------------------------------------------------------------
-// Simulation-free pruning: identity harness
+// Simulation-free layers (pruning, analytic bounds): identity harness
 // ---------------------------------------------------------------------------
 
-fn drive_with_prune(
+fn drive_with_layers(
     engine_of: &dyn Fn() -> Evaluator,
     space: &Space,
     name: &str,
     prune: bool,
+    bounds: bool,
     budget: usize,
 ) -> (HistoryRecord, u64, u64) {
     let mut ev = engine_of();
     ev.set_prune(prune);
+    ev.set_bounds(bounds);
     let mut o = opt::by_name(name, 42).unwrap();
     drive(&mut *o, &mut ev, space, budget);
     let s = ev.stats();
     assert_eq!(
         s.cache_hits + s.oracle_hits + s.sims,
         s.proposals,
-        "{name} prune={prune}: accounting invariant broken"
+        "{name} prune={prune} bounds={bounds}: accounting invariant broken"
     );
+    if !bounds {
+        assert_eq!(
+            s.bounds_floor_hits, 0,
+            "{name}: floor hits with the bounds layer off"
+        );
+        assert_eq!(
+            s.cap_tightenings, 0,
+            "{name}: tightenings reported with the bounds layer off"
+        );
+    }
     (history_of(&ev), s.sims, s.scenario_sims)
 }
 
 #[test]
-fn pruning_preserves_histories_for_all_nine_optimizers_single_trace() {
+fn prune_bounds_grid_preserves_histories_for_all_nine_optimizers_single_trace() {
     let bd = bench_suite::build("gesummv");
     let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
     let space = Space::from_trace(&t);
     for name in opt::OPTIMIZER_NAMES {
         let make = || Evaluator::new(t.clone());
-        let (on, on_sims, _) = drive_with_prune(&make, &space, name, true, 120);
-        let (off, off_sims, _) = drive_with_prune(&make, &space, name, false, 120);
-        assert_eq!(
-            on, off,
-            "{name}: pruned vs unpruned history diverged on gesummv"
+        // Arm order: (bounds, prune) = (T,T), (T,F), (F,T), (F,F).
+        let mut records: Vec<HistoryRecord> = Vec::new();
+        let mut sims: Vec<u64> = Vec::new();
+        for bounds in [true, false] {
+            for prune in [true, false] {
+                let (h, s, _) = drive_with_layers(&make, &space, name, prune, bounds, 120);
+                records.push(h);
+                sims.push(s);
+            }
+        }
+        for r in &records[1..] {
+            assert_eq!(
+                &records[0], r,
+                "{name}: prune × bounds history diverged on gesummv"
+            );
+        }
+        assert!(
+            sims[0] <= sims[2] && sims[1] <= sims[3],
+            "{name}: bounds must never add sims"
         );
-        assert!(on_sims <= off_sims, "{name}: pruning must never add sims");
+        assert!(
+            sims[0] <= sims[1] && sims[2] <= sims[3],
+            "{name}: pruning must never add sims"
+        );
     }
 }
 
 #[test]
-fn pruning_preserves_histories_for_all_nine_optimizers_on_a_workload() {
-    // fig2's 3-scenario workload is deadlock-heavy: the oracle and the
-    // early-exit path both engage, and every outcome classification
-    // (feasible vs deadlock, per proposal) must survive pruning intact.
+fn prune_bounds_grid_preserves_histories_for_all_nine_optimizers_on_a_workload() {
+    // fig2's 3-scenario workload is deadlock-heavy: the oracle, the
+    // early-exit path, and the analytic floor (x needs n − 1 slots) all
+    // engage, and every outcome classification (feasible vs deadlock,
+    // per proposal) must survive both simulation-free layers intact.
     let w = Arc::new(bench_suite::build_workload("fig2").unwrap());
     let space = Space::from_workload(&w);
     for name in opt::OPTIMIZER_NAMES {
         let make = || Evaluator::for_workload(w.clone(), 1);
-        let (on, on_sims, on_scen) = drive_with_prune(&make, &space, name, true, 90);
-        let (off, off_sims, off_scen) = drive_with_prune(&make, &space, name, false, 90);
-        assert_eq!(on, off, "{name}: pruned vs unpruned diverged on fig2 workload");
-        assert!(on_sims <= off_sims, "{name}: pruning added sims");
-        assert!(on_scen <= off_scen, "{name}: pruning added scenario replays");
+        let mut records: Vec<HistoryRecord> = Vec::new();
+        let mut costs: Vec<(u64, u64)> = Vec::new();
+        for bounds in [true, false] {
+            for prune in [true, false] {
+                let (h, s, scen) = drive_with_layers(&make, &space, name, prune, bounds, 90);
+                records.push(h);
+                costs.push((s, scen));
+            }
+        }
+        for r in &records[1..] {
+            assert_eq!(
+                &records[0], r,
+                "{name}: prune × bounds diverged on fig2 workload"
+            );
+        }
+        assert!(
+            costs[0].0 <= costs[2].0 && costs[1].0 <= costs[3].0,
+            "{name}: bounds added sims"
+        );
+        assert!(
+            costs[0].1 <= costs[2].1 && costs[1].1 <= costs[3].1,
+            "{name}: bounds added scenario replays"
+        );
+        assert!(
+            costs[0].0 <= costs[1].0 && costs[2].0 <= costs[3].0,
+            "{name}: pruning added sims"
+        );
     }
 }
 
 #[test]
-fn pruning_is_identical_serial_vs_parallel_on_clamped_workload() {
+fn prune_bounds_jobs_grid_is_identical_on_clamped_workload() {
     // FlowGNN's designer hints exceed the observed bursts, so the clamp
     // canonicalizer engages; histories must stay identical across
-    // prune × jobs.
+    // prune × bounds × jobs.
     let w = Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap());
     let space = Space::from_workload(&w);
     for name in ["random", "grouped_sa", "greedy", "vitis_hunter"] {
         let mut records: Vec<HistoryRecord> = Vec::new();
-        for prune in [true, false] {
-            for jobs in [1usize, 4] {
-                let mut ev = Evaluator::for_workload(w.clone(), jobs);
-                ev.set_prune(prune);
-                let mut o = opt::by_name(name, 9).unwrap();
-                drive(&mut *o, &mut ev, &space, 60);
-                if prune && jobs == 1 {
-                    assert!(
-                        ev.stats().clamp_hits > 0,
-                        "{name}: hinted bounds above the bursts must clamp"
-                    );
+        for bounds in [true, false] {
+            for prune in [true, false] {
+                for jobs in [1usize, 4] {
+                    let mut ev = Evaluator::for_workload(w.clone(), jobs);
+                    ev.set_prune(prune);
+                    ev.set_bounds(bounds);
+                    let mut o = opt::by_name(name, 9).unwrap();
+                    drive(&mut *o, &mut ev, &space, 60);
+                    if prune && jobs == 1 {
+                        assert!(
+                            ev.stats().clamp_hits > 0,
+                            "{name}: hinted bounds above the bursts must clamp"
+                        );
+                    }
+                    records.push(history_of(&ev));
                 }
-                records.push(history_of(&ev));
             }
         }
         for r in &records[1..] {
-            assert_eq!(&records[0], r, "{name}: prune/jobs grid diverged");
+            assert_eq!(&records[0], r, "{name}: prune/bounds/jobs grid diverged");
+        }
+    }
+}
+
+#[test]
+fn bounds_identity_holds_on_every_backend_and_worker_count() {
+    // The bounds toggle must be invisible on every simulation backend:
+    // same histories across fast / compiled / batched × bounds × jobs,
+    // with the floor short-circuit actually firing on the bounded arms
+    // (fig2's Baseline-Min sits below the analytic x floor of n − 1).
+    let w = Arc::new(bench_suite::build_workload("fig2").unwrap());
+    let space = Space::from_workload(&w);
+    let backends = [BackendKind::Fast, BackendKind::Compiled, BackendKind::Batched];
+    for name in ["greedy", "grouped_sa", "vitis_hunter"] {
+        let mut records: Vec<HistoryRecord> = Vec::new();
+        let mut serial_sims: Vec<(bool, u64)> = Vec::new();
+        for backend in backends {
+            for bounds in [true, false] {
+                for jobs in [1usize, 4] {
+                    let mut ev = Evaluator::for_workload_with_sim(w.clone(), jobs, backend);
+                    ev.set_bounds(bounds);
+                    // A sub-floor probe, identical in every arm: the
+                    // bounded arms answer it analytically, the unbounded
+                    // arms simulate — the recorded point must not differ.
+                    ev.eval(&w.baseline_min());
+                    let mut o = opt::by_name(name, 7).unwrap();
+                    drive(&mut *o, &mut ev, &space, 60);
+                    let s = ev.stats();
+                    if bounds {
+                        assert!(
+                            s.bounds_floor_hits >= 1,
+                            "{name} {}: sub-floor probe missed the short-circuit",
+                            backend.name()
+                        );
+                    } else {
+                        assert_eq!(s.bounds_floor_hits, 0, "{name}: hits with bounds off");
+                    }
+                    if jobs == 1 {
+                        serial_sims.push((bounds, s.sims));
+                    }
+                    records.push(history_of(&ev));
+                }
+            }
+        }
+        for r in &records[1..] {
+            assert_eq!(
+                &records[0], r,
+                "{name}: backend × bounds × jobs grid diverged"
+            );
+        }
+        // Per backend the serial arms pair up as (on, off): the analytic
+        // answer to the sub-floor probe means the bounded arm can never
+        // be more expensive.
+        for pair in serial_sims.chunks(2) {
+            let (on, off) = (pair[0], pair[1]);
+            assert!(on.0 && !off.0, "{name}: arm ordering changed");
+            assert!(on.1 <= off.1, "{name}: bounds added sims");
         }
     }
 }
