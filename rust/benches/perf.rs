@@ -46,13 +46,22 @@
 //!    corner in both arms (the cap-soundness theorem end-to-end) and a
 //!    strict simulation reduction on at least one of the k15mmtree /
 //!    FlowGNN suites.
+//! 12. Scenario-bank distillation: distilled vs full-bank optimization
+//!    (SA and grouped SA on the fig2, mini_dnn, and FlowGNN workloads)
+//!    under the same proposal budget, comparing inner-loop per-scenario
+//!    simulations and wall clock. Hard asserts: bit-identical histories
+//!    and fronts between the distilled fixpoint and the from-scratch
+//!    full-bank run on every cell, and a strict inner-loop
+//!    scenario-simulation reduction on the fig2 workload (where the
+//!    n = 16 scenario dominates its siblings).
 //!
 //! Run: `cargo bench --bench perf`. Besides `results/perf.csv` it writes
 //! machine-readable snapshots: `BENCH_2.json` (every §Perf 1–6 metric
 //! row), `BENCH_3.json` (the §Perf 7 scenario-bank rows), `BENCH_4.json`
 //! (the §Perf 8 pruning rows), `BENCH_5.json` (the §Perf 9 backend
 //! comparison rows), `BENCH_6.json` (the §Perf 10 lane-batched rows),
-//! and `BENCH_8.json` (the §Perf 11 depth-bounds rows).
+//! `BENCH_8.json` (the §Perf 11 depth-bounds rows), and `BENCH_9.json`
+//! (the §Perf 12 distillation rows).
 //! Set `FIFOADVISOR_PERF_SMOKE=1` for a reduced-iteration run (the CI
 //! regression smoke): same sections, same correctness assertions, far
 //! fewer samples.
@@ -1133,8 +1142,143 @@ fn main() {
         );
     }
 
+    println!("\n=== §Perf 12: scenario-bank distillation (distilled vs full bank) ===\n");
+    let mut distill_rows: Vec<Json> = Vec::new();
+    {
+        use fifoadvisor::dse::advhunt::DistillConfig;
+        use fifoadvisor::dse::{drive, optimize_distilled};
+        use fifoadvisor::opt::{self, Space};
+
+        type HistoryRecord = Vec<(Box<[u32]>, Option<u64>, u32)>;
+        fn history_of(pts: &[fifoadvisor::dse::EvalPoint]) -> HistoryRecord {
+            pts.iter()
+                .map(|p| (p.depths.clone(), p.latency, p.bram))
+                .collect()
+        }
+
+        let budget = if smoke { 120 } else { 400 };
+        let optimizers = ["sa", "grouped_sa"];
+        let mut fig2_reduced = false;
+        for wname in ["fig2", "mini_dnn", "flowgnn_pna"] {
+            let w = Arc::new(bench_suite::build_workload(wname).unwrap());
+            let k = w.num_scenarios();
+            let space = Space::from_workload(&w);
+            let (mut inner, mut verify, mut full_scen) = (0u64, 0u64, 0u64);
+            let (mut secs_d, mut secs_f) = (0.0f64, 0.0f64);
+            let (mut kept_init, mut kept_fin, mut promoted, mut iterations) =
+                (0usize, 0usize, 0usize, 0usize);
+            for oname in optimizers {
+                let cfg = DistillConfig {
+                    optimizer: oname.to_string(),
+                    seed: 17,
+                    budget,
+                    ..DistillConfig::default()
+                };
+                let t0 = Instant::now();
+                let out = optimize_distilled(&w, &space, &cfg);
+                secs_d += t0.elapsed().as_secs_f64();
+
+                // Full-bank reference, same optimizer + seed.
+                let mut full = EvalEngine::for_workload(w.clone(), 1);
+                let t0 = Instant::now();
+                full.eval_baselines();
+                drive(&mut *opt::by_name(oname, 17).unwrap(), &mut full, &space, budget);
+                secs_f += t0.elapsed().as_secs_f64();
+
+                // CI guard: distillation must be invisible in the results.
+                assert_eq!(
+                    history_of(&out.history),
+                    history_of(&full.history),
+                    "{wname}/{oname}: distilled history diverged"
+                );
+                let ref_front: Vec<(Option<u64>, u32)> =
+                    full.pareto().iter().map(|p| (p.latency, p.bram)).collect();
+                let got_front: Vec<(Option<u64>, u32)> =
+                    out.front.iter().map(|p| (p.latency, p.bram)).collect();
+                assert_eq!(got_front, ref_front, "{wname}/{oname}: front diverged");
+                // Scenarios the distilled bank keeps can only re-run what
+                // the full bank runs: inner-loop work never grows.
+                assert!(
+                    out.inner_scenario_sims <= full.stats().scenario_sims,
+                    "{wname}/{oname}: distilled inner loop ran MORE scenario sims"
+                );
+                inner += out.inner_scenario_sims;
+                verify += out.verify_scenario_sims;
+                full_scen += full.stats().scenario_sims;
+                kept_init += out.kept_initial.len();
+                kept_fin += out.kept_final.len();
+                promoted += out.promotions.len();
+                iterations += out.iterations;
+            }
+            if wname == "fig2" && inner < full_scen {
+                fig2_reduced = true;
+            }
+            let label = format!("{wname}[{k}]");
+            println!(
+                "  {label:<18} kept {}/{} (+{} promoted, {} fixpoint iter): inner scen-sims \
+                 {full_scen} → {inner} (+{verify} verify), wall {} → {}",
+                kept_fin,
+                k * optimizers.len(),
+                promoted,
+                iterations,
+                fmt_duration(secs_f),
+                fmt_duration(secs_d)
+            );
+            let mut push = |metric: &str, value: f64, unit: &str| {
+                csv.row(vec![
+                    metric.to_string(),
+                    label.clone(),
+                    format!("{value:.6e}"),
+                    unit.into(),
+                ]);
+                distill_rows.push(Json::obj(vec![
+                    ("metric", Json::Str(metric.into())),
+                    ("design", Json::Str(label.clone())),
+                    ("value", Json::Num(value)),
+                    ("unit", Json::Str(unit.into())),
+                ]));
+            };
+            push("distill_kept_initial", kept_init as f64, "");
+            push("distill_kept_final", kept_fin as f64, "");
+            push("distill_promotions", promoted as f64, "");
+            push("distill_iterations", iterations as f64, "");
+            push("distill_inner_scenario_sims", inner as f64, "");
+            push("distill_verify_scenario_sims", verify as f64, "");
+            push("distill_full_scenario_sims", full_scen as f64, "");
+            push(
+                "distill_scenario_sims_saved",
+                full_scen.saturating_sub(inner) as f64,
+                "",
+            );
+            push(
+                "distill_inner_fraction",
+                inner as f64 / full_scen.max(1) as f64,
+                "",
+            );
+            push("distill_optimize_secs", secs_d, "s");
+            push("distill_optimize_secs_full", secs_f, "s");
+        }
+        // §Perf 12 acceptance: on the fig2 workload the n = 16 scenario
+        // dominates its siblings, so the distilled inner loop must run
+        // strictly fewer per-scenario simulations than the full bank.
+        // The bit-identity asserts above are the correctness guarantee.
+        assert!(
+            fig2_reduced,
+            "distillation did not reduce fig2's inner-loop scenario sims"
+        );
+    }
+
     csv.write("results/perf.csv").unwrap();
     println!("\nwrote results/perf.csv");
+
+    let snapshot9 = Json::obj(vec![
+        ("bench", Json::Str("distill".into())),
+        ("schema", Json::Str("metric-rows/v1".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(distill_rows)),
+    ]);
+    fifoadvisor::report::write_file("BENCH_9.json", &snapshot9.to_string_pretty()).unwrap();
+    println!("wrote BENCH_9.json");
 
     let snapshot8 = Json::obj(vec![
         ("bench", Json::Str("bounds".into())),
@@ -1185,9 +1329,9 @@ fn main() {
     // §Perf 7 scenario rows live in BENCH_3.json only, the §Perf 8
     // pruning rows in BENCH_4.json only, the §Perf 9 backend rows in
     // BENCH_5.json only, the §Perf 10 lane-batched rows in BENCH_6.json
-    // only, and the §Perf 11 depth-bounds rows in BENCH_8.json only, so
-    // BENCH_2.json stays row-for-row comparable with pre-workload
-    // snapshots.
+    // only, the §Perf 11 depth-bounds rows in BENCH_8.json only, and the
+    // §Perf 12 distillation rows in BENCH_9.json only, so BENCH_2.json
+    // stays row-for-row comparable with pre-workload snapshots.
     let rows_json: Vec<Json> = csv
         .rows()
         .iter()
@@ -1197,6 +1341,7 @@ fn main() {
                 && !r[0].starts_with("backend_")
                 && !r[0].starts_with("batched_")
                 && !r[0].starts_with("bounds_")
+                && !r[0].starts_with("distill_")
         })
         .map(|r| {
             let value = match r[2].parse::<f64>() {

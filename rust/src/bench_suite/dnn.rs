@@ -1,9 +1,12 @@
 //! Deep-learning block kernels from the Stream-HLS suite: FeedForward,
-//! Autoencoder, ResidualBlock, DepthSepConvBlock, ResMLP.
+//! Autoencoder, ResidualBlock, DepthSepConvBlock, ResMLP — plus the
+//! data-dependent [`mini_dnn`] special, whose deadlock thresholds depend
+//! on its runtime tiling arguments (a second non-FlowGNN target for the
+//! adversarial scenario hunter).
 
 use super::stages::{self, F32, W8};
 use super::BenchDesign;
-use crate::ir::DesignBuilder;
+use crate::ir::{DesignBuilder, Expr};
 
 /// Transformer FFN block: `y = W2·gelu(W1·x + b1) + b2`, very wide PE
 /// array. Paper: 848 FIFOs, 65997 cycles.
@@ -112,12 +115,92 @@ pub fn resmlp() -> BenchDesign {
     BenchDesign::new(b.build())
 }
 
+/// Data-dependent tiled mini-DNN with runtime arguments
+/// `(blocks, m)`: a loader streams all `blocks·m` activations before any
+/// weights (so the activation FIFO floors at `blocks·m − 1`, like fig2's
+/// x channel), and the PE emits `m` partial results per block before the
+/// block-ready token the store waits on (so the result FIFO floors at
+/// `m`). Both thresholds move with the runtime tiling — a config sized
+/// for one `(blocks, m)` split deadlocks under a sibling with a larger
+/// `m`, even at identical total work.
+pub fn mini_dnn(blocks: i64, m: i64) -> BenchDesign {
+    let mut b = DesignBuilder::new("mini_dnn", 2);
+    let a = b.channel("a", 32);
+    let w = b.channel("w", 32);
+    let z = b.channel("z", 32);
+    let rdy = b.channel("rdy", 32);
+    b.process("loader", |p| {
+        p.for_expr(Expr::arg(0).mul(Expr::arg(1)), |p, _| p.write(a, Expr::c(1)));
+        p.for_expr(Expr::arg(0).mul(Expr::arg(1)), |p, _| p.write(w, Expr::c(1)));
+    });
+    b.process("pe", |p| {
+        p.for_expr(Expr::arg(0), |p, _| {
+            p.for_expr(Expr::arg(1), |p, _| {
+                let av = p.read(a);
+                let wv = p.read(w);
+                p.write(z, Expr::var(av).mul(Expr::var(wv)));
+            });
+            p.write(rdy, Expr::c(1));
+        });
+    });
+    b.process("store", |p| {
+        p.for_expr(Expr::arg(0), |p, _| {
+            p.read(rdy);
+            p.for_expr(Expr::arg(1), |p, _| {
+                p.read(z);
+            });
+        });
+    });
+    BenchDesign::with_args(b.build(), vec![blocks, m])
+}
+
+/// [`mini_dnn`] under its default tiling (8 blocks × 16).
+pub fn mini_dnn_default() -> BenchDesign {
+    mini_dnn(8, 16)
+}
+
+/// Scenario argument sets for mini_dnn workload runs: three tilings of
+/// the *same* total work (128 MACs) with different per-block depths, so
+/// single-scenario-optimal result-FIFO depths deadlock on siblings.
+pub fn mini_dnn_scenario_args() -> Vec<(String, Vec<i64>)> {
+    [(8i64, 16i64), (16, 8), (4, 32)]
+        .iter()
+        .map(|&(blocks, m)| (format!("b{blocks}m{m}"), vec![blocks, m]))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::fast::FastSim;
     use crate::trace::collect_trace;
     use std::sync::Arc;
+
+    #[test]
+    fn mini_dnn_thresholds_track_tiling() {
+        for (blocks, m) in [(8i64, 16i64), (16, 8), (4, 32)] {
+            let bd = mini_dnn(blocks, m);
+            let t = Arc::new(collect_trace(&bd.design, &bd.args).unwrap());
+            let total = (blocks * m) as u32;
+            let mut s = FastSim::new(t.clone());
+            // a floors at blocks·m − 1, z at m; rdy is free.
+            let ok = s.simulate(&[total - 1, 2, m as u32, 2]);
+            assert!(!ok.is_deadlock(), "({blocks},{m}): floors should be safe");
+            let bad = s.simulate(&[total - 2, 2, m as u32, 2]);
+            assert!(bad.is_deadlock(), "({blocks},{m}): a below floor");
+            let bad = s.simulate(&[total - 1, 2, m as u32 - 1, 2]);
+            assert!(bad.is_deadlock(), "({blocks},{m}): z below floor");
+        }
+    }
+
+    #[test]
+    fn mini_dnn_scenarios_share_total_work() {
+        let totals: Vec<i64> = mini_dnn_scenario_args()
+            .iter()
+            .map(|(_, a)| a[0] * a[1])
+            .collect();
+        assert!(totals.iter().all(|&t| t == totals[0]));
+    }
 
     #[test]
     fn residual_block_is_megacycle_scale() {

@@ -87,8 +87,31 @@ pub fn scenario_args(name: &str) -> Option<Vec<(String, Vec<i64>)>> {
     match name {
         "fig2" => Some(fig2::scenario_args(&[8, 16, 12])),
         "flowgnn_pna" => Some(flowgnn::scenario_args(4)),
+        "mini_dnn" => Some(dnn::mini_dnn_scenario_args()),
         _ => None,
     }
+}
+
+/// The finite kernel-argument space of a data-dependent design — the
+/// domain the adversarial scenario hunter
+/// ([`dse::advhunt`](crate::dse::advhunt)) searches for deadlock
+/// counterexamples. `None` for the static Stream-HLS designs (their
+/// traces are argument-independent, so there is nothing to hunt).
+pub fn arg_space(name: &str) -> Option<crate::opt::genome::ArgSpace> {
+    use crate::opt::genome::{ArgDim, ArgSpace};
+    Some(match name {
+        "fig2" => ArgSpace::new(vec![ArgDim::new("n", (2..=32).collect())]),
+        "flowgnn_pna" => ArgSpace::new(vec![
+            ArgDim::new("nodes", vec![64]),
+            ArgDim::new("edges", vec![512]),
+            ArgDim::new("seed", flowgnn::SCENARIO_SEEDS.to_vec()),
+        ]),
+        "mini_dnn" => ArgSpace::new(vec![
+            ArgDim::new("blocks", vec![2, 4, 8, 16, 32]),
+            ArgDim::new("m", vec![2, 4, 8, 16, 32, 64]),
+        ]),
+        _ => return None,
+    })
 }
 
 /// Build a design's default workload: the multi-scenario set from
@@ -137,6 +160,7 @@ pub fn try_build(name: &str) -> Option<BenchDesign> {
         "ResMLP" => dnn::resmlp(),
         "fig2" => fig2::mult_by_2(16),
         "flowgnn_pna" => flowgnn::pna_default(),
+        "mini_dnn" => dnn::mini_dnn_default(),
         _ => return None,
     })
 }
@@ -205,9 +229,33 @@ mod tests {
         assert_eq!(w.num_scenarios(), 4);
         let w = build_workload("fig2").unwrap();
         assert_eq!(w.num_scenarios(), 3);
+        let w = build_workload("mini_dnn").unwrap();
+        assert_eq!(w.num_scenarios(), 3);
         let w = build_workload("bicg").unwrap();
         assert!(w.is_single());
         assert!(build_workload("nope").is_none());
+    }
+
+    #[test]
+    fn arg_spaces_cover_scenario_args() {
+        // Every design with an arg space traces under every point, and
+        // its default scenario args are points of the space.
+        for name in ["fig2", "flowgnn_pna", "mini_dnn"] {
+            let a = arg_space(name).unwrap();
+            let bd = build(name);
+            assert_eq!(a.num_args(), bd.design.num_args);
+            for (_, args) in scenario_args(name).unwrap() {
+                assert!(
+                    a.encode(&args).is_some(),
+                    "{name}: scenario args {args:?} outside its arg space"
+                );
+            }
+            // A corner of the space traces successfully.
+            let corner = a.decode(&vec![u32::MAX; a.num_args()]);
+            collect_trace(&bd.design, &corner)
+                .unwrap_or_else(|e| panic!("{name}: corner {corner:?} failed: {e}"));
+        }
+        assert!(arg_space("gemm").is_none());
     }
 
     #[test]

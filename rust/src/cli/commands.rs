@@ -2,6 +2,7 @@
 
 use super::Args;
 use crate::bench_suite;
+use crate::dse::advhunt::{self, Certificate, DistillConfig, HuntConfig};
 use crate::dse::{drive, CancelToken, EvalPoint, Evaluator};
 use crate::opt::objective::select_highlight;
 use crate::opt::{self, Space};
@@ -63,6 +64,10 @@ fn load_workload(args: &Args) -> Result<(String, Arc<Workload>)> {
         arg_sets
     };
     let w = Workload::from_design_args(&design, &sets)?;
+    // e.g. duplicate --args occurrences folded into one weighted scenario.
+    for note in w.notes() {
+        println!("note: {note}");
+    }
     if let Some(out) = args.get("save-trace") {
         crate::trace::serde::save(w.primary(), out)?;
         println!("saved trace to {out}");
@@ -148,12 +153,19 @@ pub fn list() -> Result<()> {
         );
     }
     println!("specials (data-dependent control flow; traces are argument-specific):");
-    for n in ["fig2", "flowgnn_pna"] {
+    for n in ["fig2", "flowgnn_pna", "mini_dnn"] {
         let bd = bench_suite::build(n);
+        // [arg-space]: the design exposes a finite kernel-argument space,
+        // so `certify` / `hunt-scenarios` can hunt it adversarially.
         println!(
-            "  {n:<28} {:>5} FIFOs  {:>2} args",
+            "  {n:<28} {:>5} FIFOs  {:>2} args{}",
             bd.design.num_fifos(),
-            bd.design.num_args
+            bd.design.num_args,
+            if bench_suite::arg_space(n).is_some() {
+                "  [arg-space]"
+            } else {
+                ""
+            }
         );
     }
     Ok(())
@@ -167,15 +179,7 @@ pub fn info(args: &Args) -> Result<()> {
     println!("FIFOs        : {}", w.num_fifos());
     println!("scenarios    : {}", w.num_scenarios());
     if w.num_scenarios() > 1 {
-        for s in w.scenarios() {
-            println!(
-                "    {:<20} args {:?}  {:>8} ops  weight {}",
-                s.name,
-                s.trace.args,
-                s.trace.total_ops(),
-                s.weight
-            );
-        }
+        print_scenario_table(&w);
     }
     println!("groups       : {}", space.groups.len());
     println!("trace ops    : {}", w.total_ops());
@@ -193,6 +197,46 @@ pub fn info(args: &Args) -> Result<()> {
         None => println!("Baseline-Min : DEADLOCK"),
     }
     Ok(())
+}
+
+/// Per-scenario pressure table: where each scenario's occupancy peaks
+/// and deadlock floors land, and whether the scenario-bank distillation
+/// would keep it or fold it into a dominating sibling. Explains the
+/// `--distill` partition before an optimize run commits to it.
+fn print_scenario_table(w: &Workload) {
+    use crate::sim::scenario::{distill_partition, scenario_profiles};
+    let profiles = scenario_profiles(w);
+    let (kept, dominators) = distill_partition(&profiles);
+    println!(
+        "    {:<20} {:<16} {:>8} {:>9} {:>9} {:>10}  distill",
+        "scenario", "args", "ops", "Σpeak", "Σfloor", "base lat"
+    );
+    for (i, (s, p)) in w.scenarios().iter().zip(&profiles).enumerate() {
+        let verdict = if kept.contains(&i) {
+            "keep".to_string()
+        } else {
+            let dom = dominators
+                .iter()
+                .find(|&&(d, _)| d == i)
+                .map(|&(_, j)| profiles[j].name.clone())
+                .unwrap_or_default();
+            format!("drop (≼ {dom})")
+        };
+        println!(
+            "    {:<20} {:<16} {:>8} {:>9} {:>9} {:>10}  {}",
+            s.name,
+            format!("{:?}", s.trace.args),
+            s.trace.total_ops(),
+            p.peak_occ.iter().map(|&o| o as u64).sum::<u64>(),
+            p.floors.iter().map(|&f| f as u64).sum::<u64>(),
+            p.base_latency,
+            verdict
+        );
+    }
+    println!(
+        "    (Σpeak / Σfloor / blocked-set dominance decides drop; dropped \
+         scenarios are re-verified against every frontier point)"
+    );
 }
 
 /// The per-channel `[lower, cap]` ranges the optimizers actually search,
@@ -300,6 +344,13 @@ pub fn optimize(args: &Args) -> Result<()> {
     let backend = parse_backend(args)?;
     let timeout_secs = args.get_positive_f64("timeout-secs")?;
 
+    if args.has_flag("distill") {
+        if args.has_flag("xla") {
+            bail!("--distill uses the native BRAM backend (drop --xla)");
+        }
+        return optimize_distilled_cmd(args, &name, &w);
+    }
+
     let mut ev = if args.has_flag("xla") {
         let analytics = crate::runtime::BatchAnalytics::load_default()?;
         println!("batched analytics: platform {}", analytics.platform());
@@ -386,7 +437,8 @@ pub fn optimize(args: &Args) -> Result<()> {
         );
     }
     let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
-    if let Some(star) = select_highlight(&pts, alpha, base_lat, base.bram) {
+    let star = select_highlight(&pts, alpha, base_lat, base.bram);
+    if let Some(star) = star {
         let s = &front[star];
         println!(
             "  ★ highlighted (α={alpha}): lat {} ({:.4}×), bram {} ({:.1}% of max)",
@@ -464,9 +516,19 @@ pub fn optimize(args: &Args) -> Result<()> {
         ascii::scatter(&series, 64, 16, "latency (cycles)", "BRAM")
     );
 
+    // --certify: adversarially hunt the design's kernel-argument space
+    // for a scenario that deadlocks the config we are about to ship (the
+    // ★ highlight, falling back to the first frontier point).
+    let cert = if args.has_flag("certify") {
+        let target = star.map(|i| &front[i]).or_else(|| front.first());
+        certify_front_point(args, &name, target)?
+    } else {
+        None
+    };
+
     if let Some(out) = args.get("out") {
         let front_refs: Vec<&EvalPoint> = front.iter().collect();
-        let j = report::run_to_json(
+        let mut j = report::run_to_json(
             &name,
             &opt_name,
             seed,
@@ -476,10 +538,71 @@ pub fn optimize(args: &Args) -> Result<()> {
             dt,
             Some(&ev),
         );
+        if let (Some(c), crate::util::json::Json::Obj(map)) = (&cert, &mut j) {
+            map.insert("certificate".to_string(), c.to_json());
+        }
         report::write_file(out, &j.to_string_pretty())?;
         println!("  wrote {out}");
     }
     Ok(())
+}
+
+/// Shared `--certify` tail for optimize runs (plain and distilled).
+fn certify_front_point(
+    args: &Args,
+    name: &str,
+    target: Option<&EvalPoint>,
+) -> Result<Option<Certificate>> {
+    let Some(p) = target else {
+        println!("  certify: no feasible frontier point to certify");
+        return Ok(None);
+    };
+    // `--optimizer`/`--budget` belong to the DSE run here, so the hunt
+    // reads `--hunt-optimizer`/`--certify-budget` instead.
+    let cfg = hunt_config_from(args, "hunt-optimizer", "certify-budget")?;
+    match advhunt::certify_design(name, &p.depths, &cfg) {
+        Some(c) => {
+            println!(
+                "  certificate: {}  ({} scenario(s) tested, {} sims, {})",
+                c.verdict(),
+                c.scenarios_tested,
+                c.sims,
+                fmt_duration(c.elapsed_secs)
+            );
+            Ok(Some(c))
+        }
+        None => {
+            println!(
+                "  certify: design '{name}' exposes no kernel-argument space \
+                 (static trace — nothing to hunt)"
+            );
+            Ok(None)
+        }
+    }
+}
+
+/// Build a [`HuntConfig`] from the shared hunt flags. The optimizer and
+/// budget key names are passed in because `optimize --certify` reserves
+/// `--optimizer`/`--budget` for the DSE run itself.
+fn hunt_config_from(args: &Args, opt_key: &str, budget_key: &str) -> Result<HuntConfig> {
+    let mut cfg = HuntConfig {
+        optimizer: args.get(opt_key).unwrap_or("auto").to_string(),
+        seed: args.get_u64("seed", 1)?,
+        budget: args.get_u64(budget_key, 64)? as usize,
+        jobs: args.get_u64("jobs", 1)? as usize,
+        cancel: CancelToken::new(),
+    };
+    if !advhunt::HUNT_OPTIMIZERS.contains(&cfg.optimizer.as_str()) {
+        bail!(
+            "hunt optimizer '{}' not in {:?}",
+            cfg.optimizer,
+            advhunt::HUNT_OPTIMIZERS
+        );
+    }
+    if let Some(t) = args.get_positive_f64("timeout-secs")? {
+        cfg.cancel = CancelToken::with_timeout(std::time::Duration::from_secs_f64(t));
+    }
+    Ok(cfg)
 }
 
 pub fn hunt(args: &Args) -> Result<()> {
@@ -505,6 +628,278 @@ pub fn hunt(args: &Args) -> Result<()> {
             println!("{name}: hunter hit --timeout-secs before finding a feasible config")
         }
         None => println!("{name}: hunter failed within budget"),
+    }
+    Ok(())
+}
+
+/// `optimize --distill`: run the inner DSE loop on the dominance-
+/// distilled scenario bank with the full-bank re-verify fixpoint.
+/// History, front, and highlight are bit-identical to the plain path —
+/// only the scenario-simulation count changes.
+fn optimize_distilled_cmd(args: &Args, name: &str, w: &Arc<Workload>) -> Result<()> {
+    let opt_name = args.get("optimizer").unwrap_or("grouped_sa").to_string();
+    let budget = args.get_u64("budget", 1000)? as usize;
+    let seed = args.get_u64("seed", 1)?;
+    let jobs = match args.get("jobs") {
+        Some(_) => args.get_u64("jobs", 4)?,
+        None => args.get_u64("threads", 4)?,
+    } as usize;
+    let alpha = args.get_f64("alpha", 0.7)?;
+    let mut cfg = DistillConfig {
+        optimizer: opt_name.clone(),
+        seed,
+        budget,
+        jobs,
+        prune: !args.has_flag("no-prune"),
+        bounds: !args.has_flag("no-bounds"),
+        backend: parse_backend(args)?,
+        cancel: CancelToken::new(),
+    };
+    if let Some(t) = args.get_positive_f64("timeout-secs")? {
+        cfg.cancel = CancelToken::with_timeout(std::time::Duration::from_secs_f64(t));
+    }
+    let space = Space::from_workload(w);
+    let t0 = std::time::Instant::now();
+    let out = advhunt::optimize_distilled(w, &space, &cfg);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name} × {opt_name} (distilled): kept {}/{} scenario(s){}, {} fixpoint iteration(s)",
+        out.kept_final.len(),
+        w.num_scenarios(),
+        if out.promotions.is_empty() {
+            String::new()
+        } else {
+            format!(" after promoting {:?}", out.promotions)
+        },
+        out.iterations
+    );
+    println!(
+        "  scenario sims: {} inner + {} verify, {} evals in {} → {} Pareto points",
+        out.inner_scenario_sims,
+        out.verify_scenario_sims,
+        out.history.len(),
+        fmt_duration(dt),
+        out.front.len()
+    );
+    if out.truncated {
+        println!(
+            "  NOTE: hit --timeout-secs {} — best-so-far front; the full-bank fixpoint \
+             is NOT verified",
+            args.get_positive_f64("timeout-secs")?.unwrap_or(0.0)
+        );
+    }
+    let base_lat = out.baseline_max.latency.unwrap();
+    println!(
+        "  Baseline-Max: {} cycles / {} BRAM   Baseline-Min: {}",
+        base_lat,
+        out.baseline_max.bram,
+        match out.baseline_min.latency {
+            Some(l) => format!("{l} cycles / {} BRAM", out.baseline_min.bram),
+            None => "DEADLOCK".into(),
+        }
+    );
+    for p in &out.front {
+        println!(
+            "    lat {:>10}  bram {:>5}  ({:.4}x)",
+            p.latency.unwrap(),
+            p.bram,
+            p.latency.unwrap() as f64 / base_lat as f64
+        );
+    }
+    let pts: Vec<(u64, u32)> = out
+        .front
+        .iter()
+        .map(|p| (p.latency.unwrap(), p.bram))
+        .collect();
+    let star = select_highlight(&pts, alpha, base_lat, out.baseline_max.bram);
+    if let Some(si) = star {
+        let s = &out.front[si];
+        println!(
+            "  ★ highlighted (α={alpha}): lat {} ({:.4}×), bram {}",
+            s.latency.unwrap(),
+            s.latency.unwrap() as f64 / base_lat as f64,
+            s.bram
+        );
+    }
+    let cert = if args.has_flag("certify") {
+        let target = star.map(|i| &out.front[i]).or_else(|| out.front.first());
+        certify_front_point(args, name, target)?
+    } else {
+        None
+    };
+    if let Some(path) = args.get("out") {
+        use crate::util::json::Json;
+        let front_refs: Vec<&EvalPoint> = out.front.iter().collect();
+        let mut j = report::run_to_json(
+            name, &opt_name, seed, budget, &out.history, &front_refs, dt, None,
+        );
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "distill".to_string(),
+                Json::obj(vec![
+                    (
+                        "kept_initial",
+                        Json::nums(&out.kept_initial.iter().map(|&i| i as f64).collect::<Vec<_>>()),
+                    ),
+                    (
+                        "kept_final",
+                        Json::nums(&out.kept_final.iter().map(|&i| i as f64).collect::<Vec<_>>()),
+                    ),
+                    (
+                        "promotions",
+                        Json::nums(&out.promotions.iter().map(|&i| i as f64).collect::<Vec<_>>()),
+                    ),
+                    ("iterations", Json::Num(out.iterations as f64)),
+                    ("inner_scenario_sims", Json::Num(out.inner_scenario_sims as f64)),
+                    ("verify_scenario_sims", Json::Num(out.verify_scenario_sims as f64)),
+                    ("truncated", Json::Bool(out.truncated)),
+                ]),
+            );
+            if let Some(c) = &cert {
+                map.insert("certificate".to_string(), c.to_json());
+            }
+        }
+        report::write_file(path, &j.to_string_pretty())?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+/// `fifoadvisor certify`: robustness certificate for a concrete config —
+/// hunt the design's kernel-argument space for a scenario that deadlocks
+/// it, or report "no counterexample in N scenarios / T seconds".
+pub fn certify(args: &Args) -> Result<()> {
+    let name = args.require("design")?.to_string();
+    let Some(space) = bench_suite::arg_space(&name) else {
+        bail!(
+            "design '{name}' exposes no kernel-argument space — nothing to hunt \
+             (see the [arg-space] markers in `fifoadvisor list`)"
+        );
+    };
+    let bd = bench_suite::try_build(&name)
+        .ok_or_else(|| anyhow!("unknown design '{name}' (see `fifoadvisor list`)"))?;
+    let w = bench_suite::build_workload(&name).expect("arg-space designs build workloads");
+    let depths: Vec<u32> = match args.get_list("depths")? {
+        Some(d) => {
+            if d.len() != w.num_fifos() {
+                bail!(
+                    "--depths has {} entries, design '{name}' has {} FIFOs",
+                    d.len(),
+                    w.num_fifos()
+                );
+            }
+            d.into_iter().map(|x| x.max(1) as u32).collect()
+        }
+        None => match args.get("baseline").unwrap_or("max") {
+            "max" => w.baseline_max(),
+            "min" => w.baseline_min(),
+            other => bail!("--baseline must be max|min, got '{other}'"),
+        },
+    };
+    let cfg = hunt_config_from(args, "optimizer", "budget")?;
+    let cert = advhunt::certify(&bd.design, &name, &space, &depths, &cfg);
+    println!("{name} @ {depths:?}");
+    println!("  verdict : {}", cert.verdict());
+    match &cert.counterexample {
+        Some(ce) => println!(
+            "  breaking args {:?} deadlock the config (blocked channels {:?}{})",
+            ce.args,
+            ce.blocked,
+            if ce.analytic { ", proven analytically" } else { "" }
+        ),
+        None => println!(
+            "  no counterexample in {} scenario(s) / {}{}",
+            cert.scenarios_tested,
+            fmt_duration(cert.elapsed_secs),
+            if cert.is_exhaustive() {
+                " — the entire argument space"
+            } else {
+                ""
+            }
+        ),
+    }
+    println!(
+        "  {} sims over a {}-point space{}",
+        cert.sims,
+        match cert.space_points {
+            Some(n) => n.to_string(),
+            None => "?".into(),
+        },
+        if cert.truncated {
+            " (truncated by budget/timeout)"
+        } else {
+            ""
+        }
+    );
+    if let Some(out) = args.get("out") {
+        report::write_file(out, &cert.to_json().to_string_pretty())?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+/// `fifoadvisor hunt-scenarios`: adversarial scenario mining over a
+/// design's kernel-argument space — break a given config (`--depths`) or
+/// find the maximum-pressure scenario; then show the dominance partition
+/// distillation would apply to the design's default scenario bank.
+pub fn hunt_scenarios(args: &Args) -> Result<()> {
+    let name = args.require("design")?.to_string();
+    let Some(space) = bench_suite::arg_space(&name) else {
+        bail!(
+            "design '{name}' exposes no kernel-argument space — nothing to hunt \
+             (see the [arg-space] markers in `fifoadvisor list`)"
+        );
+    };
+    let bd = bench_suite::try_build(&name)
+        .ok_or_else(|| anyhow!("unknown design '{name}' (see `fifoadvisor list`)"))?;
+    let depths: Option<Vec<u32>> = args
+        .get_list("depths")?
+        .map(|d| d.into_iter().map(|x| x.max(1) as u32).collect());
+    if let Some(d) = &depths {
+        if d.len() != bd.design.num_fifos() {
+            bail!(
+                "--depths has {} entries, design '{name}' has {} FIFOs",
+                d.len(),
+                bd.design.num_fifos()
+            );
+        }
+    }
+    let cfg = hunt_config_from(args, "optimizer", "budget")?;
+    let r = advhunt::hunt(&bd.design, &space, depths.as_deref(), &cfg);
+    match (&depths, &r.counterexample) {
+        (Some(_), Some(ce)) => println!(
+            "{name}: BROKEN — args {:?} deadlock the config (blocked channels {:?}{})",
+            ce.args,
+            ce.blocked,
+            if ce.analytic { ", proven analytically" } else { "" }
+        ),
+        (Some(_), None) => println!(
+            "{name}: no breaking scenario among {} tested",
+            r.scenarios_tested
+        ),
+        (None, _) => match &r.best {
+            Some((a, p)) => println!(
+                "{name}: max-pressure scenario args {a:?} (pressure {p}, {} tested)",
+                r.scenarios_tested
+            ),
+            None => println!("{name}: no scenario evaluated"),
+        },
+    }
+    println!(
+        "  {} sims, {} analytic floor hit(s), {}{}",
+        r.sims,
+        r.floor_hits,
+        fmt_duration(r.elapsed_secs),
+        if r.truncated {
+            " (truncated by budget/timeout)"
+        } else {
+            ""
+        }
+    );
+    let w = bench_suite::build_workload(&name).expect("arg-space designs build workloads");
+    if w.num_scenarios() > 1 {
+        println!("default-bank distillation partition:");
+        print_scenario_table(&w);
     }
     Ok(())
 }

@@ -9,6 +9,11 @@
 //!                      [--out results/run.json] [--no-prune] [--no-bounds]
 //!                      [--backend fast|compiled|batched] [--timeout-secs T]
 //! fifoadvisor hunt     --design NAME [--timeout-secs T]
+//! fifoadvisor certify  --design NAME --depths 2,4,.. [--budget 64]
+//!                      [--optimizer auto] [--seed 1] [--jobs 4]
+//!                      [--timeout-secs T] [--out cert.json]
+//! fifoadvisor hunt-scenarios --design NAME [--depths 2,4,..]
+//!                      [--budget 64] [--optimizer auto] [--seed 1]
 //! fifoadvisor sweep    --config sweep.json [--resume] [--shard i/n]
 //!                      [--out-dir DIR]
 //! ```
@@ -41,6 +46,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         "simulate" => commands::simulate(&args),
         "optimize" => commands::optimize(&args),
         "hunt" => commands::hunt(&args),
+        "certify" => commands::certify(&args),
+        "hunt-scenarios" => commands::hunt_scenarios(&args),
         "sweep" => commands::sweep(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -60,7 +67,8 @@ USAGE:
   fifoadvisor simulate --design NAME [--baseline max|min | --depths D1,D2,..]
   fifoadvisor optimize --design NAME --optimizer OPT [--budget N] [--seed S]
                        [--jobs N] [--xla] [--alpha 0.7] [--out FILE.json]
-                       [--no-prune] [--no-bounds]
+                       [--no-prune] [--no-bounds] [--distill]
+                       [--certify] [--certify-budget N]
                        [--backend fast|compiled|batched]
                        (--jobs sizes the persistent worker pool; --threads
                         is accepted as a legacy alias. --no-prune disables
@@ -80,8 +88,35 @@ USAGE:
                         --timeout-secs cuts the run off at the next
                         ask/tell round once the wall-clock budget passes;
                         the best-so-far front is reported and the run
-                        JSON is flagged \"truncated\")
+                        JSON is flagged \"truncated\".
+                        --distill runs the inner loop on the
+                        dominance-distilled scenario bank with a
+                        full-bank re-verify fixpoint — results stay
+                        bit-identical, only scenario simulations drop.
+                        --certify appends a robustness certificate for
+                        the highlighted config: an adversarial hunt over
+                        the design's kernel-argument space, budget
+                        --certify-budget [64])
   fifoadvisor hunt     --design NAME [--timeout-secs T]
+  fifoadvisor certify  --design NAME (--depths D1,D2,.. | --baseline max|min)
+                       [--budget 64] [--optimizer auto] [--seed 1]
+                       [--jobs N] [--timeout-secs T] [--out cert.json]
+                       (hunts the design's kernel-argument space for a
+                        scenario that deadlocks the given config; reports
+                        either a concrete breaking arg vector or \"no
+                        counterexample in N scenarios / T seconds\". The
+                        auto optimizer enumerates the space exhaustively
+                        when it fits the budget, making clean verdicts
+                        exact. Only designs with a finite argument space
+                        — see the [arg-space] markers in `list`)
+  fifoadvisor hunt-scenarios --design NAME [--depths D1,D2,..]
+                       [--budget 64] [--optimizer auto] [--seed 1]
+                       [--jobs N] [--timeout-secs T]
+                       (adversarial scenario mining: with --depths, hunt
+                        for a breaking scenario; without, report the
+                        maximum-pressure scenario of the argument space.
+                        Also prints the dominance partition the
+                        scenario-bank distillation would use)
   fifoadvisor sweep    --config sweep.json [--resume] [--shard i/n]
                        [--out-dir DIR]
                        (the fault-tolerant grid orchestrator: every cell

@@ -1,0 +1,890 @@
+//! Adversarial scenario hunting, robustness certificates, and
+//! scenario-bank distillation.
+//!
+//! The paper's central claim — runtime simulation is the only reliable
+//! deadlock-safe analysis for data-dependent designs — cuts both ways: a
+//! kernel-argument vector missing from the user's scenario bank can hide
+//! a deadlock in a config reported "feasible". Millisecond incremental
+//! re-evaluation makes an *outer* adversarial search over the argument
+//! space affordable. This module provides the three pieces:
+//!
+//! 1. **[`hunt`]** — an adversarial outer loop over a design's finite
+//!    kernel-argument space ([`ArgSpace`]), reusing the existing ask/tell
+//!    optimizers with *args-as-genome* ([`crate::opt::genome`]): each
+//!    proposal decodes to a concrete arg vector, its trace is collected,
+//!    and the candidate scenario is scored by counterexample status
+//!    (deadlock of the config under test — detected analytically via
+//!    [`DepthBounds::below_floor`] when possible, by simulation
+//!    otherwise) and then by peak-occupancy pressure. Without a config
+//!    under test the hunt maximizes pressure outright (worst-case
+//!    scenario mining).
+//! 2. **[`certify`]** — a robustness certificate for an optimized
+//!    config: either a concrete breaking arg vector, or "no
+//!    counterexample in N scenarios / T seconds" (bounded-exhaustiveness
+//!    certificates are exact: when the space fits the budget the `auto`
+//!    optimizer enumerates it exhaustively).
+//! 3. **[`optimize_distilled`]** — scenario-bank distillation: drop
+//!    scenarios whose occupancy peaks, floors, and deadlock-relevant
+//!    blocked sets are dominated by a sibling
+//!    ([`distill_partition`]), run the inner DSE loop on the distilled
+//!    bank, then re-verify every distilled-evaluated feasible front
+//!    candidate against the full bank, promoting violators and
+//!    re-entering the loop until fixpoint. At fixpoint the merged
+//!    history is **bit-identical** to a from-scratch full-bank run
+//!    (same optimizer, same seed): infeasible answers are sound for
+//!    free (a deadlock on a kept scenario is a deadlock on the full
+//!    bank; analytic floors and oracle seeds come from the *full*
+//!    workload's [`DepthBounds`] via
+//!    [`EvalEngine::set_depth_bounds`]), and the re-verify pass proves
+//!    every feasible answer's worst-case latency is already attained on
+//!    the kept scenarios.
+//!
+//! Hunts and distilled runs respect [`CancelToken`] budgets (wall-clock
+//! deadline + simulation budget, checked per ask/tell round) and surface
+//! a `truncated` flag, so the sweep orchestrator can checkpoint their
+//! outcomes into its manifest like any other cell.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::cancel::CancelToken;
+use super::engine::{EvalEngine, EvalResult};
+use super::EvalPoint;
+use crate::ir::Design;
+use crate::opt::bounds::DepthBounds;
+use crate::opt::genome::ArgSpace;
+use crate::opt::pareto::{pareto_front, ObjPoint};
+use crate::opt::{by_name, AskCtx, Optimizer, Space};
+use crate::sim::fast::{FastSim, SimOutcome};
+use crate::sim::scenario::{distill_partition, scenario_profiles, ScenarioSim};
+use crate::sim::BackendKind;
+use crate::trace::collect_trace;
+use crate::trace::workload::Workload;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Adversarial hunting
+// ---------------------------------------------------------------------------
+
+/// Optimizer names the hunter accepts (`auto` picks exhaustive when the
+/// space fits the budget, SA otherwise). The stats-driven depth
+/// optimizers (greedy, vitis_hunter) are excluded: per-channel stall
+/// statistics are meaningless over an argument genome.
+pub const HUNT_OPTIMIZERS: [&str; 8] = [
+    "auto",
+    "exhaustive",
+    "random",
+    "grouped_random",
+    "sa",
+    "grouped_sa",
+    "nsga2",
+    "grouped_nsga2",
+];
+
+/// Pressure scores are told to the (minimizing) optimizers as
+/// `BIAS − pressure`, so maximizing pressure is minimizing "latency".
+const PRESSURE_BIAS: u64 = 1 << 40;
+
+/// Hunt parameters.
+#[derive(Debug, Clone)]
+pub struct HuntConfig {
+    /// One of [`HUNT_OPTIMIZERS`].
+    pub optimizer: String,
+    /// Optimizer seed (hunts are deterministic given the seed).
+    pub seed: u64,
+    /// Maximum argument-vector proposals.
+    pub budget: usize,
+    /// Worker threads for candidate trace collection + simulation.
+    /// Results are bit-identical between serial and parallel runs.
+    pub jobs: usize,
+    /// Cooperative cancellation (deadline / simulation budget), checked
+    /// per ask/tell round.
+    pub cancel: CancelToken,
+}
+
+impl Default for HuntConfig {
+    fn default() -> HuntConfig {
+        HuntConfig {
+            optimizer: "auto".to_string(),
+            seed: 1,
+            budget: 64,
+            jobs: 1,
+            cancel: CancelToken::new(),
+        }
+    }
+}
+
+/// A concrete breaking scenario found by the hunter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CounterExample {
+    /// The kernel-argument vector whose trace deadlocks the config.
+    pub args: Vec<i64>,
+    /// Channels involved in the deadlock (blocked-on channels, sorted;
+    /// for analytic counterexamples, the channels below their floor).
+    pub blocked: Vec<usize>,
+    /// True when the deadlock was proven analytically (config below the
+    /// candidate trace's depth floor) without a simulation.
+    pub analytic: bool,
+}
+
+/// Outcome of one hunt.
+#[derive(Debug, Clone)]
+pub struct HuntReport {
+    /// First breaking scenario found in proposal order, if any.
+    pub counterexample: Option<CounterExample>,
+    /// Distinct argument vectors evaluated.
+    pub scenarios_tested: usize,
+    /// Candidate-scenario simulations run.
+    pub sims: u64,
+    /// Counterexamples answered analytically (no simulation).
+    pub floor_hits: u64,
+    /// Highest-pressure non-breaking scenario seen `(args, pressure)`.
+    pub best: Option<(Vec<i64>, u64)>,
+    /// Wall-clock seconds.
+    pub elapsed_secs: f64,
+    /// True when the cancel token stopped the hunt early.
+    pub truncated: bool,
+}
+
+/// One evaluated candidate scenario (memoized per distinct arg vector).
+#[derive(Debug, Clone)]
+struct CandEval {
+    /// Blocked channels when the candidate breaks the config.
+    counterexample: Option<Vec<usize>>,
+    analytic: bool,
+    /// Occupancy pressure (Σ peak occupancy + Σ analytic floors).
+    pressure: u64,
+    sims: u64,
+}
+
+/// Pick the hunt optimizer: `auto` resolves to exhaustive when the whole
+/// space fits the budget (making clean certificates exact), SA
+/// otherwise. Returns `None` for names outside [`HUNT_OPTIMIZERS`].
+fn hunt_optimizer(cfg: &HuntConfig, space: &ArgSpace) -> Option<Box<dyn Optimizer>> {
+    let name: &str = if cfg.optimizer == "auto" {
+        match space.num_points() {
+            Some(n) if n <= cfg.budget => "exhaustive",
+            _ => "sa",
+        }
+    } else if HUNT_OPTIMIZERS.contains(&cfg.optimizer.as_str()) {
+        &cfg.optimizer
+    } else {
+        return None;
+    };
+    by_name(name, cfg.seed)
+}
+
+/// Evaluate one candidate arg vector against the config under test (or,
+/// with `depths == None`, probe its pressure at its own Baseline-Max).
+fn eval_candidate(design: &Design, args: &[i64], depths: Option<&[u32]>) -> CandEval {
+    let trace = collect_trace(design, args)
+        .unwrap_or_else(|e| panic!("arg-space point {args:?} failed to trace: {e}"));
+    let bounds = DepthBounds::for_trace(&trace);
+    let floor_pressure: u64 = bounds.floors.iter().map(|&f| f as u64).sum();
+    if let Some(d) = depths {
+        if bounds.below_floor(d) {
+            let blocked: Vec<usize> = bounds
+                .floors
+                .iter()
+                .enumerate()
+                .filter(|&(c, &f)| d[c] < f)
+                .map(|(c, _)| c)
+                .collect();
+            return CandEval {
+                counterexample: Some(blocked),
+                analytic: true,
+                pressure: u64::MAX,
+                sims: 0,
+            };
+        }
+    }
+    let probe: Vec<u32> = match depths {
+        Some(d) => d.to_vec(),
+        None => trace.baseline_max(),
+    };
+    let mut sim = FastSim::new(Arc::new(trace));
+    let (out, stats) = sim.simulate_with_stats(&probe);
+    match out {
+        SimOutcome::Deadlock { blocked } => {
+            let mut chans: Vec<usize> = blocked.iter().map(|b| b.channel).collect();
+            chans.sort_unstable();
+            chans.dedup();
+            CandEval {
+                counterexample: Some(chans),
+                analytic: false,
+                pressure: u64::MAX,
+                sims: 1,
+            }
+        }
+        SimOutcome::Done { .. } => CandEval {
+            counterexample: None,
+            analytic: false,
+            pressure: stats.max_occupancy.iter().map(|&o| o as u64).sum::<u64>()
+                + floor_pressure,
+            sims: 1,
+        },
+    }
+}
+
+/// Evaluate fresh candidates, fanning out over `jobs` threads in
+/// deterministic order-preserving chunks (results are reassembled in
+/// input order, so serial and parallel hunts are bit-identical).
+fn eval_fresh(
+    design: &Design,
+    fresh: &[Vec<i64>],
+    depths: Option<&[u32]>,
+    jobs: usize,
+) -> Vec<CandEval> {
+    if jobs <= 1 || fresh.len() <= 1 {
+        return fresh
+            .iter()
+            .map(|a| eval_candidate(design, a, depths))
+            .collect();
+    }
+    let chunk = fresh.len().div_ceil(jobs);
+    let mut out: Vec<Option<CandEval>> = vec![None; fresh.len()];
+    std::thread::scope(|s| {
+        for (slots, args) in out.chunks_mut(chunk).zip(fresh.chunks(chunk)) {
+            s.spawn(move || {
+                for (slot, a) in slots.iter_mut().zip(args) {
+                    *slot = Some(eval_candidate(design, a, depths));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Hunt the design's argument space for a scenario that breaks `depths`
+/// (deadlocks under the config), or — with `depths == None` — for the
+/// maximum-pressure scenario. Stops at the first counterexample (in
+/// proposal order — deterministic under a fixed seed and independent of
+/// `jobs`), budget exhaustion, or cancellation.
+pub fn hunt(
+    design: &Design,
+    space: &ArgSpace,
+    depths: Option<&[u32]>,
+    cfg: &HuntConfig,
+) -> HuntReport {
+    let start = Instant::now();
+    let gspace = space.genome_space();
+    let mut opt = hunt_optimizer(cfg, space).unwrap_or_else(|| {
+        panic!(
+            "unknown hunt optimizer '{}' (expected one of {:?})",
+            cfg.optimizer, HUNT_OPTIMIZERS
+        )
+    });
+    let batch_hint = (cfg.jobs.max(1) * 8).clamp(16, 128);
+    let mut memo: HashMap<Vec<i64>, CandEval> = HashMap::new();
+    let mut sims = 0u64;
+    let mut floor_hits = 0u64;
+    let mut best: Option<(Vec<i64>, u64)> = None;
+    let mut counterexample = None;
+    let mut truncated = false;
+    let mut proposed = 0usize;
+    'rounds: loop {
+        if opt.done() {
+            break;
+        }
+        if cfg.cancel.triggered(sims) {
+            truncated = true;
+            break;
+        }
+        let ctx = AskCtx {
+            space: &gspace,
+            budget_left: cfg.budget.saturating_sub(proposed),
+            batch_hint,
+        };
+        let batch = opt.ask(&ctx);
+        if batch.is_empty() {
+            break;
+        }
+        proposed += batch.len();
+        let decoded: Vec<Vec<i64>> = batch.iter().map(|p| space.decode(p)).collect();
+        let mut fresh: Vec<Vec<i64>> = Vec::new();
+        {
+            let mut seen: HashSet<&[i64]> = HashSet::new();
+            for a in &decoded {
+                if !memo.contains_key(a) && seen.insert(a) {
+                    fresh.push(a.clone());
+                }
+            }
+        }
+        let evals = eval_fresh(design, &fresh, depths, cfg.jobs);
+        for (a, e) in fresh.into_iter().zip(evals) {
+            sims += e.sims;
+            if e.analytic {
+                floor_hits += 1;
+            }
+            memo.insert(a, e);
+        }
+        let results: Vec<EvalResult> = decoded
+            .iter()
+            .zip(&batch)
+            .map(|(a, p)| {
+                let e = &memo[a];
+                EvalResult {
+                    depths: p.clone(),
+                    latency: if e.counterexample.is_some() {
+                        None
+                    } else {
+                        Some(PRESSURE_BIAS.saturating_sub(e.pressure))
+                    },
+                    bram: 0,
+                    stats: None,
+                    blocked: Vec::new(),
+                }
+            })
+            .collect();
+        opt.tell(&results);
+        for a in &decoded {
+            let e = &memo[a];
+            if let Some(blocked) = &e.counterexample {
+                counterexample = Some(CounterExample {
+                    args: a.clone(),
+                    blocked: blocked.clone(),
+                    analytic: e.analytic,
+                });
+                break 'rounds;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, bp)) => e.pressure > *bp,
+            };
+            if better {
+                best = Some((a.clone(), e.pressure));
+            }
+        }
+    }
+    HuntReport {
+        counterexample,
+        scenarios_tested: memo.len(),
+        sims,
+        floor_hits,
+        best,
+        elapsed_secs: start.elapsed().as_secs_f64(),
+        truncated,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Robustness certificates
+// ---------------------------------------------------------------------------
+
+/// A robustness certificate for one config over one design's argument
+/// space: either a concrete breaking arg vector, or "no counterexample
+/// in N scenarios / T seconds". When the hunt enumerated the whole
+/// space without truncation, a clean certificate is *exact*.
+#[derive(Debug, Clone)]
+pub struct Certificate {
+    /// Design name the certificate is about.
+    pub design: String,
+    /// The config under test.
+    pub depths: Vec<u32>,
+    /// The breaking scenario, if one was found.
+    pub counterexample: Option<CounterExample>,
+    /// Distinct scenarios tried.
+    pub scenarios_tested: usize,
+    /// Total points in the argument space (`None` on overflow).
+    pub space_points: Option<usize>,
+    /// Simulations spent.
+    pub sims: u64,
+    /// Hunt wall-clock seconds.
+    pub elapsed_secs: f64,
+    /// True when the hunt was cut off by its cancel token.
+    pub truncated: bool,
+}
+
+impl Certificate {
+    /// No counterexample found (within the tested budget).
+    pub fn is_clean(&self) -> bool {
+        self.counterexample.is_none()
+    }
+
+    /// The clean certificate covered the *entire* argument space — the
+    /// config provably cannot deadlock on any in-space scenario.
+    pub fn is_exhaustive(&self) -> bool {
+        self.is_clean()
+            && !self.truncated
+            && self.space_points == Some(self.scenarios_tested)
+    }
+
+    /// Compact verdict for sweep columns / logs, e.g.
+    /// `broken@[64, 512, 8]`, `clean-exhaustive(8)`, `clean(40)`,
+    /// `clean?(12/s truncated)`.
+    pub fn verdict(&self) -> String {
+        match &self.counterexample {
+            Some(ce) => format!("broken@{:?}", ce.args),
+            None if self.is_exhaustive() => {
+                format!("clean-exhaustive({})", self.scenarios_tested)
+            }
+            None if self.truncated => format!("clean?({} truncated)", self.scenarios_tested),
+            None => format!("clean({})", self.scenarios_tested),
+        }
+    }
+
+    /// JSON object for run records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("design", Json::Str(self.design.clone())),
+            ("depths", Json::nums(&self.depths.iter().map(|&d| d as f64).collect::<Vec<_>>())),
+            ("verdict", Json::Str(self.verdict())),
+            (
+                "counterexample",
+                match &self.counterexample {
+                    Some(ce) => Json::obj(vec![
+                        (
+                            "args",
+                            Json::Arr(ce.args.iter().map(|&a| Json::Num(a as f64)).collect()),
+                        ),
+                        (
+                            "blocked",
+                            Json::nums(
+                                &ce.blocked.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+                            ),
+                        ),
+                        ("analytic", Json::Bool(ce.analytic)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            ("scenarios_tested", Json::Num(self.scenarios_tested as f64)),
+            (
+                "space_points",
+                match self.space_points {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("sims", Json::Num(self.sims as f64)),
+            ("elapsed_secs", Json::Num(self.elapsed_secs)),
+            ("exhaustive", Json::Bool(self.is_exhaustive())),
+            ("truncated", Json::Bool(self.truncated)),
+        ])
+    }
+}
+
+/// Certify `depths` over the design's argument space (a break-mode
+/// [`hunt`]).
+pub fn certify(
+    design: &Design,
+    design_name: &str,
+    space: &ArgSpace,
+    depths: &[u32],
+    cfg: &HuntConfig,
+) -> Certificate {
+    let report = hunt(design, space, Some(depths), cfg);
+    Certificate {
+        design: design_name.to_string(),
+        depths: depths.to_vec(),
+        counterexample: report.counterexample,
+        scenarios_tested: report.scenarios_tested,
+        space_points: space.num_points(),
+        sims: report.sims,
+        elapsed_secs: report.elapsed_secs,
+        truncated: report.truncated,
+    }
+}
+
+/// [`certify`] a bench-suite design by name; `None` when the design
+/// exposes no argument space (static designs have nothing to hunt).
+pub fn certify_design(name: &str, depths: &[u32], cfg: &HuntConfig) -> Option<Certificate> {
+    let space = crate::bench_suite::arg_space(name)?;
+    let bd = crate::bench_suite::try_build(name)?;
+    Some(certify(&bd.design, name, &space, depths, cfg))
+}
+
+// ---------------------------------------------------------------------------
+// Scenario-bank distillation
+// ---------------------------------------------------------------------------
+
+/// Inner-DSE parameters for a distilled run (mirrors a sweep cell's
+/// knobs).
+#[derive(Debug, Clone)]
+pub struct DistillConfig {
+    /// Inner optimizer name ([`by_name`]).
+    pub optimizer: String,
+    pub seed: u64,
+    /// Proposal budget per fixpoint iteration (the reference full-bank
+    /// run gets the same budget).
+    pub budget: usize,
+    pub jobs: usize,
+    /// Engine pruning layer toggle (`--no-prune`).
+    pub prune: bool,
+    /// Engine analytic-bounds toggle (`--no-bounds`).
+    pub bounds: bool,
+    /// Simulation backend for both engines.
+    pub backend: BackendKind,
+    /// Cooperative cancellation across the whole fixpoint loop
+    /// (sim budget counts distilled + full + verify simulations).
+    pub cancel: CancelToken,
+}
+
+impl Default for DistillConfig {
+    fn default() -> DistillConfig {
+        DistillConfig {
+            optimizer: "sa".to_string(),
+            seed: 1,
+            budget: 200,
+            jobs: 1,
+            prune: true,
+            bounds: true,
+            backend: BackendKind::Fast,
+            cancel: CancelToken::new(),
+        }
+    }
+}
+
+/// Outcome of a distilled optimization run.
+#[derive(Debug, Clone)]
+pub struct DistillOutcome {
+    /// Merged evaluation history of the final fixpoint iteration, in
+    /// proposal order (baselines first) — bit-identical to a full-bank
+    /// run's history.
+    pub history: Vec<EvalPoint>,
+    /// Pareto front over the feasible history.
+    pub front: Vec<EvalPoint>,
+    /// Baseline-Max / Baseline-Min points (full-bank exact).
+    pub baseline_max: EvalPoint,
+    /// See [`baseline_max`](Self::baseline_max).
+    pub baseline_min: EvalPoint,
+    /// Scenario indices kept by the initial dominance partition.
+    pub kept_initial: Vec<usize>,
+    /// Scenario indices in the final (fixpoint) distilled bank.
+    pub kept_final: Vec<usize>,
+    /// Scenarios promoted back by the re-verify pass, in promotion
+    /// order.
+    pub promotions: Vec<usize>,
+    /// Fixpoint iterations run (1 = the initial partition verified
+    /// clean).
+    pub iterations: usize,
+    /// Per-scenario simulator invocations spent inside the final
+    /// iteration's inner DSE loop (the number distillation reduces).
+    pub inner_scenario_sims: u64,
+    /// Per-scenario simulator invocations spent re-verifying the front
+    /// against dropped scenarios (all iterations).
+    pub verify_scenario_sims: u64,
+    /// True when the cancel token cut the run off (the fixpoint is then
+    /// *not* guaranteed — the front is best-so-far, like a truncated
+    /// sweep cell).
+    pub truncated: bool,
+}
+
+impl DistillOutcome {
+    /// Scenarios dropped from the final bank.
+    pub fn dropped_final(&self, num_scenarios: usize) -> Vec<usize> {
+        (0..num_scenarios)
+            .filter(|i| !self.kept_final.contains(i))
+            .collect()
+    }
+}
+
+/// Run the inner DSE loop on the dominance-distilled scenario bank,
+/// re-verifying against the full bank until fixpoint. See the module
+/// docs for the bit-identity argument. The caller's `space` must be the
+/// *full* workload's space ([`Space::from_workload`]).
+pub fn optimize_distilled(
+    workload: &Arc<Workload>,
+    space: &Space,
+    cfg: &DistillConfig,
+) -> DistillOutcome {
+    let n = workload.num_scenarios();
+    let profiles = scenario_profiles(workload);
+    let (mut kept, _dominators) = distill_partition(&profiles);
+    let kept_initial = kept.clone();
+    let full_bounds = DepthBounds::for_workload(workload);
+    let mut promotions: Vec<usize> = Vec::new();
+    let mut iterations = 0usize;
+    let mut verify_scenario_sims = 0u64;
+
+    // The full-bank engine: baselines, wants_stats batches, and (by
+    // sharing its sim-count with the token check) the budget meter.
+    let mut full = EvalEngine::for_workload_full(
+        workload.clone(),
+        Box::new(super::NativeBram),
+        cfg.jobs,
+        cfg.backend,
+    );
+    full.set_prune(cfg.prune);
+    full.set_bounds(cfg.bounds);
+
+    loop {
+        iterations += 1;
+        let dropped: Vec<usize> = (0..n).filter(|i| !kept.contains(i)).collect();
+        full.reset_run(true);
+
+        // The distilled engine: the kept scenarios only, but the FULL
+        // workload's analytic bounds (floors/caps/oracle seeds), so its
+        // pruning layers answer exactly like the full engine's.
+        let sub = Arc::new(workload.subset(&kept));
+        let mut dist = EvalEngine::for_workload_full(
+            sub,
+            Box::new(super::NativeBram),
+            cfg.jobs,
+            cfg.backend,
+        );
+        dist.set_prune(cfg.prune);
+        dist.set_bounds(cfg.bounds);
+        dist.set_depth_bounds(full_bounds.clone());
+
+        let mut opt = by_name(&cfg.optimizer, cfg.seed)
+            .unwrap_or_else(|| panic!("unknown optimizer '{}'", cfg.optimizer));
+
+        // Baselines are evaluated on the full bank (their exact values
+        // land in history and reports); mirror them into the distilled
+        // oracle so both runs learn them at the same point.
+        let (bmax, bmin) = full.eval_baselines();
+        dist.note_external(&bmax.depths, bmax.latency);
+        dist.note_external(&bmin.depths, bmin.latency);
+        let mut history: Vec<EvalPoint> = vec![bmax.clone(), bmin.clone()];
+        // History indices answered by the distilled engine (the only
+        // ones whose feasible latencies need full-bank re-verification).
+        let mut dist_points: Vec<usize> = Vec::new();
+        let mut truncated = false;
+
+        // The drive loop, split across the two engines: latency-only
+        // batches run on the distilled bank, stats batches on the full
+        // bank (max-merged stats must cover every scenario), mirrored
+        // into the distilled oracle.
+        loop {
+            if opt.done() {
+                break;
+            }
+            let spent = full.n_sim + dist.n_sim + verify_scenario_sims;
+            if cfg.cancel.triggered(spent) {
+                truncated = true;
+                break;
+            }
+            let proposed = history.len() - 2;
+            let ctx = AskCtx {
+                space,
+                budget_left: cfg.budget.saturating_sub(proposed),
+                batch_hint: dist.batch_hint(),
+            };
+            let batch = opt.ask(&ctx);
+            if batch.is_empty() {
+                break;
+            }
+            let hints = opt.hints();
+            let results = if opt.wants_stats() {
+                let r = full.eval_results_hinted(&batch, &hints, true);
+                for res in &r {
+                    dist.note_external(&res.depths, res.latency);
+                }
+                r
+            } else {
+                let r = dist.eval_results_hinted(&batch, &hints, false);
+                for k in 0..r.len() {
+                    dist_points.push(history.len() + k);
+                }
+                r
+            };
+            for res in &results {
+                history.push(EvalPoint {
+                    depths: res.depths.clone(),
+                    latency: res.latency,
+                    bram: res.bram,
+                    t: full.elapsed(),
+                });
+            }
+            opt.tell(&results);
+        }
+
+        // Re-verify: every feasible distilled answer must already attain
+        // its worst case on the kept scenarios — any dropped scenario
+        // that deadlocks or exceeds the reported latency is promoted.
+        let mut violators: BTreeSet<usize> = BTreeSet::new();
+        if !dropped.is_empty() && !truncated {
+            let dropped_w = workload.subset(&dropped);
+            let mut vsim = ScenarioSim::new(&dropped_w);
+            let mut vmemo: HashMap<Box<[u32]>, Vec<Option<u64>>> = HashMap::new();
+            for &hi in &dist_points {
+                let p = &history[hi];
+                let Some(lat) = p.latency else { continue };
+                if !vmemo.contains_key(&p.depths) {
+                    vsim.simulate(&p.depths);
+                    verify_scenario_sims += vsim.last_scenarios_run() as u64;
+                    vmemo.insert(p.depths.clone(), vsim.scenario_latencies().to_vec());
+                }
+                for (j, dl) in vmemo[&p.depths].iter().enumerate() {
+                    match dl {
+                        None => {
+                            violators.insert(dropped[j]);
+                        }
+                        Some(l) if *l > lat => {
+                            violators.insert(dropped[j]);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+
+        if violators.is_empty() || truncated {
+            let pts: Vec<ObjPoint> = history
+                .iter()
+                .enumerate()
+                .filter_map(|(i, p)| {
+                    p.latency.map(|l| ObjPoint {
+                        latency: l,
+                        bram: p.bram,
+                        index: i,
+                    })
+                })
+                .collect();
+            let front: Vec<EvalPoint> = pareto_front(&pts)
+                .into_iter()
+                .map(|p| history[p.index].clone())
+                .collect();
+            let inner_scenario_sims =
+                full.stats().scenario_sims + dist.stats().scenario_sims;
+            return DistillOutcome {
+                history,
+                front,
+                baseline_max: bmax,
+                baseline_min: bmin,
+                kept_initial,
+                kept_final: kept,
+                promotions,
+                iterations,
+                inner_scenario_sims,
+                verify_scenario_sims,
+                truncated,
+            };
+        }
+        promotions.extend(violators.iter().copied());
+        kept.extend(violators);
+        kept.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+
+    #[test]
+    fn fig2_certify_finds_subfloor_counterexample() {
+        // Depth 10 on x survives n ≤ 11 but deadlocks for n ≥ 12 — the
+        // hunter must find some breaking n in the 2..=32 space.
+        let cert = certify_design("fig2", &[10, 2], &HuntConfig::default()).unwrap();
+        let ce = cert.counterexample.expect("must break");
+        assert!(ce.args[0] >= 12, "breaking n {} too small", ce.args[0]);
+        assert!(ce.blocked.contains(&0));
+        assert!(!cert.is_clean());
+        assert!(cert.verdict().starts_with("broken@"));
+    }
+
+    #[test]
+    fn fig2_certifies_clean_at_space_maximum() {
+        // Depth 31 ≥ n − 1 for every n ≤ 32: exhaustively clean.
+        let cert = certify_design("fig2", &[31, 2], &HuntConfig::default()).unwrap();
+        assert!(cert.is_clean());
+        assert!(cert.is_exhaustive(), "31-point space fits the 64 budget");
+        assert_eq!(cert.scenarios_tested, 31);
+        assert!(cert.verdict().starts_with("clean-exhaustive"));
+        // Static designs expose no space.
+        assert!(certify_design("gemm", &[2, 2], &HuntConfig::default()).is_none());
+    }
+
+    #[test]
+    fn hunts_are_deterministic_and_job_independent() {
+        let bd = bench_suite::build("mini_dnn");
+        let space = bench_suite::arg_space("mini_dnn").unwrap();
+        // auto → exhaustive (30-point space ≤ 64 budget), so the
+        // counterexample is guaranteed regardless of seed.
+        let cfg = HuntConfig {
+            optimizer: "auto".to_string(),
+            budget: 64,
+            seed: 9,
+            ..HuntConfig::default()
+        };
+        // z sized for m = 16 breaks under m = 32 or 64.
+        let depths = [4096, 4096, 16, 2];
+        let a = hunt(&bd.design, &space, Some(&depths), &cfg);
+        let b = hunt(&bd.design, &space, Some(&depths), &cfg);
+        let par = hunt(
+            &bd.design,
+            &space,
+            Some(&depths),
+            &HuntConfig { jobs: 4, ..cfg.clone() },
+        );
+        let ce = a.counterexample.clone().expect("m=32/64 tilings break z=16");
+        assert!(ce.args[1] > 16);
+        assert_eq!(a.counterexample, b.counterexample);
+        assert_eq!(a.scenarios_tested, b.scenarios_tested);
+        assert_eq!(a.counterexample, par.counterexample);
+        assert_eq!(a.scenarios_tested, par.scenarios_tested);
+    }
+
+    #[test]
+    fn pressure_hunt_reports_max_pressure_scenario() {
+        let bd = bench_suite::build("fig2");
+        let space = bench_suite::arg_space("fig2").unwrap();
+        let r = hunt(&bd.design, &space, None, &HuntConfig::default());
+        assert!(r.counterexample.is_none(), "pressure mode never breaks");
+        let (args, _) = r.best.expect("must report a best scenario");
+        // Pressure grows with n: the exhaustive auto hunt finds n = 32.
+        assert_eq!(args, vec![32]);
+        assert_eq!(r.scenarios_tested, 31);
+    }
+
+    #[test]
+    fn cancel_token_truncates_hunts() {
+        let bd = bench_suite::build("fig2");
+        let space = bench_suite::arg_space("fig2").unwrap();
+        let cfg = HuntConfig {
+            cancel: CancelToken::with_limits(None, Some(0)),
+            optimizer: "random".to_string(),
+            budget: 1000,
+            ..HuntConfig::default()
+        };
+        let r = hunt(&bd.design, &space, Some(&[31, 2]), &cfg);
+        assert!(r.truncated);
+        assert!(r.counterexample.is_none());
+    }
+
+    #[test]
+    fn distilled_run_matches_full_bank_on_fig2() {
+        let w = Arc::new(bench_suite::build_workload("fig2").unwrap());
+        let space = Space::from_workload(&w);
+        let cfg = DistillConfig {
+            optimizer: "sa".to_string(),
+            seed: 3,
+            budget: 80,
+            ..DistillConfig::default()
+        };
+        let out = optimize_distilled(&w, &space, &cfg);
+        assert!(!out.truncated);
+        assert!(out.kept_final.len() < w.num_scenarios() || !out.promotions.is_empty());
+
+        // Reference: a plain full-bank run, same optimizer + seed.
+        let mut full = EvalEngine::for_workload(w.clone(), 1);
+        full.eval_baselines();
+        let mut opt = by_name("sa", 3).unwrap();
+        super::super::drive(&mut *opt, &mut full, &space, 80);
+        let ref_hist: Vec<(Box<[u32]>, Option<u64>, u32)> = full
+            .history
+            .iter()
+            .map(|p| (p.depths.clone(), p.latency, p.bram))
+            .collect();
+        let got_hist: Vec<(Box<[u32]>, Option<u64>, u32)> = out
+            .history
+            .iter()
+            .map(|p| (p.depths.clone(), p.latency, p.bram))
+            .collect();
+        assert_eq!(got_hist, ref_hist, "distilled history must be bit-identical");
+        let ref_front: Vec<(Box<[u32]>, Option<u64>, u32)> = full
+            .pareto()
+            .into_iter()
+            .map(|p| (p.depths.clone(), p.latency, p.bram))
+            .collect();
+        let got_front: Vec<(Box<[u32]>, Option<u64>, u32)> = out
+            .front
+            .iter()
+            .map(|p| (p.depths.clone(), p.latency, p.bram))
+            .collect();
+        assert_eq!(got_front, ref_front);
+    }
+}

@@ -924,6 +924,42 @@ impl EvalEngine {
         self.bounds
     }
 
+    /// Replace the engine's analytic depth bounds wholesale — used by the
+    /// distillation loop ([`super::advhunt`]) so an engine evaluating a
+    /// *subset* of the workload's scenarios still clamps, floors and
+    /// oracle-seeds exactly like the full-bank engine (a prerequisite for
+    /// bit-identical distilled vs full histories). Rebuilds the
+    /// canonicalizer on the new caps and re-derives the oracle's floor
+    /// seeds from scratch.
+    pub fn set_depth_bounds(&mut self, bounds: DepthBounds) {
+        self.depth_bounds = bounds;
+        let caps = if self.bounds {
+            self.depth_bounds.caps.clone()
+        } else {
+            self.depth_bounds.write_caps().to_vec()
+        };
+        self.canon = Canonicalizer::new(caps, &self.widths);
+        self.oracle.clear();
+        self.scenario_memo.clear();
+        self.stats.cap_tightenings = if self.bounds {
+            self.depth_bounds.num_cap_tightenings() as u64
+        } else {
+            0
+        };
+        self.seed_oracle_from_bounds();
+    }
+
+    /// Feed the pruning oracle an outcome evaluated *elsewhere* (e.g. by
+    /// the full-bank stats engine while this engine runs the distilled
+    /// bank). Keeps the two engines' oracle knowledge in lockstep so
+    /// subsequent answers cannot diverge. No-op with pruning off; the
+    /// outcome is not recorded in history or stats.
+    pub fn note_external(&mut self, depths: &[u32], latency: Option<u64>) {
+        if self.prune {
+            self.oracle.note(depths, latency);
+        }
+    }
+
     /// The analytic per-channel depth bounds of this workload
     /// (computed once at construction; valid whether or not the layer
     /// is [active](Self::bounds)).

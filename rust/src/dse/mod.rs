@@ -17,15 +17,22 @@
 //! - [`sweep`] — the fault-tolerant experiment-grid orchestrator:
 //!   checkpointed cells, a resumable manifest, deterministic sharding,
 //!   per-cell budgets, and panic isolation.
+//! - [`advhunt`] — the adversarial outer loop: scenario hunting over a
+//!   design's kernel-argument space (args-as-genome over the existing
+//!   ask/tell optimizers), robustness certificates for optimized
+//!   configs, and scenario-bank distillation with a full-bank re-verify
+//!   fixpoint whose results are bit-identical to full-bank optimization.
 //!
 //! [`Evaluator`] is an alias of [`EvalEngine`] kept for the pervasive
 //! call sites that predate the ask/tell refactor.
 
+pub mod advhunt;
 pub mod cancel;
 pub mod engine;
 pub mod pool;
 pub mod sweep;
 
+pub use advhunt::{certify_design, hunt, optimize_distilled, Certificate, HuntConfig, HuntReport};
 pub use cancel::CancelToken;
 pub use engine::{drive, EngineStats, EvalEngine, EvalResult, ShardedCache, WorkerPool};
 

@@ -23,8 +23,8 @@
 //! propagates and fails the run. Containing faults is the sweep
 //! orchestrator's job alone — [`dse::sweep`](super::sweep) catches at
 //! the cell boundary, records the cell as failed in its manifest, and
-//! keeps sibling cells running (CI audits that `catch_unwind` appears
-//! nowhere else).
+//! keeps sibling cells running (CI audits that the unwind catch
+//! appears nowhere else).
 
 use super::engine::WorkerPool;
 use crate::sim::fast::FastSim;

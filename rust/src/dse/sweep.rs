@@ -119,7 +119,10 @@ pub const ACCEPTED_KEYS: &[&str] = &[
     "cell_sim_budget",
     "cell_timeout_secs",
     "cell_workers",
+    "certify",
+    "certify_budget",
     "designs",
+    "distill",
     "jobs",
     "max_retries",
     "optimizers",
@@ -153,6 +156,19 @@ pub struct SweepConfig {
     /// Simulation backend (`"backend"` key; mirrors the CLI's
     /// `--backend {fast,compiled,batched}`).
     pub backend: BackendKind,
+    /// Run multi-scenario cells on the dominance-distilled scenario bank
+    /// with the full-bank re-verify fixpoint (`"distill": true`; mirrors
+    /// the CLI's `--distill`). Fronts and stars stay bit-identical —
+    /// only the scenario-simulation count drops. Single-scenario cells
+    /// are unaffected.
+    pub distill: bool,
+    /// Emit a robustness certificate for each cell's ★ config by
+    /// adversarially hunting the design's kernel-argument space
+    /// (`"certify": true`; designs without an argument space record
+    /// `no-arg-space`).
+    pub certify: bool,
+    /// Hunt budget per certificate (`"certify_budget"`, default 64).
+    pub certify_budget: usize,
     pub out_dir: Option<String>,
     /// Merge prior `manifest*.json` files in `out_dir` and skip `done`
     /// cells byte-for-byte (`--resume`).
@@ -323,6 +339,12 @@ impl SweepConfig {
             prune: j.get("prune").and_then(|v| v.as_bool()).unwrap_or(true),
             bounds: j.get("bounds").and_then(|v| v.as_bool()).unwrap_or(true),
             backend,
+            distill: j.get("distill").and_then(|v| v.as_bool()).unwrap_or(false),
+            certify: j.get("certify").and_then(|v| v.as_bool()).unwrap_or(false),
+            certify_budget: j
+                .get("certify_budget")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(64) as usize,
             out_dir: j
                 .get("out_dir")
                 .and_then(|v| v.as_str())
@@ -356,14 +378,21 @@ impl SweepConfig {
     /// is excluded (nondeterministic by nature — a timeout-truncated
     /// cell is flagged in its row instead).
     fn fingerprint(&self) -> String {
+        // distill never changes fronts/stars, but it does change a row's
+        // simulation telemetry and `distilled` column; certify adds the
+        // `certified` column. Both are row content, so both fingerprint.
         format!(
-            "v1|budget={}|alpha={}|prune={}|backend={}|sim_budget={:?}|bounds={}",
+            "v2|budget={}|alpha={}|prune={}|backend={}|sim_budget={:?}|bounds={}\
+             |distill={}|certify={}|certify_budget={}",
             self.budget,
             self.alpha,
             self.prune,
             self.backend.name(),
             self.cell_sim_budget,
-            self.bounds
+            self.bounds,
+            self.distill,
+            self.certify,
+            self.certify_budget
         )
     }
 
@@ -493,6 +522,14 @@ pub struct SweepRow {
     /// The cell hit its wall-clock or simulation budget and kept its
     /// best-so-far front instead of completing the proposal budget.
     pub truncated: bool,
+    /// Distillation summary for distilled multi-scenario cells:
+    /// `kept/total` plus `+n` promoted back by the re-verify fixpoint
+    /// (e.g. `"2/3+1"`). Empty for plain cells.
+    pub distilled: String,
+    /// Robustness-certificate verdict for the ★ config
+    /// ([`Certificate::verdict`](crate::dse::advhunt::Certificate)),
+    /// or `no-arg-space` for static designs. Empty unless `"certify"`.
+    pub certified: String,
 }
 
 /// Serialize a result row. `include_elapsed` is true for manifest
@@ -524,6 +561,8 @@ fn row_to_json(r: &SweepRow, include_elapsed: bool) -> Json {
         ("base_bram", Json::Num(r.base_bram as f64)),
         ("min_deadlocked", Json::Bool(r.min_deadlocked)),
         ("truncated", Json::Bool(r.truncated)),
+        ("distilled", Json::Str(r.distilled.clone())),
+        ("certified", Json::Str(r.certified.clone())),
     ];
     if include_elapsed {
         f.push(("elapsed_secs", Json::Num(r.elapsed_secs)));
@@ -573,6 +612,8 @@ fn row_from_json(j: &Json) -> Result<SweepRow> {
         base_bram: num("base_bram")? as u32,
         min_deadlocked: flag("min_deadlocked")?,
         truncated: flag("truncated")?,
+        distilled: text("distilled")?,
+        certified: text("certified")?,
     })
 }
 
@@ -1227,6 +1268,9 @@ fn run_cell(
     workload: &Arc<Workload>,
     bank: ScenarioSim,
 ) -> Result<SweepRow> {
+    if cfg.distill && workload.num_scenarios() > 1 {
+        return run_cell_distilled(cfg, cell, workload);
+    }
     let design = &cell.design.name;
     let space = Space::from_workload(workload);
     let mut ev = Evaluator::for_workload_with_bank(
@@ -1256,9 +1300,11 @@ fn run_cell(
     let dt = t0.elapsed().as_secs_f64();
     let front = ev.pareto();
     let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
-    let star = select_highlight(&pts, cfg.alpha, base_lat, base_bram)
-        .map(|i| pts[i])
-        .unwrap_or((base_lat, base_bram));
+    let star_idx = select_highlight(&pts, cfg.alpha, base_lat, base_bram);
+    let star = star_idx.map(|i| pts[i]).unwrap_or((base_lat, base_bram));
+    let star_depths: Box<[u32]> = star_idx
+        .map(|i| front[i].depths.clone())
+        .unwrap_or_else(|| workload.baseline_max().into());
     let row = SweepRow {
         design: design.clone(),
         optimizer: cell.optimizer.clone(),
@@ -1284,6 +1330,8 @@ fn run_cell(
         base_bram,
         min_deadlocked: !minp.is_feasible(),
         truncated: ev.truncated(),
+        distilled: String::new(),
+        certified: certify_verdict(cfg, design, cell.seed, &star_depths),
     };
     // The record file lands (atomically) before the manifest flips this
     // cell to done — a crash between the two just re-runs the cell,
@@ -1305,6 +1353,147 @@ fn run_cell(
         )?;
     }
     Ok(row)
+}
+
+/// Distilled variant of [`run_cell`]: the inner loop runs on the
+/// dominance-distilled scenario bank with the full-bank re-verify
+/// fixpoint ([`crate::dse::advhunt::optimize_distilled`]). Fronts and
+/// stars are bit-identical to the plain cell (pinned by test); a
+/// distilled row's `sims` counts *per-scenario* simulator invocations
+/// (inner + verify) — the quantity distillation reduces — and its
+/// engine-telemetry rates are zeroed (two engines share the work).
+fn run_cell_distilled(
+    cfg: &SweepConfig,
+    cell: &CellKey,
+    workload: &Arc<Workload>,
+) -> Result<SweepRow> {
+    use crate::dse::advhunt::{optimize_distilled, DistillConfig};
+    let design = &cell.design.name;
+    let space = Space::from_workload(workload);
+    let dcfg = DistillConfig {
+        optimizer: cell.optimizer.clone(),
+        seed: cell.seed,
+        budget: cfg.budget,
+        jobs: cfg.jobs,
+        prune: cfg.prune,
+        bounds: cfg.bounds,
+        backend: cfg.backend,
+        cancel: CancelToken::with_limits(
+            cfg.cell_timeout_secs.map(Duration::from_secs_f64),
+            cfg.cell_sim_budget,
+        ),
+    };
+    let t0 = Instant::now();
+    let out = optimize_distilled(workload, &space, &dcfg);
+    let dt = t0.elapsed().as_secs_f64();
+    let base_lat = out
+        .baseline_max
+        .latency
+        .ok_or_else(|| anyhow!("{design}: Baseline-Max deadlocks"))?;
+    let base_bram = out.baseline_max.bram;
+    // `out.history` seeds the two paper baselines before the proposals;
+    // the plain cell resets after its baselines, so recompute the front
+    // over the proposal slice to keep the two rows bit-comparable.
+    let proposals = &out.history[2.min(out.history.len())..];
+    let obj: Vec<crate::opt::pareto::ObjPoint> = proposals
+        .iter()
+        .enumerate()
+        .filter_map(|(i, p)| {
+            p.latency.map(|l| crate::opt::pareto::ObjPoint {
+                latency: l,
+                bram: p.bram,
+                index: i,
+            })
+        })
+        .collect();
+    let front: Vec<&crate::dse::EvalPoint> = crate::opt::pareto::pareto_front(&obj)
+        .into_iter()
+        .map(|p| &proposals[p.index])
+        .collect();
+    let pts: Vec<(u64, u32)> = front.iter().map(|p| (p.latency.unwrap(), p.bram)).collect();
+    let star_idx = select_highlight(&pts, cfg.alpha, base_lat, base_bram);
+    let star = star_idx.map(|i| pts[i]).unwrap_or((base_lat, base_bram));
+    let star_depths: Box<[u32]> = star_idx
+        .map(|i| front[i].depths.clone())
+        .unwrap_or_else(|| workload.baseline_max().into());
+    let distilled = format!(
+        "{}/{}{}",
+        out.kept_final.len(),
+        workload.num_scenarios(),
+        if out.promotions.is_empty() {
+            String::new()
+        } else {
+            format!("+{}", out.promotions.len())
+        }
+    );
+    let row = SweepRow {
+        design: design.clone(),
+        optimizer: cell.optimizer.clone(),
+        seed: cell.seed,
+        scenarios: workload.num_scenarios(),
+        evals: proposals.len(),
+        sims: out.inner_scenario_sims + out.verify_scenario_sims,
+        incr_rate: 0.0,
+        replay_frac: 0.0,
+        oracle_rate: 0.0,
+        clamp_rate: 0.0,
+        sims_avoided: 0,
+        bounds_floor_hits: 0,
+        cap_tightenings: 0,
+        lanes_per_walk: 0.0,
+        batch_occupancy: 0.0,
+        walks_saved: 0,
+        elapsed_secs: dt,
+        front_size: front.len(),
+        star_latency: star.0,
+        star_bram: star.1,
+        base_latency: base_lat,
+        base_bram,
+        min_deadlocked: !out.baseline_min.is_feasible(),
+        truncated: out.truncated,
+        distilled,
+        certified: certify_verdict(cfg, design, cell.seed, &star_depths),
+    };
+    if let Some(dir) = &cfg.out_dir {
+        let j = report::run_to_json(
+            design,
+            &cell.optimizer,
+            cell.seed,
+            cfg.budget,
+            proposals,
+            &front,
+            dt,
+            None,
+        );
+        report::write_file(
+            &format!("{dir}/{}.json", cell.file_stem()),
+            &j.to_string_pretty(),
+        )?;
+    }
+    Ok(row)
+}
+
+/// The `certified` column for a cell: adversarially hunt the design's
+/// kernel-argument space against the ★ config. Empty unless the config
+/// sets `"certify"`; `no-arg-space` for static designs.
+fn certify_verdict(cfg: &SweepConfig, design: &str, seed: u64, depths: &[u32]) -> String {
+    if !cfg.certify {
+        return String::new();
+    }
+    let hunt = crate::dse::advhunt::HuntConfig {
+        optimizer: "auto".into(),
+        seed,
+        budget: cfg.certify_budget,
+        jobs: cfg.jobs,
+        cancel: CancelToken::with_limits(
+            cfg.cell_timeout_secs.map(Duration::from_secs_f64),
+            None,
+        ),
+    };
+    match crate::dse::advhunt::certify_design(design, depths, &hunt) {
+        Some(c) => c.verdict(),
+        None => "no-arg-space".into(),
+    }
 }
 
 /// Aggregate CSV + JSON over the completed grid. Only deterministic
@@ -1341,6 +1530,8 @@ fn write_aggregates(
         "base_bram",
         "min_deadlocked",
         "truncated",
+        "distilled",
+        "certified",
     ]);
     for r in rows {
         csv.row(vec![
@@ -1367,6 +1558,8 @@ fn write_aggregates(
             r.base_bram.to_string(),
             r.min_deadlocked.to_string(),
             r.truncated.to_string(),
+            r.distilled.clone(),
+            r.certified.clone(),
         ]);
     }
     csv.write(&format!("{dir}/aggregate.csv"))?;
@@ -1428,6 +1621,8 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
                 ),
                 if r.min_deadlocked { "×→✓" } else { "" }.to_string(),
                 if r.truncated { "✂" } else { "" }.to_string(),
+                r.distilled.clone(),
+                r.certified.clone(),
             ]
         })
         .collect();
@@ -1435,6 +1630,7 @@ pub fn rows_to_markdown(rows: &[SweepRow]) -> String {
         &[
             "design", "optimizer", "seed", "scen", "secs", "sims", "incr%", "replay%", "orcl%",
             "clmp%", "avoid", "flr", "ln/wk", "occ%", "front", "lat×", "BRAM↓", "rescue", "cut",
+            "dstl", "cert",
         ],
         &table_rows,
     )
@@ -1604,6 +1800,8 @@ mod tests {
             base_bram: 9,
             min_deadlocked: true,
             truncated: false,
+            distilled: "2/3+1".into(),
+            certified: "clean-exhaustive(8)".into(),
         };
         let mut cells = BTreeMap::new();
         cells.insert(
@@ -1649,6 +1847,8 @@ mod tests {
         assert_eq!(r.incr_rate, row.incr_rate, "floats roundtrip exactly");
         assert_eq!(r.elapsed_secs, row.elapsed_secs);
         assert!(r.min_deadlocked);
+        assert_eq!(r.distilled, "2/3+1");
+        assert_eq!(r.certified, "clean-exhaustive(8)");
         let failed = &back.cells["00000000cafebabe"];
         assert_eq!(
             failed.status,
@@ -1832,5 +2032,70 @@ mod tests {
         );
         let md = rows_to_markdown(&out.rows);
         assert!(md.contains("✂"), "markdown must mark truncated rows");
+    }
+
+    #[test]
+    fn distill_key_matches_plain_cells_bit_for_bit() {
+        let base = r#"{"designs": [{"design": "fig2", "scenarios": [[8], [16], [12]]}],
+            "optimizers": ["sa"], "budget": 80, "seeds": [1], "jobs": 1"#;
+        let plain_cfg =
+            SweepConfig::from_json(&Json::parse(&format!("{base}}}")).unwrap()).unwrap();
+        let dist_cfg =
+            SweepConfig::from_json(&Json::parse(&format!("{base}, \"distill\": true}}")).unwrap())
+                .unwrap();
+        assert_ne!(
+            plain_cfg.config_hash(),
+            dist_cfg.config_hash(),
+            "distill is a row-content key and must fingerprint"
+        );
+        let plain = run_sweep(&plain_cfg).unwrap();
+        let dist = run_sweep(&dist_cfg).unwrap();
+        assert_eq!(plain.len(), 1);
+        assert_eq!(dist.len(), 1);
+        let (p, d) = (&plain[0], &dist[0]);
+        // Distillation changes cost, never results.
+        assert_eq!(d.evals, p.evals);
+        assert_eq!(d.front_size, p.front_size);
+        assert_eq!(d.star_latency, p.star_latency);
+        assert_eq!(d.star_bram, p.star_bram);
+        assert_eq!(d.base_latency, p.base_latency);
+        assert_eq!(d.base_bram, p.base_bram);
+        assert_eq!(d.min_deadlocked, p.min_deadlocked);
+        assert!(p.distilled.is_empty(), "plain cells leave the column empty");
+        assert!(
+            d.distilled.contains("/3"),
+            "distilled column must show kept/total: {:?}",
+            d.distilled
+        );
+        let kept: usize = d.distilled.split('/').next().unwrap().parse().unwrap();
+        assert!(
+            kept < 3,
+            "fig2 n=16 dominates the smaller scenarios, so some must drop"
+        );
+        let md = rows_to_markdown(&dist);
+        assert!(md.contains(&d.distilled), "dstl column missing: {md}");
+    }
+
+    #[test]
+    fn certify_key_emits_verdicts_per_design() {
+        let j = Json::parse(
+            r#"{"designs": ["fig2", "gesummv"], "optimizers": ["greedy"], "budget": 40,
+                "seeds": [1], "jobs": 1, "certify": true, "certify_budget": 40}"#,
+        )
+        .unwrap();
+        let cfg = SweepConfig::from_json(&j).unwrap();
+        let rows = run_sweep(&cfg).unwrap();
+        let fig2 = rows.iter().find(|r| r.design == "fig2").unwrap();
+        // Budget 40 covers fig2's 31-point arg space, so auto enumerates
+        // it exhaustively: the verdict is exact either way.
+        assert!(
+            fig2.certified.starts_with("broken@") || fig2.certified == "clean-exhaustive(31)",
+            "unexpected verdict {:?}",
+            fig2.certified
+        );
+        let ges = rows.iter().find(|r| r.design == "gesummv").unwrap();
+        assert_eq!(ges.certified, "no-arg-space");
+        let md = rows_to_markdown(&rows);
+        assert!(md.contains("no-arg-space"), "cert column missing: {md}");
     }
 }

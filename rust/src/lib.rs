@@ -60,7 +60,11 @@
 //!   shrinking [`opt::Space`], pre-seeding the oracle and
 //!   the clamp, short-circuiting sub-floor proposals in the engine
 //!   (`--no-bounds` toggles the engine side for A/B runs), and giving
-//!   greedy/the hunter their analytic starting points.
+//!   greedy/the hunter their analytic starting points. [`opt::genome`]
+//!   maps a design's finite kernel-argument space
+//!   ([`ArgSpace`](opt::genome::ArgSpace)) onto the same genome the
+//!   depth optimizers search, so the adversarial hunts of
+//!   [`dse::advhunt`] reuse them unchanged.
 //! - [`dse`] — the DSE engine layer: [`dse::EvalEngine`] owns the
 //!   black-box evaluation `x → (f_lat, f_bram)` over a workload — a
 //!   persistent worker pool (threads spawned once, each with a cloned
@@ -84,7 +88,17 @@
 //!   work-stealing cell runner with atomic checkpointing into a
 //!   resumable `manifest.json`, deterministic `--shard i/n`
 //!   partitioning, per-cell retry with backoff, and per-cell panic
-//!   isolation.
+//!   isolation. [`dse::advhunt`] inverts the machinery into an
+//!   adversarial outer loop: scenario [`hunt`](dse::hunt)s over a
+//!   design's finite kernel-argument space reuse the ask/tell
+//!   optimizers with *args-as-genome* ([`opt::genome`]), robustness
+//!   [`Certificate`](dse::Certificate)s report a concrete breaking arg
+//!   vector or a bounded-exhaustiveness clean verdict for an optimized
+//!   config, and scenario-bank distillation
+//!   ([`optimize_distilled`](dse::optimize_distilled)) runs the inner
+//!   DSE on the dominance-distilled bank with a full-bank re-verify
+//!   fixpoint — bit-identical results, strictly fewer scenario
+//!   simulations.
 //! - [`runtime`] — the batched-analytics runtime: a native interpreter
 //!   of the AOT-exported JAX/Pallas analytics computation (BRAM totals,
 //!   β-grid objectives, dominance mask), shape-bucketed like the

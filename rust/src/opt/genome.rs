@@ -1,0 +1,186 @@
+//! Args-as-genome adapter: reuse the FIFO-depth ask/tell optimizers to
+//! search a design's *kernel-argument* space (the adversarial outer loop
+//! of [`dse::advhunt`](crate::dse::advhunt)).
+//!
+//! Every optimizer in this crate proposes depth vectors drawn from a
+//! [`Space`]'s per-dimension candidate lists. An [`ArgSpace`] builds a
+//! synthetic `Space` whose dimension `i` enumerates the *indices* of the
+//! `i`-th argument's allowed values, so any existing optimizer (SA,
+//! random, greedy, exhaustive, NSGA-II) can propose argument vectors
+//! without knowing it: the hunter decodes each proposal back into
+//! concrete `i64` kernel arguments via [`ArgSpace::decode`].
+//!
+//! Encoding detail: `Space::min_depth` clamps every dimension to
+//! `max(2, floor)`, so raw indices 0 and 1 would be unreachable. The
+//! genome therefore stores index `k` as candidate value `k + 2`
+//! (dimension `i` has candidates `2..len_i + 2`), and `decode`
+//! subtracts the offset. All dimensions are singleton "groups" of a
+//! nominal 32-bit width — group structure and BRAM cost are meaningless
+//! for argument vectors, and the hunter scores candidates itself.
+
+use super::Space;
+
+/// One searchable kernel argument: a name (for reports) and the finite
+/// list of values the hunter may try.
+#[derive(Debug, Clone)]
+pub struct ArgDim {
+    /// Human-readable argument name (e.g. `"nodes"`, `"seed"`).
+    pub name: String,
+    /// Allowed values, in the order they map onto genome indices. Must be
+    /// non-empty.
+    pub values: Vec<i64>,
+}
+
+impl ArgDim {
+    /// Convenience constructor.
+    pub fn new(name: &str, values: Vec<i64>) -> ArgDim {
+        assert!(!values.is_empty(), "argument '{name}' has no values");
+        ArgDim {
+            name: name.to_string(),
+            values,
+        }
+    }
+}
+
+/// The finite kernel-argument space of one design: the cartesian product
+/// of its [`ArgDim`]s, in the design's positional argument order.
+#[derive(Debug, Clone)]
+pub struct ArgSpace {
+    /// One dimension per design argument, positionally.
+    pub dims: Vec<ArgDim>,
+}
+
+/// Offset between a genome candidate value and the argument-value index
+/// it encodes (indices 0/1 are unreachable under `Space::min_depth`).
+const GENOME_OFFSET: u32 = 2;
+
+impl ArgSpace {
+    /// Build from positional dimensions.
+    pub fn new(dims: Vec<ArgDim>) -> ArgSpace {
+        assert!(!dims.is_empty(), "argument space has no dimensions");
+        ArgSpace { dims }
+    }
+
+    /// Number of design arguments.
+    pub fn num_args(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of argument vectors in the space, or `None` on
+    /// overflow (used to pick exhaustive search for tiny spaces).
+    pub fn num_points(&self) -> Option<usize> {
+        self.dims
+            .iter()
+            .try_fold(1usize, |acc, d| acc.checked_mul(d.values.len()))
+    }
+
+    /// The synthetic genome [`Space`] the depth optimizers search.
+    /// Dimension `i`'s candidates are `GENOME_OFFSET..len_i +
+    /// GENOME_OFFSET` (one per allowed value), singleton groups, nominal
+    /// 32-bit widths.
+    pub fn genome_space(&self) -> Space {
+        let n = self.dims.len();
+        let per_fifo: Vec<Vec<u32>> = self
+            .dims
+            .iter()
+            .map(|d| (0..d.values.len() as u32).map(|k| k + GENOME_OFFSET).collect())
+            .collect();
+        let bounds: Vec<u32> = per_fifo.iter().map(|c| *c.last().unwrap()).collect();
+        Space {
+            per_fifo: per_fifo.clone(),
+            bounds,
+            floors: vec![GENOME_OFFSET; n],
+            widths: vec![32; n],
+            groups: (0..n).map(|i| vec![i]).collect(),
+            per_group: per_fifo,
+        }
+    }
+
+    /// Decode a genome proposal back into a concrete argument vector.
+    /// Out-of-range codes clamp to the nearest valid index, so arbitrary
+    /// (clamped) optimizer proposals always decode to a real point.
+    pub fn decode(&self, proposal: &[u32]) -> Vec<i64> {
+        assert_eq!(proposal.len(), self.dims.len());
+        self.dims
+            .iter()
+            .zip(proposal)
+            .map(|(d, &code)| {
+                let idx = (code.saturating_sub(GENOME_OFFSET) as usize).min(d.values.len() - 1);
+                d.values[idx]
+            })
+            .collect()
+    }
+
+    /// Encode a concrete argument vector (each value must appear in its
+    /// dimension's list) — used to seed hunts from known scenarios.
+    pub fn encode(&self, args: &[i64]) -> Option<Box<[u32]>> {
+        assert_eq!(args.len(), self.dims.len());
+        self.dims
+            .iter()
+            .zip(args)
+            .map(|(d, a)| {
+                d.values
+                    .iter()
+                    .position(|v| v == a)
+                    .map(|k| k as u32 + GENOME_OFFSET)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::exhaustive::Exhaustive;
+
+    fn space2() -> ArgSpace {
+        ArgSpace::new(vec![
+            ArgDim::new("n", vec![4, 8, 16]),
+            ArgDim::new("seed", vec![7]),
+        ])
+    }
+
+    #[test]
+    fn genome_space_round_trips() {
+        let a = space2();
+        assert_eq!(a.num_points(), Some(3));
+        let s = a.genome_space();
+        assert_eq!(s.num_fifos(), 2);
+        assert_eq!(s.per_fifo[0], vec![2, 3, 4]);
+        assert_eq!(s.per_fifo[1], vec![2]);
+        assert_eq!(s.min_depth(0), 2);
+        // Every candidate decodes to the matching value and re-encodes.
+        for (k, &v) in a.dims[0].values.iter().enumerate() {
+            let code = k as u32 + 2;
+            assert_eq!(a.decode(&[code, 2]), vec![v, 7]);
+            assert_eq!(a.encode(&[v, 7]).unwrap().as_ref(), &[code, 2]);
+        }
+        assert_eq!(a.encode(&[5, 7]), None);
+        // Out-of-range codes clamp instead of panicking.
+        assert_eq!(a.decode(&[0, 99]), vec![4, 7]);
+        let mut wild = vec![99u32, 0];
+        s.clamp(&mut wild);
+        assert_eq!(a.decode(&wild), vec![16, 7]);
+    }
+
+    #[test]
+    fn exhaustive_enumerates_every_arg_vector() {
+        let a = ArgSpace::new(vec![
+            ArgDim::new("x", vec![1, 2]),
+            ArgDim::new("y", vec![10, 20, 30]),
+        ]);
+        let s = a.genome_space();
+        assert_eq!(Exhaustive::space_size(&s), Some(6));
+        let mut opt = Exhaustive::new();
+        let ctx = crate::opt::AskCtx {
+            space: &s,
+            budget_left: 100,
+            batch_hint: 100,
+        };
+        let batch = crate::opt::Optimizer::ask(&mut opt, &ctx);
+        let mut seen: Vec<Vec<i64>> = batch.iter().map(|p| a.decode(p)).collect();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 6, "every (x, y) combination proposed once");
+    }
+}

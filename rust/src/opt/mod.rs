@@ -53,10 +53,18 @@
 //! the oracle, and let the engine answer sub-floor proposals with zero
 //! simulation (`--no-bounds` disables the engine side, mirroring
 //! `--no-prune`).
+//!
+//! [`genome`] turns the same protocol outward: an
+//! [`ArgSpace`](genome::ArgSpace) wraps a design's kernel-argument space
+//! in a synthetic [`Space`] so any optimizer above can drive the
+//! adversarial scenario hunter ([`dse::advhunt`](crate::dse::advhunt))
+//! without modification — proposals are argument-value indices, decoded
+//! back into concrete arg vectors per candidate.
 
 pub mod bounds;
 pub mod dominance;
 pub mod exhaustive;
+pub mod genome;
 pub mod greedy;
 pub mod nsga2;
 pub mod objective;

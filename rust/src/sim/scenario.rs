@@ -512,6 +512,155 @@ impl ScenarioSim {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Per-scenario pressure profiles (distillation / `fifoadvisor info`)
+// ---------------------------------------------------------------------------
+
+/// The dominance-relevant fingerprint of one workload scenario: how hard
+/// it presses on each channel, and which channels it can deadlock. Built
+/// by [`scenario_profiles`]; consumed by the scenario-bank distillation
+/// in [`crate::dse::advhunt`] and the `fifoadvisor info` per-scenario
+/// table.
+#[derive(Debug, Clone)]
+pub struct ScenarioProfile {
+    /// Scenario name (bank order).
+    pub name: String,
+    /// The kernel arguments this scenario's trace was collected under.
+    pub args: Vec<i64>,
+    /// Per-channel peak occupancy of this scenario at the *merged*
+    /// Baseline-Max (deadlock-free on every scenario by construction,
+    /// so every peak is observable).
+    pub peak_occ: Vec<u32>,
+    /// Per-channel analytic deadlock floors of this scenario alone
+    /// ([`DepthBounds::for_trace`](crate::opt::bounds::DepthBounds)) —
+    /// its contribution to the workload's merged floor.
+    pub floors: Vec<u32>,
+    /// This scenario's latency at the merged Baseline-Max.
+    pub base_latency: u64,
+    /// Channels this scenario blocks on at Baseline-Min (depth 2
+    /// everywhere) — its deadlock-relevant blocked set (empty when the
+    /// scenario is feasible even at minimum depths). Sorted, deduped.
+    pub blocked: Vec<usize>,
+}
+
+impl ScenarioProfile {
+    /// Componentwise dominance: `self` is redundant next to `other` when
+    /// every per-channel occupancy peak and deadlock floor is covered,
+    /// its Baseline-Min blocked set is a subset, and it is no slower at
+    /// Baseline-Max. A dominated scenario can never be the unique
+    /// witness of a deadlock floor or the worst-case latency *under this
+    /// heuristic's observations* — the distillation loop still
+    /// re-verifies against the full bank, so dominance only has to be a
+    /// good guess, never a proof.
+    pub fn dominated_by(&self, other: &ScenarioProfile) -> bool {
+        self.peak_occ
+            .iter()
+            .zip(&other.peak_occ)
+            .all(|(a, b)| a <= b)
+            && self.floors.iter().zip(&other.floors).all(|(a, b)| a <= b)
+            && self.blocked.iter().all(|c| other.blocked.contains(c))
+            && self.base_latency <= other.base_latency
+    }
+}
+
+/// Profile every scenario of a workload: one stats run per scenario at
+/// the merged Baseline-Max (peaks + latency), one run at Baseline-Min
+/// (blocked set), and the per-trace analytic depth bounds. Cost is
+/// `2 × num_scenarios` simulations plus one bounds pass per scenario —
+/// cheap next to a DSE run, and independent of any engine state.
+pub fn scenario_profiles(workload: &Workload) -> Vec<ScenarioProfile> {
+    let bmax = workload.baseline_max();
+    let bmin = workload.baseline_min();
+    workload
+        .scenarios()
+        .iter()
+        .map(|s| {
+            let mut sim = FastSim::new(Arc::clone(&s.trace));
+            let (out, stats) = sim.simulate_with_stats(&bmax);
+            let base_latency = out
+                .latency()
+                .expect("merged Baseline-Max is deadlock-free on every scenario");
+            let mut blocked: Vec<usize> = match sim.simulate(&bmin) {
+                SimOutcome::Done { .. } => Vec::new(),
+                SimOutcome::Deadlock { blocked } => blocked.iter().map(|b| b.channel).collect(),
+            };
+            blocked.sort_unstable();
+            blocked.dedup();
+            let floors = crate::opt::bounds::DepthBounds::for_trace(&s.trace).floors;
+            ScenarioProfile {
+                name: s.name.clone(),
+                args: s.trace.args.clone(),
+                peak_occ: stats.max_occupancy,
+                floors,
+                base_latency,
+                blocked,
+            }
+        })
+        .collect()
+}
+
+/// Greedy keep/drop partition over [`scenario_profiles`]: scenario `i`
+/// is dropped when some *kept* sibling dominates it (ties keep the
+/// earlier index, so the result is deterministic and at least one
+/// scenario always survives). Returns `(kept, dropped)` index lists in
+/// bank order plus, for each dropped scenario, the kept index that
+/// dominated it.
+pub fn distill_partition(profiles: &[ScenarioProfile]) -> (Vec<usize>, Vec<(usize, usize)>) {
+    let mut kept: Vec<usize> = Vec::new();
+    let mut dropped: Vec<(usize, usize)> = Vec::new();
+    for i in 0..profiles.len() {
+        // A scenario is dominated by an earlier keeper, or by a *later*
+        // scenario that itself is not dominated by i (strictly greater
+        // somewhere) — handle the simple transitive-safe rule: compare
+        // against every other scenario, preferring earlier dominators,
+        // but never drop i for a later twin that i also dominates
+        // (identical profiles: keep the earlier).
+        let mut dominator = None;
+        for j in 0..profiles.len() {
+            if i == j {
+                continue;
+            }
+            if profiles[i].dominated_by(&profiles[j]) {
+                let tie = profiles[j].dominated_by(&profiles[i]);
+                if tie && j > i {
+                    continue; // identical twins: earlier index wins
+                }
+                dominator = Some(j);
+                break;
+            }
+        }
+        match dominator {
+            Some(j) => dropped.push((i, j)),
+            None => kept.push(i),
+        }
+    }
+    // Chains of identical profiles could in principle drop everything's
+    // head — guard the invariant that something survives.
+    if kept.is_empty() {
+        let (i, _) = dropped.remove(0);
+        kept.push(i);
+    }
+    // A dropped scenario whose recorded dominator was itself dropped is
+    // still covered transitively (dominance over these componentwise
+    // orders is transitive), but re-point the report at a kept scenario
+    // for readability.
+    let final_dominator: Vec<(usize, usize)> = dropped
+        .iter()
+        .map(|&(i, mut j)| {
+            let mut hops = 0;
+            while !kept.contains(&j) && hops < profiles.len() {
+                match dropped.iter().find(|&&(d, _)| d == j) {
+                    Some(&(_, next)) => j = next,
+                    None => break,
+                }
+                hops += 1;
+            }
+            (i, j)
+        })
+        .collect();
+    (kept, final_dominator)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -813,6 +962,35 @@ mod tests {
         let mut bank = ScenarioSim::new(&w);
         assert!(bank.eval_batch(&[], true).is_empty());
         assert_eq!(bank.last_batch_telemetry(), BatchTelemetry::default());
+    }
+
+    #[test]
+    fn profiles_capture_pressure_and_dominance() {
+        let w = fig2_workload(&[8, 16, 12]);
+        let profs = scenario_profiles(&w);
+        assert_eq!(profs.len(), 3);
+        // fig2: x write count = n, so the n=16 scenario presses hardest
+        // on x, has the largest floor (n − 1), and the longest run.
+        assert!(profs[1].peak_occ[0] > profs[0].peak_occ[0]);
+        assert_eq!(profs[1].floors[0], 15);
+        assert_eq!(profs[0].floors[0], 7);
+        assert!(profs[1].base_latency >= profs[0].base_latency);
+        // Every fig2 scenario deadlocks at Baseline-Min on channel x.
+        for p in &profs {
+            assert!(p.blocked.contains(&0), "{}: {:?}", p.name, p.blocked);
+        }
+        // n=8 and n=12 are dominated by n=16; n=16 is not dominated.
+        assert!(profs[0].dominated_by(&profs[1]));
+        assert!(profs[2].dominated_by(&profs[1]));
+        assert!(!profs[1].dominated_by(&profs[0]));
+        let (kept, dropped) = distill_partition(&profs);
+        assert_eq!(kept, vec![1]);
+        assert_eq!(dropped, vec![(0, 1), (2, 1)]);
+        // Identical twins keep the earlier index.
+        let twins = vec![profs[0].clone(), profs[0].clone()];
+        let (kept, dropped) = distill_partition(&twins);
+        assert_eq!(kept, vec![0]);
+        assert_eq!(dropped, vec![(1, 0)]);
     }
 
     #[test]

@@ -70,6 +70,9 @@ pub enum WorkloadError {
 pub struct Workload {
     design_name: String,
     scenarios: Vec<Scenario>,
+    /// Construction diagnostics (e.g. duplicate-scenario folding) for
+    /// the CLI's note mechanism. Not serialized.
+    notes: Vec<String>,
 }
 
 impl Workload {
@@ -85,12 +88,18 @@ impl Workload {
                 weight: 1.0,
                 trace,
             }],
+            notes: Vec::new(),
         }
     }
 
     /// Build a workload from already-collected scenarios, validating
     /// non-emptiness, unique names, positive weights, and identical
-    /// channel/process topology across scenarios.
+    /// channel/process topology across scenarios. Scenarios whose
+    /// kernel-argument vectors are byte-identical to an earlier sibling
+    /// (same trace shape — execution is argument-deterministic, so the
+    /// traces are too) are folded into it: the first occurrence keeps
+    /// its name, weights add, and a [`note`](Self::notes) records the
+    /// fold — simulating exact duplicates buys nothing.
     pub fn new(scenarios: Vec<Scenario>) -> Result<Workload, WorkloadError> {
         let first = scenarios.first().ok_or(WorkloadError::Empty)?;
         let reference = Arc::clone(&first.trace);
@@ -109,19 +118,41 @@ impl Workload {
             }
             check_topology(&reference, s)?;
         }
+        let mut notes = Vec::new();
+        let mut kept: Vec<Scenario> = Vec::with_capacity(scenarios.len());
+        for s in scenarios {
+            match kept.iter_mut().find(|p| {
+                p.trace.args == s.trace.args && p.trace.total_ops() == s.trace.total_ops()
+            }) {
+                Some(p) => {
+                    p.weight += s.weight;
+                    notes.push(format!(
+                        "scenario '{}' duplicates '{}' (identical args {:?}); \
+                         folded its weight instead of simulating it twice",
+                        s.name, p.name, s.trace.args
+                    ));
+                }
+                None => kept.push(s),
+            }
+        }
         Ok(Workload {
             design_name,
-            scenarios,
+            scenarios: kept,
+            notes,
         })
     }
 
     /// Collect one trace per `(name, args)` pair (uniform weight 1).
     /// Argument arity is checked against the design up front.
+    /// Byte-identical duplicate arg vectors are folded *before* trace
+    /// collection (keep-first, weights add, a note records the fold),
+    /// so duplicates cost neither a trace run nor a simulation lane.
     pub fn from_design(
         design: &Design,
         scenarios: &[(String, Vec<i64>)],
     ) -> Result<Workload, WorkloadError> {
-        let mut out = Vec::with_capacity(scenarios.len());
+        let mut deduped: Vec<(String, Vec<i64>, f64)> = Vec::with_capacity(scenarios.len());
+        let mut notes = Vec::new();
         for (name, args) in scenarios {
             if args.len() != design.num_args {
                 return Err(WorkloadError::ArgCount {
@@ -131,17 +162,32 @@ impl Workload {
                     got: args.len(),
                 });
             }
-            let trace = collect_trace(design, args).map_err(|source| WorkloadError::Trace {
+            match deduped.iter_mut().find(|(_, a, _)| a == args) {
+                Some((first, _, w)) => {
+                    *w += 1.0;
+                    notes.push(format!(
+                        "scenario '{name}' duplicates '{first}' (identical args {args:?}); \
+                         folded its weight instead of simulating it twice"
+                    ));
+                }
+                None => deduped.push((name.clone(), args.clone(), 1.0)),
+            }
+        }
+        let mut out = Vec::with_capacity(deduped.len());
+        for (name, args, weight) in deduped {
+            let trace = collect_trace(design, &args).map_err(|source| WorkloadError::Trace {
                 scenario: name.clone(),
                 source,
             })?;
             out.push(Scenario {
-                name: name.clone(),
-                weight: 1.0,
+                name,
+                weight,
                 trace: Arc::new(trace),
             });
         }
-        Self::new(out)
+        let mut w = Self::new(out)?;
+        w.notes.extend(notes);
+        Ok(w)
     }
 
     /// [`from_design`](Self::from_design) with auto-generated scenario
@@ -218,6 +264,37 @@ impl Workload {
     /// Baseline-Min: depth 2 everywhere (scenario-independent).
     pub fn baseline_min(&self) -> Vec<u32> {
         self.primary().baseline_min()
+    }
+
+    /// Construction diagnostics (duplicate-scenario folds and the like)
+    /// for the CLI's `note:` mechanism.
+    pub fn notes(&self) -> &[String] {
+        &self.notes
+    }
+
+    /// The sub-workload over the scenarios at `keep` (indices into
+    /// [`scenarios`](Self::scenarios), construction order preserved,
+    /// weights/names intact). A non-empty subset of a valid workload is
+    /// valid by construction, so no re-validation runs.
+    ///
+    /// Panics if `keep` is empty or out of range — callers distilling a
+    /// bank always keep at least one scenario.
+    pub fn subset(&self, keep: &[usize]) -> Workload {
+        assert!(!keep.is_empty(), "workload subset must keep a scenario");
+        Workload {
+            design_name: self.design_name.clone(),
+            scenarios: keep.iter().map(|&i| self.scenarios[i].clone()).collect(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Concatenate two workloads' scenario sets through full
+    /// [`new`](Self::new) validation (same topology required; duplicate
+    /// names rejected; duplicate arg vectors folded with a note).
+    pub fn merge(&self, other: &Workload) -> Result<Workload, WorkloadError> {
+        let mut all = self.scenarios.clone();
+        all.extend(other.scenarios.iter().cloned());
+        Self::new(all)
     }
 
     // -----------------------------------------------------------------
@@ -424,6 +501,74 @@ mod tests {
             trace: t,
         }]);
         assert!(matches!(bad.unwrap_err(), WorkloadError::BadWeight { .. }));
+    }
+
+    #[test]
+    fn duplicate_args_fold_with_note() {
+        let bd = bench_suite::build("fig2");
+        let w = Workload::from_design(
+            &bd.design,
+            &[
+                ("a".into(), vec![8]),
+                ("b".into(), vec![16]),
+                ("c".into(), vec![8]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(w.num_scenarios(), 2, "duplicate args must fold");
+        assert_eq!(w.scenarios()[0].name, "a");
+        assert_eq!(w.scenarios()[0].weight, 2.0, "weights add on fold");
+        assert_eq!(w.scenarios()[1].weight, 1.0);
+        assert_eq!(w.notes().len(), 1);
+        assert!(w.notes()[0].contains("'c'") && w.notes()[0].contains("'a'"));
+        // Folding preserves the merged bounds.
+        assert_eq!(w.upper_bounds(), fig2_workload(&[8, 16]).upper_bounds());
+        // The same fold happens on the pre-collected path.
+        let t8 = Arc::new(collect_trace(&bd.design, &[8]).unwrap());
+        let t8b = Arc::new(collect_trace(&bd.design, &[8]).unwrap());
+        let w2 = Workload::new(vec![
+            Scenario {
+                name: "x".into(),
+                weight: 1.5,
+                trace: t8,
+            },
+            Scenario {
+                name: "y".into(),
+                weight: 0.5,
+                trace: t8b,
+            },
+        ])
+        .unwrap();
+        assert_eq!(w2.num_scenarios(), 1);
+        assert_eq!(w2.scenarios()[0].weight, 2.0);
+        assert_eq!(w2.notes().len(), 1);
+    }
+
+    #[test]
+    fn subset_and_merge() {
+        let w = fig2_workload(&[8, 16, 12]);
+        let sub = w.subset(&[2, 0]);
+        assert_eq!(sub.num_scenarios(), 2);
+        assert_eq!(sub.scenarios()[0].name, "n12");
+        assert_eq!(sub.scenarios()[1].name, "n8");
+        assert_eq!(sub.upper_bounds(), vec![12, 12]);
+
+        let rest = w.subset(&[1]);
+        let back = sub.merge(&rest).unwrap();
+        assert_eq!(back.num_scenarios(), 3);
+        assert_eq!(back.upper_bounds(), w.upper_bounds());
+        // Merging overlapping arg sets folds rather than duplicating.
+        let folded = w.merge(&w.subset(&[0])).unwrap_err();
+        assert!(matches!(folded, WorkloadError::DuplicateName { .. }));
+        let renamed = Workload::new(vec![Scenario {
+            name: "again".into(),
+            weight: 1.0,
+            trace: w.scenarios()[0].trace.clone(),
+        }])
+        .unwrap();
+        let m = w.merge(&renamed).unwrap();
+        assert_eq!(m.num_scenarios(), 3, "identical args fold on merge");
+        assert_eq!(m.scenarios()[0].weight, 2.0);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Differential fuzzing of the adversarial outer loop (`dse::advhunt`):
+//! randomized workloads and hunt configurations asserting that
+//!
+//! - **distillation is invisible** — a distilled run's merged history
+//!   and Pareto front are bit-identical to a from-scratch full-bank run
+//!   with the same optimizer and seed, across stats-driven and
+//!   stats-free optimizers, on random multi-scenario workloads,
+//! - **certificates are sound on the boundary** — for any sub-floor
+//!   Fig. 2 config the exhaustive `auto` hunt finds a concrete breaking
+//!   argument vector at or above the paper's `n − 1` threshold, and
+//! - **hunts are deterministic** — re-running a hunt with the same seed,
+//!   or with a parallel worker pool, reproduces the same counterexample,
+//!   scenario count, simulation count, and best-pressure scenario.
+//!
+//! Plus the FlowGNN-PNA acceptance smoke: a config sized to a single
+//! graph's write counts is broken by a sibling graph in the argument
+//! space, while the all-graphs workload's Baseline-Max certifies
+//! clean-exhaustive.
+//!
+//! Cases run under `util::prop::check`, so a failure reports its seed
+//! (and the CI fuzz job cranks counts via `FIFOADVISOR_FUZZ_ITERS` and
+//! uploads failing seeds through `FIFOADVISOR_FUZZ_ARTIFACT_DIR`).
+
+use fifoadvisor::bench_suite::{self, flowgnn};
+use fifoadvisor::dse::advhunt::{certify, certify_design, hunt, DistillConfig, HuntConfig};
+use fifoadvisor::dse::{drive, optimize_distilled, CancelToken, EvalEngine};
+use fifoadvisor::opt::{by_name, Space};
+use fifoadvisor::trace::workload::Workload;
+use fifoadvisor::util::prop::{check, iters, random_workload};
+use std::sync::Arc;
+
+/// History/front rows projected to the fields the bit-identity claim is
+/// about (timestamps are wall-clock and excluded).
+fn rows(pts: &[fifoadvisor::dse::EvalPoint]) -> Vec<(Box<[u32]>, Option<u64>, u32)> {
+    pts.iter()
+        .map(|p| (p.depths.clone(), p.latency, p.bram))
+        .collect()
+}
+
+#[test]
+fn distilled_runs_match_full_bank_on_random_workloads() {
+    // Rotate through stats-free optimizers AND a stats-driven one
+    // (greedy), which exercises the full-engine wants_stats path of the
+    // split drive loop.
+    let optimizers = ["sa", "grouped_sa", "nsga2", "grouped_random", "greedy"];
+    check("distill ≡ full bank at fixpoint", iters(10), |rng| {
+        let w = Arc::new(random_workload(rng));
+        let space = Space::from_workload(&w);
+        let optimizer = optimizers[rng.index(optimizers.len())].to_string();
+        let seed = rng.below(1_000);
+        let budget = 30 + rng.below(30) as usize;
+        let cfg = DistillConfig {
+            optimizer: optimizer.clone(),
+            seed,
+            budget,
+            ..DistillConfig::default()
+        };
+        let out = optimize_distilled(&w, &space, &cfg);
+        if out.truncated {
+            return Err("no budgets configured, nothing may truncate".into());
+        }
+        // Fixpoint bookkeeping invariants.
+        if out.iterations < 1 || out.kept_final.is_empty() {
+            return Err(format!(
+                "degenerate fixpoint: {} iterations, kept {:?}",
+                out.iterations, out.kept_final
+            ));
+        }
+        for p in &out.promotions {
+            if out.kept_initial.contains(p) || !out.kept_final.contains(p) {
+                return Err(format!(
+                    "promotion {p} inconsistent with kept {:?} → {:?}",
+                    out.kept_initial, out.kept_final
+                ));
+            }
+        }
+
+        // Reference: a from-scratch full-bank run, same optimizer + seed
+        // (the engine configuration optimize_distilled defaults to).
+        let mut full = EvalEngine::for_workload(w.clone(), 1);
+        full.eval_baselines();
+        let mut opt = by_name(&optimizer, seed)
+            .ok_or_else(|| format!("unknown optimizer {optimizer}"))?;
+        drive(&mut *opt, &mut full, &space, budget);
+        if rows(&out.history) != rows(&full.history) {
+            return Err(format!(
+                "{optimizer} seed {seed}: distilled history diverged \
+                 (kept {:?}, promoted {:?})",
+                out.kept_final, out.promotions
+            ));
+        }
+        let ref_front: Vec<_> = full.pareto().into_iter().cloned().collect();
+        if rows(&out.front) != rows(&ref_front) {
+            return Err(format!("{optimizer} seed {seed}: front diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn certify_below_the_floor_always_finds_a_counterexample() {
+    // Fig. 2: a depth-d x channel survives n ≤ d + 1 and deadlocks for
+    // n ≥ d + 2; the space reaches n = 32, so every d ≤ 30 is broken
+    // and the exhaustive auto hunt (31 points ≤ 64 budget) must say so.
+    check("sub-floor certificates find the break", iters(10), |rng| {
+        let d = 2 + rng.below(29) as u32;
+        let cert = certify_design("fig2", &[d, 2], &HuntConfig::default()).unwrap();
+        let ce = cert
+            .counterexample
+            .ok_or_else(|| format!("depth {d}: no counterexample in {}", cert.verdict()))?;
+        if (ce.args[0] as u32) < d + 2 {
+            return Err(format!("depth {d}: n = {} should survive", ce.args[0]));
+        }
+        if !ce.blocked.contains(&0) {
+            return Err(format!("depth {d}: x not in blocked set {:?}", ce.blocked));
+        }
+        if !cert.verdict().starts_with("broken@") {
+            return Err(format!("depth {d}: verdict {}", cert.verdict()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hunts_reproduce_across_reruns_and_worker_pools() {
+    let designs = ["fig2", "mini_dnn", "flowgnn_pna"];
+    let optimizers = ["auto", "random", "sa", "grouped_sa", "nsga2"];
+    check("hunt determinism: serial == jobs N", iters(8), |rng| {
+        let name = designs[rng.index(designs.len())];
+        let bd = bench_suite::build(name);
+        let space = bench_suite::arg_space(name).unwrap();
+        let cfg = HuntConfig {
+            optimizer: optimizers[rng.index(optimizers.len())].to_string(),
+            seed: rng.below(1_000),
+            budget: 8 + rng.below(24) as usize,
+            ..HuntConfig::default()
+        };
+        // Half the cases hunt in break mode against a sub-maximum fig2
+        // config; the rest mine pressure (depths = None works on any
+        // design without knowing its FIFO count).
+        let depths: Option<Vec<u32>> = if name == "fig2" && rng.chance(0.5) {
+            Some(vec![2 + rng.below(29) as u32, 2])
+        } else {
+            None
+        };
+        let a = hunt(&bd.design, &space, depths.as_deref(), &cfg);
+        let b = hunt(&bd.design, &space, depths.as_deref(), &cfg);
+        let par = hunt(
+            &bd.design,
+            &space,
+            depths.as_deref(),
+            &HuntConfig {
+                jobs: 2 + rng.index(3),
+                ..cfg.clone()
+            },
+        );
+        for (tag, r) in [("rerun", &b), ("parallel", &par)] {
+            if r.counterexample != a.counterexample
+                || r.scenarios_tested != a.scenarios_tested
+                || r.sims != a.sims
+                || r.floor_hits != a.floor_hits
+                || r.best != a.best
+            {
+                return Err(format!(
+                    "{name}/{} seed {}: {tag} hunt diverged \
+                     ({:?} vs {:?}, {} vs {} scenarios)",
+                    cfg.optimizer,
+                    cfg.seed,
+                    r.counterexample,
+                    a.counterexample,
+                    r.scenarios_tested,
+                    a.scenarios_tested,
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cancelled_hunts_report_truncation_not_verdicts() {
+    check("zero-budget hunts truncate cleanly", iters(6), |rng| {
+        let bd = bench_suite::build("fig2");
+        let space = bench_suite::arg_space("fig2").unwrap();
+        let cfg = HuntConfig {
+            optimizer: "random".to_string(),
+            seed: rng.below(1_000),
+            budget: 1_000,
+            cancel: CancelToken::with_limits(None, Some(0)),
+            ..HuntConfig::default()
+        };
+        let r = hunt(&bd.design, &space, Some(&[31, 2]), &cfg);
+        if !r.truncated {
+            return Err("sim budget 0 must truncate".into());
+        }
+        let cert = certify(&bd.design, "fig2", &space, &[31, 2], &cfg);
+        if cert.is_exhaustive() {
+            return Err("a truncated clean certificate is never exhaustive".into());
+        }
+        if !cert.verdict().starts_with("clean?") {
+            return Err(format!("verdict {}", cert.verdict()));
+        }
+        Ok(())
+    });
+}
+
+/// §IV-D acceptance smoke: sizing FIFOs against one graph's trace is
+/// exactly the trap the certificate exists to catch.
+#[test]
+fn flowgnn_graph0_config_breaks_but_workload_config_certifies_clean() {
+    let bd = bench_suite::build("flowgnn_pna");
+    let space = bench_suite::arg_space("flowgnn_pna").unwrap();
+    // A config sized to graph 0's exact per-channel write counts:
+    // feasible on graph 0 (no channel can fill), broken by a sibling
+    // graph whose bursts exceed them.
+    let w = Arc::new(bench_suite::build_workload("flowgnn_pna").unwrap());
+    let s0 = &w.scenarios()[0].trace;
+    let mut cfg0 = s0.baseline_min();
+    for (l, c) in s0.channels.iter().enumerate() {
+        cfg0[l] = (c.writes as u32).max(2);
+    }
+    let broken = certify(&bd.design, "flowgnn_pna", &space, &cfg0, &HuntConfig::default());
+    let ce = broken
+        .counterexample
+        .expect("a sibling graph must deadlock the graph-0-sized config");
+    assert!(flowgnn::SCENARIO_SEEDS.contains(&ce.args[2]));
+    assert_ne!(
+        ce.args[2],
+        flowgnn::SCENARIO_SEEDS[0],
+        "graph 0 itself runs this config"
+    );
+
+    // The workload-optimized config — Baseline-Max over ALL the graphs
+    // the argument space can produce — certifies clean over the entire
+    // space (8 points ≤ 64 budget → exhaustive, so the verdict is exact).
+    let w8 = Workload::from_design(
+        &bd.design,
+        &flowgnn::scenario_args(flowgnn::SCENARIO_SEEDS.len()),
+    )
+    .unwrap();
+    let clean = certify(
+        &bd.design,
+        "flowgnn_pna",
+        &space,
+        &w8.baseline_max(),
+        &HuntConfig::default(),
+    );
+    assert!(clean.is_exhaustive(), "verdict {}", clean.verdict());
+    assert_eq!(clean.scenarios_tested, flowgnn::SCENARIO_SEEDS.len());
+}
