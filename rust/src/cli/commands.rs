@@ -79,6 +79,56 @@ fn load_workload(args: &Args) -> Result<(String, Arc<Workload>)> {
     Ok((name, Arc::new(w)))
 }
 
+/// Open the cross-run snapshot store when `--cache-dir` is given (and
+/// `--no-store` is not), returning it with this run's cache key. The
+/// key covers the design, the full workload content, the simulation
+/// backend and the pruning regime — see [`crate::store::Store::key`].
+fn open_store(
+    args: &Args,
+    name: &str,
+    w: &Workload,
+    backend: BackendKind,
+    prune: bool,
+    bounds: bool,
+) -> Result<Option<(crate::store::Store, String)>> {
+    if args.has_flag("no-store") {
+        return Ok(None);
+    }
+    let Some(dir) = args.get("cache-dir") else {
+        return Ok(None);
+    };
+    let max_mb = args.get_u64("cache-max-mb", 512)?;
+    let store = crate::store::Store::new(dir, max_mb);
+    let key = crate::store::Store::key(name, w, backend.name(), prune, bounds);
+    Ok(Some((store, key)))
+}
+
+/// Warm-start the engine from the store snapshot under this run's key.
+/// A rejected or corrupt snapshot degrades to a cold start — warm runs
+/// stay bit-identical to cold ones either way.
+fn warm_start(store: &Option<(crate::store::Store, String)>, ev: &mut Evaluator) {
+    let Some((st, key)) = store else { return };
+    let Some(snap) = st.load(key) else { return };
+    match snap.apply(ev) {
+        Ok(n) => println!("  store: warm-started {n} memo entries (key {key})"),
+        Err(e) => println!("  store: snapshot {key} rejected ({e}); cold start"),
+    }
+}
+
+/// Persist the engine's memo/oracle back to the store after a run.
+fn save_snapshot(store: &Option<(crate::store::Store, String)>, name: &str, ev: &Evaluator) {
+    let Some((st, key)) = store else { return };
+    let snap = crate::store::Snapshot::capture(name, ev);
+    match st.save(key, &snap) {
+        Ok(()) => println!(
+            "  store: saved {} memo + {} oracle entries (key {key})",
+            snap.memo.len(),
+            snap.oracle.len()
+        ),
+        Err(e) => println!("  store: save failed: {e}"),
+    }
+}
+
 /// Run a sweep configuration file (designs × optimizers × seeds)
 /// through the fault-tolerant orchestrator. `--resume`, `--shard i/n`,
 /// and `--out-dir DIR` override the matching config keys, so one config
@@ -91,6 +141,9 @@ pub fn sweep(args: &Args) -> Result<()> {
     }
     if let Some(dir) = args.get("out-dir") {
         cfg.out_dir = Some(dir.to_string());
+    }
+    if let Some(dir) = args.get("cache-dir") {
+        cfg.cache_dir = Some(dir.to_string());
     }
     if let Some(s) = args.get("shard") {
         cfg.shard = Some(crate::dse::sweep::parse_shard(s)?);
@@ -304,7 +357,10 @@ pub fn simulate(args: &Args) -> Result<()> {
             other => bail!("--baseline must be max|min, got '{other}'"),
         }
     };
-    let mut ev = Evaluator::for_workload_with_sim(w.clone(), 1, parse_backend(args)?);
+    let backend = parse_backend(args)?;
+    let mut ev = Evaluator::for_workload_with_sim(w.clone(), 1, backend);
+    let store = open_store(args, &name, &w, backend, ev.prune(), ev.bounds())?;
+    warm_start(&store, &mut ev);
     let t0 = std::time::Instant::now();
     let (lat, bram) = ev.eval(&depths);
     let dt = t0.elapsed().as_secs_f64();
@@ -326,6 +382,7 @@ pub fn simulate(args: &Args) -> Result<()> {
             }
         }
     }
+    save_snapshot(&store, &name, &ev);
     Ok(())
 }
 
@@ -386,6 +443,16 @@ pub fn optimize(args: &Args) -> Result<()> {
         );
     }
     let space = Space::from_workload(&w);
+    // Warm-start from the cross-run store before the baselines, so a
+    // replay run answers even those from the memo. XLA runs keep the
+    // store off: snapshot validation recomputes BRAM with the native
+    // backend, and mixing artifacts would defeat the exactness check.
+    let store = if args.has_flag("xla") {
+        None
+    } else {
+        open_store(args, &name, &w, backend, ev.prune(), ev.bounds())?
+    };
+    warm_start(&store, &mut ev);
     let (base, minp) = ev.eval_baselines();
     ev.reset_run(false);
     // Wall-clock budget: drive stops at the next ask/tell round once the
@@ -544,6 +611,7 @@ pub fn optimize(args: &Args) -> Result<()> {
         report::write_file(out, &j.to_string_pretty())?;
         println!("  wrote {out}");
     }
+    save_snapshot(&store, &name, &ev);
     Ok(())
 }
 
@@ -900,6 +968,56 @@ pub fn hunt_scenarios(args: &Args) -> Result<()> {
     if w.num_scenarios() > 1 {
         println!("default-bank distillation partition:");
         print_scenario_table(&w);
+    }
+    Ok(())
+}
+
+/// `fifoadvisor serve`: the persistent sizing service. Blocks until a
+/// `shutdown` request arrives.
+pub fn serve(args: &Args) -> Result<()> {
+    let cfg = crate::serve::ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7733").to_string(),
+        unix_socket: args.get("unix-socket").map(str::to_string),
+        cache_dir: if args.has_flag("no-store") {
+            None
+        } else {
+            args.get("cache-dir").map(str::to_string)
+        },
+        cache_max_mb: args.get_u64("cache-max-mb", 512)?,
+        jobs: args.get_u64("jobs", 1)?.max(1) as usize,
+    };
+    crate::serve::run(cfg)?;
+    Ok(())
+}
+
+/// `fifoadvisor request`: one-shot client for [`serve`] — send one JSON
+/// request line, print the one-line response. Exits non-zero when the
+/// server answers `"ok": false`, so shell scripts and CI can assert on
+/// the exit code alone.
+pub fn request(args: &Args) -> Result<()> {
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7733");
+    let raw = args.require("json")?;
+    // Validate locally first: a malformed request should fail here with
+    // a parse error, not bounce off the server.
+    let req = Json::parse(raw).map_err(|e| anyhow!("--json is not valid JSON: {e}"))?;
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow!("cannot reach server at {addr}: {e}"))?;
+    writeln!(stream, "{}", req.to_string_compact())?;
+    let mut line = String::new();
+    BufReader::new(stream.try_clone()?).read_line(&mut line)?;
+    if line.is_empty() {
+        bail!("server closed the connection without answering");
+    }
+    print!("{line}");
+    let resp = Json::parse(&line).map_err(|e| anyhow!("unparseable response: {e}"))?;
+    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+        bail!(
+            "request failed: {}",
+            resp.get("error").and_then(Json::as_str).unwrap_or("unknown error")
+        );
     }
     Ok(())
 }

@@ -8,6 +8,7 @@
 //!                      [--seed 1] [--jobs 4] [--xla] [--alpha 0.7]
 //!                      [--out results/run.json] [--no-prune] [--no-bounds]
 //!                      [--backend fast|compiled|batched] [--timeout-secs T]
+//!                      [--cache-dir DIR] [--cache-max-mb 512] [--no-store]
 //! fifoadvisor hunt     --design NAME [--timeout-secs T]
 //! fifoadvisor certify  --design NAME --depths 2,4,.. [--budget 64]
 //!                      [--optimizer auto] [--seed 1] [--jobs 4]
@@ -15,7 +16,10 @@
 //! fifoadvisor hunt-scenarios --design NAME [--depths 2,4,..]
 //!                      [--budget 64] [--optimizer auto] [--seed 1]
 //! fifoadvisor sweep    --config sweep.json [--resume] [--shard i/n]
-//!                      [--out-dir DIR]
+//!                      [--out-dir DIR] [--cache-dir DIR]
+//! fifoadvisor serve    [--addr 127.0.0.1:7733] [--unix-socket PATH]
+//!                      [--cache-dir DIR] [--cache-max-mb 512] [--jobs N]
+//! fifoadvisor request  --json '{"cmd":"ping"}' [--addr 127.0.0.1:7733]
 //! ```
 //!
 //! Repeating `--args` builds a multi-scenario [`Workload`]
@@ -49,6 +53,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         "certify" => commands::certify(&args),
         "hunt-scenarios" => commands::hunt_scenarios(&args),
         "sweep" => commands::sweep(&args),
+        "serve" => commands::serve(&args),
+        "request" => commands::request(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -70,6 +76,7 @@ USAGE:
                        [--no-prune] [--no-bounds] [--distill]
                        [--certify] [--certify-budget N]
                        [--backend fast|compiled|batched]
+                       [--cache-dir DIR] [--cache-max-mb 512] [--no-store]
                        (--jobs sizes the persistent worker pool; --threads
                         is accepted as a legacy alias. --no-prune disables
                         the simulation-free pruning layer — dominance
@@ -96,7 +103,16 @@ USAGE:
                         --certify appends a robustness certificate for
                         the highlighted config: an adversarial hunt over
                         the design's kernel-argument space, budget
-                        --certify-budget [64])
+                        --certify-budget [64].
+                        --cache-dir warm-starts the engine from the
+                        cross-run snapshot store and saves an updated
+                        snapshot after the run — a second identical
+                        optimize replays with zero simulations, even
+                        across processes; results are bit-identical to
+                        a cold run. --cache-max-mb bounds the store
+                        (LRU-evicted, 0 = unlimited); --no-store skips
+                        the store even when --cache-dir is given.
+                        simulate accepts the same three flags)
   fifoadvisor hunt     --design NAME [--timeout-secs T]
   fifoadvisor certify  --design NAME (--depths D1,D2,.. | --baseline max|min)
                        [--budget 64] [--optimizer auto] [--seed 1]
@@ -118,13 +134,31 @@ USAGE:
                         Also prints the dominance partition the
                         scenario-bank distillation would use)
   fifoadvisor sweep    --config sweep.json [--resume] [--shard i/n]
-                       [--out-dir DIR]
+                       [--out-dir DIR] [--cache-dir DIR]
                        (the fault-tolerant grid orchestrator: every cell
                         is checkpointed into out_dir/manifest.json;
                         --resume skips done cells and retries failed
                         ones, --shard i/n runs a deterministic 1/n slice
                         of the grid for CI matrix jobs, --out-dir
-                        overrides the config's out_dir)
+                        overrides the config's out_dir, --cache-dir
+                        additionally snapshots each cell's memo/oracle
+                        into the cross-run store)
+  fifoadvisor serve    [--addr 127.0.0.1:7733] [--unix-socket PATH]
+                       [--cache-dir DIR] [--cache-max-mb 512] [--jobs N]
+                       (the persistent sizing service: newline-delimited
+                        JSON over TCP — one request object per line, one
+                        response per line. Commands: ping, stats,
+                        simulate, optimize, hunt, certify, shutdown.
+                        Engines stay hot per (design, args, backend,
+                        prune, bounds, jobs), so the second identical
+                        optimize replays from the memo with zero
+                        simulations; with --cache-dir the replay also
+                        survives restarts. Per-request timeout_secs /
+                        max_sims fields install a cancellation budget)
+  fifoadvisor request  --json '{\"cmd\":\"ping\"}' [--addr 127.0.0.1:7733]
+                       (one-shot client for serve: sends the JSON line,
+                        prints the one-line response — enough for shell
+                        scripts and the CI smoke job)
 
 Any command accepting --design also accepts:
   --design-file F.fadl   a FADL text design (see rust/src/ir/fadl.rs)

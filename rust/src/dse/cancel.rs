@@ -4,10 +4,17 @@
 //! an explicit [`cancel`](CancelToken::cancel) call, a wall-clock
 //! deadline, and a simulation-count budget — behind one cheap
 //! [`triggered`](CancelToken::triggered) check. [`drive`](crate::dse::drive)
-//! consults the engine's token once per ask/tell round, so cancellation
-//! is cooperative: a run stops at the next round boundary with its
-//! history and Pareto front intact (the engine flags the run
-//! [`truncated`](crate::dse::EvalEngine::truncated)), never mid-batch.
+//! consults the engine's token once per ask/tell round, and the engine
+//! additionally polls the explicit-cancel/deadline legs *inside* a
+//! round: per queued job on the worker pool, per scenario boundary
+//! under the lane-batched backend, and per configuration on the serial
+//! path — so one large batch can no longer overrun a deadline by its
+//! full length. Cancellation stays cooperative and result-safe: an
+//! aborted batch is rolled back wholesale, the run stops at the last
+//! *completed* round with its history and Pareto front intact (the
+//! engine flags the run
+//! [`truncated`](crate::dse::EvalEngine::truncated)), and a cancelled
+//! run's history is a prefix of the uncancelled one's.
 //!
 //! Tokens are `Clone` + `Send` + `Sync` and share state through an
 //! `Arc`, so an orchestrator can hold one handle to cancel a cell while

@@ -101,7 +101,10 @@ use std::time::Instant;
 // Sharded memo cache
 // ---------------------------------------------------------------------------
 
-type CacheValue = (Option<u64>, u32);
+/// One memoized evaluation: `(latency, bram)` — `None` latency means
+/// deadlock. Public so the persistent store ([`crate::store`]) can dump
+/// and re-import memo shards verbatim.
+pub type CacheValue = (Option<u64>, u32);
 
 /// A concurrent memo cache for evaluated configurations, split into
 /// power-of-two shards selected by the configuration hash. Readers on
@@ -171,6 +174,19 @@ impl ShardedCache {
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
+
+    /// Every entry across all shards, sorted by key — the persistent
+    /// store's export path. Sorting makes snapshots byte-deterministic
+    /// regardless of shard layout and insertion order.
+    pub fn dump(&self) -> Vec<(Box<[u32]>, CacheValue)> {
+        let mut out: Vec<(Box<[u32]>, CacheValue)> = Vec::with_capacity(self.len());
+        for s in self.shards.iter() {
+            let g = s.read().expect("cache shard poisoned");
+            out.extend(g.iter().map(|(k, v)| (k.clone(), *v)));
+        }
+        out.sort();
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -182,12 +198,18 @@ struct Job {
     cfg: Box<[u32]>,
     /// Latency-only early exit: stop at the first deadlocked scenario.
     early: bool,
+    /// Cooperative cancellation: the worker checks the token *before*
+    /// it starts simulating — a triggered token turns the job into an
+    /// immediate `aborted` reply instead of a simulation, so a large
+    /// batch drains its queues in microseconds once a deadline passes.
+    cancel: Option<CancelToken>,
 }
 
 struct JobDone {
     idx: usize,
     latency: Option<u64>,
     simulated: bool,
+    aborted: bool,
     nanos: u64,
     run: RunInfo,
     gap: Option<u64>,
@@ -201,6 +223,10 @@ pub struct JobOutcome {
     pub latency: Option<u64>,
     /// False when the shared memo cache already held the result.
     pub simulated: bool,
+    /// True when the job's cancellation token had triggered before the
+    /// worker started it — the job was skipped, `latency` is
+    /// meaningless, and the caller must discard the whole batch.
+    pub aborted: bool,
     /// Wall time this job occupied its worker.
     pub nanos: u64,
     /// Simulator telemetry for this job (zeroed for cache hits).
@@ -265,6 +291,34 @@ impl WorkerPool {
             handles.push(thread::spawn(move || {
                 while let Ok(job) = rx.recv() {
                     let t0 = Instant::now();
+                    // Per-job cancellation check: once the batch's token
+                    // triggers (explicit cancel or wall-clock deadline),
+                    // every job still queued is answered `aborted`
+                    // without touching the simulator. The sim-count leg
+                    // of the budget stays with the engine, which owns
+                    // the counters.
+                    if job
+                        .cancel
+                        .as_ref()
+                        .is_some_and(|c| c.cancelled() || c.deadline_exceeded())
+                    {
+                        if res
+                            .send(JobDone {
+                                idx: job.idx,
+                                latency: None,
+                                simulated: false,
+                                aborted: true,
+                                nanos: 0,
+                                run: RunInfo::default(),
+                                gap: None,
+                                scen_runs: 0,
+                            })
+                            .is_err()
+                        {
+                            break;
+                        }
+                        continue;
+                    }
                     let (latency, simulated, run, gap, scen_runs) =
                         match cache.as_ref().and_then(|c| c.get(&job.cfg)) {
                             Some((lat, _)) => (lat, false, RunInfo::default(), None, 0),
@@ -285,6 +339,7 @@ impl WorkerPool {
                             idx: job.idx,
                             latency,
                             simulated,
+                            aborted: false,
                             nanos,
                             run,
                             gap,
@@ -343,6 +398,22 @@ impl WorkerPool {
         hints: Option<&[Option<Box<[u32]>>]>,
         early_exit: bool,
     ) -> Vec<JobOutcome> {
+        self.run_batch_cancellable(configs, hints, early_exit, None)
+    }
+
+    /// [`run_batch`](Self::run_batch) with a cancellation token each
+    /// worker checks before starting a job: once the token's explicit
+    /// cancel or wall-clock deadline triggers, the rest of the batch
+    /// comes back with [`JobOutcome::aborted`] set instead of being
+    /// simulated. A batch whose token never triggers is dispatched and
+    /// evaluated exactly like an uncancellable one.
+    pub fn run_batch_cancellable(
+        &mut self,
+        configs: &[Box<[u32]>],
+        hints: Option<&[Option<Box<[u32]>>]>,
+        early_exit: bool,
+        cancel: Option<&CancelToken>,
+    ) -> Vec<JobOutcome> {
         let n = configs.len();
         if n == 0 {
             return Vec::new();
@@ -387,6 +458,7 @@ impl WorkerPool {
                     idx,
                     cfg: cfg.clone(),
                     early: early_exit,
+                    cancel: cancel.cloned(),
                 })
                 .expect("worker pool channel closed");
         }
@@ -399,6 +471,7 @@ impl WorkerPool {
             out[done.idx] = JobOutcome {
                 latency: done.latency,
                 simulated: done.simulated,
+                aborted: done.aborted,
                 nanos: done.nanos,
                 run: done.run,
                 gap: done.gap,
@@ -634,6 +707,13 @@ impl EvalResult {
 // ---------------------------------------------------------------------------
 // The engine
 // ---------------------------------------------------------------------------
+
+/// One exported memo-cache entry — `(depths, latency, bram)` with `None`
+/// latency meaning deadlock. The persistent store's unit of exchange.
+pub type MemoEntry = (Vec<u32>, Option<u64>, u32);
+
+/// One exported dominance-oracle outcome — `(depths, latency)`.
+pub type OracleEntry = (Vec<u32>, Option<u64>);
 
 /// The black-box evaluator `x → (f_lat(x), f_bram(x))` (paper §III) with
 /// the persistent worker pool and sharded memo cache. Construct once per
@@ -1208,8 +1288,28 @@ impl EvalEngine {
         want_stats: bool,
     ) -> Vec<EvalResult> {
         if want_stats {
-            return configs.iter().map(|c| self.eval_one_with_stats(c)).collect();
+            // The stats path simulates every proposal by design, one at
+            // a time — so the cancellation check runs per proposal.
+            // Completed evaluations stay in history (best-so-far
+            // semantics); a short return tells [`drive`] to stop.
+            let mut out = Vec::with_capacity(configs.len());
+            for c in configs.iter() {
+                if self.cancel.triggered(self.stats.sims) {
+                    self.truncated = true;
+                    break;
+                }
+                out.push(self.eval_one_with_stats(c));
+            }
+            return out;
         }
+        // Snapshot for mid-batch aborts: an aborted batch contributes
+        // nothing (no history entries, no memo/oracle learning), so its
+        // partial telemetry is rolled back wholesale — stats stay
+        // consistent with history, and a non-cancelled run is untouched
+        // (`EngineStats` is `Copy`; the snapshot costs a memcpy).
+        let stats_snapshot = self.stats;
+        let n_sim_snapshot = self.n_sim;
+        let mut aborted = false;
         self.stats.batches += 1;
 
         // How a proposal that missed the raw memo lookup gets its cache
@@ -1293,53 +1393,98 @@ impl EvalEngine {
         let lats: Vec<Option<u64>> = if misses.is_empty() {
             Vec::new()
         } else if self.sim_backend == BackendKind::Batched {
+            // Lane-batched path: the abort closure is polled at every
+            // scenario boundary inside the fused walk, so one huge batch
+            // can no longer overrun a wall-clock deadline by its full
+            // length. (The sim-count budget leg stays at batch
+            // granularity here — lanes resolve together.)
+            let cancel = self.cancel.clone();
             let t0 = Instant::now();
-            let lanes = self.sim.eval_batch(&misses, early);
+            let lanes = self
+                .sim
+                .eval_batch_cancellable(&misses, early, &move || {
+                    cancel.cancelled() || cancel.deadline_exceeded()
+                });
             self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
-            for le in &lanes {
-                self.stats.note_run(&le.run, le.scen_runs, le.gap);
+            match lanes {
+                None => {
+                    aborted = true;
+                    Vec::new()
+                }
+                Some(lanes) => {
+                    for le in &lanes {
+                        self.stats.note_run(&le.run, le.scen_runs, le.gap);
+                    }
+                    let tel = self.sim.last_batch_telemetry();
+                    self.stats.batch_walks += tel.walks;
+                    self.stats.lanes_packed += tel.lanes_packed;
+                    self.stats.lane_slots += tel.lane_slots;
+                    self.n_sim += misses.len() as u64;
+                    self.stats.sims += misses.len() as u64;
+                    lanes.into_iter().map(|le| le.latency).collect()
+                }
             }
-            let tel = self.sim.last_batch_telemetry();
-            self.stats.batch_walks += tel.walks;
-            self.stats.lanes_packed += tel.lanes_packed;
-            self.stats.lane_slots += tel.lane_slots;
-            self.n_sim += misses.len() as u64;
-            self.stats.sims += misses.len() as u64;
-            lanes.into_iter().map(|le| le.latency).collect()
         } else {
             match &mut self.pool {
                 Some(pool) if misses.len() > 1 => {
-                    let outcomes = pool.run_batch(&misses, Some(&miss_hints[..]), early);
-                    for o in &outcomes {
-                        if o.simulated {
-                            self.n_sim += 1;
-                            self.stats.sims += 1;
-                            self.stats.note_run(&o.run, o.scen_runs, o.gap);
-                            // Audit: only time spent simulating counts as
-                            // busy — a worker answering from the shared
-                            // cache did no simulation work.
-                            self.stats.busy_nanos += o.nanos;
+                    let outcomes = pool.run_batch_cancellable(
+                        &misses,
+                        Some(&miss_hints[..]),
+                        early,
+                        Some(&self.cancel),
+                    );
+                    if outcomes.iter().any(|o| o.aborted) {
+                        aborted = true;
+                        Vec::new()
+                    } else {
+                        for o in &outcomes {
+                            if o.simulated {
+                                self.n_sim += 1;
+                                self.stats.sims += 1;
+                                self.stats.note_run(&o.run, o.scen_runs, o.gap);
+                                // Audit: only time spent simulating counts as
+                                // busy — a worker answering from the shared
+                                // cache did no simulation work.
+                                self.stats.busy_nanos += o.nanos;
+                            }
                         }
+                        outcomes.into_iter().map(|o| o.latency).collect()
                     }
-                    outcomes.into_iter().map(|o| o.latency).collect()
                 }
                 _ => {
                     let t0 = Instant::now();
                     let mut lats: Vec<Option<u64>> = Vec::with_capacity(misses.len());
                     for c in misses.iter() {
+                        // Serial inline path: full per-config check —
+                        // including the sim budget, since the counter is
+                        // exact between configs here.
+                        if self.cancel.triggered(self.stats.sims + lats.len() as u64) {
+                            aborted = true;
+                            break;
+                        }
                         lats.push(self.sim.eval_latency(c, early));
                         let run = self.sim.last_run();
                         let gap = self.sim.last_gap();
                         let scen = self.sim.last_scenarios_run();
                         self.stats.note_run(&run, scen, gap);
                     }
-                    self.n_sim += misses.len() as u64;
-                    self.stats.sims += misses.len() as u64;
+                    self.n_sim += lats.len() as u64;
+                    self.stats.sims += lats.len() as u64;
                     self.stats.busy_nanos += t0.elapsed().as_nanos() as u64;
                     lats
                 }
             }
         };
+        if aborted {
+            // Roll back to the pre-batch counters and hand [`drive`] an
+            // empty batch: the run ends at the last *completed* round,
+            // so a cancelled run's history is a prefix-identical
+            // truncation of the uncancelled one.
+            self.stats = stats_snapshot;
+            self.n_sim = n_sim_snapshot;
+            self.truncated = true;
+            return Vec::new();
+        }
 
         // Phase 3 — learn every simulated result (in deterministic miss
         // order), then one batched backend call for every configuration
@@ -1484,6 +1629,47 @@ impl EvalEngine {
             .collect()
     }
 
+    /// The memo cache's contents, sorted by depth vector — the
+    /// persistent store's export path. Each entry is
+    /// `(depths, latency, bram)` with `None` latency meaning deadlock.
+    pub fn memo_entries(&self) -> Vec<MemoEntry> {
+        self.cache
+            .dump()
+            .into_iter()
+            .map(|(k, (lat, br))| (k.to_vec(), lat, br))
+            .collect()
+    }
+
+    /// Warm-start the memo cache from persisted entries (the store's
+    /// import path). Entries are inserted verbatim; soundness rests on
+    /// the store's keying — a snapshot is only offered to an engine
+    /// whose workload traces, backend and bound regime hash identically
+    /// to the one that produced it, and under that key every entry is
+    /// exactly what a fresh simulation would return, so warm and cold
+    /// runs are bit-identical in history and front (only the sim count
+    /// differs). Returns the number of entries imported.
+    pub fn import_memo(&mut self, entries: &[MemoEntry]) -> usize {
+        for (depths, lat, bram) in entries {
+            self.cache.insert(depths.as_slice().into(), (*lat, *bram));
+        }
+        entries.len()
+    }
+
+    /// Warm-start the dominance oracle by replaying persisted outcomes
+    /// through [`FeasibilityOracle::note`] — the antichains rebuild
+    /// themselves under their usual bounds. No-op with pruning off
+    /// (the oracle would never be consulted). Returns the number of
+    /// outcomes replayed.
+    pub fn import_oracle(&mut self, entries: &[OracleEntry]) -> usize {
+        if !self.prune {
+            return 0;
+        }
+        for (depths, lat) in entries {
+            self.oracle.note(depths, *lat);
+        }
+        entries.len()
+    }
+
     /// Convenience: evaluate both paper baselines, returning
     /// (Baseline-Max, Baseline-Min) points. For multi-scenario workloads
     /// Baseline-Max uses the merged (max-over-scenarios) upper bounds.
@@ -1536,6 +1722,14 @@ pub fn drive(
         }
         let hints = opt.hints();
         let results = engine.eval_results_hinted(&batch, &hints, opt.wants_stats());
+        if results.len() != batch.len() {
+            // The engine aborted mid-batch on its cancellation token
+            // (and already rolled the partial batch back / flagged the
+            // run truncated): stop without telling the optimizer a
+            // short batch it never asked for.
+            engine.truncated = true;
+            break;
+        }
         opt.tell(&results);
     }
     engine.n_evals() - start_evals
@@ -2108,5 +2302,120 @@ mod tests {
             sims[0],
             sims[1]
         );
+    }
+
+    /// Regression: cancellation used to be checked only between
+    /// ask/tell rounds, so one large batch could overrun a wall-clock
+    /// deadline by its full length. Calling the eval path directly
+    /// (drive's round-boundary check never runs) with an
+    /// already-expired deadline must now abort *inside* the batch on
+    /// both the serial and the pool path: empty results, truncated
+    /// flag, counters rolled back.
+    #[test]
+    fn expired_deadline_aborts_one_large_batch_mid_round() {
+        let t = trace_of("gesummv");
+        let ub = t.upper_bounds();
+        let mut rng = crate::util::Rng::new(3);
+        let batch: Vec<Box<[u32]>> = (0..64)
+            .map(|_| {
+                ub.iter()
+                    .map(|&u| rng.range_u32(2, u.max(2)))
+                    .collect::<Box<[u32]>>()
+            })
+            .collect();
+        for jobs in [1usize, 4] {
+            let mut ev = EvalEngine::parallel(t.clone(), jobs);
+            ev.set_cancel_token(CancelToken::with_timeout(std::time::Duration::ZERO));
+            let out = ev.eval_results(&batch, false);
+            assert!(out.is_empty(), "jobs={jobs}: aborted batch has no results");
+            assert!(ev.truncated(), "jobs={jobs}: abort must flag truncation");
+            assert_eq!(ev.n_sim, 0, "jobs={jobs}: counters must roll back");
+            assert_eq!(ev.stats().sims, 0, "jobs={jobs}");
+            assert_eq!(ev.stats().batches, 0, "jobs={jobs}");
+            assert!(ev.history.is_empty(), "jobs={jobs}: no partial history");
+        }
+    }
+
+    /// The same regression under `--backend batched`, the worst case
+    /// pre-fix: the whole miss batch rode one fused call. The abort
+    /// closure is polled at scenario boundaries inside the walk.
+    #[test]
+    fn expired_deadline_aborts_the_batched_backend_mid_walk() {
+        let w = fig2_workload(&[8, 16]);
+        let mut ev = EvalEngine::for_workload_with_sim(w.clone(), 1, BackendKind::Batched);
+        ev.set_cancel_token(CancelToken::with_timeout(std::time::Duration::ZERO));
+        let batch: Vec<Box<[u32]>> = (2u32..34).map(|x| vec![15 + (x % 2), x].into()).collect();
+        let out = ev.eval_results(&batch, false);
+        assert!(out.is_empty());
+        assert!(ev.truncated());
+        assert_eq!(ev.n_sim, 0);
+        assert_eq!(ev.stats().sims, 0);
+        assert!(ev.history.is_empty());
+    }
+
+    /// A token that never fires must leave the run bit-identical to an
+    /// untokened one — the cancellable paths add checks, never
+    /// different work.
+    #[test]
+    fn generous_token_runs_are_bit_identical_to_untokened() {
+        let t = trace_of("bicg");
+        let space = Space::from_trace(&t);
+        let histories: Vec<Vec<(Box<[u32]>, Option<u64>, u32)>> = [false, true]
+            .iter()
+            .map(|&tok| {
+                let mut ev = EvalEngine::parallel(t.clone(), 2);
+                if tok {
+                    ev.set_cancel_token(CancelToken::with_timeout(
+                        std::time::Duration::from_secs(3600),
+                    ));
+                }
+                let mut o = crate::opt::random::RandomSearch::new(17, false);
+                drive(&mut o, &mut ev, &space, 100);
+                assert!(!ev.truncated());
+                ev.history
+                    .iter()
+                    .map(|p| (p.depths.clone(), p.latency, p.bram))
+                    .collect()
+            })
+            .collect();
+        assert_eq!(histories[0], histories[1]);
+    }
+
+    /// The store's replay guarantee, at the engine level: exporting the
+    /// memo + oracle after a run and importing them into a fresh engine
+    /// makes the identical run a pure cache replay — zero simulations,
+    /// bit-identical history.
+    #[test]
+    fn memo_and_oracle_export_import_replays_with_zero_sims() {
+        let w = fig2_workload(&[8, 16]);
+        let space = Space::from_workload(&w);
+        let mut a = EvalEngine::for_workload(w.clone(), 1);
+        a.eval_baselines();
+        let mut o = crate::opt::random::RandomSearch::new(9, false);
+        drive(&mut o, &mut a, &space, 120);
+        let memo = a.memo_entries();
+        let oracle = a.oracle().entries();
+        assert!(!memo.is_empty());
+        assert!(a.stats().sims > 0, "the cold run must simulate");
+
+        let mut b = EvalEngine::for_workload(w, 1);
+        assert_eq!(b.import_memo(&memo), memo.len());
+        b.import_oracle(&oracle);
+        b.eval_baselines();
+        let mut o = crate::opt::random::RandomSearch::new(9, false);
+        drive(&mut o, &mut b, &space, 120);
+        assert_eq!(b.stats().sims, 0, "warm replay must not simulate");
+        assert_eq!(b.n_sim, 0);
+        let ha: Vec<_> = a
+            .history
+            .iter()
+            .map(|p| (p.depths.clone(), p.latency, p.bram))
+            .collect();
+        let hb: Vec<_> = b
+            .history
+            .iter()
+            .map(|p| (p.depths.clone(), p.latency, p.bram))
+            .collect();
+        assert_eq!(ha, hb, "warm history must match cold bit-for-bit");
     }
 }

@@ -34,7 +34,9 @@ pub mod sweep;
 
 pub use advhunt::{certify_design, hunt, optimize_distilled, Certificate, HuntConfig, HuntReport};
 pub use cancel::CancelToken;
-pub use engine::{drive, EngineStats, EvalEngine, EvalResult, ShardedCache, WorkerPool};
+pub use engine::{
+    drive, EngineStats, EvalEngine, EvalResult, MemoEntry, OracleEntry, ShardedCache, WorkerPool,
+};
 
 /// Back-compat name for the evaluation engine.
 pub type Evaluator = EvalEngine;

@@ -116,6 +116,7 @@ pub const ACCEPTED_KEYS: &[&str] = &[
     "backend",
     "bounds",
     "budget",
+    "cache_dir",
     "cell_sim_budget",
     "cell_timeout_secs",
     "cell_workers",
@@ -170,6 +171,15 @@ pub struct SweepConfig {
     /// Hunt budget per certificate (`"certify_budget"`, default 64).
     pub certify_budget: usize,
     pub out_dir: Option<String>,
+    /// Cross-run snapshot store directory (`"cache_dir"`; mirrors the
+    /// CLI's `--cache-dir`). When set, each completed cell saves its
+    /// engine's memo/oracle snapshot so later one-shot or `serve` runs
+    /// over the same (design, workload, backend, regime) warm-start
+    /// from it. Sweeps are a store *producer*: cells themselves always
+    /// run cold, keeping rows bit-reproducible regardless of what is
+    /// already cached. Orchestration-only, like `resume`/`out_dir` —
+    /// not part of the config fingerprint.
+    pub cache_dir: Option<String>,
     /// Merge prior `manifest*.json` files in `out_dir` and skip `done`
     /// cells byte-for-byte (`--resume`).
     pub resume: bool,
@@ -349,6 +359,10 @@ impl SweepConfig {
                 .get("out_dir")
                 .and_then(|v| v.as_str())
                 .map(str::to_string),
+            cache_dir: j
+                .get("cache_dir")
+                .and_then(|v| v.as_str())
+                .map(str::to_string),
             resume: j.get("resume").and_then(|v| v.as_bool()).unwrap_or(false),
             max_retries: j.get("max_retries").and_then(|v| v.as_u64()).unwrap_or(1),
             retry_backoff_ms: j
@@ -403,17 +417,11 @@ impl SweepConfig {
     }
 }
 
-/// FNV-1a 64-bit — stable across Rust versions and machines (unlike
-/// `DefaultHasher`), which is what lets cell ids name results in
-/// manifests shared between CI shards.
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
+/// FNV-1a 64-bit ([`crate::util::fnv1a`]) — stable across Rust versions
+/// and machines (unlike `DefaultHasher`), which is what lets cell ids
+/// name results in manifests shared between CI shards (and lets the
+/// store's cache keys name engine state across processes).
+use crate::util::fnv1a;
 
 /// One (design × optimizer × seed) cell of the sweep grid.
 #[derive(Debug, Clone)]
@@ -544,15 +552,30 @@ fn row_to_json(r: &SweepRow, include_elapsed: bool) -> Json {
         ("scenarios", Json::Num(r.scenarios as f64)),
         ("evals", Json::Num(r.evals as f64)),
         ("sims", Json::Num(r.sims as f64)),
-        ("incr_rate", Json::Num(r.incr_rate)),
-        ("replay_frac", Json::Num(r.replay_frac)),
-        ("oracle_rate", Json::Num(r.oracle_rate)),
-        ("clamp_rate", Json::Num(r.clamp_rate)),
+        // Rates clamp to finite on emission (a non-finite Json::Num
+        // would serialize as null, and row_from_json round-trips these
+        // through manifests on resume).
+        ("incr_rate", Json::Num(report::finite_or_zero(r.incr_rate))),
+        (
+            "replay_frac",
+            Json::Num(report::finite_or_zero(r.replay_frac)),
+        ),
+        (
+            "oracle_rate",
+            Json::Num(report::finite_or_zero(r.oracle_rate)),
+        ),
+        ("clamp_rate", Json::Num(report::finite_or_zero(r.clamp_rate))),
         ("sims_avoided", Json::Num(r.sims_avoided as f64)),
         ("bounds_floor_hits", Json::Num(r.bounds_floor_hits as f64)),
         ("cap_tightenings", Json::Num(r.cap_tightenings as f64)),
-        ("lanes_per_walk", Json::Num(r.lanes_per_walk)),
-        ("batch_occupancy", Json::Num(r.batch_occupancy)),
+        (
+            "lanes_per_walk",
+            Json::Num(report::finite_or_zero(r.lanes_per_walk)),
+        ),
+        (
+            "batch_occupancy",
+            Json::Num(report::finite_or_zero(r.batch_occupancy)),
+        ),
         ("walks_saved", Json::Num(r.walks_saved as f64)),
         ("front_size", Json::Num(r.front_size as f64)),
         ("star_latency", Json::Num(r.star_latency as f64)),
@@ -1352,6 +1375,23 @@ fn run_cell(
             &j.to_string_pretty(),
         )?;
     }
+    // Feed the cross-run store. Best-effort: a full disk or unwritable
+    // cache dir must not fail the cell — the row above is the product,
+    // the snapshot is an accelerant for later runs.
+    if let Some(dir) = &cfg.cache_dir {
+        let store = crate::store::Store::new(dir, 0);
+        let key = crate::store::Store::key(
+            design,
+            workload,
+            cfg.backend.name(),
+            cfg.prune,
+            cfg.bounds,
+        );
+        let snap = crate::store::Snapshot::capture(design, &ev);
+        if let Err(e) = store.save(&key, &snap) {
+            eprintln!("sweep: {design}/s{}: store save failed: {e}", cell.seed);
+        }
+    }
     Ok(row)
 }
 
@@ -1533,6 +1573,10 @@ fn write_aggregates(
         "distilled",
         "certified",
     ]);
+    // Rate columns route through the shared emission clamp: a memo-only
+    // cell can produce NaN/inf rates, and `f64::to_string` would write
+    // them verbatim ("NaN"), breaking numeric CSV consumers.
+    let rate = |x: f64| report::finite_or_zero(x).to_string();
     for r in rows {
         csv.row(vec![
             r.design.clone(),
@@ -1541,15 +1585,15 @@ fn write_aggregates(
             r.scenarios.to_string(),
             r.evals.to_string(),
             r.sims.to_string(),
-            r.incr_rate.to_string(),
-            r.replay_frac.to_string(),
-            r.oracle_rate.to_string(),
-            r.clamp_rate.to_string(),
+            rate(r.incr_rate),
+            rate(r.replay_frac),
+            rate(r.oracle_rate),
+            rate(r.clamp_rate),
             r.sims_avoided.to_string(),
             r.bounds_floor_hits.to_string(),
             r.cap_tightenings.to_string(),
-            r.lanes_per_walk.to_string(),
-            r.batch_occupancy.to_string(),
+            rate(r.lanes_per_walk),
+            rate(r.batch_occupancy),
             r.walks_saved.to_string(),
             r.front_size.to_string(),
             r.star_latency.to_string(),

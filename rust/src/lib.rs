@@ -99,6 +99,20 @@
 //!   DSE on the dominance-distilled bank with a full-bank re-verify
 //!   fixpoint — bit-identical results, strictly fewer scenario
 //!   simulations.
+//! - [`store`] — the cross-run snapshot store: versioned, checksummed
+//!   on-disk snapshots of an engine's memo shards, feasibility-oracle
+//!   antichains and analytic-bounds fingerprint, keyed by (design,
+//!   workload hash, backend, pruning regime) and written through
+//!   [`util::atomic_write`] with size-bounded LRU eviction. A
+//!   warm-started run is bit-identical to a cold one; the second
+//!   identical optimize replays with zero simulations (`--cache-dir` on
+//!   the CLI, shared with [`serve`]).
+//! - [`serve`] — the persistent sizing service (`fifoadvisor serve`):
+//!   a std-only newline-delimited-JSON server (TCP, plus a unix socket
+//!   on unix) keeping hot [`EvalEngine`](dse::EvalEngine)s resident on
+//!   per-key actor threads, with per-request
+//!   [`CancelToken`](dse::CancelToken) budgets and [`store`]-backed
+//!   warm starts that survive restarts.
 //! - [`runtime`] — the batched-analytics runtime: a native interpreter
 //!   of the AOT-exported JAX/Pallas analytics computation (BRAM totals,
 //!   β-grid objectives, dominance mask), shape-bucketed like the
@@ -122,7 +136,9 @@ pub mod ir;
 pub mod opt;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
+pub mod store;
 pub mod trace;
 pub mod util;
 

@@ -157,6 +157,24 @@ impl DepthBounds {
         debug_assert_eq!(depths.len(), self.floors.len());
         depths.iter().zip(&self.floors).any(|(&d, &f)| d < f)
     }
+
+    /// Machine-stable hash over floors, caps and write caps. The store
+    /// embeds it in every snapshot: a persisted memo/oracle is reused
+    /// only when the *freshly recomputed* bounds of the same workload
+    /// agree, so a snapshot from a stale analysis (or a garbled one that
+    /// still parsed) falls back to a cold start instead of mixing bound
+    /// regimes.
+    pub fn fingerprint(&self) -> u64 {
+        let mut s = String::new();
+        for (&f, (&c, &w)) in self
+            .floors
+            .iter()
+            .zip(self.caps.iter().zip(&self.write_caps))
+        {
+            s.push_str(&format!("{f},{c},{w};"));
+        }
+        crate::util::fnv1a(s.as_bytes())
+    }
 }
 
 #[cfg(test)]

@@ -400,6 +400,35 @@ impl FeasibilityOracle {
     pub fn queries(&self) -> u64 {
         self.queries
     }
+
+    /// The per-channel deadlock-space caps this oracle clamps against.
+    pub fn caps(&self) -> &[u32] {
+        &self.caps
+    }
+
+    /// Export both antichains for persistence: `(config, latency)` pairs
+    /// — the known-deadlock side first (`latency == None`), then the
+    /// known-feasible side — each side sorted by config so snapshots are
+    /// deterministic. Hit/stamp bookkeeping is deliberately dropped: it
+    /// orders *eviction*, never verdicts, and replaying the entries
+    /// through [`note`](Self::note) rebuilds valid antichains. Reusing a
+    /// learned antichain across runs is sound for the same reason the
+    /// oracle is sound within a run: deadlock is monotone in depths and
+    /// depends only on the trace's op counts, which the store's
+    /// trace-hash keying pins.
+    pub fn entries(&self) -> Vec<(Vec<u32>, Option<u64>)> {
+        fn side(entries: &[Entry]) -> Vec<(Vec<u32>, Option<u64>)> {
+            let mut out: Vec<(Vec<u32>, Option<u64>)> = entries
+                .iter()
+                .map(|e| (e.cfg.to_vec(), e.latency))
+                .collect();
+            out.sort();
+            out
+        }
+        let mut all = side(&self.infeasible);
+        all.extend(side(&self.feasible));
+        all
+    }
 }
 
 /// Remove the least useful entry: fewest hits, oldest stamp on ties.
@@ -508,6 +537,26 @@ mod tests {
         assert!(o.num_infeasible() <= 4);
         // Everything kept still answers correctly.
         assert_eq!(o.classify(&[2, 2]), Some(OracleVerdict::Infeasible));
+    }
+
+    #[test]
+    fn entries_export_replays_into_an_equivalent_oracle() {
+        let mut o = FeasibilityOracle::new(vec![100, 100]);
+        o.note(&[8, 4], None);
+        o.note(&[3, 9], None);
+        o.note(&[40, 40], Some(77));
+        let dump = o.entries();
+        assert_eq!(dump.len(), 3);
+        // Infeasible side first, each side sorted by config.
+        assert_eq!(dump[0], (vec![3, 9], None));
+        assert_eq!(dump[1], (vec![8, 4], None));
+        assert_eq!(dump[2], (vec![40, 40], Some(77)));
+        let mut back = FeasibilityOracle::new(o.caps().to_vec());
+        for (cfg, lat) in &dump {
+            back.note(cfg, *lat);
+        }
+        assert_eq!(back.entries(), dump, "replay rebuilds the antichains");
+        assert_eq!(back.classify(&[2, 4]), Some(OracleVerdict::Infeasible));
     }
 
     #[test]

@@ -27,9 +27,22 @@ pub fn point_to_json(p: &EvalPoint) -> Json {
     ])
 }
 
+/// Clamp a derived rate to a finite value for emission. An instant
+/// memo-only run (every proposal a cache hit, elapsed ≈ 0) can push a
+/// rate to NaN or ±inf; those serialize as `null` in JSON and as
+/// `"NaN"`/`"inf"` in CSV, breaking downstream numeric parsers. Raw
+/// counters are never clamped — only derived rates route through here.
+pub fn finite_or_zero(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
 /// Serialize the evaluation-engine counters (cache hit rate, sims/sec,
 /// worker utilization, incremental-replay telemetry) for run records and
-/// diagnostics.
+/// diagnostics. Every derived rate passes through [`finite_or_zero`].
 pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
     let s = engine.stats();
     Json::obj(vec![
@@ -38,30 +51,42 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
         ("cache_shards", Json::Num(engine.cache_shards() as f64)),
         ("proposals", Json::Num(s.proposals as f64)),
         ("cache_hits", Json::Num(s.cache_hits as f64)),
-        ("cache_hit_rate", Json::Num(s.hit_rate())),
+        ("cache_hit_rate", Json::Num(finite_or_zero(s.hit_rate()))),
         ("batches", Json::Num(s.batches as f64)),
         ("sims", Json::Num(s.sims as f64)),
-        ("sims_per_sec", Json::Num(engine.sims_per_sec())),
-        ("proposals_per_sec", Json::Num(engine.proposals_per_sec())),
-        ("worker_utilization", Json::Num(engine.worker_utilization())),
+        ("sims_per_sec", Json::Num(finite_or_zero(engine.sims_per_sec()))),
+        (
+            "proposals_per_sec",
+            Json::Num(finite_or_zero(engine.proposals_per_sec())),
+        ),
+        (
+            "worker_utilization",
+            Json::Num(finite_or_zero(engine.worker_utilization())),
+        ),
         ("prune", Json::Bool(engine.prune())),
         ("oracle_hits", Json::Num(s.oracle_hits as f64)),
-        ("oracle_rate", Json::Num(s.oracle_rate())),
+        ("oracle_rate", Json::Num(finite_or_zero(s.oracle_rate()))),
         ("clamp_hits", Json::Num(s.clamp_hits as f64)),
-        ("clamp_rate", Json::Num(s.clamp_rate())),
+        ("clamp_rate", Json::Num(finite_or_zero(s.clamp_rate()))),
         ("sims_avoided", Json::Num(s.sims_avoided as f64)),
         ("bounds", Json::Bool(engine.bounds())),
         ("bounds_floor_hits", Json::Num(s.bounds_floor_hits as f64)),
         ("cap_tightenings", Json::Num(s.cap_tightenings as f64)),
         ("incremental_sims", Json::Num(s.incr_sims as f64)),
-        ("incremental_rate", Json::Num(s.incremental_rate())),
+        (
+            "incremental_rate",
+            Json::Num(finite_or_zero(s.incremental_rate())),
+        ),
         (
             "dirty_channels_per_incremental_sim",
-            Json::Num(s.dirty_per_incremental()),
+            Json::Num(finite_or_zero(s.dirty_per_incremental())),
         ),
         ("replayed_ops", Json::Num(s.replayed_ops as f64)),
         ("replayable_ops", Json::Num(s.replayable_ops as f64)),
-        ("replay_fraction", Json::Num(s.replay_fraction())),
+        (
+            "replay_fraction",
+            Json::Num(finite_or_zero(s.replay_fraction())),
+        ),
         ("scenarios", Json::Num(engine.num_scenarios() as f64)),
         (
             "scenario_names",
@@ -74,11 +99,17 @@ pub fn engine_stats_to_json(engine: &EvalEngine) -> Json {
             ),
         ),
         ("scenario_sims", Json::Num(s.scenario_sims as f64)),
-        ("robustness_gap_mean", Json::Num(s.mean_robustness_gap())),
+        (
+            "robustness_gap_mean",
+            Json::Num(finite_or_zero(s.mean_robustness_gap())),
+        ),
         ("batch_walks", Json::Num(s.batch_walks as f64)),
         ("lanes_packed", Json::Num(s.lanes_packed as f64)),
-        ("lanes_per_walk", Json::Num(s.lanes_per_walk())),
-        ("batch_occupancy", Json::Num(s.batch_occupancy())),
+        ("lanes_per_walk", Json::Num(finite_or_zero(s.lanes_per_walk()))),
+        (
+            "batch_occupancy",
+            Json::Num(finite_or_zero(s.batch_occupancy())),
+        ),
         ("walks_saved", Json::Num(s.walks_saved() as f64)),
     ])
 }
@@ -99,8 +130,8 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
     let pruning = if engine.prune() {
         format!(
             ", pruning: {:.0}% oracle / {:.0}% clamp, {} sims avoided",
-            s.oracle_rate() * 100.0,
-            s.clamp_rate() * 100.0,
+            finite_or_zero(s.oracle_rate()) * 100.0,
+            finite_or_zero(s.clamp_rate()) * 100.0,
             s.sims_avoided
         )
     } else {
@@ -121,8 +152,8 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
     let lanes = if s.batch_walks > 0 {
         format!(
             ", lane batching: {:.1} lanes/walk at {:.0}% occupancy, {} walks saved",
-            s.lanes_per_walk(),
-            s.batch_occupancy() * 100.0,
+            finite_or_zero(s.lanes_per_walk()),
+            finite_or_zero(s.batch_occupancy()) * 100.0,
             s.walks_saved()
         )
     } else {
@@ -135,13 +166,13 @@ pub fn engine_stats_line(engine: &EvalEngine) -> String {
          {backend}{lanes}{pruning}{bounds}{scenarios}",
         engine.jobs(),
         engine.cache_shards(),
-        s.hit_rate() * 100.0,
-        engine.sims_per_sec(),
-        engine.proposals_per_sec(),
-        engine.worker_utilization() * 100.0,
-        s.incremental_rate() * 100.0,
-        s.dirty_per_incremental(),
-        s.replay_fraction() * 100.0
+        finite_or_zero(s.hit_rate()) * 100.0,
+        finite_or_zero(engine.sims_per_sec()),
+        finite_or_zero(engine.proposals_per_sec()),
+        finite_or_zero(engine.worker_utilization()) * 100.0,
+        finite_or_zero(s.incremental_rate()) * 100.0,
+        finite_or_zero(s.dirty_per_incremental()),
+        finite_or_zero(s.replay_fraction()) * 100.0
     )
 }
 
@@ -216,6 +247,49 @@ mod tests {
         );
         assert_eq!(t.lines().count(), 4);
         assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn instant_memo_only_run_serializes_finite_rates() {
+        assert_eq!(finite_or_zero(f64::NAN), 0.0);
+        assert_eq!(finite_or_zero(f64::INFINITY), 0.0);
+        assert_eq!(finite_or_zero(f64::NEG_INFINITY), 0.0);
+        assert_eq!(finite_or_zero(1.5), 1.5);
+
+        // A run answered entirely from the memo cache finishes with zero
+        // sims in (close to) zero elapsed time — the degenerate inputs
+        // behind NaN/inf rates. Every derived rate must still land in
+        // the JSON as a plain finite number, never null.
+        let bd = crate::bench_suite::build("fig2");
+        let w =
+            crate::trace::workload::Workload::from_design_args(&bd.design, &[vec![16]]).unwrap();
+        let mut warm = EvalEngine::for_workload(std::sync::Arc::new(w), 1);
+        let depths = warm.workload().baseline_max();
+        warm.eval(&depths);
+        let memo = warm.memo_entries();
+        let mut ev = EvalEngine::for_workload(warm.workload().clone(), 1);
+        assert!(ev.import_memo(&memo) > 0);
+        ev.reset_run(false);
+        ev.eval(&depths); // pure memo hit: zero sims this run
+        assert_eq!(ev.stats().sims, 0);
+        let j = engine_stats_to_json(&ev);
+        let text = j.to_string_compact();
+        assert!(
+            !text.contains("null"),
+            "a rate serialized as null (non-finite leaked through): {text}"
+        );
+        for key in [
+            "cache_hit_rate",
+            "sims_per_sec",
+            "proposals_per_sec",
+            "worker_utilization",
+            "lanes_per_walk",
+            "batch_occupancy",
+            "robustness_gap_mean",
+        ] {
+            let v = j.get(key).and_then(Json::as_f64).unwrap();
+            assert!(v.is_finite(), "{key} must be finite, got {v}");
+        }
     }
 
     #[test]

@@ -1,0 +1,788 @@
+//! The persistent sizing service: `fifoadvisor serve`.
+//!
+//! A long-running, std-only server speaking newline-delimited JSON over
+//! TCP (and, on unix, an optional unix-domain socket). One request per
+//! line, one response per line:
+//!
+//! ```text
+//! → {"id":1,"cmd":"optimize","design":"fig2","optimizer":"grouped_sa","seed":1,"budget":200}
+//! ← {"id":1,"ok":true,"result":{...deterministic...},"stats":{...timing/sims...}}
+//! ```
+//!
+//! Commands: `ping`, `stats`, `simulate`, `optimize`, `hunt`,
+//! `certify`, `shutdown`. Engine-backed commands name a built-in suite
+//! design plus optional scenario `args`; the server keeps one hot
+//! [`EvalEngine`] resident per (design, args, backend, prune, bounds,
+//! jobs) so repeated requests hit a warm memo cache — the second
+//! identical optimize is a pure replay with **zero** simulations.
+//!
+//! # Engine actors
+//!
+//! `EvalEngine` is deliberately not `Send` (its BRAM backend may be
+//! thread-pinned), so each engine lives on a dedicated *actor thread*
+//! that builds it locally and serves requests from an mpsc queue;
+//! connection handlers only ship JSON jobs and wait for the reply.
+//! Concurrent requests for the same engine serialize in queue order —
+//! everything the engine layer guarantees (determinism, serial ==
+//! `--jobs N`) carries over verbatim. Each request installs a fresh
+//! [`CancelToken`] from its `timeout_secs` / `max_sims` fields, so one
+//! slow request cannot wedge its actor forever.
+//!
+//! # Result/stats split
+//!
+//! Responses separate the deterministic payload (`result`: fronts,
+//! verdicts, a history hash) from run-dependent telemetry (`stats`:
+//! sims, elapsed). A warm-started answer is byte-identical to a cold
+//! one in `result`; only `stats` may differ — which is exactly what
+//! the CI smoke job asserts.
+//!
+//! # Cross-run cache
+//!
+//! With a `cache_dir`, each actor warm-starts its engine from the
+//! [`crate::store`] snapshot under its key at creation and persists an
+//! updated snapshot after every request that simulated something — so
+//! the replay guarantee survives server restarts.
+
+use crate::bench_suite;
+use crate::dse::cancel::CancelToken;
+use crate::dse::{advhunt, drive, EvalEngine};
+use crate::opt::{self, Space};
+use crate::sim::BackendKind;
+use crate::store::{Snapshot, Store};
+use crate::trace::workload::Workload;
+use crate::util::fnv1a;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Server configuration (the `fifoadvisor serve` flags).
+pub struct ServeConfig {
+    /// TCP bind address, e.g. `127.0.0.1:7733`.
+    pub addr: String,
+    /// Optional unix-domain socket path (unix only; ignored elsewhere).
+    pub unix_socket: Option<String>,
+    /// Cross-run snapshot directory (`None` = in-memory only).
+    pub cache_dir: Option<String>,
+    /// Store size budget in MiB (0 = unlimited).
+    pub cache_max_mb: u64,
+    /// Default worker count for engines (requests may override).
+    pub jobs: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7733".to_string(),
+            unix_socket: None,
+            cache_dir: None,
+            cache_max_mb: 512,
+            jobs: 1,
+        }
+    }
+}
+
+/// One queued request for an engine actor.
+struct EngineJob {
+    req: Json,
+    resp: mpsc::Sender<Json>,
+}
+
+struct ServerState {
+    cfg: ServeConfig,
+    /// Engine-actor queues by engine key. A dead actor (panicked) is
+    /// detected on send failure and respawned lazily.
+    engines: Mutex<HashMap<String, mpsc::Sender<EngineJob>>>,
+    stop: AtomicBool,
+    requests: AtomicU64,
+}
+
+// ---------------------------------------------------------------------------
+// Request plumbing
+// ---------------------------------------------------------------------------
+
+fn err_response(id: Option<&Json>, msg: &str) -> Json {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
+    Json::obj(pairs)
+}
+
+fn ok_response(id: Option<&Json>, result: Json, stats: Json) -> Json {
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("result", result),
+        ("stats", stats),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
+    Json::obj(pairs)
+}
+
+fn get_u64_field(req: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match req.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_u64().ok_or_else(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn get_bool_field(req: &Json, key: &str, default: bool) -> Result<bool, String> {
+    match req.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| format!("'{key}' must be a boolean")),
+    }
+}
+
+fn get_depths(req: &Json, w: &Workload) -> Result<Vec<u32>, String> {
+    match req.get("depths") {
+        Some(v) => {
+            let arr = v.as_arr().ok_or("'depths' must be an array")?;
+            if arr.len() != w.num_fifos() {
+                return Err(format!(
+                    "'depths' has {} entries, design has {} FIFOs",
+                    arr.len(),
+                    w.num_fifos()
+                ));
+            }
+            arr.iter()
+                .map(|d| {
+                    d.as_u64()
+                        .and_then(|u| u32::try_from(u).ok())
+                        .map(|u| u.max(1))
+                        .ok_or_else(|| "bad depth".to_string())
+                })
+                .collect()
+        }
+        None => match req.get("baseline").and_then(Json::as_str).unwrap_or("max") {
+            "max" => Ok(w.baseline_max()),
+            "min" => Ok(w.baseline_min()),
+            other => Err(format!("'baseline' must be max|min, got '{other}'")),
+        },
+    }
+}
+
+/// Scenario argument sets, one inner vector per workload scenario.
+type ArgSets = Vec<Vec<i64>>;
+
+/// Resolve the request's design + scenario args into a workload.
+fn build_workload(req: &Json) -> Result<(String, Arc<Workload>, ArgSets), String> {
+    let name = req
+        .get("design")
+        .and_then(Json::as_str)
+        .ok_or("missing 'design'")?
+        .to_string();
+    let bd = bench_suite::try_build(&name).ok_or_else(|| format!("unknown design '{name}'"))?;
+    let sets: ArgSets = match req.get("args") {
+        None => vec![bd.args.clone()],
+        Some(v) => {
+            let outer = v.as_arr().ok_or("'args' must be an array of arrays")?;
+            let mut sets = Vec::with_capacity(outer.len());
+            for s in outer {
+                let inner = s.as_arr().ok_or("'args' must be an array of arrays")?;
+                let mut one = Vec::with_capacity(inner.len());
+                for a in inner {
+                    let f = a.as_f64().ok_or("scenario args must be numbers")?;
+                    one.push(f as i64);
+                }
+                sets.push(one);
+            }
+            if sets.is_empty() {
+                vec![bd.args.clone()]
+            } else {
+                sets
+            }
+        }
+    };
+    let w = Workload::from_design_args(&bd.design, &sets).map_err(|e| e.to_string())?;
+    Ok((name, Arc::new(w), sets))
+}
+
+/// Deterministic fingerprint of a run's history — depths, latency and
+/// BRAM only (never wall-clock fields), so warm and cold runs hash
+/// identically.
+fn history_hash(engine: &EvalEngine) -> String {
+    let mut s = String::new();
+    for p in &engine.history {
+        s.push_str(&format!("{:?}:{:?}:{};", p.depths, p.latency, p.bram));
+    }
+    format!("{:016x}", fnv1a(s.as_bytes()))
+}
+
+fn front_json(engine: &EvalEngine) -> Json {
+    Json::Arr(
+        engine
+            .pareto()
+            .into_iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("depths", Json::nums(&p.depths.iter().map(|&d| d as f64).collect::<Vec<_>>())),
+                    (
+                        "latency",
+                        match p.latency {
+                            Some(l) => Json::Num(l as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("bram", Json::Num(p.bram as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn engine_stats_json(engine: &EvalEngine, elapsed: f64) -> Json {
+    let s = engine.stats();
+    Json::obj(vec![
+        ("sims", Json::Num(s.sims as f64)),
+        ("proposals", Json::Num(s.proposals as f64)),
+        ("cache_hits", Json::Num(s.cache_hits as f64)),
+        ("oracle_hits", Json::Num(s.oracle_hits as f64)),
+        ("elapsed_secs", Json::Num(elapsed)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Engine actors
+// ---------------------------------------------------------------------------
+
+/// Everything an actor needs to build its engine locally (the engine
+/// itself is not `Send`, so it must be born on the actor thread).
+struct EngineSpec {
+    design: String,
+    workload: Arc<Workload>,
+    backend: BackendKind,
+    prune: bool,
+    bounds: bool,
+    jobs: usize,
+    store: Option<(String, u64)>, // (dir, max_mb)
+}
+
+fn engine_key(spec: &EngineSpec, args: &[Vec<i64>]) -> String {
+    format!(
+        "{}|{:?}|{}|prune={}|bounds={}|jobs={}",
+        spec.design,
+        args,
+        spec.backend.name(),
+        spec.prune,
+        spec.bounds,
+        spec.jobs
+    )
+}
+
+/// The actor loop: build the engine (warm-starting from the store when
+/// available), then serve queued jobs until every sender is dropped.
+fn engine_actor(spec: EngineSpec, rx: mpsc::Receiver<EngineJob>) {
+    let mut engine =
+        EvalEngine::for_workload_with_sim(spec.workload.clone(), spec.jobs, spec.backend);
+    engine.set_prune(spec.prune);
+    engine.set_bounds(spec.bounds);
+    let store = spec
+        .store
+        .as_ref()
+        .map(|(dir, mb)| (Store::new(dir, *mb), store_key(&spec)));
+    if let Some((st, key)) = &store {
+        if let Some(snap) = st.load(key) {
+            match snap.apply(&mut engine) {
+                Ok(n) => eprintln!("serve: engine {key}: warm-started {n} memo entries"),
+                Err(e) => eprintln!("serve: engine {key}: snapshot rejected ({e}); cold start"),
+            }
+        }
+    }
+    let space = Space::from_workload(&spec.workload);
+    while let Ok(job) = rx.recv() {
+        let before = engine.n_sim;
+        let resp = handle_engine_request(&job.req, &mut engine, &space);
+        if engine.n_sim > before {
+            if let Some((st, key)) = &store {
+                let snap = Snapshot::capture(&spec.design, &engine);
+                if let Err(e) = st.save(key, &snap) {
+                    eprintln!("serve: engine {key}: snapshot save failed: {e}");
+                }
+            }
+        }
+        if job.resp.send(resp).is_err() {
+            // Handler hung up (client gone); keep serving others.
+            continue;
+        }
+    }
+}
+
+fn store_key(spec: &EngineSpec) -> String {
+    Store::key(
+        &spec.design,
+        &spec.workload,
+        spec.backend.name(),
+        spec.prune,
+        spec.bounds,
+    )
+}
+
+/// Per-request cancellation token from `timeout_secs` / `max_sims`.
+fn request_token(req: &Json) -> Result<CancelToken, String> {
+    let timeout = match req.get("timeout_secs") {
+        None => None,
+        Some(v) => {
+            let f = v.as_f64().filter(|f| *f > 0.0).ok_or("'timeout_secs' must be > 0")?;
+            Some(std::time::Duration::from_secs_f64(f))
+        }
+    };
+    let max_sims = match req.get("max_sims") {
+        None => None,
+        Some(v) => Some(v.as_u64().ok_or("'max_sims' must be a non-negative integer")?),
+    };
+    Ok(CancelToken::with_limits(timeout, max_sims))
+}
+
+fn handle_engine_request(req: &Json, engine: &mut EvalEngine, space: &Space) -> Json {
+    let id = req.get("id");
+    let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("");
+    let t0 = std::time::Instant::now();
+    let out: Result<Json, String> = (|| {
+        engine.reset_run(false);
+        engine.set_cancel_token(request_token(req)?);
+        match cmd {
+            "simulate" => {
+                let depths = get_depths(req, engine.workload())?;
+                let (lat, bram) = engine.eval(&depths);
+                Ok(Json::obj(vec![
+                    ("depths", Json::nums(&depths.iter().map(|&d| d as f64).collect::<Vec<_>>())),
+                    (
+                        "latency",
+                        match lat {
+                            Some(l) => Json::Num(l as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("bram", Json::Num(bram as f64)),
+                    ("deadlock", Json::Bool(lat.is_none())),
+                ]))
+            }
+            "optimize" => {
+                let opt_name = req
+                    .get("optimizer")
+                    .and_then(Json::as_str)
+                    .unwrap_or("grouped_sa")
+                    .to_string();
+                let seed = get_u64_field(req, "seed", 1)?;
+                let budget = get_u64_field(req, "budget", 1000)? as usize;
+                let mut optimizer = opt::by_name(&opt_name, seed)
+                    .ok_or_else(|| format!("unknown optimizer '{opt_name}'"))?;
+                engine.eval_baselines();
+                engine.reset_run(false);
+                drive(&mut *optimizer, engine, space, budget);
+                Ok(Json::obj(vec![
+                    ("optimizer", Json::Str(opt_name)),
+                    ("seed", Json::Num(seed as f64)),
+                    ("budget", Json::Num(budget as f64)),
+                    ("front", front_json(engine)),
+                    ("history_len", Json::Num(engine.history.len() as f64)),
+                    ("history_hash", Json::Str(history_hash(engine))),
+                    ("truncated", Json::Bool(engine.truncated())),
+                ]))
+            }
+            "hunt" => {
+                let budget = get_u64_field(req, "budget", 1000)? as usize;
+                let hunter = opt::vitis_hunter::VitisHunter::new();
+                match hunter.hunt(engine, space, budget) {
+                    Some(cfg) => {
+                        let (lat, bram) = engine.eval(&cfg);
+                        Ok(Json::obj(vec![
+                            ("found", Json::Bool(true)),
+                            (
+                                "depths",
+                                Json::nums(&cfg.iter().map(|&d| d as f64).collect::<Vec<_>>()),
+                            ),
+                            (
+                                "latency",
+                                match lat {
+                                    Some(l) => Json::Num(l as f64),
+                                    None => Json::Null,
+                                },
+                            ),
+                            ("bram", Json::Num(bram as f64)),
+                        ]))
+                    }
+                    None => Ok(Json::obj(vec![
+                        ("found", Json::Bool(false)),
+                        ("truncated", Json::Bool(engine.truncated())),
+                    ])),
+                }
+            }
+            other => Err(format!("engine actor cannot serve '{other}'")),
+        }
+    })();
+    let elapsed = t0.elapsed().as_secs_f64();
+    match out {
+        Ok(result) => ok_response(id, result, engine_stats_json(engine, elapsed)),
+        Err(e) => err_response(id, &e),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+fn handle_request(server: &Arc<ServerState>, line: &str) -> Json {
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err_response(None, &format!("bad request json: {e:?}")),
+    };
+    let id = req.get("id").cloned();
+    let id = id.as_ref();
+    server.requests.fetch_add(1, Ordering::SeqCst);
+    let cmd = match req.get("cmd").and_then(Json::as_str) {
+        Some(c) => c.to_string(),
+        None => return err_response(id, "missing 'cmd'"),
+    };
+    match cmd.as_str() {
+        "ping" => ok_response(id, Json::Str("pong".to_string()), Json::obj(vec![])),
+        "stats" => {
+            let engines = server.engines.lock().expect("engines lock poisoned").len();
+            ok_response(
+                id,
+                Json::obj(vec![
+                    ("requests", Json::Num(server.requests.load(Ordering::SeqCst) as f64)),
+                    ("engines", Json::Num(engines as f64)),
+                ]),
+                Json::obj(vec![]),
+            )
+        }
+        "shutdown" => {
+            server.stop.store(true, Ordering::SeqCst);
+            // Self-connect to wake the blocking accept loop.
+            let _ = TcpStream::connect(&server.cfg.addr);
+            ok_response(id, Json::Str("stopping".to_string()), Json::obj(vec![]))
+        }
+        "certify" => handle_certify(&req, id),
+        "simulate" | "optimize" | "hunt" => dispatch_to_engine(server, &req, id),
+        other => err_response(id, &format!("unknown cmd '{other}'")),
+    }
+}
+
+/// `certify` is stateless (it builds its own per-scenario machinery),
+/// so it runs on the connection handler thread, no actor involved.
+fn handle_certify(req: &Json, id: Option<&Json>) -> Json {
+    let out: Result<Json, String> = (|| {
+        let (name, w, _) = build_workload(req)?;
+        let depths = get_depths(req, &w)?;
+        let cfg = advhunt::HuntConfig {
+            optimizer: req
+                .get("hunt_optimizer")
+                .and_then(Json::as_str)
+                .unwrap_or("auto")
+                .to_string(),
+            seed: get_u64_field(req, "seed", 1)?,
+            budget: get_u64_field(req, "budget", 64)? as usize,
+            jobs: 1,
+            cancel: request_token(req)?,
+        };
+        if !advhunt::HUNT_OPTIMIZERS.contains(&cfg.optimizer.as_str()) {
+            return Err(format!(
+                "hunt optimizer '{}' not in {:?}",
+                cfg.optimizer,
+                advhunt::HUNT_OPTIMIZERS
+            ));
+        }
+        match advhunt::certify_design(&name, &depths, &cfg) {
+            Some(c) => Ok(c.to_json()),
+            None => Err(format!(
+                "design '{name}' exposes no kernel-argument space — nothing to certify against"
+            )),
+        }
+    })();
+    match out {
+        Ok(result) => ok_response(id, result, Json::obj(vec![])),
+        Err(e) => err_response(id, &e),
+    }
+}
+
+/// Route an engine-backed request to its actor, creating the actor on
+/// first use. The workload is built (and validated) here on the handler
+/// thread; the non-`Send` engine is built inside the actor.
+fn dispatch_to_engine(server: &Arc<ServerState>, req: &Json, id: Option<&Json>) -> Json {
+    let spec = (|| -> Result<(EngineSpec, ArgSets), String> {
+        let (design, workload, args) = build_workload(req)?;
+        let backend = match req.get("backend").and_then(Json::as_str) {
+            None => BackendKind::Fast,
+            Some(s) => BackendKind::parse(s)?,
+        };
+        let jobs = get_u64_field(req, "jobs", server.cfg.jobs as u64)?.max(1) as usize;
+        Ok((
+            EngineSpec {
+                design,
+                workload,
+                backend,
+                prune: get_bool_field(req, "prune", true)?,
+                bounds: get_bool_field(req, "bounds", true)?,
+                jobs,
+                store: server
+                    .cfg
+                    .cache_dir
+                    .as_ref()
+                    .map(|d| (d.clone(), server.cfg.cache_max_mb)),
+            },
+            args,
+        ))
+    })();
+    let (spec, args) = match spec {
+        Ok(s) => s,
+        Err(e) => return err_response(id, &e),
+    };
+    let key = engine_key(&spec, &args);
+    let (rtx, rrx) = mpsc::channel();
+    let job = EngineJob {
+        req: req.clone(),
+        resp: rtx,
+    };
+    // Send under the lock so a respawn after an actor death is racefree.
+    {
+        let mut engines = server.engines.lock().expect("engines lock poisoned");
+        let tx = engines.entry(key.clone()).or_insert_with(|| {
+            let (tx, rx) = mpsc::channel();
+            thread::spawn(move || engine_actor(spec, rx));
+            tx
+        });
+        if tx.send(job).is_err() {
+            engines.remove(&key);
+            return err_response(id, "engine actor died; retry the request");
+        }
+    }
+    match rrx.recv() {
+        Ok(resp) => resp,
+        Err(_) => err_response(id, "engine actor dropped the request (panic?)"),
+    }
+}
+
+fn handle_conn(server: Arc<ServerState>, reader: impl BufRead, mut writer: impl Write) {
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_request(&server, &line);
+        if writeln!(writer, "{}", resp.to_string_compact()).is_err() {
+            break;
+        }
+        let _ = writer.flush();
+        if server.stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Listeners
+// ---------------------------------------------------------------------------
+
+/// Run the server until a `shutdown` request arrives. Binds the TCP
+/// address (and the unix socket, when configured on unix) and serves
+/// each connection on its own thread.
+pub fn run(cfg: ServeConfig) -> io::Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    // Rebind to whatever the OS resolved (port 0 → a concrete port), so
+    // the shutdown self-connect and the startup banner agree with it.
+    let addr = listener.local_addr()?;
+    let mut cfg = cfg;
+    cfg.addr = addr.to_string();
+    println!("fifoadvisor serve: listening on {addr}");
+    if let Some(dir) = &cfg.cache_dir {
+        println!("fifoadvisor serve: cross-run cache at {dir}");
+    }
+    let server = Arc::new(ServerState {
+        cfg,
+        engines: Mutex::new(HashMap::new()),
+        stop: AtomicBool::new(false),
+        requests: AtomicU64::new(0),
+    });
+
+    #[cfg(unix)]
+    if let Some(path) = server.cfg.unix_socket.clone() {
+        let _ = std::fs::remove_file(&path);
+        let ul = std::os::unix::net::UnixListener::bind(&path)?;
+        println!("fifoadvisor serve: listening on unix:{path}");
+        let srv = Arc::clone(&server);
+        thread::spawn(move || {
+            for stream in ul.incoming() {
+                let Ok(stream) = stream else { break };
+                if srv.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let srv = Arc::clone(&srv);
+                thread::spawn(move || {
+                    let Ok(r) = stream.try_clone() else { return };
+                    handle_conn(srv, BufReader::new(r), stream);
+                });
+            }
+        });
+    }
+
+    for stream in listener.incoming() {
+        let stream = stream?;
+        if server.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let srv = Arc::clone(&server);
+        thread::spawn(move || {
+            let Ok(r) = stream.try_clone() else { return };
+            handle_conn(srv, BufReader::new(r), stream);
+        });
+    }
+    println!("fifoadvisor serve: shutdown");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn start_test_server(cache_dir: Option<String>) -> (String, thread::JoinHandle<()>) {
+        // Port 0: the OS picks a free port; we learn it via a handshake
+        // channel once the listener is bound.
+        let (tx, rx) = mpsc::channel();
+        let handle = thread::spawn(move || {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            tx.send(addr.clone()).unwrap();
+            let server = Arc::new(ServerState {
+                cfg: ServeConfig {
+                    addr,
+                    unix_socket: None,
+                    cache_dir,
+                    cache_max_mb: 64,
+                    jobs: 1,
+                },
+                engines: Mutex::new(HashMap::new()),
+                stop: AtomicBool::new(false),
+                requests: AtomicU64::new(0),
+            });
+            for stream in listener.incoming() {
+                let stream = stream.unwrap();
+                if server.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let srv = Arc::clone(&server);
+                thread::spawn(move || {
+                    let r = stream.try_clone().unwrap();
+                    handle_conn(srv, BufReader::new(r), stream);
+                });
+            }
+        });
+        (rx.recv().unwrap(), handle)
+    }
+
+    fn roundtrip(addr: &str, req: &str) -> Json {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        writeln!(stream, "{req}").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream.try_clone().unwrap())
+            .read_line(&mut line)
+            .unwrap();
+        Json::parse(&line).unwrap()
+    }
+
+    fn shutdown(addr: &str, handle: thread::JoinHandle<()>) {
+        let _ = roundtrip(addr, "{\"cmd\":\"shutdown\"}");
+        let _ = handle.join();
+    }
+
+    #[test]
+    fn ping_and_errors_roundtrip() {
+        let (addr, handle) = start_test_server(None);
+        let r = roundtrip(&addr, "{\"cmd\":\"ping\",\"id\":7}");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(r.get("id").and_then(Json::as_u64), Some(7));
+        let r = roundtrip(&addr, "{\"cmd\":\"simulate\",\"design\":\"no_such\"}");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        let r = roundtrip(&addr, "not json at all");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        shutdown(&addr, handle);
+    }
+
+    #[test]
+    fn second_identical_optimize_is_a_zero_sim_replay() {
+        let (addr, handle) = start_test_server(None);
+        let req = "{\"cmd\":\"optimize\",\"design\":\"fig2\",\"optimizer\":\"grouped_sa\",\
+                   \"seed\":3,\"budget\":120}";
+        let a = roundtrip(&addr, req);
+        assert_eq!(a.get("ok").and_then(Json::as_bool), Some(true), "{a:?}");
+        let cold_sims = a.get("stats").unwrap().get("sims").unwrap().as_u64().unwrap();
+        assert!(cold_sims > 0);
+        let b = roundtrip(&addr, req);
+        let warm_sims = b.get("stats").unwrap().get("sims").unwrap().as_u64().unwrap();
+        assert_eq!(warm_sims, 0, "second identical optimize must replay");
+        // The deterministic result payload is byte-identical.
+        assert_eq!(
+            a.get("result").unwrap().to_string_compact(),
+            b.get("result").unwrap().to_string_compact()
+        );
+        shutdown(&addr, handle);
+    }
+
+    #[test]
+    fn cache_dir_survives_a_server_restart_bit_identically() {
+        let dir = std::env::temp_dir().join(format!(
+            "fifoadvisor_serve_restart_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = dir.to_str().unwrap().to_string();
+        let req = "{\"cmd\":\"optimize\",\"design\":\"fig2\",\"optimizer\":\"grouped_sa\",\
+                   \"seed\":5,\"budget\":100}";
+
+        let (addr, handle) = start_test_server(Some(cache.clone()));
+        let cold = roundtrip(&addr, req);
+        assert_eq!(cold.get("ok").and_then(Json::as_bool), Some(true), "{cold:?}");
+        shutdown(&addr, handle);
+
+        // "Restart": a brand-new server over the same cache dir.
+        let (addr, handle) = start_test_server(Some(cache));
+        let warm = roundtrip(&addr, req);
+        assert_eq!(
+            warm.get("stats").unwrap().get("sims").unwrap().as_u64(),
+            Some(0),
+            "restarted server must replay from the store"
+        );
+        assert_eq!(
+            cold.get("result").unwrap().to_string_compact(),
+            warm.get("result").unwrap().to_string_compact(),
+            "warm answer must be bit-identical to cold"
+        );
+        shutdown(&addr, handle);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn simulate_requests_share_the_resident_engine_memo() {
+        let (addr, handle) = start_test_server(None);
+        let req = "{\"cmd\":\"simulate\",\"design\":\"fig2\",\"depths\":[16,16]}";
+        let a = roundtrip(&addr, req);
+        assert_eq!(a.get("ok").and_then(Json::as_bool), Some(true), "{a:?}");
+        assert_eq!(
+            a.get("stats").unwrap().get("sims").unwrap().as_u64(),
+            Some(1)
+        );
+        let b = roundtrip(&addr, req);
+        assert_eq!(
+            b.get("stats").unwrap().get("sims").unwrap().as_u64(),
+            Some(0),
+            "repeat simulate is a memo hit"
+        );
+        assert_eq!(
+            a.get("result").unwrap().to_string_compact(),
+            b.get("result").unwrap().to_string_compact()
+        );
+        shutdown(&addr, handle);
+    }
+}

@@ -343,11 +343,34 @@ impl ScenarioSim {
     /// instead. Only [`last_batch_telemetry`](Self::last_batch_telemetry)
     /// and the adaptive deadlock counters are refreshed.
     pub fn eval_batch(&mut self, configs: &[Box<[u32]>], early_exit: bool) -> Vec<LaneEval> {
+        self.eval_batch_cancellable(configs, early_exit, &|| false)
+            .expect("the never-abort closure cannot request an abort")
+    }
+
+    /// [`eval_batch`](Self::eval_batch) with a cooperative abort check,
+    /// polled once per scenario member *before* its packed walk is
+    /// issued. Returns `None` when `abort()` fired — the batch stopped
+    /// at a scenario boundary and no per-lane results are available
+    /// (partial lanes would be misleading: a lane without its worst
+    /// scenario looks feasible/faster than it is). A run whose closure
+    /// never fires takes exactly the same code path as
+    /// [`eval_batch`](Self::eval_batch), so cancellable and plain calls
+    /// are bit-identical when not cancelled.
+    ///
+    /// The closure keeps this module free of any dependency on the DSE
+    /// layer's token type — the engine passes a wall-clock/cancel check,
+    /// tests can pass arbitrary predicates.
+    pub fn eval_batch_cancellable(
+        &mut self,
+        configs: &[Box<[u32]>],
+        early_exit: bool,
+        abort: &dyn Fn() -> bool,
+    ) -> Option<Vec<LaneEval>> {
         let nb = configs.len();
         let kk = self.sims.len();
         self.batch_tel = BatchTelemetry::default();
         if nb == 0 {
-            return Vec::new();
+            return Some(Vec::new());
         }
         // Per-lane accumulators.
         let mut runs = vec![RunInfo::default(); nb];
@@ -359,6 +382,9 @@ impl ScenarioSim {
         let mut sub: Vec<Box<[u32]>> = Vec::with_capacity(nb);
         let mut src: Vec<usize> = Vec::with_capacity(nb);
         for i in 0..kk {
+            if abort() {
+                return None;
+            }
             sub.clear();
             src.clear();
             for (b, cfg) in configs.iter().enumerate() {
@@ -394,27 +420,29 @@ impl ScenarioSim {
                 }
             }
         }
-        (0..nb)
-            .map(|b| {
-                let lane = &per[b * kk..b * kk + kk];
-                let (latency, gap) = if dead[b] {
-                    (None, None)
-                } else {
-                    let worst = lane.iter().flatten().max().copied().unwrap_or(0);
-                    let best = lane.iter().flatten().min().copied().unwrap_or(0);
-                    (
-                        aggregate_latency(lane, &self.weights, self.agg),
-                        Some(worst - best),
-                    )
-                };
-                LaneEval {
-                    latency,
-                    gap,
-                    scen_runs: scen_runs[b],
-                    run: runs[b],
-                }
-            })
-            .collect()
+        Some(
+            (0..nb)
+                .map(|b| {
+                    let lane = &per[b * kk..b * kk + kk];
+                    let (latency, gap) = if dead[b] {
+                        (None, None)
+                    } else {
+                        let worst = lane.iter().flatten().max().copied().unwrap_or(0);
+                        let best = lane.iter().flatten().min().copied().unwrap_or(0);
+                        (
+                            aggregate_latency(lane, &self.weights, self.agg),
+                            Some(worst - best),
+                        )
+                    };
+                    LaneEval {
+                        latency,
+                        gap,
+                        scen_runs: scen_runs[b],
+                        run: runs[b],
+                    }
+                })
+                .collect(),
+        )
     }
 
     /// Evaluate with max-merged per-channel statistics.

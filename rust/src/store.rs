@@ -1,0 +1,623 @@
+//! The disk-backed cross-run cache — persistent memo/oracle snapshots
+//! keyed by what they are sound for.
+//!
+//! One optimize run teaches the engine two reusable things: the memo
+//! cache (`depths → (latency, bram)`) and the dominance oracle's
+//! feasibility antichains. Both are functions of the workload's
+//! recorded traces alone, so a *later* run over the same traces can
+//! import them and answer every repeated proposal without simulating —
+//! the replay guarantee the serve mode and the `--cache-dir` CLI flag
+//! build on.
+//!
+//! # Keying (what makes reuse sound)
+//!
+//! A snapshot is stored under `fnv1a` of:
+//!
+//! - the store format version,
+//! - the design name,
+//! - the simulation backend name and the prune/bounds flags,
+//! - the workload's **full compact JSON** — which embeds every
+//!   scenario's trace ops verbatim, so the key pins the exact traces,
+//!   not just the design/argument names.
+//!
+//! Memo entries are exact simulation results and deadlock is monotone
+//! in depths, so under an identical-trace key both structures transfer
+//! verbatim (see [`FeasibilityOracle::entries`] for the oracle's
+//! argument). On top of the key, every snapshot embeds the freshly
+//! recomputed [`DepthBounds::fingerprint`] and each memo entry's BRAM
+//! total is re-derived on import — a snapshot that parses but
+//! disagrees with the present analysis is rejected wholesale.
+//!
+//! # Durability & corruption
+//!
+//! Snapshots are written through [`atomic_write`] (temp file + fsync +
+//! rename + parent-directory fsync), carry a format version and an
+//! FNV-1a payload checksum, and are validated structurally on load.
+//! *Any* load failure — missing file, truncation, bit garble, wrong
+//! version, checksum or fingerprint mismatch — degrades to a cold
+//! start with a stderr warning; it can never panic or change results.
+//!
+//! # Eviction
+//!
+//! A sidecar `index.json` tracks per-snapshot byte sizes and a logical
+//! LRU clock. When the store exceeds its size budget, least-recently-
+//! used snapshots are deleted (never the one just written). The index
+//! is best-effort: concurrent writers may lose a `last_used` bump, but
+//! snapshot files themselves are only ever replaced atomically, so
+//! readers always see a complete, checksummed snapshot or none.
+//!
+//! [`FeasibilityOracle::entries`]: crate::opt::dominance::FeasibilityOracle::entries
+//! [`DepthBounds::fingerprint`]: crate::opt::bounds::DepthBounds::fingerprint
+
+use crate::bram;
+use crate::dse::{EvalEngine, MemoEntry, OracleEntry};
+use crate::trace::workload::Workload;
+use crate::util::json::Json;
+use crate::util::{atomic_write, fnv1a};
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::PathBuf;
+
+/// Bumped whenever the snapshot layout changes; part of the cache key,
+/// so old-format files are simply never looked up (and age out by LRU).
+pub const FORMAT_VERSION: u64 = 1;
+
+fn hex16(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot: what one engine's reusable knowledge looks like at rest
+// ---------------------------------------------------------------------------
+
+/// An engine's persistable knowledge: sorted memo entries, the oracle's
+/// antichains, and the identity/regime fields that gate reuse.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub design: String,
+    /// Simulation backend name (`fast`/`compiled`/`batched`). Backends
+    /// are result-identical, but keeping regimes separate keeps each
+    /// snapshot's provenance auditable.
+    pub backend: String,
+    pub prune: bool,
+    pub bounds: bool,
+    /// Channel count — a cheap shape check before anything is imported.
+    pub channels: usize,
+    /// [`DepthBounds::fingerprint`] of the producing engine; must match
+    /// the freshly recomputed bounds of the consuming engine.
+    ///
+    /// [`DepthBounds::fingerprint`]: crate::opt::bounds::DepthBounds::fingerprint
+    pub bounds_fp: u64,
+    /// `(depths, latency, bram)`, sorted by depths.
+    pub memo: Vec<MemoEntry>,
+    /// The oracle's `(depths, latency)` outcomes (infeasible side
+    /// first), replayed through `note` on import.
+    pub oracle: Vec<OracleEntry>,
+}
+
+impl Snapshot {
+    /// Capture the engine's current memo + oracle state.
+    pub fn capture(design: &str, engine: &EvalEngine) -> Snapshot {
+        Snapshot {
+            design: design.to_string(),
+            backend: engine.sim_backend().name().to_string(),
+            prune: engine.prune(),
+            bounds: engine.bounds(),
+            channels: engine.widths.len(),
+            bounds_fp: engine.depth_bounds().fingerprint(),
+            memo: engine.memo_entries(),
+            oracle: engine.oracle().entries(),
+        }
+    }
+
+    /// Import into a freshly built engine, after validating that the
+    /// snapshot belongs to this engine's exact regime: channel count,
+    /// backend, prune/bounds flags, the recomputed bounds fingerprint,
+    /// and every memo entry's BRAM total re-derived from the engine's
+    /// own widths (integrity beyond the file checksum). Returns the
+    /// number of memo entries imported; any mismatch rejects the whole
+    /// snapshot without touching the engine.
+    pub fn apply(&self, engine: &mut EvalEngine) -> Result<usize, String> {
+        if self.channels != engine.widths.len() {
+            return Err(format!(
+                "channel count mismatch: snapshot {}, engine {}",
+                self.channels,
+                engine.widths.len()
+            ));
+        }
+        if self.backend != engine.sim_backend().name() {
+            return Err(format!(
+                "backend mismatch: snapshot {}, engine {}",
+                self.backend,
+                engine.sim_backend().name()
+            ));
+        }
+        if self.prune != engine.prune() || self.bounds != engine.bounds() {
+            return Err("prune/bounds regime mismatch".to_string());
+        }
+        let fresh = engine.depth_bounds().fingerprint();
+        if self.bounds_fp != fresh {
+            return Err(format!(
+                "bounds fingerprint mismatch: snapshot {:016x}, recomputed {fresh:016x}",
+                self.bounds_fp
+            ));
+        }
+        for (depths, _, bram) in &self.memo {
+            if depths.len() != self.channels {
+                return Err("memo entry with wrong channel count".to_string());
+            }
+            let want = bram::bram_total(depths, &engine.widths);
+            if *bram != want {
+                return Err(format!(
+                    "memo entry {depths:?}: recorded bram {bram}, recomputed {want}"
+                ));
+            }
+        }
+        for (depths, _) in &self.oracle {
+            if depths.len() != self.channels {
+                return Err("oracle entry with wrong channel count".to_string());
+            }
+        }
+        let n = engine.import_memo(&self.memo);
+        engine.import_oracle(&self.oracle);
+        Ok(n)
+    }
+
+    /// The snapshot's JSON payload (deterministic: BTreeMap keys, memo
+    /// pre-sorted by the exporter).
+    pub fn to_json(&self) -> Json {
+        let lat = |l: &Option<u64>| match l {
+            Some(v) => Json::Num(*v as f64),
+            None => Json::Null,
+        };
+        let memo = Json::Arr(
+            self.memo
+                .iter()
+                .map(|(d, l, b)| Json::Arr(vec![Json::nums(d), lat(l), Json::Num(*b as f64)]))
+                .collect(),
+        );
+        let oracle = Json::Arr(
+            self.oracle
+                .iter()
+                .map(|(d, l)| Json::Arr(vec![Json::nums(d), lat(l)]))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("design", Json::Str(self.design.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("prune", Json::Bool(self.prune)),
+            ("bounds", Json::Bool(self.bounds)),
+            ("channels", Json::Num(self.channels as f64)),
+            ("bounds_fp", Json::Str(hex16(self.bounds_fp))),
+            ("memo", memo),
+            ("oracle", oracle),
+        ])
+    }
+
+    /// Parse a payload object, with full shape validation.
+    pub fn from_json(v: &Json) -> Result<Snapshot, String> {
+        fn depths_of(v: &Json) -> Result<Vec<u32>, String> {
+            v.as_arr()
+                .ok_or("depths not an array")?
+                .iter()
+                .map(|d| {
+                    d.as_u64()
+                        .and_then(|u| u32::try_from(u).ok())
+                        .ok_or_else(|| "depth out of range".to_string())
+                })
+                .collect()
+        }
+        fn lat_of(v: &Json) -> Result<Option<u64>, String> {
+            match v {
+                Json::Null => Ok(None),
+                other => other.as_u64().map(Some).ok_or_else(|| "bad latency".to_string()),
+            }
+        }
+        let str_field = |k: &str| -> Result<String, String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing field '{k}'"))
+        };
+        let bool_field = |k: &str| -> Result<bool, String> {
+            v.get(k)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| format!("missing field '{k}'"))
+        };
+        let channels = v
+            .get("channels")
+            .and_then(Json::as_u64)
+            .ok_or("missing field 'channels'")? as usize;
+        let bounds_fp_hex = str_field("bounds_fp")?;
+        let bounds_fp =
+            u64::from_str_radix(&bounds_fp_hex, 16).map_err(|_| "bad bounds_fp".to_string())?;
+        let mut memo = Vec::new();
+        for e in v
+            .get("memo")
+            .and_then(Json::as_arr)
+            .ok_or("missing field 'memo'")?
+        {
+            let t = e.as_arr().filter(|t| t.len() == 3).ok_or("bad memo entry")?;
+            let bram = t[2]
+                .as_u64()
+                .and_then(|u| u32::try_from(u).ok())
+                .ok_or("bad memo bram")?;
+            memo.push((depths_of(&t[0])?, lat_of(&t[1])?, bram));
+        }
+        let mut oracle = Vec::new();
+        for e in v
+            .get("oracle")
+            .and_then(Json::as_arr)
+            .ok_or("missing field 'oracle'")?
+        {
+            let t = e.as_arr().filter(|t| t.len() == 2).ok_or("bad oracle entry")?;
+            oracle.push((depths_of(&t[0])?, lat_of(&t[1])?));
+        }
+        Ok(Snapshot {
+            design: str_field("design")?,
+            backend: str_field("backend")?,
+            prune: bool_field("prune")?,
+            bounds: bool_field("bounds")?,
+            channels,
+            bounds_fp,
+            memo,
+            oracle,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Store: the on-disk cache directory
+// ---------------------------------------------------------------------------
+
+/// A cache directory of checksummed snapshots plus a best-effort LRU
+/// index. Cheap to construct (no I/O until `load`/`save`).
+pub struct Store {
+    dir: PathBuf,
+    /// Size budget in bytes; 0 = unlimited.
+    max_bytes: u64,
+}
+
+impl Store {
+    /// `max_mb = 0` disables eviction.
+    pub fn new(dir: &str, max_mb: u64) -> Store {
+        Store {
+            dir: PathBuf::from(dir),
+            max_bytes: max_mb.saturating_mul(1024 * 1024),
+        }
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    /// The 16-hex cache key for one (design, workload, regime). Hashes
+    /// the workload's full compact JSON — traces included — so two
+    /// workloads agree on a key only if their recorded ops are
+    /// byte-identical.
+    pub fn key(
+        design: &str,
+        workload: &Workload,
+        backend: &str,
+        prune: bool,
+        bounds: bool,
+    ) -> String {
+        let mut s = format!("v{FORMAT_VERSION};{design};{backend};prune={prune};bounds={bounds};");
+        s.push_str(&workload.to_json().to_string_compact());
+        hex16(fnv1a(s.as_bytes()))
+    }
+
+    fn snapshot_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    fn index_path(&self) -> PathBuf {
+        self.dir.join("index.json")
+    }
+
+    /// Load and validate the snapshot under `key`. A missing file is a
+    /// silent `None` (the expected cold-start case); any parse,
+    /// checksum or shape failure warns on stderr and returns `None` —
+    /// corruption degrades to a cold start, never a panic or a wrong
+    /// answer (regime/BRAM validation happens later in
+    /// [`Snapshot::apply`]).
+    pub fn load(&self, key: &str) -> Option<Snapshot> {
+        let path = self.snapshot_path(key);
+        let text = fs::read_to_string(&path).ok()?;
+        match Self::parse_snapshot(&text) {
+            Ok(snap) => {
+                self.touch(key);
+                Some(snap)
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: store: ignoring corrupt snapshot {} ({e}); cold start",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Parse + verify one snapshot file's text (exposed for fuzzing).
+    pub fn parse_snapshot(text: &str) -> Result<Snapshot, String> {
+        let v = Json::parse(text).map_err(|e| format!("json: {e:?}"))?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or("missing version")?;
+        if version != FORMAT_VERSION {
+            return Err(format!("unsupported format version {version}"));
+        }
+        let payload = v.get("payload").ok_or("missing payload")?;
+        let want = v
+            .get("checksum")
+            .and_then(Json::as_str)
+            .ok_or("missing checksum")?;
+        let got = hex16(fnv1a(payload.to_string_compact().as_bytes()));
+        if want != got {
+            return Err(format!("checksum mismatch: recorded {want}, computed {got}"));
+        }
+        Snapshot::from_json(payload)
+    }
+
+    /// Persist a snapshot under `key` (atomic write + fsyncs), update
+    /// the LRU index, and evict least-recently-used snapshots beyond
+    /// the size budget.
+    pub fn save(&self, key: &str, snap: &Snapshot) -> std::io::Result<()> {
+        let payload = snap.to_json();
+        let checksum = hex16(fnv1a(payload.to_string_compact().as_bytes()));
+        let file = Json::obj(vec![
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("checksum", Json::Str(checksum)),
+            ("payload", payload),
+        ]);
+        let text = file.to_string_compact();
+        let path = self.snapshot_path(key);
+        atomic_write(&path.to_string_lossy(), &text)?;
+        self.update_index(key, text.len() as u64);
+        Ok(())
+    }
+
+    // -- LRU index (best-effort; snapshot files stay atomic regardless) --
+
+    /// `(clock, key → (bytes, last_used))`; any unreadable index is an
+    /// empty one.
+    fn read_index(&self) -> (u64, BTreeMap<String, (u64, u64)>) {
+        let mut out = BTreeMap::new();
+        let text = match fs::read_to_string(self.index_path()) {
+            Ok(t) => t,
+            Err(_) => return (0, out),
+        };
+        let v = match Json::parse(&text) {
+            Ok(v) => v,
+            Err(_) => return (0, out),
+        };
+        let clock = v.get("clock").and_then(Json::as_u64).unwrap_or(0);
+        if let Some(Json::Obj(entries)) = v.get("entries") {
+            for (k, e) in entries {
+                let bytes = e.get("bytes").and_then(Json::as_u64).unwrap_or(0);
+                let used = e.get("last_used").and_then(Json::as_u64).unwrap_or(0);
+                out.insert(k.clone(), (bytes, used));
+            }
+        }
+        (clock, out)
+    }
+
+    fn write_index(&self, clock: u64, entries: &BTreeMap<String, (u64, u64)>) {
+        let obj = Json::Obj(
+            entries
+                .iter()
+                .map(|(k, (bytes, used))| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("bytes", Json::Num(*bytes as f64)),
+                            ("last_used", Json::Num(*used as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let v = Json::obj(vec![
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("clock", Json::Num(clock as f64)),
+            ("entries", obj),
+        ]);
+        // Index loss is recoverable (it only orders eviction), so write
+        // failures are tolerated.
+        let _ = atomic_write(&self.index_path().to_string_lossy(), &v.to_string_compact());
+    }
+
+    fn update_index(&self, key: &str, bytes: u64) {
+        let (mut clock, mut entries) = self.read_index();
+        clock += 1;
+        entries.insert(key.to_string(), (bytes, clock));
+        if self.max_bytes > 0 {
+            let mut total: u64 = entries.values().map(|(b, _)| *b).sum();
+            while total > self.max_bytes {
+                // Evict the least-recently-used snapshot, but never the
+                // one just written.
+                let victim = entries
+                    .iter()
+                    .filter(|(k, _)| k.as_str() != key)
+                    .min_by_key(|(_, (_, used))| *used)
+                    .map(|(k, _)| k.clone());
+                let Some(victim) = victim else { break };
+                let (b, _) = entries.remove(&victim).unwrap_or((0, 0));
+                total -= b.min(total);
+                let _ = fs::remove_file(self.snapshot_path(&victim));
+            }
+        }
+        self.write_index(clock, &entries);
+    }
+
+    /// Bump `key`'s LRU clock (best-effort; called on successful load).
+    fn touch(&self, key: &str) {
+        let (clock, mut entries) = self.read_index();
+        if let Some(e) = entries.get_mut(key) {
+            let clock = clock + 1;
+            e.1 = clock;
+            self.write_index(clock, &entries);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite;
+    use crate::dse::{drive, EvalEngine};
+    use crate::opt::Space;
+    use std::sync::Arc;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("fifoadvisor_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fig2_workload() -> Arc<Workload> {
+        let bd = bench_suite::build("fig2");
+        Arc::new(Workload::from_design_args(&bd.design, &[vec![16]]).unwrap())
+    }
+
+    fn run_engine(w: &Arc<Workload>, budget: usize) -> EvalEngine {
+        let space = Space::from_workload(w);
+        let mut ev = EvalEngine::for_workload(w.clone(), 1);
+        ev.eval_baselines();
+        let mut o = crate::opt::random::RandomSearch::new(21, false);
+        drive(&mut o, &mut ev, &space, budget);
+        ev
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_warm_starts_with_zero_sims() {
+        let w = fig2_workload();
+        let dir = tempdir("roundtrip");
+        let store = Store::new(dir.to_str().unwrap(), 64);
+        let key = Store::key("fig2", &w, "fast", true, true);
+
+        let cold = run_engine(&w, 80);
+        assert!(cold.stats().sims > 0);
+        let snap = Snapshot::capture("fig2", &cold);
+        store.save(&key, &snap).unwrap();
+
+        let loaded = store.load(&key).expect("saved snapshot must load");
+        assert_eq!(loaded, snap, "decode(encode(snapshot)) must be identity");
+
+        // Warm engine: apply, rerun identically → zero simulations and a
+        // bit-identical history.
+        let space = Space::from_workload(&w);
+        let mut warm = EvalEngine::for_workload(w.clone(), 1);
+        let n = loaded.apply(&mut warm).unwrap();
+        assert_eq!(n, snap.memo.len());
+        warm.eval_baselines();
+        let mut o = crate::opt::random::RandomSearch::new(21, false);
+        drive(&mut o, &mut warm, &space, 80);
+        assert_eq!(warm.stats().sims, 0, "warm run must be a pure replay");
+        let h = |e: &EvalEngine| {
+            e.history
+                .iter()
+                .map(|p| (p.depths.clone(), p.latency, p.bram))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(h(&cold), h(&warm));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_separates_regimes_and_workloads() {
+        let bd = bench_suite::build("fig2");
+        let w16 = Arc::new(Workload::from_design_args(&bd.design, &[vec![16]]).unwrap());
+        let w8 = Arc::new(Workload::from_design_args(&bd.design, &[vec![8]]).unwrap());
+        let base = Store::key("fig2", &w16, "fast", true, true);
+        assert_eq!(base.len(), 16);
+        assert_ne!(base, Store::key("fig2", &w8, "fast", true, true));
+        assert_ne!(base, Store::key("fig2", &w16, "batched", true, true));
+        assert_ne!(base, Store::key("fig2", &w16, "fast", false, true));
+        assert_ne!(base, Store::key("fig2", &w16, "fast", true, false));
+        assert_eq!(base, Store::key("fig2", &w16, "fast", true, true));
+    }
+
+    #[test]
+    fn regime_mismatch_rejects_the_whole_snapshot() {
+        let w = fig2_workload();
+        let cold = run_engine(&w, 40);
+        let snap = Snapshot::capture("fig2", &cold);
+        // Wrong prune regime.
+        let mut off = EvalEngine::for_workload(w.clone(), 1);
+        off.set_prune(false);
+        assert!(snap.apply(&mut off).is_err());
+        assert_eq!(off.cache_len(), 0, "rejected snapshot must not import");
+        // Garbled bounds fingerprint.
+        let mut bad = snap.clone();
+        bad.bounds_fp ^= 1;
+        let mut fresh = EvalEngine::for_workload(w.clone(), 1);
+        assert!(bad.apply(&mut fresh).is_err());
+        // Garbled BRAM total (checksum-passing but wrong content).
+        let mut bad = snap.clone();
+        bad.memo[0].2 += 1;
+        assert!(bad.apply(&mut fresh).is_err());
+        assert_eq!(fresh.cache_len(), 0);
+    }
+
+    #[test]
+    fn missing_and_corrupt_files_degrade_to_cold_start() {
+        let w = fig2_workload();
+        let dir = tempdir("corrupt");
+        let store = Store::new(dir.to_str().unwrap(), 64);
+        let key = Store::key("fig2", &w, "fast", true, true);
+        assert!(store.load(&key).is_none(), "missing file is a silent miss");
+
+        let cold = run_engine(&w, 40);
+        store.save(&key, &Snapshot::capture("fig2", &cold)).unwrap();
+        let path = dir.join(format!("{key}.json"));
+        let good = fs::read_to_string(&path).unwrap();
+
+        // Truncation.
+        fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(store.load(&key).is_none());
+        // Byte garble that still parses as JSON (digit flip) must be
+        // caught by the checksum.
+        let garbled = good.replacen("[[", "[[9", 1);
+        fs::write(&path, &garbled).unwrap();
+        assert!(store.load(&key).is_none());
+        // Valid JSON, wrong shape.
+        fs::write(&path, "{\"version\":1}").unwrap();
+        assert!(store.load(&key).is_none());
+        // Restore the good bytes: loads again.
+        fs::write(&path, &good).unwrap();
+        assert!(store.load(&key).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_drops_the_stalest_snapshot_first() {
+        let w = fig2_workload();
+        let dir = tempdir("lru");
+        // A deliberately tiny budget: one snapshot fits, two do not
+        // (max_mb granularity is too coarse, so build the store by hand).
+        let store = Store {
+            dir: dir.clone(),
+            max_bytes: 1,
+        };
+        let cold = run_engine(&w, 40);
+        let snap = Snapshot::capture("fig2", &cold);
+        store.save("aaaa", &snap).unwrap();
+        store.save("bbbb", &snap).unwrap();
+        assert!(
+            !dir.join("aaaa.json").exists(),
+            "oldest snapshot must be evicted"
+        );
+        assert!(dir.join("bbbb.json").exists(), "newest snapshot survives");
+        // Touching a key protects it: reload bbbb's entry, save a third.
+        store.save("cccc", &snap).unwrap();
+        assert!(!dir.join("bbbb.json").exists());
+        assert!(dir.join("cccc.json").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

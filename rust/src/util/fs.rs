@@ -4,10 +4,14 @@
 //!
 //! A crash mid-`fs::write` leaves a truncated file that a later
 //! `--resume` would try to parse; [`atomic_write`] closes that window by
-//! writing to a sibling temp file, syncing it to disk, and `rename`ing
-//! onto the destination. On POSIX filesystems the rename is atomic, so
-//! readers observe either the old bytes or the new bytes — never a
-//! prefix.
+//! writing to a sibling temp file, syncing it to disk, `rename`ing
+//! onto the destination, and fsyncing the parent directory so the
+//! rename itself is durable. On POSIX filesystems the rename is atomic,
+//! so readers observe either the old bytes or the new bytes — never a
+//! prefix — and after a successful return the *new* bytes survive a
+//! power loss (without the directory fsync, a crash right after
+//! "success" could still roll the directory entry back to the old
+//! file).
 
 use std::fs::{self, File};
 use std::io::{self, Write};
@@ -21,8 +25,9 @@ static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Write `contents` to `path` atomically: parent directories are
 /// created, the bytes land in a same-directory temp file (so the final
-/// `rename` cannot cross filesystems), the temp file is fsynced, and
-/// the rename publishes it. The temp file is removed on any failure.
+/// `rename` cannot cross filesystems), the temp file is fsynced, the
+/// rename publishes it, and the parent directory is fsynced so the
+/// rename survives a crash. The temp file is removed on any failure.
 pub fn atomic_write(path: &str, contents: &str) -> io::Result<()> {
     let target = Path::new(path);
     if let Some(dir) = target.parent() {
@@ -39,12 +44,31 @@ pub fn atomic_write(path: &str, contents: &str) -> io::Result<()> {
         let mut f = File::create(&tmp)?;
         f.write_all(contents.as_bytes())?;
         f.sync_all()?;
-        fs::rename(&tmp, target)
+        fs::rename(&tmp, target)?;
+        sync_parent_dir(target)
     })();
     if result.is_err() {
         let _ = fs::remove_file(&tmp);
     }
     result
+}
+
+/// Fsync the directory holding `target` so a just-completed rename is
+/// durable, not merely visible. Directory handles can be opened and
+/// fsynced on POSIX; on platforms where opening a directory read-only
+/// fails (e.g. Windows), the open error is tolerated — there is no
+/// portable directory-sync primitive there, and the write itself has
+/// already been synced.
+fn sync_parent_dir(target: &Path) -> io::Result<()> {
+    let dir = match target.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    match File::open(dir) {
+        Ok(f) => f.sync_all(),
+        Err(_) if !cfg!(unix) => Ok(()),
+        Err(e) => Err(e),
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +110,35 @@ mod tests {
         fs::write(&blocker, "x").unwrap();
         let target = blocker.join("child.json");
         assert!(atomic_write(target.to_str().unwrap(), "data").is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parent_dir_sync_covers_all_path_shapes() {
+        // The directory fsync must handle explicit parents, bare
+        // filenames (parent = cwd), and deep fresh trees alike — and
+        // the written bytes must be intact in every case.
+        let dir = tempdir("dirsync");
+        let nested = dir.join("a/b/c/out.json");
+        atomic_write(nested.to_str().unwrap(), "nested").unwrap();
+        assert_eq!(fs::read_to_string(&nested).unwrap(), "nested");
+        let flat = dir.join("flat.json");
+        atomic_write(flat.to_str().unwrap(), "flat").unwrap();
+        assert_eq!(fs::read_to_string(&flat).unwrap(), "flat");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sync_parent_dir_resolves_the_containing_directory() {
+        let dir = tempdir("dirsync_unit");
+        let target = dir.join("x.json");
+        fs::write(&target, "x").unwrap();
+        sync_parent_dir(&target).unwrap();
+        // A target whose parent is missing fails on unix (nothing to
+        // make durable) instead of pretending it synced.
+        if cfg!(unix) {
+            assert!(sync_parent_dir(&dir.join("gone/x.json")).is_err());
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 }

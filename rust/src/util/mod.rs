@@ -12,3 +12,27 @@ pub mod stats;
 pub use fs::atomic_write;
 pub use json::Json;
 pub use rng::Rng;
+
+/// FNV-1a 64-bit — stable across Rust versions and machines (unlike
+/// `DefaultHasher`), so hashes can name content in artifacts shared
+/// between processes: sweep cell ids in manifests, store cache keys and
+/// payload checksums.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(super::fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+}

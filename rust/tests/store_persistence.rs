@@ -1,0 +1,153 @@
+//! Cross-run store contract, end to end through the public API:
+//!
+//! - **Replay**: a second identical optimize against the same cache dir
+//!   performs *zero* simulations — in the same process or across a
+//!   simulated restart (fresh engine, same directory) — and its
+//!   history/front is bit-identical to the cold run's, serial and
+//!   `--jobs N` alike.
+//! - **Corruption robustness**: truncating or garbling a snapshot file
+//!   at any offset never panics and never changes a verdict — a
+//!   damaged snapshot is rejected wholesale and the run degrades to a
+//!   cold start that produces the same results.
+
+use fifoadvisor::bench_suite;
+use fifoadvisor::dse::{drive, EvalEngine};
+use fifoadvisor::opt::{self, Space};
+use fifoadvisor::store::{Snapshot, Store};
+use fifoadvisor::util::Rng;
+use fifoadvisor::Workload;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("fifoadvisor_store_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d.to_string_lossy().into_owned()
+}
+
+fn fig2_workload() -> Arc<Workload> {
+    let bd = bench_suite::try_build("fig2").unwrap();
+    Arc::new(Workload::from_design_args(&bd.design, &[vec![16]]).unwrap())
+}
+
+/// A run history reduced to its deterministic fields.
+type Hist = Vec<(Vec<u32>, Option<u64>, u32)>;
+
+/// One full "optimize" pass the way the CLI runs it: warm-start from
+/// the store when a snapshot is present, baselines, reset, drive.
+/// Returns the run history (deterministic fields only) and the total
+/// simulation count, plus the engine for capturing a snapshot.
+fn optimize_once(
+    w: &Arc<Workload>,
+    jobs: usize,
+    store: Option<(&Store, &str)>,
+) -> (Hist, u64, EvalEngine) {
+    let mut ev = EvalEngine::for_workload(w.clone(), jobs);
+    if let Some((st, key)) = store {
+        if let Some(snap) = st.load(key) {
+            snap.apply(&mut ev).expect("a loaded snapshot must apply");
+        }
+    }
+    let space = Space::from_workload(w);
+    ev.eval_baselines();
+    ev.reset_run(false);
+    let mut o = opt::by_name("grouped_sa", 11).unwrap();
+    drive(&mut *o, &mut ev, &space, 120);
+    let hist = ev
+        .history
+        .iter()
+        .map(|p| (p.depths.to_vec(), p.latency, p.bram))
+        .collect();
+    let sims = ev.n_sim;
+    (hist, sims, ev)
+}
+
+#[test]
+fn replay_across_a_restart_is_zero_sims_and_bit_identical() {
+    let dir = tmpdir("replay");
+    let w = fig2_workload();
+    let store = Store::new(&dir, 64);
+    let key = Store::key("fig2", &w, "fast", true, true);
+
+    // Cold run: simulates, then persists its snapshot.
+    let (cold_hist, cold_sims, ev) = optimize_once(&w, 1, Some((&store, &key)));
+    assert!(cold_sims > 0, "cold run must simulate");
+    store.save(&key, &Snapshot::capture("fig2", &ev)).unwrap();
+    drop(ev);
+
+    // "Restart" #1: a brand-new serial engine over the same directory.
+    let (warm_hist, warm_sims, _) = optimize_once(&w, 1, Some((&store, &key)));
+    assert_eq!(warm_sims, 0, "warm replay must not simulate");
+    assert_eq!(warm_hist, cold_hist, "warm history must be bit-identical");
+
+    // "Restart" #2: same thing with a worker pool (--jobs 4).
+    let (par_hist, par_sims, _) = optimize_once(&w, 4, Some((&store, &key)));
+    assert_eq!(par_sims, 0, "parallel warm replay must not simulate");
+    assert_eq!(par_hist, cold_hist, "serial/parallel warm runs must agree");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_snapshot_files_never_panic_and_never_change_a_verdict() {
+    let dir = tmpdir("fuzz");
+    let w = fig2_workload();
+    let store = Store::new(&dir, 64);
+    let key = Store::key("fig2", &w, "fast", true, true);
+
+    let (cold_hist, _, ev) = optimize_once(&w, 1, None);
+    store.save(&key, &Snapshot::capture("fig2", &ev)).unwrap();
+    let canonical = Snapshot::capture("fig2", &ev).to_json().to_string_compact();
+    drop(ev);
+    let path = store.dir().join(format!("{key}.json"));
+    let pristine = std::fs::read(&path).unwrap();
+    assert!(!pristine.is_empty());
+
+    let mut rng = Rng::new(0xF00D);
+    let mut rejected = 0usize;
+    for case in 0..48 {
+        let mut bytes = pristine.clone();
+        match rng.below(3) {
+            // Torn write: the file ends mid-record.
+            0 => bytes.truncate(rng.index(bytes.len())),
+            // Bit rot: one flipped bit anywhere.
+            1 => {
+                let i = rng.index(bytes.len());
+                bytes[i] ^= 1u8 << rng.index(8);
+            }
+            // Overwrite: one byte replaced with arbitrary printable junk.
+            _ => {
+                let i = rng.index(bytes.len());
+                bytes[i] = rng.range_u32(32, 127) as u8;
+            }
+        }
+        if bytes == pristine {
+            continue; // the mutation was a no-op (e.g. same byte drawn)
+        }
+        std::fs::write(&path, &bytes).unwrap();
+
+        // Load must not panic; if it accepts the file, the checksum
+        // guarantees the content is byte-equal to what was saved.
+        match store.load(&key) {
+            None => rejected += 1,
+            Some(snap) => assert_eq!(
+                snap.to_json().to_string_compact(),
+                canonical,
+                "case {case}: an accepted snapshot must match the saved one"
+            ),
+        }
+
+        // Whatever happened above, a run against this store produces
+        // exactly the cold results (worst case it just re-simulates).
+        let (hist, _, _) = optimize_once(&w, 1, Some((&store, &key)));
+        assert_eq!(hist, cold_hist, "case {case}: corruption changed a verdict");
+    }
+    assert!(rejected > 0, "the fuzz never produced a rejected file");
+
+    // Restoring the pristine bytes restores the warm path.
+    std::fs::write(&path, &pristine).unwrap();
+    let (hist, sims, _) = optimize_once(&w, 1, Some((&store, &key)));
+    assert_eq!(sims, 0);
+    assert_eq!(hist, cold_hist);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
